@@ -1,0 +1,65 @@
+//! Auto-tuning demo (paper §6.3): explore the unroll/accumulator
+//! meta-parameter for every pass on every ISA, print the tuned table, and
+//! quantify how much the paper's "templated + auto-tuned" methodology buys
+//! over the naive unroll=1 kernels.
+//!
+//! Run: `cargo run --release --example autotune -- [--n 262144] [--reps 5]`
+
+use two_pass_softmax::softmax::tuning::{self, UNROLLS};
+use two_pass_softmax::softmax::{Isa, Pass};
+use two_pass_softmax::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n: usize = args.get("n", 262_144).map_err(anyhow::Error::msg)?;
+    let reps: usize = args.get("reps", 5).map_err(anyhow::Error::msg)?;
+
+    println!("auto-tuning at N = {n} ({} KB working set), reps = {reps}\n", n * 4 / 1024);
+    println!(
+        "{:<14} {:<8} | {:>9} {:>9} {:>9} {:>9} | {:>6} {:>6}",
+        "pass", "isa", "u=1", "u=2", "u=4", "u=8", "best", "gain"
+    );
+
+    let mut table = tuning::TuneTable::default();
+    for isa in Isa::detect_all() {
+        for pass in Pass::ALL {
+            let e = tuning::tune_pass(pass, isa, n, reps);
+            let base = e.ns_per_elem[0];
+            let best_idx = UNROLLS.iter().position(|&u| u == e.best_unroll).unwrap();
+            let gain = base / e.ns_per_elem[best_idx];
+            println!(
+                "{:<14} {:<8} | {:>8.3}n {:>8.3}n {:>8.3}n {:>8.3}n | {:>6} {:>5.2}x",
+                pass.to_string(),
+                isa.to_string(),
+                e.ns_per_elem[0],
+                e.ns_per_elem[1],
+                e.ns_per_elem[2],
+                e.ns_per_elem[3],
+                e.best_unroll,
+                gain
+            );
+            table.entries.push(e);
+        }
+    }
+
+    if let Some(path) = args.opt("save") {
+        std::fs::write(path, table.to_text())?;
+        println!("\nsaved tuned table to {path}");
+    }
+
+    // Summary: how much did tuning matter per ISA?
+    println!();
+    for isa in Isa::detect_all() {
+        let gains: Vec<f64> = Pass::ALL
+            .iter()
+            .map(|&p| {
+                let e = table.entries.iter().find(|e| e.pass == p && e.isa == isa).unwrap();
+                let best_idx = UNROLLS.iter().position(|&u| u == e.best_unroll).unwrap();
+                e.ns_per_elem[0] / e.ns_per_elem[best_idx]
+            })
+            .collect();
+        let avg = gains.iter().product::<f64>().powf(1.0 / gains.len() as f64);
+        println!("{isa}: geometric-mean tuning gain over unroll=1: {avg:.3}x");
+    }
+    Ok(())
+}

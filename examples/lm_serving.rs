@@ -1,0 +1,121 @@
+//! END-TO-END driver: serve a real (small) transformer LM through the full
+//! three-layer stack and report latency/throughput.
+//!
+//!   L1  Pallas two-pass softmax kernels (attention + vocab head)
+//!   L2  JAX transformer, AOT-lowered to artifacts/lm_probs_b*.hlo.txt
+//!   L3  this process: Rust coordinator (dynamic batcher + worker pool)
+//!       executing the artifacts via PJRT — Python nowhere on this path.
+//!
+//! Run after `make artifacts && cargo build --release`:
+//!   cargo run --release --example lm_serving -- [--requests 64] [--clients 4]
+//!       [--max-batch 8] [--artifacts artifacts]
+//!
+//! The reported numbers are recorded in EXPERIMENTS.md §E2E.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use two_pass_softmax::config::{Backend, ServeConfig};
+use two_pass_softmax::coordinator::{Coordinator, Payload};
+use two_pass_softmax::runtime::{EntryKind, Runtime};
+use two_pass_softmax::util::cli::Args;
+use two_pass_softmax::util::rng::Rng;
+use two_pass_softmax::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let requests: usize = args.get("requests", 64).map_err(anyhow::Error::msg)?;
+    let clients: usize = args.get("clients", 4).map_err(anyhow::Error::msg)?;
+    let artifacts = args.opt("artifacts").unwrap_or("artifacts").to_string();
+
+    // Inspect the model we are about to serve.
+    let (seq, vocab) = {
+        let rt = Runtime::open(std::path::Path::new(&artifacts))?;
+        let (name, _) = rt
+            .lm_bucket(1)
+            .ok_or_else(|| anyhow::anyhow!("no LM artifacts — run `make artifacts`"))?;
+        let entry = rt.manifest.entry(&name).unwrap().clone();
+        match entry.kind {
+            EntryKind::Lm { seq, vocab, .. } => (seq, vocab),
+            _ => unreachable!(),
+        }
+    };
+    println!("model: transformer LM, seq = {seq}, vocab = {vocab} (two-pass softmax head)");
+
+    let mut cfg = ServeConfig {
+        backend: Backend::Pjrt,
+        artifacts_dir: artifacts.into(),
+        max_batch: args.get("max-batch", 8).map_err(anyhow::Error::msg)?,
+        max_wait_us: 2000,
+        workers: 2,
+        ..ServeConfig::default()
+    };
+    cfg.apply_args(&args)?;
+
+    let coord = Arc::new(Coordinator::start(cfg)?);
+
+    // Warm-up: force the PJRT compile of each bucket off the measured path.
+    println!("warming up (compiling artifacts) ...");
+    let warm: Vec<i32> = (0..seq as i32).collect();
+    coord
+        .submit(Payload::Tokens(warm.clone()))
+        .ok()
+        .and_then(|h| h.wait().ok())
+        .expect("warm-up request");
+
+    println!("serving {requests} requests from {clients} concurrent clients ...");
+    let t0 = Instant::now();
+    let per_client = requests.div_ceil(clients.max(1));
+    let mut joins = Vec::new();
+    for c in 0..clients.max(1) {
+        let coord = coord.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + c as u64);
+            let mut lat_us = Vec::new();
+            let mut checked = 0usize;
+            for _ in 0..per_client {
+                let tokens: Vec<i32> =
+                    (0..seq).map(|_| rng.below(vocab.min(1000)) as i32).collect();
+                let t = Instant::now();
+                let resp = coord
+                    .submit(Payload::Tokens(tokens))
+                    .expect("submit")
+                    .wait()
+                    .expect("response");
+                lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+                assert!(resp.error.is_none(), "serving error: {:?}", resp.error);
+                // Every response must be a probability distribution.
+                let sum: f32 = resp.probs.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-4, "row sums to {sum}");
+                assert_eq!(resp.probs.len(), vocab);
+                checked += 1;
+            }
+            (lat_us, checked)
+        }));
+    }
+    let mut all_lat = Vec::new();
+    let mut total_ok = 0usize;
+    for j in joins {
+        let (lat, ok) = j.join().expect("client");
+        all_lat.extend(lat);
+        total_ok += ok;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = stats::summarize(&all_lat);
+
+    println!("\n=== E2E RESULTS (record in EXPERIMENTS.md §E2E) ===");
+    println!("served {total_ok} requests in {wall:.2}s -> {:.1} req/s", total_ok as f64 / wall);
+    println!(
+        "latency: p50 {:.1} ms, p95 {:.1} ms, max {:.1} ms",
+        s.median / 1e3,
+        s.p95 / 1e3,
+        s.max / 1e3
+    );
+    println!("{}", coord.metrics());
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.shutdown(),
+        Err(_) => anyhow::bail!("coordinator leak"),
+    }
+    println!("\nOK: all responses were valid {vocab}-way distributions.");
+    Ok(())
+}

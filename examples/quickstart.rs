@@ -1,0 +1,64 @@
+//! Quickstart: the library in 60 seconds.
+//!
+//! Run: `cargo run --release --example quickstart`
+//!
+//! Shows the three softmax algorithms on the same logits, the numerical
+//! property that motivates the Two-Pass algorithm (no overflow without a
+//! max pass), the per-pass API, and the Table-2 cost model.
+
+use two_pass_softmax::costmodel;
+use two_pass_softmax::softmax::{
+    exp::ExtSum, run_pass, softmax, Algorithm, Isa, Pass,
+};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Basic use: y = softmax(x), best ISA, the paper's Two-Pass kernel.
+    let x = vec![1.0f32, 2.0, 3.0, 4.0];
+    let mut y = vec![0.0f32; 4];
+    softmax(Algorithm::TwoPass, &x, &mut y)?;
+    println!("softmax({x:?}) = {y:?}");
+    println!("Σ = {}", y.iter().sum::<f32>());
+
+    // 2. The three algorithms agree to float32 accuracy...
+    println!("\nalgorithm agreement on ISA {}:", Isa::detect_best());
+    for alg in Algorithm::ALL {
+        let mut out = vec![0.0f32; 4];
+        softmax(alg, &x, &mut out)?;
+        println!("  {alg:<22} -> {out:?}");
+    }
+
+    // 3. ...but only Two-Pass survives logits > 89 without a max pass:
+    // e^100 overflows f32, yet the (m, n) accumulation is overflow-free.
+    let hot = vec![100.0f32; 8];
+    let mut s = ExtSum::default();
+    for &v in &hot {
+        s.add_exp(v);
+    }
+    println!("\nΣ e^100 over 8 elements (would be inf in f32):");
+    println!("  (m, n) representation: m = {:.6}, n = {}", s.m, s.n);
+    println!("  ln(Σ) = {:.4} (exact: {:.4})", s.ln(), 100.0 + (8f32).ln());
+
+    // 4. Per-pass access (what the paper's Figures 3/4/7 measure).
+    let big: Vec<f32> = (0..100_000).map(|i| (i % 113) as f32 * 0.1 - 5.0).collect();
+    let mut scratch = big.clone();
+    println!("\nper-pass API on every available ISA (N = {}):", big.len());
+    for isa in Isa::detect_all() {
+        let mu = run_pass(Pass::Max, isa, 4, &big, &mut scratch)?;
+        let lse = run_pass(Pass::AccumExtExp, isa, 2, &big, &mut scratch)?;
+        println!("  {isa:<7} max = {mu:.3}, logsumexp = {lse:.4}");
+    }
+
+    // 5. The Table-2 cost model: why Two-Pass wins out of cache.
+    println!("\nTable 2 (memory traffic, units of N):");
+    for row in costmodel::table2() {
+        println!(
+            "  {:<22} {}R + {}W = {}N  (predicted speedup of two-pass: {:.2}x)",
+            row.algorithm.to_string(),
+            row.reads_n,
+            row.writes_n,
+            row.bandwidth_n,
+            costmodel::predicted_speedup_vs(row.algorithm)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,187 @@
+"""AOT compiler: lower L2/L1 graphs once, emit HLO *text* + weights + manifest.
+
+This is the only place Python touches the system.  ``make artifacts`` runs
+``python -m compile.aot --out ../artifacts`` which writes:
+
+* ``softmax_<variant>_<B>x<N>.hlo.txt`` — standalone softmax executables for
+  every (variant, batch-bucket, N) the serving coordinator routes to;
+* ``lm_probs_b<B>.hlo.txt`` — the transformer-LM next-token-distribution
+  graph, per batch bucket (PJRT executables are shape-specialized, so the
+  Rust dynamic batcher pads to the nearest bucket);
+* ``lm_params.bin`` — the LM weights as a flat little-endian blob, with
+  per-leaf offsets recorded in the manifest (Rust feeds them as PJRT
+  literals in ``jax.tree_util.tree_leaves`` order);
+* ``manifest.json`` — the registry the Rust runtime loads everything from.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as lm
+from .kernels import twopass
+
+SOFTMAX_VARIANTS = ("twopass", "threepass_recompute", "threepass_reload")
+# (batch, n) softmax executables to emit.  N values cover the paper's sweep
+# regimes (L1/L2/LLC/DRAM on CPU); batches are the coordinator's buckets.
+DEFAULT_SOFTMAX_SHAPES = (
+    (1, 1024),
+    (1, 8192),
+    (1, 32768),
+    (1, 262144),
+    (4, 8192),
+    (4, 32768),
+    (8, 32768),
+)
+LM_BATCH_BUCKETS = (1, 2, 4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text via stablehlo (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(d) -> str:
+    return {"float32": "f32", "int32": "i32"}[np.dtype(d).name]
+
+
+def _io_spec(avals):
+    return [{"shape": list(a.shape), "dtype": _dtype_name(a.dtype)} for a in avals]
+
+
+def emit_softmax(outdir: pathlib.Path, entries: list, shapes, block_n: int):
+    for variant in SOFTMAX_VARIANTS:
+        for b, n in shapes:
+            name = f"softmax_{variant}_{b}x{n}"
+            spec = jax.ShapeDtypeStruct((b, n), jnp.float32)
+            fn = functools.partial(lm.softmax, variant=variant, block_n=block_n)
+            lowered = jax.jit(lambda x: (fn(x),)).lower(spec)
+            path = outdir / f"{name}.hlo.txt"
+            path.write_text(to_hlo_text(lowered))
+            entries.append(
+                {
+                    "name": name,
+                    "file": path.name,
+                    "kind": "softmax",
+                    "variant": variant,
+                    "batch": b,
+                    "n": n,
+                    "inputs": _io_spec([spec]),
+                    "outputs": _io_spec([spec]),
+                }
+            )
+            print(f"  wrote {path.name}")
+
+
+def emit_lm(outdir: pathlib.Path, entries: list, cfg: lm.LMConfig, seed: int):
+    params = lm.init_params(cfg, seed=seed)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+
+    # Flat weight blob + per-leaf offsets (leaves order == lowered arg order).
+    blob_path = outdir / "lm_params.bin"
+    offset = 0
+    leaf_specs = []
+    with open(blob_path, "wb") as f:
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(leaf, dtype=np.float32)
+            f.write(arr.tobytes())
+            leaf_specs.append(
+                {
+                    "index": i,
+                    "shape": list(arr.shape),
+                    "dtype": "f32",
+                    "offset": offset,
+                    "nbytes": arr.nbytes,
+                }
+            )
+            offset += arr.nbytes
+    print(f"  wrote {blob_path.name} ({offset / 1e6:.1f} MB, {len(leaves)} leaves)")
+
+    for b in LM_BATCH_BUCKETS:
+        tok_spec = jax.ShapeDtypeStruct((b, cfg.seq), jnp.int32)
+
+        def fwd(tokens, *leaves):
+            p = jax.tree_util.tree_unflatten(treedef, leaves)
+            return (lm.lm_probs(p, tokens, cfg),)
+
+        lowered = jax.jit(fwd).lower(
+            tok_spec, *[jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+        )
+        name = f"lm_probs_b{b}"
+        path = outdir / f"{name}.hlo.txt"
+        path.write_text(to_hlo_text(lowered))
+        entries.append(
+            {
+                "name": name,
+                "file": path.name,
+                "kind": "lm",
+                "batch": b,
+                "seq": cfg.seq,
+                "vocab": cfg.vocab,
+                "softmax_variant": cfg.softmax_variant,
+                "inputs": _io_spec([tok_spec]) + [{"params_bin": blob_path.name}],
+                "outputs": [{"shape": [b, cfg.vocab], "dtype": "f32"}],
+                "params_bin": blob_path.name,
+                "params": leaf_specs,
+                "config": dataclasses.asdict(cfg),
+            }
+        )
+        print(f"  wrote {path.name}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--block-n", type=int, default=twopass.DEFAULT_BLOCK_N)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-lm", action="store_true", help="softmax artifacts only")
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--n-layers", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    entries: list = []
+
+    print("emitting softmax executables ...")
+    emit_softmax(outdir, entries, DEFAULT_SOFTMAX_SHAPES, args.block_n)
+
+    if not args.skip_lm:
+        cfg = lm.LMConfig(
+            vocab=args.vocab, seq=args.seq, d_model=args.d_model, n_layers=args.n_layers
+        )
+        print(f"emitting LM executables ({cfg}) ...")
+        emit_lm(outdir, entries, cfg, args.seed)
+
+    manifest = {
+        "version": 1,
+        "generated_by": "python -m compile.aot " + " ".join(sys.argv[1:]),
+        "jax_version": jax.__version__,
+        "entries": entries,
+    }
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote manifest.json with {len(entries)} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Vectorized exponential primitives (paper Algorithm 4 and ExtExp).
+
+This module implements the paper's table-free, branch-free, division-free
+``e^x`` evaluation exactly as described in Sec. 6.3:
+
+1. **Range reduction** (Cody-Waite): ``n = round(x * log2(e))``,
+   ``t = x - n*ln2_hi - n*ln2_lo`` with ``ln2`` split into a high and a low
+   single-precision part so the reduction stays accurate.
+2. **Approximation**: degree-5 minimax polynomial for ``e^t`` on
+   ``[-ln2/2, +ln2/2]`` evaluated with a Horner scheme (maps to FMA on real
+   hardware).  The coefficients are the Sollya-produced set used by XNNPACK
+   (the paper's released implementation).
+3. **Reconstruction**: ``y = p * 2^n`` by direct exponent-field manipulation
+   (the AVX2 trick from the paper: flush to zero for ``n < -126``; inputs to
+   the three-pass softmax are always <= 0 so overflow cannot occur).
+
+``extexp`` omits step 3 and returns the pair ``(m, n)`` with
+``e^x == m * 2^n`` — the exotic representation that enables the Two-Pass
+softmax algorithm.  ``n`` is kept as a *float* because its magnitude can
+exceed integer exponent ranges when accumulating over unbounded inputs.
+
+Everything here is plain ``jnp`` on values (not refs), so the same functions
+are used inside Pallas kernel bodies and in the pure-jnp reference oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Constants from XNNPACK's f32 expf (hex float literals from the paper's
+# released code).  Shared verbatim with the Rust implementation
+# (rust/src/softmax/exp.rs) so both layers compute identical values.
+LOG2E = float.fromhex("0x1.715476p+0")  # log2(e)
+LN2_HI = float.fromhex("0x1.62E400p-1")  # high part of ln(2) (Cody-Waite)
+LN2_LO = float.fromhex("0x1.7F7D1Cp-20")  # low part of ln(2)
+C5 = float.fromhex("0x1.0F9F9Cp-7")
+C4 = float.fromhex("0x1.573A1Ap-5")
+C3 = float.fromhex("0x1.555A80p-3")
+C2 = float.fromhex("0x1.FFFDC6p-2")
+C1 = float.fromhex("0x1.FFFFF6p-1")
+
+# Bound below which 2^n flushes to zero in the reconstruction (paper Sec 6.3:
+# subnormals are flushed; outputs this small are indistinguishable from 0 in
+# the softmax result).
+MIN_EXP2 = -126.0
+
+# Domain bound for the Cody-Waite reduction: |n| <= 2^22 keeps both n and
+# n*ln2_hi exactly representable (ln2_hi carries 9 trailing zero bits), so t
+# stays accurate.  Inputs beyond +-2^21 are saturated; e^(+-2^21) is already
+# so far beyond f32 range (even in (m, n) form the *ratios* against sane
+# inputs are 0 or inf) that saturation only affects degenerate cases, and it
+# keeps the kernels NaN-free for ANY finite f32 input (e.g. -1e30 masks).
+DOMAIN_BOUND = 2097152.0  # 2^21
+
+
+def _round_half_even(v):
+    """Round to nearest-even, the behaviour of the SIMD magic-bias trick."""
+    return jnp.round(v)  # jnp.round is round-half-to-even, matching VCVTPS2DQ
+
+
+def reduce_args(x):
+    """Cody-Waite range reduction: x -> (n, t) with e^x = e^t * 2^n.
+
+    ``t`` lies in [-ln2/2, ln2/2]; ``n`` is integral but returned as f32.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    x = jnp.clip(x, -jnp.float32(DOMAIN_BOUND), jnp.float32(DOMAIN_BOUND))
+    n = _round_half_even(x * jnp.float32(LOG2E))
+    # Two-step Cody-Waite reduction keeps t accurate even for large |x|.
+    t = x - n * jnp.float32(LN2_HI)
+    t = t - n * jnp.float32(LN2_LO)
+    return n, t
+
+
+def poly_p5(t):
+    """Degree-5 Horner evaluation of the e^t minimax polynomial."""
+    p = jnp.float32(C5)
+    p = p * t + jnp.float32(C4)
+    p = p * t + jnp.float32(C3)
+    p = p * t + jnp.float32(C2)
+    p = p * t + jnp.float32(C1)
+    p = p * t + jnp.float32(1.0)
+    return p
+
+
+def exp2i(n):
+    """2^n for integral float n via exponent-field construction.
+
+    Implements the paper's AVX2 reconstruction: build the f32 bit pattern
+    ``(n + 127) << 23`` and flush to zero when ``n < -126`` (subnormal
+    range).  ``n`` must be <= 127 (guaranteed when x <= 0, as in the
+    Three-Pass softmax, or when scaling by a non-positive delta, as in the
+    Two-Pass combine step).
+    """
+    n = jnp.asarray(n, jnp.float32)
+    nc = jnp.maximum(n, jnp.float32(MIN_EXP2))  # clamp, then mask below
+    bits = (nc.astype(jnp.int32) + jnp.int32(127)) << 23
+    s = jax.lax.bitcast_convert_type(bits, jnp.float32)
+    return jnp.where(n < jnp.float32(MIN_EXP2), jnp.float32(0.0), s)
+
+
+def exp(x):
+    """Paper Algorithm 4: e^x for x <= ~0 (three-pass softmax regime).
+
+    Max error < 2 ULP over the valid negative domain (validated in
+    python/tests/test_exp.py against float64 exp).
+    """
+    n, t = reduce_args(x)
+    p = poly_p5(t)
+    return p * exp2i(n)
+
+
+def extexp(x):
+    """ExtExp: e^x as the pair (m, n) with e^x == m * 2^n, no reconstruction.
+
+    ``m = e^t`` is always in [sqrt(2)/2, sqrt(2)] and ``n`` is an integral
+    float of potentially huge magnitude; unlike :func:`exp`, this never
+    overflows or underflows for any finite input.
+    """
+    n, t = reduce_args(x)
+    return poly_p5(t), n
+
+
+def scale_exp2(v, d):
+    """v * 2^d for non-positive integral float delta d (flushing underflow).
+
+    The Two-Pass accumulation only ever scales *down* (d = n_i - n_max <= 0),
+    which is what makes the algorithm overflow-free; this helper asserts that
+    contract implicitly by clamping exactly like the AVX2 reconstruction.
+    """
+    return v * exp2i(d)

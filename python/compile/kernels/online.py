@@ -1,0 +1,85 @@
+"""EXTENSION — Online Softmax (Milakov & Gimelshein, 2018) in Pallas.
+
+The ablation counterpart to the paper's Two-Pass kernel: also 2 reads +
+1 write (3N traffic), but the reduction keeps a running ``(max, sum)`` pair
+rescaled with a *second exponential* (``s·e^(m_old − m_new)``) instead of
+the paper's integer exponent arithmetic on the ``(m, n)`` representation.
+Same pass/grid structure as twopass.py, so the HBM traffic is identical and
+the difference is purely compute per block — exactly what the ablation
+bench isolates on the Rust side.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import exp as expm
+
+DEFAULT_BLOCK_N = 512
+NEG_INIT = -1.0e30
+
+
+def _mask(j, block_n, n):
+    col = j * block_n + jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
+    return col < n
+
+
+def _accum_kernel(x_ref, m_ref, s_ref, *, block_n, n):
+    """Pass 1: fused running (max, sum) over column blocks."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INIT)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = jnp.where(_mask(j, block_n, n), x_ref[...], jnp.float32(NEG_INIT))
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, x)
+    # Branchless online update: rescale the running sum by e^(m_old − m_new)
+    # and add the new term e^(x − m_new). Both deltas are ≤ 0.
+    s_ref[...] = s_ref[...] * expm.exp(m_old - m_new) + expm.exp(x - m_new)
+    m_ref[...] = m_new
+
+
+def _scale_kernel(x_ref, mu_ref, lam_ref, y_ref):
+    """Pass 2: y = λ·e^(x − m)."""
+    y_ref[...] = expm.exp(x_ref[...] - mu_ref[...]) * lam_ref[...]
+
+
+def softmax_online(x, block_n=DEFAULT_BLOCK_N):
+    """Online softmax on (B, N) f32 along the last axis. 2 reads + 1 write."""
+    x = jnp.asarray(x, jnp.float32)
+    b, n = x.shape
+    grid = (b, pl.cdiv(n, block_n))
+    row_spec = pl.BlockSpec((1, block_n), lambda i, j: (i, j))
+    acc_spec = pl.BlockSpec((1, block_n), lambda i, j: (i, 0))
+    scalar_spec = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
+
+    m, s = pl.pallas_call(  # Pass 1: read X
+        functools.partial(_accum_kernel, block_n=block_n, n=n),
+        grid=grid,
+        in_specs=[row_spec],
+        out_specs=[acc_spec, acc_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, block_n), jnp.float32),
+            jax.ShapeDtypeStruct((b, block_n), jnp.float32),
+        ],
+        interpret=True,
+    )(x)
+
+    # Horizontal lane combine (O(block_n), not a memory pass).
+    m_f = jnp.max(m, axis=-1, keepdims=True)
+    s_f = jnp.sum(s * expm.exp(m - m_f), axis=-1, keepdims=True)
+    lam = 1.0 / s_f
+
+    return pl.pallas_call(  # Pass 2: read X, write Y
+        _scale_kernel,
+        grid=grid,
+        in_specs=[row_spec, scalar_spec, scalar_spec],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(x, m_f, lam)

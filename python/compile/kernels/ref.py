@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for kernel correctness.
+
+These are the CORE correctness signal for the whole stack: every Pallas
+kernel variant (and, transitively, the Rust implementations, which share the
+exact same polynomial/reduction constants) is checked against these
+references in python/tests/.
+
+The references intentionally use the *conventional* numerically-stable
+formulation (subtract-max), i.e. the paper's Algorithm 1 semantics, computed
+in float32 (and a float64 variant for tight-accuracy checks).
+"""
+
+import jax.numpy as jnp
+
+
+def softmax_f32(x, axis=-1):
+    """Conventional three-pass softmax in float32 (paper Algorithm 1)."""
+    x = jnp.asarray(x, jnp.float32)
+    mu = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - mu)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def softmax_f64(x, axis=-1):
+    """High-precision oracle: float64 end-to-end, cast back to f32.
+
+    Requires JAX_ENABLE_X64 (enabled in tests via jax.config).
+    """
+    x = jnp.asarray(x, jnp.float64)
+    mu = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - mu)
+    return (e / jnp.sum(e, axis=axis, keepdims=True)).astype(jnp.float32)
+
+
+def logsumexp_f32(x, axis=-1):
+    """Stable log-sum-exp; used to cross-check the two-pass (m, n) sum."""
+    x = jnp.asarray(x, jnp.float32)
+    mu = jnp.max(x, axis=axis, keepdims=True)
+    return jnp.log(jnp.sum(jnp.exp(x - mu), axis=axis, keepdims=True)) + mu

@@ -1,0 +1,184 @@
+"""Pallas implementations of the Three-Pass softmax baselines (Algs. 1 & 2).
+
+Each *memory pass* of the paper is one ``pallas_call`` grid traversal over
+the input's HBM-resident blocks, so the HBM<->VMEM traffic of each variant
+matches the paper's Table 2 exactly:
+
+=========================  ==========  ===========  ==============
+algorithm                  reads       writes       bandwidth cost
+=========================  ==========  ===========  ==============
+Three-Pass (Recompute)     3N          1N           4N
+Three-Pass (Reload)        3N          2N           5N
+=========================  ==========  ===========  ==============
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's AVX512
+lanes become a ``(1, BLOCK_N)`` VMEM tile; the paper's per-lane SIMD
+accumulators become a ``(1, BLOCK_N)`` revisited output block that lives in
+VMEM across the sequential grid dimension; the final horizontal SIMD
+reduction becomes a tiny O(BLOCK_N) jnp combine between the passes (not a
+memory pass — it never touches the N-sized arrays).
+
+All kernels operate on ``(B, N)`` float32, softmax along the last axis, and
+mask the ragged tail in-kernel, so any N works. ``interpret=True`` is
+required on CPU (real-TPU lowering emits a Mosaic custom-call the CPU PJRT
+plugin cannot execute).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import exp as expm
+
+DEFAULT_BLOCK_N = 512
+# Initial value of the running-max accumulator: smaller than any finite f32
+# input, but safely inside the domain where Exp's range reduction is exact.
+NEG_INIT = -1.0e30
+
+
+def _mask(j, block_n, n):
+    """Lane-validity mask for column-block j of a row of true length n."""
+    col = j * block_n + jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
+    return col < n
+
+
+# ---------------------------------------------------------------------------
+# Pass 1 (shared): running max over column blocks.
+# ---------------------------------------------------------------------------
+
+
+def _max_kernel(x_ref, acc_ref, *, block_n, n):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, NEG_INIT)
+
+    x = jnp.where(_mask(j, block_n, n), x_ref[...], jnp.float32(NEG_INIT))
+    acc_ref[...] = jnp.maximum(acc_ref[...], x)
+
+
+def _run_max(x, block_n):
+    b, n = x.shape
+    grid = (b, pl.cdiv(n, block_n))
+    acc = pl.pallas_call(
+        functools.partial(_max_kernel, block_n=block_n, n=n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block_n), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, block_n), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, block_n), jnp.float32),
+        interpret=True,
+    )(x)
+    return jnp.max(acc, axis=-1, keepdims=True)  # lane combine (O(block_n))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: Three-Pass with recomputation of the exponential function.
+# ---------------------------------------------------------------------------
+
+
+def _sum_exp_kernel(x_ref, mu_ref, acc_ref, *, block_n, n):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    e = expm.exp(x_ref[...] - mu_ref[...])
+    e = jnp.where(_mask(j, block_n, n), e, jnp.float32(0.0))
+    acc_ref[...] = acc_ref[...] + e
+
+
+def _scale_exp_kernel(x_ref, mu_ref, lam_ref, y_ref):
+    y_ref[...] = expm.exp(x_ref[...] - mu_ref[...]) * lam_ref[...]
+
+
+def softmax_threepass_recompute(x, block_n=DEFAULT_BLOCK_N):
+    """Paper Algorithm 1 on (B, N) f32; 3 reads + 1 write of N elements."""
+    x = jnp.asarray(x, jnp.float32)
+    b, n = x.shape
+    grid = (b, pl.cdiv(n, block_n))
+    row_spec = pl.BlockSpec((1, block_n), lambda i, j: (i, j))
+    scalar_spec = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
+
+    mu = _run_max(x, block_n)  # Pass 1: read X
+
+    acc = pl.pallas_call(  # Pass 2: read X
+        functools.partial(_sum_exp_kernel, block_n=block_n, n=n),
+        grid=grid,
+        in_specs=[row_spec, scalar_spec],
+        out_specs=pl.BlockSpec((1, block_n), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, block_n), jnp.float32),
+        interpret=True,
+    )(x, mu)
+    lam = 1.0 / jnp.sum(acc, axis=-1, keepdims=True)
+
+    return pl.pallas_call(  # Pass 3: read X, write Y
+        _scale_exp_kernel,
+        grid=grid,
+        in_specs=[row_spec, scalar_spec, scalar_spec],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(x, mu, lam)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: Three-Pass with reloading of the computed exponentials.
+# ---------------------------------------------------------------------------
+
+
+def _store_exp_kernel(x_ref, mu_ref, y_ref, acc_ref, *, block_n, n):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    e = expm.exp(x_ref[...] - mu_ref[...])
+    e = jnp.where(_mask(j, block_n, n), e, jnp.float32(0.0))
+    y_ref[...] = e
+    acc_ref[...] = acc_ref[...] + e
+
+
+def _scale_kernel(y_ref, lam_ref, o_ref):
+    o_ref[...] = y_ref[...] * lam_ref[...]
+
+
+def softmax_threepass_reload(x, block_n=DEFAULT_BLOCK_N):
+    """Paper Algorithm 2 on (B, N) f32; 3 reads + 2 writes of N elements."""
+    x = jnp.asarray(x, jnp.float32)
+    b, n = x.shape
+    grid = (b, pl.cdiv(n, block_n))
+    row_spec = pl.BlockSpec((1, block_n), lambda i, j: (i, j))
+    scalar_spec = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
+
+    mu = _run_max(x, block_n)  # Pass 1: read X
+
+    y, acc = pl.pallas_call(  # Pass 2: read X, write Y
+        functools.partial(_store_exp_kernel, block_n=block_n, n=n),
+        grid=grid,
+        in_specs=[row_spec, scalar_spec],
+        out_specs=[
+            row_spec,
+            pl.BlockSpec((1, block_n), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, block_n), jnp.float32),
+        ],
+        interpret=True,
+    )(x, mu)
+    lam = 1.0 / jnp.sum(acc, axis=-1, keepdims=True)
+
+    return pl.pallas_call(  # Pass 3: read Y, write Y (out-of-place here;
+        # the Rust AVX implementation does it truly in place)
+        _scale_kernel,
+        grid=grid,
+        in_specs=[row_spec, scalar_spec],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(y, lam)

@@ -1,0 +1,213 @@
+"""L2: JAX model layer — a transformer LM whose softmaxes are the paper's.
+
+This is the build-time compute-graph layer of the three-layer stack.  It
+provides:
+
+* :func:`softmax` — the public differentiable op.  Forward is one of the
+  three Pallas kernel variants (two-pass by default); backward is the
+  analytic softmax VJP ``dx = y * (g - sum(g * y))`` via ``jax.custom_vjp``
+  (interpret-mode Pallas bodies are not auto-differentiated through).
+* A small GPT-style causal transformer LM (pure-jax, no flax) that uses the
+  Pallas softmax in *both* places the paper motivates: the attention
+  probabilities and the large-vocabulary output head.
+* :func:`lm_loss` — cross-entropy via the free ``logsumexp`` the (m, n)
+  representation provides, so training never materializes the probability
+  matrix.
+
+Everything here is lowered ONCE by aot.py to HLO text and executed from the
+Rust runtime; Python never runs on the request path.
+"""
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref as ref_kernels
+from .kernels import threepass, twopass
+
+VARIANTS = ("twopass", "threepass_recompute", "threepass_reload", "jnp")
+
+
+def _softmax_fwd_impl(x, variant, block_n):
+    if variant == "twopass":
+        return twopass.softmax_twopass(x, block_n=block_n)
+    if variant == "threepass_recompute":
+        return threepass.softmax_threepass_recompute(x, block_n=block_n)
+    if variant == "threepass_reload":
+        return threepass.softmax_threepass_reload(x, block_n=block_n)
+    if variant == "jnp":  # pure-XLA baseline (used for ablations)
+        return ref_kernels.softmax_f32(x)
+    raise ValueError(f"unknown softmax variant {variant!r}; want one of {VARIANTS}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def softmax(x, variant="twopass", block_n=twopass.DEFAULT_BLOCK_N):
+    """Differentiable softmax over the last axis of a (..., N) array.
+
+    The leading axes are flattened to a batch for the (B, N) Pallas kernels
+    and restored afterwards.
+    """
+    shape = x.shape
+    y = _softmax_fwd_impl(x.reshape(-1, shape[-1]), variant, block_n)
+    return y.reshape(shape)
+
+
+def _softmax_vjp_fwd(x, variant, block_n):
+    y = softmax(x, variant, block_n)
+    return y, y
+
+
+def _softmax_vjp_bwd(variant, block_n, y, g):
+    # Standard softmax Jacobian-vector product, computed from the forward
+    # output: dx_i = y_i * (g_i - sum_k g_k y_k).
+    dot = jnp.sum(g * y, axis=-1, keepdims=True)
+    return (y * (g - dot),)
+
+
+softmax.defvjp(_softmax_vjp_fwd, _softmax_vjp_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def logsumexp(x, block_n=twopass.DEFAULT_BLOCK_N):
+    """Stable logsumexp over the last axis via the two-pass (m, n) sum."""
+    shape = x.shape
+    out = twopass.logsumexp_twopass(x.reshape(-1, shape[-1]), block_n=block_n)
+    return out.reshape(shape[:-1])
+
+
+def _logsumexp_vjp_fwd(x, block_n):
+    return logsumexp(x, block_n), x
+
+
+def _logsumexp_vjp_bwd(block_n, x, g):
+    # d/dx logsumexp(x) = softmax(x); reuse the two-pass kernel.
+    return (softmax(x, "twopass", block_n) * g[..., None],)
+
+
+logsumexp.defvjp(_logsumexp_vjp_fwd, _logsumexp_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Transformer LM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    """Configuration of the demo language model (see aot.py CLI flags)."""
+
+    vocab: int = 8192
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 1024
+    seq: int = 128
+    softmax_variant: str = "twopass"
+    attn_block_n: int = 128
+    vocab_block_n: int = 512
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def init_params(cfg: LMConfig, seed: int = 0) -> Dict[str, Any]:
+    """Initialize LM parameters (GPT-2-style scaled-normal init)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4 + 6 * cfg.n_layers)
+    it = iter(ks)
+
+    def normal(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(jnp.float32)
+
+    p: Dict[str, Any] = {
+        "wte": normal(next(it), (cfg.vocab, cfg.d_model), 0.02),
+        "wpe": normal(next(it), (cfg.seq, cfg.d_model), 0.01),
+        "ln_f": {"g": jnp.ones((cfg.d_model,), jnp.float32), "b": jnp.zeros((cfg.d_model,), jnp.float32)},
+        "blocks": [],
+    }
+    resid_scale = jnp.float32(0.02) / jnp.sqrt(jnp.float32(2.0 * cfg.n_layers))
+    for _ in range(cfg.n_layers):
+        blk = {
+            "ln1": {"g": jnp.ones((cfg.d_model,), jnp.float32), "b": jnp.zeros((cfg.d_model,), jnp.float32)},
+            "ln2": {"g": jnp.ones((cfg.d_model,), jnp.float32), "b": jnp.zeros((cfg.d_model,), jnp.float32)},
+            "qkv": normal(next(it), (cfg.d_model, 3 * cfg.d_model), 0.02),
+            "proj": normal(next(it), (cfg.d_model, cfg.d_model), resid_scale),
+            "fc1": normal(next(it), (cfg.d_model, cfg.d_ff), 0.02),
+            "fc2": normal(next(it), (cfg.d_ff, cfg.d_model), resid_scale),
+            "fc1_b": jnp.zeros((cfg.d_ff,), jnp.float32),
+            "fc2_b": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        p["blocks"].append(blk)
+    return p
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(x, blk, cfg: LMConfig):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    qkv = x @ blk["qkv"]  # (B, S, 3D)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # (B, S, D) -> (B, H, S, Dh)
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(dh))
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    # -3e4 (not -inf/-1e30): deep inside the exp underflow region, but still
+    # within the Cody-Waite exact-reduction domain of the Pallas kernels.
+    scores = jnp.where(causal, scores, jnp.float32(-3e4))
+    # The paper's softmax, applied to (B*H*S, S) attention rows.
+    probs = softmax(scores, cfg.softmax_variant, cfg.attn_block_n)
+    out = (probs @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ blk["proj"]
+
+
+def _mlp(x, blk):
+    hgelu = jax.nn.gelu(x @ blk["fc1"] + blk["fc1_b"])
+    return hgelu @ blk["fc2"] + blk["fc2_b"]
+
+
+def lm_logits(params, tokens, cfg: LMConfig):
+    """Forward pass to vocabulary logits. tokens: (B, S) int32."""
+    x = params["wte"][tokens] + params["wpe"][None, : tokens.shape[1]]
+    for blk in params["blocks"]:
+        x = x + _attention(_layer_norm(x, **blk["ln1"]), blk, cfg)
+        x = x + _mlp(_layer_norm(x, **blk["ln2"]), blk)
+    x = _layer_norm(x, **params["ln_f"])
+    return x @ params["wte"].T  # weight-tied head: (B, S, V)
+
+
+def lm_probs(params, tokens, cfg: LMConfig):
+    """Next-token probability distribution for the LAST position of each row.
+
+    This is the paper's motivating workload: a softmax over a large
+    vocabulary during inference.  Only the last position is normalized (the
+    serving path samples from it); intermediate positions stay as logits.
+    """
+    logits = lm_logits(params, tokens, cfg)
+    last = logits[:, -1, :]  # (B, V)
+    return softmax(last, cfg.softmax_variant, cfg.vocab_block_n)
+
+
+def lm_loss(params, tokens, targets, cfg: LMConfig):
+    """Mean next-token cross-entropy, via the free two-pass logsumexp."""
+    logits = lm_logits(params, tokens, cfg)  # (B, S, V)
+    lse = logsumexp(logits)  # (B, S)
+    picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+def lm_loss_and_grad(params, tokens, targets, cfg: LMConfig):
+    """Value+grad of the LM loss — the fwd/bwd graph lowered by aot.py."""
+    return jax.value_and_grad(lm_loss)(params, tokens, targets, cfg)

@@ -1,0 +1,7 @@
+"""Make `pytest python/tests` work from the repository root: the package
+imports are `compile.*`, rooted at this directory."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent))

@@ -1,0 +1,5 @@
+"""Shared pytest config: enable x64 for the float64 oracles."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,141 @@
+"""Pallas kernels vs the pure-jnp oracle — the core correctness signal.
+
+Covers all three kernel variants over a shape/distribution grid, hypothesis
+property sweeps, the ragged-tail masking, block-size independence, and the
+numerical-range cases that motivate the paper (inputs that overflow naive
+exp; the two-pass algorithm must handle the *full* finite f32 range without
+a max pass).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import online, ref, threepass, twopass
+
+KERNELS = {
+    "twopass": twopass.softmax_twopass,
+    "threepass_recompute": threepass.softmax_threepass_recompute,
+    "threepass_reload": threepass.softmax_threepass_reload,
+    # Extension: the online-softmax ablation kernel (same 3N traffic).
+    "online": online.softmax_online,
+}
+
+
+def check(x, fn, atol=2e-6, block_n=512):
+    got = np.asarray(fn(x, block_n=block_n))
+    want = np.asarray(ref.softmax_f64(x))
+    assert got.shape == x.shape
+    assert np.isfinite(got).all(), "non-finite output"
+    np.testing.assert_allclose(got, want, atol=atol, rtol=0)
+    np.testing.assert_allclose(got.sum(-1), 1.0, atol=1e-5)
+    assert (got >= 0).all()
+
+
+@pytest.mark.parametrize("name,fn", KERNELS.items(), ids=KERNELS.keys())
+class TestShapes:
+    @pytest.mark.parametrize(
+        "shape",
+        [(1, 1), (1, 7), (2, 64), (3, 511), (3, 512), (3, 513), (8, 1000), (1, 8192)],
+    )
+    def test_shape_grid(self, name, fn, shape):
+        rng = np.random.default_rng(hash((name, shape)) % 2**32)
+        x = (rng.standard_normal(shape) * 6).astype(np.float32)
+        check(x, fn)
+
+    @pytest.mark.parametrize("block_n", [8, 128, 512, 1024])
+    def test_block_size_independence(self, name, fn, block_n):
+        rng = np.random.default_rng(5)
+        x = (rng.standard_normal((2, 777)) * 4).astype(np.float32)
+        check(x, fn, block_n=block_n)
+
+    def test_constant_rows(self, name, fn):
+        check(np.zeros((2, 300), np.float32), fn)
+        check(np.full((2, 300), 13.5, np.float32), fn)
+
+    def test_one_hot_extreme(self, name, fn):
+        x = np.full((1, 512), -100.0, np.float32)
+        x[0, 37] = 100.0
+        got = np.asarray(fn(x))
+        assert got[0, 37] == pytest.approx(1.0)
+        assert got.sum() == pytest.approx(1.0)
+
+    def test_large_positive_shift(self, name, fn):
+        # e^x overflows plain f32 for x > 89 — the paper's motivation.
+        rng = np.random.default_rng(11)
+        x = (rng.standard_normal((2, 640)) * 2 + 90).astype(np.float32)
+        check(x, fn)
+
+    def test_large_negative_shift(self, name, fn):
+        rng = np.random.default_rng(12)
+        x = (rng.standard_normal((2, 640)) * 2 - 5000).astype(np.float32)
+        check(x, fn)
+
+
+class TestTwoPassSpecifics:
+    def test_full_range_no_max_pass(self):
+        # Mixed extreme magnitudes in one row: only the (m, n) representation
+        # survives this without a max subtraction.
+        x = np.array([[2000.0, 1999.0, -2000.0, 0.0, 1998.5]], np.float32)
+        got = np.asarray(twopass.softmax_twopass(x))
+        want = np.asarray(ref.softmax_f64(x))
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    def test_mask_values_like_attention(self):
+        x = np.full((2, 300), -3.0e4, np.float32)
+        x[:, :5] = np.arange(5, dtype=np.float32)
+        got = np.asarray(twopass.softmax_twopass(x))
+        assert np.isfinite(got).all()
+        np.testing.assert_allclose(got[:, 5:], 0.0, atol=1e-30)
+        np.testing.assert_allclose(got.sum(-1), 1.0, atol=1e-5)
+
+    def test_logsumexp(self):
+        rng = np.random.default_rng(3)
+        x = (rng.standard_normal((4, 1000)) * 50).astype(np.float32)
+        got = np.asarray(twopass.logsumexp_twopass(x))[:, 0]
+        want = np.asarray(ref.logsumexp_f32(x))[:, 0]
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-6)
+
+    def test_logsumexp_overflow_range(self):
+        x = np.full((1, 4096), 500.0, np.float32)  # sum e^500 >> f32 max
+        got = float(np.asarray(twopass.logsumexp_twopass(x))[0, 0])
+        want = 500.0 + np.log(4096.0)
+        assert got == pytest.approx(want, abs=1e-2)
+
+
+@given(
+    b=st.integers(1, 4),
+    n=st.integers(1, 600),
+    scale=st.sampled_from([0.1, 1.0, 10.0, 100.0]),
+    shift=st.sampled_from([0.0, 80.0, -90.0, 1000.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_property_all_kernels_match_oracle(b, n, scale, shift, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((b, n)) * scale + shift).astype(np.float32)
+    want = np.asarray(ref.softmax_f64(x))
+    for name, fn in KERNELS.items():
+        got = np.asarray(fn(x, block_n=128))
+        np.testing.assert_allclose(got, want, atol=3e-6, err_msg=name)
+        np.testing.assert_allclose(got.sum(-1), 1.0, atol=2e-5, err_msg=name)
+
+
+@given(n=st.integers(1, 2048))
+@settings(max_examples=40, deadline=None)
+def test_property_ragged_tails(n):
+    rng = np.random.default_rng(n)
+    x = (rng.standard_normal((2, n)) * 5).astype(np.float32)
+    for name, fn in KERNELS.items():
+        got = np.asarray(fn(x, block_n=256))
+        assert got.shape == (2, n), name
+        np.testing.assert_allclose(got.sum(-1), 1.0, atol=1e-5, err_msg=name)
+
+
+def test_variants_agree_with_each_other():
+    rng = np.random.default_rng(42)
+    x = (rng.standard_normal((3, 2000)) * 8).astype(np.float32)
+    outs = [np.asarray(fn(x)) for fn in KERNELS.values()]
+    for other in outs[1:]:
+        np.testing.assert_allclose(outs[0], other, atol=2e-6)

@@ -1,0 +1,144 @@
+"""L2 model tests: softmax op semantics + gradients, transformer LM shapes,
+loss/grad finiteness, and a short training run (loss must drop)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as lm
+from compile.kernels import ref
+
+CFG = lm.LMConfig(
+    vocab=512,
+    seq=16,
+    d_model=64,
+    n_layers=2,
+    n_heads=2,
+    d_ff=128,
+    attn_block_n=16,
+    vocab_block_n=128,
+)
+
+
+class TestSoftmaxOp:
+    @pytest.mark.parametrize("variant", lm.VARIANTS)
+    def test_forward_matches_ref(self, variant):
+        rng = np.random.default_rng(0)
+        x = (rng.standard_normal((4, 300)) * 5).astype(np.float32)
+        got = np.asarray(lm.softmax(jnp.asarray(x), variant, 128))
+        want = np.asarray(ref.softmax_f32(x))
+        np.testing.assert_allclose(got, want, atol=2e-6)
+
+    def test_leading_axes_flattened(self):
+        rng = np.random.default_rng(1)
+        x = (rng.standard_normal((2, 3, 5, 40)) * 3).astype(np.float32)
+        got = np.asarray(lm.softmax(jnp.asarray(x), "twopass", 64))
+        assert got.shape == x.shape
+        np.testing.assert_allclose(got.sum(-1), 1.0, atol=1e-5)
+
+    def test_gradient_matches_analytic(self):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray((rng.standard_normal((2, 64)) * 3).astype(np.float32))
+        g = jnp.asarray(rng.standard_normal((2, 64)).astype(np.float32))
+
+        def loss(x):
+            return jnp.sum(lm.softmax(x, "twopass", 64) * g)
+
+        got = np.asarray(jax.grad(loss)(x))
+        # Analytic: dx = y * (g - sum(g*y))
+        y = np.asarray(ref.softmax_f32(np.asarray(x)))
+        gn = np.asarray(g)
+        want = y * (gn - (gn * y).sum(-1, keepdims=True))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_gradient_vs_finite_difference(self):
+        x = jnp.asarray(np.linspace(-2, 2, 8, dtype=np.float32)[None, :])
+
+        def scalar_loss(x):
+            return jnp.sum(jnp.square(lm.softmax(x, "twopass", 8)))
+
+        g = np.asarray(jax.grad(scalar_loss)(x))[0]
+        eps = 1e-2
+        for i in range(8):
+            xp = np.asarray(x, np.float64).copy()
+            xm = xp.copy()
+            xp[0, i] += eps
+            xm[0, i] -= eps
+            def f64_loss(v):
+                y = np.asarray(ref.softmax_f64(v.astype(np.float32)), np.float64)
+                return float(np.square(y).sum())
+            fd = (f64_loss(xp) - f64_loss(xm)) / (2 * eps)
+            assert g[i] == pytest.approx(fd, abs=2e-3), f"i={i}"
+
+    def test_logsumexp_gradient_is_softmax(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray((rng.standard_normal((2, 96)) * 4).astype(np.float32))
+        got = np.asarray(jax.grad(lambda v: jnp.sum(lm.logsumexp(v, 32)))(x))
+        want = np.asarray(ref.softmax_f32(np.asarray(x)))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_unknown_variant_raises(self):
+        with pytest.raises(ValueError, match="unknown softmax variant"):
+            lm.softmax(jnp.ones((1, 4)), "bogus", 4)
+
+
+class TestTransformer:
+    def test_logits_shape_and_finite(self):
+        p = lm.init_params(CFG, 0)
+        tok = np.random.default_rng(0).integers(0, CFG.vocab, (3, CFG.seq)).astype(np.int32)
+        logits = np.asarray(lm.lm_logits(p, tok, CFG))
+        assert logits.shape == (3, CFG.seq, CFG.vocab)
+        assert np.isfinite(logits).all()
+
+    def test_probs_are_distributions(self):
+        p = lm.init_params(CFG, 0)
+        tok = np.random.default_rng(1).integers(0, CFG.vocab, (2, CFG.seq)).astype(np.int32)
+        probs = np.asarray(lm.lm_probs(p, tok, CFG))
+        assert probs.shape == (2, CFG.vocab)
+        assert (probs >= 0).all()
+        np.testing.assert_allclose(probs.sum(-1), 1.0, atol=1e-5)
+
+    def test_causality(self):
+        # Changing a future token must not change past-position logits.
+        p = lm.init_params(CFG, 0)
+        rng = np.random.default_rng(2)
+        tok = rng.integers(0, CFG.vocab, (1, CFG.seq)).astype(np.int32)
+        tok2 = tok.copy()
+        tok2[0, -1] = (tok2[0, -1] + 7) % CFG.vocab
+        a = np.asarray(lm.lm_logits(p, tok, CFG))[0, : CFG.seq - 1]
+        b = np.asarray(lm.lm_logits(p, tok2, CFG))[0, : CFG.seq - 1]
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+    def test_initial_loss_near_uniform(self):
+        p = lm.init_params(CFG, 0)
+        rng = np.random.default_rng(3)
+        tok = rng.integers(0, CFG.vocab, (2, CFG.seq)).astype(np.int32)
+        tgt = rng.integers(0, CFG.vocab, (2, CFG.seq)).astype(np.int32)
+        loss = float(lm.lm_loss(p, tok, tgt, CFG))
+        assert loss == pytest.approx(np.log(CFG.vocab), abs=0.5)
+
+    def test_grads_finite_and_training_reduces_loss(self):
+        p = lm.init_params(CFG, 0)
+        rng = np.random.default_rng(4)
+        tok = rng.integers(0, CFG.vocab, (2, CFG.seq)).astype(np.int32)
+        tgt = np.roll(tok, -1, axis=1).astype(np.int32)
+        loss0, g = lm.lm_loss_and_grad(p, tok, tgt, CFG)
+        for leaf in jax.tree_util.tree_leaves(g):
+            assert np.isfinite(np.asarray(leaf)).all()
+        params = p
+        for _ in range(12):
+            _, g = lm.lm_loss_and_grad(params, tok, tgt, CFG)
+            params = jax.tree_util.tree_map(lambda w, gw: w - 0.1 * gw, params, g)
+        loss1 = float(lm.lm_loss(params, tok, tgt, CFG))
+        assert loss1 < float(loss0) - 0.3, f"{loss0} -> {loss1}"
+
+    @pytest.mark.parametrize("variant", ["twopass", "threepass_reload", "jnp"])
+    def test_variant_agnostic_probs(self, variant):
+        cfg = lm.LMConfig(**{**CFG.__dict__, "softmax_variant": variant})
+        p = lm.init_params(cfg, 0)
+        tok = np.random.default_rng(5).integers(0, cfg.vocab, (1, cfg.seq)).astype(np.int32)
+        probs = np.asarray(lm.lm_probs(p, tok, cfg))
+        base_cfg = lm.LMConfig(**{**CFG.__dict__, "softmax_variant": "twopass"})
+        base = np.asarray(lm.lm_probs(p, tok, base_cfg))
+        np.testing.assert_allclose(probs, base, atol=2e-5)

@@ -1,0 +1,94 @@
+//! Bench: the L3 serving coordinator — throughput/latency vs batching
+//! policy (ablation of max_batch and workers), native backend.
+//!
+//! `cargo bench --bench coordinator [-- --requests N --n LOGITS]`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use two_pass_softmax::config::ServeConfig;
+use two_pass_softmax::coordinator::{Coordinator, Payload, Router};
+use two_pass_softmax::softmax::{Algorithm, Isa};
+use two_pass_softmax::util::cli::Args;
+use two_pass_softmax::util::rng::Rng;
+use two_pass_softmax::util::stats;
+use two_pass_softmax::util::table::Table;
+
+fn run_once(
+    requests: usize,
+    n: usize,
+    max_batch: usize,
+    workers: usize,
+    clients: usize,
+) -> (f64, f64, f64, f64) {
+    let cfg = ServeConfig {
+        max_batch,
+        workers,
+        max_wait_us: 200,
+        queue_capacity: 1 << 14,
+        ..ServeConfig::default()
+    };
+    let router = Router::Native { algorithm: Algorithm::TwoPass, isa: Isa::detect_best() };
+    let coord = Arc::new(Coordinator::start_with_router(&cfg, router));
+    let t0 = Instant::now();
+    let per = requests / clients;
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let coord = coord.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(c as u64);
+            let mut lat = Vec::with_capacity(per);
+            for _ in 0..per {
+                let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 4.0)).collect();
+                let t = Instant::now();
+                let r = coord.submit(Payload::Logits(x)).expect("submit").wait().expect("resp");
+                lat.push(t.elapsed().as_secs_f64() * 1e6);
+                assert!(r.error.is_none());
+            }
+            lat
+        }));
+    }
+    let mut lat = Vec::new();
+    for j in joins {
+        lat.extend(j.join().expect("client"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = stats::summarize(&lat);
+    let snap = coord.metrics();
+    let avg_batch = snap.avg_batch;
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.shutdown(),
+        Err(_) => panic!("leak"),
+    }
+    ((per * clients) as f64 / wall, s.median, s.p95, avg_batch)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    raw.retain(|a| a != "--bench");
+    let args = Args::parse(raw);
+    let requests: usize = args.get("requests", 2000).map_err(anyhow::Error::msg)?;
+    let n: usize = args.get("n", 8192).map_err(anyhow::Error::msg)?;
+
+    let mut t = Table::new(
+        &format!("Coordinator throughput/latency (N = {n}, {requests} requests)"),
+        &["max_batch", "workers", "clients", "req_per_s", "p50_us", "p95_us", "avg_batch"],
+    );
+    for (max_batch, workers, clients) in
+        [(1, 1, 4), (4, 1, 4), (8, 1, 4), (8, 2, 4), (16, 2, 8), (1, 2, 8)]
+    {
+        let (rps, p50, p95, ab) = run_once(requests, n, max_batch, workers, clients);
+        t.rowd(&[
+            max_batch.to_string(),
+            workers.to_string(),
+            clients.to_string(),
+            format!("{rps:.0}"),
+            format!("{p50:.1}"),
+            format!("{p95:.1}"),
+            format!("{ab:.2}"),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    t.save(std::path::Path::new("results/bench"), "coordinator")?;
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Bench: the Exp/ExtExp elementary-function kernels (paper §6.3 / Alg. 4):
+//! ns/element of the vectorized exp passes per ISA and unroll factor —
+//! the auto-tuner's raw data, printed as a table.
+//!
+//! `cargo bench --bench exp [-- --n N --reps R]`
+
+use two_pass_softmax::softmax::tuning::{time_pass, UNROLLS};
+use two_pass_softmax::softmax::{Isa, Pass};
+use two_pass_softmax::util::cli::Args;
+use two_pass_softmax::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    raw.retain(|a| a != "--bench");
+    let args = Args::parse(raw);
+    let n: usize = args.get("n", 1 << 18).map_err(anyhow::Error::msg)?;
+    let reps: usize = args.get("reps", 5).map_err(anyhow::Error::msg)?;
+
+    let mut t = Table::new(
+        &format!("Exp-family pass throughput at N = {n} (ns/elem)"),
+        &["pass", "isa", "u1", "u2", "u4", "u8"],
+    );
+    let exp_passes =
+        [Pass::SumExp, Pass::StoreExp, Pass::ScaleExp, Pass::AccumExtExp, Pass::ScaleExtExp];
+    for isa in Isa::detect_all() {
+        for pass in exp_passes {
+            let times: Vec<String> = UNROLLS
+                .iter()
+                .map(|&u| format!("{:.3}", time_pass(pass, isa, u, n, reps)))
+                .collect();
+            t.row(&[
+                pass.to_string(),
+                isa.to_string(),
+                times[0].clone(),
+                times[1].clone(),
+                times[2].clone(),
+                times[3].clone(),
+            ]);
+        }
+    }
+    print!("{}", t.to_markdown());
+    t.save(std::path::Path::new("results/bench"), "exp")?;
+
+    // Sanity: AVX512 exp passes should beat AVX2 which should beat scalar.
+    if Isa::Avx512.available() && Isa::Avx2.available() {
+        let s = time_pass(Pass::SumExp, Isa::Scalar, 2, n, reps);
+        let a2 = time_pass(Pass::SumExp, Isa::Avx2, 2, n, reps);
+        let a5 = time_pass(Pass::SumExp, Isa::Avx512, 2, n, reps);
+        println!("\nsum_exp speedups: avx2 {:.2}x, avx512 {:.2}x over scalar", s / a2, s / a5);
+    }
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Bench: per-pass bandwidth + runtime decomposition (paper Figs. 3, 4, 7)
+//! and the Table-2 sanity check (measured runtime ratio vs 4N/5N/3N).
+//!
+//! `cargo bench --bench passes [-- --max-n N --reps R]`
+
+use two_pass_softmax::figures::{self, Ctx};
+use two_pass_softmax::membw;
+use two_pass_softmax::softmax::{Algorithm, Isa, Pass};
+use two_pass_softmax::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    raw.retain(|a| a != "--bench");
+    let args = Args::parse(raw);
+    let mut ctx = Ctx::from_args(&args)?;
+    if args.opt("max-n").is_none() {
+        ctx.max_n = ctx.max_n.min(1 << 23);
+    }
+    if args.opt("out").is_none() {
+        ctx.out_dir = "results/bench".into();
+    }
+    for id in ["fig3", "fig4", "fig7"] {
+        println!("\n===== {id} =====");
+        figures::run(id, &ctx)?;
+    }
+
+    // Table-2 check: the measured per-algorithm runtime ratios out of cache
+    // should approach the 4:5:3 traffic ratios.
+    println!("\n===== table2 measured ratio check =====");
+    let n = ctx.out_of_cache_n();
+    let isa = Isa::detect_best();
+    let mut total = Vec::new();
+    for alg in Algorithm::ALL {
+        let secs: f64 = Pass::of_algorithm(alg)
+            .iter()
+            .map(|&p| {
+                let u = two_pass_softmax::softmax::tuning::default_best_unroll(p, isa);
+                membw::measure_pass(p, isa, u, n, ctx.reps, None).secs
+            })
+            .sum();
+        total.push((alg, secs));
+        println!("{alg}: {:.3} ms (traffic model: {}N)", secs * 1e3, alg.bandwidth_cost());
+    }
+    let two = total.iter().find(|(a, _)| *a == Algorithm::TwoPass).unwrap().1;
+    for (alg, secs) in &total {
+        if *alg != Algorithm::TwoPass {
+            println!(
+                "two-pass speedup vs {alg}: {:.3}x (bandwidth-bound bound: {:.3}x)",
+                secs / two,
+                alg.bandwidth_cost() as f64 / 3.0
+            );
+        }
+    }
+    Ok(())
+}

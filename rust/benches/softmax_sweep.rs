@@ -1,0 +1,81 @@
+//! Bench: the size-sweep figures (paper Figs. 1, 2, 5, 6, 10, 11, 12).
+//!
+//! `cargo bench --bench softmax_sweep [-- --max-n N --reps R --out DIR]`
+//!
+//! criterion is unavailable offline; this is a plain `harness = false`
+//! main over the same in-tree measurement kit the `repro figures` CLI uses
+//! (median-of-reps protocol, §6.2).
+
+use two_pass_softmax::figures::{self, Ctx};
+use two_pass_softmax::softmax::{online, softmax_with, Algorithm, Isa};
+use two_pass_softmax::util::cli::Args;
+use two_pass_softmax::util::stats;
+use two_pass_softmax::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    // `cargo bench` passes `--bench`; drop it.
+    raw.retain(|a| a != "--bench");
+    let args = Args::parse(raw);
+    let mut ctx = Ctx::from_args(&args)?;
+    if args.opt("max-n").is_none() {
+        ctx.max_n = ctx.max_n.min(1 << 23); // bench-speed default: 8M elems
+    }
+    if args.opt("out").is_none() {
+        ctx.out_dir = "results/bench".into();
+    }
+    for id in ["fig1", "fig2", "fig5", "fig6", "fig10", "fig11", "fig12"] {
+        println!("\n===== {id} =====");
+        figures::run(id, &ctx)?;
+    }
+
+    // ABLATION (extension, not in the paper): the Two-Pass (m, n) trick vs
+    // Online Softmax (Milakov & Gimelshein) — identical 3N memory traffic,
+    // different rescale mechanism (VSCALEFPS vs a second e^x evaluation).
+    println!("\n===== ablation: twopass vs online-softmax =====");
+    let mut t = Table::new(
+        "Ablation — Two-Pass (m,n) vs Online Softmax (equal 3N traffic)",
+        &["n", "twopass_ns_per_elem", "online_ns_per_elem", "twopass_advantage"],
+    );
+    let isa = Isa::detect_best();
+    for shift in 0..4u32 {
+        let n = ctx.max_n >> shift;
+        let x: Vec<f32> = (0..n).map(|i| ((i * 73) % 256) as f32 * 0.05 - 6.0).collect();
+        let mut y = vec![0.0f32; n];
+        let two = stats::measure_ns_per_elem(
+            || {
+                softmax_with(Algorithm::TwoPass, isa, &x, &mut y).unwrap();
+                std::hint::black_box(&y);
+            },
+            n,
+            ctx.reps,
+            ctx.min_time,
+        );
+        let onl = stats::measure_ns_per_elem(
+            || {
+                #[cfg(target_arch = "x86_64")]
+                if isa == Isa::Avx512 {
+                    // SAFETY: detect_best guarantees availability.
+                    unsafe { online::simd::softmax_online(&x, &mut y) };
+                } else {
+                    online::softmax_online(&x, &mut y);
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                online::softmax_online(&x, &mut y);
+                std::hint::black_box(&y);
+            },
+            n,
+            ctx.reps,
+            ctx.min_time,
+        );
+        t.rowd(&[
+            n.to_string(),
+            format!("{two:.4}"),
+            format!("{onl:.4}"),
+            format!("{:.3}", onl / two),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    t.save(std::path::Path::new("results/bench"), "ablation_online")?;
+    Ok(())
+}

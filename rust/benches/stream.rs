@@ -1,0 +1,43 @@
+//! Bench: STREAM suite (the Fig. 3/4 yardstick) over the cache hierarchy.
+//!
+//! `cargo bench --bench stream [-- --reps R]`
+
+use two_pass_softmax::platform;
+use two_pass_softmax::stream::{measure, StreamKernel};
+use two_pass_softmax::util::cli::Args;
+use two_pass_softmax::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    raw.retain(|a| a != "--bench");
+    let args = Args::parse(raw);
+    let reps: usize = args.get("reps", 7).map_err(anyhow::Error::msg)?;
+
+    let p = platform::detect();
+    println!(
+        "host: {} (L1 {}K / L2 {}K / LLC {}K)\n",
+        p.model_name,
+        p.l1d() / 1024,
+        p.l2() / 1024,
+        p.llc() / 1024
+    );
+
+    let mut t =
+        Table::new("STREAM bandwidth by working set", &["kernel", "n_f64", "bytes", "gb_per_s"]);
+    // In-L2, in-LLC-ish, and a beyond-private-cache size.
+    let sizes = [p.l2() / 16, p.l2() / 2, (p.llc() / 16).max(p.l2()), 1 << 22];
+    for k in StreamKernel::ALL {
+        for &n in &sizes {
+            let r = measure(k, n, reps);
+            t.rowd(&[
+                k.name().to_string(),
+                n.to_string(),
+                (n * k.bytes_per_elem(8)).to_string(),
+                format!("{:.2}", r.gb_per_s),
+            ]);
+        }
+    }
+    print!("{}", t.to_markdown());
+    t.save(std::path::Path::new("results/bench"), "stream")?;
+    Ok(())
+}

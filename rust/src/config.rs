@@ -1,0 +1,194 @@
+//! Config system: JSON config files (parsed with the in-tree JSON module)
+//! with CLI overrides — the launcher convention used by `repro serve`,
+//! `repro figures`, and the examples.  See `configs/*.json`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::softmax::{Algorithm, Isa};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Which execution backend serves softmax requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// The native Rust kernels (this crate's softmax module).
+    Native,
+    /// AOT-compiled XLA artifacts via the PJRT runtime.
+    Pjrt,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(Backend::Native),
+            "pjrt" | "xla" => Ok(Backend::Pjrt),
+            other => Err(format!("unknown backend {other:?} (want native|pjrt)")),
+        }
+    }
+}
+
+/// Serving configuration (coordinator + runtime).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub backend: Backend,
+    pub algorithm: Algorithm,
+    pub isa: Isa,
+    /// Max rows per executed batch.
+    pub max_batch: usize,
+    /// Max time a request waits for batchmates before a partial flush.
+    pub max_wait_us: u64,
+    /// Executor worker threads.
+    pub workers: usize,
+    /// Bound on the pending queue before backpressure rejects.
+    pub queue_capacity: usize,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            backend: Backend::Native,
+            algorithm: Algorithm::TwoPass,
+            isa: Isa::detect_best(),
+            max_batch: 8,
+            max_wait_us: 200,
+            workers: 2,
+            queue_capacity: 1024,
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Load from a JSON file; missing keys keep their defaults.
+    pub fn from_file(path: &Path) -> Result<ServeConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&root)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_json(&mut self, root: &Json) -> Result<()> {
+        if let Some(v) = root.get("backend").and_then(Json::as_str) {
+            self.backend = v.parse().map_err(|e: String| anyhow!(e))?;
+        }
+        if let Some(v) = root.get("algorithm").and_then(Json::as_str) {
+            self.algorithm = v.parse().map_err(|e: String| anyhow!(e))?;
+        }
+        if let Some(v) = root.get("isa").and_then(Json::as_str) {
+            self.isa = v.parse().map_err(|e: String| anyhow!(e))?;
+        }
+        if let Some(v) = root.get("max_batch").and_then(Json::as_usize) {
+            self.max_batch = v;
+        }
+        if let Some(v) = root.get("max_wait_us").and_then(Json::as_usize) {
+            self.max_wait_us = v as u64;
+        }
+        if let Some(v) = root.get("workers").and_then(Json::as_usize) {
+            self.workers = v;
+        }
+        if let Some(v) = root.get("queue_capacity").and_then(Json::as_usize) {
+            self.queue_capacity = v;
+        }
+        if let Some(v) = root.get("artifacts_dir").and_then(Json::as_str) {
+            self.artifacts_dir = PathBuf::from(v);
+        }
+        self.validate()
+    }
+
+    /// Apply `--backend/--algorithm/--isa/--max-batch/...` CLI overrides.
+    pub fn apply_args(&mut self, a: &Args) -> Result<()> {
+        if let Some(v) = a.opt("backend") {
+            self.backend = v.parse().map_err(|e: String| anyhow!(e))?;
+        }
+        if let Some(v) = a.opt("algorithm") {
+            self.algorithm = v.parse().map_err(|e: String| anyhow!(e))?;
+        }
+        if let Some(v) = a.opt("isa") {
+            self.isa = v.parse().map_err(|e: String| anyhow!(e))?;
+        }
+        self.max_batch = a.get("max-batch", self.max_batch).map_err(|e| anyhow!(e))?;
+        self.max_wait_us = a.get("max-wait-us", self.max_wait_us).map_err(|e| anyhow!(e))?;
+        self.workers = a.get("workers", self.workers).map_err(|e| anyhow!(e))?;
+        self.queue_capacity =
+            a.get("queue-capacity", self.queue_capacity).map_err(|e| anyhow!(e))?;
+        if let Some(v) = a.opt("artifacts") {
+            self.artifacts_dir = PathBuf::from(v);
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            return Err(anyhow!("max_batch must be >= 1"));
+        }
+        if self.workers == 0 {
+            return Err(anyhow!("workers must be >= 1"));
+        }
+        if self.queue_capacity < self.max_batch {
+            return Err(anyhow!(
+                "queue_capacity ({}) must be >= max_batch ({})",
+                self.queue_capacity,
+                self.max_batch
+            ));
+        }
+        if !self.isa.available() {
+            return Err(anyhow!("configured ISA {} unavailable on this host", self.isa));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ServeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_overrides() {
+        let j = Json::parse(
+            r#"{"backend": "native", "algorithm": "threepass_reload",
+                "max_batch": 16, "workers": 3}"#,
+        )
+        .unwrap();
+        let mut c = ServeConfig::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.backend, Backend::Native);
+        assert_eq!(c.algorithm, Algorithm::ThreePassReload);
+        assert_eq!(c.max_batch, 16);
+        assert_eq!(c.workers, 3);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let a = Args::parse(
+            ["--algorithm", "twopass", "--max-batch", "4", "--workers", "1"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let mut c = ServeConfig::default();
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.algorithm, Algorithm::TwoPass);
+        assert_eq!(c.max_batch, 4);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        let mut c = ServeConfig::default();
+        c.max_batch = 0;
+        assert!(c.validate().is_err());
+        let mut c2 = ServeConfig::default();
+        c2.queue_capacity = 1;
+        c2.max_batch = 8;
+        assert!(c2.validate().is_err());
+    }
+}

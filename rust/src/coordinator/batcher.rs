@@ -1,0 +1,212 @@
+//! Dynamic batcher: the queue between `submit()` and the worker pool.
+//!
+//! Policy (vLLM-router-style continuous batching, adapted to stateless
+//! softmax/LM requests):
+//!
+//! * requests are FIFO within a *batch key* (payload kind + length);
+//! * a worker flushes a batch as soon as `max_batch` same-key requests are
+//!   waiting, or when the oldest same-key request has waited `max_wait`;
+//! * `push` applies backpressure: beyond `capacity` pending requests the
+//!   submission is rejected immediately (the client sees `QueueFull`).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::request::Request;
+
+/// Why `push` failed.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError {
+    QueueFull { capacity: usize },
+    ShuttingDown,
+}
+
+struct State {
+    queue: VecDeque<Request>,
+    shutdown: bool,
+}
+
+/// The shared batch queue.
+pub struct Batcher {
+    st: Mutex<State>,
+    cv: Condvar,
+    pub capacity: usize,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(capacity: usize, max_batch: usize, max_wait: Duration) -> Batcher {
+        Batcher {
+            st: Mutex::new(State { queue: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+            capacity,
+            max_batch: max_batch.max(1),
+            max_wait,
+        }
+    }
+
+    /// Enqueue a request (backpressure-checked).
+    pub fn push(&self, req: Request) -> Result<(), PushError> {
+        let mut st = self.st.lock().unwrap();
+        if st.shutdown {
+            return Err(PushError::ShuttingDown);
+        }
+        if st.queue.len() >= self.capacity {
+            return Err(PushError::QueueFull { capacity: self.capacity });
+        }
+        st.queue.push_back(req);
+        drop(st);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Current depth (approximate; for metrics).
+    pub fn depth(&self) -> usize {
+        self.st.lock().unwrap().queue.len()
+    }
+
+    /// Begin shutdown: pushes fail, workers drain the queue then get None.
+    pub fn shutdown(&self) {
+        self.st.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// Worker side: block until a batch is ready, then take it.
+    ///
+    /// Returns `None` only after shutdown with an empty queue.  The batch
+    /// contains 1..=max_batch requests sharing one batch key, in FIFO order.
+    pub fn take_batch(&self) -> Option<Vec<Request>> {
+        let mut st = self.st.lock().unwrap();
+        loop {
+            if st.queue.is_empty() {
+                if st.shutdown {
+                    return None;
+                }
+                st = self.cv.wait(st).unwrap();
+                continue;
+            }
+            // Head-of-line request defines the batch key.
+            let key = st.queue.front().unwrap().payload.batch_key();
+            let age = st.queue.front().unwrap().enqueued.elapsed();
+            let matching = st.queue.iter().filter(|r| r.payload.batch_key() == key).count();
+
+            if matching >= self.max_batch || age >= self.max_wait || st.shutdown {
+                // Flush now: extract up to max_batch same-key requests.
+                let mut batch = Vec::with_capacity(matching.min(self.max_batch));
+                let mut i = 0;
+                while i < st.queue.len() && batch.len() < self.max_batch {
+                    if st.queue[i].payload.batch_key() == key {
+                        batch.push(st.queue.remove(i).unwrap());
+                    } else {
+                        i += 1;
+                    }
+                }
+                drop(st);
+                self.cv.notify_all(); // capacity freed
+                return Some(batch);
+            }
+            // Not full yet: wait for batchmates or the age deadline.
+            let remaining = self.max_wait - age;
+            let (guard, _timeout) = self.cv.wait_timeout(st, remaining).unwrap();
+            st = guard;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{make_request, Payload};
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    fn req(id: u64, n: usize) -> Request {
+        make_request(id, Payload::Logits(vec![0.0; n])).0
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let b = Batcher::new(64, 4, Duration::from_secs(10));
+        for i in 0..4 {
+            b.push(req(i, 100)).unwrap();
+        }
+        let batch = b.take_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn flushes_partial_on_timeout() {
+        let b = Batcher::new(64, 8, Duration::from_millis(5));
+        b.push(req(1, 100)).unwrap();
+        let t0 = Instant::now();
+        let batch = b.take_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn batches_share_one_key() {
+        let b = Batcher::new(64, 8, Duration::from_millis(1));
+        b.push(req(1, 100)).unwrap();
+        b.push(req(2, 200)).unwrap();
+        b.push(req(3, 100)).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        let first = b.take_batch().unwrap();
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        let second = b.take_batch().unwrap();
+        assert_eq!(second[0].id, 2);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let b = Batcher::new(2, 2, Duration::from_secs(1));
+        b.push(req(1, 8)).unwrap();
+        b.push(req(2, 8)).unwrap();
+        assert_eq!(b.push(req(3, 8)), Err(PushError::QueueFull { capacity: 2 }));
+        assert_eq!(b.depth(), 2);
+    }
+
+    #[test]
+    fn shutdown_drains_then_ends() {
+        let b = Arc::new(Batcher::new(64, 4, Duration::from_secs(10)));
+        b.push(req(1, 50)).unwrap();
+        b.shutdown();
+        assert_eq!(b.push(req(2, 50)), Err(PushError::ShuttingDown));
+        let batch = b.take_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(b.take_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_consumers() {
+        let b = Arc::new(Batcher::new(1024, 4, Duration::from_millis(2)));
+        let mut producers = Vec::new();
+        for t in 0..4u64 {
+            let b = b.clone();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    b.push(req(t * 1000 + i, 64)).unwrap();
+                }
+            }));
+        }
+        let consumer = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                let mut seen = 0usize;
+                while seen < 200 {
+                    if let Some(batch) = b.take_batch() {
+                        seen += batch.len();
+                    }
+                }
+                seen
+            })
+        };
+        for p in producers {
+            p.join().unwrap();
+        }
+        assert_eq!(consumer.join().unwrap(), 200);
+    }
+}

@@ -1,0 +1,129 @@
+//! Serving metrics: lock-free counters + a sampled latency reservoir.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats;
+
+/// Coordinator-wide metrics. Cheap to update from any worker.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub rows: AtomicU64,
+    /// Sum of batch sizes (rows) — avg batch size = rows/batches.
+    queue_us: Mutex<Vec<f64>>,
+    exec_us: Mutex<Vec<f64>>,
+    e2e_us: Mutex<Vec<f64>>,
+}
+
+/// Printable snapshot.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub rows: u64,
+    pub avg_batch: f64,
+    pub queue_us: Option<stats::Summary>,
+    pub exec_us: Option<stats::Summary>,
+    pub e2e_us: Option<stats::Summary>,
+}
+
+impl Metrics {
+    pub fn record_batch(&self, batch_rows: usize, exec_us: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(batch_rows as u64, Ordering::Relaxed);
+        self.exec_us.lock().unwrap().push(exec_us);
+    }
+
+    pub fn record_request(&self, queue_us: f64, e2e_us: f64, ok: bool) {
+        if ok {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.queue_us.lock().unwrap().push(queue_us);
+        self.e2e_us.lock().unwrap().push(e2e_us);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let rows = self.rows.load(Ordering::Relaxed);
+        let summ = |m: &Mutex<Vec<f64>>| {
+            let v = m.lock().unwrap();
+            if v.is_empty() {
+                None
+            } else {
+                Some(stats::summarize(&v))
+            }
+        };
+        Snapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches,
+            rows,
+            avg_batch: if batches > 0 { rows as f64 / batches as f64 } else { 0.0 },
+            queue_us: summ(&self.queue_us),
+            exec_us: summ(&self.exec_us),
+            e2e_us: summ(&self.e2e_us),
+        }
+    }
+}
+
+impl std::fmt::Display for Snapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "requests: {} submitted, {} completed, {} failed, {} rejected",
+            self.submitted, self.completed, self.failed, self.rejected
+        )?;
+        writeln!(
+            f,
+            "batches:  {} ({} rows, avg batch {:.2})",
+            self.batches, self.rows, self.avg_batch
+        )?;
+        let line = |name: &str, s: &Option<stats::Summary>| match s {
+            Some(s) => {
+                format!("{name}: p50 {:.1}µs p95 {:.1}µs max {:.1}µs", s.median, s.p95, s.max)
+            }
+            None => format!("{name}: (no samples)"),
+        };
+        writeln!(f, "{}", line("queue ", &self.queue_us))?;
+        writeln!(f, "{}", line("exec  ", &self.exec_us))?;
+        write!(f, "{}", line("e2e   ", &self.e2e_us))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_summaries() {
+        let m = Metrics::default();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.record_batch(2, 100.0);
+        m.record_batch(1, 200.0);
+        m.record_request(10.0, 110.0, true);
+        m.record_request(20.0, 220.0, true);
+        m.record_request(30.0, 330.0, false);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 3);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.rows, 3);
+        assert!((s.avg_batch - 1.5).abs() < 1e-12);
+        assert_eq!(s.exec_us.unwrap().n, 2);
+        let disp = s.to_string();
+        assert!(disp.contains("avg batch 1.50"));
+    }
+}

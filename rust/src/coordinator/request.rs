@@ -1,0 +1,119 @@
+//! Request/response types and the one-shot completion channel.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// What a client wants normalized/served.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Softmax over a logits vector (the paper's workload).
+    Logits(Vec<f32>),
+    /// Next-token distribution for a token sequence (LM path).
+    Tokens(Vec<i32>),
+}
+
+impl Payload {
+    /// Batching key: requests with equal keys may share an executed batch.
+    /// Softmax batches by vector length; LM batches by sequence length
+    /// (tagged so the two never mix).
+    pub fn batch_key(&self) -> u64 {
+        match self {
+            Payload::Logits(v) => v.len() as u64,
+            Payload::Tokens(t) => (1 << 63) | t.len() as u64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::Logits(v) => v.len(),
+            Payload::Tokens(t) => t.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A queued request awaiting batching.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub payload: Payload,
+    pub enqueued: Instant,
+    pub tx: mpsc::SyncSender<Response>,
+}
+
+/// The serving result for one request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Probabilities (softmax output or LM next-token distribution).
+    pub probs: Vec<f32>,
+    /// Time spent waiting in the batch queue.
+    pub queue_us: u64,
+    /// Execution time of the batch this request rode in.
+    pub exec_us: u64,
+    /// How many requests shared that batch.
+    pub batch_size: usize,
+    /// Error message when serving failed (probs empty in that case).
+    pub error: Option<String>,
+}
+
+/// Client-side handle: await the response.
+#[derive(Debug)]
+pub struct Handle {
+    pub id: u64,
+    pub rx: mpsc::Receiver<Response>,
+}
+
+impl Handle {
+    /// Block until the response arrives (or the coordinator dropped it).
+    pub fn wait(self) -> Result<Response, mpsc::RecvError> {
+        self.rx.recv()
+    }
+
+    pub fn wait_timeout(
+        self,
+        d: std::time::Duration,
+    ) -> Result<Response, mpsc::RecvTimeoutError> {
+        self.rx.recv_timeout(d)
+    }
+}
+
+/// Create a request + its client handle.
+pub fn make_request(id: u64, payload: Payload) -> (Request, Handle) {
+    let (tx, rx) = mpsc::sync_channel(1);
+    (Request { id, payload, enqueued: Instant::now(), tx }, Handle { id, rx })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_keys_separate_kinds_and_lengths() {
+        let a = Payload::Logits(vec![0.0; 128]);
+        let b = Payload::Logits(vec![0.0; 256]);
+        let c = Payload::Tokens(vec![0; 128]);
+        assert_ne!(a.batch_key(), b.batch_key());
+        assert_ne!(a.batch_key(), c.batch_key());
+        assert_eq!(a.batch_key(), Payload::Logits(vec![1.0; 128]).batch_key());
+    }
+
+    #[test]
+    fn handle_roundtrip() {
+        let (req, handle) = make_request(7, Payload::Logits(vec![1.0, 2.0]));
+        let resp = Response {
+            id: 7,
+            probs: vec![0.5, 0.5],
+            queue_us: 1,
+            exec_us: 2,
+            batch_size: 1,
+            error: None,
+        };
+        req.tx.send(resp.clone()).unwrap();
+        let got = handle.wait().unwrap();
+        assert_eq!(got.probs, resp.probs);
+    }
+}

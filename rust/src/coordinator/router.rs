@@ -1,0 +1,150 @@
+//! Request routing: which backend executes a formed batch.
+//!
+//! * [`Router::Native`] — the in-process Rust kernels (softmax module);
+//!   used for raw-logits serving and as the fallback.
+//! * [`Router::Pjrt`] — AOT-compiled XLA artifacts through the PJRT
+//!   executor service ([`crate::runtime::service::PjrtService`]): the
+//!   service thread owns the non-`Send` PJRT client, picks the smallest
+//!   batch *bucket* that fits (executables are shape-specialized, so the
+//!   batch is padded up to the bucket and the padding discarded), and the
+//!   router falls back to the native kernels for logits shapes no artifact
+//!   was built for.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Backend, ServeConfig};
+use crate::runtime::service::PjrtService;
+use crate::softmax::{self, Algorithm, Isa};
+
+use super::request::Payload;
+
+/// Executes same-key batches. `Send + Sync`; shared by the worker pool.
+pub enum Router {
+    Native {
+        algorithm: Algorithm,
+        isa: Isa,
+    },
+    Pjrt {
+        svc: PjrtService,
+        /// Softmax artifact variant to route to ("twopass", ...).
+        variant: String,
+        /// Fallback for logits shapes without artifacts.
+        algorithm: Algorithm,
+        isa: Isa,
+    },
+}
+
+impl Router {
+    /// Build from config (starts the PJRT service for the pjrt backend).
+    pub fn from_config(cfg: &ServeConfig) -> Result<Router> {
+        match cfg.backend {
+            Backend::Native => Ok(Router::Native { algorithm: cfg.algorithm, isa: cfg.isa }),
+            Backend::Pjrt => {
+                let svc = PjrtService::start(cfg.artifacts_dir.clone())?;
+                Ok(Router::Pjrt {
+                    svc,
+                    variant: cfg.algorithm.to_string(),
+                    algorithm: cfg.algorithm,
+                    isa: cfg.isa,
+                })
+            }
+        }
+    }
+
+    /// Execute one batch (all payloads share a batch key). Returns one
+    /// probability vector per request, in order.
+    pub fn execute(&self, batch: &[Payload]) -> Result<Vec<Vec<f32>>> {
+        let first = batch.first().ok_or_else(|| anyhow!("empty batch"))?;
+        match first {
+            Payload::Logits(_) => self.execute_logits(batch),
+            Payload::Tokens(_) => self.execute_tokens(batch),
+        }
+    }
+
+    fn execute_logits(&self, batch: &[Payload]) -> Result<Vec<Vec<f32>>> {
+        let rows: Vec<&[f32]> = batch
+            .iter()
+            .map(|p| match p {
+                Payload::Logits(v) => Ok(v.as_slice()),
+                _ => Err(anyhow!("mixed payload kinds in batch")),
+            })
+            .collect::<Result<_>>()?;
+        let n = rows[0].len();
+        if rows.iter().any(|r| r.len() != n) {
+            return Err(anyhow!("mixed lengths in batch"));
+        }
+        match self {
+            Router::Native { algorithm, isa } => native_rows(&rows, *algorithm, *isa),
+            Router::Pjrt { svc, variant, algorithm, isa } => {
+                let owned: Vec<Vec<f32>> = rows.iter().map(|r| r.to_vec()).collect();
+                match svc.softmax(variant, owned) {
+                    Ok(out) => Ok(out),
+                    // No artifact for this shape → serve natively.
+                    Err(e) if e.to_string().contains("no ") => {
+                        native_rows(&rows, *algorithm, *isa)
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+        }
+    }
+
+    fn execute_tokens(&self, batch: &[Payload]) -> Result<Vec<Vec<f32>>> {
+        let rows: Vec<Vec<i32>> = batch
+            .iter()
+            .map(|p| match p {
+                Payload::Tokens(t) => Ok(t.clone()),
+                _ => Err(anyhow!("mixed payload kinds in batch")),
+            })
+            .collect::<Result<_>>()?;
+        match self {
+            Router::Pjrt { svc, .. } => svc.lm(rows),
+            Router::Native { .. } => Err(anyhow!("token requests require the pjrt backend")),
+        }
+    }
+}
+
+fn native_rows(rows: &[&[f32]], alg: Algorithm, isa: Isa) -> Result<Vec<Vec<f32>>> {
+    rows.iter()
+        .map(|r| {
+            let mut y = vec![0.0f32; r.len()];
+            softmax::softmax_with(alg, isa, r, &mut y).map_err(|e| anyhow!("{e}"))?;
+            Ok(y)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_router_normalizes_batches() {
+        let r = Router::Native { algorithm: Algorithm::TwoPass, isa: Isa::detect_best() };
+        let batch = vec![
+            Payload::Logits(vec![1.0, 2.0, 3.0]),
+            Payload::Logits(vec![0.0, 0.0, 0.0]),
+        ];
+        let out = r.execute(&batch).unwrap();
+        assert_eq!(out.len(), 2);
+        for row in &out {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        }
+        assert!((out[1][0] - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn native_router_rejects_tokens() {
+        let r = Router::Native { algorithm: Algorithm::TwoPass, isa: Isa::Scalar };
+        assert!(r.execute(&[Payload::Tokens(vec![1, 2, 3])]).is_err());
+    }
+
+    #[test]
+    fn empty_and_mixed_batches_rejected() {
+        let r = Router::Native { algorithm: Algorithm::TwoPass, isa: Isa::Scalar };
+        assert!(r.execute(&[]).is_err());
+        let mixed =
+            vec![Payload::Logits(vec![1.0, 2.0]), Payload::Logits(vec![1.0, 2.0, 3.0])];
+        assert!(r.execute(&mixed).is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! Theoretical memory-complexity model — regenerates paper Table 2 and
+//! grounds the TPU performance estimate (DESIGN.md §8).
+//!
+//! Each algorithm's reads/writes per element follow from its pass
+//! structure; the model also predicts runtime on a bandwidth-bound machine
+//! (`predict_secs`), which the benches compare to measurement.
+
+use crate::softmax::{Algorithm, Pass};
+
+/// Table-2 row: memory complexity of one algorithm over N elements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CostRow {
+    pub algorithm: Algorithm,
+    /// Memory reads in units of N.
+    pub reads_n: usize,
+    /// Memory writes in units of N.
+    pub writes_n: usize,
+    /// Total bandwidth cost in units of N.
+    pub bandwidth_n: usize,
+}
+
+/// Derive the Table-2 row from the algorithm's pass structure (not
+/// hard-coded: the test asserts the derivation matches the paper).
+pub fn cost(alg: Algorithm) -> CostRow {
+    let mut reads = 0;
+    let mut writes = 0;
+    for p in Pass::of_algorithm(alg) {
+        let (r, w) = p.traffic();
+        reads += r;
+        writes += w;
+    }
+    CostRow { algorithm: alg, reads_n: reads, writes_n: writes, bandwidth_n: reads + writes }
+}
+
+/// All three rows of Table 2.
+pub fn table2() -> Vec<CostRow> {
+    Algorithm::ALL.iter().map(|&a| cost(a)).collect()
+}
+
+/// Predicted runtime (seconds) for `n` f32 elements on a machine sustaining
+/// `gbps` of memory bandwidth, assuming the pass is bandwidth-bound (the
+/// paper's out-of-cache regime).
+pub fn predict_secs(alg: Algorithm, n: usize, gbps: f64) -> f64 {
+    let bytes = cost(alg).bandwidth_n * n * std::mem::size_of::<f32>();
+    bytes as f64 / (gbps * 1e9)
+}
+
+/// Predicted speedup of the two-pass algorithm over `other` in the
+/// bandwidth-bound limit (upper bound per paper §5: "we should treat these
+/// numbers as upper bounds").
+pub fn predicted_speedup_vs(other: Algorithm) -> f64 {
+    cost(other).bandwidth_n as f64 / cost(Algorithm::TwoPass).bandwidth_n as f64
+}
+
+/// TPU-regime estimate (DESIGN.md §8): seconds per softmax of `n` f32 on an
+/// accelerator with `hbm_gbps` of HBM bandwidth, plus the VPU time for
+/// `flops_per_elem` at `vpu_tflops`, taking the max (roofline).
+pub fn predict_accelerator_secs(
+    alg: Algorithm,
+    n: usize,
+    hbm_gbps: f64,
+    flops_per_elem: f64,
+    vpu_tflops: f64,
+) -> f64 {
+    let mem = predict_secs(alg, n, hbm_gbps);
+    let passes = Pass::of_algorithm(alg).len() as f64;
+    let compute = passes * n as f64 * flops_per_elem / (vpu_tflops * 1e12);
+    mem.max(compute)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_table2() {
+        // Paper Table 2: Recompute 3R+1W=4N, Reload 3R+2W=5N, TwoPass 2R+1W=3N.
+        let t = table2();
+        let find = |a: Algorithm| t.iter().find(|r| r.algorithm == a).copied().unwrap();
+        let rec = find(Algorithm::ThreePassRecompute);
+        assert_eq!((rec.reads_n, rec.writes_n, rec.bandwidth_n), (3, 1, 4));
+        let rel = find(Algorithm::ThreePassReload);
+        assert_eq!((rel.reads_n, rel.writes_n, rel.bandwidth_n), (3, 2, 5));
+        let two = find(Algorithm::TwoPass);
+        assert_eq!((two.reads_n, two.writes_n, two.bandwidth_n), (2, 1, 3));
+    }
+
+    #[test]
+    fn paper_headline_upper_bounds() {
+        // "a memory bandwidth advantage of 33% over ... Recomputing and 67%
+        // over ... Reloading".
+        assert!((predicted_speedup_vs(Algorithm::ThreePassRecompute) - 4.0 / 3.0).abs() < 1e-12);
+        assert!((predicted_speedup_vs(Algorithm::ThreePassReload) - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prediction_scales_linearly() {
+        let a = predict_secs(Algorithm::TwoPass, 1_000_000, 10.0);
+        let b = predict_secs(Algorithm::TwoPass, 2_000_000, 10.0);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accelerator_estimate_is_memory_bound_at_high_tflops() {
+        // With abundant compute, the roofline is the HBM term and the
+        // two-pass advantage is the full 4/3 over recompute.
+        let t2 = predict_accelerator_secs(Algorithm::TwoPass, 1 << 20, 1200.0, 20.0, 100.0);
+        let t3 = predict_accelerator_secs(Algorithm::ThreePassRecompute, 1 << 20, 1200.0, 20.0, 100.0);
+        assert!((t3 / t2 - 4.0 / 3.0).abs() < 1e-6);
+    }
+}

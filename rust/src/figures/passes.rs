@@ -1,0 +1,124 @@
+//! Per-pass figures: 3 and 4 (pass bandwidth vs STREAM) and 7 (absolute
+//! per-pass runtime decomposition at the paper's 8,650,752-element size).
+
+use anyhow::Result;
+
+use crate::membw;
+use crate::softmax::{Algorithm, Isa, Pass};
+use crate::stream::{self, StreamKernel};
+use crate::util::table::Table;
+
+use super::Ctx;
+
+fn pass_bandwidth_figure(title: &str, stem: &str, isa: Isa, ctx: &Ctx) -> Result<()> {
+    if !isa.available() {
+        println!("(skipping {stem}: {isa} unavailable on this host)");
+        return Ok(());
+    }
+    let n = ctx.out_of_cache_n();
+    let mut t = Table::new(title, &["series", "owner", "gb_per_s", "ns_per_elem"]);
+
+    // STREAM yardsticks (array size ≥ 4× LLC per STREAM's own rule).
+    let stream_n = n / 2; // f64 elements ≈ same bytes as n f32
+    for k in [StreamKernel::Copy, StreamKernel::Scale] {
+        let gbps = stream::measure_median_gbps(k, stream_n, ctx.reps.min(9));
+        t.row(&[
+            format!("STREAM {}", k.name()),
+            "stream".into(),
+            format!("{gbps:.2}"),
+            String::new(),
+        ]);
+    }
+
+    // Every pass of every algorithm (shared max pass reported once).
+    let mut seen = Vec::new();
+    for alg in Algorithm::ALL {
+        for &pass in Pass::of_algorithm(alg) {
+            if seen.contains(&pass) {
+                continue;
+            }
+            seen.push(pass);
+            let u = crate::softmax::tuning::default_best_unroll(pass, isa);
+            let r = membw::measure_pass(pass, isa, u, n, ctx.reps, None);
+            t.row(&[
+                format!("softmax pass {pass}"),
+                owner_label(pass).into(),
+                format!("{:.2}", r.gb_per_s),
+                format!("{:.4}", r.ns_per_elem),
+            ]);
+        }
+    }
+    print!("{}", t.to_markdown());
+    t.save(&ctx.out_dir, stem)?;
+    Ok(())
+}
+
+fn owner_label(pass: Pass) -> &'static str {
+    match pass {
+        Pass::Max => "alg1+alg2 pass1",
+        Pass::SumExp => "alg1 pass2",
+        Pass::ScaleExp => "alg1 pass3",
+        Pass::StoreExp => "alg2 pass2",
+        Pass::ScaleInplace => "alg2 pass3",
+        Pass::AccumExtExp => "alg3 pass1",
+        Pass::ScaleExtExp => "alg3 pass2",
+    }
+}
+
+/// Fig. 3: per-pass bandwidth vs STREAM, AVX512.
+pub fn fig3(ctx: &Ctx) -> Result<()> {
+    pass_bandwidth_figure(
+        "Figure 3 — Per-pass memory bandwidth vs STREAM, AVX512",
+        "fig3",
+        Isa::Avx512,
+        ctx,
+    )
+}
+
+/// Fig. 4: per-pass bandwidth vs STREAM, AVX2.
+pub fn fig4(ctx: &Ctx) -> Result<()> {
+    pass_bandwidth_figure(
+        "Figure 4 — Per-pass memory bandwidth vs STREAM, AVX2",
+        "fig4",
+        Isa::Avx2,
+        ctx,
+    )
+}
+
+/// Fig. 7: absolute runtime of each pass of each algorithm, AVX2 and
+/// AVX512, at the paper's out-of-cache size.
+pub fn fig7(ctx: &Ctx) -> Result<()> {
+    let n = ctx.out_of_cache_n();
+    let mut t = Table::new(
+        &format!("Figure 7 — Per-pass absolute runtime at N = {n}"),
+        &["algorithm", "pass", "isa", "ms", "share_of_alg"],
+    );
+    for isa in [Isa::Avx2, Isa::Avx512] {
+        if !isa.available() {
+            continue;
+        }
+        for alg in Algorithm::ALL {
+            let passes = Pass::of_algorithm(alg);
+            let times: Vec<f64> = passes
+                .iter()
+                .map(|&p| {
+                    let u = crate::softmax::tuning::default_best_unroll(p, isa);
+                    membw::measure_pass(p, isa, u, n, ctx.reps, None).secs * 1e3
+                })
+                .collect();
+            let total: f64 = times.iter().sum();
+            for (p, ms) in passes.iter().zip(&times) {
+                t.row(&[
+                    alg.to_string(),
+                    p.to_string(),
+                    isa.to_string(),
+                    format!("{ms:.3}"),
+                    format!("{:.1}%", ms / total * 100.0),
+                ]);
+            }
+        }
+    }
+    print!("{}", t.to_markdown());
+    t.save(&ctx.out_dir, "fig7")?;
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! Figures 8 and 9: multi-threaded weak scaling.
+//!
+//! The paper runs 1..12 threads on a 6C/12T Skylake-X with the array fixed
+//! at 4× LLC.  This host may have fewer cores, so each figure reports BOTH:
+//!
+//! * `measured_*` — a real `std::thread` harness (slices of one shared
+//!   array, barrier-synchronized); on an undersized host this measures
+//!   oversubscription beyond the core count, which we report honestly;
+//! * `model_*` — the analytical roofline model parameterized with the
+//!   paper's Skylake-X (DESIGN.md §6.2), which reproduces the paper's
+//!   qualitative claims (constant 25–28% AVX512 advantage; AVX2 advantage
+//!   growing 9% → 19% → 22% as bandwidth saturates).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::platform::SKYLAKE_X;
+use crate::simmodel;
+use crate::softmax::{softmax_with, Algorithm, Isa};
+use crate::util::table::Table;
+
+use super::Ctx;
+
+/// Aggregate throughput (elements/s) of `threads` threads each running
+/// softmax over its slice of a 4×LLC array for ≥ min_time seconds.
+pub fn measure_threads(
+    alg: Algorithm,
+    isa: Isa,
+    n_total: usize,
+    threads: usize,
+    min_time: f64,
+) -> f64 {
+    let per = (n_total / threads.max(1)).max(1024);
+    let barrier = Arc::new(Barrier::new(threads + 1));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut joins = Vec::new();
+    for t in 0..threads {
+        let barrier = barrier.clone();
+        let stop = stop.clone();
+        joins.push(std::thread::spawn(move || {
+            let x: Vec<f32> =
+                (0..per).map(|i| ((i * 29 + t * 7) % 200) as f32 * 0.05 - 5.0).collect();
+            let mut y = vec![0.0f32; per];
+            barrier.wait(); // aligned start
+            let mut iters = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                softmax_with(alg, isa, &x, &mut y).expect("softmax");
+                std::hint::black_box(&y);
+                iters += 1;
+            }
+            iters * per as u64
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    std::thread::sleep(std::time::Duration::from_secs_f64(min_time.max(0.02)));
+    stop.store(true, Ordering::Relaxed);
+    let wall = t0.elapsed().as_secs_f64();
+    let elems: u64 = joins.into_iter().map(|j| j.join().expect("worker")).sum();
+    elems as f64 / wall
+}
+
+fn scaling_figure(title: &str, stem: &str, isa: Isa, ctx: &Ctx) -> Result<()> {
+    let mut t = Table::new(
+        title,
+        &[
+            "threads",
+            "measured_recompute_gelem_s",
+            "measured_reload_gelem_s",
+            "measured_twopass_gelem_s",
+            "measured_advantage",
+            "model_recompute_gelem_s",
+            "model_reload_gelem_s",
+            "model_twopass_gelem_s",
+            "model_advantage",
+        ],
+    );
+    let n = ctx.out_of_cache_n();
+    let model_n = 4 * SKYLAKE_X.llc / 4;
+    let host_threads = ctx.platform.logical_cpus;
+    for threads in [1usize, 2, 3, 4, 6, 8, 12] {
+        let mut row = vec![threads.to_string()];
+        // Measured on this host (honest oversubscription beyond core count).
+        if isa.available() && threads <= host_threads.max(1) * 12 {
+            let mt = ctx.min_time.min(0.25);
+            let rec = measure_threads(Algorithm::ThreePassRecompute, isa, n, threads, mt);
+            let rel = measure_threads(Algorithm::ThreePassReload, isa, n, threads, mt);
+            let two = measure_threads(Algorithm::TwoPass, isa, n, threads, mt);
+            row.push(format!("{:.4}", rec / 1e9));
+            row.push(format!("{:.4}", rel / 1e9));
+            row.push(format!("{:.4}", two / 1e9));
+            row.push(format!("{:.3}", two / rec.max(rel)));
+        } else {
+            row.extend(["-".to_string(), "-".to_string(), "-".to_string(), "-".to_string()]);
+        }
+        // Model at the paper's Skylake-X parameters.
+        let m_rec = model_n as f64
+            / simmodel::algorithm_secs(&SKYLAKE_X, isa, Algorithm::ThreePassRecompute, model_n, threads);
+        let m_rel = model_n as f64
+            / simmodel::algorithm_secs(&SKYLAKE_X, isa, Algorithm::ThreePassReload, model_n, threads);
+        let m_two = model_n as f64
+            / simmodel::algorithm_secs(&SKYLAKE_X, isa, Algorithm::TwoPass, model_n, threads);
+        row.push(format!("{:.4}", m_rec / 1e9));
+        row.push(format!("{:.4}", m_rel / 1e9));
+        row.push(format!("{:.4}", m_two / 1e9));
+        row.push(format!("{:.3}", m_two / m_rec.max(m_rel)));
+        t.row(&row);
+    }
+    print!("{}", t.to_markdown());
+    t.save(&ctx.out_dir, stem)?;
+    Ok(())
+}
+
+/// Fig. 8: weak scaling, AVX512.
+pub fn fig8(ctx: &Ctx) -> Result<()> {
+    scaling_figure("Figure 8 — Weak scaling of the softmax algorithms, AVX512", "fig8", Isa::Avx512, ctx)
+}
+
+/// Fig. 9: weak scaling, AVX2.
+pub fn fig9(ctx: &Ctx) -> Result<()> {
+    scaling_figure("Figure 9 — Weak scaling of the softmax algorithms, AVX2", "fig9", Isa::Avx2, ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threaded_harness_measures() {
+        let r = measure_threads(Algorithm::TwoPass, Isa::detect_best(), 1 << 16, 2, 0.02);
+        assert!(r > 1e5, "throughput {r}");
+    }
+}

@@ -1,0 +1,237 @@
+//! Size-sweep figures: 1, 2 (three-pass variants), 5, 6 (incl. two-pass),
+//! 10 (vs the DNNL-substitute), 11, 12 (modelled Broadwell / Zen 2).
+//!
+//! Y-axis convention: the paper plots throughput; we report ns/element
+//! (lower = better) plus the speedup columns the paper quotes in the text.
+
+use anyhow::Result;
+
+use crate::baseline;
+use crate::platform::{BROADWELL, ZEN2};
+use crate::simmodel;
+use crate::softmax::{softmax_with, Algorithm, Isa};
+use crate::util::stats;
+use crate::util::table::Table;
+
+use super::{cache_level_label, Ctx};
+
+/// Median ns/elem for one (alg, isa, n).
+pub fn time_algorithm(alg: Algorithm, isa: Isa, n: usize, ctx: &Ctx) -> f64 {
+    let x: Vec<f32> = (0..n).map(|i| ((i * 131) % 256) as f32 * 0.05 - 6.0).collect();
+    let mut y = vec![0.0f32; n];
+    stats::measure_ns_per_elem(
+        || {
+            softmax_with(alg, isa, &x, &mut y).expect("softmax");
+            std::hint::black_box(&y);
+        },
+        n,
+        ctx.reps,
+        ctx.min_time,
+    )
+}
+
+fn sweep_algorithms(
+    title: &str,
+    stem: &str,
+    isa: Isa,
+    algs: &[Algorithm],
+    ctx: &Ctx,
+) -> Result<()> {
+    if !isa.available() {
+        println!("(skipping {stem}: {isa} unavailable on this host)");
+        return Ok(());
+    }
+    let mut cols: Vec<String> = vec!["n".into(), "bytes".into(), "cache".into()];
+    for a in algs {
+        cols.push(format!("{a}_ns_per_elem"));
+    }
+    if algs.contains(&Algorithm::TwoPass) {
+        cols.push("speedup_vs_best3".into());
+    }
+    let colrefs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(title, &colrefs);
+
+    for n in ctx.sweep_sizes() {
+        let bytes = n * 4;
+        let mut row = vec![
+            n.to_string(),
+            bytes.to_string(),
+            cache_level_label(&ctx.platform, bytes).to_string(),
+        ];
+        let mut times = Vec::new();
+        for &a in algs {
+            let ns = time_algorithm(a, isa, n, ctx);
+            times.push((a, ns));
+            row.push(format!("{ns:.4}"));
+        }
+        if let Some(&(_, two)) = times.iter().find(|(a, _)| *a == Algorithm::TwoPass) {
+            let best3 = times
+                .iter()
+                .filter(|(a, _)| *a != Algorithm::TwoPass)
+                .map(|&(_, ns)| ns)
+                .fold(f64::MAX, f64::min);
+            row.push(format!("{:.3}", best3 / two));
+        }
+        t.row(&row);
+        if ctx.verbose {
+            println!("  {stem}: n={n} done");
+        }
+    }
+    print!("{}", t.to_markdown());
+    t.save(&ctx.out_dir, stem)?;
+    Ok(())
+}
+
+/// Fig. 1: Three-Pass Recompute vs Reload, AVX512.
+pub fn fig1(ctx: &Ctx) -> Result<()> {
+    sweep_algorithms(
+        "Figure 1 — Three-Pass recompute vs reload, AVX512",
+        "fig1",
+        Isa::Avx512,
+        &[Algorithm::ThreePassRecompute, Algorithm::ThreePassReload],
+        ctx,
+    )
+}
+
+/// Fig. 2: same, AVX2.
+pub fn fig2(ctx: &Ctx) -> Result<()> {
+    sweep_algorithms(
+        "Figure 2 — Three-Pass recompute vs reload, AVX2",
+        "fig2",
+        Isa::Avx2,
+        &[Algorithm::ThreePassRecompute, Algorithm::ThreePassReload],
+        ctx,
+    )
+}
+
+/// Fig. 5: all three algorithms, AVX512.
+pub fn fig5(ctx: &Ctx) -> Result<()> {
+    sweep_algorithms(
+        "Figure 5 — Two-Pass vs Three-Pass, AVX512",
+        "fig5",
+        Isa::Avx512,
+        &[Algorithm::ThreePassRecompute, Algorithm::ThreePassReload, Algorithm::TwoPass],
+        ctx,
+    )
+}
+
+/// Fig. 6: all three algorithms, AVX2.
+pub fn fig6(ctx: &Ctx) -> Result<()> {
+    sweep_algorithms(
+        "Figure 6 — Two-Pass vs Three-Pass, AVX2",
+        "fig6",
+        Isa::Avx2,
+        &[Algorithm::ThreePassRecompute, Algorithm::ThreePassReload, Algorithm::TwoPass],
+        ctx,
+    )
+}
+
+/// Fig. 10: our three algorithms vs the DNNL-substitute baseline (§6.7).
+pub fn fig10(ctx: &Ctx) -> Result<()> {
+    let isa = Isa::detect_best();
+    let mut t = Table::new(
+        "Figure 10 — Ours vs DNNL-substitute (three-pass reload baseline)",
+        &[
+            "n",
+            "cache",
+            "dnnl_sub_ns_per_elem",
+            "ours_reload_ns_per_elem",
+            "ours_twopass_ns_per_elem",
+            "reload_speedup_vs_dnnl",
+            "twopass_speedup_vs_dnnl",
+        ],
+    );
+    for n in ctx.sweep_sizes() {
+        let x: Vec<f32> = (0..n).map(|i| ((i * 17) % 100) as f32 * 0.1 - 5.0).collect();
+        let mut y = vec![0.0f32; n];
+        let dnnl = stats::measure_ns_per_elem(
+            || {
+                baseline::softmax_dnnl_style(&x, &mut y);
+                std::hint::black_box(&y);
+            },
+            n,
+            ctx.reps,
+            ctx.min_time,
+        );
+        let reload = time_algorithm(Algorithm::ThreePassReload, isa, n, ctx);
+        let two = time_algorithm(Algorithm::TwoPass, isa, n, ctx);
+        t.row(&[
+            n.to_string(),
+            cache_level_label(&ctx.platform, n * 4).to_string(),
+            format!("{dnnl:.4}"),
+            format!("{reload:.4}"),
+            format!("{two:.4}"),
+            format!("{:.3}", dnnl / reload),
+            format!("{:.3}", dnnl / two),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    t.save(&ctx.out_dir, "fig10")?;
+    Ok(())
+}
+
+fn modelled_sweep(
+    title: &str,
+    stem: &str,
+    m: &crate::platform::MicroArch,
+    ctx: &Ctx,
+) -> Result<()> {
+    let mut t = Table::new(
+        title,
+        &[
+            "n",
+            "cache",
+            "recompute_ns_per_elem",
+            "reload_ns_per_elem",
+            "twopass_ns_per_elem",
+            "twopass_speedup_vs_best3",
+        ],
+    );
+    // Model sweep spans the modelled machine's caches, not the host's.
+    let sizes = crate::workload::size_sweep(m.l1d, m.l2, m.llc);
+    for n in sizes {
+        let level = if n * 4 <= m.l1d {
+            "L1"
+        } else if n * 4 <= m.l2 {
+            "L2"
+        } else if n * 4 <= m.llc {
+            "L3"
+        } else {
+            "DRAM"
+        };
+        let rec = simmodel::ns_per_elem(m, Isa::Avx2, Algorithm::ThreePassRecompute, n, 1);
+        let rel = simmodel::ns_per_elem(m, Isa::Avx2, Algorithm::ThreePassReload, n, 1);
+        let two = simmodel::ns_per_elem(m, Isa::Avx2, Algorithm::TwoPass, n, 1);
+        t.row(&[
+            n.to_string(),
+            level.to_string(),
+            format!("{rec:.4}"),
+            format!("{rel:.4}"),
+            format!("{two:.4}"),
+            format!("{:.3}", rec.min(rel) / two),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    t.save(&ctx.out_dir, stem)?;
+    Ok(())
+}
+
+/// Fig. 11: Broadwell validation (modelled — see DESIGN.md §6.4).
+pub fn fig11(ctx: &Ctx) -> Result<()> {
+    modelled_sweep(
+        "Figure 11 — Intel Broadwell, AVX2 (analytical model; substitution)",
+        "fig11",
+        &BROADWELL,
+        ctx,
+    )
+}
+
+/// Fig. 12: Zen 2 validation (modelled — see DESIGN.md §6.4).
+pub fn fig12(ctx: &Ctx) -> Result<()> {
+    modelled_sweep(
+        "Figure 12 — AMD Zen 2, AVX2 (analytical model; substitution)",
+        "fig12",
+        &ZEN2,
+        ctx,
+    )
+}

@@ -1,0 +1,67 @@
+//! Tables 1–3: dataset catalogue, theoretical memory costs, platform.
+
+use anyhow::Result;
+
+use crate::costmodel;
+use crate::util::table::Table;
+use crate::workload;
+
+use super::Ctx;
+
+/// Paper Table 1: class counts of public classification datasets.
+pub fn table1(ctx: &Ctx) -> Result<()> {
+    let mut t = Table::new(
+        "Table 1 — Characteristics of several public machine learning datasets",
+        &["dataset", "class_description", "class_count"],
+    );
+    for d in workload::TABLE1 {
+        t.rowd(&[d.name.to_string(), d.class_description.to_string(), d.classes.to_string()]);
+    }
+    print!("{}", t.to_markdown());
+    t.save(&ctx.out_dir, "table1")?;
+    Ok(())
+}
+
+/// Paper Table 2: theoretical memory complexity of the three algorithms.
+pub fn table2(ctx: &Ctx) -> Result<()> {
+    let mut t = Table::new(
+        "Table 2 — Memory complexity and bandwidth cost (units of N)",
+        &["algorithm", "memory_reads", "memory_writes", "bandwidth_cost"],
+    );
+    for row in costmodel::table2() {
+        t.rowd(&[
+            row.algorithm.to_string(),
+            format!("{}N", row.reads_n),
+            format!("{}N", row.writes_n),
+            format!("{}N", row.bandwidth_n),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    t.save(&ctx.out_dir, "table2")?;
+    Ok(())
+}
+
+/// Paper Table 3: characteristics of the evaluation platform (this host).
+pub fn table3(ctx: &Ctx) -> Result<()> {
+    let p = &ctx.platform;
+    let mut t = Table::new(
+        "Table 3 — Characteristics of the processor used for evaluation",
+        &["characteristic", "value"],
+    );
+    t.rowd(&["Model".to_string(), p.model_name.clone()]);
+    t.rowd(&["Logical CPUs".to_string(), p.logical_cpus.to_string()]);
+    t.rowd(&["Physical cores".to_string(), p.physical_cores.to_string()]);
+    for c in &p.caches {
+        t.rowd(&[
+            format!("L{} {} cache", c.level, c.kind),
+            format!("{} KB (shared by {})", c.size_bytes / 1024, c.shared_by_cpus),
+        ]);
+    }
+    t.rowd(&["AVX2".to_string(), p.avx2.to_string()]);
+    t.rowd(&["AVX512F".to_string(), p.avx512f.to_string()]);
+    t.rowd(&["4xLLC f32 elements (paper's out-of-cache size)".to_string(),
+             p.out_of_cache_f32_elems().to_string()]);
+    print!("{}", t.to_markdown());
+    t.save(&ctx.out_dir, "table3")?;
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! # two-pass-softmax
+//!
+//! Reproduction of *"The Two-Pass Softmax Algorithm"* (Dukhan & Ablavatski,
+//! 2020) as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — serving coordinator (router, dynamic batcher,
+//!   worker pool), the paper's softmax kernels ported to Rust
+//!   (scalar / AVX2 / AVX512F, auto-tuned), and the experimental substrates
+//!   needed to regenerate every table and figure of the paper's evaluation
+//!   (STREAM, cache detection, cost and performance models).
+//! - **L2/L1 (python/, build-time only)** — a JAX transformer-LM head whose
+//!   softmax is the Pallas two-pass kernel, AOT-lowered to HLO text and
+//!   executed from Rust via PJRT ([`runtime`]).
+//!
+//! Quick start:
+//!
+//! ```
+//! use two_pass_softmax::softmax::{self, Algorithm};
+//! let x = vec![1.0f32, 2.0, 3.0, 4.0];
+//! let mut y = vec![0.0f32; 4];
+//! softmax::softmax(Algorithm::TwoPass, &x, &mut y).unwrap();
+//! let sum: f32 = y.iter().sum();
+//! assert!((sum - 1.0).abs() < 1e-6);
+//! ```
+
+pub mod baseline;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod figures;
+pub mod membw;
+pub mod platform;
+pub mod runtime;
+pub mod simmodel;
+pub mod softmax;
+pub mod stream;
+pub mod util;
+pub mod workload;
+
+pub use softmax::{softmax, softmax_inplace, Algorithm, Isa};

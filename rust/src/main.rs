@@ -1,0 +1,206 @@
+//! `repro` — launcher CLI for the Two-Pass Softmax reproduction.
+//!
+//! Subcommands:
+//!   platform                       print the Table-3-style host report
+//!   figures <id|all> [opts]        regenerate paper tables/figures
+//!   tune [opts]                    auto-tune unroll meta-parameters (§6.3)
+//!   serve [opts]                   run the serving coordinator under load
+//!   verify [opts]                  PJRT artifacts vs native kernels parity
+//!   help                           this text
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use two_pass_softmax::config::ServeConfig;
+use two_pass_softmax::coordinator::{Coordinator, Payload};
+use two_pass_softmax::figures;
+use two_pass_softmax::platform;
+use two_pass_softmax::runtime::{EntryKind, Runtime};
+use two_pass_softmax::softmax::{self, tuning, Algorithm};
+use two_pass_softmax::util::cli::Args;
+use two_pass_softmax::util::rng::Rng;
+use two_pass_softmax::workload::LogitsDist;
+
+const HELP: &str = "repro — Two-Pass Softmax (Dukhan & Ablavatski 2020) reproduction
+
+USAGE:
+  repro platform
+  repro figures <table1|table2|table3|fig1..fig12|all>
+        [--out DIR] [--paper-protocol] [--reps N] [--min-time S] [--max-n N] [--verbose]
+  repro tune [--n N] [--reps N] [--save FILE]
+  repro serve [--backend native|pjrt] [--algorithm twopass|reload|recompute]
+        [--requests N] [--n LOGITS] [--clients K] [--max-batch B] [--workers W]
+        [--max-wait-us U] [--artifacts DIR] [--config FILE]
+  repro verify [--artifacts DIR]
+";
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.positionals.first().map(|s| s.as_str()) {
+        None | Some("help") => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some("platform") => {
+            println!("{}", platform::detect());
+            Ok(())
+        }
+        Some("figures") => {
+            let id = args
+                .positionals
+                .get(1)
+                .ok_or_else(|| anyhow!("figures: missing id (try `repro figures all`)"))?;
+            let ctx = figures::Ctx::from_args(args)?;
+            let t0 = Instant::now();
+            figures::run(id, &ctx)?;
+            eprintln!(
+                "[figures {id}] done in {:.1}s -> {}",
+                t0.elapsed().as_secs_f64(),
+                ctx.out_dir.display()
+            );
+            Ok(())
+        }
+        Some("tune") => cmd_tune(args),
+        Some("serve") => cmd_serve(args),
+        Some("verify") => cmd_verify(args),
+        Some(other) => bail!("unknown subcommand {other:?}\n{HELP}"),
+    }
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let n = args.get("n", 262_144usize).map_err(|e| anyhow!(e))?;
+    let reps = args.get("reps", 5usize).map_err(|e| anyhow!(e))?;
+    println!("auto-tuning unroll factors at N = {n} (reps = {reps}) ...");
+    let table = tuning::tune_all(n, reps);
+    print!("{}", table.to_text());
+    for ((pass, isa), gain) in tuning::tuning_gains(&table) {
+        if gain > 1.05 {
+            println!("# {pass}/{isa}: tuned variant {gain:.2}x over unroll=1");
+        }
+    }
+    if let Some(path) = args.opt("save") {
+        std::fs::write(path, table.to_text())?;
+        println!("# saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.opt("config") {
+        Some(p) => ServeConfig::from_file(std::path::Path::new(p))?,
+        None => ServeConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    let requests: usize = args.get("requests", 1000).map_err(|e| anyhow!(e))?;
+    let n: usize = args.get("n", 32_768).map_err(|e| anyhow!(e))?;
+    let clients: usize = args.get("clients", 4).map_err(|e| anyhow!(e))?;
+
+    println!(
+        "serving: backend={:?} algorithm={} isa={} max_batch={} workers={} n={n}",
+        cfg.backend, cfg.algorithm, cfg.isa, cfg.max_batch, cfg.workers
+    );
+    let coord = std::sync::Arc::new(Coordinator::start(cfg)?);
+    let t0 = Instant::now();
+    let per_client = requests / clients.max(1);
+    let mut joins = Vec::new();
+    for c in 0..clients.max(1) {
+        let coord = coord.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(42 + c as u64);
+            let dist = LogitsDist::Normal { mean: 0.0, std: 4.0 };
+            let mut ok = 0usize;
+            for _ in 0..per_client {
+                let logits = dist.generate(n, &mut rng);
+                match coord.submit(Payload::Logits(logits)) {
+                    Ok(h) => {
+                        if h.wait().map(|r| r.error.is_none()).unwrap_or(false) {
+                            ok += 1;
+                        }
+                    }
+                    Err(_) => std::thread::sleep(std::time::Duration::from_micros(50)),
+                }
+            }
+            ok
+        }));
+    }
+    let ok: usize = joins.into_iter().map(|j| j.join().expect("client")).sum();
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\n--- results ---");
+    println!("{} ok / {} requested in {wall:.2}s", ok, per_client * clients.max(1));
+    println!(
+        "throughput: {:.1} req/s ({:.1} Melem/s)",
+        ok as f64 / wall,
+        ok as f64 * n as f64 / wall / 1e6
+    );
+    println!("{}", coord.metrics());
+    match std::sync::Arc::try_unwrap(coord) {
+        Ok(c) => c.shutdown(),
+        Err(_) => bail!("coordinator still referenced"),
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.opt("artifacts").unwrap_or("artifacts"));
+    let rt = Runtime::open(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut rng = Rng::new(7);
+    let mut checked = 0;
+    let entries: Vec<_> = rt.manifest.softmax_entries().cloned().collect();
+    for entry in entries {
+        let (variant, b, n) = match &entry.kind {
+            EntryKind::Softmax { variant, batch, n } => (variant.clone(), *batch, *n),
+            _ => continue,
+        };
+        let alg: Algorithm = variant.parse().map_err(|e: String| anyhow!(e))?;
+        let x: Vec<f32> = (0..b * n).map(|_| rng.normal_f32(0.0, 5.0)).collect();
+        let got = rt.run_softmax(&entry.name, &x)?;
+        let mut worst = 0.0f32;
+        for row in 0..b {
+            let xr = &x[row * n..(row + 1) * n];
+            let mut want = vec![0.0f32; n];
+            softmax::softmax(alg, xr, &mut want).map_err(|e| anyhow!("{e}"))?;
+            for i in 0..n {
+                worst = worst.max((got[row * n + i] - want[i]).abs());
+            }
+        }
+        let status = if worst < 1e-5 { "OK " } else { "FAIL" };
+        println!("{status} {}  max|Δ| = {worst:.3e}", entry.name);
+        if worst >= 1e-5 {
+            bail!("artifact {} diverges from native kernels", entry.name);
+        }
+        checked += 1;
+    }
+    // LM path: run a batch and check each row is a distribution.
+    if let Some((name, bucket)) = rt.lm_bucket(1) {
+        let loaded = rt.load(&name)?;
+        let (seq, vocab) = match &loaded.entry.kind {
+            EntryKind::Lm { seq, vocab, .. } => (*seq, *vocab),
+            _ => unreachable!(),
+        };
+        let tokens: Vec<i32> = (0..bucket * seq).map(|i| (i % 101) as i32).collect();
+        let probs = rt.run_lm(&name, &tokens)?;
+        for row in 0..bucket {
+            let s: f32 = probs[row * vocab..(row + 1) * vocab].iter().sum();
+            if (s - 1.0).abs() > 1e-4 {
+                bail!("LM row {row} sums to {s}");
+            }
+        }
+        println!("OK  {name}  ({bucket}x{vocab} rows normalized)");
+        checked += 1;
+    }
+    println!("verified {checked} artifacts — PJRT and native kernels agree");
+    Ok(())
+}

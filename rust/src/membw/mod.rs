@@ -1,0 +1,125 @@
+//! Per-pass memory-bandwidth instrumentation (Figures 3, 4, 7).
+//!
+//! Times each memory pass of each algorithm in isolation over a
+//! caller-supplied working set, accounts the bytes each pass moves (the
+//! Table-2 model), and reports achieved GB/s alongside STREAM for the
+//! direct comparison the paper makes.
+//!
+//! Cache-state protocol (paper §6.2): "output vector is evicted from the
+//! cache before each iteration, but input tensor stays in cache as long as
+//! it fits" — `evict()` implements the eviction by streaming a
+//! cache-sized dummy buffer between iterations.
+
+use std::time::Instant;
+
+use crate::softmax::{run_pass_with, Isa, Pass, PassOps};
+use crate::util::stats;
+
+/// Measured bandwidth of one pass.
+#[derive(Debug, Clone, Copy)]
+pub struct PassBandwidth {
+    pub pass: Pass,
+    pub isa: Isa,
+    pub n: usize,
+    pub secs: f64,
+    pub ns_per_elem: f64,
+    pub gb_per_s: f64,
+    pub bytes_per_iter: usize,
+}
+
+/// Cache-eviction scratch: writing this clobbers the LLC.
+pub struct Evictor {
+    buf: Vec<u8>,
+}
+
+impl Evictor {
+    /// `llc_bytes` should come from `platform::detect().llc()`.
+    pub fn new(llc_bytes: usize) -> Evictor {
+        Evictor { buf: vec![0u8; (2 * llc_bytes).max(1 << 20)] }
+    }
+
+    /// Stream-touch the scratch so previously-cached lines are evicted.
+    pub fn evict(&mut self) {
+        for chunk in self.buf.chunks_mut(64) {
+            chunk[0] = chunk[0].wrapping_add(1);
+        }
+        std::hint::black_box(&self.buf);
+    }
+}
+
+/// Time `pass` on `(x, y)` of length `n`: `reps` median, with optional
+/// output eviction between iterations (paper cache-state protocol).
+pub fn measure_pass(
+    pass: Pass,
+    isa: Isa,
+    unroll: usize,
+    n: usize,
+    reps: usize,
+    evictor: Option<&mut Evictor>,
+) -> PassBandwidth {
+    let x: Vec<f32> = (0..n).map(|i| ((i * 131) % 256) as f32 * 0.05 - 6.0).collect();
+    let mut y = vec![0.0f32; n];
+    let ops = PassOps::for_input(&x); // precomputed: not part of the timing
+    let _ = run_pass_with(pass, isa, unroll, &x, &mut y, ops); // warm-up
+
+    let mut ev = evictor;
+    let samples: Vec<f64> = (0..reps.max(3))
+        .map(|_| {
+            if let Some(e) = ev.as_deref_mut() {
+                e.evict();
+            }
+            let t0 = Instant::now();
+            let r = run_pass_with(pass, isa, unroll, &x, &mut y, ops);
+            let dt = t0.elapsed().as_secs_f64();
+            std::hint::black_box(r.ok());
+            std::hint::black_box(&y);
+            dt
+        })
+        .collect();
+    let secs = stats::summarize(&samples).median;
+    let (r, w) = pass.traffic();
+    let bytes = (r + w) * n * std::mem::size_of::<f32>();
+    PassBandwidth {
+        pass,
+        isa,
+        n,
+        secs,
+        ns_per_elem: secs * 1e9 / n as f64,
+        gb_per_s: bytes as f64 / secs / 1e9,
+        bytes_per_iter: bytes,
+    }
+}
+
+/// Measure every pass of every algorithm (the Figure-3/4 row set) at one
+/// size, on one ISA.
+pub fn measure_all_passes(isa: Isa, unroll: usize, n: usize, reps: usize) -> Vec<PassBandwidth> {
+    Pass::ALL.iter().map(|&p| measure_pass(p, isa, unroll, n, reps, None)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pass_bandwidth_positive_and_accounted() {
+        let r = measure_pass(Pass::Max, Isa::Scalar, 4, 1 << 14, 3, None);
+        assert!(r.gb_per_s > 0.05, "{}", r.gb_per_s);
+        assert_eq!(r.bytes_per_iter, (1 << 14) * 4); // read-only pass
+        let r2 = measure_pass(Pass::ScaleExp, Isa::Scalar, 2, 1 << 14, 3, None);
+        assert_eq!(r2.bytes_per_iter, (1 << 14) * 8); // read + write
+    }
+
+    #[test]
+    fn evictor_runs() {
+        let mut e = Evictor::new(1 << 20);
+        e.evict();
+        e.evict();
+    }
+
+    #[test]
+    fn all_passes_measured() {
+        let rows = measure_all_passes(Isa::Scalar, 2, 8192, 3);
+        assert_eq!(rows.len(), Pass::ALL.len());
+        assert!(rows.iter().all(|r| r.secs > 0.0));
+    }
+}

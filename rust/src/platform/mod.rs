@@ -1,0 +1,333 @@
+//! Host platform introspection — reproduces the paper's Table 3
+//! (processor characteristics) for whatever machine the harness runs on,
+//! and provides the cache boundaries every figure annotates.
+//!
+//! Cache topology comes from `/sys/devices/system/cpu/cpu0/cache/index*`
+//! (authoritative on Linux), with a CPUID-free fallback to typical values
+//! when sysfs is unavailable (e.g. in minimal containers).
+
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+/// One cache level as seen by cpu0.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheLevel {
+    pub level: u8,
+    /// "Data", "Instruction", or "Unified".
+    pub kind: String,
+    pub size_bytes: usize,
+    pub shared_by_cpus: usize,
+}
+
+/// Table-3-style description of the host.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub model_name: String,
+    pub logical_cpus: usize,
+    pub physical_cores: usize,
+    /// Data/unified caches in increasing level order (L1d, L2, L3...).
+    pub caches: Vec<CacheLevel>,
+    pub avx2: bool,
+    pub avx512f: bool,
+}
+
+impl Platform {
+    /// L1 data cache size per core (bytes).
+    pub fn l1d(&self) -> usize {
+        self.caches.iter().find(|c| c.level == 1).map(|c| c.size_bytes).unwrap_or(32 * 1024)
+    }
+
+    /// L2 size per core (bytes).
+    pub fn l2(&self) -> usize {
+        self.caches.iter().find(|c| c.level == 2).map(|c| c.size_bytes).unwrap_or(1024 * 1024)
+    }
+
+    /// Last-level cache size (bytes).
+    pub fn llc(&self) -> usize {
+        self.caches.iter().map(|c| c.size_bytes).max().unwrap_or(8 * 1024 * 1024)
+    }
+
+    /// The paper's out-of-cache benchmark size: 4× LLC in f32 elements,
+    /// rounded the way the paper reports it (8,650,752 for an 8.25 MB LLC).
+    pub fn out_of_cache_f32_elems(&self) -> usize {
+        4 * self.llc() / std::mem::size_of::<f32>()
+    }
+}
+
+impl fmt::Display for Platform {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "| Characteristic | Value |")?;
+        writeln!(f, "|---|---|")?;
+        writeln!(f, "| Model | {} |", self.model_name)?;
+        writeln!(f, "| Logical CPUs | {} |", self.logical_cpus)?;
+        writeln!(f, "| Physical cores | {} |", self.physical_cores)?;
+        for c in &self.caches {
+            writeln!(
+                f,
+                "| L{} {} cache | {} KB (shared by {} cpus) |",
+                c.level,
+                c.kind,
+                c.size_bytes / 1024,
+                c.shared_by_cpus
+            )?;
+        }
+        writeln!(f, "| AVX2 | {} |", self.avx2)?;
+        write!(f, "| AVX512F | {} |", self.avx512f)
+    }
+}
+
+/// Detect the current host.
+pub fn detect() -> Platform {
+    let cpuinfo = fs::read_to_string("/proc/cpuinfo").unwrap_or_default();
+    let model_name = cpuinfo
+        .lines()
+        .find(|l| l.starts_with("model name"))
+        .and_then(|l| l.split(':').nth(1))
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string());
+    let logical_cpus = cpuinfo.matches("\nprocessor").count()
+        + usize::from(cpuinfo.starts_with("processor"));
+    let physical_cores = physical_core_count(&cpuinfo).unwrap_or(logical_cpus.max(1));
+
+    let mut caches = read_sysfs_caches(Path::new("/sys/devices/system/cpu/cpu0/cache"));
+    if caches.is_empty() {
+        // Fallback: paper's Table 3 shape with generic sizes.
+        caches = vec![
+            CacheLevel { level: 1, kind: "Data".into(), size_bytes: 32 << 10, shared_by_cpus: 1 },
+            CacheLevel { level: 2, kind: "Unified".into(), size_bytes: 1 << 20, shared_by_cpus: 1 },
+            CacheLevel {
+                level: 3,
+                kind: "Unified".into(),
+                size_bytes: 8 << 20,
+                shared_by_cpus: logical_cpus.max(1),
+            },
+        ];
+    }
+
+    Platform {
+        model_name,
+        logical_cpus: logical_cpus.max(1),
+        physical_cores,
+        caches,
+        avx2: cfg!(target_arch = "x86_64") && crate::softmax::Isa::Avx2.available(),
+        avx512f: cfg!(target_arch = "x86_64") && crate::softmax::Isa::Avx512.available(),
+    }
+}
+
+fn physical_core_count(cpuinfo: &str) -> Option<usize> {
+    // core id + physical id pairs, deduplicated.
+    let mut cores = std::collections::HashSet::new();
+    let mut phys = None;
+    let mut core = None;
+    for line in cpuinfo.lines().chain(std::iter::once("")) {
+        if line.is_empty() {
+            if let (Some(p), Some(c)) = (phys, core) {
+                cores.insert((p, c));
+            }
+            phys = None;
+            core = None;
+            continue;
+        }
+        let mut kv = line.splitn(2, ':');
+        let k = kv.next().unwrap_or("").trim();
+        let v = kv.next().unwrap_or("").trim();
+        match k {
+            "physical id" => phys = v.parse::<usize>().ok(),
+            "core id" => core = v.parse::<usize>().ok(),
+            _ => {}
+        }
+    }
+    if cores.is_empty() {
+        None
+    } else {
+        Some(cores.len())
+    }
+}
+
+fn read_sysfs_caches(dir: &Path) -> Vec<CacheLevel> {
+    let mut out = Vec::new();
+    let Ok(entries) = fs::read_dir(dir) else {
+        return out;
+    };
+    for e in entries.flatten() {
+        let p = e.path();
+        if !p.file_name().map(|n| n.to_string_lossy().starts_with("index")).unwrap_or(false) {
+            continue;
+        }
+        let read = |f: &str| fs::read_to_string(p.join(f)).ok().map(|s| s.trim().to_string());
+        let Some(level) = read("level").and_then(|s| s.parse::<u8>().ok()) else { continue };
+        let kind = read("type").unwrap_or_default();
+        if kind == "Instruction" {
+            continue; // Table 3 lists data/unified caches
+        }
+        let Some(size_s) = read("size") else { continue };
+        let size_bytes = parse_size(&size_s).unwrap_or(0);
+        let shared = read("shared_cpu_list").map(|s| count_cpu_list(&s)).unwrap_or(1);
+        out.push(CacheLevel { level, kind, size_bytes, shared_by_cpus: shared });
+    }
+    out.sort_by_key(|c| c.level);
+    out.dedup_by_key(|c| c.level);
+    out
+}
+
+/// Parse "32K" / "8192K" / "1M" style sysfs size strings.
+pub fn parse_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    if let Some(v) = s.strip_suffix(['K', 'k']) {
+        return v.parse::<usize>().ok().map(|n| n << 10);
+    }
+    if let Some(v) = s.strip_suffix(['M', 'm']) {
+        return v.parse::<usize>().ok().map(|n| n << 20);
+    }
+    if let Some(v) = s.strip_suffix(['G', 'g']) {
+        return v.parse::<usize>().ok().map(|n| n << 30);
+    }
+    s.parse::<usize>().ok()
+}
+
+/// Count CPUs in a sysfs cpu list like "0-3,8-11".
+pub fn count_cpu_list(s: &str) -> usize {
+    s.trim()
+        .split(',')
+        .filter(|part| !part.is_empty())
+        .map(|part| match part.split_once('-') {
+            Some((a, b)) => {
+                let a: usize = a.trim().parse().unwrap_or(0);
+                let b: usize = b.trim().parse().unwrap_or(a);
+                b.saturating_sub(a) + 1
+            }
+            None => 1,
+        })
+        .sum()
+}
+
+/// Reference µarch parameter sets used by the analytical model (simmodel)
+/// to regenerate the paper's Broadwell/Zen 2 validation figures and the
+/// Skylake-X scaling figures.  Values are from the paper's Table 3 plus
+/// public spec sheets.
+#[derive(Debug, Clone)]
+pub struct MicroArch {
+    pub name: &'static str,
+    pub l1d: usize,
+    pub l2: usize,
+    pub llc: usize,
+    pub cores: usize,
+    pub smt: usize,
+    pub freq_ghz: f64,
+    /// Sustainable DRAM bandwidth, single thread (GB/s).
+    pub dram_gbps_1t: f64,
+    /// Saturated DRAM bandwidth, all cores (GB/s).
+    pub dram_gbps_max: f64,
+    /// L3/LLC bandwidth per core (GB/s).
+    pub llc_gbps: f64,
+    /// L2 bandwidth per core (GB/s).
+    pub l2_gbps: f64,
+    /// L1 bandwidth per core (GB/s).
+    pub l1_gbps: f64,
+    /// FMA vector width (f32 lanes) for the ISA modelled.
+    pub fma_lanes: usize,
+    /// FMA issue throughput per cycle.
+    pub fma_per_cycle: f64,
+}
+
+/// Intel Xeon W-2135 (Skylake-X), the paper's primary platform (Table 3).
+pub const SKYLAKE_X: MicroArch = MicroArch {
+    name: "skylake-x",
+    l1d: 32 << 10,
+    l2: 1 << 20,
+    // 8.25 MB; note 4×LLC/4B = 8,650,752 f32 elements — the paper's
+    // out-of-cache array length.
+    llc: 8650752,
+    cores: 6,
+    smt: 2,
+    freq_ghz: 3.7,
+    dram_gbps_1t: 14.0,
+    dram_gbps_max: 60.0,
+    llc_gbps: 40.0,
+    l2_gbps: 150.0,
+    l1_gbps: 400.0,
+    fma_lanes: 16,
+    fma_per_cycle: 2.0,
+};
+
+/// Intel Xeon E5-2696 v4 (Broadwell) — paper §6.8, AVX2 only.
+pub const BROADWELL: MicroArch = MicroArch {
+    name: "broadwell",
+    l1d: 32 << 10,
+    l2: 256 << 10,
+    llc: 55 << 20,
+    cores: 22,
+    smt: 2,
+    freq_ghz: 2.2,
+    dram_gbps_1t: 11.0,
+    dram_gbps_max: 70.0,
+    llc_gbps: 30.0,
+    l2_gbps: 80.0,
+    l1_gbps: 250.0,
+    fma_lanes: 8,
+    fma_per_cycle: 2.0,
+};
+
+/// AMD Ryzen 9 3900X (Zen 2) — paper §6.8, AVX2 only.
+pub const ZEN2: MicroArch = MicroArch {
+    name: "zen2",
+    l1d: 32 << 10,
+    l2: 512 << 10,
+    llc: 64 << 20,
+    cores: 12,
+    smt: 2,
+    freq_ghz: 3.8,
+    dram_gbps_1t: 20.0,
+    dram_gbps_max: 48.0,
+    llc_gbps: 45.0,
+    l2_gbps: 120.0,
+    l1_gbps: 350.0,
+    fma_lanes: 8,
+    fma_per_cycle: 2.0,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_is_sane() {
+        let p = detect();
+        assert!(p.logical_cpus >= 1);
+        assert!(p.l1d() >= 4 * 1024);
+        assert!(p.llc() >= p.l1d());
+        assert!(p.out_of_cache_f32_elems() > 0);
+    }
+
+    #[test]
+    fn parse_size_forms() {
+        assert_eq!(parse_size("32K"), Some(32 << 10));
+        assert_eq!(parse_size("8M"), Some(8 << 20));
+        assert_eq!(parse_size("1024"), Some(1024));
+        assert_eq!(parse_size("xx"), None);
+    }
+
+    #[test]
+    fn cpu_list_counting() {
+        assert_eq!(count_cpu_list("0"), 1);
+        assert_eq!(count_cpu_list("0-3"), 4);
+        assert_eq!(count_cpu_list("0-3,8-11"), 8);
+        assert_eq!(count_cpu_list(""), 0);
+    }
+
+    #[test]
+    fn table3_renders() {
+        let s = detect().to_string();
+        assert!(s.contains("Characteristic"));
+        assert!(s.contains("AVX2"));
+    }
+
+    #[test]
+    fn reference_uarches_consistent() {
+        for m in [&SKYLAKE_X, &BROADWELL, &ZEN2] {
+            assert!(m.l1d < m.l2 && m.l2 < m.llc, "{}", m.name);
+            assert!(m.dram_gbps_1t <= m.dram_gbps_max);
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Artifact manifest: the typed view of `artifacts/manifest.json` emitted
+//! by `python -m compile.aot` (parsed with the in-tree JSON module).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor shape + dtype as recorded by aot.py.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One weight leaf inside the LM blob.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamLeaf {
+    pub index: usize,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// What an artifact is, with its kind-specific metadata.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EntryKind {
+    Softmax { variant: String, batch: usize, n: usize },
+    Lm { batch: usize, seq: usize, vocab: usize, params_bin: String, params: Vec<ParamLeaf> },
+}
+
+/// One artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Entry {
+    pub name: String,
+    pub file: String,
+    pub kind: EntryKind,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub version: usize,
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let version = root.get("version").and_then(Json::as_usize).unwrap_or(0);
+        let mut entries = Vec::new();
+        for e in root.get("entries").and_then(Json::as_arr).unwrap_or(&[]) {
+            entries.push(parse_entry(e)?);
+        }
+        Ok(Manifest { version, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// All softmax entries.
+    pub fn softmax_entries(&self) -> impl Iterator<Item = &Entry> {
+        self.entries.iter().filter(|e| matches!(e.kind, EntryKind::Softmax { .. }))
+    }
+
+    /// The softmax entry exactly matching (variant, batch, n).
+    pub fn softmax_entry(&self, variant: &str, batch: usize, n: usize) -> Option<&Entry> {
+        self.softmax_entries().find(|e| match &e.kind {
+            EntryKind::Softmax { variant: v, batch: b, n: nn } => {
+                v == variant && *b == batch && *nn == n
+            }
+            _ => false,
+        })
+    }
+
+    /// The smallest LM batch bucket with capacity ≥ `batch`.
+    pub fn lm_bucket(&self, batch: usize) -> Option<&Entry> {
+        self.entries
+            .iter()
+            .filter_map(|e| match &e.kind {
+                EntryKind::Lm { batch: b, .. } if *b >= batch => Some((*b, e)),
+                _ => None,
+            })
+            .min_by_key(|(b, _)| *b)
+            .map(|(_, e)| e)
+    }
+}
+
+fn parse_entry(e: &Json) -> Result<Entry> {
+    let name = field_str(e, "name")?;
+    let file = field_str(e, "file")?;
+    let kind_s = field_str(e, "kind")?;
+    let kind = match kind_s.as_str() {
+        "softmax" => EntryKind::Softmax {
+            variant: field_str(e, "variant")?,
+            batch: field_usize(e, "batch")?,
+            n: field_usize(e, "n")?,
+        },
+        "lm" => {
+            let mut params = Vec::new();
+            for leaf in e.get("params").and_then(Json::as_arr).unwrap_or(&[]) {
+                params.push(ParamLeaf {
+                    index: field_usize(leaf, "index")?,
+                    shape: shape_of(leaf.get("shape"))?,
+                    offset: field_usize(leaf, "offset")?,
+                    nbytes: field_usize(leaf, "nbytes")?,
+                });
+            }
+            params.sort_by_key(|p| p.index);
+            EntryKind::Lm {
+                batch: field_usize(e, "batch")?,
+                seq: field_usize(e, "seq")?,
+                vocab: field_usize(e, "vocab")?,
+                params_bin: field_str(e, "params_bin")?,
+                params,
+            }
+        }
+        other => return Err(anyhow!("unknown artifact kind {other:?}")),
+    };
+    Ok(Entry {
+        name,
+        file,
+        kind,
+        inputs: tensor_specs(e.get("inputs")),
+        outputs: tensor_specs(e.get("outputs")),
+    })
+}
+
+fn field_str(e: &Json, k: &str) -> Result<String> {
+    e.get(k).and_then(Json::as_str).map(str::to_string).ok_or_else(|| anyhow!("missing {k:?}"))
+}
+
+fn field_usize(e: &Json, k: &str) -> Result<usize> {
+    e.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("missing {k:?}"))
+}
+
+fn shape_of(v: Option<&Json>) -> Result<Vec<usize>> {
+    Ok(v.and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+        .unwrap_or_default())
+}
+
+fn tensor_specs(v: Option<&Json>) -> Vec<TensorSpec> {
+    v.and_then(Json::as_arr)
+        .map(|a| {
+            a.iter()
+                .filter(|t| t.get("shape").is_some())
+                .map(|t| TensorSpec {
+                    shape: shape_of(t.get("shape")).unwrap_or_default(),
+                    dtype: t.get("dtype").and_then(Json::as_str).unwrap_or("f32").to_string(),
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "softmax_twopass_1x1024", "file": "a.hlo.txt", "kind": "softmax",
+         "variant": "twopass", "batch": 1, "n": 1024,
+         "inputs": [{"shape": [1, 1024], "dtype": "f32"}],
+         "outputs": [{"shape": [1, 1024], "dtype": "f32"}]},
+        {"name": "lm_probs_b2", "file": "b.hlo.txt", "kind": "lm",
+         "batch": 2, "seq": 128, "vocab": 8192, "params_bin": "w.bin",
+         "inputs": [{"shape": [2, 128], "dtype": "i32"}, {"params_bin": "w.bin"}],
+         "outputs": [{"shape": [2, 8192], "dtype": "f32"}],
+         "params": [{"index": 0, "shape": [8192, 256], "dtype": "f32",
+                     "offset": 0, "nbytes": 8388608}]},
+        {"name": "lm_probs_b8", "file": "c.hlo.txt", "kind": "lm",
+         "batch": 8, "seq": 128, "vocab": 8192, "params_bin": "w.bin",
+         "params": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.entries.len(), 3);
+        let sm = m.softmax_entry("twopass", 1, 1024).unwrap();
+        assert_eq!(sm.file, "a.hlo.txt");
+        assert_eq!(sm.inputs[0].shape, vec![1, 1024]);
+    }
+
+    #[test]
+    fn lm_bucket_selection() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let b = m.lm_bucket(1).unwrap();
+        assert_eq!(b.name, "lm_probs_b2");
+        let b = m.lm_bucket(3).unwrap();
+        assert_eq!(b.name, "lm_probs_b8");
+        assert!(m.lm_bucket(9).is_none());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse(r#"{"entries": [{"name": "x"}]}"#).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(m.softmax_entries().count() >= 3);
+            assert!(m.lm_bucket(1).is_some());
+        }
+    }
+}

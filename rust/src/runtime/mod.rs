@@ -1,0 +1,186 @@
+//! PJRT runtime: load AOT artifacts (HLO text + weights) and execute them.
+//!
+//! This is the request-path bridge to the Python-free world: `make
+//! artifacts` lowered the JAX/Pallas graphs once to `artifacts/*.hlo.txt`;
+//! here we parse the manifest, compile each module on the PJRT CPU client
+//! (`xla` crate → xla_extension), cache the executables, and expose typed
+//! `run_*` entry points for the coordinator.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`) because
+//! jax ≥ 0.5 emits serialized protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod manifest;
+pub mod service;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{Entry, EntryKind, Manifest, TensorSpec};
+
+/// A compiled artifact plus its manifest entry.
+pub struct Loaded {
+    pub entry: Entry,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+/// The artifact registry: manifest + lazily compiled executables.
+pub struct Runtime {
+    dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Loaded>>>,
+    /// LM weights blob, loaded once (leaf order == argument order).
+    lm_params: Mutex<Option<std::sync::Arc<Vec<xla::Literal>>>>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (must contain manifest.json) on the PJRT CPU client.
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        Ok(Runtime {
+            dir: dir.to_path_buf(),
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+            lm_params: Mutex::new(None),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Loaded>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(name) {
+            return Ok(hit.clone());
+        }
+        let entry = self
+            .manifest
+            .entry(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(wrap_xla)
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap_xla)?;
+        let loaded = std::sync::Arc::new(Loaded { entry, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Number of artifacts compiled so far (cache occupancy).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Run a `softmax` artifact on a row-major (batch, n) input.
+    pub fn run_softmax(&self, name: &str, x: &[f32]) -> Result<Vec<f32>> {
+        let loaded = self.load(name)?;
+        let (b, n) = match &loaded.entry.kind {
+            EntryKind::Softmax { batch, n, .. } => (*batch, *n),
+            k => bail!("artifact {name:?} is {k:?}, not softmax"),
+        };
+        if x.len() != b * n {
+            bail!("input length {} != {b}x{n}", x.len());
+        }
+        let lit = xla::Literal::vec1(x).reshape(&[b as i64, n as i64]).map_err(wrap_xla)?;
+        let result = loaded.exe.execute::<xla::Literal>(&[lit]).map_err(wrap_xla)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap_xla)?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1().map_err(wrap_xla)?;
+        out.to_vec::<f32>().map_err(wrap_xla)
+    }
+
+    /// The LM weight literals, loaded from the weights blob on first use.
+    pub fn lm_param_literals(&self, entry: &Entry) -> Result<std::sync::Arc<Vec<xla::Literal>>> {
+        if let Some(p) = self.lm_params.lock().unwrap().as_ref() {
+            return Ok(p.clone());
+        }
+        let EntryKind::Lm { params, params_bin, .. } = &entry.kind else {
+            bail!("not an LM entry");
+        };
+        let blob = std::fs::read(self.dir.join(params_bin))
+            .with_context(|| format!("reading {params_bin}"))?;
+        let mut lits = Vec::with_capacity(params.len());
+        for leaf in params {
+            let end = leaf.offset + leaf.nbytes;
+            if end > blob.len() {
+                bail!("weights blob too short for leaf {}", leaf.index);
+            }
+            let bytes = &blob[leaf.offset..end];
+            let n_elems: usize = leaf.shape.iter().product::<usize>().max(1);
+            let mut vals = vec![0f32; n_elems];
+            // Little-endian f32, the numpy default on this platform.
+            for (i, c) in bytes.chunks_exact(4).enumerate() {
+                vals[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            let dims: Vec<i64> = leaf.shape.iter().map(|&d| d as i64).collect();
+            let lit = if dims.is_empty() {
+                xla::Literal::vec1(&vals)
+            } else {
+                xla::Literal::vec1(&vals).reshape(&dims).map_err(wrap_xla)?
+            };
+            lits.push(lit);
+        }
+        let arc = std::sync::Arc::new(lits);
+        *self.lm_params.lock().unwrap() = Some(arc.clone());
+        Ok(arc)
+    }
+
+    /// Run an `lm` artifact: (batch, seq) i32 tokens → (batch, vocab) probs.
+    pub fn run_lm(&self, name: &str, tokens: &[i32]) -> Result<Vec<f32>> {
+        let loaded = self.load(name)?;
+        let (b, s) = match &loaded.entry.kind {
+            EntryKind::Lm { batch, seq, .. } => (*batch, *seq),
+            k => bail!("artifact {name:?} is {k:?}, not lm"),
+        };
+        if tokens.len() != b * s {
+            bail!("tokens length {} != {b}x{s}", tokens.len());
+        }
+        let params = self.lm_param_literals(&loaded.entry)?;
+        let tok =
+            xla::Literal::vec1(tokens).reshape(&[b as i64, s as i64]).map_err(wrap_xla)?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + params.len());
+        args.push(&tok);
+        for p in params.iter() {
+            args.push(p);
+        }
+        let result = loaded.exe.execute::<&xla::Literal>(&args).map_err(wrap_xla)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap_xla)?;
+        let out = result.to_tuple1().map_err(wrap_xla)?;
+        out.to_vec::<f32>().map_err(wrap_xla)
+    }
+
+    /// Pick the softmax artifact for (variant, batch, n), if one was built.
+    pub fn softmax_artifact(&self, variant: &str, batch: usize, n: usize) -> Option<String> {
+        self.manifest.softmax_entry(variant, batch, n).map(|e| e.name.clone())
+    }
+
+    /// Smallest LM batch bucket that fits `batch` rows.
+    pub fn lm_bucket(&self, batch: usize) -> Option<(String, usize)> {
+        self.manifest.lm_bucket(batch).map(|e| {
+            let b = match &e.kind {
+                EntryKind::Lm { batch, .. } => *batch,
+                _ => unreachable!(),
+            };
+            (e.name.clone(), b)
+        })
+    }
+}
+
+fn wrap_xla(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}

@@ -1,0 +1,163 @@
+//! PJRT executor service: a dedicated thread that owns the (non-`Send`)
+//! PJRT client and executes batches submitted over a channel.
+//!
+//! The `xla` crate's client/executable handles are `Rc`-based and cannot
+//! cross threads, so the coordinator's worker pool cannot call the runtime
+//! directly.  Instead one service thread owns the [`Runtime`] — which also
+//! matches the hardware reality (one device, serialized execution) — and
+//! workers enqueue jobs and block on a reply channel.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::{EntryKind, Runtime};
+
+/// A unit of PJRT work.
+pub enum Job {
+    /// Softmax rows (same n) through the artifact for `variant`.
+    Softmax { variant: String, rows: Vec<Vec<f32>>, reply: mpsc::SyncSender<Result<Vec<Vec<f32>>>> },
+    /// LM next-token distributions for token rows (same seq).
+    Lm { rows: Vec<Vec<i32>>, reply: mpsc::SyncSender<Result<Vec<Vec<f32>>>> },
+    Shutdown,
+}
+
+/// Handle to the running service (clone-free; guarded for multi-worker use).
+pub struct PjrtService {
+    tx: Mutex<mpsc::Sender<Job>>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl PjrtService {
+    /// Start the service thread; fails if the artifact dir cannot be opened.
+    pub fn start(artifacts_dir: PathBuf) -> Result<PjrtService> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        let join = std::thread::spawn(move || {
+            let rt = match Runtime::open(&artifacts_dir) {
+                Ok(rt) => {
+                    let _ = ready_tx.send(Ok(()));
+                    rt
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            service_loop(&rt, &rx);
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(PjrtService { tx: Mutex::new(tx), join: Some(join) }),
+            Ok(Err(e)) => {
+                let _ = join.join();
+                Err(e)
+            }
+            Err(_) => Err(anyhow!("PJRT service thread died during startup")),
+        }
+    }
+
+    /// Execute softmax rows through the service (blocking).
+    pub fn softmax(&self, variant: &str, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Softmax { variant: variant.to_string(), rows, reply })
+            .map_err(|_| anyhow!("PJRT service is down"))?;
+        rx.recv().map_err(|_| anyhow!("PJRT service dropped the job"))?
+    }
+
+    /// Execute LM rows through the service (blocking).
+    pub fn lm(&self, rows: Vec<Vec<i32>>) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Lm { rows, reply })
+            .map_err(|_| anyhow!("PJRT service is down"))?;
+        rx.recv().map_err(|_| anyhow!("PJRT service dropped the job"))?
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Job::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn service_loop(rt: &Runtime, rx: &mpsc::Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Shutdown => break,
+            Job::Softmax { variant, rows, reply } => {
+                let _ = reply.send(exec_softmax(rt, &variant, &rows));
+            }
+            Job::Lm { rows, reply } => {
+                let _ = reply.send(exec_lm(rt, &rows));
+            }
+        }
+    }
+}
+
+fn exec_softmax(rt: &Runtime, variant: &str, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+    let n = rows.first().ok_or_else(|| anyhow!("empty batch"))?.len();
+    if rows.iter().any(|r| r.len() != n) {
+        return Err(anyhow!("mixed lengths in batch"));
+    }
+    // Smallest artifact bucket (variant, b >= rows.len(), n).
+    let bucket = rt
+        .manifest
+        .softmax_entries()
+        .filter_map(|e| match &e.kind {
+            EntryKind::Softmax { variant: v, batch, n: nn }
+                if v == variant && *nn == n && *batch >= rows.len() =>
+            {
+                Some((*batch, e.name.clone()))
+            }
+            _ => None,
+        })
+        .min_by_key(|(b, _)| *b)
+        .ok_or_else(|| anyhow!("no {variant} artifact for batch {} x n {n}", rows.len()))?;
+    let (b, name) = bucket;
+    let mut flat = Vec::with_capacity(b * n);
+    for r in rows {
+        flat.extend_from_slice(r);
+    }
+    for _ in rows.len()..b {
+        flat.extend_from_slice(&rows[0]); // pad rows; discarded below
+    }
+    let out = rt.run_softmax(&name, &flat)?;
+    Ok((0..rows.len()).map(|i| out[i * n..(i + 1) * n].to_vec()).collect())
+}
+
+fn exec_lm(rt: &Runtime, rows: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
+    let seq = rows.first().ok_or_else(|| anyhow!("empty batch"))?.len();
+    if rows.iter().any(|r| r.len() != seq) {
+        return Err(anyhow!("mixed sequence lengths in batch"));
+    }
+    let (name, bucket) =
+        rt.lm_bucket(rows.len()).ok_or_else(|| anyhow!("no LM bucket fits {}", rows.len()))?;
+    let loaded = rt.load(&name)?;
+    let (want_seq, vocab) = match &loaded.entry.kind {
+        EntryKind::Lm { seq, vocab, .. } => (*seq, *vocab),
+        _ => unreachable!(),
+    };
+    if seq != want_seq {
+        return Err(anyhow!("sequence length {seq} != model seq {want_seq}"));
+    }
+    let mut flat = Vec::with_capacity(bucket * seq);
+    for r in rows {
+        flat.extend_from_slice(r);
+    }
+    for _ in rows.len()..bucket {
+        flat.extend_from_slice(&rows[0]);
+    }
+    let out = rt.run_lm(&name, &flat)?;
+    Ok((0..rows.len()).map(|i| out[i * vocab..(i + 1) * vocab].to_vec()).collect())
+}

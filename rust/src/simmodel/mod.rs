@@ -1,0 +1,184 @@
+//! Analytical µarchitecture performance model.
+//!
+//! The paper validates on three machines (Skylake-X, Broadwell, Zen 2) and
+//! scales to 12 threads; this environment has one vCPU.  Per DESIGN.md
+//! §Substitutions, the cross-processor figures (11, 12) and the thread-
+//! scaling figures (8, 9) are regenerated from a roofline model that
+//! encodes exactly the paper's own reasoning:
+//!
+//! * each memory pass moves a known number of bytes (Table 2) at the
+//!   bandwidth of the cache level the working set fits in;
+//! * each pass executes a known number of vector ops per element at the
+//!   machine's FMA rate;
+//! * pass time = max(memory time, compute time); algorithm time = Σ passes;
+//! * adding threads multiplies compute capacity but memory bandwidth
+//!   saturates at the socket limit — which is why the Two-Pass advantage
+//!   appears (and grows) out of cache.
+//!
+//! The model's vector-op counts are static instruction counts of the
+//! kernels in `softmax/{avx2,avx512}.rs`; nothing is fitted to the paper's
+//! curves.
+
+use crate::platform::MicroArch;
+use crate::softmax::{Algorithm, Isa, Pass};
+
+/// FP-port-limited vector-operation count per element-vector for one pass.
+/// Counts only the ops that contend for the FMA/FP ports (the throughput
+/// limiter the paper's Table-3 "FMA throughput 2/cycle" line describes);
+/// integer exponent manipulation, loads/stores and shuffles issue on other
+/// ports in parallel.  Static counts from `softmax/{avx2,avx512}.rs`;
+/// nothing is fitted to the paper's curves.
+pub fn vector_ops(pass: Pass, isa: Isa) -> f64 {
+    // exp-parts FP ops: mul (x·log2e) + round + 2 fnmadd + 5 fma = 9.
+    let exp_parts = 9.0;
+    // Reconstruction/2^n scale: AVX512 = one VSCALEFPS; AVX2 = the integer
+    // trick (cvt/add/shift off-port) + cmp + and + final mul ≈ 2 FP-port ops.
+    let recon = match isa {
+        Isa::Avx512 => 1.0,
+        _ => 2.0,
+    };
+    match pass {
+        Pass::Max => 1.0,                          // max
+        Pass::SumExp => exp_parts + recon + 1.0,   // exp + add
+        Pass::StoreExp => exp_parts + recon + 1.0, // exp + add (store off-port)
+        Pass::ScaleExp => exp_parts + recon + 1.0, // exp + mul
+        Pass::ScaleInplace => 1.0,                 // mul
+        // extexp + (m,n) fold: max + 2 rescales + mul + add.
+        Pass::AccumExtExp => exp_parts + 4.0 + 2.0 * recon,
+        Pass::ScaleExtExp => exp_parts + recon + 2.0, // exp + 2 muls
+    }
+}
+
+/// Bandwidth (GB/s) available to `threads` threads for a working set of
+/// `bytes`, on `m`.
+pub fn bandwidth_gbps(m: &MicroArch, bytes: usize, threads: usize) -> f64 {
+    let t = threads.max(1) as f64;
+    // Private caches scale with threads (each thread works on its slice);
+    // LLC and DRAM saturate.
+    if bytes <= m.l1d * threads {
+        m.l1_gbps * t
+    } else if bytes <= m.l2 * threads {
+        m.l2_gbps * t
+    } else if bytes <= m.llc {
+        (m.llc_gbps * t).min(m.llc_gbps * m.cores as f64)
+    } else {
+        (m.dram_gbps_1t * t).min(m.dram_gbps_max)
+    }
+}
+
+/// Compute throughput (vector ops/s) for `threads` threads on `m`, for the
+/// given ISA. Hyperthreads add ~30% (shared ports), the paper's own
+/// observation that SMT helps the bandwidth-bound case less than linearly.
+pub fn compute_ops_per_sec(m: &MicroArch, isa: Isa, threads: usize) -> f64 {
+    let t = threads.min(m.cores) as f64;
+    let ht = threads.saturating_sub(m.cores).min(m.cores * (m.smt - 1)) as f64;
+    let eff_threads = t + 0.3 * ht;
+    // A core retires ~fma_per_cycle vector ops per cycle (port-limited; use
+    // FMA throughput as the proxy for all vector ops, as the paper's
+    // implementations are FMA-dominated).
+    let lanes_scale = match isa {
+        Isa::Avx512 => 1.0,
+        // AVX2 vectors carry half the lanes of AVX512 → half the elements
+        // per op at the same op rate.
+        Isa::Avx2 => 0.5,
+        Isa::Scalar => 0.5 / 8.0,
+    };
+    eff_threads * m.freq_ghz * 1e9 * m.fma_per_cycle * lanes_scale
+}
+
+/// Predicted seconds for one pass over `n` f32 elements.
+pub fn pass_secs(m: &MicroArch, isa: Isa, pass: Pass, n: usize, threads: usize) -> f64 {
+    let (r, w) = pass.traffic();
+    let bytes = (r + w) * n * 4;
+    // Working set that must round-trip a cache level: input + any output.
+    let mem = bytes as f64 / (bandwidth_gbps(m, bytes, threads) * 1e9);
+    // Elements per vector = 16 for the AVX512 lane budget baseline (lanes
+    // handled via lanes_scale in compute_ops_per_sec).
+    let vecs = (n as f64) / 16.0;
+    let comp = vecs * vector_ops(pass, isa) / compute_ops_per_sec(m, isa, threads);
+    mem.max(comp)
+}
+
+/// Predicted seconds for a full algorithm.
+pub fn algorithm_secs(m: &MicroArch, isa: Isa, alg: Algorithm, n: usize, threads: usize) -> f64 {
+    Pass::of_algorithm(alg).iter().map(|&p| pass_secs(m, isa, p, n, threads)).sum()
+}
+
+/// Predicted ns/element (the paper's figures' y-axis, inverted).
+pub fn ns_per_elem(m: &MicroArch, isa: Isa, alg: Algorithm, n: usize, threads: usize) -> f64 {
+    algorithm_secs(m, isa, alg, n, threads) * 1e9 / n as f64
+}
+
+/// Speedup of Two-Pass over the best Three-Pass variant at a given point.
+pub fn twopass_advantage(m: &MicroArch, isa: Isa, n: usize, threads: usize) -> f64 {
+    let two = algorithm_secs(m, isa, Algorithm::TwoPass, n, threads);
+    let best3 = algorithm_secs(m, isa, Algorithm::ThreePassRecompute, n, threads)
+        .min(algorithm_secs(m, isa, Algorithm::ThreePassReload, n, threads));
+    best3 / two
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{BROADWELL, SKYLAKE_X, ZEN2};
+
+    #[test]
+    fn out_of_cache_twopass_wins_on_all_uarches() {
+        // Paper: +18–28% (SKX), +21–23% (BDW), +14–16% (Zen2) out of cache.
+        for m in [&SKYLAKE_X, &BROADWELL, &ZEN2] {
+            let n = 4 * m.llc / 4;
+            let adv = twopass_advantage(m, Isa::Avx2, n, 1);
+            assert!(adv > 1.05, "{}: advantage {adv}", m.name);
+            assert!(adv < 5.0 / 3.0 + 1e-9, "{}: advantage {adv} beats the bound", m.name);
+        }
+    }
+
+    #[test]
+    fn in_cache_reload_wins_like_fig1() {
+        // Paper Fig. 1/11/12: in L1/L2, Three-Pass Reload is fastest.
+        for m in [&SKYLAKE_X, &BROADWELL] {
+            let n = m.l1d / 8; // comfortably in L1
+            let reload = algorithm_secs(m, Isa::Avx2, Algorithm::ThreePassReload, n, 1);
+            let two = algorithm_secs(m, Isa::Avx2, Algorithm::TwoPass, n, 1);
+            assert!(reload < two, "{}: reload {reload} vs two {two}", m.name);
+        }
+    }
+
+    #[test]
+    fn avx512_advantage_exceeds_avx2_out_of_cache() {
+        // Paper: 18–28% AVX512 vs 16–18% AVX2 on Skylake-X — recomputing
+        // exponentials is relatively cheaper with AVX512.
+        let n = 4 * SKYLAKE_X.llc / 4;
+        let a512 = twopass_advantage(&SKYLAKE_X, Isa::Avx512, n, 1);
+        let a256 = twopass_advantage(&SKYLAKE_X, Isa::Avx2, n, 1);
+        assert!(a512 >= a256, "avx512 {a512} vs avx2 {a256}");
+    }
+
+    #[test]
+    fn scaling_grows_avx2_advantage() {
+        // Paper Fig. 9: AVX2 advantage grows 9% → 19% → 22% with threads
+        // (compute-bound at 1 thread, bandwidth-bound at 6+).
+        let n = 4 * SKYLAKE_X.llc / 4;
+        let a1 = twopass_advantage(&SKYLAKE_X, Isa::Avx2, n, 1);
+        let a6 = twopass_advantage(&SKYLAKE_X, Isa::Avx2, n, 6);
+        let a12 = twopass_advantage(&SKYLAKE_X, Isa::Avx2, n, 12);
+        assert!(a6 >= a1, "a1={a1} a6={a6}");
+        assert!(a12 >= a6 * 0.99, "a6={a6} a12={a12}");
+    }
+
+    #[test]
+    fn bandwidth_saturates() {
+        let b1 = bandwidth_gbps(&SKYLAKE_X, 1 << 30, 1);
+        let b6 = bandwidth_gbps(&SKYLAKE_X, 1 << 30, 6);
+        let b12 = bandwidth_gbps(&SKYLAKE_X, 1 << 30, 12);
+        assert!(b6 > b1);
+        assert_eq!(b6.max(b12), SKYLAKE_X.dram_gbps_max);
+    }
+
+    #[test]
+    fn times_positive_and_monotone_in_n() {
+        let t1 = algorithm_secs(&ZEN2, Isa::Avx2, Algorithm::TwoPass, 1 << 16, 1);
+        let t2 = algorithm_secs(&ZEN2, Isa::Avx2, Algorithm::TwoPass, 1 << 20, 1);
+        assert!(t1 > 0.0 && t2 > t1);
+    }
+}

@@ -1,0 +1,442 @@
+//! AVX2+FMA implementations of the three softmax algorithms (paper §6.3).
+//!
+//! Mirrors the paper's templated C implementation: every pass is generic
+//! over an `UNROLL` meta-parameter (number of 8-lane vectors processed per
+//! iteration, each with its own accumulator register to break the FMA
+//! dependency chain); the auto-tuner (`tuning.rs`) picks the winner per
+//! pass.  The `e^x` reconstruction uses the paper's AVX2 trick — build the
+//! `2^n` scale by integer exponent-field manipulation and flush to zero for
+//! `n < −126` — since AVX2 has no `VSCALEFPS`.
+//!
+//! # Safety
+//! Every function in this module requires AVX2+FMA at runtime; the public
+//! entry points in `dispatch.rs` check `is_x86_feature_detected!` before
+//! selecting them.
+
+#![cfg(target_arch = "x86_64")]
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use core::arch::x86_64::*;
+
+use super::exp::{ExtSum, C1, C2, C3, C4, C5, DOMAIN_BOUND, EXTSUM_NEG_INIT, LN2_HI, LN2_LO, LOG2E};
+
+const LANES: usize = 8;
+const ROUND: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
+
+/// Range reduction + polynomial: returns `(p, n)` with `e^x ≈ p·2^n`.
+#[inline(always)]
+unsafe fn vexp_parts(x: __m256) -> (__m256, __m256) {
+    let x = _mm256_max_ps(x, _mm256_set1_ps(-DOMAIN_BOUND));
+    let x = _mm256_min_ps(x, _mm256_set1_ps(DOMAIN_BOUND));
+    let n = _mm256_round_ps::<ROUND>(_mm256_mul_ps(x, _mm256_set1_ps(LOG2E)));
+    let t = _mm256_fnmadd_ps(n, _mm256_set1_ps(LN2_HI), x);
+    let t = _mm256_fnmadd_ps(n, _mm256_set1_ps(LN2_LO), t);
+    let p = _mm256_set1_ps(C5);
+    let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(C4));
+    let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(C3));
+    let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(C2));
+    let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(C1));
+    let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(1.0));
+    (p, n)
+}
+
+/// `2^n` for integral-float lanes with `n ≤ 127`, flushed to 0 below −126.
+/// The paper's AVX2 reconstruction: `(n + 127) << 23` reinterpreted as f32.
+#[inline(always)]
+unsafe fn vexp2i(n: __m256) -> __m256 {
+    let clamped = _mm256_max_ps(n, _mm256_set1_ps(-127.0));
+    let bits = _mm256_slli_epi32::<23>(_mm256_add_epi32(
+        _mm256_cvtps_epi32(clamped),
+        _mm256_set1_epi32(127),
+    ));
+    let s = _mm256_castsi256_ps(bits);
+    // Zero the lanes that underflow (n < −126): subnormal flush, paper §6.3.
+    let keep = _mm256_cmp_ps::<_CMP_GE_OQ>(n, _mm256_set1_ps(-126.0));
+    _mm256_and_ps(s, keep)
+}
+
+/// Full `e^x` for `x ≤ 0` lanes (Three-Pass regime).
+#[inline(always)]
+unsafe fn vexp(x: __m256) -> __m256 {
+    let (p, n) = vexp_parts(x);
+    _mm256_mul_ps(p, vexp2i(n))
+}
+
+#[inline(always)]
+unsafe fn hmax(v: __m256) -> f32 {
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let m = _mm_max_ps(_mm256_castps256_ps128(v), hi);
+    let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
+    let m = _mm_max_ss(m, _mm_shuffle_ps::<1>(m, m));
+    _mm_cvtss_f32(m)
+}
+
+#[inline(always)]
+unsafe fn hsum(v: __m256) -> f32 {
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let s = _mm_add_ps(_mm256_castps256_ps128(v), hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+    _mm_cvtss_f32(s)
+}
+
+// ---------------------------------------------------------------------------
+// Passes, generic over UNROLL (vectors per loop iteration).
+// ---------------------------------------------------------------------------
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn pass_max<const U: usize>(x: &[f32]) -> f32 {
+    let mut acc = [_mm256_set1_ps(f32::MIN); U];
+    let stride = LANES * U;
+    let mut p = x.as_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            acc[k] = _mm256_max_ps(acc[k], _mm256_loadu_ps(p.add(k * LANES)));
+        }
+        p = p.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        acc[0] = _mm256_max_ps(acc[0], _mm256_loadu_ps(p));
+        p = p.add(LANES);
+        rem -= LANES;
+    }
+    let mut v = acc[0];
+    for k in 1..U {
+        v = _mm256_max_ps(v, acc[k]);
+    }
+    let mut m = hmax(v);
+    for i in 0..rem {
+        m = m.max(*p.add(i));
+    }
+    m
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn pass_sumexp<const U: usize>(x: &[f32], mu: f32) -> f32 {
+    let vmu = _mm256_set1_ps(mu);
+    let mut acc = [_mm256_setzero_ps(); U];
+    let stride = LANES * U;
+    let mut p = x.as_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let v = _mm256_sub_ps(_mm256_loadu_ps(p.add(k * LANES)), vmu);
+            acc[k] = _mm256_add_ps(acc[k], vexp(v));
+        }
+        p = p.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let v = _mm256_sub_ps(_mm256_loadu_ps(p), vmu);
+        acc[0] = _mm256_add_ps(acc[0], vexp(v));
+        p = p.add(LANES);
+        rem -= LANES;
+    }
+    let mut v = acc[0];
+    for k in 1..U {
+        v = _mm256_add_ps(v, acc[k]);
+    }
+    let mut s = hsum(v);
+    for i in 0..rem {
+        s += super::exp::exp(*p.add(i) - mu);
+    }
+    s
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn pass_storeexp<const U: usize>(x: &[f32], mu: f32, y: &mut [f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let vmu = _mm256_set1_ps(mu);
+    let mut acc = [_mm256_setzero_ps(); U];
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let e = vexp(_mm256_sub_ps(_mm256_loadu_ps(px.add(k * LANES)), vmu));
+            _mm256_storeu_ps(py.add(k * LANES), e);
+            acc[k] = _mm256_add_ps(acc[k], e);
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let e = vexp(_mm256_sub_ps(_mm256_loadu_ps(px), vmu));
+        _mm256_storeu_ps(py, e);
+        acc[0] = _mm256_add_ps(acc[0], e);
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    let mut v = acc[0];
+    for k in 1..U {
+        v = _mm256_add_ps(v, acc[k]);
+    }
+    let mut s = hsum(v);
+    for i in 0..rem {
+        let e = super::exp::exp(*px.add(i) - mu);
+        *py.add(i) = e;
+        s += e;
+    }
+    s
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn pass_scaleexp<const U: usize>(x: &[f32], mu: f32, lam: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let vmu = _mm256_set1_ps(mu);
+    let vlam = _mm256_set1_ps(lam);
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let e = vexp(_mm256_sub_ps(_mm256_loadu_ps(px.add(k * LANES)), vmu));
+            _mm256_storeu_ps(py.add(k * LANES), _mm256_mul_ps(e, vlam));
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let e = vexp(_mm256_sub_ps(_mm256_loadu_ps(px), vmu));
+        _mm256_storeu_ps(py, _mm256_mul_ps(e, vlam));
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        *py.add(i) = lam * super::exp::exp(*px.add(i) - mu);
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn pass_scale_inplace<const U: usize>(y: &mut [f32], lam: f32) {
+    let vlam = _mm256_set1_ps(lam);
+    let stride = LANES * U;
+    let mut p = y.as_mut_ptr();
+    let mut rem = y.len();
+    while rem >= stride {
+        for k in 0..U {
+            let v = _mm256_mul_ps(_mm256_loadu_ps(p.add(k * LANES)), vlam);
+            _mm256_storeu_ps(p.add(k * LANES), v);
+        }
+        p = p.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_loadu_ps(p), vlam));
+        p = p.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        *p.add(i) *= lam;
+    }
+}
+
+/// Fold one `(p, n)` vector into the running `(m, n)` accumulator pair
+/// (paper Alg. 3 inner loop, vectorized: both shifts ≤ 0, so no overflow).
+#[inline(always)]
+unsafe fn accum_step(vm: &mut __m256, vn: &mut __m256, p: __m256, n: __m256) {
+    let n_max = _mm256_max_ps(*vn, n);
+    let scaled_new = _mm256_mul_ps(p, vexp2i(_mm256_sub_ps(n, n_max)));
+    let scaled_acc = _mm256_mul_ps(*vm, vexp2i(_mm256_sub_ps(*vn, n_max)));
+    *vm = _mm256_add_ps(scaled_new, scaled_acc);
+    *vn = n_max;
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn pass_accum_extexp<const U: usize>(x: &[f32]) -> ExtSum {
+    let mut vm = [_mm256_setzero_ps(); U];
+    let mut vn = [_mm256_set1_ps(EXTSUM_NEG_INIT); U];
+    let stride = LANES * U;
+    let mut p = x.as_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let (pe, ne) = vexp_parts(_mm256_loadu_ps(p.add(k * LANES)));
+            accum_step(&mut vm[k], &mut vn[k], pe, ne);
+        }
+        p = p.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let (pe, ne) = vexp_parts(_mm256_loadu_ps(p));
+        accum_step(&mut vm[0], &mut vn[0], pe, ne);
+        p = p.add(LANES);
+        rem -= LANES;
+    }
+    // Horizontal (m, n) combine: lanes → scalar ExtSum.
+    let mut s = ExtSum::default();
+    for k in 0..U {
+        let mut ms = [0.0f32; LANES];
+        let mut ns = [0.0f32; LANES];
+        _mm256_storeu_ps(ms.as_mut_ptr(), vm[k]);
+        _mm256_storeu_ps(ns.as_mut_ptr(), vn[k]);
+        for l in 0..LANES {
+            s.add_pair(ms[l], ns[l]);
+        }
+    }
+    for i in 0..rem {
+        s.add_exp(*p.add(i));
+    }
+    s
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn pass_scale_extexp<const U: usize>(x: &[f32], lam: f32, n_sum: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let vlam = _mm256_set1_ps(lam);
+    let vns = _mm256_set1_ps(n_sum);
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let (pe, ne) = vexp_parts(_mm256_loadu_ps(px.add(k * LANES)));
+            let s = vexp2i(_mm256_sub_ps(ne, vns));
+            let v = _mm256_mul_ps(_mm256_mul_ps(pe, vlam), s);
+            _mm256_storeu_ps(py.add(k * LANES), v);
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let (pe, ne) = vexp_parts(_mm256_loadu_ps(px));
+        let s = vexp2i(_mm256_sub_ps(ne, vns));
+        _mm256_storeu_ps(py, _mm256_mul_ps(_mm256_mul_ps(pe, vlam), s));
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        let (m_i, n_i) = super::exp::extexp(*px.add(i));
+        *py.add(i) = m_i * lam * super::exp::exp2i(n_i - n_sum);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full algorithms with the default (tuned) unroll factors.
+// ---------------------------------------------------------------------------
+
+/// Paper Algorithm 1, AVX2. 3 reads + 1 write.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn softmax_threepass_recompute(x: &[f32], y: &mut [f32]) {
+    let mu = pass_max::<4>(x);
+    let sigma = pass_sumexp::<8>(x, mu);
+    pass_scaleexp::<8>(x, mu, 1.0 / sigma, y);
+}
+
+/// Paper Algorithm 2, AVX2. 3 reads + 2 writes.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn softmax_threepass_reload(x: &[f32], y: &mut [f32]) {
+    let mu = pass_max::<4>(x);
+    let sigma = pass_storeexp::<2>(x, mu, y);
+    pass_scale_inplace::<8>(y, 1.0 / sigma);
+}
+
+/// Paper Algorithm 3 (the contribution), AVX2. 2 reads + 1 write.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn softmax_twopass(x: &[f32], y: &mut [f32]) {
+    let s = pass_accum_extexp::<8>(x);
+    pass_scale_extexp::<8>(x, 1.0 / s.m, s.n, y);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have() -> bool {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+
+    fn ref_softmax(x: &[f32]) -> Vec<f32> {
+        let mu = x.iter().cloned().fold(f64::MIN, |a, v| a.max(v as f64));
+        let e: Vec<f64> = x.iter().map(|&v| ((v as f64) - mu).exp()).collect();
+        let s: f64 = e.iter().sum();
+        e.iter().map(|&v| (v / s) as f32).collect()
+    }
+
+    fn inputs(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (((i * 2654435761) % 2000) as f32) / 100.0 - 10.0).collect()
+    }
+
+    #[test]
+    fn avx2_algorithms_match_reference() {
+        if !have() {
+            return;
+        }
+        for n in [1usize, 7, 8, 9, 16, 63, 64, 65, 255, 1000, 4096, 10_007] {
+            let x = inputs(n);
+            let want = ref_softmax(&x);
+            for (name, f) in [
+                ("recompute", softmax_threepass_recompute as unsafe fn(&[f32], &mut [f32])),
+                ("reload", softmax_threepass_reload),
+                ("twopass", softmax_twopass),
+            ] {
+                let mut y = vec![0.0f32; n];
+                unsafe { f(&x, &mut y) };
+                for i in 0..n {
+                    assert!(
+                        (y[i] - want[i]).abs() < 1e-6,
+                        "{name} n={n} i={i}: {} vs {}",
+                        y[i],
+                        want[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_passes_match_scalar() {
+        if !have() {
+            return;
+        }
+        let x = inputs(1003);
+        let mu = unsafe { pass_max::<4>(&x) };
+        assert_eq!(mu, crate::softmax::scalar::pass_max(&x));
+        let s_v = unsafe { pass_sumexp::<2>(&x, mu) };
+        let s_s = crate::softmax::scalar::pass_sumexp(&x, mu);
+        assert!((s_v - s_s).abs() / s_s < 1e-5, "{s_v} vs {s_s}");
+        let e_v = unsafe { pass_accum_extexp::<2>(&x) };
+        let e_s = crate::softmax::scalar::pass_accum_extexp(&x);
+        assert!((e_v.ln() - e_s.ln()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn avx2_unroll_variants_agree() {
+        if !have() {
+            return;
+        }
+        let x = inputs(2049);
+        let m1 = unsafe { pass_max::<1>(&x) };
+        let m2 = unsafe { pass_max::<2>(&x) };
+        let m4 = unsafe { pass_max::<4>(&x) };
+        let m8 = unsafe { pass_max::<8>(&x) };
+        assert!(m1 == m2 && m2 == m4 && m4 == m8);
+        let a1 = unsafe { pass_accum_extexp::<1>(&x) };
+        let a4 = unsafe { pass_accum_extexp::<4>(&x) };
+        assert!((a1.ln() - a4.ln()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn avx2_twopass_handles_overflow_range() {
+        if !have() {
+            return;
+        }
+        let x = vec![95.0f32; 512]; // e^95 overflows f32
+        let mut y = vec![0.0f32; 512];
+        unsafe { softmax_twopass(&x, &mut y) };
+        for &v in &y {
+            assert!((v - 1.0 / 512.0).abs() < 1e-8, "{v}");
+        }
+    }
+}

@@ -1,0 +1,479 @@
+//! AVX512F implementations of the three softmax algorithms (paper §6.3).
+//!
+//! Same structure as `avx2.rs` (16 lanes instead of 8), with the paper's
+//! AVX512-specific reconstruction: the `VSCALEFPS` instruction
+//! (`_mm512_scalef_ps`) computes `p·2^n` in one hardware operation with
+//! correct underflow/overflow semantics, replacing the integer
+//! exponent-manipulation trick — both in the `e^x` reconstruction and in
+//! the `(m, n)` accumulation rescaling of the Two-Pass algorithm.
+//!
+//! # Safety
+//! Requires AVX512F at runtime; `dispatch.rs` guards selection with
+//! `is_x86_feature_detected!("avx512f")`.
+
+#![cfg(target_arch = "x86_64")]
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use core::arch::x86_64::*;
+
+use super::exp::{ExtSum, C1, C2, C3, C4, C5, DOMAIN_BOUND, EXTSUM_NEG_INIT, LN2_HI, LN2_LO, LOG2E};
+
+const LANES: usize = 16;
+/// imm8 for `_mm512_roundscale_ps`: round to nearest-even, suppress
+/// exceptions (scale = 2^0, i.e. plain rounding).
+const RN: i32 = 0x08;
+
+/// Range reduction + polynomial: `(p, n)` with `e^x ≈ p·2^n`.
+#[inline(always)]
+unsafe fn vexp_parts(x: __m512) -> (__m512, __m512) {
+    let x = _mm512_max_ps(x, _mm512_set1_ps(-DOMAIN_BOUND));
+    let x = _mm512_min_ps(x, _mm512_set1_ps(DOMAIN_BOUND));
+    let n = _mm512_roundscale_ps::<RN>(_mm512_mul_ps(x, _mm512_set1_ps(LOG2E)));
+    let t = _mm512_fnmadd_ps(n, _mm512_set1_ps(LN2_HI), x);
+    let t = _mm512_fnmadd_ps(n, _mm512_set1_ps(LN2_LO), t);
+    let p = _mm512_set1_ps(C5);
+    let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(C4));
+    let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(C3));
+    let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(C2));
+    let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(C1));
+    let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(1.0));
+    (p, n)
+}
+
+/// `e^x` via VSCALEFPS reconstruction (one instruction, handles flush).
+#[inline(always)]
+unsafe fn vexp(x: __m512) -> __m512 {
+    let (p, n) = vexp_parts(x);
+    _mm512_scalef_ps(p, n)
+}
+
+// ---------------------------------------------------------------------------
+// Passes, generic over UNROLL.
+// ---------------------------------------------------------------------------
+
+#[target_feature(enable = "avx512f")]
+pub unsafe fn pass_max<const U: usize>(x: &[f32]) -> f32 {
+    let mut acc = [_mm512_set1_ps(f32::MIN); U];
+    let stride = LANES * U;
+    let mut p = x.as_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            acc[k] = _mm512_max_ps(acc[k], _mm512_loadu_ps(p.add(k * LANES)));
+        }
+        p = p.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        acc[0] = _mm512_max_ps(acc[0], _mm512_loadu_ps(p));
+        p = p.add(LANES);
+        rem -= LANES;
+    }
+    let mut v = acc[0];
+    for k in 1..U {
+        v = _mm512_max_ps(v, acc[k]);
+    }
+    let mut m = _mm512_reduce_max_ps(v);
+    for i in 0..rem {
+        m = m.max(*p.add(i));
+    }
+    m
+}
+
+#[target_feature(enable = "avx512f")]
+pub unsafe fn pass_sumexp<const U: usize>(x: &[f32], mu: f32) -> f32 {
+    let vmu = _mm512_set1_ps(mu);
+    let mut acc = [_mm512_setzero_ps(); U];
+    let stride = LANES * U;
+    let mut p = x.as_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let v = _mm512_sub_ps(_mm512_loadu_ps(p.add(k * LANES)), vmu);
+            acc[k] = _mm512_add_ps(acc[k], vexp(v));
+        }
+        p = p.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        acc[0] = _mm512_add_ps(acc[0], vexp(_mm512_sub_ps(_mm512_loadu_ps(p), vmu)));
+        p = p.add(LANES);
+        rem -= LANES;
+    }
+    let mut v = acc[0];
+    for k in 1..U {
+        v = _mm512_add_ps(v, acc[k]);
+    }
+    let mut s = _mm512_reduce_add_ps(v);
+    for i in 0..rem {
+        s += super::exp::exp(*p.add(i) - mu);
+    }
+    s
+}
+
+#[target_feature(enable = "avx512f")]
+pub unsafe fn pass_storeexp<const U: usize>(x: &[f32], mu: f32, y: &mut [f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let vmu = _mm512_set1_ps(mu);
+    let mut acc = [_mm512_setzero_ps(); U];
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let e = vexp(_mm512_sub_ps(_mm512_loadu_ps(px.add(k * LANES)), vmu));
+            _mm512_storeu_ps(py.add(k * LANES), e);
+            acc[k] = _mm512_add_ps(acc[k], e);
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let e = vexp(_mm512_sub_ps(_mm512_loadu_ps(px), vmu));
+        _mm512_storeu_ps(py, e);
+        acc[0] = _mm512_add_ps(acc[0], e);
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    let mut v = acc[0];
+    for k in 1..U {
+        v = _mm512_add_ps(v, acc[k]);
+    }
+    let mut s = _mm512_reduce_add_ps(v);
+    for i in 0..rem {
+        let e = super::exp::exp(*px.add(i) - mu);
+        *py.add(i) = e;
+        s += e;
+    }
+    s
+}
+
+#[target_feature(enable = "avx512f")]
+pub unsafe fn pass_scaleexp<const U: usize>(x: &[f32], mu: f32, lam: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let vmu = _mm512_set1_ps(mu);
+    let vlam = _mm512_set1_ps(lam);
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let e = vexp(_mm512_sub_ps(_mm512_loadu_ps(px.add(k * LANES)), vmu));
+            _mm512_storeu_ps(py.add(k * LANES), _mm512_mul_ps(e, vlam));
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let e = vexp(_mm512_sub_ps(_mm512_loadu_ps(px), vmu));
+        _mm512_storeu_ps(py, _mm512_mul_ps(e, vlam));
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        *py.add(i) = lam * super::exp::exp(*px.add(i) - mu);
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+pub unsafe fn pass_scale_inplace<const U: usize>(y: &mut [f32], lam: f32) {
+    let vlam = _mm512_set1_ps(lam);
+    let stride = LANES * U;
+    let mut p = y.as_mut_ptr();
+    let mut rem = y.len();
+    while rem >= stride {
+        for k in 0..U {
+            let v = _mm512_mul_ps(_mm512_loadu_ps(p.add(k * LANES)), vlam);
+            _mm512_storeu_ps(p.add(k * LANES), v);
+        }
+        p = p.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        _mm512_storeu_ps(p, _mm512_mul_ps(_mm512_loadu_ps(p), vlam));
+        p = p.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        *p.add(i) *= lam;
+    }
+}
+
+/// Fold one `(p, n)` vector into the `(m, n)` accumulator pair; the
+/// rescales use VSCALEFPS directly (shift ≤ 0 ⇒ pure downscale, no clamp
+/// logic needed — hardware flushes to zero exactly like the paper wants).
+#[inline(always)]
+unsafe fn accum_step(vm: &mut __m512, vn: &mut __m512, p: __m512, n: __m512) {
+    let n_max = _mm512_max_ps(*vn, n);
+    let scaled_new = _mm512_scalef_ps(p, _mm512_sub_ps(n, n_max));
+    let scaled_acc = _mm512_scalef_ps(*vm, _mm512_sub_ps(*vn, n_max));
+    *vm = _mm512_add_ps(scaled_new, scaled_acc);
+    *vn = n_max;
+}
+
+#[target_feature(enable = "avx512f")]
+pub unsafe fn pass_accum_extexp<const U: usize>(x: &[f32]) -> ExtSum {
+    let mut vm = [_mm512_setzero_ps(); U];
+    let mut vn = [_mm512_set1_ps(EXTSUM_NEG_INIT); U];
+    let stride = LANES * U;
+    let mut p = x.as_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let (pe, ne) = vexp_parts(_mm512_loadu_ps(p.add(k * LANES)));
+            accum_step(&mut vm[k], &mut vn[k], pe, ne);
+        }
+        p = p.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let (pe, ne) = vexp_parts(_mm512_loadu_ps(p));
+        accum_step(&mut vm[0], &mut vn[0], pe, ne);
+        p = p.add(LANES);
+        rem -= LANES;
+    }
+    let mut s = ExtSum::default();
+    for k in 0..U {
+        let mut ms = [0.0f32; LANES];
+        let mut ns = [0.0f32; LANES];
+        _mm512_storeu_ps(ms.as_mut_ptr(), vm[k]);
+        _mm512_storeu_ps(ns.as_mut_ptr(), vn[k]);
+        for l in 0..LANES {
+            s.add_pair(ms[l], ns[l]);
+        }
+    }
+    for i in 0..rem {
+        s.add_exp(*p.add(i));
+    }
+    s
+}
+
+#[target_feature(enable = "avx512f")]
+pub unsafe fn pass_scale_extexp<const U: usize>(x: &[f32], lam: f32, n_sum: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let vlam = _mm512_set1_ps(lam);
+    let vns = _mm512_set1_ps(n_sum);
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let (pe, ne) = vexp_parts(_mm512_loadu_ps(px.add(k * LANES)));
+            let v = _mm512_scalef_ps(_mm512_mul_ps(pe, vlam), _mm512_sub_ps(ne, vns));
+            _mm512_storeu_ps(py.add(k * LANES), v);
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let (pe, ne) = vexp_parts(_mm512_loadu_ps(px));
+        let v = _mm512_scalef_ps(_mm512_mul_ps(pe, vlam), _mm512_sub_ps(ne, vns));
+        _mm512_storeu_ps(py, v);
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        let (m_i, n_i) = super::exp::extexp(*px.add(i));
+        *py.add(i) = m_i * lam * super::exp::exp2i(n_i - n_sum);
+    }
+}
+
+/// EXPERIMENTAL (§Perf iteration): pass 2 of the Two-Pass algorithm with
+/// non-temporal stores (`VMOVNTPS`). Out of cache the output is written
+/// exactly once and never re-read, so bypassing the write-allocate RFO can
+/// cut the pass's true traffic from 3 transfers (read x + RFO y + write y)
+/// to 2.  Requires 64-byte alignment of `y`; falls back to the regular
+/// pass otherwise.  Kept out of the defaults — see EXPERIMENTS.md §Perf for
+/// the measured verdict on this host.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn pass_scale_extexp_nt<const U: usize>(x: &[f32], lam: f32, n_sum: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    if y.as_ptr() as usize % 64 != 0 {
+        return pass_scale_extexp::<U>(x, lam, n_sum, y);
+    }
+    let vlam = _mm512_set1_ps(lam);
+    let vns = _mm512_set1_ps(n_sum);
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let (pe, ne) = vexp_parts(_mm512_loadu_ps(px.add(k * LANES)));
+            let v = _mm512_scalef_ps(_mm512_mul_ps(pe, vlam), _mm512_sub_ps(ne, vns));
+            _mm512_stream_ps(py.add(k * LANES), v);
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    _mm_sfence(); // make NT stores globally visible before the tail
+    while rem >= LANES {
+        let (pe, ne) = vexp_parts(_mm512_loadu_ps(px));
+        let v = _mm512_scalef_ps(_mm512_mul_ps(pe, vlam), _mm512_sub_ps(ne, vns));
+        _mm512_storeu_ps(py, v);
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        let (m_i, n_i) = super::exp::extexp(*px.add(i));
+        *py.add(i) = m_i * lam * super::exp::exp2i(n_i - n_sum);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full algorithms with the default (tuned) unroll factors.
+// ---------------------------------------------------------------------------
+
+/// Paper Algorithm 1, AVX512. 3 reads + 1 write.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn softmax_threepass_recompute(x: &[f32], y: &mut [f32]) {
+    let mu = pass_max::<4>(x);
+    let sigma = pass_sumexp::<8>(x, mu);
+    pass_scaleexp::<8>(x, mu, 1.0 / sigma, y);
+}
+
+/// Paper Algorithm 2, AVX512. 3 reads + 2 writes.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn softmax_threepass_reload(x: &[f32], y: &mut [f32]) {
+    let mu = pass_max::<4>(x);
+    let sigma = pass_storeexp::<2>(x, mu, y);
+    pass_scale_inplace::<8>(y, 1.0 / sigma);
+}
+
+/// Paper Algorithm 3 (the contribution), AVX512. 2 reads + 1 write.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn softmax_twopass(x: &[f32], y: &mut [f32]) {
+    let s = pass_accum_extexp::<8>(x);
+    pass_scale_extexp::<8>(x, 1.0 / s.m, s.n, y);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have() -> bool {
+        is_x86_feature_detected!("avx512f")
+    }
+
+    fn ref_softmax(x: &[f32]) -> Vec<f32> {
+        let mu = x.iter().cloned().fold(f64::MIN, |a, v| a.max(v as f64));
+        let e: Vec<f64> = x.iter().map(|&v| ((v as f64) - mu).exp()).collect();
+        let s: f64 = e.iter().sum();
+        e.iter().map(|&v| (v / s) as f32).collect()
+    }
+
+    fn inputs(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (((i * 2654435761) % 2000) as f32) / 100.0 - 10.0).collect()
+    }
+
+    #[test]
+    fn avx512_algorithms_match_reference() {
+        if !have() {
+            return;
+        }
+        for n in [1usize, 15, 16, 17, 31, 64, 100, 1000, 4096, 10_007] {
+            let x = inputs(n);
+            let want = ref_softmax(&x);
+            for (name, f) in [
+                ("recompute", softmax_threepass_recompute as unsafe fn(&[f32], &mut [f32])),
+                ("reload", softmax_threepass_reload),
+                ("twopass", softmax_twopass),
+            ] {
+                let mut y = vec![0.0f32; n];
+                unsafe { f(&x, &mut y) };
+                for i in 0..n {
+                    assert!(
+                        (y[i] - want[i]).abs() < 1e-6,
+                        "{name} n={n} i={i}: {} vs {}",
+                        y[i],
+                        want[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn avx512_matches_avx2_bitwise_on_vector_body() {
+        if !have() || !is_x86_feature_detected!("avx2") {
+            return;
+        }
+        // Same constants, same polynomial: the scalef path and the integer
+        // path must agree to the last bit for in-range exponents.
+        let x = inputs(4096);
+        let mut y512 = vec![0.0f32; 4096];
+        let mut y256 = vec![0.0f32; 4096];
+        unsafe {
+            softmax_twopass(&x, &mut y512);
+            crate::softmax::avx2::softmax_twopass(&x, &mut y256);
+        }
+        for i in 0..4096 {
+            assert_eq!(y512[i].to_bits(), y256[i].to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn avx512_unroll_variants_agree() {
+        if !have() {
+            return;
+        }
+        let x = inputs(4099);
+        let m1 = unsafe { pass_max::<1>(&x) };
+        let m8 = unsafe { pass_max::<8>(&x) };
+        assert_eq!(m1, m8);
+        let a1 = unsafe { pass_accum_extexp::<1>(&x) };
+        let a4 = unsafe { pass_accum_extexp::<4>(&x) };
+        assert!((a1.ln() - a4.ln()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn nt_scale_pass_matches_regular() {
+        if !have() {
+            return;
+        }
+        let x = inputs(4096 + 7);
+        let s = unsafe { pass_accum_extexp::<2>(&x) };
+        // 64-byte-aligned output buffer.
+        let mut buf = vec![0.0f32; x.len() + 16];
+        let off = (64 - (buf.as_ptr() as usize % 64) % 64) / 4 % 16;
+        let mut want = vec![0.0f32; x.len()];
+        unsafe {
+            pass_scale_extexp::<2>(&x, 1.0 / s.m, s.n, &mut want);
+            let y = &mut buf[off..off + x.len()];
+            pass_scale_extexp_nt::<2>(&x, 1.0 / s.m, s.n, y);
+            for i in 0..x.len() {
+                assert_eq!(y[i].to_bits(), want[i].to_bits(), "i={i}");
+            }
+        }
+        // Unaligned output takes the fallback path and still matches.
+        let mut y2 = vec![0.0f32; x.len() + 1];
+        unsafe { pass_scale_extexp_nt::<2>(&x, 1.0 / s.m, s.n, &mut y2[1..]) };
+        for i in 0..x.len() {
+            assert_eq!(y2[1 + i].to_bits(), want[i].to_bits(), "unaligned i={i}");
+        }
+    }
+
+    #[test]
+    fn avx512_twopass_handles_overflow_range() {
+        if !have() {
+            return;
+        }
+        let x = vec![95.0f32; 513];
+        let mut y = vec![0.0f32; 513];
+        unsafe { softmax_twopass(&x, &mut y) };
+        for &v in &y {
+            assert!((v - 1.0 / 513.0).abs() < 1e-8, "{v}");
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Runtime ISA selection (the paper evaluates AVX2 and AVX512 separately;
+//! we additionally keep a portable scalar fallback).
+
+use std::fmt;
+
+/// Instruction-set architecture a kernel is specialized for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Isa {
+    /// Portable Rust (autovectorized at best).
+    Scalar,
+    /// AVX2 + FMA, 8 f32 lanes (paper's AVX2 implementation).
+    Avx2,
+    /// AVX512F, 16 f32 lanes + VSCALEFPS (paper's AVX512 implementation).
+    Avx512,
+}
+
+impl Isa {
+    /// All ISAs, in increasing capability order.
+    pub const ALL: [Isa; 3] = [Isa::Scalar, Isa::Avx2, Isa::Avx512];
+
+    /// Is this ISA usable on the current host?
+    pub fn available(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => {
+                is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+            }
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx512 => is_x86_feature_detected!("avx512f"),
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => false,
+        }
+    }
+
+    /// The most capable ISA available on this host.
+    pub fn detect_best() -> Isa {
+        if Isa::Avx512.available() {
+            Isa::Avx512
+        } else if Isa::Avx2.available() {
+            Isa::Avx2
+        } else {
+            Isa::Scalar
+        }
+    }
+
+    /// Every ISA available on this host.
+    pub fn detect_all() -> Vec<Isa> {
+        Isa::ALL.into_iter().filter(|i| i.available()).collect()
+    }
+
+    /// f32 lanes per vector register.
+    pub fn lanes(self) -> usize {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Avx2 => 8,
+            Isa::Avx512 => 16,
+        }
+    }
+}
+
+impl fmt::Display for Isa {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Isa::Scalar => write!(f, "scalar"),
+            Isa::Avx2 => write!(f, "avx2"),
+            Isa::Avx512 => write!(f, "avx512"),
+        }
+    }
+}
+
+impl std::str::FromStr for Isa {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Ok(Isa::Scalar),
+            "avx2" => Ok(Isa::Avx2),
+            "avx512" | "avx512f" => Ok(Isa::Avx512),
+            other => Err(format!("unknown ISA {other:?} (want scalar|avx2|avx512)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_always_available() {
+        assert!(Isa::Scalar.available());
+        assert!(!Isa::detect_all().is_empty());
+    }
+
+    #[test]
+    fn best_is_available() {
+        assert!(Isa::detect_best().available());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for isa in Isa::ALL {
+            let s = isa.to_string();
+            assert_eq!(s.parse::<Isa>().unwrap(), isa);
+        }
+        assert!("neon".parse::<Isa>().is_err());
+    }
+
+    #[test]
+    fn lanes_monotone() {
+        assert!(Isa::Scalar.lanes() < Isa::Avx2.lanes());
+        assert!(Isa::Avx2.lanes() < Isa::Avx512.lanes());
+    }
+}

@@ -1,0 +1,247 @@
+//! Scalar exponential primitives (paper Algorithm 4 and ExtExp).
+//!
+//! The constants here are byte-identical to the Python/Pallas layer
+//! (`python/compile/kernels/exp.py`) and to XNNPACK's released f32 `expf`,
+//! so every layer of the stack computes the same polynomial:
+//!
+//! 1. **Range reduction** (Cody–Waite): `n = round(x·log2(e))`,
+//!    `t = x − n·ln2_hi − n·ln2_lo`, with `ln2` split so the reduction is
+//!    exact for `|n| ≤ 2^22` (`ln2_hi` carries 9 trailing zero bits).
+//! 2. **Approximation**: degree-5 minimax polynomial on `[−ln2/2, ln2/2]`,
+//!    Horner scheme with FMA (`f32::mul_add`).
+//! 3. **Reconstruction**: `y = p·2^n` by exponent-field construction with a
+//!    flush-to-zero below `n = −126` (the paper's AVX2 trick; AVX512 uses
+//!    `VSCALEFPS` instead — see `avx512.rs`).
+//!
+//! [`extexp`] omits step 3, returning the `(m, n)` pair with
+//! `e^x = m·2^n` — the extended-dynamic-range representation that enables
+//! the Two-Pass softmax.
+
+/// log2(e)
+pub const LOG2E: f32 = f32::from_bits(0x3FB8_AA3B); // 0x1.715476p+0
+/// High part of ln(2) for the Cody–Waite reduction (9 trailing zero bits).
+pub const LN2_HI: f32 = f32::from_bits(0x3F31_7200); // 0x1.62E400p-1
+/// Low part of ln(2).
+pub const LN2_LO: f32 = f32::from_bits(0x35BF_BE8E); // 0x1.7F7D1Cp-20
+/// Degree-5 minimax coefficients (Sollya-produced, from XNNPACK).
+pub const C5: f32 = f32::from_bits(0x3C07_CFCE); // 0x1.0F9F9Cp-7
+pub const C4: f32 = f32::from_bits(0x3D2B_9D0D); // 0x1.573A1Ap-5
+pub const C3: f32 = f32::from_bits(0x3E2A_AD40); // 0x1.555A80p-3
+pub const C2: f32 = f32::from_bits(0x3EFF_FEE3); // 0x1.FFFDC6p-2
+pub const C1: f32 = f32::from_bits(0x3F7F_FFFB); // 0x1.FFFFF6p-1
+
+/// `2^n` flushes to zero below this exponent (subnormal flush, paper §6.3).
+pub const MIN_EXP2: f32 = -126.0;
+
+/// Saturation bound keeping the Cody–Waite reduction exact (see exp.py).
+pub const DOMAIN_BOUND: f32 = 2_097_152.0; // 2^21
+
+/// Cody–Waite range reduction: `x → (n, t)` with `e^x = e^t · 2^n`,
+/// `t ∈ [−ln2/2, ln2/2]`, `n` integral (returned as f32 — its magnitude can
+/// exceed any integer type's range only notionally; after saturation it is
+/// at most `2^21·log2(e)`).
+#[inline(always)]
+pub fn reduce_args(x: f32) -> (f32, f32) {
+    let x = x.clamp(-DOMAIN_BOUND, DOMAIN_BOUND);
+    let n = (x * LOG2E).round_ties_even();
+    let t = (-n).mul_add(LN2_HI, x);
+    let t = (-n).mul_add(LN2_LO, t);
+    (n, t)
+}
+
+/// Degree-5 Horner evaluation of the `e^t` minimax polynomial.
+#[inline(always)]
+pub fn poly_p5(t: f32) -> f32 {
+    let p = C5;
+    let p = p.mul_add(t, C4);
+    let p = p.mul_add(t, C3);
+    let p = p.mul_add(t, C2);
+    let p = p.mul_add(t, C1);
+    p.mul_add(t, 1.0)
+}
+
+/// `2^n` for integral float `n ≤ 127`, flushing to zero for `n < −126`.
+///
+/// This is the scalar equivalent of the paper's AVX2 reconstruction trick:
+/// build the f32 bit pattern `(n + 127) << 23` directly.
+#[inline(always)]
+pub fn exp2i(n: f32) -> f32 {
+    if n < MIN_EXP2 {
+        return 0.0;
+    }
+    debug_assert!(n <= 127.0, "exp2i overflow: n = {n}");
+    f32::from_bits((((n as i32) + 127) as u32) << 23)
+}
+
+/// Paper Algorithm 4: `e^x` for `x ≤ 0` (the Three-Pass softmax regime).
+///
+/// Max error < 2 ULP on the valid domain (validated exhaustively in
+/// `tests` below over a dense grid, and in python/tests/test_exp.py).
+#[inline(always)]
+pub fn exp(x: f32) -> f32 {
+    let (n, t) = reduce_args(x);
+    poly_p5(t) * exp2i(n)
+}
+
+/// ExtExp: `e^x` as `(m, n)` with `e^x = m·2^n`, no reconstruction.
+///
+/// `m ∈ [√2/2, √2]`; never overflows or underflows for any finite input.
+#[inline(always)]
+pub fn extexp(x: f32) -> (f32, f32) {
+    let (n, t) = reduce_args(x);
+    (poly_p5(t), n)
+}
+
+/// A running sum in the `(m, n)` extended-range representation:
+/// `value = m · 2^n`.  The additive identity is `(0, −∞-ish)`; we use a
+/// large negative *finite* `n` so `n_i − n_max` arithmetic never produces
+/// `∞ − ∞ = NaN` (mirrors `NEG_INIT` in the Pallas kernels).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExtSum {
+    pub m: f32,
+    pub n: f32,
+}
+
+pub const EXTSUM_NEG_INIT: f32 = -1.0e30;
+
+impl Default for ExtSum {
+    fn default() -> Self {
+        ExtSum { m: 0.0, n: EXTSUM_NEG_INIT }
+    }
+}
+
+impl ExtSum {
+    /// Fold one `e^x` term into the running sum (paper Alg. 3 inner loop).
+    /// Both rescale shifts are ≤ 0, so the accumulation cannot overflow.
+    #[inline(always)]
+    pub fn add_exp(&mut self, x: f32) {
+        let (m_i, n_i) = extexp(x);
+        self.add_pair(m_i, n_i);
+    }
+
+    /// Fold a raw `(m, n)` pair into the running sum.
+    #[inline(always)]
+    pub fn add_pair(&mut self, m_i: f32, n_i: f32) {
+        let n_max = n_i.max(self.n);
+        self.m = m_i * exp2i(n_i - n_max) + self.m * exp2i(self.n - n_max);
+        self.n = n_max;
+    }
+
+    /// Merge two running sums (used to combine SIMD-lane accumulators).
+    #[inline(always)]
+    pub fn merge(&mut self, other: ExtSum) {
+        self.add_pair(other.m, other.n);
+    }
+
+    /// The represented value, reconstructed (may overflow to `inf` if the
+    /// true value exceeds f32 range — callers normally never reconstruct,
+    /// that is the whole point of the representation).
+    pub fn value(&self) -> f32 {
+        // 2^n in two half-steps so each factor's exponent stays in range
+        // whenever the final value is representable at all.
+        let n1 = (self.n * 0.5).floor().clamp(-127.0, 127.0);
+        let n2 = (self.n - n1).clamp(-127.0, 127.0);
+        self.m * exp2i(n1) * exp2i(n2)
+    }
+
+    /// `log(m · 2^n)` without reconstruction (never overflows).
+    pub fn ln(&self) -> f32 {
+        self.m.ln() + self.n * core::f32::consts::LN_2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_matches_std_within_2ulp_on_negative_domain() {
+        // Dense grid over the softmax-relevant domain [-104, 0].
+        let mut worst = 0.0f32;
+        let mut i = 0u32;
+        while i < 1_000_000 {
+            let x = -104.0 * (i as f32 / 1_000_000.0);
+            let got = exp(x);
+            let want = (x as f64).exp();
+            if want > f32::MIN_POSITIVE as f64 {
+                let ulp = (want as f32).abs() * f32::EPSILON;
+                let err = ((got as f64 - want).abs() / ulp as f64) as f32;
+                if err > worst {
+                    worst = err;
+                }
+            }
+            i += 1;
+        }
+        assert!(worst < 2.0, "max error {worst} ULP");
+    }
+
+    #[test]
+    fn exp_flushes_to_zero_below_underflow() {
+        assert_eq!(exp(-104.0), 0.0);
+        assert_eq!(exp(-1000.0), 0.0);
+        assert_eq!(exp(-1.0e30), 0.0);
+        assert_eq!(exp(f32::MIN), 0.0);
+    }
+
+    #[test]
+    fn exp_exact_at_zero() {
+        assert_eq!(exp(0.0), 1.0);
+    }
+
+    #[test]
+    fn extexp_reconstructs_exp() {
+        for &x in &[-87.3f32, -50.0, -10.0, -1.0, -0.1, 0.0, 0.1, 1.0, 10.0, 80.0] {
+            let (m, n) = extexp(x);
+            assert!((0.7..=1.42).contains(&m), "m={m} out of [√2/2,√2] at x={x}");
+            assert_eq!(n.fract(), 0.0, "n must be integral");
+            let want = (x as f64).exp();
+            let got = (m as f64) * (n as f64).exp2();
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 1e-6, "x={x} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn extexp_handles_extreme_inputs_without_nan() {
+        for &x in &[1.0e30f32, -1.0e30, 1.0e38, -1.0e38, 3.0e4, -3.0e4] {
+            let (m, n) = extexp(x);
+            assert!(m.is_finite(), "m not finite at x={x}");
+            assert!(n.is_finite(), "n not finite at x={x}");
+        }
+    }
+
+    #[test]
+    fn extsum_accumulates_like_logsumexp() {
+        let xs = [-5.0f32, 3.0, 100.0, 100.0, -200.0, 7.5];
+        let mut s = ExtSum::default();
+        for &x in &xs {
+            s.add_exp(x);
+        }
+        let want: f64 = {
+            let mx = xs.iter().cloned().fold(f32::MIN, f32::max) as f64;
+            let sum: f64 = xs.iter().map(|&x| ((x as f64) - mx).exp()).sum();
+            sum.ln() + mx
+        };
+        assert!(((s.ln() as f64) - want).abs() < 1e-5, "{} vs {want}", s.ln());
+    }
+
+    #[test]
+    fn extsum_never_overflows_on_huge_inputs() {
+        let mut s = ExtSum::default();
+        for _ in 0..1000 {
+            s.add_exp(88.0); // e^88 overflows plain f32
+        }
+        assert!(s.m.is_finite() && s.n.is_finite());
+        let want = (88.0f64.exp() * 1000.0).ln();
+        assert!(((s.ln() as f64) - want).abs() < 1e-4);
+    }
+
+    #[test]
+    fn exp2i_matches_ldexp() {
+        for n in -126..=127 {
+            assert_eq!(exp2i(n as f32), (n as f64).exp2() as f32, "n={n}");
+        }
+        assert_eq!(exp2i(-127.0), 0.0);
+        assert_eq!(exp2i(-1.0e30), 0.0);
+    }
+}

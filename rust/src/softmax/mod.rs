@@ -1,0 +1,478 @@
+//! The paper's softmax algorithms: public API, per-pass access, dispatch.
+//!
+//! Three algorithms (paper Algorithms 1–3) × three ISAs (scalar, AVX2,
+//! AVX512F), each decomposed into the paper's *memory passes* so the
+//! benchmark harness can reproduce the per-pass Figures 3, 4 and 7.
+//!
+//! ```
+//! use two_pass_softmax::softmax::{softmax, Algorithm};
+//! let x = vec![1.0f32, 2.0, 3.0];
+//! let mut y = vec![0.0f32; 3];
+//! softmax(Algorithm::TwoPass, &x, &mut y).unwrap();
+//! assert!((y.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+//! ```
+
+pub mod avx2;
+pub mod avx512;
+pub mod dispatch;
+pub mod exp;
+pub mod online;
+pub mod scalar;
+pub mod tuning;
+
+use std::fmt;
+
+pub use dispatch::Isa;
+pub use exp::ExtSum;
+
+/// The three softmax algorithms evaluated in the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// Paper Alg. 1: three passes, `e^x` recomputed in pass 3 (4N traffic).
+    ThreePassRecompute,
+    /// Paper Alg. 2: three passes, `e^x` stored in pass 2 and reloaded (5N).
+    ThreePassReload,
+    /// Paper Alg. 3 (the contribution): two passes over the input via the
+    /// `(m, n)` extended-range representation (3N traffic).
+    TwoPass,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 3] = [
+        Algorithm::ThreePassRecompute,
+        Algorithm::ThreePassReload,
+        Algorithm::TwoPass,
+    ];
+
+    /// Memory traffic in units of N·sizeof(f32) (paper Table 2).
+    pub fn bandwidth_cost(self) -> usize {
+        match self {
+            Algorithm::ThreePassRecompute => 4,
+            Algorithm::ThreePassReload => 5,
+            Algorithm::TwoPass => 3,
+        }
+    }
+}
+
+impl fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Algorithm::ThreePassRecompute => write!(f, "threepass_recompute"),
+            Algorithm::ThreePassReload => write!(f, "threepass_reload"),
+            Algorithm::TwoPass => write!(f, "twopass"),
+        }
+    }
+}
+
+impl std::str::FromStr for Algorithm {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "threepass_recompute" | "recompute" | "alg1" => Ok(Algorithm::ThreePassRecompute),
+            "threepass_reload" | "reload" | "alg2" => Ok(Algorithm::ThreePassReload),
+            "twopass" | "alg3" => Ok(Algorithm::TwoPass),
+            other => Err(format!(
+                "unknown algorithm {other:?} (want twopass|threepass_recompute|threepass_reload)"
+            )),
+        }
+    }
+}
+
+/// Errors from the softmax entry points.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SoftmaxError {
+    EmptyInput,
+    LengthMismatch { x: usize, y: usize },
+    IsaUnavailable(Isa),
+}
+
+impl fmt::Display for SoftmaxError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SoftmaxError::EmptyInput => write!(f, "input is empty"),
+            SoftmaxError::LengthMismatch { x, y } => {
+                write!(f, "input length {x} != output length {y}")
+            }
+            SoftmaxError::IsaUnavailable(isa) => {
+                write!(f, "ISA {isa} not available on this host")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SoftmaxError {}
+
+/// Compute `y = softmax(x)` with `alg` on the best available ISA.
+pub fn softmax(alg: Algorithm, x: &[f32], y: &mut [f32]) -> Result<(), SoftmaxError> {
+    softmax_with(alg, Isa::detect_best(), x, y)
+}
+
+/// Compute `y = softmax(x)` with an explicit algorithm + ISA.
+pub fn softmax_with(
+    alg: Algorithm,
+    isa: Isa,
+    x: &[f32],
+    y: &mut [f32],
+) -> Result<(), SoftmaxError> {
+    if x.is_empty() {
+        return Err(SoftmaxError::EmptyInput);
+    }
+    if x.len() != y.len() {
+        return Err(SoftmaxError::LengthMismatch { x: x.len(), y: y.len() });
+    }
+    if !isa.available() {
+        return Err(SoftmaxError::IsaUnavailable(isa));
+    }
+    match isa {
+        Isa::Scalar => match alg {
+            Algorithm::ThreePassRecompute => scalar::softmax_threepass_recompute(x, y),
+            Algorithm::ThreePassReload => scalar::softmax_threepass_reload(x, y),
+            Algorithm::TwoPass => scalar::softmax_twopass(x, y),
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: availability checked above.
+        Isa::Avx2 => unsafe {
+            match alg {
+                Algorithm::ThreePassRecompute => avx2::softmax_threepass_recompute(x, y),
+                Algorithm::ThreePassReload => avx2::softmax_threepass_reload(x, y),
+                Algorithm::TwoPass => avx2::softmax_twopass(x, y),
+            }
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: availability checked above.
+        Isa::Avx512 => unsafe {
+            match alg {
+                Algorithm::ThreePassRecompute => avx512::softmax_threepass_recompute(x, y),
+                Algorithm::ThreePassReload => avx512::softmax_threepass_reload(x, y),
+                Algorithm::TwoPass => avx512::softmax_twopass(x, y),
+            }
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => unreachable!("non-scalar ISA unavailable on this arch"),
+    }
+    Ok(())
+}
+
+/// In-place softmax (pass structure of Alg. 2, whose last pass is naturally
+/// in place; the store-exp pass reads x[i] strictly before writing y[i]).
+pub fn softmax_inplace(x: &mut [f32]) -> Result<(), SoftmaxError> {
+    if x.is_empty() {
+        return Err(SoftmaxError::EmptyInput);
+    }
+    let isa = Isa::detect_best();
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: ISA availability by detect_best; aliasing is well-ordered
+        // (each element is read before it is overwritten at the same index).
+        Isa::Avx512 => unsafe {
+            let mu = avx512::pass_max::<4>(x);
+            let sigma = {
+                let (xs, ys) = alias_same(x);
+                avx512::pass_storeexp::<2>(xs, mu, ys)
+            };
+            avx512::pass_scale_inplace::<4>(x, 1.0 / sigma);
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Isa::Avx2 => unsafe {
+            let mu = avx2::pass_max::<4>(x);
+            let sigma = {
+                let (xs, ys) = alias_same(x);
+                avx2::pass_storeexp::<2>(xs, mu, ys)
+            };
+            avx2::pass_scale_inplace::<4>(x, 1.0 / sigma);
+        },
+        _ => {
+            let mu = scalar::pass_max(x);
+            let sigma = {
+                let (xs, ys) = alias_same(x);
+                scalar::pass_storeexp(xs, mu, ys)
+            };
+            scalar::pass_scale_inplace(x, 1.0 / sigma);
+        }
+    }
+    Ok(())
+}
+
+/// Alias a mutable slice as (input, output) for the in-place store-exp pass.
+///
+/// SAFETY: callers must only use this with passes that read `x[i]` before
+/// writing `y[i]` at the same index (true for every store/scale pass here).
+fn alias_same(x: &mut [f32]) -> (&[f32], &mut [f32]) {
+    let ptr = x.as_mut_ptr();
+    let len = x.len();
+    unsafe { (std::slice::from_raw_parts(ptr, len), std::slice::from_raw_parts_mut(ptr, len)) }
+}
+
+// ---------------------------------------------------------------------------
+// Per-pass access (figure harness + auto-tuner).
+// ---------------------------------------------------------------------------
+
+/// One memory pass of one of the paper's algorithms (Figs. 3, 4, 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Pass {
+    /// Pass 1 of Algs. 1 & 2: max-reduce. Reads N.
+    Max,
+    /// Pass 2 of Alg. 1: Σ e^(x−µ). Reads N.
+    SumExp,
+    /// Pass 2 of Alg. 2: y = e^(x−µ), Σ. Reads N, writes N.
+    StoreExp,
+    /// Pass 3 of Alg. 1: y = λ·e^(x−µ). Reads N, writes N.
+    ScaleExp,
+    /// Pass 3 of Alg. 2: y *= λ in place. Reads N, writes N.
+    ScaleInplace,
+    /// Pass 1 of Alg. 3: (m, n) accumulate. Reads N.
+    AccumExtExp,
+    /// Pass 2 of Alg. 3: y = m·λ·2^(n−n_sum). Reads N, writes N.
+    ScaleExtExp,
+}
+
+impl Pass {
+    pub const ALL: [Pass; 7] = [
+        Pass::Max,
+        Pass::SumExp,
+        Pass::StoreExp,
+        Pass::ScaleExp,
+        Pass::ScaleInplace,
+        Pass::AccumExtExp,
+        Pass::ScaleExtExp,
+    ];
+
+    /// (reads, writes) in units of N·sizeof(f32) — the Table-2 accounting.
+    pub fn traffic(self) -> (usize, usize) {
+        match self {
+            Pass::Max | Pass::SumExp | Pass::AccumExtExp => (1, 0),
+            Pass::StoreExp | Pass::ScaleExp | Pass::ScaleExtExp | Pass::ScaleInplace => (1, 1),
+        }
+    }
+
+    /// The passes composing each algorithm, in execution order.
+    pub fn of_algorithm(alg: Algorithm) -> &'static [Pass] {
+        match alg {
+            Algorithm::ThreePassRecompute => &[Pass::Max, Pass::SumExp, Pass::ScaleExp],
+            Algorithm::ThreePassReload => &[Pass::Max, Pass::StoreExp, Pass::ScaleInplace],
+            Algorithm::TwoPass => &[Pass::AccumExtExp, Pass::ScaleExtExp],
+        }
+    }
+}
+
+impl fmt::Display for Pass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Pass::Max => "max",
+            Pass::SumExp => "sum_exp",
+            Pass::StoreExp => "store_exp",
+            Pass::ScaleExp => "scale_exp",
+            Pass::ScaleInplace => "scale_inplace",
+            Pass::AccumExtExp => "accum_extexp",
+            Pass::ScaleExtExp => "scale_extexp",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Scalar operands a standalone pass consumes (µ from pass 1, λ and n_sum
+/// from the reductions).  Benchmarks precompute these ONCE so per-pass
+/// timings measure only the pass itself.
+#[derive(Debug, Clone, Copy)]
+pub struct PassOps {
+    pub mu: f32,
+    pub lam: f32,
+    pub n_sum: f32,
+}
+
+impl Default for PassOps {
+    fn default() -> Self {
+        PassOps { mu: 0.0, lam: 0.5, n_sum: 4.0 }
+    }
+}
+
+impl PassOps {
+    /// Operands derived from the input the way the real algorithms do.
+    pub fn for_input(x: &[f32]) -> PassOps {
+        let mu = x.iter().cloned().fold(f32::MIN, f32::max);
+        PassOps { mu, lam: 0.5, n_sum: 4.0 }
+    }
+}
+
+/// Run one pass in isolation with explicit ISA and unroll factor.
+///
+/// `x` is the input; `y` is scratch/output of the same length. Returns the
+/// pass's scalar result when it has one (µ, σ, or ln of the ExtSum).
+/// Unroll factors ∈ {1, 2, 4, 8}; other values snap down.
+///
+/// Computes the µ operand from `x` when the pass consumes it; benchmarks
+/// that must not pay that extra traversal use [`run_pass_with`].
+pub fn run_pass(
+    pass: Pass,
+    isa: Isa,
+    unroll: usize,
+    x: &[f32],
+    y: &mut [f32],
+) -> Result<f32, SoftmaxError> {
+    let ops = match pass {
+        Pass::SumExp | Pass::StoreExp | Pass::ScaleExp => PassOps::for_input(x),
+        _ => PassOps::default(),
+    };
+    run_pass_with(pass, isa, unroll, x, y, ops)
+}
+
+/// [`run_pass`] with caller-supplied scalar operands (no hidden traversals).
+pub fn run_pass_with(
+    pass: Pass,
+    isa: Isa,
+    unroll: usize,
+    x: &[f32],
+    y: &mut [f32],
+    ops: PassOps,
+) -> Result<f32, SoftmaxError> {
+    if x.is_empty() {
+        return Err(SoftmaxError::EmptyInput);
+    }
+    if x.len() != y.len() {
+        return Err(SoftmaxError::LengthMismatch { x: x.len(), y: y.len() });
+    }
+    if !isa.available() {
+        return Err(SoftmaxError::IsaUnavailable(isa));
+    }
+    let PassOps { mu, lam, n_sum } = ops;
+
+    macro_rules! on_simd {
+        ($m:ident) => {{
+            macro_rules! with_unroll {
+                ($u:literal) => {
+                    match pass {
+                        Pass::Max => $m::pass_max::<$u>(x),
+                        Pass::SumExp => $m::pass_sumexp::<$u>(x, mu),
+                        Pass::StoreExp => $m::pass_storeexp::<$u>(x, mu, y),
+                        Pass::ScaleExp => {
+                            $m::pass_scaleexp::<$u>(x, mu, lam, y);
+                            0.0
+                        }
+                        Pass::ScaleInplace => {
+                            $m::pass_scale_inplace::<$u>(y, lam);
+                            0.0
+                        }
+                        Pass::AccumExtExp => $m::pass_accum_extexp::<$u>(x).ln(),
+                        Pass::ScaleExtExp => {
+                            $m::pass_scale_extexp::<$u>(x, lam, n_sum, y);
+                            0.0
+                        }
+                    }
+                };
+            }
+            match unroll {
+                0 | 1 => with_unroll!(1),
+                2 | 3 => with_unroll!(2),
+                4..=7 => with_unroll!(4),
+                _ => with_unroll!(8),
+            }
+        }};
+    }
+
+    let out = match isa {
+        Isa::Scalar => match pass {
+            Pass::Max => scalar::pass_max(x),
+            Pass::SumExp => scalar::pass_sumexp(x, mu),
+            Pass::StoreExp => scalar::pass_storeexp(x, mu, y),
+            Pass::ScaleExp => {
+                scalar::pass_scaleexp(x, mu, lam, y);
+                0.0
+            }
+            Pass::ScaleInplace => {
+                scalar::pass_scale_inplace(y, lam);
+                0.0
+            }
+            Pass::AccumExtExp => scalar::pass_accum_extexp(x).ln(),
+            Pass::ScaleExtExp => {
+                scalar::pass_scale_extexp(x, lam, n_sum, y);
+                0.0
+            }
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: availability checked above.
+        Isa::Avx2 => unsafe { on_simd!(avx2) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: availability checked above.
+        Isa::Avx512 => unsafe { on_simd!(avx512) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => unreachable!(),
+    };
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn api_validates_inputs() {
+        let mut y = vec![0.0f32; 2];
+        assert_eq!(softmax(Algorithm::TwoPass, &[], &mut []), Err(SoftmaxError::EmptyInput));
+        assert_eq!(
+            softmax(Algorithm::TwoPass, &[1.0], &mut y),
+            Err(SoftmaxError::LengthMismatch { x: 1, y: 2 })
+        );
+        assert!(softmax_inplace(&mut []).is_err());
+    }
+
+    #[test]
+    fn all_algorithms_all_isas_agree() {
+        let x: Vec<f32> = (0..1000).map(|i| ((i % 97) as f32) * 0.3 - 15.0).collect();
+        let mut reference = vec![0.0f32; x.len()];
+        softmax_with(Algorithm::ThreePassRecompute, Isa::Scalar, &x, &mut reference).unwrap();
+        for alg in Algorithm::ALL {
+            for isa in Isa::detect_all() {
+                let mut y = vec![0.0f32; x.len()];
+                softmax_with(alg, isa, &x, &mut y).unwrap();
+                for i in 0..x.len() {
+                    assert!(
+                        (y[i] - reference[i]).abs() < 1e-6,
+                        "{alg}/{isa} i={i}: {} vs {}",
+                        y[i],
+                        reference[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inplace_matches_out_of_place() {
+        let x: Vec<f32> = (0..333).map(|i| (i as f32).sin() * 8.0).collect();
+        let mut y = vec![0.0f32; x.len()];
+        softmax(Algorithm::ThreePassReload, &x, &mut y).unwrap();
+        let mut z = x.clone();
+        softmax_inplace(&mut z).unwrap();
+        for i in 0..x.len() {
+            assert!((y[i] - z[i]).abs() < 1e-7, "i={i}");
+        }
+    }
+
+    #[test]
+    fn run_pass_works_for_all_combos() {
+        let x: Vec<f32> = (0..130).map(|i| (i as f32) * 0.1 - 6.0).collect();
+        for isa in Isa::detect_all() {
+            for pass in Pass::ALL {
+                for unroll in [1usize, 2, 4, 8] {
+                    let mut y = x.clone();
+                    run_pass(pass, isa, unroll, &x, &mut y).unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn traffic_model_matches_table2() {
+        for alg in Algorithm::ALL {
+            let total: usize = Pass::of_algorithm(alg)
+                .iter()
+                .map(|p| {
+                    let (r, w) = p.traffic();
+                    r + w
+                })
+                .sum();
+            assert_eq!(total, alg.bandwidth_cost(), "{alg}");
+        }
+    }
+}

@@ -1,0 +1,346 @@
+//! EXTENSION — Online Softmax (Milakov & Gimelshein, 2018) as an ablation.
+//!
+//! The natural competitor to the paper's Two-Pass algorithm: it also needs
+//! only **2 reads + 1 write** (3N traffic, same as Table 2's two-pass row),
+//! but gets there differently — a *running* `(max, sum)` pair where the sum
+//! is rescaled by `e^(m_old − m_new)` whenever the running max grows:
+//!
+//! ```text
+//! m ← max(m, x_i);   s ← s·e^(m_old − m)  +  e^(x_i − m)
+//! ```
+//!
+//! versus the paper's `(m, n)` representation, which rescales with *integer
+//! exponent arithmetic* (`·2^(n−n_max)`, one VSCALEFPS) instead of a second
+//! full `e^x` evaluation.  Both are overflow-free single-reduction-pass
+//! algorithms; the ablation (`cargo bench --bench softmax_sweep`, column in
+//! `repro figures fig5 --ablation`… see `ext_online` bench) quantifies the
+//! compute saving of the paper's trick at equal memory traffic.
+//!
+//! Not part of the paper's evaluated triad, so it lives outside the
+//! [`Algorithm`](crate::softmax::Algorithm) enum.
+
+use super::exp::{exp, DOMAIN_BOUND};
+
+/// Scalar online softmax: one fused (max, sum) pass + one scale pass.
+pub fn softmax_online(x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    let (m, s) = pass_online_accum(x);
+    let lam = 1.0 / s;
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        *yi = lam * exp(xi - m);
+    }
+}
+
+/// Pass 1: fused running (max, sum). Reads N.
+pub fn pass_online_accum(x: &[f32]) -> (f32, f32) {
+    // 4 independent (m, s) accumulators, like the other reduction passes.
+    let mut m = [f32::MIN; 4];
+    let mut s = [0.0f32; 4];
+    let mut chunks = x.chunks_exact(4);
+    for c in &mut chunks {
+        for k in 0..4 {
+            let xi = c[k].clamp(-DOMAIN_BOUND, DOMAIN_BOUND);
+            if xi > m[k] {
+                s[k] = s[k] * exp(m[k] - xi) + 1.0;
+                m[k] = xi;
+            } else {
+                s[k] += exp(xi - m[k]);
+            }
+        }
+    }
+    for &v in chunks.remainder() {
+        let xi = v.clamp(-DOMAIN_BOUND, DOMAIN_BOUND);
+        if xi > m[0] {
+            s[0] = s[0] * exp(m[0] - xi) + 1.0;
+            m[0] = xi;
+        } else {
+            s[0] += exp(xi - m[0]);
+        }
+    }
+    // Merge lane accumulators.
+    let mut mm = m[0];
+    let mut ss = s[0];
+    for k in 1..4 {
+        let m_new = mm.max(m[k]);
+        ss = ss * exp(mm - m_new) + s[k] * exp(m[k] - m_new);
+        mm = m_new;
+    }
+    (mm, ss)
+}
+
+#[cfg(target_arch = "x86_64")]
+pub mod simd {
+    //! AVX512 (and AVX2) online softmax — branchless: rescale every step,
+    //! like the SIMD formulations in flash-attention kernels.
+    #![allow(unsafe_op_in_unsafe_fn)]
+
+    use core::arch::x86_64::*;
+
+    use crate::softmax::exp::{C1, C2, C3, C4, C5, DOMAIN_BOUND, LN2_HI, LN2_LO, LOG2E};
+
+    const LANES: usize = 16;
+    const RN: i32 = 0x08;
+
+    #[inline(always)]
+    unsafe fn vexp(x: __m512) -> __m512 {
+        let x = _mm512_max_ps(x, _mm512_set1_ps(-DOMAIN_BOUND));
+        let x = _mm512_min_ps(x, _mm512_set1_ps(DOMAIN_BOUND));
+        let n = _mm512_roundscale_ps::<RN>(_mm512_mul_ps(x, _mm512_set1_ps(LOG2E)));
+        let t = _mm512_fnmadd_ps(n, _mm512_set1_ps(LN2_HI), x);
+        let t = _mm512_fnmadd_ps(n, _mm512_set1_ps(LN2_LO), t);
+        let p = _mm512_set1_ps(C5);
+        let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(C4));
+        let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(C3));
+        let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(C2));
+        let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(C1));
+        let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(1.0));
+        _mm512_scalef_ps(p, n)
+    }
+
+    /// Pass 1 with `U` independent (m, s) vector accumulator pairs.
+    ///
+    /// # Safety
+    /// Requires AVX512F (checked by callers via `Isa::Avx512.available()`).
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn pass_online_accum<const U: usize>(x: &[f32]) -> (f32, f32) {
+        let mut vm = [_mm512_set1_ps(f32::MIN); U];
+        let mut vs = [_mm512_setzero_ps(); U];
+        let stride = LANES * U;
+        let mut p = x.as_ptr();
+        let mut rem = x.len();
+        while rem >= stride {
+            for k in 0..U {
+                let xv = _mm512_loadu_ps(p.add(k * LANES));
+                let m_new = _mm512_max_ps(vm[k], xv);
+                // Branchless rescale-every-step: two e^delta per vector.
+                let scale_old = vexp(_mm512_sub_ps(vm[k], m_new));
+                let term_new = vexp(_mm512_sub_ps(xv, m_new));
+                vs[k] = _mm512_fmadd_ps(vs[k], scale_old, term_new);
+                vm[k] = m_new;
+            }
+            p = p.add(stride);
+            rem -= stride;
+        }
+        while rem >= LANES {
+            let xv = _mm512_loadu_ps(p);
+            let m_new = _mm512_max_ps(vm[0], xv);
+            let scale_old = vexp(_mm512_sub_ps(vm[0], m_new));
+            let term_new = vexp(_mm512_sub_ps(xv, m_new));
+            vs[0] = _mm512_fmadd_ps(vs[0], scale_old, term_new);
+            vm[0] = m_new;
+            p = p.add(LANES);
+            rem -= LANES;
+        }
+        // Lane + accumulator merge in scalar.
+        let mut mm = f32::MIN;
+        let mut ss = 0.0f32;
+        for k in 0..U {
+            let mut ms = [0.0f32; LANES];
+            let mut sss = [0.0f32; LANES];
+            _mm512_storeu_ps(ms.as_mut_ptr(), vm[k]);
+            _mm512_storeu_ps(sss.as_mut_ptr(), vs[k]);
+            for l in 0..LANES {
+                let m_new = mm.max(ms[l]);
+                ss = ss * crate::softmax::exp::exp(mm - m_new)
+                    + sss[l] * crate::softmax::exp::exp(ms[l] - m_new);
+                mm = m_new;
+            }
+        }
+        for i in 0..rem {
+            let xi = (*p.add(i)).clamp(-DOMAIN_BOUND, DOMAIN_BOUND);
+            let m_new = mm.max(xi);
+            ss = ss * crate::softmax::exp::exp(mm - m_new)
+                + crate::softmax::exp::exp(xi - m_new);
+            mm = m_new;
+        }
+        (mm, ss)
+    }
+
+    /// Full online softmax, AVX512 (pass 2 reuses the tuned scale-exp pass).
+    ///
+    /// # Safety
+    /// Requires AVX512F.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn softmax_online(x: &[f32], y: &mut [f32]) {
+        let (m, s) = pass_online_accum::<8>(x);
+        crate::softmax::avx512::pass_scaleexp::<8>(x, m, 1.0 / s, y);
+    }
+
+    /// AVX2 variant (8-lane; the rescale costs two of the integer-trick
+    /// exponentials per vector instead of two VSCALEFPS).
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn pass_online_accum_avx2<const U: usize>(x: &[f32]) -> (f32, f32) {
+        use crate::softmax::exp::exp as sexp;
+        let mut vm = [_mm256_set1_ps(f32::MIN); U];
+        let mut vs = [_mm256_setzero_ps(); U];
+        let stride = 8 * U;
+        let mut p = x.as_ptr();
+        let mut rem = x.len();
+        while rem >= stride {
+            for k in 0..U {
+                let xv = _mm256_loadu_ps(p.add(k * 8));
+                let m_new = _mm256_max_ps(vm[k], xv);
+                let scale_old = vexp256(_mm256_sub_ps(vm[k], m_new));
+                let term_new = vexp256(_mm256_sub_ps(xv, m_new));
+                vs[k] = _mm256_fmadd_ps(vs[k], scale_old, term_new);
+                vm[k] = m_new;
+            }
+            p = p.add(stride);
+            rem -= stride;
+        }
+        let mut mm = f32::MIN;
+        let mut ss = 0.0f32;
+        for k in 0..U {
+            let mut ms = [0.0f32; 8];
+            let mut sss = [0.0f32; 8];
+            _mm256_storeu_ps(ms.as_mut_ptr(), vm[k]);
+            _mm256_storeu_ps(sss.as_mut_ptr(), vs[k]);
+            for l in 0..8 {
+                let m_new = mm.max(ms[l]);
+                ss = ss * sexp(mm - m_new) + sss[l] * sexp(ms[l] - m_new);
+                mm = m_new;
+            }
+        }
+        for i in 0..rem {
+            let xi = (*p.add(i)).clamp(-DOMAIN_BOUND, DOMAIN_BOUND);
+            let m_new = mm.max(xi);
+            ss = ss * sexp(mm - m_new) + sexp(xi - m_new);
+            mm = m_new;
+        }
+        (mm, ss)
+    }
+
+    #[inline(always)]
+    unsafe fn vexp256(x: __m256) -> __m256 {
+        let x = _mm256_max_ps(x, _mm256_set1_ps(-DOMAIN_BOUND));
+        let x = _mm256_min_ps(x, _mm256_set1_ps(DOMAIN_BOUND));
+        let n = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(
+            _mm256_mul_ps(x, _mm256_set1_ps(LOG2E)),
+        );
+        let t = _mm256_fnmadd_ps(n, _mm256_set1_ps(LN2_HI), x);
+        let t = _mm256_fnmadd_ps(n, _mm256_set1_ps(LN2_LO), t);
+        let p = _mm256_set1_ps(C5);
+        let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(C4));
+        let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(C3));
+        let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(C2));
+        let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(C1));
+        let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(1.0));
+        // Reconstruction via the AVX2 integer trick (deltas are <= 0).
+        let clamped = _mm256_max_ps(n, _mm256_set1_ps(-127.0));
+        let bits = _mm256_slli_epi32::<23>(_mm256_add_epi32(
+            _mm256_cvtps_epi32(clamped),
+            _mm256_set1_epi32(127),
+        ));
+        let s = _mm256_castsi256_ps(bits);
+        let keep = _mm256_cmp_ps::<_CMP_GE_OQ>(n, _mm256_set1_ps(-126.0));
+        _mm256_mul_ps(p, _mm256_and_ps(s, keep))
+    }
+
+    /// Full online softmax, AVX2.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn softmax_online_avx2(x: &[f32], y: &mut [f32]) {
+        let (m, s) = pass_online_accum_avx2::<8>(x);
+        crate::softmax::avx2::pass_scaleexp::<8>(x, m, 1.0 / s, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ref_softmax(x: &[f32]) -> Vec<f32> {
+        let mu = x.iter().cloned().fold(f64::MIN, |a, v| a.max(v as f64));
+        let e: Vec<f64> = x.iter().map(|&v| ((v as f64) - mu).exp()).collect();
+        let s: f64 = e.iter().sum();
+        e.iter().map(|&v| (v / s) as f32).collect()
+    }
+
+    fn inputs(n: usize, scale: f32, shift: f32) -> Vec<f32> {
+        (0..n).map(|i| (((i * 2654435761) % 1000) as f32 / 50.0 - 10.0) * scale + shift).collect()
+    }
+
+    #[test]
+    fn scalar_online_matches_reference() {
+        for n in [1usize, 3, 4, 5, 100, 1000, 4099] {
+            for (scale, shift) in [(1.0, 0.0), (5.0, 90.0), (2.0, -500.0)] {
+                let x = inputs(n, scale, shift);
+                let mut y = vec![0.0f32; n];
+                softmax_online(&x, &mut y);
+                let want = ref_softmax(&x);
+                for i in 0..n {
+                    assert!(
+                        (y[i] - want[i]).abs() < 3e-6,
+                        "n={n} scale={scale} i={i}: {} vs {}",
+                        y[i],
+                        want[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn online_handles_ascending_and_descending_maxima() {
+        // Ascending: the rescale path fires every step.
+        let asc: Vec<f32> = (0..300).map(|i| i as f32 * 0.5).collect();
+        let desc: Vec<f32> = asc.iter().rev().cloned().collect();
+        for x in [asc, desc] {
+            let mut y = vec![0.0f32; x.len()];
+            softmax_online(&x, &mut y);
+            let want = ref_softmax(&x);
+            for i in 0..x.len() {
+                assert!((y[i] - want[i]).abs() < 3e-6, "i={i}");
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_online_matches_scalar() {
+        if !(is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")) {
+            return;
+        }
+        for n in [8usize, 9, 100, 1000, 4099] {
+            let x = inputs(n, 2.0, -30.0);
+            let mut y = vec![0.0f32; n];
+            unsafe { simd::softmax_online_avx2(&x, &mut y) };
+            let want = ref_softmax(&x);
+            for i in 0..n {
+                assert!((y[i] - want[i]).abs() < 3e-6, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx512_online_matches_scalar() {
+        if !is_x86_feature_detected!("avx512f") {
+            return;
+        }
+        for n in [16usize, 17, 128, 1000, 5000] {
+            let x = inputs(n, 3.0, 50.0);
+            let mut y = vec![0.0f32; n];
+            unsafe { simd::softmax_online(&x, &mut y) };
+            let want = ref_softmax(&x);
+            for i in 0..n {
+                assert!((y[i] - want[i]).abs() < 3e-6, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn online_is_overflow_free() {
+        let x = vec![120.0f32; 512]; // e^120 = inf in f32
+        let mut y = vec![0.0f32; 512];
+        softmax_online(&x, &mut y);
+        for &v in &y {
+            assert!((v - 1.0 / 512.0).abs() < 1e-8);
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Scalar (portable) implementations of the three softmax algorithms.
+//!
+//! These serve three purposes: the correctness reference the SIMD paths are
+//! property-tested against, the fallback on non-x86 hosts, and the baseline
+//! the auto-tuner compares vector variants to.
+//!
+//! Each *memory pass* of the paper is a standalone function so the figure
+//! harness (Figs 3, 4, 7) can time passes individually; the full algorithms
+//! are compositions of passes, exactly like the paper's implementation.
+
+use super::exp::{exp, extexp, ExtSum};
+
+/// Pass 1 (Algs. 1 & 2): max-reduction over the input. Reads `x` once.
+pub fn pass_max(x: &[f32]) -> f32 {
+    // Multiple accumulators break the dependency chain (the paper's
+    // "number of accumulator variables" meta-parameter; 4 is the tuned
+    // scalar value — see tuning.rs for the measured alternatives).
+    let mut acc = [f32::MIN; 4];
+    let mut chunks = x.chunks_exact(4);
+    for c in &mut chunks {
+        acc[0] = acc[0].max(c[0]);
+        acc[1] = acc[1].max(c[1]);
+        acc[2] = acc[2].max(c[2]);
+        acc[3] = acc[3].max(c[3]);
+    }
+    for &v in chunks.remainder() {
+        acc[0] = acc[0].max(v);
+    }
+    acc[0].max(acc[1]).max(acc[2].max(acc[3]))
+}
+
+/// Pass 2 of Alg. 1: `Σ e^(x_i − µ)`. Reads `x` once, writes nothing.
+pub fn pass_sumexp(x: &[f32], mu: f32) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let mut chunks = x.chunks_exact(4);
+    for c in &mut chunks {
+        acc[0] += exp(c[0] - mu);
+        acc[1] += exp(c[1] - mu);
+        acc[2] += exp(c[2] - mu);
+        acc[3] += exp(c[3] - mu);
+    }
+    for &v in chunks.remainder() {
+        acc[0] += exp(v - mu);
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3])
+}
+
+/// Pass 2 of Alg. 2: `y_i = e^(x_i − µ)`, returning the sum.
+/// Reads `x`, writes `y`.
+pub fn pass_storeexp(x: &[f32], mu: f32, y: &mut [f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f32;
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        let e = exp(xi - mu);
+        *yi = e;
+        acc += e;
+    }
+    acc
+}
+
+/// Pass 3 of Alg. 1: `y_i = λ·e^(x_i − µ)`. Reads `x`, writes `y`.
+pub fn pass_scaleexp(x: &[f32], mu: f32, lam: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        *yi = lam * exp(xi - mu);
+    }
+}
+
+/// Pass 3 of Alg. 2: in-place `y_i *= λ` (STREAM-Scale-like, in place).
+pub fn pass_scale_inplace(y: &mut [f32], lam: f32) {
+    for yi in y.iter_mut() {
+        *yi *= lam;
+    }
+}
+
+/// Pass 1 of Alg. 3: accumulate `Σ e^(x_i)` in the `(m, n)` representation.
+/// Reads `x` once; no max pass needed, cannot overflow.
+pub fn pass_accum_extexp(x: &[f32]) -> ExtSum {
+    let mut acc = [ExtSum::default(); 4];
+    let mut chunks = x.chunks_exact(4);
+    for c in &mut chunks {
+        acc[0].add_exp(c[0]);
+        acc[1].add_exp(c[1]);
+        acc[2].add_exp(c[2]);
+        acc[3].add_exp(c[3]);
+    }
+    for &v in chunks.remainder() {
+        acc[0].add_exp(v);
+    }
+    let mut s = acc[0];
+    s.merge(acc[1]);
+    s.merge(acc[2]);
+    s.merge(acc[3]);
+    s
+}
+
+/// Pass 2 of Alg. 3: `y_i = m_i · λ · 2^(n_i − n_sum)`. Reads `x`, writes `y`.
+pub fn pass_scale_extexp(x: &[f32], lam: f32, n_sum: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        let (m_i, n_i) = extexp(*xi);
+        *yi = m_i * lam * super::exp::exp2i(n_i - n_sum);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full algorithms (compositions of the passes above).
+// ---------------------------------------------------------------------------
+
+/// Paper Algorithm 1: Three-Pass with recomputation. 3 reads + 1 write.
+pub fn softmax_threepass_recompute(x: &[f32], y: &mut [f32]) {
+    let mu = pass_max(x);
+    let sigma = pass_sumexp(x, mu);
+    pass_scaleexp(x, mu, 1.0 / sigma, y);
+}
+
+/// Paper Algorithm 2: Three-Pass with reloading. 3 reads + 2 writes.
+pub fn softmax_threepass_reload(x: &[f32], y: &mut [f32]) {
+    let mu = pass_max(x);
+    let sigma = pass_storeexp(x, mu, y);
+    pass_scale_inplace(y, 1.0 / sigma);
+}
+
+/// Paper Algorithm 3: Two-Pass. 2 reads + 1 write.
+pub fn softmax_twopass(x: &[f32], y: &mut [f32]) {
+    let s = pass_accum_extexp(x);
+    pass_scale_extexp(x, 1.0 / s.m, s.n, y);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ref_softmax(x: &[f32]) -> Vec<f32> {
+        let mu = x.iter().cloned().fold(f64::MIN, |a, v| a.max(v as f64));
+        let e: Vec<f64> = x.iter().map(|&v| ((v as f64) - mu).exp()).collect();
+        let s: f64 = e.iter().sum();
+        e.iter().map(|&v| (v / s) as f32).collect()
+    }
+
+    fn check_all(x: &[f32], tol: f32) {
+        let want = ref_softmax(x);
+        for (name, f) in [
+            ("recompute", softmax_threepass_recompute as fn(&[f32], &mut [f32])),
+            ("reload", softmax_threepass_reload),
+            ("twopass", softmax_twopass),
+        ] {
+            let mut y = vec![0.0f32; x.len()];
+            f(x, &mut y);
+            let sum: f32 = y.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "{name}: Σy = {sum}");
+            for (i, (&got, &w)) in y.iter().zip(&want).enumerate() {
+                assert!(
+                    (got - w).abs() <= tol,
+                    "{name}[{i}]: got {got}, want {w} (x={})",
+                    x[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_reference_on_random_inputs() {
+        let mut state = 0x1234_5678u64;
+        let mut rnd = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f32 / (1u64 << 31) as f32 - 0.5) * 20.0
+        };
+        for n in [1usize, 2, 3, 7, 8, 64, 1000, 4096] {
+            let x: Vec<f32> = (0..n).map(|_| rnd()).collect();
+            check_all(&x, 1e-6);
+        }
+    }
+
+    #[test]
+    fn handles_large_magnitude_inputs() {
+        check_all(&[1000.0, 999.0, -1000.0, 998.5], 1e-6);
+        check_all(&[-5000.0, -5001.0, -4999.5], 1e-6);
+        check_all(&[88.0; 100], 1e-6); // e^88 overflows plain f32
+    }
+
+    #[test]
+    fn handles_constant_and_single() {
+        check_all(&[0.0; 17], 1e-7);
+        check_all(&[42.0], 1e-7);
+    }
+
+    #[test]
+    fn twopass_stable_where_naive_overflows() {
+        // All inputs > 89: naive Σe^x = inf. Two-pass must not care.
+        let x = vec![100.0f32; 1024];
+        let mut y = vec![0.0f32; 1024];
+        softmax_twopass(&x, &mut y);
+        for &v in &y {
+            assert!((v - 1.0 / 1024.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn per_pass_composition_equals_full() {
+        let x: Vec<f32> = (0..513).map(|i| ((i * 37) % 100) as f32 / 10.0 - 5.0).collect();
+        let mu = pass_max(&x);
+        assert_eq!(mu, x.iter().cloned().fold(f32::MIN, f32::max));
+        let sigma_a = pass_sumexp(&x, mu);
+        let mut tmp = vec![0.0f32; x.len()];
+        let sigma_b = pass_storeexp(&x, mu, &mut tmp);
+        assert!((sigma_a - sigma_b).abs() / sigma_a < 1e-6);
+        let s = pass_accum_extexp(&x);
+        let lse = s.ln();
+        let want_lse = sigma_a.ln() + mu;
+        assert!((lse - want_lse).abs() < 1e-4, "{lse} vs {want_lse}");
+    }
+}

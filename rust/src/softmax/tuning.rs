@@ -1,0 +1,195 @@
+//! Auto-tuning of the unroll/accumulator meta-parameter (paper §6.3).
+//!
+//! The paper expresses "high-level optimization parameters, such as unroll
+//! factor for the loops and the number of accumulator variables in
+//! reduction functions, as meta-parameters of the templated implementations,
+//! and employ[s] auto-tuning to discover their optimal values."  This module
+//! is that auto-tuner: it times every `(pass, isa, unroll)` combination on a
+//! caller-supplied working-set size and reports the winners.
+//!
+//! The tuned table can be persisted to a plain-text table (see `repro tune
+//! --save`) and is consumed
+//! by the figure harness so every reported number uses the best variant —
+//! exactly the paper's protocol.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use super::{run_pass_with, Isa, Pass, PassOps};
+
+/// Unroll factors explored by the tuner (vectors per loop iteration).
+pub const UNROLLS: [usize; 4] = [1, 2, 4, 8];
+
+/// Result of tuning one (pass, isa) pair.
+#[derive(Debug, Clone)]
+pub struct TuneEntry {
+    pub pass: Pass,
+    pub isa: Isa,
+    pub n: usize,
+    /// ns/element for each unroll factor in [`UNROLLS`] order.
+    pub ns_per_elem: Vec<f64>,
+    /// The winning unroll factor.
+    pub best_unroll: usize,
+}
+
+/// A complete tuning table for one host.
+#[derive(Debug, Clone, Default)]
+pub struct TuneTable {
+    pub entries: Vec<TuneEntry>,
+}
+
+impl TuneTable {
+    /// Winning unroll for a (pass, isa), or the library default.
+    pub fn best(&self, pass: Pass, isa: Isa) -> usize {
+        self.entries
+            .iter()
+            .find(|e| e.pass == pass && e.isa == isa)
+            .map(|e| e.best_unroll)
+            .unwrap_or(DEFAULT_UNROLL)
+    }
+
+    /// Serialize to a simple line format: `pass isa n best ns...` per row
+    /// (no external TOML/JSON crates are available offline; see DESIGN.md).
+    pub fn to_text(&self) -> String {
+        let mut out = String::from("# pass isa n best_unroll ns_per_elem...\n");
+        for e in &self.entries {
+            out.push_str(&format!("{} {} {} {}", e.pass, e.isa, e.n, e.best_unroll));
+            for v in &e.ns_per_elem {
+                out.push_str(&format!(" {v:.4}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn from_text(s: &str) -> Result<Self, String> {
+        let mut entries = Vec::new();
+        for line in s.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let pass: Pass = parse_pass(it.next().ok_or("missing pass")?)?;
+            let isa: Isa = it.next().ok_or("missing isa")?.parse()?;
+            let n: usize = it.next().ok_or("missing n")?.parse().map_err(|e| format!("{e}"))?;
+            let best_unroll: usize =
+                it.next().ok_or("missing best")?.parse().map_err(|e| format!("{e}"))?;
+            let ns_per_elem: Vec<f64> =
+                it.map(|v| v.parse::<f64>().map_err(|e| format!("{e}"))).collect::<Result<_, _>>()?;
+            entries.push(TuneEntry { pass, isa, n, ns_per_elem, best_unroll });
+        }
+        Ok(TuneTable { entries })
+    }
+}
+
+/// Library default when no tuning data exists (measured good on Skylake-era
+/// cores for both reduction and scale passes).
+pub const DEFAULT_UNROLL: usize = 2;
+
+/// Static per-pass defaults measured on the reference host (see
+/// EXPERIMENTS.md §Perf): the latency-chained reduction passes want deep
+/// unrolling; pure-bandwidth passes are insensitive.
+pub fn default_best_unroll(pass: Pass, _isa: Isa) -> usize {
+    match pass {
+        Pass::Max => 4,
+        Pass::StoreExp => 2,
+        Pass::SumExp | Pass::ScaleExp | Pass::ScaleInplace => 8,
+        Pass::AccumExtExp | Pass::ScaleExtExp => 8,
+    }
+}
+
+/// Time one pass variant: median of `reps` runs over the same buffers.
+pub fn time_pass(pass: Pass, isa: Isa, unroll: usize, n: usize, reps: usize) -> f64 {
+    let x: Vec<f32> = (0..n).map(|i| ((i * 31) % 200) as f32 * 0.05 - 5.0).collect();
+    let mut y = vec![0.0f32; n];
+    let ops = PassOps::for_input(&x); // precomputed: not part of the timing
+    // Warm-up (page in buffers, train the branch predictors).
+    let _ = run_pass_with(pass, isa, unroll, &x, &mut y, ops);
+    let mut samples: Vec<f64> = (0..reps.max(3))
+        .map(|_| {
+            let t0 = Instant::now();
+            let r = run_pass_with(pass, isa, unroll, &x, &mut y, ops);
+            let dt = t0.elapsed().as_secs_f64();
+            std::hint::black_box(r.ok());
+            dt * 1e9 / n as f64
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// Tune one (pass, isa) across all unroll factors.
+pub fn tune_pass(pass: Pass, isa: Isa, n: usize, reps: usize) -> TuneEntry {
+    let ns_per_elem: Vec<f64> =
+        UNROLLS.iter().map(|&u| time_pass(pass, isa, u, n, reps)).collect();
+    let best_idx = ns_per_elem
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    TuneEntry { pass, isa, n, ns_per_elem, best_unroll: UNROLLS[best_idx] }
+}
+
+/// Tune every pass on every available ISA.
+pub fn tune_all(n: usize, reps: usize) -> TuneTable {
+    let mut entries = Vec::new();
+    for isa in Isa::detect_all() {
+        for pass in Pass::ALL {
+            entries.push(tune_pass(pass, isa, n, reps));
+        }
+    }
+    TuneTable { entries }
+}
+
+/// Per-(pass, isa) speedup of the tuned variant over unroll=1, useful as an
+/// ablation of the paper's auto-tuning claim.
+pub fn tuning_gains(table: &TuneTable) -> HashMap<(Pass, Isa), f64> {
+    table
+        .entries
+        .iter()
+        .map(|e| {
+            let base = e.ns_per_elem[0];
+            let best = e.ns_per_elem[UNROLLS.iter().position(|&u| u == e.best_unroll).unwrap()];
+            ((e.pass, e.isa), base / best)
+        })
+        .collect()
+}
+
+fn parse_pass(s: &str) -> Result<Pass, String> {
+    Ok(match s {
+        "max" => Pass::Max,
+        "sum_exp" => Pass::SumExp,
+        "store_exp" => Pass::StoreExp,
+        "scale_exp" => Pass::ScaleExp,
+        "scale_inplace" => Pass::ScaleInplace,
+        "accum_extexp" => Pass::AccumExtExp,
+        "scale_extexp" => Pass::ScaleExtExp,
+        other => return Err(format!("unknown pass {other:?}")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tune_single_pass_produces_valid_entry() {
+        let e = tune_pass(Pass::Max, Isa::Scalar, 4096, 3);
+        assert_eq!(e.ns_per_elem.len(), UNROLLS.len());
+        assert!(UNROLLS.contains(&e.best_unroll));
+        assert!(e.ns_per_elem.iter().all(|&v| v > 0.0 && v.is_finite()));
+    }
+
+    #[test]
+    fn table_roundtrips_text() {
+        let t = TuneTable { entries: vec![tune_pass(Pass::ScaleInplace, Isa::Scalar, 1024, 3)] };
+        let s = t.to_text();
+        let back = TuneTable::from_text(&s).unwrap();
+        assert_eq!(back.entries.len(), 1);
+        assert_eq!(back.best(Pass::ScaleInplace, Isa::Scalar), t.entries[0].best_unroll);
+        // Unknown pairs fall back to the default.
+        assert_eq!(back.best(Pass::Max, Isa::Avx2), DEFAULT_UNROLL);
+    }
+}

@@ -1,0 +1,180 @@
+//! STREAM benchmark substrate (McCalpin) — the paper's bandwidth yardstick.
+//!
+//! Figures 3 and 4 compare each softmax pass's achieved memory bandwidth to
+//! STREAM Copy and Scale.  We implement all four classic kernels (Copy,
+//! Scale, Add, Triad) over f64 arrays exactly as the reference benchmark
+//! (double-precision, array length ≥ 4× LLC), plus an in-place Scale (the
+//! paper observes that pass 3 of Algorithm 2 is "an in-place variant of
+//! STREAM Scale").
+//!
+//! The loops are written so LLVM autovectorizes them with whatever the
+//! target supports; out of cache they run at memory speed on any ISA, which
+//! is exactly the property the paper leans on.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// One STREAM kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StreamKernel {
+    /// c[i] = a[i] — 2 words of traffic per element.
+    Copy,
+    /// b[i] = q·c[i] — 2 words.
+    Scale,
+    /// c[i] = a[i] + b[i] — 3 words.
+    Add,
+    /// a[i] = b[i] + q·c[i] — 3 words.
+    Triad,
+    /// a[i] = q·a[i] (in place) — 2 words. Not in classic STREAM; the
+    /// paper's Alg. 2 pass 3 equivalent.
+    ScaleInplace,
+}
+
+impl StreamKernel {
+    pub const ALL: [StreamKernel; 5] = [
+        StreamKernel::Copy,
+        StreamKernel::Scale,
+        StreamKernel::Add,
+        StreamKernel::Triad,
+        StreamKernel::ScaleInplace,
+    ];
+
+    /// Bytes moved per element for element size `esize`.
+    pub fn bytes_per_elem(self, esize: usize) -> usize {
+        match self {
+            StreamKernel::Copy | StreamKernel::Scale | StreamKernel::ScaleInplace => 2 * esize,
+            StreamKernel::Add | StreamKernel::Triad => 3 * esize,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StreamKernel::Copy => "copy",
+            StreamKernel::Scale => "scale",
+            StreamKernel::Add => "add",
+            StreamKernel::Triad => "triad",
+            StreamKernel::ScaleInplace => "scale_inplace",
+        }
+    }
+}
+
+/// Working set for the STREAM runs.
+pub struct StreamBufs {
+    pub a: Vec<f64>,
+    pub b: Vec<f64>,
+    pub c: Vec<f64>,
+}
+
+impl StreamBufs {
+    pub fn new(n: usize) -> StreamBufs {
+        StreamBufs { a: vec![1.0; n], b: vec![2.0; n], c: vec![0.0; n] }
+    }
+
+    /// Run one kernel once.
+    pub fn run(&mut self, k: StreamKernel) {
+        let q = 3.0f64;
+        match k {
+            StreamKernel::Copy => {
+                for (c, a) in self.c.iter_mut().zip(&self.a) {
+                    *c = *a;
+                }
+            }
+            StreamKernel::Scale => {
+                for (b, c) in self.b.iter_mut().zip(&self.c) {
+                    *b = q * *c;
+                }
+            }
+            StreamKernel::Add => {
+                for ((c, a), b) in self.c.iter_mut().zip(&self.a).zip(&self.b) {
+                    *c = *a + *b;
+                }
+            }
+            StreamKernel::Triad => {
+                for ((a, b), c) in self.a.iter_mut().zip(&self.b).zip(&self.c) {
+                    *a = *b + q * *c;
+                }
+            }
+            StreamKernel::ScaleInplace => {
+                for a in self.a.iter_mut() {
+                    *a *= 1.000000001; // stays finite over many reps
+                }
+            }
+        }
+    }
+}
+
+/// Result of one STREAM measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamResult {
+    pub kernel: StreamKernel,
+    pub n: usize,
+    pub gb_per_s: f64,
+    pub secs_per_iter: f64,
+}
+
+/// Measure one kernel: `reps` timed runs (after one warm-up), best time —
+/// the STREAM convention (it reports the best of k trials).
+pub fn measure(k: StreamKernel, n: usize, reps: usize) -> StreamResult {
+    let mut bufs = StreamBufs::new(n);
+    bufs.run(k); // warm-up / page-in
+    let mut best = f64::MAX;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        bufs.run(k);
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(&bufs.a);
+        best = best.min(dt);
+    }
+    let bytes = (k.bytes_per_elem(std::mem::size_of::<f64>()) * n) as f64;
+    StreamResult { kernel: k, n, gb_per_s: bytes / best / 1e9, secs_per_iter: best }
+}
+
+/// Measure all kernels at the paper's recommended size (arrays ≥ 4× LLC).
+pub fn stream_suite(llc_bytes: usize, reps: usize) -> Vec<StreamResult> {
+    let n = (4 * llc_bytes / std::mem::size_of::<f64>()).max(1 << 20);
+    StreamKernel::ALL.iter().map(|&k| measure(k, n, reps)).collect()
+}
+
+/// Sweep one kernel over sizes (for bandwidth-vs-size curves).
+pub fn sweep(k: StreamKernel, sizes: &[usize], reps: usize) -> Vec<StreamResult> {
+    sizes.iter().map(|&n| measure(k, n, reps)).collect()
+}
+
+/// Median GB/s over repeated measurements (paper protocol §6.2).
+pub fn measure_median_gbps(k: StreamKernel, n: usize, reps: usize) -> f64 {
+    let samples: Vec<f64> = (0..reps.max(3)).map(|_| measure(k, n, 3).gb_per_s).collect();
+    stats::summarize(&samples).median
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernels_compute_correctly() {
+        let mut b = StreamBufs::new(64);
+        b.c = (0..64).map(|i| i as f64).collect();
+        b.run(StreamKernel::Scale);
+        assert_eq!(b.b[10], 30.0);
+        b.run(StreamKernel::Copy); // c = a = 1.0
+        assert_eq!(b.c[5], 1.0);
+        b.run(StreamKernel::Add); // c = a + b
+        assert_eq!(b.c[10], 1.0 + 30.0);
+        b.run(StreamKernel::Triad); // a = b + 3c
+        assert_eq!(b.a[10], 30.0 + 3.0 * 31.0);
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        assert_eq!(StreamKernel::Copy.bytes_per_elem(8), 16);
+        assert_eq!(StreamKernel::Triad.bytes_per_elem(8), 24);
+    }
+
+    #[test]
+    fn measure_produces_positive_bandwidth() {
+        let r = measure(StreamKernel::Copy, 1 << 16, 3);
+        assert!(r.gb_per_s > 0.1, "{}", r.gb_per_s);
+        assert!(r.secs_per_iter > 0.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Tiny CLI argument parser (offline substitute for clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positionals.
+//! Typed accessors parse on demand and report readable errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    pub options: BTreeMap<String, Vec<String>>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw token list. Tokens after `--` are positional verbatim.
+    /// A `--key` followed by a non-`--` token is an option; a `--key` at the
+    /// end or followed by another `--key` is a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let tokens: Vec<String> = tokens.into_iter().collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        let mut raw = false;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if raw || !t.starts_with("--") {
+                out.positionals.push(t.clone());
+                i += 1;
+                continue;
+            }
+            if t == "--" {
+                raw = true;
+                i += 1;
+                continue;
+            }
+            let body = &t[2..];
+            if let Some(eq) = body.find('=') {
+                let (k, v) = body.split_at(eq);
+                out.options.entry(k.to_string()).or_default().push(v[1..].to_string());
+                i += 1;
+            } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                out.options.entry(body.to_string()).or_default().push(tokens[i + 1].clone());
+                i += 2;
+            } else {
+                out.flags.push(body.to_string());
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn opt_all(&self, name: &str) -> Vec<&str> {
+        self.options.get(name).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    /// Typed option with default; exits the parse with Err on bad syntax.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(raw) => raw.parse::<T>().map_err(|e| format!("--{name} {raw:?}: {e}")),
+        }
+    }
+
+    /// Required typed option.
+    pub fn require<T: std::str::FromStr>(&self, name: &str) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.opt(name).ok_or_else(|| format!("missing required --{name}"))?;
+        raw.parse::<T>().map_err(|e| format!("--{name} {raw:?}: {e}"))
+    }
+
+    /// Comma-separated list option, e.g. `--sizes 1024,2048`.
+    pub fn list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Result<Vec<T>, String>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(default.to_vec()),
+            Some(raw) => raw
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse::<T>().map_err(|e| format!("--{name} {s:?}: {e}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = args("figures fig5 --isa avx512 --sizes=1024,2048 --verbose --out results");
+        assert_eq!(a.positionals, vec!["figures", "fig5"]);
+        assert_eq!(a.opt("isa"), Some("avx512"));
+        assert_eq!(a.opt("sizes"), Some("1024,2048"));
+        assert_eq!(a.opt("out"), Some("results"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = args("--n 4096 --ratio 1.5");
+        assert_eq!(a.get("n", 0usize).unwrap(), 4096);
+        assert_eq!(a.get("ratio", 0.0f64).unwrap(), 1.5);
+        assert_eq!(a.get("missing", 7u32).unwrap(), 7);
+        assert!(a.require::<usize>("absent").is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = args("--sizes 1,2,3");
+        assert_eq!(a.list::<usize>("sizes", &[]).unwrap(), vec![1, 2, 3]);
+        let b = args("");
+        assert_eq!(b.list::<usize>("sizes", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = args("cmd -- --not-a-flag");
+        assert_eq!(a.positionals, vec!["cmd", "--not-a-flag"]);
+    }
+
+    #[test]
+    fn repeated_options_accumulate() {
+        let a = args("--tag x --tag y");
+        assert_eq!(a.opt_all("tag"), vec!["x", "y"]);
+        assert_eq!(a.opt("tag"), Some("y"));
+    }
+}

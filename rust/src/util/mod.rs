@@ -1,0 +1,8 @@
+//! In-tree utility substrates (the offline environment provides no
+//! clap/serde_json/criterion/proptest — see DESIGN.md §Substitutions).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

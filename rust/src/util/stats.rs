@@ -1,0 +1,116 @@
+//! Benchmark statistics helpers (offline substitute for criterion's
+//! aggregation): median/mean/stddev/percentiles over timing samples, plus
+//! the paper's measurement protocol (§6.2: repeat, take the median).
+
+use std::time::Instant;
+
+/// Summary statistics of a sample set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p05: f64,
+    pub p95: f64,
+}
+
+pub fn summarize(samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty(), "no samples");
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = s.len();
+    let mean = s.iter().sum::<f64>() / n as f64;
+    let var = s.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+    Summary {
+        n,
+        mean,
+        median: percentile_sorted(&s, 50.0),
+        std: var.sqrt(),
+        min: s[0],
+        max: s[n - 1],
+        p05: percentile_sorted(&s, 5.0),
+        p95: percentile_sorted(&s, 95.0),
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (pct / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// The paper's protocol (§6.2): run `f` repeatedly for at least `min_time`
+/// seconds per measurement, `reps` measurements, return the median seconds
+/// per call.  `reps=25, min_time=5.0` reproduces the paper exactly
+/// (`--paper-protocol`); the defaults used in CI are smaller.
+pub fn measure_median<F: FnMut()>(mut f: F, reps: usize, min_time: f64) -> f64 {
+    let mut medians = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        // One measurement: run for >= min_time, report secs/call.
+        let mut calls = 0u64;
+        let t0 = Instant::now();
+        loop {
+            f();
+            calls += 1;
+            let dt = t0.elapsed().as_secs_f64();
+            if dt >= min_time {
+                medians.push(dt / calls as f64);
+                break;
+            }
+        }
+    }
+    medians.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    medians[medians.len() / 2]
+}
+
+/// ns/element convenience wrapper around [`measure_median`].
+pub fn measure_ns_per_elem<F: FnMut()>(f: F, n_elems: usize, reps: usize, min_time: f64) -> f64 {
+    measure_median(f, reps, min_time) * 1e9 / n_elems as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_values() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile_sorted(&s, 0.0), 10.0);
+        assert_eq!(percentile_sorted(&s, 100.0), 40.0);
+        assert!((percentile_sorted(&s, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measure_returns_positive() {
+        let mut x = 0u64;
+        let t = measure_median(
+            || {
+                x = x.wrapping_add(1);
+                std::hint::black_box(x);
+            },
+            3,
+            0.001,
+        );
+        assert!(t > 0.0);
+    }
+}

@@ -1,0 +1,101 @@
+//! Table/series emission: the figure harness prints every reproduced paper
+//! table/figure both as aligned markdown (human) and CSV (plotting).
+
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+/// A rectangular results table with named columns.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Push a row of display-able values.
+    pub fn rowd<D: std::fmt::Display>(&mut self, cells: &[D]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut w = vec![0usize; self.columns.len()];
+        for (i, c) in self.columns.iter().enumerate() {
+            w[i] = c.chars().count();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}", self.title);
+        let hdr: Vec<String> =
+            self.columns.iter().enumerate().map(|(i, c)| format!("{:<1$}", c, w[i])).collect();
+        let _ = writeln!(out, "| {} |", hdr.join(" | "));
+        let sep: Vec<String> = w.iter().map(|n| "-".repeat(*n)).collect();
+        let _ = writeln!(out, "| {} |", sep.join(" | "));
+        for r in &self.rows {
+            let cells: Vec<String> =
+                r.iter().enumerate().map(|(i, c)| format!("{:<1$}", c, w[i])).collect();
+            let _ = writeln!(out, "| {} |", cells.join(" | "));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.columns.join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.join(","));
+        }
+        out
+    }
+
+    /// Write `<dir>/<stem>.csv` and `<dir>/<stem>.md`.
+    pub fn save(&self, dir: &Path, stem: &str) -> io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        std::fs::write(dir.join(format!("{stem}.md")), self.to_markdown())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_and_csv_shapes() {
+        let mut t = Table::new("Demo", &["n", "gb_s"]);
+        t.rowd(&["1024", "12.5"]);
+        t.rowd(&["2048", "13.0"]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert_eq!(md.lines().count(), 5);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().next().unwrap(), "n,gb_s");
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.rowd(&["only-one"]);
+    }
+}

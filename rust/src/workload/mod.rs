@@ -1,0 +1,158 @@
+//! Workload generation: logits distributions and the paper's Table-1
+//! dataset catalogue (the class counts that motivate large-N softmax).
+
+use crate::util::rng::Rng;
+
+/// A public classification dataset from paper Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dataset {
+    pub name: &'static str,
+    pub class_description: &'static str,
+    pub classes: usize,
+}
+
+/// Paper Table 1 verbatim.
+pub const TABLE1: [Dataset; 4] = [
+    Dataset { name: "ImageNet", class_description: "Image category", classes: 21_841 },
+    Dataset { name: "One Billion Word", class_description: "Unique Words", classes: 793_471 },
+    Dataset { name: "Wikilinks", class_description: "Wikipedia pages", classes: 2_933_659 },
+    Dataset { name: "DepCC", class_description: "Web documents", classes: 364_800_000 },
+];
+
+/// Shape of synthetic logits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LogitsDist {
+    /// N(mean, std): the typical well-behaved classifier head.
+    Normal { mean: f32, std: f32 },
+    /// Uniform[lo, hi].
+    Uniform { lo: f32, hi: f32 },
+    /// Logits that overflow naive exp: N(shift, std) with shift ≈ +90.
+    /// The case the max-subtraction / (m, n) machinery exists for.
+    OverflowProne { shift: f32, std: f32 },
+    /// One dominant class (`peak`), everything else near `floor`: the
+    /// post-training confident-model regime with extreme dynamic range.
+    Peaked { peak: f32, floor: f32 },
+}
+
+impl LogitsDist {
+    pub const CASES: [LogitsDist; 4] = [
+        LogitsDist::Normal { mean: 0.0, std: 4.0 },
+        LogitsDist::Uniform { lo: -20.0, hi: 20.0 },
+        LogitsDist::OverflowProne { shift: 90.0, std: 3.0 },
+        LogitsDist::Peaked { peak: 50.0, floor: -50.0 },
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LogitsDist::Normal { .. } => "normal",
+            LogitsDist::Uniform { .. } => "uniform",
+            LogitsDist::OverflowProne { .. } => "overflow_prone",
+            LogitsDist::Peaked { .. } => "peaked",
+        }
+    }
+
+    /// Generate `n` logits.
+    pub fn generate(&self, n: usize, rng: &mut Rng) -> Vec<f32> {
+        match *self {
+            LogitsDist::Normal { mean, std } => {
+                (0..n).map(|_| rng.normal_f32(mean, std)).collect()
+            }
+            LogitsDist::Uniform { lo, hi } => (0..n).map(|_| rng.range_f32(lo, hi)).collect(),
+            LogitsDist::OverflowProne { shift, std } => {
+                (0..n).map(|_| rng.normal_f32(shift, std)).collect()
+            }
+            LogitsDist::Peaked { peak, floor } => {
+                let mut v: Vec<f32> =
+                    (0..n).map(|_| floor + rng.range_f32(-1.0, 1.0)).collect();
+                let hot = rng.below(n.max(1));
+                if n > 0 {
+                    v[hot] = peak;
+                }
+                v
+            }
+        }
+    }
+}
+
+/// The problem-size sweep used by the figure harness: log-spaced N from
+/// in-L1 to 4× LLC, with extra points near each cache boundary (where the
+/// paper's curves bend).
+pub fn size_sweep(l1: usize, l2: usize, llc: usize) -> Vec<usize> {
+    let f32s = |bytes: usize| bytes / std::mem::size_of::<f32>();
+    let mut sizes = Vec::new();
+    // Log-spaced backbone: 2^7 .. 4*LLC.
+    let mut n = 128usize;
+    let max = 4 * f32s(llc);
+    while n <= max {
+        sizes.push(n);
+        n = n.saturating_mul(2);
+    }
+    // Boundary-straddling points at 0.5/1/2 x each cache size. A softmax
+    // working set is roughly in+out = 2 buffers, but the paper plots by
+    // input size; we keep that convention.
+    for c in [l1, l2, llc] {
+        for mult in [1usize, 2] {
+            sizes.push(f32s(c) * mult / 2); // 0.5x, 1x
+            sizes.push(f32s(c) * mult);
+        }
+    }
+    sizes.retain(|&s| s >= 16);
+    sizes.sort_unstable();
+    sizes.dedup();
+    sizes
+}
+
+/// A batch of softmax request payloads for the serving benchmarks.
+pub fn request_batch(dist: LogitsDist, batch: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..batch).map(|_| dist.generate(n, &mut rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        assert_eq!(TABLE1[0].classes, 21841);
+        assert_eq!(TABLE1[1].classes, 793471);
+        assert_eq!(TABLE1[2].classes, 2933659);
+        assert_eq!(TABLE1[3].classes, 364_800_000);
+    }
+
+    #[test]
+    fn generators_produce_requested_length() {
+        let mut rng = Rng::new(9);
+        for d in LogitsDist::CASES {
+            let v = d.generate(1000, &mut rng);
+            assert_eq!(v.len(), 1000, "{}", d.name());
+            assert!(v.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn overflow_prone_actually_overflows_naive_exp() {
+        let mut rng = Rng::new(1);
+        let d = LogitsDist::OverflowProne { shift: 90.0, std: 3.0 };
+        let v = d.generate(4096, &mut rng);
+        let naive_sum: f32 = v.iter().map(|&x| x.exp()).sum();
+        assert!(naive_sum.is_infinite(), "workload must break the naive algorithm");
+    }
+
+    #[test]
+    fn sweep_is_sorted_unique_and_spans_caches() {
+        let s = size_sweep(32 << 10, 1 << 20, 8 << 20);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+        assert!(*s.first().unwrap() <= 1024);
+        assert!(*s.last().unwrap() >= 4 * (8 << 20) / 4);
+        // Contains the exact L2 boundary point in elements.
+        assert!(s.contains(&((1 << 20) / 4)));
+    }
+
+    #[test]
+    fn request_batch_shapes() {
+        let b = request_batch(LogitsDist::CASES[0], 4, 128, 7);
+        assert_eq!(b.len(), 4);
+        assert!(b.iter().all(|r| r.len() == 128));
+    }
+}

@@ -1,0 +1,167 @@
+//! Integration tests for the serving coordinator: batching behaviour under
+//! load, backpressure, mixed shapes, metrics accounting, and (when
+//! artifacts exist) the full PJRT serving path.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use two_pass_softmax::config::{Backend, ServeConfig};
+use two_pass_softmax::coordinator::{Coordinator, Payload, PushError, Router};
+use two_pass_softmax::softmax::{Algorithm, Isa};
+use two_pass_softmax::util::rng::Rng;
+
+fn native_cfg(max_batch: usize, workers: usize) -> ServeConfig {
+    ServeConfig {
+        max_batch,
+        workers,
+        max_wait_us: 300,
+        queue_capacity: 1 << 12,
+        ..ServeConfig::default()
+    }
+}
+
+fn start_native(cfg: &ServeConfig) -> Coordinator {
+    let router = Router::Native { algorithm: Algorithm::TwoPass, isa: Isa::detect_best() };
+    Coordinator::start_with_router(cfg, router)
+}
+
+#[test]
+fn mixed_shapes_are_batched_separately_and_all_served() {
+    let cfg = native_cfg(8, 2);
+    let coord = start_native(&cfg);
+    let mut rng = Rng::new(1);
+    let mut handles = Vec::new();
+    for i in 0..120 {
+        let n = [64usize, 256, 1024][i % 3];
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+        handles.push((n, coord.submit(Payload::Logits(x)).unwrap()));
+    }
+    for (n, h) in handles {
+        let r = h.wait().unwrap();
+        assert!(r.error.is_none());
+        assert_eq!(r.probs.len(), n);
+        let s: f32 = r.probs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+    let snap = coord.metrics();
+    assert_eq!(snap.completed, 120);
+    assert!(snap.batches < 120, "expected batching to merge requests");
+    coord.shutdown();
+}
+
+#[test]
+fn backpressure_surfaces_queue_full() {
+    let cfg = ServeConfig {
+        max_batch: 2,
+        workers: 1,
+        max_wait_us: 50_000, // slow flush so the queue can fill
+        queue_capacity: 4,
+        ..ServeConfig::default()
+    };
+    let coord = start_native(&cfg);
+    let mut rejected = 0;
+    let mut handles = Vec::new();
+    for _ in 0..64 {
+        match coord.submit(Payload::Logits(vec![0.5; 128])) {
+            Ok(h) => handles.push(h),
+            Err(PushError::QueueFull { capacity }) => {
+                assert_eq!(capacity, 4);
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected {e:?}"),
+        }
+    }
+    assert!(rejected > 0, "capacity-4 queue should reject under burst");
+    for h in handles {
+        assert!(h.wait().unwrap().error.is_none());
+    }
+    assert_eq!(coord.metrics().rejected as usize, rejected);
+    coord.shutdown();
+}
+
+#[test]
+fn responses_route_back_to_correct_requests() {
+    // Every request gets a distinct peak; the response must peak there.
+    let cfg = native_cfg(16, 2);
+    let coord = Arc::new(start_native(&cfg));
+    let mut joins = Vec::new();
+    for t in 0..6u64 {
+        let coord = coord.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t);
+            for _ in 0..40 {
+                let n = 512;
+                let hot = rng.below(n);
+                let mut x = vec![-5.0f32; n];
+                x[hot] = 30.0;
+                let r = coord.submit(Payload::Logits(x)).unwrap().wait().unwrap();
+                assert!(r.error.is_none());
+                let argmax =
+                    r.probs.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+                assert_eq!(argmax, hot, "response mixed up between requests");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.shutdown(),
+        Err(_) => panic!("leak"),
+    }
+}
+
+#[test]
+fn batch_latency_bounded_by_max_wait() {
+    let cfg = ServeConfig {
+        max_batch: 64, // never fills naturally
+        workers: 1,
+        max_wait_us: 2_000,
+        queue_capacity: 1024,
+        ..ServeConfig::default()
+    };
+    let coord = start_native(&cfg);
+    let t0 = std::time::Instant::now();
+    let r = coord.submit(Payload::Logits(vec![1.0; 256])).unwrap().wait().unwrap();
+    let e2e = t0.elapsed();
+    assert!(r.error.is_none());
+    assert!(e2e.as_micros() >= 1_500, "flushed too early: {e2e:?}");
+    assert!(e2e.as_millis() < 500, "missed the wait deadline: {e2e:?}");
+    coord.shutdown();
+}
+
+#[test]
+fn pjrt_backend_serves_logits_and_tokens() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipped: no artifacts");
+        return;
+    }
+    let cfg = ServeConfig {
+        backend: Backend::Pjrt,
+        artifacts_dir: dir,
+        max_batch: 4,
+        workers: 2,
+        max_wait_us: 500,
+        queue_capacity: 256,
+        ..ServeConfig::default()
+    };
+    let coord = Coordinator::start(cfg).unwrap();
+    // Logits through an artifact shape.
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> = (0..32768).map(|_| rng.normal_f32(0.0, 4.0)).collect();
+    let r = coord.submit(Payload::Logits(x)).unwrap().wait().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    // 32k-term f32 sum: allow a few ULP of accumulation drift.
+    assert!((r.probs.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+    // Logits with no artifact → native fallback must still serve.
+    let r = coord.submit(Payload::Logits(vec![1.0; 300])).unwrap().wait().unwrap();
+    assert!(r.error.is_none(), "fallback failed: {:?}", r.error);
+    assert_eq!(r.probs.len(), 300);
+    // Tokens through the LM path.
+    let tokens: Vec<i32> = (0..128).map(|i| i % 100).collect();
+    let r = coord.submit(Payload::Tokens(tokens)).unwrap().wait().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert!((r.probs.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+    coord.shutdown();
+}

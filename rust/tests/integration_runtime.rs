@@ -1,0 +1,136 @@
+//! Integration tests for the PJRT runtime against real AOT artifacts.
+//!
+//! These run only when `artifacts/manifest.json` exists (i.e. after
+//! `make artifacts`); without it they are skipped so `cargo test` works on
+//! a fresh checkout.
+
+use std::path::PathBuf;
+
+use two_pass_softmax::runtime::{service::PjrtService, EntryKind, Runtime};
+use two_pass_softmax::softmax::{self, Algorithm};
+use two_pass_softmax::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn manifest_loads_and_has_expected_entries() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let rt = Runtime::open(&dir).unwrap();
+    assert!(rt.manifest.softmax_entries().count() >= 9, "expect >= 3 variants x 3 sizes");
+    assert!(rt.manifest.lm_bucket(1).is_some());
+    assert_eq!(rt.platform(), "cpu");
+}
+
+#[test]
+fn softmax_artifact_matches_native_kernels() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let rt = Runtime::open(&dir).unwrap();
+    let mut rng = Rng::new(99);
+    // One artifact per variant is enough for the integration signal
+    // (repro verify covers all of them).
+    for variant in ["twopass", "threepass_recompute", "threepass_reload"] {
+        let name = rt
+            .softmax_artifact(variant, 1, 8192)
+            .unwrap_or_else(|| panic!("no {variant} 1x8192 artifact"));
+        let x: Vec<f32> = (0..8192).map(|_| rng.normal_f32(0.0, 20.0)).collect();
+        let got = rt.run_softmax(&name, &x).unwrap();
+        let alg: Algorithm = variant.parse().unwrap();
+        let mut want = vec![0.0f32; 8192];
+        softmax::softmax(alg, &x, &mut want).unwrap();
+        for i in 0..8192 {
+            assert!((got[i] - want[i]).abs() < 1e-5, "{variant} i={i}");
+        }
+    }
+}
+
+#[test]
+fn runtime_validates_shapes_and_names() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let rt = Runtime::open(&dir).unwrap();
+    assert!(rt.run_softmax("softmax_twopass_1x8192", &[0.0; 17]).is_err());
+    assert!(rt.run_softmax("no_such_artifact", &[0.0; 4]).is_err());
+    assert!(rt.load("no_such_artifact").is_err());
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let rt = Runtime::open(&dir).unwrap();
+    assert_eq!(rt.compiled_count(), 0);
+    let _ = rt.load("softmax_twopass_1x1024").unwrap();
+    let _ = rt.load("softmax_twopass_1x1024").unwrap();
+    assert_eq!(rt.compiled_count(), 1);
+}
+
+#[test]
+fn lm_artifact_produces_distributions_and_caches_weights() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let rt = Runtime::open(&dir).unwrap();
+    let (name, bucket) = rt.lm_bucket(1).unwrap();
+    let loaded = rt.load(&name).unwrap();
+    let (seq, vocab) = match &loaded.entry.kind {
+        EntryKind::Lm { seq, vocab, .. } => (*seq, *vocab),
+        k => panic!("unexpected kind {k:?}"),
+    };
+    let tokens: Vec<i32> = (0..bucket * seq).map(|i| (i % 997) as i32).collect();
+    let probs = rt.run_lm(&name, &tokens).unwrap();
+    assert_eq!(probs.len(), bucket * vocab);
+    for row in 0..bucket {
+        let s: f32 = probs[row * vocab..(row + 1) * vocab].iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "row {row}: {s}");
+    }
+    // Different tokens must give different distributions (weights loaded,
+    // not garbage).
+    let tokens2: Vec<i32> = (0..bucket * seq).map(|i| ((i * 7 + 3) % 997) as i32).collect();
+    let probs2 = rt.run_lm(&name, &tokens2).unwrap();
+    let diff: f32 = probs.iter().zip(&probs2).map(|(a, b)| (a - b).abs()).sum();
+    assert!(diff > 1e-3, "distributions identical across different inputs");
+}
+
+#[test]
+fn pjrt_service_executes_from_other_threads() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let svc = std::sync::Arc::new(PjrtService::start(dir).unwrap());
+    let mut joins = Vec::new();
+    for t in 0..3u64 {
+        let svc = svc.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t);
+            let rows: Vec<Vec<f32>> =
+                (0..2).map(|_| (0..8192).map(|_| rng.normal_f32(0.0, 3.0)).collect()).collect();
+            let out = svc.softmax("twopass", rows).unwrap();
+            assert_eq!(out.len(), 2);
+            for r in out {
+                let s: f32 = r.iter().sum();
+                assert!((s - 1.0).abs() < 1e-5);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    // Unknown shape surfaces an error (router uses it to fall back).
+    let err = svc.softmax("twopass", vec![vec![0.0; 17]]).unwrap_err();
+    assert!(err.to_string().contains("no "), "{err}");
+}

@@ -1,0 +1,203 @@
+//! Integration tests over the full softmax public API: every algorithm on
+//! every available ISA against a float64 reference, plus the mathematical
+//! invariants of the softmax function itself.
+
+use two_pass_softmax::softmax::{
+    run_pass, softmax_inplace, softmax_with, Algorithm, Isa, Pass,
+};
+use two_pass_softmax::util::rng::Rng;
+
+fn ref_softmax_f64(x: &[f32]) -> Vec<f32> {
+    let mu = x.iter().cloned().fold(f64::MIN, |a, v| a.max(v as f64));
+    let e: Vec<f64> = x.iter().map(|&v| ((v as f64) - mu).exp()).collect();
+    let s: f64 = e.iter().sum();
+    e.iter().map(|&v| (v / s) as f32).collect()
+}
+
+fn all_combos() -> Vec<(Algorithm, Isa)> {
+    let mut v = Vec::new();
+    for alg in Algorithm::ALL {
+        for isa in Isa::detect_all() {
+            v.push((alg, isa));
+        }
+    }
+    v
+}
+
+#[test]
+fn random_vectors_match_f64_reference() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..40 {
+        let n = 1 + rng.below(5000);
+        let scale = [0.1f32, 1.0, 10.0, 50.0][case % 4];
+        let shift = [0.0f32, 85.0, -90.0, 700.0][(case / 4) % 4];
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(shift, scale)).collect();
+        let want = ref_softmax_f64(&x);
+        for (alg, isa) in all_combos() {
+            let mut y = vec![0.0f32; n];
+            softmax_with(alg, isa, &x, &mut y).unwrap();
+            for i in 0..n {
+                assert!(
+                    (y[i] - want[i]).abs() < 3e-6,
+                    "case {case} {alg}/{isa} n={n} i={i}: {} vs {}",
+                    y[i],
+                    want[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn output_is_probability_distribution() {
+    let mut rng = Rng::new(7);
+    for _ in 0..20 {
+        let n = 1 + rng.below(3000);
+        let x: Vec<f32> = (0..n).map(|_| rng.range_f32(-100.0, 100.0)).collect();
+        for (alg, isa) in all_combos() {
+            let mut y = vec![0.0f32; n];
+            softmax_with(alg, isa, &x, &mut y).unwrap();
+            let sum: f32 = y.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "{alg}/{isa}: Σ = {sum}");
+            assert!(y.iter().all(|&v| (0.0..=1.0).contains(&v)), "{alg}/{isa}: range");
+            assert!(y.iter().all(|v| v.is_finite()), "{alg}/{isa}: finite");
+        }
+    }
+}
+
+#[test]
+fn translation_invariance() {
+    // softmax(x + c) == softmax(x) — exactly the property the max-pass
+    // exploits; the two-pass algorithm must satisfy it without the pass.
+    let mut rng = Rng::new(21);
+    let n = 777;
+    let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+    for c in [50.0f32, -70.0, 88.0] {
+        let shifted: Vec<f32> = x.iter().map(|&v| v + c).collect();
+        for (alg, isa) in all_combos() {
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+            softmax_with(alg, isa, &x, &mut a).unwrap();
+            softmax_with(alg, isa, &shifted, &mut b).unwrap();
+            for i in 0..n {
+                assert!(
+                    (a[i] - b[i]).abs() < 2e-6,
+                    "{alg}/{isa} c={c} i={i}: {} vs {}",
+                    a[i],
+                    b[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn order_preservation() {
+    // x_i > x_j  =>  softmax(x)_i >= softmax(x)_j (monotone map).
+    let mut rng = Rng::new(5);
+    let n = 512;
+    let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 10.0)).collect();
+    for (alg, isa) in all_combos() {
+        let mut y = vec![0.0f32; n];
+        softmax_with(alg, isa, &x, &mut y).unwrap();
+        for i in 0..n {
+            for j in (i + 1)..n.min(i + 20) {
+                if x[i] > x[j] {
+                    assert!(y[i] >= y[j], "{alg}/{isa}: order violated at ({i},{j})");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn overflow_inputs_naive_would_inf() {
+    // Inputs where Σe^x overflows f32: every algorithm must stay finite.
+    let x = vec![105.0f32; 2048];
+    for (alg, isa) in all_combos() {
+        let mut y = vec![0.0f32; 2048];
+        softmax_with(alg, isa, &x, &mut y).unwrap();
+        for &v in &y {
+            assert!((v - 1.0 / 2048.0).abs() < 1e-8, "{alg}/{isa}: {v}");
+        }
+    }
+}
+
+#[test]
+fn denormal_tail_flushes_cleanly() {
+    // One dominant logit: tail outputs underflow to 0 without NaN.
+    let mut x = vec![-200.0f32; 1000];
+    x[123] = 200.0;
+    for (alg, isa) in all_combos() {
+        let mut y = vec![0.0f32; 1000];
+        softmax_with(alg, isa, &x, &mut y).unwrap();
+        assert!((y[123] - 1.0).abs() < 1e-6, "{alg}/{isa}");
+        assert!(y.iter().enumerate().all(|(i, &v)| i == 123 || v == 0.0), "{alg}/{isa}");
+    }
+}
+
+#[test]
+fn inplace_agrees_across_sizes() {
+    let mut rng = Rng::new(3);
+    for n in [1usize, 15, 16, 17, 100, 1000, 4097] {
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 5.0)).collect();
+        let mut y = vec![0.0f32; n];
+        softmax_with(Algorithm::ThreePassReload, Isa::detect_best(), &x, &mut y).unwrap();
+        let mut z = x.clone();
+        softmax_inplace(&mut z).unwrap();
+        for i in 0..n {
+            assert!((y[i] - z[i]).abs() < 1e-7, "n={n} i={i}");
+        }
+    }
+}
+
+#[test]
+fn passes_compose_to_full_algorithms() {
+    // Composing the public per-pass API must equal the one-shot API.
+    let mut rng = Rng::new(11);
+    let n = 2222;
+    let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 6.0)).collect();
+    for isa in Isa::detect_all() {
+        let mut full = vec![0.0f32; n];
+        softmax_with(Algorithm::TwoPass, isa, &x, &mut full).unwrap();
+        // Manual composition through run_pass (uses its own λ/n_sum contract,
+        // so just validate the reduction pieces).
+        let mut scratch = vec![0.0f32; n];
+        let lse = run_pass(Pass::AccumExtExp, isa, 2, &x, &mut scratch).unwrap();
+        let mu = run_pass(Pass::Max, isa, 4, &x, &mut scratch).unwrap();
+        let sum_full: f32 = full.iter().sum();
+        assert!((sum_full - 1.0).abs() < 1e-5);
+        // logsumexp consistency: lse == mu + ln Σ e^(x-µ)
+        let sig = run_pass(Pass::SumExp, isa, 2, &x, &mut scratch).unwrap();
+        assert!((lse - (mu + sig.ln())).abs() < 1e-4, "{isa}: {lse} vs {}", mu + sig.ln());
+    }
+}
+
+#[test]
+fn unroll_factors_do_not_change_results() {
+    let mut rng = Rng::new(13);
+    let n = 1031;
+    let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 4.0)).collect();
+    for isa in Isa::detect_all() {
+        for pass in Pass::ALL {
+            let mut outs = Vec::new();
+            for unroll in [1usize, 2, 4, 8] {
+                let mut y = x.clone();
+                let r = run_pass(pass, isa, unroll, &x, &mut y).unwrap();
+                outs.push((r, y));
+            }
+            for k in 1..outs.len() {
+                assert!(
+                    (outs[0].0 - outs[k].0).abs() <= 1e-3 * outs[0].0.abs().max(1.0),
+                    "{isa}/{pass} scalar result differs across unrolls"
+                );
+                for i in 0..n {
+                    assert!(
+                        (outs[0].1[i] - outs[k].1[i]).abs() < 1e-6,
+                        "{isa}/{pass} output differs at {i}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Property-style invariant tests (proptest is unavailable offline; these
+//! use the in-tree deterministic PRNG to sweep thousands of random cases —
+//! same idea, seeds printed on failure).
+//!
+//! Invariants covered: the (m, n) extended-range accumulator (order
+//! independence, merge associativity, agreement with f64), the batcher
+//! (conservation, FIFO-within-key, key purity), the JSON codec (roundtrip),
+//! and the cost/perf models (bounds, monotonicity).
+
+use std::time::Duration;
+
+use two_pass_softmax::coordinator::batcher::Batcher;
+use two_pass_softmax::coordinator::request::{make_request, Payload};
+use two_pass_softmax::costmodel;
+use two_pass_softmax::platform::SKYLAKE_X;
+use two_pass_softmax::simmodel;
+use two_pass_softmax::softmax::{Algorithm, ExtSum, Isa};
+use two_pass_softmax::util::json::Json;
+use two_pass_softmax::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// ExtSum / (m, n) representation
+// ---------------------------------------------------------------------------
+
+fn logsumexp_f64(xs: &[f32]) -> f64 {
+    let mx = xs.iter().cloned().fold(f64::MIN, |a, v| a.max(v as f64));
+    xs.iter().map(|&x| ((x as f64) - mx).exp()).sum::<f64>().ln() + mx
+}
+
+#[test]
+fn extsum_matches_f64_logsumexp_over_random_cases() {
+    let mut rng = Rng::new(2020);
+    for case in 0..500 {
+        let n = 1 + rng.below(200);
+        let scale = [1.0f32, 10.0, 60.0][case % 3];
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, scale)).collect();
+        let mut s = ExtSum::default();
+        for &x in &xs {
+            s.add_exp(x);
+        }
+        let want = logsumexp_f64(&xs);
+        assert!(
+            ((s.ln() as f64) - want).abs() < 1e-3 + want.abs() * 1e-5,
+            "case {case}: {} vs {want} (xs.len = {n})",
+            s.ln()
+        );
+    }
+}
+
+#[test]
+fn extsum_is_order_independent() {
+    let mut rng = Rng::new(31);
+    for case in 0..200 {
+        let n = 2 + rng.below(64);
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 40.0)).collect();
+        let mut fwd = ExtSum::default();
+        for &x in &xs {
+            fwd.add_exp(x);
+        }
+        let mut rev = ExtSum::default();
+        for &x in xs.iter().rev() {
+            rev.add_exp(x);
+        }
+        assert!(
+            (fwd.ln() - rev.ln()).abs() < 1e-4,
+            "case {case}: {} vs {}",
+            fwd.ln(),
+            rev.ln()
+        );
+    }
+}
+
+#[test]
+fn extsum_merge_equals_sequential() {
+    let mut rng = Rng::new(77);
+    for case in 0..200 {
+        let n = 2 + rng.below(100);
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 25.0)).collect();
+        let split = 1 + rng.below(n - 1);
+        let mut a = ExtSum::default();
+        for &x in &xs[..split] {
+            a.add_exp(x);
+        }
+        let mut b = ExtSum::default();
+        for &x in &xs[split..] {
+            b.add_exp(x);
+        }
+        a.merge(b);
+        let mut seq = ExtSum::default();
+        for &x in &xs {
+            seq.add_exp(x);
+        }
+        assert!((a.ln() - seq.ln()).abs() < 1e-4, "case {case}");
+    }
+}
+
+#[test]
+fn extsum_identity_element() {
+    let mut rng = Rng::new(123);
+    for _ in 0..100 {
+        let x = rng.normal_f32(0.0, 50.0);
+        let mut s = ExtSum::default();
+        s.add_exp(x);
+        let before = s.ln();
+        s.merge(ExtSum::default()); // + 0
+        assert!((s.ln() - before).abs() < 1e-6);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batcher
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batcher_conserves_requests_and_respects_keys() {
+    let mut rng = Rng::new(8);
+    for round in 0..30 {
+        let total = 20 + rng.below(200);
+        let max_batch = 1 + rng.below(16);
+        let b = Batcher::new(usize::MAX, max_batch, Duration::from_micros(0));
+        let mut pushed_per_key = std::collections::HashMap::new();
+        for id in 0..total as u64 {
+            let n = [32usize, 64, 128][rng.below(3)];
+            let (req, _h) = make_request(id, Payload::Logits(vec![0.0; n]));
+            *pushed_per_key.entry(n).or_insert(0usize) += 1;
+            b.push(req).unwrap();
+        }
+        b.shutdown();
+        let mut seen_per_key = std::collections::HashMap::new();
+        let mut last_id_per_key = std::collections::HashMap::new();
+        while let Some(batch) = b.take_batch() {
+            assert!(batch.len() <= max_batch, "round {round}: batch too big");
+            let key = batch[0].payload.batch_key();
+            for r in &batch {
+                assert_eq!(r.payload.batch_key(), key, "round {round}: mixed keys");
+                let n = r.payload.len();
+                *seen_per_key.entry(n).or_insert(0usize) += 1;
+                // FIFO within key: ids strictly increase.
+                let last = last_id_per_key.entry(n).or_insert(0u64);
+                assert!(r.id >= *last, "round {round}: FIFO violated for key {n}");
+                *last_id_per_key.get_mut(&n).unwrap() = r.id;
+            }
+        }
+        assert_eq!(seen_per_key, pushed_per_key, "round {round}: requests lost/duplicated");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON codec
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num((rng.normal() * 1e3).round()),
+        3 => {
+            let len = rng.below(8);
+            let s: String = (0..len)
+                .map(|_| char::from_u32(32 + rng.below(94) as u32).unwrap())
+                .collect();
+            Json::Str(s)
+        }
+        4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..rng.below(5) {
+                m.insert(format!("k{i}"), random_json(rng, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn json_roundtrips_random_documents() {
+    let mut rng = Rng::new(4242);
+    for case in 0..300 {
+        let doc = random_json(&mut rng, 3);
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, doc, "case {case}: {text}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cost / performance models
+// ---------------------------------------------------------------------------
+
+#[test]
+fn model_advantage_never_exceeds_traffic_bound() {
+    let mut rng = Rng::new(55);
+    for _ in 0..200 {
+        let n = 1 << (10 + rng.below(15));
+        let threads = 1 + rng.below(12);
+        for isa in [Isa::Avx2, Isa::Avx512] {
+            let adv = simmodel::twopass_advantage(&SKYLAKE_X, isa, n, threads);
+            assert!(adv <= 5.0 / 3.0 + 1e-9, "advantage {adv} beats the 5N/3N bound");
+            assert!(adv > 0.2, "degenerate advantage {adv}");
+        }
+    }
+}
+
+#[test]
+fn model_time_monotone_in_problem_size() {
+    let mut rng = Rng::new(66);
+    for _ in 0..100 {
+        let n = 1 << (10 + rng.below(12));
+        for alg in Algorithm::ALL {
+            let t1 = simmodel::algorithm_secs(&SKYLAKE_X, Isa::Avx2, alg, n, 1);
+            let t2 = simmodel::algorithm_secs(&SKYLAKE_X, Isa::Avx2, alg, 2 * n, 1);
+            assert!(t2 > t1, "{alg}: time not monotone in n");
+        }
+    }
+}
+
+#[test]
+fn cost_model_consistent_with_pass_structure() {
+    for alg in Algorithm::ALL {
+        let row = costmodel::cost(alg);
+        assert_eq!(row.bandwidth_n, alg.bandwidth_cost());
+        assert!(costmodel::predict_secs(alg, 1 << 20, 10.0) > 0.0);
+    }
+}
