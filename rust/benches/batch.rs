@@ -1,0 +1,141 @@
+//! Bench: the batched softmax engine vs the row-at-a-time serving loop.
+//!
+//! `cargo bench --bench batch [-- --algorithm twopass --batches 8,64
+//!      --ns 8192,32768 --threads 1,2,4 --reps 5 --min-time 0.05]`
+//!
+//! Sweeps batch size × vocab size × kernel thread count and reports
+//! ns/element and effective GB/s (Table-2 traffic accounting: 3N for
+//! two-pass, 4N/5N for the three-pass variants), next to the same numbers
+//! for the pre-batching serving path — one `softmax_with` call plus one
+//! `Vec` allocation per row, exactly what `Router` used to do.
+
+use two_pass_softmax::softmax::batch::{softmax_batch, softmax_batch_parallel, RowBatch};
+use two_pass_softmax::softmax::{softmax_with, Algorithm, Isa};
+use two_pass_softmax::util::cli::Args;
+use two_pass_softmax::util::stats;
+use two_pass_softmax::util::table::Table;
+use two_pass_softmax::workload::{request_rowbatch, LogitsDist};
+
+fn gbps(alg: Algorithm, elems: usize, secs: f64) -> f64 {
+    (alg.bandwidth_cost() * elems * std::mem::size_of::<f32>()) as f64 / secs / 1e9
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    raw.retain(|a| a != "--bench");
+    let args = Args::parse(raw);
+    let alg: Algorithm = args
+        .opt("algorithm")
+        .unwrap_or("twopass")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let isa = Isa::detect_best();
+    let reps: usize = args.get("reps", 5).map_err(anyhow::Error::msg)?;
+    let min_time: f64 = args.get("min-time", 0.05).map_err(anyhow::Error::msg)?;
+    let batches: Vec<usize> = args.list("batches", &[8, 64]).map_err(anyhow::Error::msg)?;
+    // 32768: the out-of-cache serving shape the acceptance criterion names
+    // (64 x 32768 x 4 B = 8 MB per buffer, past every per-core cache).
+    let ns: Vec<usize> = args.list("ns", &[8192, 32768]).map_err(anyhow::Error::msg)?;
+    let cores = two_pass_softmax::softmax::batch::available_threads();
+    let default_threads: Vec<usize> =
+        [2usize, 4, cores].into_iter().filter(|&t| t > 1 && t <= cores).collect();
+    let mut threads: Vec<usize> =
+        args.list("threads", &default_threads).map_err(anyhow::Error::msg)?;
+    threads.retain(|&t| t > 1);
+    threads.dedup();
+
+    println!("batched softmax engine — {alg} on {isa}, {cores} cores\n");
+    let mut t = Table::new(
+        &format!("Batched engine vs row-at-a-time loop ({alg}, {isa})"),
+        &["batch", "n", "path", "threads", "ns_per_elem", "gb_s", "vs_rowloop"],
+    );
+
+    for &rows in &batches {
+        for &n in &ns {
+            let elems = rows * n;
+            let x = request_rowbatch(LogitsDist::Normal { mean: 0.0, std: 4.0 }, rows, n, 7);
+            let mut y = RowBatch::new(rows, n);
+
+            // The pre-batching serving path: per-row dispatch + per-row
+            // output allocation (native_rows as it was before this engine).
+            let t_row = stats::measure_median(
+                || {
+                    for r in 0..rows {
+                        let mut out = vec![0.0f32; n];
+                        softmax_with(alg, isa, x.row(r), &mut out).unwrap();
+                        std::hint::black_box(&out);
+                    }
+                },
+                reps,
+                min_time,
+            );
+            t.rowd(&[
+                rows.to_string(),
+                n.to_string(),
+                "rowloop".to_string(),
+                "1".to_string(),
+                format!("{:.4}", t_row * 1e9 / elems as f64),
+                format!("{:.2}", gbps(alg, elems, t_row)),
+                "1.00".to_string(),
+            ]);
+
+            // Batched engine, single thread.
+            let t_one = stats::measure_median(
+                || {
+                    softmax_batch(alg, isa, &x, &mut y).unwrap();
+                    std::hint::black_box(&y);
+                },
+                reps,
+                min_time,
+            );
+            t.rowd(&[
+                rows.to_string(),
+                n.to_string(),
+                "batch".to_string(),
+                "1".to_string(),
+                format!("{:.4}", t_one * 1e9 / elems as f64),
+                format!("{:.2}", gbps(alg, elems, t_one)),
+                format!("{:.2}", t_row / t_one),
+            ]);
+
+            // Batched engine, parallel row split.
+            let mut best_par = f64::INFINITY;
+            for &workers in &threads {
+                let t_par = stats::measure_median(
+                    || {
+                        softmax_batch_parallel(alg, isa, &x, &mut y, workers).unwrap();
+                        std::hint::black_box(&y);
+                    },
+                    reps,
+                    min_time,
+                );
+                best_par = best_par.min(t_par);
+                t.rowd(&[
+                    rows.to_string(),
+                    n.to_string(),
+                    "batch_par".to_string(),
+                    workers.to_string(),
+                    format!("{:.4}", t_par * 1e9 / elems as f64),
+                    format!("{:.2}", gbps(alg, elems, t_par)),
+                    format!("{:.2}", t_row / t_par),
+                ]);
+            }
+
+            if rows == 64 && n == 32768 {
+                println!(
+                    "acceptance 64x32768: batch/rowloop = {:.2}x single-thread{}",
+                    t_row / t_one,
+                    if best_par.is_finite() {
+                        format!(", best parallel/single = {:.2}x", t_one / best_par)
+                    } else {
+                        String::new()
+                    }
+                );
+            }
+        }
+    }
+
+    print!("{}", t.to_markdown());
+    t.save(std::path::Path::new("results/bench"), "batch")?;
+    Ok(())
+}

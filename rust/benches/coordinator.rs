@@ -28,7 +28,7 @@ fn run_once(
         queue_capacity: 1 << 14,
         ..ServeConfig::default()
     };
-    let router = Router::Native { algorithm: Algorithm::TwoPass, isa: Isa::detect_best() };
+    let router = Router::native(Algorithm::TwoPass, Isa::detect_best());
     let coord = Arc::new(Coordinator::start_with_router(&cfg, router));
     let t0 = Instant::now();
     let per = requests / clients;

@@ -45,6 +45,13 @@ pub struct ServeConfig {
     /// Bound on the pending queue before backpressure rejects.
     pub queue_capacity: usize,
     pub artifacts_dir: PathBuf,
+    /// Minimum batch size (rows × row length, in elements) before the
+    /// native engine parallelizes one batch across kernel threads; below
+    /// it batches run single-threaded (thread hand-off costs more than the
+    /// memory passes save on small working sets).
+    pub parallel_threshold: usize,
+    /// Kernel threads per batch for the native engine (0 = all cores).
+    pub batch_threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -58,6 +65,10 @@ impl Default for ServeConfig {
             workers: 2,
             queue_capacity: 1024,
             artifacts_dir: PathBuf::from("artifacts"),
+            // 512k f32 elements = 2 MB working set: past per-core L2 on
+            // every evaluated host, where extra memory streams start to pay.
+            parallel_threshold: 1 << 19,
+            batch_threads: 0,
         }
     }
 }
@@ -98,6 +109,12 @@ impl ServeConfig {
         if let Some(v) = root.get("artifacts_dir").and_then(Json::as_str) {
             self.artifacts_dir = PathBuf::from(v);
         }
+        if let Some(v) = root.get("parallel_threshold").and_then(Json::as_usize) {
+            self.parallel_threshold = v;
+        }
+        if let Some(v) = root.get("batch_threads").and_then(Json::as_usize) {
+            self.batch_threads = v;
+        }
         self.validate()
     }
 
@@ -120,6 +137,9 @@ impl ServeConfig {
         if let Some(v) = a.opt("artifacts") {
             self.artifacts_dir = PathBuf::from(v);
         }
+        self.parallel_threshold =
+            a.get("parallel-threshold", self.parallel_threshold).map_err(|e| anyhow!(e))?;
+        self.batch_threads = a.get("batch-threads", self.batch_threads).map_err(|e| anyhow!(e))?;
         self.validate()
     }
 
@@ -157,7 +177,8 @@ mod tests {
     fn json_overrides() {
         let j = Json::parse(
             r#"{"backend": "native", "algorithm": "threepass_reload",
-                "max_batch": 16, "workers": 3}"#,
+                "max_batch": 16, "workers": 3,
+                "parallel_threshold": 4096, "batch_threads": 2}"#,
         )
         .unwrap();
         let mut c = ServeConfig::default();
@@ -166,12 +187,15 @@ mod tests {
         assert_eq!(c.algorithm, Algorithm::ThreePassReload);
         assert_eq!(c.max_batch, 16);
         assert_eq!(c.workers, 3);
+        assert_eq!(c.parallel_threshold, 4096);
+        assert_eq!(c.batch_threads, 2);
     }
 
     #[test]
     fn cli_overrides() {
         let a = Args::parse(
-            ["--algorithm", "twopass", "--max-batch", "4", "--workers", "1"]
+            ["--algorithm", "twopass", "--max-batch", "4", "--workers", "1",
+             "--parallel-threshold", "1024", "--batch-threads", "3"]
                 .iter()
                 .map(|s| s.to_string()),
         );
@@ -179,6 +203,8 @@ mod tests {
         c.apply_args(&a).unwrap();
         assert_eq!(c.algorithm, Algorithm::TwoPass);
         assert_eq!(c.max_batch, 4);
+        assert_eq!(c.parallel_threshold, 1024);
+        assert_eq!(c.batch_threads, 3);
     }
 
     #[test]

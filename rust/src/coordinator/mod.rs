@@ -116,28 +116,40 @@ fn worker_loop(batcher: &Batcher, metrics: &Metrics, router: &Router) {
     while let Some(mut batch) = batcher.take_batch() {
         let exec_start = Instant::now();
         // Move the payloads out of the requests instead of deep-copying the
-        // logits on the hot path (§Perf: ~6% of serve time at N=8192).
+        // logits on the hot path (§Perf: ~6% of serve time at N=8192); the
+        // router consumes them into one flat row-major batch and returns
+        // the outputs the same way.
         let payloads: Vec<Payload> = batch
             .iter_mut()
             .map(|r| std::mem::replace(&mut r.payload, Payload::Logits(Vec::new())))
             .collect();
-        let result = router.execute(&payloads);
+        let batch_size = batch.len();
+        let result = router.execute(payloads).and_then(|out| {
+            if out.rows() == batch_size {
+                Ok(out)
+            } else {
+                Err(anyhow::anyhow!(
+                    "router returned {} rows for {batch_size} requests",
+                    out.rows()
+                ))
+            }
+        });
         let exec_us = exec_start.elapsed().as_secs_f64() * 1e6;
-        metrics.record_batch(batch.len(), exec_us);
+        metrics.record_batch(batch_size, exec_us);
 
         match result {
-            Ok(rows) => {
-                for (req, probs) in batch.into_iter().zip(rows) {
+            Ok(out) => {
+                for (i, req) in batch.into_iter().enumerate() {
                     let queue_us =
                         exec_start.duration_since(req.enqueued).as_secs_f64() * 1e6;
                     let e2e_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
                     metrics.record_request(queue_us, e2e_us, true);
                     let _ = req.tx.send(Response {
                         id: req.id,
-                        probs,
+                        probs: out.row(i).to_vec(),
                         queue_us: queue_us as u64,
                         exec_us: exec_us as u64,
-                        batch_size: payloads.len(),
+                        batch_size,
                         error: None,
                     });
                 }
@@ -153,7 +165,7 @@ fn worker_loop(batcher: &Batcher, metrics: &Metrics, router: &Router) {
                         probs: Vec::new(),
                         queue_us: queue_us as u64,
                         exec_us: exec_us as u64,
-                        batch_size: payloads.len(),
+                        batch_size,
                         error: Some(msg.clone()),
                     });
                 }
@@ -178,7 +190,7 @@ mod tests {
     }
 
     fn native() -> Router {
-        Router::Native { algorithm: Algorithm::TwoPass, isa: Isa::detect_best() }
+        Router::native(Algorithm::TwoPass, Isa::detect_best())
     }
 
     #[test]

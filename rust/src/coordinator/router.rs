@@ -1,117 +1,159 @@
 //! Request routing: which backend executes a formed batch.
 //!
-//! * [`Router::Native`] — the in-process Rust kernels (softmax module);
-//!   used for raw-logits serving and as the fallback.
+//! * [`Router::Native`] — the in-process batched softmax engine
+//!   ([`crate::softmax::batch`]): payloads are assembled into one flat
+//!   row-major [`RowBatch`] (a single allocation, no `Vec<Vec<f32>>`), the
+//!   algorithm/ISA dispatch is hoisted out of the row loop, and batches
+//!   above the configured `parallel_threshold` are split across kernel
+//!   threads.
 //! * [`Router::Pjrt`] — AOT-compiled XLA artifacts through the PJRT
 //!   executor service ([`crate::runtime::service::PjrtService`]): the
 //!   service thread owns the non-`Send` PJRT client, picks the smallest
 //!   batch *bucket* that fits (executables are shape-specialized, so the
 //!   batch is padded up to the bucket and the padding discarded), and the
-//!   router falls back to the native kernels for logits shapes no artifact
-//!   was built for.
+//!   router falls back to the native engine for logits shapes no artifact
+//!   was built for — the service hands the input batch back on that error,
+//!   so the fallback costs no extra copy.
+//!
+//! `execute` consumes the payloads and returns one output [`RowBatch`];
+//! the coordinator slices per-request responses out of it.
 
 use anyhow::{anyhow, Result};
 
 use crate::config::{Backend, ServeConfig};
 use crate::runtime::service::PjrtService;
-use crate::softmax::{self, Algorithm, Isa};
+use crate::softmax::batch::{softmax_batch_auto, RowBatch};
+use crate::softmax::{Algorithm, Isa};
 
 use super::request::Payload;
 
+/// The in-process batched kernel engine and its threading policy.
+pub struct NativeEngine {
+    pub algorithm: Algorithm,
+    pub isa: Isa,
+    /// Elements (rows × n) below which a batch stays single-threaded.
+    pub parallel_threshold: usize,
+    /// Kernel threads per batch (0 = all cores).
+    pub batch_threads: usize,
+}
+
+impl NativeEngine {
+    pub fn from_config(cfg: &ServeConfig) -> NativeEngine {
+        NativeEngine {
+            algorithm: cfg.algorithm,
+            isa: cfg.isa,
+            parallel_threshold: cfg.parallel_threshold,
+            batch_threads: cfg.batch_threads,
+        }
+    }
+
+    /// Normalize every row of `x` into a fresh output batch.
+    pub fn run(&self, x: &RowBatch) -> Result<RowBatch> {
+        let mut y = RowBatch::new(x.rows(), x.n());
+        softmax_batch_auto(
+            self.algorithm,
+            self.isa,
+            x,
+            &mut y,
+            self.parallel_threshold,
+            self.batch_threads,
+        )
+        .map_err(|e| anyhow!("{e}"))?;
+        Ok(y)
+    }
+}
+
 /// Executes same-key batches. `Send + Sync`; shared by the worker pool.
 pub enum Router {
-    Native {
-        algorithm: Algorithm,
-        isa: Isa,
-    },
+    Native(NativeEngine),
     Pjrt {
         svc: PjrtService,
         /// Softmax artifact variant to route to ("twopass", ...).
         variant: String,
-        /// Fallback for logits shapes without artifacts.
-        algorithm: Algorithm,
-        isa: Isa,
+        /// Fallback engine for logits shapes without artifacts.
+        native: NativeEngine,
     },
 }
 
 impl Router {
+    /// A native router with the default threading policy (tests, benches).
+    pub fn native(algorithm: Algorithm, isa: Isa) -> Router {
+        let defaults = ServeConfig::default();
+        Router::Native(NativeEngine {
+            algorithm,
+            isa,
+            parallel_threshold: defaults.parallel_threshold,
+            batch_threads: defaults.batch_threads,
+        })
+    }
+
     /// Build from config (starts the PJRT service for the pjrt backend).
     pub fn from_config(cfg: &ServeConfig) -> Result<Router> {
+        let native = NativeEngine::from_config(cfg);
         match cfg.backend {
-            Backend::Native => Ok(Router::Native { algorithm: cfg.algorithm, isa: cfg.isa }),
+            Backend::Native => Ok(Router::Native(native)),
             Backend::Pjrt => {
                 let svc = PjrtService::start(cfg.artifacts_dir.clone())?;
-                Ok(Router::Pjrt {
-                    svc,
-                    variant: cfg.algorithm.to_string(),
-                    algorithm: cfg.algorithm,
-                    isa: cfg.isa,
-                })
+                Ok(Router::Pjrt { svc, variant: cfg.algorithm.to_string(), native })
             }
         }
     }
 
-    /// Execute one batch (all payloads share a batch key). Returns one
-    /// probability vector per request, in order.
-    pub fn execute(&self, batch: &[Payload]) -> Result<Vec<Vec<f32>>> {
-        let first = batch.first().ok_or_else(|| anyhow!("empty batch"))?;
-        match first {
-            Payload::Logits(_) => self.execute_logits(batch),
-            Payload::Tokens(_) => self.execute_tokens(batch),
+    /// Execute one batch (all payloads share a batch key).  Consumes the
+    /// payloads and returns the output rows as one flat row-major batch,
+    /// in request order.
+    pub fn execute(&self, batch: Vec<Payload>) -> Result<RowBatch> {
+        match batch.first() {
+            None => Err(anyhow!("empty batch")),
+            Some(Payload::Logits(_)) => self.execute_logits(batch),
+            Some(Payload::Tokens(_)) => self.execute_tokens(batch),
         }
     }
 
-    fn execute_logits(&self, batch: &[Payload]) -> Result<Vec<Vec<f32>>> {
-        let rows: Vec<&[f32]> = batch
-            .iter()
-            .map(|p| match p {
-                Payload::Logits(v) => Ok(v.as_slice()),
-                _ => Err(anyhow!("mixed payload kinds in batch")),
-            })
-            .collect::<Result<_>>()?;
-        let n = rows[0].len();
-        if rows.iter().any(|r| r.len() != n) {
-            return Err(anyhow!("mixed lengths in batch"));
+    fn execute_logits(&self, batch: Vec<Payload>) -> Result<RowBatch> {
+        let n = batch[0].len();
+        if n == 0 {
+            return Err(anyhow!("empty logits row"));
+        }
+        // One allocation for the whole batch; rows are copied once, from
+        // the payload straight into kernel-ready row-major storage.
+        let mut x = RowBatch::with_capacity(batch.len(), n);
+        for p in &batch {
+            match p {
+                Payload::Logits(v) if v.len() == n => {
+                    x.push_row(v).map_err(|e| anyhow!("{e}"))?;
+                }
+                Payload::Logits(_) => return Err(anyhow!("mixed lengths in batch")),
+                Payload::Tokens(_) => return Err(anyhow!("mixed payload kinds in batch")),
+            }
         }
         match self {
-            Router::Native { algorithm, isa } => native_rows(&rows, *algorithm, *isa),
-            Router::Pjrt { svc, variant, algorithm, isa } => {
-                let owned: Vec<Vec<f32>> = rows.iter().map(|r| r.to_vec()).collect();
-                match svc.softmax(variant, owned) {
-                    Ok(out) => Ok(out),
-                    // No artifact for this shape → serve natively.
-                    Err(e) if e.to_string().contains("no ") => {
-                        native_rows(&rows, *algorithm, *isa)
-                    }
-                    Err(e) => Err(e),
-                }
-            }
+            Router::Native(engine) => engine.run(&x),
+            Router::Pjrt { svc, variant, native } => match svc.softmax(variant, x) {
+                Ok(out) => Ok(out),
+                // No artifact for this shape → serve natively; the service
+                // returned the input batch, so no re-assembly is needed.
+                Err((Some(x), e)) if e.to_string().contains("no ") => native.run(&x),
+                Err((_, e)) => Err(e),
+            },
         }
     }
 
-    fn execute_tokens(&self, batch: &[Payload]) -> Result<Vec<Vec<f32>>> {
+    fn execute_tokens(&self, batch: Vec<Payload>) -> Result<RowBatch> {
+        // Token rows are moved out of the payloads, not cloned; the PJRT
+        // service flattens them into its bucket-padded buffer.
         let rows: Vec<Vec<i32>> = batch
-            .iter()
+            .into_iter()
             .map(|p| match p {
-                Payload::Tokens(t) => Ok(t.clone()),
-                _ => Err(anyhow!("mixed payload kinds in batch")),
+                Payload::Tokens(t) => Ok(t),
+                Payload::Logits(_) => Err(anyhow!("mixed payload kinds in batch")),
             })
             .collect::<Result<_>>()?;
         match self {
             Router::Pjrt { svc, .. } => svc.lm(rows),
-            Router::Native { .. } => Err(anyhow!("token requests require the pjrt backend")),
+            Router::Native(_) => Err(anyhow!("token requests require the pjrt backend")),
         }
     }
-}
-
-fn native_rows(rows: &[&[f32]], alg: Algorithm, isa: Isa) -> Result<Vec<Vec<f32>>> {
-    rows.iter()
-        .map(|r| {
-            let mut y = vec![0.0f32; r.len()];
-            softmax::softmax_with(alg, isa, r, &mut y).map_err(|e| anyhow!("{e}"))?;
-            Ok(y)
-        })
-        .collect()
 }
 
 #[cfg(test)]
@@ -120,31 +162,55 @@ mod tests {
 
     #[test]
     fn native_router_normalizes_batches() {
-        let r = Router::Native { algorithm: Algorithm::TwoPass, isa: Isa::detect_best() };
+        let r = Router::native(Algorithm::TwoPass, Isa::detect_best());
         let batch = vec![
             Payload::Logits(vec![1.0, 2.0, 3.0]),
             Payload::Logits(vec![0.0, 0.0, 0.0]),
         ];
-        let out = r.execute(&batch).unwrap();
-        assert_eq!(out.len(), 2);
-        for row in &out {
+        let out = r.execute(batch).unwrap();
+        assert_eq!(out.rows(), 2);
+        assert_eq!(out.n(), 3);
+        for row in out.iter_rows() {
             assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
         }
-        assert!((out[1][0] - 1.0 / 3.0).abs() < 1e-6);
+        assert!((out.row(1)[0] - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn native_output_matches_single_row_kernels() {
+        let r = Router::native(Algorithm::TwoPass, Isa::detect_best());
+        let logits: Vec<Vec<f32>> =
+            (0..5).map(|i| (0..97).map(|j| ((i * j) % 13) as f32 - 6.0).collect()).collect();
+        let batch: Vec<Payload> = logits.iter().map(|v| Payload::Logits(v.clone())).collect();
+        let out = r.execute(batch).unwrap();
+        for (i, row) in logits.iter().enumerate() {
+            let mut want = vec![0.0f32; row.len()];
+            crate::softmax::softmax_with(
+                Algorithm::TwoPass,
+                Isa::detect_best(),
+                row,
+                &mut want,
+            )
+            .unwrap();
+            assert_eq!(out.row(i), &want[..], "row {i}");
+        }
     }
 
     #[test]
     fn native_router_rejects_tokens() {
-        let r = Router::Native { algorithm: Algorithm::TwoPass, isa: Isa::Scalar };
-        assert!(r.execute(&[Payload::Tokens(vec![1, 2, 3])]).is_err());
+        let r = Router::native(Algorithm::TwoPass, Isa::Scalar);
+        assert!(r.execute(vec![Payload::Tokens(vec![1, 2, 3])]).is_err());
     }
 
     #[test]
     fn empty_and_mixed_batches_rejected() {
-        let r = Router::Native { algorithm: Algorithm::TwoPass, isa: Isa::Scalar };
-        assert!(r.execute(&[]).is_err());
+        let r = Router::native(Algorithm::TwoPass, Isa::Scalar);
+        assert!(r.execute(Vec::new()).is_err());
         let mixed =
             vec![Payload::Logits(vec![1.0, 2.0]), Payload::Logits(vec![1.0, 2.0, 3.0])];
-        assert!(r.execute(&mixed).is_err());
+        assert!(r.execute(mixed).is_err());
+        let kinds = vec![Payload::Logits(vec![1.0, 2.0]), Payload::Tokens(vec![1, 2])];
+        assert!(r.execute(kinds).is_err());
+        assert!(r.execute(vec![Payload::Logits(Vec::new())]).is_err());
     }
 }

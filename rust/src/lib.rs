@@ -37,4 +37,4 @@ pub mod stream;
 pub mod util;
 pub mod workload;
 
-pub use softmax::{softmax, softmax_inplace, Algorithm, Isa};
+pub use softmax::{softmax, softmax_batch, softmax_inplace, Algorithm, Isa, RowBatch};

@@ -31,7 +31,8 @@ USAGE:
   repro tune [--n N] [--reps N] [--save FILE]
   repro serve [--backend native|pjrt] [--algorithm twopass|reload|recompute]
         [--requests N] [--n LOGITS] [--clients K] [--max-batch B] [--workers W]
-        [--max-wait-us U] [--artifacts DIR] [--config FILE]
+        [--max-wait-us U] [--parallel-threshold ELEMS] [--batch-threads T]
+        [--artifacts DIR] [--config FILE]
   repro verify [--artifacts DIR]
 ";
 

@@ -6,6 +6,12 @@
 //! directly.  Instead one service thread owns the [`Runtime`] — which also
 //! matches the hardware reality (one device, serialized execution) — and
 //! workers enqueue jobs and block on a reply channel.
+//!
+//! Batches travel as flat row-major [`RowBatch`]es in both directions (one
+//! move, no per-row `Vec`s).  When a softmax job fails — typically because
+//! no artifact was built for the shape — the service sends the *input
+//! batch back* with the error, so the router's native fallback can run on
+//! it without re-assembling the rows.
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -14,14 +20,23 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
+use crate::softmax::batch::RowBatch;
+
 use super::{EntryKind, Runtime};
+
+/// A failed softmax job: the input batch (when still available) + cause.
+pub type SoftmaxJobError = (Option<RowBatch>, anyhow::Error);
 
 /// A unit of PJRT work.
 pub enum Job {
     /// Softmax rows (same n) through the artifact for `variant`.
-    Softmax { variant: String, rows: Vec<Vec<f32>>, reply: mpsc::SyncSender<Result<Vec<Vec<f32>>>> },
+    Softmax {
+        variant: String,
+        batch: RowBatch,
+        reply: mpsc::SyncSender<Result<RowBatch, SoftmaxJobError>>,
+    },
     /// LM next-token distributions for token rows (same seq).
-    Lm { rows: Vec<Vec<i32>>, reply: mpsc::SyncSender<Result<Vec<Vec<f32>>>> },
+    Lm { rows: Vec<Vec<i32>>, reply: mpsc::SyncSender<Result<RowBatch>> },
     Shutdown,
 }
 
@@ -59,19 +74,32 @@ impl PjrtService {
         }
     }
 
-    /// Execute softmax rows through the service (blocking).
-    pub fn softmax(&self, variant: &str, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+    /// Execute a softmax batch through the service (blocking).  On failure
+    /// the error carries the input batch back when it survived the trip,
+    /// so callers can fall back without copying.
+    pub fn softmax(
+        &self,
+        variant: &str,
+        batch: RowBatch,
+    ) -> Result<RowBatch, SoftmaxJobError> {
         let (reply, rx) = mpsc::sync_channel(1);
-        self.tx
-            .lock()
-            .unwrap()
-            .send(Job::Softmax { variant: variant.to_string(), rows, reply })
-            .map_err(|_| anyhow!("PJRT service is down"))?;
-        rx.recv().map_err(|_| anyhow!("PJRT service dropped the job"))?
+        let job = Job::Softmax { variant: variant.to_string(), batch, reply };
+        if let Err(mpsc::SendError(job)) = self.tx.lock().unwrap().send(job) {
+            let batch = match job {
+                Job::Softmax { batch, .. } => Some(batch),
+                _ => None,
+            };
+            return Err((batch, anyhow!("PJRT service is down")));
+        }
+        match rx.recv() {
+            Ok(result) => result,
+            Err(_) => Err((None, anyhow!("PJRT service dropped the job"))),
+        }
     }
 
-    /// Execute LM rows through the service (blocking).
-    pub fn lm(&self, rows: Vec<Vec<i32>>) -> Result<Vec<Vec<f32>>> {
+    /// Execute LM rows through the service (blocking).  Returns one
+    /// (rows × vocab) probability batch.
+    pub fn lm(&self, rows: Vec<Vec<i32>>) -> Result<RowBatch> {
         let (reply, rx) = mpsc::sync_channel(1);
         self.tx
             .lock()
@@ -95,8 +123,14 @@ fn service_loop(rt: &Runtime, rx: &mpsc::Receiver<Job>) {
     while let Ok(job) = rx.recv() {
         match job {
             Job::Shutdown => break,
-            Job::Softmax { variant, rows, reply } => {
-                let _ = reply.send(exec_softmax(rt, &variant, &rows));
+            Job::Softmax { variant, batch, reply } => {
+                let result = match exec_softmax(rt, &variant, &batch) {
+                    Ok(out) => Ok(out),
+                    // Hand the input back with the error: the router reuses
+                    // it for the native fallback.
+                    Err(e) => Err((Some(batch), e)),
+                };
+                let _ = reply.send(result);
             }
             Job::Lm { rows, reply } => {
                 let _ = reply.send(exec_lm(rt, &rows));
@@ -105,38 +139,44 @@ fn service_loop(rt: &Runtime, rx: &mpsc::Receiver<Job>) {
     }
 }
 
-fn exec_softmax(rt: &Runtime, variant: &str, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-    let n = rows.first().ok_or_else(|| anyhow!("empty batch"))?.len();
-    if rows.iter().any(|r| r.len() != n) {
-        return Err(anyhow!("mixed lengths in batch"));
+fn exec_softmax(rt: &Runtime, variant: &str, batch: &RowBatch) -> Result<RowBatch> {
+    let rows = batch.rows();
+    let n = batch.n();
+    if rows == 0 {
+        return Err(anyhow!("empty batch"));
     }
-    // Smallest artifact bucket (variant, b >= rows.len(), n).
+    // Smallest artifact bucket (variant, b >= rows, n).
     let bucket = rt
         .manifest
         .softmax_entries()
         .filter_map(|e| match &e.kind {
-            EntryKind::Softmax { variant: v, batch, n: nn }
-                if v == variant && *nn == n && *batch >= rows.len() =>
+            EntryKind::Softmax { variant: v, batch: b, n: nn }
+                if v == variant && *nn == n && *b >= rows =>
             {
-                Some((*batch, e.name.clone()))
+                Some((*b, e.name.clone()))
             }
             _ => None,
         })
         .min_by_key(|(b, _)| *b)
-        .ok_or_else(|| anyhow!("no {variant} artifact for batch {} x n {n}", rows.len()))?;
+        .ok_or_else(|| anyhow!("no {variant} artifact for batch {rows} x n {n}"))?;
     let (b, name) = bucket;
-    let mut flat = Vec::with_capacity(b * n);
-    for r in rows {
-        flat.extend_from_slice(r);
-    }
-    for _ in rows.len()..b {
-        flat.extend_from_slice(&rows[0]); // pad rows; discarded below
-    }
-    let out = rt.run_softmax(&name, &flat)?;
-    Ok((0..rows.len()).map(|i| out[i * n..(i + 1) * n].to_vec()).collect())
+    // Exact-fit bucket: execute straight off the batch storage (the common
+    // steady-state case when the batcher fills to a bucket size).
+    let mut out = if b == rows {
+        rt.run_softmax(&name, batch.as_slice())?
+    } else {
+        let mut flat = Vec::with_capacity(b * n);
+        flat.extend_from_slice(batch.as_slice());
+        for _ in rows..b {
+            flat.extend_from_slice(batch.row(0)); // pad rows; discarded below
+        }
+        rt.run_softmax(&name, &flat)?
+    };
+    out.truncate(rows * n);
+    Ok(RowBatch::from_vec(out, rows, n))
 }
 
-fn exec_lm(rt: &Runtime, rows: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
+fn exec_lm(rt: &Runtime, rows: &[Vec<i32>]) -> Result<RowBatch> {
     let seq = rows.first().ok_or_else(|| anyhow!("empty batch"))?.len();
     if rows.iter().any(|r| r.len() != seq) {
         return Err(anyhow!("mixed sequence lengths in batch"));
@@ -158,6 +198,7 @@ fn exec_lm(rt: &Runtime, rows: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
     for _ in rows.len()..bucket {
         flat.extend_from_slice(&rows[0]);
     }
-    let out = rt.run_lm(&name, &flat)?;
-    Ok((0..rows.len()).map(|i| out[i * vocab..(i + 1) * vocab].to_vec()).collect())
+    let mut out = rt.run_lm(&name, &flat)?;
+    out.truncate(rows.len() * vocab);
+    Ok(RowBatch::from_vec(out, rows.len(), vocab))
 }

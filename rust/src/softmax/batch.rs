@@ -1,0 +1,592 @@
+//! Batched softmax engine: flat row-major batches + multi-row kernels.
+//!
+//! The serving path executes *batches* of same-length rows, but the
+//! original hot loop went through the single-row API once per row: an
+//! algorithm/ISA `match`, a heap allocation, and a `Vec<Vec<f32>>` hop per
+//! row.  For a memory-bound kernel (the whole point of the paper — 3N vs
+//! 4–5N traffic) that overhead and pointer-chasing is pure waste.  This
+//! module provides:
+//!
+//! * [`RowBatch`] — one contiguous row-major `Vec<f32>` (rows × n) with
+//!   per-row views, the batch currency of the coordinator;
+//! * [`softmax_batch`] — per-ISA batched kernels where the
+//!   algorithm/ISA dispatch is hoisted *out* of the row loop and the same
+//!   unroll-tuned pass functions as the single-row API are reused across
+//!   rows (outputs are bit-identical to [`softmax_with`] per row);
+//! * cache blocking: rows are processed in blocks sized to half the
+//!   per-core L2, pass-major *within* a block — every row of a block is
+//!   still cache-resident when its next pass runs, and short rows get
+//!   cross-row instruction-level parallelism the per-row loop cannot;
+//! * [`softmax_batch_parallel`] — a scoped worker pool splitting the batch
+//!   at row boundaries across `std::thread` workers (softmax rows are
+//!   independent, so this is embarrassingly parallel);
+//! * [`softmax_batch_auto`] — the serving entry point: single-threaded
+//!   below a configurable element-count threshold
+//!   ([`crate::config::ServeConfig::parallel_threshold`]), parallel above.
+//!
+//! [`softmax_with`]: crate::softmax::softmax_with
+
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+use super::{avx2, avx512};
+use super::{exp::ExtSum, scalar, Algorithm, Isa, SoftmaxError};
+
+// ---------------------------------------------------------------------------
+// RowBatch
+// ---------------------------------------------------------------------------
+
+/// A dense row-major batch of `rows` vectors of length `n`, backed by one
+/// contiguous allocation (stride == `n`, no padding).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowBatch {
+    data: Vec<f32>,
+    rows: usize,
+    n: usize,
+}
+
+impl RowBatch {
+    /// A zero-filled `rows × n` batch (the usual output buffer).
+    pub fn new(rows: usize, n: usize) -> RowBatch {
+        RowBatch { data: vec![0.0; rows * n], rows, n }
+    }
+
+    /// An empty batch of row length `n` with room for `rows` rows
+    /// pre-reserved; fill it with [`RowBatch::push_row`].
+    pub fn with_capacity(rows: usize, n: usize) -> RowBatch {
+        RowBatch { data: Vec::with_capacity(rows * n), rows: 0, n }
+    }
+
+    /// Wrap an existing flat row-major buffer (must be exactly `rows × n`).
+    pub fn from_vec(data: Vec<f32>, rows: usize, n: usize) -> RowBatch {
+        assert_eq!(data.len(), rows * n, "flat buffer is not rows x n");
+        RowBatch { data, rows, n }
+    }
+
+    /// Copy borrowed rows (all of length `n`) into a fresh batch.
+    pub fn from_rows<'a, I>(rows: I, n: usize) -> Result<RowBatch, SoftmaxError>
+    where
+        I: IntoIterator<Item = &'a [f32]>,
+    {
+        let mut b = RowBatch::with_capacity(0, n);
+        for r in rows {
+            b.push_row(r)?;
+        }
+        Ok(b)
+    }
+
+    /// Append one row; its length must equal the batch row length.
+    pub fn push_row(&mut self, row: &[f32]) -> Result<(), SoftmaxError> {
+        if row.len() != self.n {
+            return Err(SoftmaxError::LengthMismatch { x: row.len(), y: self.n });
+        }
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+        Ok(())
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Row length (also the row stride: rows are packed without padding).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.n..i * self.n + self.n]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.n..i * self.n + self.n]
+    }
+
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> {
+        (0..self.rows).map(move |i| self.row(i))
+    }
+
+    /// The whole batch as one flat row-major slice.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Take the flat buffer out (e.g. to hand to an executor that pads it).
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched kernels
+// ---------------------------------------------------------------------------
+
+/// Compute `y[r] = softmax(x[r])` for every row of the batch, single
+/// thread.  Dispatch on (algorithm, ISA) happens once per call, not once
+/// per row; rows run through the same unroll-tuned pass functions as
+/// [`softmax_with`](crate::softmax::softmax_with), in L2-sized row blocks.
+pub fn softmax_batch(
+    alg: Algorithm,
+    isa: Isa,
+    x: &RowBatch,
+    y: &mut RowBatch,
+) -> Result<(), SoftmaxError> {
+    validate(x, y, isa)?;
+    if x.rows == 0 {
+        return Ok(());
+    }
+    run_rows(alg, isa, x.as_slice(), y.as_mut_slice(), x.n, block_rows_for(x.n));
+    Ok(())
+}
+
+/// [`softmax_batch`] with an explicit cache-block size in rows (tuning and
+/// test hook; `softmax_batch` derives the block from the host's L2).
+pub fn softmax_batch_with_block(
+    alg: Algorithm,
+    isa: Isa,
+    x: &RowBatch,
+    y: &mut RowBatch,
+    block_rows: usize,
+) -> Result<(), SoftmaxError> {
+    validate(x, y, isa)?;
+    if x.rows == 0 {
+        return Ok(());
+    }
+    run_rows(alg, isa, x.as_slice(), y.as_mut_slice(), x.n, block_rows.max(1));
+    Ok(())
+}
+
+/// Parallel [`softmax_batch`]: the batch is split at row boundaries into
+/// `threads` contiguous chunks, each normalized by a scoped worker thread.
+/// Row outputs are bit-identical to the single-threaded path (softmax rows
+/// are independent; no cross-row reduction exists).
+pub fn softmax_batch_parallel(
+    alg: Algorithm,
+    isa: Isa,
+    x: &RowBatch,
+    y: &mut RowBatch,
+    threads: usize,
+) -> Result<(), SoftmaxError> {
+    validate(x, y, isa)?;
+    if x.rows == 0 {
+        return Ok(());
+    }
+    let t = threads.clamp(1, x.rows);
+    let n = x.n;
+    let block = block_rows_for(n);
+    if t <= 1 {
+        run_rows(alg, isa, x.as_slice(), y.as_mut_slice(), n, block);
+        return Ok(());
+    }
+    let chunk_rows = x.rows.div_ceil(t);
+    std::thread::scope(|s| {
+        let mut xs: &[f32] = x.as_slice();
+        let mut ys: &mut [f32] = y.as_mut_slice();
+        while !xs.is_empty() {
+            let take = (chunk_rows * n).min(xs.len());
+            let (xc, x_rest) = xs.split_at(take);
+            xs = x_rest;
+            let (yc, y_rest) = std::mem::take(&mut ys).split_at_mut(take);
+            ys = y_rest;
+            s.spawn(move || run_rows(alg, isa, xc, yc, n, block));
+        }
+    });
+    Ok(())
+}
+
+/// Serving entry point: single-threaded when the batch is small
+/// (`rows · n < parallel_threshold`), parallel otherwise.  `max_threads =
+/// 0` means "all available cores".
+pub fn softmax_batch_auto(
+    alg: Algorithm,
+    isa: Isa,
+    x: &RowBatch,
+    y: &mut RowBatch,
+    parallel_threshold: usize,
+    max_threads: usize,
+) -> Result<(), SoftmaxError> {
+    let threads = if max_threads == 0 { available_threads() } else { max_threads };
+    if threads <= 1 || x.rows() < 2 || x.rows() * x.n() < parallel_threshold {
+        softmax_batch(alg, isa, x, y)
+    } else {
+        softmax_batch_parallel(alg, isa, x, y, threads)
+    }
+}
+
+/// Logical CPUs available to this process (1 if detection fails).  Cached:
+/// `softmax_batch_auto` consults this per batch, and the underlying
+/// `available_parallelism` is a syscall.
+pub fn available_threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS
+        .get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+fn validate(x: &RowBatch, y: &RowBatch, isa: Isa) -> Result<(), SoftmaxError> {
+    // Report the dimension that actually disagrees (row length first, then
+    // row count) so the numbers in the error are ones the caller recognizes.
+    if x.n != y.n {
+        return Err(SoftmaxError::LengthMismatch { x: x.n, y: y.n });
+    }
+    if x.rows != y.rows {
+        return Err(SoftmaxError::LengthMismatch { x: x.rows, y: y.rows });
+    }
+    if x.rows > 0 && x.n == 0 {
+        return Err(SoftmaxError::EmptyInput);
+    }
+    if !isa.available() {
+        return Err(SoftmaxError::IsaUnavailable(isa));
+    }
+    Ok(())
+}
+
+/// Rows per cache block: input + output block (2 · n · 4 bytes per row)
+/// should fit in half the per-core L2, so every row a pass touched is
+/// still resident when the algorithm's next pass runs over the block.
+fn block_rows_for(n: usize) -> usize {
+    static L2_BUDGET: OnceLock<usize> = OnceLock::new();
+    let budget = *L2_BUDGET.get_or_init(|| crate::platform::detect().l2() / 2);
+    (budget / (2 * std::mem::size_of::<f32>() * n.max(1))).max(1)
+}
+
+/// One-time dispatch, then the blocked row loop on the chosen kernel.
+fn run_rows(alg: Algorithm, isa: Isa, x: &[f32], y: &mut [f32], n: usize, block: usize) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len() % n, 0);
+    match isa {
+        Isa::Scalar => kernel_scalar(alg, x, y, n, block),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: callers validated ISA availability.
+        Isa::Avx2 => unsafe { kernel_avx2(alg, x, y, n, block) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: callers validated ISA availability.
+        Isa::Avx512 => unsafe { kernel_avx512(alg, x, y, n, block) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => unreachable!("non-scalar ISA unavailable on this arch"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocked drivers: generic over the pass functions, so each ISA kernel
+// monomorphizes one copy with its own unroll-tuned passes.  Within a block
+// the loop is pass-major (all rows pass 1, then all rows pass 2, ...);
+// block sizing keeps the whole block cache-resident between passes.
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn drive_recompute(
+    x: &[f32],
+    y: &mut [f32],
+    n: usize,
+    block: usize,
+    pass_max: impl Fn(&[f32]) -> f32,
+    pass_sumexp: impl Fn(&[f32], f32) -> f32,
+    pass_scaleexp: impl Fn(&[f32], f32, f32, &mut [f32]),
+) {
+    let rows = x.len() / n;
+    let mut mu = Vec::with_capacity(block.min(rows));
+    let mut sigma = Vec::with_capacity(block.min(rows));
+    let mut r0 = 0;
+    while r0 < rows {
+        let b = block.min(rows - r0);
+        mu.clear();
+        sigma.clear();
+        for r in r0..r0 + b {
+            mu.push(pass_max(&x[r * n..r * n + n]));
+        }
+        for (i, r) in (r0..r0 + b).enumerate() {
+            sigma.push(pass_sumexp(&x[r * n..r * n + n], mu[i]));
+        }
+        for (i, r) in (r0..r0 + b).enumerate() {
+            pass_scaleexp(&x[r * n..r * n + n], mu[i], 1.0 / sigma[i], &mut y[r * n..r * n + n]);
+        }
+        r0 += b;
+    }
+}
+
+#[inline(always)]
+fn drive_reload(
+    x: &[f32],
+    y: &mut [f32],
+    n: usize,
+    block: usize,
+    pass_max: impl Fn(&[f32]) -> f32,
+    pass_storeexp: impl Fn(&[f32], f32, &mut [f32]) -> f32,
+    pass_scale_inplace: impl Fn(&mut [f32], f32),
+) {
+    let rows = x.len() / n;
+    let mut mu = Vec::with_capacity(block.min(rows));
+    let mut sigma = Vec::with_capacity(block.min(rows));
+    let mut r0 = 0;
+    while r0 < rows {
+        let b = block.min(rows - r0);
+        mu.clear();
+        sigma.clear();
+        for r in r0..r0 + b {
+            mu.push(pass_max(&x[r * n..r * n + n]));
+        }
+        for (i, r) in (r0..r0 + b).enumerate() {
+            sigma.push(pass_storeexp(&x[r * n..r * n + n], mu[i], &mut y[r * n..r * n + n]));
+        }
+        for (i, r) in (r0..r0 + b).enumerate() {
+            pass_scale_inplace(&mut y[r * n..r * n + n], 1.0 / sigma[i]);
+        }
+        r0 += b;
+    }
+}
+
+#[inline(always)]
+fn drive_twopass(
+    x: &[f32],
+    y: &mut [f32],
+    n: usize,
+    block: usize,
+    pass_accum: impl Fn(&[f32]) -> ExtSum,
+    pass_scale: impl Fn(&[f32], f32, f32, &mut [f32]),
+) {
+    let rows = x.len() / n;
+    let mut sums: Vec<ExtSum> = Vec::with_capacity(block.min(rows));
+    let mut r0 = 0;
+    while r0 < rows {
+        let b = block.min(rows - r0);
+        sums.clear();
+        for r in r0..r0 + b {
+            sums.push(pass_accum(&x[r * n..r * n + n]));
+        }
+        for (i, r) in (r0..r0 + b).enumerate() {
+            let s = sums[i];
+            pass_scale(&x[r * n..r * n + n], 1.0 / s.m, s.n, &mut y[r * n..r * n + n]);
+        }
+        r0 += b;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-ISA kernels.  The unroll factors match the single-row defaults in
+// scalar.rs / avx2.rs / avx512.rs exactly, so per-row outputs are
+// bit-identical to softmax_with.
+// ---------------------------------------------------------------------------
+
+fn kernel_scalar(alg: Algorithm, x: &[f32], y: &mut [f32], n: usize, block: usize) {
+    match alg {
+        Algorithm::ThreePassRecompute => drive_recompute(
+            x,
+            y,
+            n,
+            block,
+            scalar::pass_max,
+            scalar::pass_sumexp,
+            scalar::pass_scaleexp,
+        ),
+        Algorithm::ThreePassReload => drive_reload(
+            x,
+            y,
+            n,
+            block,
+            scalar::pass_max,
+            scalar::pass_storeexp,
+            scalar::pass_scale_inplace,
+        ),
+        Algorithm::TwoPass => drive_twopass(
+            x,
+            y,
+            n,
+            block,
+            scalar::pass_accum_extexp,
+            scalar::pass_scale_extexp,
+        ),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn kernel_avx2(alg: Algorithm, x: &[f32], y: &mut [f32], n: usize, block: usize) {
+    match alg {
+        Algorithm::ThreePassRecompute => drive_recompute(
+            x,
+            y,
+            n,
+            block,
+            // SAFETY (all closures): AVX2+FMA availability was checked by
+            // the dispatching caller.
+            |r| unsafe { avx2::pass_max::<4>(r) },
+            |r, mu| unsafe { avx2::pass_sumexp::<8>(r, mu) },
+            |r, mu, lam, out| unsafe { avx2::pass_scaleexp::<8>(r, mu, lam, out) },
+        ),
+        Algorithm::ThreePassReload => drive_reload(
+            x,
+            y,
+            n,
+            block,
+            |r| unsafe { avx2::pass_max::<4>(r) },
+            |r, mu, out| unsafe { avx2::pass_storeexp::<2>(r, mu, out) },
+            |out, lam| unsafe { avx2::pass_scale_inplace::<8>(out, lam) },
+        ),
+        Algorithm::TwoPass => drive_twopass(
+            x,
+            y,
+            n,
+            block,
+            |r| unsafe { avx2::pass_accum_extexp::<8>(r) },
+            |r, lam, n_sum, out| unsafe { avx2::pass_scale_extexp::<8>(r, lam, n_sum, out) },
+        ),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn kernel_avx512(alg: Algorithm, x: &[f32], y: &mut [f32], n: usize, block: usize) {
+    match alg {
+        Algorithm::ThreePassRecompute => drive_recompute(
+            x,
+            y,
+            n,
+            block,
+            // SAFETY (all closures): AVX512F availability was checked by
+            // the dispatching caller.
+            |r| unsafe { avx512::pass_max::<4>(r) },
+            |r, mu| unsafe { avx512::pass_sumexp::<8>(r, mu) },
+            |r, mu, lam, out| unsafe { avx512::pass_scaleexp::<8>(r, mu, lam, out) },
+        ),
+        Algorithm::ThreePassReload => drive_reload(
+            x,
+            y,
+            n,
+            block,
+            |r| unsafe { avx512::pass_max::<4>(r) },
+            |r, mu, out| unsafe { avx512::pass_storeexp::<2>(r, mu, out) },
+            |out, lam| unsafe { avx512::pass_scale_inplace::<8>(out, lam) },
+        ),
+        Algorithm::TwoPass => drive_twopass(
+            x,
+            y,
+            n,
+            block,
+            |r| unsafe { avx512::pass_accum_extexp::<8>(r) },
+            |r, lam, n_sum, out| unsafe { avx512::pass_scale_extexp::<8>(r, lam, n_sum, out) },
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::softmax_with;
+    use crate::util::rng::Rng;
+
+    fn random_batch(rows: usize, n: usize, seed: u64) -> RowBatch {
+        let mut rng = Rng::new(seed);
+        let mut b = RowBatch::new(rows, n);
+        for r in 0..rows {
+            for v in b.row_mut(r) {
+                *v = rng.normal_f32(0.0, 8.0);
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn rowbatch_construction_and_views() {
+        let mut b = RowBatch::with_capacity(2, 3);
+        assert!(b.is_empty());
+        b.push_row(&[1.0, 2.0, 3.0]).unwrap();
+        b.push_row(&[4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(b.rows(), 2);
+        assert_eq!(b.n(), 3);
+        assert_eq!(b.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(b.as_slice(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(
+            b.push_row(&[7.0]),
+            Err(SoftmaxError::LengthMismatch { x: 1, y: 3 })
+        );
+        assert_eq!(b.iter_rows().count(), 2);
+        let copy = RowBatch::from_rows(b.iter_rows(), 3).unwrap();
+        assert_eq!(copy, b);
+        assert_eq!(b.into_vec(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn batch_matches_single_row_api_bitwise() {
+        for &(rows, n) in &[(1usize, 8usize), (3, 7), (5, 100), (2, 1000)] {
+            let x = random_batch(rows, n, 42 + n as u64);
+            for alg in Algorithm::ALL {
+                for isa in Isa::detect_all() {
+                    let mut y = RowBatch::new(rows, n);
+                    softmax_batch(alg, isa, &x, &mut y).unwrap();
+                    for r in 0..rows {
+                        let mut want = vec![0.0f32; n];
+                        softmax_with(alg, isa, x.row(r), &mut want).unwrap();
+                        for i in 0..n {
+                            assert_eq!(
+                                y.row(r)[i].to_bits(),
+                                want[i].to_bits(),
+                                "{alg}/{isa} rows={rows} n={n} r={r} i={i}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_and_parallel_match_default() {
+        let (rows, n) = (13usize, 257usize);
+        let x = random_batch(rows, n, 9);
+        for alg in Algorithm::ALL {
+            let isa = Isa::detect_best();
+            let mut want = RowBatch::new(rows, n);
+            softmax_batch(alg, isa, &x, &mut want).unwrap();
+            for block in [1usize, 2, 5, 13, 64] {
+                let mut y = RowBatch::new(rows, n);
+                softmax_batch_with_block(alg, isa, &x, &mut y, block).unwrap();
+                assert_eq!(y, want, "{alg} block={block}");
+            }
+            for threads in [1usize, 2, 3, 8, 64] {
+                let mut y = RowBatch::new(rows, n);
+                softmax_batch_parallel(alg, isa, &x, &mut y, threads).unwrap();
+                assert_eq!(y, want, "{alg} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_error_cases() {
+        let x = RowBatch::new(0, 16);
+        let mut y = RowBatch::new(0, 16);
+        softmax_batch(Algorithm::TwoPass, Isa::Scalar, &x, &mut y).unwrap();
+
+        let x = RowBatch::new(2, 16);
+        let mut wrong = RowBatch::new(3, 16);
+        assert!(matches!(
+            softmax_batch(Algorithm::TwoPass, Isa::Scalar, &x, &mut wrong),
+            Err(SoftmaxError::LengthMismatch { .. })
+        ));
+
+        let zero = RowBatch::new(2, 0);
+        let mut zout = RowBatch::new(2, 0);
+        assert_eq!(
+            softmax_batch(Algorithm::TwoPass, Isa::Scalar, &zero, &mut zout),
+            Err(SoftmaxError::EmptyInput)
+        );
+    }
+
+    #[test]
+    fn rows_normalize() {
+        let x = random_batch(7, 333, 3);
+        let mut y = RowBatch::new(7, 333);
+        softmax_batch_auto(Algorithm::TwoPass, Isa::detect_best(), &x, &mut y, 0, 0).unwrap();
+        for r in 0..7 {
+            let s: f32 = y.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {r}: {s}");
+        }
+    }
+}

@@ -3,6 +3,9 @@
 //! Three algorithms (paper Algorithms 1–3) × three ISAs (scalar, AVX2,
 //! AVX512F), each decomposed into the paper's *memory passes* so the
 //! benchmark harness can reproduce the per-pass Figures 3, 4 and 7.
+//! The [`batch`] module lifts the same pass kernels to flat row-major
+//! batches ([`RowBatch`]) with hoisted dispatch, cache-blocked row loops
+//! and an optional scoped worker pool — the serving hot path.
 //!
 //! ```
 //! use two_pass_softmax::softmax::{softmax, Algorithm};
@@ -14,6 +17,7 @@
 
 pub mod avx2;
 pub mod avx512;
+pub mod batch;
 pub mod dispatch;
 pub mod exp;
 pub mod online;
@@ -22,6 +26,7 @@ pub mod tuning;
 
 use std::fmt;
 
+pub use batch::{softmax_batch, softmax_batch_auto, softmax_batch_parallel, RowBatch};
 pub use dispatch::Isa;
 pub use exp::ExtSum;
 

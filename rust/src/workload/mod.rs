@@ -1,6 +1,7 @@
 //! Workload generation: logits distributions and the paper's Table-1
 //! dataset catalogue (the class counts that motivate large-N softmax).
 
+use crate::softmax::batch::RowBatch;
 use crate::util::rng::Rng;
 
 /// A public classification dataset from paper Table 1.
@@ -53,22 +54,39 @@ impl LogitsDist {
 
     /// Generate `n` logits.
     pub fn generate(&self, n: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        self.fill(&mut v, rng);
+        v
+    }
+
+    /// Fill a pre-allocated slice with logits — the allocation-free variant
+    /// [`request_rowbatch`] uses to write rows straight into flat storage.
+    /// Draws the same RNG sequence as [`LogitsDist::generate`].
+    pub fn fill(&self, out: &mut [f32], rng: &mut Rng) {
         match *self {
             LogitsDist::Normal { mean, std } => {
-                (0..n).map(|_| rng.normal_f32(mean, std)).collect()
+                for v in out.iter_mut() {
+                    *v = rng.normal_f32(mean, std);
+                }
             }
-            LogitsDist::Uniform { lo, hi } => (0..n).map(|_| rng.range_f32(lo, hi)).collect(),
+            LogitsDist::Uniform { lo, hi } => {
+                for v in out.iter_mut() {
+                    *v = rng.range_f32(lo, hi);
+                }
+            }
             LogitsDist::OverflowProne { shift, std } => {
-                (0..n).map(|_| rng.normal_f32(shift, std)).collect()
+                for v in out.iter_mut() {
+                    *v = rng.normal_f32(shift, std);
+                }
             }
             LogitsDist::Peaked { peak, floor } => {
-                let mut v: Vec<f32> =
-                    (0..n).map(|_| floor + rng.range_f32(-1.0, 1.0)).collect();
-                let hot = rng.below(n.max(1));
-                if n > 0 {
-                    v[hot] = peak;
+                for v in out.iter_mut() {
+                    *v = floor + rng.range_f32(-1.0, 1.0);
                 }
-                v
+                let hot = rng.below(out.len().max(1));
+                if !out.is_empty() {
+                    out[hot] = peak;
+                }
             }
         }
     }
@@ -106,6 +124,18 @@ pub fn size_sweep(l1: usize, l2: usize, llc: usize) -> Vec<usize> {
 pub fn request_batch(dist: LogitsDist, batch: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
     let mut rng = Rng::new(seed);
     (0..batch).map(|_| dist.generate(n, &mut rng)).collect()
+}
+
+/// [`request_batch`] generated straight into one flat row-major
+/// [`RowBatch`] (kernel-ready, one allocation) — the batched-engine
+/// benchmarks' input.  Same seed ⇒ same values as [`request_batch`].
+pub fn request_rowbatch(dist: LogitsDist, batch: usize, n: usize, seed: u64) -> RowBatch {
+    let mut rng = Rng::new(seed);
+    let mut rb = RowBatch::new(batch, n);
+    for r in 0..batch {
+        dist.fill(rb.row_mut(r), &mut rng);
+    }
+    rb
 }
 
 #[cfg(test)]
@@ -154,5 +184,18 @@ mod tests {
         let b = request_batch(LogitsDist::CASES[0], 4, 128, 7);
         assert_eq!(b.len(), 4);
         assert!(b.iter().all(|r| r.len() == 128));
+    }
+
+    #[test]
+    fn flat_batch_matches_vec_of_vecs() {
+        for dist in LogitsDist::CASES {
+            let nested = request_batch(dist, 3, 64, 11);
+            let flat = request_rowbatch(dist, 3, 64, 11);
+            assert_eq!(flat.rows(), 3);
+            assert_eq!(flat.n(), 64);
+            for (r, row) in nested.iter().enumerate() {
+                assert_eq!(flat.row(r), &row[..], "{} row {r}", dist.name());
+            }
+        }
     }
 }

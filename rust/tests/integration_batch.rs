@@ -1,0 +1,198 @@
+//! Integration tests for the batched softmax engine: the batched kernels
+//! must be *bit-identical* per row to the single-row `softmax_with` API
+//! for every algorithm × available ISA, across ragged tails (n not a
+//! multiple of lane×unroll), single-row batches, the empty batch, cache
+//! blocking and the parallel row-split path.
+
+use two_pass_softmax::softmax::batch::{
+    softmax_batch, softmax_batch_auto, softmax_batch_parallel, softmax_batch_with_block,
+    RowBatch,
+};
+use two_pass_softmax::softmax::{softmax_with, Algorithm, Isa, SoftmaxError};
+use two_pass_softmax::util::rng::Rng;
+use two_pass_softmax::workload::{request_rowbatch, LogitsDist};
+
+fn all_combos() -> Vec<(Algorithm, Isa)> {
+    let mut v = Vec::new();
+    for alg in Algorithm::ALL {
+        for isa in Isa::detect_all() {
+            v.push((alg, isa));
+        }
+    }
+    v
+}
+
+fn random_batch(rows: usize, n: usize, seed: u64, scale: f32) -> RowBatch {
+    let mut rng = Rng::new(seed);
+    let mut b = RowBatch::new(rows, n);
+    for r in 0..rows {
+        for v in b.row_mut(r) {
+            *v = rng.normal_f32(0.0, scale);
+        }
+    }
+    b
+}
+
+/// Per-row reference through the single-row public API.
+fn reference_rows(alg: Algorithm, isa: Isa, x: &RowBatch) -> RowBatch {
+    let mut want = RowBatch::new(x.rows(), x.n());
+    for r in 0..x.rows() {
+        let mut row = vec![0.0f32; x.n()];
+        softmax_with(alg, isa, x.row(r), &mut row).unwrap();
+        want.row_mut(r).copy_from_slice(&row);
+    }
+    want
+}
+
+fn assert_bitwise_eq(got: &RowBatch, want: &RowBatch, label: &str) {
+    assert_eq!((got.rows(), got.n()), (want.rows(), want.n()), "{label}: shape");
+    for r in 0..got.rows() {
+        for i in 0..got.n() {
+            assert_eq!(
+                got.row(r)[i].to_bits(),
+                want.row(r)[i].to_bits(),
+                "{label} r={r} i={i}: {} vs {}",
+                got.row(r)[i],
+                want.row(r)[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn batch_bit_identical_to_single_row_all_combos() {
+    // Row lengths chosen to exercise every tail regime: below one vector,
+    // exact lane multiples, lane×unroll multiples ± 1, and odd primes.
+    // AVX512 stride at unroll 8 is 128 f32; AVX2 is 64.
+    let lengths = [1usize, 3, 7, 8, 15, 16, 17, 63, 64, 65, 127, 128, 129, 1000, 4099];
+    for &n in &lengths {
+        for &rows in &[1usize, 4] {
+            let x = random_batch(rows, n, 0xBA7C0 + n as u64, 10.0);
+            for (alg, isa) in all_combos() {
+                let want = reference_rows(alg, isa, &x);
+                let mut got = RowBatch::new(rows, n);
+                softmax_batch(alg, isa, &x, &mut got).unwrap();
+                assert_bitwise_eq(&got, &want, &format!("{alg}/{isa} rows={rows} n={n}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_handles_extreme_rows() {
+    // Mixed overflow-prone / peaked / benign rows in one batch: the batch
+    // engine must treat rows independently, exactly like the row API.
+    let n = 513;
+    let mut x = RowBatch::new(4, n);
+    let mut rng = Rng::new(99);
+    LogitsDist::OverflowProne { shift: 90.0, std: 3.0 }.fill(x.row_mut(0), &mut rng);
+    LogitsDist::Peaked { peak: 200.0, floor: -200.0 }.fill(x.row_mut(1), &mut rng);
+    LogitsDist::Normal { mean: 0.0, std: 4.0 }.fill(x.row_mut(2), &mut rng);
+    for v in x.row_mut(3) {
+        *v = 105.0; // constant overflow row: every output must be 1/n
+    }
+    for (alg, isa) in all_combos() {
+        let want = reference_rows(alg, isa, &x);
+        let mut got = RowBatch::new(4, n);
+        softmax_batch(alg, isa, &x, &mut got).unwrap();
+        assert_bitwise_eq(&got, &want, &format!("{alg}/{isa}"));
+        for r in 0..4 {
+            let s: f32 = got.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "{alg}/{isa} row {r}: {s}");
+            assert!(got.row(r).iter().all(|v| v.is_finite()), "{alg}/{isa} row {r}");
+        }
+        assert!((got.row(3)[0] - 1.0 / n as f32).abs() < 1e-8, "{alg}/{isa}");
+    }
+}
+
+#[test]
+fn cache_block_size_does_not_change_results() {
+    let (rows, n) = (33usize, 129usize);
+    let x = random_batch(rows, n, 5, 6.0);
+    for (alg, isa) in all_combos() {
+        let want = reference_rows(alg, isa, &x);
+        for block in [1usize, 2, 3, 8, 32, 33, 1000] {
+            let mut got = RowBatch::new(rows, n);
+            softmax_batch_with_block(alg, isa, &x, &mut got, block).unwrap();
+            assert_bitwise_eq(&got, &want, &format!("{alg}/{isa} block={block}"));
+        }
+    }
+}
+
+#[test]
+fn parallel_split_bit_identical_across_thread_counts() {
+    let (rows, n) = (29usize, 400usize);
+    let x = random_batch(rows, n, 77, 8.0);
+    for (alg, isa) in all_combos() {
+        let want = reference_rows(alg, isa, &x);
+        for threads in [1usize, 2, 3, 4, 7, 29, 100] {
+            let mut got = RowBatch::new(rows, n);
+            softmax_batch_parallel(alg, isa, &x, &mut got, threads).unwrap();
+            assert_bitwise_eq(&got, &want, &format!("{alg}/{isa} threads={threads}"));
+        }
+    }
+}
+
+#[test]
+fn auto_path_thresholds() {
+    let isa = Isa::detect_best();
+    // Small batch (below threshold) and large batch (above, forced 4-way):
+    // both must match the reference bitwise.
+    for &(rows, n, threshold, threads) in
+        &[(2usize, 64usize, usize::MAX, 0usize), (16, 4096, 1, 4)]
+    {
+        let x = random_batch(rows, n, 123, 5.0);
+        let want = reference_rows(Algorithm::TwoPass, isa, &x);
+        let mut got = RowBatch::new(rows, n);
+        softmax_batch_auto(Algorithm::TwoPass, isa, &x, &mut got, threshold, threads).unwrap();
+        assert_bitwise_eq(&got, &want, &format!("auto rows={rows} n={n}"));
+    }
+}
+
+#[test]
+fn empty_batch_is_ok_and_errors_are_reported() {
+    let x = RowBatch::new(0, 128);
+    let mut y = RowBatch::new(0, 128);
+    for (alg, isa) in all_combos() {
+        softmax_batch(alg, isa, &x, &mut y).unwrap();
+        softmax_batch_parallel(alg, isa, &x, &mut y, 8).unwrap();
+    }
+
+    // Shape mismatch between input and output.
+    let x = random_batch(3, 32, 1, 1.0);
+    let mut bad = RowBatch::new(3, 33);
+    assert!(matches!(
+        softmax_batch(Algorithm::TwoPass, Isa::Scalar, &x, &mut bad),
+        Err(SoftmaxError::LengthMismatch { .. })
+    ));
+
+    // Zero-length rows.
+    let z = RowBatch::new(2, 0);
+    let mut zy = RowBatch::new(2, 0);
+    assert_eq!(
+        softmax_batch(Algorithm::TwoPass, Isa::Scalar, &z, &mut zy),
+        Err(SoftmaxError::EmptyInput)
+    );
+
+    // Unavailable ISA surfaces IsaUnavailable (only checkable where AVX512
+    // is genuinely absent).
+    if !Isa::Avx512.available() {
+        let x = random_batch(1, 8, 2, 1.0);
+        let mut y = RowBatch::new(1, 8);
+        assert_eq!(
+            softmax_batch(Algorithm::TwoPass, Isa::Avx512, &x, &mut y),
+            Err(SoftmaxError::IsaUnavailable(Isa::Avx512))
+        );
+    }
+}
+
+#[test]
+fn workload_rowbatch_feeds_engine() {
+    let x = request_rowbatch(LogitsDist::Normal { mean: 0.0, std: 4.0 }, 8, 1024, 42);
+    let mut y = RowBatch::new(8, 1024);
+    softmax_batch(Algorithm::TwoPass, Isa::detect_best(), &x, &mut y).unwrap();
+    for r in 0..8 {
+        let s: f32 = y.row(r).iter().sum();
+        assert!((s - 1.0).abs() < 1e-5, "row {r}: {s}");
+    }
+}

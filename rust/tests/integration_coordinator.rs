@@ -21,7 +21,7 @@ fn native_cfg(max_batch: usize, workers: usize) -> ServeConfig {
 }
 
 fn start_native(cfg: &ServeConfig) -> Coordinator {
-    let router = Router::Native { algorithm: Algorithm::TwoPass, isa: Isa::detect_best() };
+    let router = Router::native(Algorithm::TwoPass, Isa::detect_best());
     Coordinator::start_with_router(cfg, router)
 }
 

@@ -7,7 +7,7 @@
 use std::path::PathBuf;
 
 use two_pass_softmax::runtime::{service::PjrtService, EntryKind, Runtime};
-use two_pass_softmax::softmax::{self, Algorithm};
+use two_pass_softmax::softmax::{self, Algorithm, RowBatch};
 use two_pass_softmax::util::rng::Rng;
 
 fn artifacts_dir() -> Option<PathBuf> {
@@ -117,11 +117,15 @@ fn pjrt_service_executes_from_other_threads() {
         let svc = svc.clone();
         joins.push(std::thread::spawn(move || {
             let mut rng = Rng::new(t);
-            let rows: Vec<Vec<f32>> =
-                (0..2).map(|_| (0..8192).map(|_| rng.normal_f32(0.0, 3.0)).collect()).collect();
-            let out = svc.softmax("twopass", rows).unwrap();
-            assert_eq!(out.len(), 2);
-            for r in out {
+            let mut batch = RowBatch::new(2, 8192);
+            for r in 0..2 {
+                for v in batch.row_mut(r) {
+                    *v = rng.normal_f32(0.0, 3.0);
+                }
+            }
+            let out = svc.softmax("twopass", batch).unwrap();
+            assert_eq!(out.rows(), 2);
+            for r in out.iter_rows() {
                 let s: f32 = r.iter().sum();
                 assert!((s - 1.0).abs() < 1e-5);
             }
@@ -130,7 +134,10 @@ fn pjrt_service_executes_from_other_threads() {
     for j in joins {
         j.join().unwrap();
     }
-    // Unknown shape surfaces an error (router uses it to fall back).
-    let err = svc.softmax("twopass", vec![vec![0.0; 17]]).unwrap_err();
+    // Unknown shape surfaces an error (router uses it to fall back), and
+    // the service hands the input batch back for the fallback path.
+    let (returned, err) = svc.softmax("twopass", RowBatch::new(1, 17)).unwrap_err();
     assert!(err.to_string().contains("no "), "{err}");
+    let returned = returned.expect("input batch handed back on artifact miss");
+    assert_eq!((returned.rows(), returned.n()), (1, 17));
 }

@@ -1,0 +1,175 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! implements the (small) surface the repository uses: a message-carrying
+//! [`Error`], the [`anyhow!`] / [`bail!`] macros, [`Error::msg`], a
+//! [`Context`] extension trait for `Result`, and the `Result<T>` alias.
+//!
+//! Context is folded into the message eagerly (`"context: cause"`), which
+//! matches what `{:#}` formatting of a real `anyhow::Error` chain prints —
+//! the only way this repository renders errors.
+
+use std::fmt;
+
+/// A string-backed error type, API-compatible with `anyhow::Error` for the
+/// operations used in this repository.
+pub struct Error {
+    msg: String,
+}
+
+/// `anyhow::Result<T>`: `Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Wrap a standard error (mirrors `anyhow::Error::new`).
+    pub fn new<E: std::error::Error>(error: E) -> Error {
+        Error { msg: error.to_string() }
+    }
+
+    /// Prepend a context layer: `"context: cause"`.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{}` and the chain-printing `{:#}` both render the folded message.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real `anyhow::Error`, this type deliberately does NOT implement
+// `std::error::Error`; that keeps the blanket `From` below coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(&e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error { msg: s }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error { msg: s.to_string() }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(&context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Early-return with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    #[test]
+    fn macro_forms() {
+        let a: Error = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b: Error = anyhow!("n = {n}, m = {}", 4);
+        assert_eq!(b.to_string(), "n = 3, m = 4");
+        let c: Error = anyhow!(String::from("owned"));
+        assert_eq!(c.to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+    }
+
+    #[test]
+    fn context_wraps_std_errors() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::other("boom"));
+        let e = r.with_context(|| "reading file").unwrap_err();
+        assert_eq!(e.to_string(), "reading file: boom");
+        let e2 = e.context("outer");
+        assert_eq!(format!("{e2:#}"), "outer: reading file: boom");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::str::from_utf8(&[0xFF])?;
+            Ok(s.to_string())
+        }
+        assert!(f().is_err());
+    }
+}
