@@ -1,4 +1,5 @@
-//! Bench: the batched softmax engine vs the row-at-a-time serving loop.
+//! Bench: the batched softmax engine vs the row-at-a-time serving loop,
+//! plus a temporal-vs-non-temporal scale-pass sweep.
 //!
 //! `cargo bench --bench batch [-- --algorithm twopass --batches 8,64
 //!      --ns 8192,32768 --threads 1,2,4 --reps 5 --min-time 0.05]`
@@ -8,8 +9,17 @@
 //! two-pass, 4N/5N for the three-pass variants), next to the same numbers
 //! for the pre-batching serving path — one `softmax_with` call plus one
 //! `Vec` allocation per row, exactly what `Router` used to do.
+//!
+//! The NT sweep runs the single-threaded engine with streaming stores
+//! forced off and forced on, over working sets from L2-resident to
+//! 4× LLC, and reports the crossover size (first working set where the
+//! streamed scale pass wins).  The sweep is also emitted as JSON
+//! (`results/bench/batch_nt.json`) so successive BENCH_*.json files can
+//! track the write-allocate-avoidance win.
 
-use two_pass_softmax::softmax::batch::{softmax_batch, softmax_batch_parallel, RowBatch};
+use two_pass_softmax::softmax::batch::{
+    softmax_batch, softmax_batch_parallel, softmax_batch_with_nt, NtPolicy, RowBatch,
+};
 use two_pass_softmax::softmax::{softmax_with, Algorithm, Isa};
 use two_pass_softmax::util::cli::Args;
 use two_pass_softmax::util::stats;
@@ -137,5 +147,92 @@ fn main() -> anyhow::Result<()> {
 
     print!("{}", t.to_markdown());
     t.save(std::path::Path::new("results/bench"), "batch")?;
+
+    nt_sweep(alg, isa, reps, min_time)?;
+    Ok(())
+}
+
+/// Temporal vs non-temporal scale pass, single thread, working sets from
+/// L2-resident to 4× LLC.  GB/s uses the algorithm's nominal Table-2
+/// traffic for both paths (identical work; only true DRAM traffic
+/// differs), so the speedup column is a pure time ratio.
+fn nt_sweep(alg: Algorithm, isa: Isa, reps: usize, min_time: f64) -> anyhow::Result<()> {
+    // Reload's final pass re-reads its output, so it has no NT variant
+    // (the policy is a no-op there); sweep two-pass instead of timing two
+    // identical paths and reporting a noise-driven "crossover".
+    let alg = if alg == Algorithm::ThreePassReload { Algorithm::TwoPass } else { alg };
+    let plat = two_pass_softmax::platform::detect();
+    let rows = 8usize;
+    // Row lengths in multiples of 16 so row starts stay 64B-aligned and
+    // the NT pass never falls back; from "input+output fits in L2" to a
+    // combined working set past 4x LLC.
+    let mut n = (plat.l2() / (2 * 4 * rows) / 16).max(64) * 16;
+    let stop = 4 * plat.llc() / (2 * 4 * rows);
+    let mut sweep: Vec<(usize, f64, f64)> = Vec::new();
+    let mut crossover: Option<usize> = None;
+    println!("\nNT scale-pass sweep — {alg} on {isa}, rows = {rows}");
+    let mut t = Table::new(
+        &format!("Temporal vs non-temporal scale pass ({alg}, {isa}, {rows} rows)"),
+        &["n", "span_kb", "gb_s_temporal", "gb_s_nt", "nt_speedup"],
+    );
+    while n <= stop {
+        let elems = rows * n;
+        let x = request_rowbatch(LogitsDist::Normal { mean: 0.0, std: 4.0 }, rows, n, 11);
+        let mut y = RowBatch::new(rows, n);
+        let t_tmp = stats::measure_median(
+            || {
+                softmax_batch_with_nt(alg, isa, &x, &mut y, NtPolicy::Never).unwrap();
+                std::hint::black_box(&y);
+            },
+            reps,
+            min_time,
+        );
+        let t_nt = stats::measure_median(
+            || {
+                softmax_batch_with_nt(alg, isa, &x, &mut y, NtPolicy::Always).unwrap();
+                std::hint::black_box(&y);
+            },
+            reps,
+            min_time,
+        );
+        let g_tmp = gbps(alg, elems, t_tmp);
+        let g_nt = gbps(alg, elems, t_nt);
+        if crossover.is_none() && t_nt < t_tmp {
+            crossover = Some(n);
+        }
+        t.rowd(&[
+            n.to_string(),
+            (2 * elems * 4 / 1024).to_string(),
+            format!("{g_tmp:.2}"),
+            format!("{g_nt:.2}"),
+            format!("{:.2}", t_tmp / t_nt),
+        ]);
+        sweep.push((n, g_tmp, g_nt));
+        n *= 2;
+    }
+    print!("{}", t.to_markdown());
+    match crossover {
+        Some(c) => println!("NT crossover: first win at n = {c} ({} KB span)", 2 * rows * c * 4 / 1024),
+        None => println!("NT crossover: no NT win measured in this sweep"),
+    }
+    t.save(std::path::Path::new("results/bench"), "batch_nt")?;
+
+    // JSON for the bench trajectory (BENCH_*.json harvesting).
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"bench\": \"batch_nt\",\n  \"algorithm\": \"{alg}\",\n  \"isa\": \"{isa}\",\n  \"rows\": {rows},\n"
+    ));
+    json.push_str(&format!(
+        "  \"crossover_n\": {},\n  \"sweep\": [\n",
+        crossover.map(|c| c.to_string()).unwrap_or_else(|| "null".to_string())
+    ));
+    for (i, (n, g_tmp, g_nt)) in sweep.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"n\": {n}, \"gbps_temporal\": {g_tmp:.3}, \"gbps_nt\": {g_nt:.3}}}{}\n",
+            if i + 1 == sweep.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("results/bench/batch_nt.json", json)?;
     Ok(())
 }

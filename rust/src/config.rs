@@ -48,7 +48,12 @@ pub struct ServeConfig {
     /// Minimum batch size (rows × row length, in elements) before the
     /// native engine parallelizes one batch across kernel threads; below
     /// it batches run single-threaded (thread hand-off costs more than the
-    /// memory passes save on small working sets).
+    /// memory passes save on small working sets).  `0` (the default) means
+    /// *auto*: derived from measured single-thread STREAM bandwidth —
+    /// `repro serve` resolves it eagerly at startup (or from
+    /// `--tune-file`); library-constructed engines resolve lazily on the
+    /// first batch large enough to possibly split (see
+    /// [`crate::softmax::tuning::derive_parallel_threshold`]).
     pub parallel_threshold: usize,
     /// Kernel threads per batch for the native engine (0 = all cores).
     pub batch_threads: usize,
@@ -65,9 +70,10 @@ impl Default for ServeConfig {
             workers: 2,
             queue_capacity: 1024,
             artifacts_dir: PathBuf::from("artifacts"),
-            // 512k f32 elements = 2 MB working set: past per-core L2 on
-            // every evaluated host, where extra memory streams start to pay.
-            parallel_threshold: 1 << 19,
+            // 0 = auto: measure STREAM bandwidth once and derive the
+            // threshold from it (the old static 512k default ignored how
+            // fast the host's memory actually is).
+            parallel_threshold: 0,
             batch_threads: 0,
         }
     }

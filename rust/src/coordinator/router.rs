@@ -2,18 +2,23 @@
 //!
 //! * [`Router::Native`] — the in-process batched softmax engine
 //!   ([`crate::softmax::batch`]): payloads are assembled into one flat
-//!   row-major [`RowBatch`] (a single allocation, no `Vec<Vec<f32>>`), the
-//!   algorithm/ISA dispatch is hoisted out of the row loop, and batches
-//!   above the configured `parallel_threshold` are split across kernel
-//!   threads.
+//!   row-major [`RowBatch`] (a single 64-byte-aligned allocation, no
+//!   `Vec<Vec<f32>>`) which is normalized **in place** and returned as the
+//!   response batch — the whole native path allocates nothing beyond the
+//!   request assembly.  The algorithm/ISA dispatch is hoisted out of the
+//!   row loop, and batches above `parallel_threshold` (0 = derived from
+//!   measured STREAM bandwidth, lazily, on the first batch large enough
+//!   to possibly split) are split across the persistent kernel-thread
+//!   pool.
 //! * [`Router::Pjrt`] — AOT-compiled XLA artifacts through the PJRT
 //!   executor service ([`crate::runtime::service::PjrtService`]): the
 //!   service thread owns the non-`Send` PJRT client, picks the smallest
 //!   batch *bucket* that fits (executables are shape-specialized, so the
 //!   batch is padded up to the bucket and the padding discarded), and the
 //!   router falls back to the native engine for logits shapes no artifact
-//!   was built for — the service hands the input batch back on that error,
-//!   so the fallback costs no extra copy.
+//!   was built for — the service hands the input batch back on that error
+//!   and the router normalizes it in place, so the fallback costs no
+//!   extra copy and no output allocation.
 //!
 //! `execute` consumes the payloads and returns one output [`RowBatch`];
 //! the coordinator slices per-request responses out of it.
@@ -22,7 +27,8 @@ use anyhow::{anyhow, Result};
 
 use crate::config::{Backend, ServeConfig};
 use crate::runtime::service::PjrtService;
-use crate::softmax::batch::{softmax_batch_auto, RowBatch};
+use crate::softmax::batch::{softmax_batch_auto, softmax_batch_inplace_auto, RowBatch};
+use crate::softmax::tuning::{resolve_parallel_threshold, MIN_PARALLEL_THRESHOLD};
 use crate::softmax::{Algorithm, Isa};
 
 use super::request::Payload;
@@ -31,7 +37,11 @@ use super::request::Payload;
 pub struct NativeEngine {
     pub algorithm: Algorithm,
     pub isa: Isa,
-    /// Elements (rows × n) below which a batch stays single-threaded.
+    /// Elements (rows × n) below which a batch stays single-threaded, as
+    /// configured; 0 = auto, resolved lazily from measured STREAM
+    /// bandwidth by the first batch large enough to possibly split (so
+    /// constructing an engine — or serving only small batches — never
+    /// pays the measurement).
     pub parallel_threshold: usize,
     /// Kernel threads per batch (0 = all cores).
     pub batch_threads: usize,
@@ -47,6 +57,17 @@ impl NativeEngine {
         }
     }
 
+    /// The threshold to apply to one `rows × n` batch.  In auto mode (0),
+    /// batches below the derivation's lower clamp can never split, so the
+    /// STREAM measurement is skipped for them entirely.
+    fn threshold_for(&self, rows: usize, n: usize) -> usize {
+        if self.parallel_threshold == 0 && rows * n < MIN_PARALLEL_THRESHOLD {
+            usize::MAX
+        } else {
+            resolve_parallel_threshold(self.parallel_threshold)
+        }
+    }
+
     /// Normalize every row of `x` into a fresh output batch.
     pub fn run(&self, x: &RowBatch) -> Result<RowBatch> {
         let mut y = RowBatch::new(x.rows(), x.n());
@@ -55,11 +76,19 @@ impl NativeEngine {
             self.isa,
             x,
             &mut y,
-            self.parallel_threshold,
+            self.threshold_for(x.rows(), x.n()),
             self.batch_threads,
         )
         .map_err(|e| anyhow!("{e}"))?;
         Ok(y)
+    }
+
+    /// Normalize every row of `x` in place: the request buffer becomes
+    /// the response buffer, so the serving path allocates no output batch.
+    pub fn run_inplace(&self, x: &mut RowBatch) -> Result<()> {
+        let threshold = self.threshold_for(x.rows(), x.n());
+        softmax_batch_inplace_auto(self.algorithm, self.isa, x, threshold, self.batch_threads)
+            .map_err(|e| anyhow!("{e}"))
     }
 }
 
@@ -128,12 +157,21 @@ impl Router {
             }
         }
         match self {
-            Router::Native(engine) => engine.run(&x),
+            // The freshly assembled request batch is normalized in place
+            // and becomes the response — no output allocation.
+            Router::Native(engine) => {
+                engine.run_inplace(&mut x)?;
+                Ok(x)
+            }
             Router::Pjrt { svc, variant, native } => match svc.softmax(variant, x) {
                 Ok(out) => Ok(out),
                 // No artifact for this shape → serve natively; the service
-                // returned the input batch, so no re-assembly is needed.
-                Err((Some(x), e)) if e.to_string().contains("no ") => native.run(&x),
+                // returned the input batch, which is normalized in place —
+                // the fallback costs no re-assembly and no allocation.
+                Err((Some(mut x), e)) if e.to_string().contains("no ") => {
+                    native.run_inplace(&mut x)?;
+                    Ok(x)
+                }
                 Err((_, e)) => Err(e),
             },
         }

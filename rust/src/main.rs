@@ -28,11 +28,12 @@ USAGE:
   repro platform
   repro figures <table1|table2|table3|fig1..fig12|all>
         [--out DIR] [--paper-protocol] [--reps N] [--min-time S] [--max-n N] [--verbose]
-  repro tune [--n N] [--reps N] [--save FILE]
+  repro tune [--n N] [--reps N] [--save FILE] [--no-stream]
   repro serve [--backend native|pjrt] [--algorithm twopass|reload|recompute]
         [--requests N] [--n LOGITS] [--clients K] [--max-batch B] [--workers W]
-        [--max-wait-us U] [--parallel-threshold ELEMS] [--batch-threads T]
-        [--artifacts DIR] [--config FILE]
+        [--max-wait-us U] [--parallel-threshold ELEMS (0 = auto from STREAM)]
+        [--batch-threads T] [--artifacts DIR] [--config FILE]
+        [--tune-file FILE (reuse `repro tune --save` threshold, skip re-measuring)]
   repro verify [--artifacts DIR]
 ";
 
@@ -84,7 +85,19 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let n = args.get("n", 262_144usize).map_err(|e| anyhow!(e))?;
     let reps = args.get("reps", 5usize).map_err(|e| anyhow!(e))?;
     println!("auto-tuning unroll factors at N = {n} (reps = {reps}) ...");
-    let table = tuning::tune_all(n, reps);
+    let mut table = tuning::tune_all(n, reps);
+    if !args.flag("no-stream") {
+        // Bandwidth-derived serving threshold (folded into the saved
+        // table so `serve` hosts can read it instead of re-measuring).
+        let (thr, gbps) = tuning::measured_parallel_threshold();
+        table.parallel_threshold = Some(thr);
+        table.stream_gbps = Some(gbps);
+        println!(
+            "# parallel_threshold {thr} elems (STREAM Scale {gbps:.1} GB/s single-thread, \
+             >= {:.0} us of two-pass traffic per split batch)",
+            tuning::PARALLEL_MIN_US
+        );
+    }
     print!("{}", table.to_text());
     for ((pass, isa), gain) in tuning::tuning_gains(&table) {
         if gain > 1.05 {
@@ -104,6 +117,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => ServeConfig::default(),
     };
     cfg.apply_args(args)?;
+    // A saved tune table carries the bandwidth-derived threshold; use it
+    // when the config left the threshold on auto, so serve startup skips
+    // the STREAM measurement on already-tuned hosts.
+    if let Some(path) = args.opt("tune-file") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading tune file {path}: {e}"))?;
+        let table = tuning::TuneTable::from_text(&text).map_err(|e| anyhow!(e))?;
+        if cfg.parallel_threshold == 0 {
+            if let Some(thr) = table.parallel_threshold {
+                cfg.parallel_threshold = thr;
+                println!("tune-file: parallel_threshold = {thr} elems");
+            }
+        }
+    }
+    if cfg.parallel_threshold == 0 {
+        // Resolve the auto threshold at startup, not on the first large
+        // live request — the STREAM measurement must never land in a
+        // client's latency.
+        let (thr, gbps) = tuning::measured_parallel_threshold();
+        cfg.parallel_threshold = thr;
+        println!(
+            "auto parallel_threshold = {thr} elems (STREAM Scale {gbps:.1} GB/s single-thread)"
+        );
+    }
     let requests: usize = args.get("requests", 1000).map_err(|e| anyhow!(e))?;
     let n: usize = args.get("n", 32_768).map_err(|e| anyhow!(e))?;
     let clients: usize = args.get("clients", 4).map_err(|e| anyhow!(e))?;

@@ -202,6 +202,48 @@ pub fn count_cpu_list(s: &str) -> usize {
         .sum()
 }
 
+/// Pin the calling thread to one CPU (best effort).  Returns whether the
+/// affinity call succeeded; `false` on unsupported platforms or when the
+/// kernel refuses (e.g. a restricted sandbox).  Used by the batched
+/// engine's persistent worker pool so each kernel thread keeps its core
+/// (and its L2-resident blocks) across batches.
+pub fn pin_current_thread(cpu: usize) -> bool {
+    pin_impl(cpu)
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn pin_impl(cpu: usize) -> bool {
+    // sched_setaffinity(2) via raw syscall: no libc crate is available in
+    // the offline build, and std exposes no affinity API.
+    const SYS_SCHED_SETAFFINITY: isize = 203;
+    let mut mask = [0u64; 16]; // 1024 CPUs
+    if cpu >= mask.len() * 64 {
+        return false;
+    }
+    mask[cpu / 64] = 1u64 << (cpu % 64);
+    let ret: isize;
+    // SAFETY: well-formed syscall; the kernel only reads `mask`, which
+    // outlives the call.  rcx/r11 are clobbered by the syscall ABI.
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") SYS_SCHED_SETAFFINITY => ret,
+            in("rdi") 0usize,                        // pid 0 = calling thread
+            in("rsi") std::mem::size_of_val(&mask),  // cpusetsize
+            in("rdx") mask.as_ptr(),
+            out("rcx") _,
+            out("r11") _,
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+fn pin_impl(_cpu: usize) -> bool {
+    false
+}
+
 /// Reference µarch parameter sets used by the analytical model (simmodel)
 /// to regenerate the paper's Broadwell/Zen 2 validation figures and the
 /// Skylake-X scaling figures.  Values are from the paper's Table 3 plus
@@ -321,6 +363,14 @@ mod tests {
         let s = detect().to_string();
         assert!(s.contains("Characteristic"));
         assert!(s.contains("AVX2"));
+    }
+
+    #[test]
+    fn pin_current_thread_is_best_effort() {
+        // Pin a throwaway thread, never the test runner: success depends
+        // on the sandbox, so only the out-of-range rejection is asserted.
+        let _ = std::thread::spawn(|| pin_current_thread(0)).join().unwrap();
+        assert!(!pin_current_thread(usize::MAX));
     }
 
     #[test]

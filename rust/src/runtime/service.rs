@@ -10,8 +10,10 @@
 //! Batches travel as flat row-major [`RowBatch`]es in both directions (one
 //! move, no per-row `Vec`s).  When a softmax job fails — typically because
 //! no artifact was built for the shape — the service sends the *input
-//! batch back* with the error, so the router's native fallback can run on
-//! it without re-assembling the rows.
+//! batch back* with the error, and the router's native fallback normalizes
+//! that very batch in place (`softmax_batch_inplace`): no re-assembly, no
+//! output allocation.  The hand-back therefore must never copy or truncate
+//! the batch on the error path.
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -161,7 +163,10 @@ fn exec_softmax(rt: &Runtime, variant: &str, batch: &RowBatch) -> Result<RowBatc
         .ok_or_else(|| anyhow!("no {variant} artifact for batch {rows} x n {n}"))?;
     let (b, name) = bucket;
     // Exact-fit bucket: execute straight off the batch storage (the common
-    // steady-state case when the batcher fills to a bucket size).
+    // steady-state case when the batcher fills to a bucket size).  The
+    // copy in `from_vec` below is the PJRT boundary's cost, not the native
+    // path's: executor outputs arrive as plain `Vec`s and must land in
+    // aligned RowBatch storage.
     let mut out = if b == rows {
         rt.run_softmax(&name, batch.as_slice())?
     } else {

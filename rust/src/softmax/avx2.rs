@@ -322,6 +322,91 @@ pub unsafe fn pass_scale_extexp<const U: usize>(x: &[f32], lam: f32, n_sum: f32,
     }
 }
 
+/// Pass 3 of Alg. 1 with non-temporal stores (`VMOVNTPS`): out of cache
+/// the output is written exactly once and never re-read, so streaming
+/// bypasses the write-allocate RFO and cuts the pass's true traffic from
+/// 3 transfers (read x + RFO y + write y) to 2.  Requires 32-byte
+/// alignment of `y` (guaranteed from a [`RowBatch`] start — the batched
+/// engine's use); falls back to the temporal pass otherwise.  Lane
+/// grouping is identical to [`pass_scaleexp`], so outputs are
+/// bit-identical; only the store instruction differs.  Callers must
+/// execute `SFENCE` before publishing `y` to other threads (the batched
+/// engine fences at block end).
+///
+/// [`RowBatch`]: crate::softmax::batch::RowBatch
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn pass_scaleexp_nt<const U: usize>(x: &[f32], mu: f32, lam: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    if y.as_ptr() as usize % 32 != 0 {
+        return pass_scaleexp::<U>(x, mu, lam, y);
+    }
+    let vmu = _mm256_set1_ps(mu);
+    let vlam = _mm256_set1_ps(lam);
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let e = vexp(_mm256_sub_ps(_mm256_loadu_ps(px.add(k * LANES)), vmu));
+            _mm256_stream_ps(py.add(k * LANES), _mm256_mul_ps(e, vlam));
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let e = vexp(_mm256_sub_ps(_mm256_loadu_ps(px), vmu));
+        _mm256_stream_ps(py, _mm256_mul_ps(e, vlam));
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        *py.add(i) = lam * super::exp::exp(*px.add(i) - mu);
+    }
+}
+
+/// Pass 2 of Alg. 3 with non-temporal stores; same contract as
+/// [`pass_scaleexp_nt`] (32-byte-aligned `y` or temporal fallback,
+/// bit-identical outputs, caller-side `SFENCE` before publication).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn pass_scale_extexp_nt<const U: usize>(x: &[f32], lam: f32, n_sum: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    if y.as_ptr() as usize % 32 != 0 {
+        return pass_scale_extexp::<U>(x, lam, n_sum, y);
+    }
+    let vlam = _mm256_set1_ps(lam);
+    let vns = _mm256_set1_ps(n_sum);
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let (pe, ne) = vexp_parts(_mm256_loadu_ps(px.add(k * LANES)));
+            let s = vexp2i(_mm256_sub_ps(ne, vns));
+            let v = _mm256_mul_ps(_mm256_mul_ps(pe, vlam), s);
+            _mm256_stream_ps(py.add(k * LANES), v);
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let (pe, ne) = vexp_parts(_mm256_loadu_ps(px));
+        let s = vexp2i(_mm256_sub_ps(ne, vns));
+        _mm256_stream_ps(py, _mm256_mul_ps(_mm256_mul_ps(pe, vlam), s));
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        let (m_i, n_i) = super::exp::extexp(*px.add(i));
+        *py.add(i) = m_i * lam * super::exp::exp2i(n_i - n_sum);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Full algorithms with the default (tuned) unroll factors.
 // ---------------------------------------------------------------------------
@@ -425,6 +510,51 @@ mod tests {
         let a1 = unsafe { pass_accum_extexp::<1>(&x) };
         let a4 = unsafe { pass_accum_extexp::<4>(&x) };
         assert!((a1.ln() - a4.ln()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn avx2_nt_scale_passes_match_temporal() {
+        if !have() {
+            return;
+        }
+        let x = inputs(4096 + 11);
+        let s = unsafe { pass_accum_extexp::<2>(&x) };
+        let mu = unsafe { pass_max::<4>(&x) };
+        // 32-byte-aligned output window inside an overallocated buffer.
+        let mut buf = vec![0.0f32; x.len() + 8];
+        let off = (32 - (buf.as_ptr() as usize % 32)) / 4 % 8;
+        for variant in 0..2 {
+            let mut want = vec![0.0f32; x.len()];
+            unsafe {
+                if variant == 0 {
+                    pass_scale_extexp::<2>(&x, 1.0 / s.m, s.n, &mut want);
+                    pass_scale_extexp_nt::<2>(&x, 1.0 / s.m, s.n, &mut buf[off..off + x.len()]);
+                } else {
+                    pass_scaleexp::<2>(&x, mu, 0.25, &mut want);
+                    pass_scaleexp_nt::<2>(&x, mu, 0.25, &mut buf[off..off + x.len()]);
+                }
+                core::arch::x86_64::_mm_sfence();
+            }
+            for i in 0..x.len() {
+                assert_eq!(
+                    buf[off + i].to_bits(),
+                    want[i].to_bits(),
+                    "variant {variant} i={i}"
+                );
+            }
+            // Unaligned output takes the temporal fallback and still matches.
+            let mut y2 = vec![0.0f32; x.len() + 1];
+            unsafe {
+                if variant == 0 {
+                    pass_scale_extexp_nt::<2>(&x, 1.0 / s.m, s.n, &mut y2[1..]);
+                } else {
+                    pass_scaleexp_nt::<2>(&x, mu, 0.25, &mut y2[1..]);
+                }
+            }
+            for i in 0..x.len() {
+                assert_eq!(y2[1 + i].to_bits(), want[i].to_bits(), "unaligned {variant} i={i}");
+            }
+        }
     }
 
     #[test]

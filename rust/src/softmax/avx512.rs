@@ -287,13 +287,17 @@ pub unsafe fn pass_scale_extexp<const U: usize>(x: &[f32], lam: f32, n_sum: f32,
     }
 }
 
-/// EXPERIMENTAL (§Perf iteration): pass 2 of the Two-Pass algorithm with
-/// non-temporal stores (`VMOVNTPS`). Out of cache the output is written
-/// exactly once and never re-read, so bypassing the write-allocate RFO can
-/// cut the pass's true traffic from 3 transfers (read x + RFO y + write y)
-/// to 2.  Requires 64-byte alignment of `y`; falls back to the regular
-/// pass otherwise.  Kept out of the defaults — see EXPERIMENTS.md §Perf for
-/// the measured verdict on this host.
+/// Pass 2 of the Two-Pass algorithm with non-temporal stores
+/// (`VMOVNTPS`). Out of cache the output is written exactly once and
+/// never re-read, so bypassing the write-allocate RFO cuts the pass's
+/// true traffic from 3 transfers (read x + RFO y + write y) to 2.
+/// Requires 64-byte alignment of `y` (guaranteed from a
+/// [`RowBatch`](crate::softmax::batch::RowBatch) start); falls back to
+/// the regular pass otherwise.  Lane grouping matches
+/// [`pass_scale_extexp`] exactly, so outputs are bit-identical.  Callers
+/// must execute `SFENCE` before publishing `y` to other threads — the
+/// batched engine, which selects this pass for out-of-cache batches,
+/// fences at block end.
 #[target_feature(enable = "avx512f")]
 pub unsafe fn pass_scale_extexp_nt<const U: usize>(x: &[f32], lam: f32, n_sum: f32, y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
@@ -316,7 +320,6 @@ pub unsafe fn pass_scale_extexp_nt<const U: usize>(x: &[f32], lam: f32, n_sum: f
         py = py.add(stride);
         rem -= stride;
     }
-    _mm_sfence(); // make NT stores globally visible before the tail
     while rem >= LANES {
         let (pe, ne) = vexp_parts(_mm512_loadu_ps(px));
         let v = _mm512_scalef_ps(_mm512_mul_ps(pe, vlam), _mm512_sub_ps(ne, vns));
@@ -328,6 +331,42 @@ pub unsafe fn pass_scale_extexp_nt<const U: usize>(x: &[f32], lam: f32, n_sum: f
     for i in 0..rem {
         let (m_i, n_i) = super::exp::extexp(*px.add(i));
         *py.add(i) = m_i * lam * super::exp::exp2i(n_i - n_sum);
+    }
+}
+
+/// Pass 3 of Alg. 1 (recompute) with non-temporal stores; same contract
+/// as [`pass_scale_extexp_nt`] (64-byte-aligned `y` or temporal fallback,
+/// bit-identical outputs, caller-side `SFENCE` before publication).
+#[target_feature(enable = "avx512f")]
+pub unsafe fn pass_scaleexp_nt<const U: usize>(x: &[f32], mu: f32, lam: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    if y.as_ptr() as usize % 64 != 0 {
+        return pass_scaleexp::<U>(x, mu, lam, y);
+    }
+    let vmu = _mm512_set1_ps(mu);
+    let vlam = _mm512_set1_ps(lam);
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let e = vexp(_mm512_sub_ps(_mm512_loadu_ps(px.add(k * LANES)), vmu));
+            _mm512_stream_ps(py.add(k * LANES), _mm512_mul_ps(e, vlam));
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let e = vexp(_mm512_sub_ps(_mm512_loadu_ps(px), vmu));
+        _mm512_stream_ps(py, _mm512_mul_ps(e, vlam));
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        *py.add(i) = lam * super::exp::exp(*px.add(i) - mu);
     }
 }
 
@@ -438,12 +477,13 @@ mod tests {
     }
 
     #[test]
-    fn nt_scale_pass_matches_regular() {
+    fn nt_scale_passes_match_regular() {
         if !have() {
             return;
         }
         let x = inputs(4096 + 7);
         let s = unsafe { pass_accum_extexp::<2>(&x) };
+        let mu = unsafe { pass_max::<4>(&x) };
         // 64-byte-aligned output buffer.
         let mut buf = vec![0.0f32; x.len() + 16];
         let off = (64 - (buf.as_ptr() as usize % 64) % 64) / 4 % 16;
@@ -452,11 +492,22 @@ mod tests {
             pass_scale_extexp::<2>(&x, 1.0 / s.m, s.n, &mut want);
             let y = &mut buf[off..off + x.len()];
             pass_scale_extexp_nt::<2>(&x, 1.0 / s.m, s.n, y);
+            _mm_sfence();
             for i in 0..x.len() {
                 assert_eq!(y[i].to_bits(), want[i].to_bits(), "i={i}");
             }
         }
+        unsafe {
+            pass_scaleexp::<2>(&x, mu, 0.25, &mut want);
+            let y = &mut buf[off..off + x.len()];
+            pass_scaleexp_nt::<2>(&x, mu, 0.25, y);
+            _mm_sfence();
+            for i in 0..x.len() {
+                assert_eq!(y[i].to_bits(), want[i].to_bits(), "scaleexp i={i}");
+            }
+        }
         // Unaligned output takes the fallback path and still matches.
+        unsafe { pass_scale_extexp::<2>(&x, 1.0 / s.m, s.n, &mut want) };
         let mut y2 = vec![0.0f32; x.len() + 1];
         unsafe { pass_scale_extexp_nt::<2>(&x, 1.0 / s.m, s.n, &mut y2[1..]) };
         for i in 0..x.len() {

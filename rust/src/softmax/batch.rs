@@ -7,8 +7,8 @@
 //! 4–5N traffic) that overhead and pointer-chasing is pure waste.  This
 //! module provides:
 //!
-//! * [`RowBatch`] — one contiguous row-major `Vec<f32>` (rows × n) with
-//!   per-row views, the batch currency of the coordinator;
+//! * [`RowBatch`] — one contiguous 64-byte-aligned row-major buffer
+//!   (rows × n) with per-row views, the batch currency of the coordinator;
 //! * [`softmax_batch`] — per-ISA batched kernels where the
 //!   algorithm/ISA dispatch is hoisted *out* of the row loop and the same
 //!   unroll-tuned pass functions as the single-row API are reused across
@@ -17,30 +17,196 @@
 //!   per-core L2, pass-major *within* a block — every row of a block is
 //!   still cache-resident when its next pass runs, and short rows get
 //!   cross-row instruction-level parallelism the per-row loop cannot;
-//! * [`softmax_batch_parallel`] — a scoped worker pool splitting the batch
-//!   at row boundaries across `std::thread` workers (softmax rows are
-//!   independent, so this is embarrassingly parallel);
+//! * [`softmax_batch_parallel`] — the batch split at row boundaries across
+//!   a **persistent, core-pinned worker pool** (softmax rows are
+//!   independent, so this is embarrassingly parallel; steady-state serving
+//!   batches pay a channel hand-off, not a `thread::spawn`, per batch);
+//! * [`softmax_batch_inplace`] — normalize a batch into its own storage
+//!   (the coordinator reuses request buffers for responses; no output
+//!   allocation on the native serving path);
 //! * [`softmax_batch_auto`] — the serving entry point: single-threaded
 //!   below a configurable element-count threshold
-//!   ([`crate::config::ServeConfig::parallel_threshold`]), parallel above.
+//!   ([`crate::config::ServeConfig::parallel_threshold`], 0 = derived from
+//!   measured STREAM bandwidth), parallel above.
+//!
+//! # Write-allocate avoidance (non-temporal stores)
+//!
+//! Out of cache, a regular store to a line not in cache triggers a
+//! read-for-ownership: the line is *read* from DRAM just to be fully
+//! overwritten.  For the final scale pass of the two-pass algorithm that
+//! turns the nominal `read x + write y` (2N) into `read x + read y +
+//! write y` (3N) of true DRAM traffic — exactly the write-allocate waste
+//! the Intel Xeon softmax study (arXiv:1904.12380) attacks with
+//! `MOVNTPS`.  When the working set of the span being processed exceeds
+//! the LLC ([`NtPolicy::Auto`]), the engine selects the non-temporal
+//! variant of the scale pass (`pass_scale_extexp_nt` /
+//! `pass_scaleexp_nt` in the ISA modules): the output stream bypasses the
+//! cache entirely, is written exactly once, and the pass's true traffic
+//! drops back to 2N.  An `SFENCE` is issued at the end of every block so
+//! the weakly-ordered streaming stores are globally visible before the
+//! batch is published to other threads.  The NT variants compute exactly
+//! the same lanes as the temporal passes (only the store instruction
+//! differs), so outputs stay bit-identical; rows whose start is not
+//! 64-byte-aligned silently fall back to temporal stores inside the pass.
+//! The three-pass-reload algorithm re-reads its output in its final pass,
+//! so NT is never selected for it, and the in-place path keeps NT off
+//! (its output lines are the just-read input lines — already in cache).
 //!
 //! [`softmax_with`]: crate::softmax::softmax_with
 
-use std::sync::OnceLock;
+use std::alloc::{alloc, alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::ptr::NonNull;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex, OnceLock};
 
 #[cfg(target_arch = "x86_64")]
 use super::{avx2, avx512};
 use super::{exp::ExtSum, scalar, Algorithm, Isa, SoftmaxError};
+
+/// Alignment of every [`RowBatch`] allocation: one cache line, and the
+/// requirement for `MOVNTPS`/`VMOVNTPS` streaming stores on every ISA.
+pub const ROWBATCH_ALIGN: usize = 64;
+
+// ---------------------------------------------------------------------------
+// AlignedBuf: a minimal growable f32 buffer with 64-byte-aligned storage.
+// ---------------------------------------------------------------------------
+
+/// Backing storage for [`RowBatch`].  `Vec<f32>` only guarantees 4-byte
+/// alignment, which would defeat the streaming scale pass on most batches;
+/// this buffer allocates with [`ROWBATCH_ALIGN`] and preserves it across
+/// growth (grow = aligned alloc + copy, never `realloc`).
+struct AlignedBuf {
+    ptr: NonNull<f32>,
+    len: usize,
+    cap: usize,
+}
+
+// SAFETY: AlignedBuf exclusively owns its allocation; it is a plain
+// contiguous f32 buffer with no interior mutability or thread affinity.
+unsafe impl Send for AlignedBuf {}
+unsafe impl Sync for AlignedBuf {}
+
+impl AlignedBuf {
+    /// Aligned, non-null placeholder for the empty buffer (never read).
+    fn dangling() -> NonNull<f32> {
+        // SAFETY: ROWBATCH_ALIGN is non-zero and f32-aligned.
+        unsafe { NonNull::new_unchecked(ROWBATCH_ALIGN as *mut f32) }
+    }
+
+    fn layout(cap: usize) -> Layout {
+        Layout::from_size_align(cap * std::mem::size_of::<f32>(), ROWBATCH_ALIGN)
+            .expect("RowBatch capacity overflows a Layout")
+    }
+
+    fn empty() -> AlignedBuf {
+        AlignedBuf { ptr: Self::dangling(), len: 0, cap: 0 }
+    }
+
+    fn zeroed(len: usize) -> AlignedBuf {
+        if len == 0 {
+            return Self::empty();
+        }
+        let layout = Self::layout(len);
+        // SAFETY: layout has non-zero size.
+        let p = unsafe { alloc_zeroed(layout) } as *mut f32;
+        let Some(ptr) = NonNull::new(p) else { handle_alloc_error(layout) };
+        AlignedBuf { ptr, len, cap: len }
+    }
+
+    fn with_capacity(cap: usize) -> AlignedBuf {
+        if cap == 0 {
+            return Self::empty();
+        }
+        let layout = Self::layout(cap);
+        // SAFETY: layout has non-zero size.
+        let p = unsafe { alloc(layout) } as *mut f32;
+        let Some(ptr) = NonNull::new(p) else { handle_alloc_error(layout) };
+        AlignedBuf { ptr, len: 0, cap }
+    }
+
+    fn from_slice(s: &[f32]) -> AlignedBuf {
+        let mut b = Self::with_capacity(s.len());
+        b.extend_from_slice(s);
+        b
+    }
+
+    fn reserve(&mut self, additional: usize) {
+        let need = self.len.checked_add(additional).expect("RowBatch length overflow");
+        if need <= self.cap {
+            return;
+        }
+        // Fresh aligned allocation + copy: std's realloc is not guaranteed
+        // to keep over-alignment on every allocator.
+        let mut grown = Self::with_capacity(need.max(self.cap * 2).max(16));
+        // SAFETY: both buffers are live; grown.cap >= self.len; disjoint.
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.ptr.as_ptr(), grown.ptr.as_ptr(), self.len);
+        }
+        grown.len = self.len;
+        *self = grown; // drops (frees) the old allocation
+    }
+
+    fn extend_from_slice(&mut self, s: &[f32]) {
+        self.reserve(s.len());
+        // SAFETY: reserve guaranteed capacity; source and dest are disjoint.
+        unsafe {
+            std::ptr::copy_nonoverlapping(s.as_ptr(), self.ptr.as_ptr().add(self.len), s.len());
+        }
+        self.len += s.len();
+    }
+
+    fn as_slice(&self) -> &[f32] {
+        // SAFETY: ptr is valid for len reads (dangling only when len == 0).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+
+    fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: as above, plus exclusive access via &mut self.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        if self.cap != 0 {
+            // SAFETY: allocated with this exact layout in this module.
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.cap)) };
+        }
+    }
+}
+
+impl Clone for AlignedBuf {
+    fn clone(&self) -> AlignedBuf {
+        Self::from_slice(self.as_slice())
+    }
+}
+
+impl std::fmt::Debug for AlignedBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl PartialEq for AlignedBuf {
+    fn eq(&self, other: &AlignedBuf) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
 
 // ---------------------------------------------------------------------------
 // RowBatch
 // ---------------------------------------------------------------------------
 
 /// A dense row-major batch of `rows` vectors of length `n`, backed by one
-/// contiguous allocation (stride == `n`, no padding).
+/// contiguous 64-byte-aligned allocation (stride == `n`, no padding).
+///
+/// The alignment guarantee holds across every constructor and across
+/// [`RowBatch::push_row`] growth; [`RowBatch::from_vec`] copies its input
+/// into aligned storage (a `Vec` allocation is practically never 64-byte
+/// aligned, and adopting one would tie deallocation to the wrong layout).
 #[derive(Debug, Clone, PartialEq)]
 pub struct RowBatch {
-    data: Vec<f32>,
+    data: AlignedBuf,
     rows: usize,
     n: usize,
 }
@@ -48,19 +214,20 @@ pub struct RowBatch {
 impl RowBatch {
     /// A zero-filled `rows × n` batch (the usual output buffer).
     pub fn new(rows: usize, n: usize) -> RowBatch {
-        RowBatch { data: vec![0.0; rows * n], rows, n }
+        RowBatch { data: AlignedBuf::zeroed(rows * n), rows, n }
     }
 
     /// An empty batch of row length `n` with room for `rows` rows
     /// pre-reserved; fill it with [`RowBatch::push_row`].
     pub fn with_capacity(rows: usize, n: usize) -> RowBatch {
-        RowBatch { data: Vec::with_capacity(rows * n), rows: 0, n }
+        RowBatch { data: AlignedBuf::with_capacity(rows * n), rows: 0, n }
     }
 
-    /// Wrap an existing flat row-major buffer (must be exactly `rows × n`).
+    /// Copy an existing flat row-major buffer (must be exactly `rows × n`)
+    /// into aligned batch storage.
     pub fn from_vec(data: Vec<f32>, rows: usize, n: usize) -> RowBatch {
         assert_eq!(data.len(), rows * n, "flat buffer is not rows x n");
-        RowBatch { data, rows, n }
+        RowBatch { data: AlignedBuf::from_slice(&data), rows, n }
     }
 
     /// Copy borrowed rows (all of length `n`) into a fresh batch.
@@ -99,11 +266,11 @@ impl RowBatch {
     }
 
     pub fn row(&self, i: usize) -> &[f32] {
-        &self.data[i * self.n..i * self.n + self.n]
+        &self.data.as_slice()[i * self.n..i * self.n + self.n]
     }
 
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
-        &mut self.data[i * self.n..i * self.n + self.n]
+        &mut self.data.as_mut_slice()[i * self.n..i * self.n + self.n]
     }
 
     pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> {
@@ -112,16 +279,62 @@ impl RowBatch {
 
     /// The whole batch as one flat row-major slice.
     pub fn as_slice(&self) -> &[f32] {
-        &self.data
+        self.data.as_slice()
     }
 
     pub fn as_mut_slice(&mut self) -> &mut [f32] {
-        &mut self.data
+        self.data.as_mut_slice()
     }
 
-    /// Take the flat buffer out (e.g. to hand to an executor that pads it).
+    /// Copy the flat buffer out into a plain `Vec` (e.g. to hand to an
+    /// executor that pads it).  This copies: the aligned allocation cannot
+    /// be adopted by `Vec`, whose deallocation layout differs.
     pub fn into_vec(self) -> Vec<f32> {
-        self.data
+        self.data.as_slice().to_vec()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Non-temporal store policy
+// ---------------------------------------------------------------------------
+
+/// Whether the batched engine may use the streaming (non-temporal) scale
+/// pass.  Outputs are bit-identical across policies; only DRAM traffic and
+/// cache-pollution behavior differ.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NtPolicy {
+    /// Stream when the span's working set (input + output) exceeds the
+    /// host LLC — the write-allocate traffic is real only out of cache.
+    Auto,
+    /// Always select the NT scale pass (benches, tests).
+    Always,
+    /// Never stream (benches, tests, and the in-place path).
+    Never,
+}
+
+/// Cache-residency threshold for [`NtPolicy::Auto`]: the host LLC size.
+fn nt_threshold_bytes() -> usize {
+    static B: OnceLock<usize> = OnceLock::new();
+    *B.get_or_init(|| crate::platform::detect().llc())
+}
+
+fn use_nt(policy: NtPolicy, span_elems: usize) -> bool {
+    match policy {
+        NtPolicy::Always => true,
+        NtPolicy::Never => false,
+        NtPolicy::Auto => {
+            2 * span_elems * std::mem::size_of::<f32>() > nt_threshold_bytes()
+        }
+    }
+}
+
+/// Make preceding streaming stores globally visible (no-op off x86_64).
+#[inline]
+fn sfence() {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: SFENCE is baseline SSE, always present on x86_64.
+    unsafe {
+        core::arch::x86_64::_mm_sfence();
     }
 }
 
@@ -133,17 +346,31 @@ impl RowBatch {
 /// thread.  Dispatch on (algorithm, ISA) happens once per call, not once
 /// per row; rows run through the same unroll-tuned pass functions as
 /// [`softmax_with`](crate::softmax::softmax_with), in L2-sized row blocks.
+/// Out-of-cache batches stream their output ([`NtPolicy::Auto`]).
 pub fn softmax_batch(
     alg: Algorithm,
     isa: Isa,
     x: &RowBatch,
     y: &mut RowBatch,
 ) -> Result<(), SoftmaxError> {
+    softmax_batch_with_nt(alg, isa, x, y, NtPolicy::Auto)
+}
+
+/// [`softmax_batch`] with an explicit non-temporal store policy (bench and
+/// test hook; outputs are bit-identical across policies).
+pub fn softmax_batch_with_nt(
+    alg: Algorithm,
+    isa: Isa,
+    x: &RowBatch,
+    y: &mut RowBatch,
+    policy: NtPolicy,
+) -> Result<(), SoftmaxError> {
     validate(x, y, isa)?;
     if x.rows == 0 {
         return Ok(());
     }
-    run_rows(alg, isa, x.as_slice(), y.as_mut_slice(), x.n, block_rows_for(x.n));
+    let nt = use_nt(policy, x.rows * x.n);
+    run_rows(alg, isa, x.as_slice(), y.as_mut_slice(), x.n, block_rows_for(x.n), nt);
     Ok(())
 }
 
@@ -160,14 +387,16 @@ pub fn softmax_batch_with_block(
     if x.rows == 0 {
         return Ok(());
     }
-    run_rows(alg, isa, x.as_slice(), y.as_mut_slice(), x.n, block_rows.max(1));
+    let nt = use_nt(NtPolicy::Auto, x.rows * x.n);
+    run_rows(alg, isa, x.as_slice(), y.as_mut_slice(), x.n, block_rows.max(1), nt);
     Ok(())
 }
 
 /// Parallel [`softmax_batch`]: the batch is split at row boundaries into
-/// `threads` contiguous chunks, each normalized by a scoped worker thread.
-/// Row outputs are bit-identical to the single-threaded path (softmax rows
-/// are independent; no cross-row reduction exists).
+/// `threads` contiguous chunks executed by the persistent worker pool
+/// ([`pool_workers`]).  Row outputs are bit-identical to the
+/// single-threaded path (softmax rows are independent; no cross-row
+/// reduction exists), whatever the chunking.
 pub fn softmax_batch_parallel(
     alg: Algorithm,
     isa: Isa,
@@ -182,24 +411,26 @@ pub fn softmax_batch_parallel(
     let t = threads.clamp(1, x.rows);
     let n = x.n;
     let block = block_rows_for(n);
+    let nt = use_nt(NtPolicy::Auto, x.rows * n);
     if t <= 1 {
-        run_rows(alg, isa, x.as_slice(), y.as_mut_slice(), n, block);
+        run_rows(alg, isa, x.as_slice(), y.as_mut_slice(), n, block, nt);
         return Ok(());
     }
-    let chunk_rows = x.rows.div_ceil(t);
-    std::thread::scope(|s| {
-        let mut xs: &[f32] = x.as_slice();
-        let mut ys: &mut [f32] = y.as_mut_slice();
-        while !xs.is_empty() {
-            let take = (chunk_rows * n).min(xs.len());
-            let (xc, x_rest) = xs.split_at(take);
-            xs = x_rest;
-            let (yc, y_rest) = std::mem::take(&mut ys).split_at_mut(take);
-            ys = y_rest;
-            s.spawn(move || run_rows(alg, isa, xc, yc, n, block));
-        }
-    });
+    run_chunked(alg, isa, x.as_slice(), y.as_mut_slice(), n, block, nt, t);
     Ok(())
+}
+
+/// The one threading policy shared by every `_auto` entry point: how many
+/// chunks to split a `rows × n` batch into (1 = stay single-threaded).
+/// `max_threads = 0` means "all available cores".
+fn plan_threads(rows: usize, n: usize, parallel_threshold: usize, max_threads: usize) -> usize {
+    let threads = if max_threads == 0 { available_threads() } else { max_threads };
+    let t = threads.clamp(1, rows.max(1));
+    if t <= 1 || rows < 2 || rows * n < parallel_threshold {
+        1
+    } else {
+        t
+    }
 }
 
 /// Serving entry point: single-threaded when the batch is small
@@ -213,12 +444,63 @@ pub fn softmax_batch_auto(
     parallel_threshold: usize,
     max_threads: usize,
 ) -> Result<(), SoftmaxError> {
-    let threads = if max_threads == 0 { available_threads() } else { max_threads };
-    if threads <= 1 || x.rows() < 2 || x.rows() * x.n() < parallel_threshold {
+    let t = plan_threads(x.rows(), x.n(), parallel_threshold, max_threads);
+    if t <= 1 {
         softmax_batch(alg, isa, x, y)
     } else {
-        softmax_batch_parallel(alg, isa, x, y, threads)
+        softmax_batch_parallel(alg, isa, x, y, t)
     }
+}
+
+/// Normalize every row of the batch *in place*: the input buffer becomes
+/// the output buffer, so the serving path allocates nothing per batch.
+/// Row outputs are bit-identical to the out-of-place path (every pass
+/// reads `x[i]` strictly before writing `y[i]` at the same index — the
+/// same aliasing contract as [`softmax_inplace`]).  Non-temporal stores
+/// stay off: in place, the output lines are the just-read input lines,
+/// already cache-resident, so streaming would only force them to DRAM.
+///
+/// [`softmax_inplace`]: crate::softmax::softmax_inplace
+pub fn softmax_batch_inplace(
+    alg: Algorithm,
+    isa: Isa,
+    b: &mut RowBatch,
+) -> Result<(), SoftmaxError> {
+    validate_inplace(b, isa)?;
+    if b.rows == 0 {
+        return Ok(());
+    }
+    let n = b.n;
+    let block = block_rows_for(n);
+    let (xs, ys) = super::alias_same(b.as_mut_slice());
+    run_rows(alg, isa, xs, ys, n, block, false);
+    Ok(())
+}
+
+/// [`softmax_batch_inplace`] with the serving threading policy of
+/// [`softmax_batch_auto`]: parallel across the persistent pool above
+/// `parallel_threshold` elements, single-threaded below.
+pub fn softmax_batch_inplace_auto(
+    alg: Algorithm,
+    isa: Isa,
+    b: &mut RowBatch,
+    parallel_threshold: usize,
+    max_threads: usize,
+) -> Result<(), SoftmaxError> {
+    validate_inplace(b, isa)?;
+    if b.rows == 0 {
+        return Ok(());
+    }
+    let t = plan_threads(b.rows, b.n, parallel_threshold, max_threads);
+    let n = b.n;
+    let block = block_rows_for(n);
+    let (xs, ys) = super::alias_same(b.as_mut_slice());
+    if t <= 1 {
+        run_rows(alg, isa, xs, ys, n, block, false);
+    } else {
+        run_chunked(alg, isa, xs, ys, n, block, false, t);
+    }
+    Ok(())
 }
 
 /// Logical CPUs available to this process (1 if detection fails).  Cached:
@@ -248,6 +530,16 @@ fn validate(x: &RowBatch, y: &RowBatch, isa: Isa) -> Result<(), SoftmaxError> {
     Ok(())
 }
 
+fn validate_inplace(b: &RowBatch, isa: Isa) -> Result<(), SoftmaxError> {
+    if b.rows > 0 && b.n == 0 {
+        return Err(SoftmaxError::EmptyInput);
+    }
+    if !isa.available() {
+        return Err(SoftmaxError::IsaUnavailable(isa));
+    }
+    Ok(())
+}
+
 /// Rows per cache block: input + output block (2 · n · 4 bytes per row)
 /// should fit in half the per-core L2, so every row a pass touched is
 /// still resident when the algorithm's next pass runs over the block.
@@ -258,19 +550,212 @@ fn block_rows_for(n: usize) -> usize {
 }
 
 /// One-time dispatch, then the blocked row loop on the chosen kernel.
-fn run_rows(alg: Algorithm, isa: Isa, x: &[f32], y: &mut [f32], n: usize, block: usize) {
+fn run_rows(alg: Algorithm, isa: Isa, x: &[f32], y: &mut [f32], n: usize, block: usize, nt: bool) {
     debug_assert_eq!(x.len(), y.len());
     debug_assert_eq!(x.len() % n, 0);
     match isa {
-        Isa::Scalar => kernel_scalar(alg, x, y, n, block),
+        Isa::Scalar => kernel_scalar(alg, x, y, n, block, nt),
         #[cfg(target_arch = "x86_64")]
         // SAFETY: callers validated ISA availability.
-        Isa::Avx2 => unsafe { kernel_avx2(alg, x, y, n, block) },
+        Isa::Avx2 => unsafe { kernel_avx2(alg, x, y, n, block, nt) },
         #[cfg(target_arch = "x86_64")]
         // SAFETY: callers validated ISA availability.
-        Isa::Avx512 => unsafe { kernel_avx512(alg, x, y, n, block) },
+        Isa::Avx512 => unsafe { kernel_avx512(alg, x, y, n, block, nt) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => unreachable!("non-scalar ISA unavailable on this arch"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persistent worker pool.  Replaces the previous `thread::scope` spawn per
+// batch: workers are spawned lazily, sized by the thread counts actually
+// requested (`batch_threads` on the serving path), growing up to the
+// host's logical CPU count and never shrinking; each worker is pinned to
+// a core where the platform layer supports it and fed row-range work
+// items over its own channel.  The submitting call blocks until every
+// chunk is acknowledged, which is what keeps the raw-pointer borrows in
+// the work items valid.
+// ---------------------------------------------------------------------------
+
+/// One row-range work item.  Raw pointers because the pool threads are
+/// `'static` while the batch borrows are not; see the safety argument on
+/// [`run_chunked`].
+struct Chunk {
+    alg: Algorithm,
+    isa: Isa,
+    x: *const f32,
+    y: *mut f32,
+    elems: usize,
+    n: usize,
+    block: usize,
+    nt: bool,
+    /// Acknowledgement: `true` = chunk completed, `false` = kernel panicked.
+    done: mpsc::SyncSender<bool>,
+}
+
+// SAFETY: the submitter keeps the x/y borrows alive until it has received
+// `done` for every chunk, and chunks reference disjoint output ranges.
+unsafe impl Send for Chunk {}
+
+struct WorkerPool {
+    /// Worker lanes (one channel per worker), grown on demand up to the
+    /// host's logical CPU count.  The mutex guards growth and sender
+    /// cloning only — it is never held across a send or kernel work.
+    lanes: Mutex<Vec<mpsc::Sender<Chunk>>>,
+}
+
+static POOL: OnceLock<WorkerPool> = OnceLock::new();
+/// Cumulative kernel threads ever spawned (test hook: stays equal to
+/// [`pool_workers`] — spawning happens only when the pool grows to meet a
+/// larger thread request, never per batch).
+static POOL_SPAWNS: AtomicUsize = AtomicUsize::new(0);
+/// Rotating lane offset so concurrent submitters don't all queue their
+/// first (and often only) chunks on the same few workers.
+static NEXT_LANE: AtomicUsize = AtomicUsize::new(0);
+
+impl WorkerPool {
+    /// Ensure at least `want` workers exist (clamped to the core count —
+    /// more can't help a memory-bound kernel) and return clones of the
+    /// current lane senders for lock-free submission.
+    fn lanes_for(&self, want: usize) -> Vec<mpsc::Sender<Chunk>> {
+        let cpus = available_threads().max(1);
+        let want = want.clamp(1, cpus);
+        let mut lanes = self.lanes.lock().unwrap();
+        while lanes.len() < want {
+            let i = lanes.len();
+            let (tx, rx) = mpsc::channel::<Chunk>();
+            std::thread::Builder::new()
+                .name(format!("softmax-pool-{i}"))
+                .spawn(move || {
+                    // Best-effort affinity: one worker per core where the
+                    // platform supports pinning (Linux x86_64).
+                    let _ = crate::platform::pin_current_thread(i % cpus);
+                    worker_loop(&rx);
+                })
+                .expect("spawn softmax pool worker");
+            // Counted under the lock so (workers, spawned) snapshots are
+            // consistent — see [`pool_stats`].
+            POOL_SPAWNS.fetch_add(1, Ordering::Relaxed);
+            lanes.push(tx);
+        }
+        lanes.clone()
+    }
+}
+
+fn pool() -> &'static WorkerPool {
+    POOL.get_or_init(|| WorkerPool { lanes: Mutex::new(Vec::new()) })
+}
+
+/// Workers in the persistent pool (0 until the first parallel batch).
+pub fn pool_workers() -> usize {
+    pool_stats().0
+}
+
+/// Total pool threads ever spawned — equals [`pool_workers`]: threads are
+/// only spawned by pool growth, never per batch.
+pub fn pool_spawned_total() -> usize {
+    POOL_SPAWNS.load(Ordering::Relaxed)
+}
+
+/// Consistent `(workers, spawned_total)` snapshot taken under the pool
+/// lock (the two are always equal; test hook for the no-spawn-per-batch
+/// guarantee).
+pub fn pool_stats() -> (usize, usize) {
+    match POOL.get() {
+        None => (0, POOL_SPAWNS.load(Ordering::Relaxed)),
+        Some(p) => {
+            let lanes = p.lanes.lock().unwrap();
+            (lanes.len(), POOL_SPAWNS.load(Ordering::Relaxed))
+        }
+    }
+}
+
+fn worker_loop(rx: &mpsc::Receiver<Chunk>) {
+    while let Ok(c) = rx.recv() {
+        // Confine a kernel panic to the submitting batch (which re-panics
+        // on the `false` ack) instead of killing this worker and poisoning
+        // every future batch routed to its lane.
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // SAFETY: the submitter blocks in `run_chunked` until this
+            // chunk's `done` is acknowledged, so x/y outlive this use;
+            // chunks cover disjoint row ranges of y.
+            let (x, y) = unsafe {
+                (
+                    std::slice::from_raw_parts(c.x, c.elems),
+                    std::slice::from_raw_parts_mut(c.y, c.elems),
+                )
+            };
+            run_rows(c.alg, c.isa, x, y, c.n, c.block, c.nt);
+        }))
+        .is_ok();
+        // `run_rows` fences after NT blocks, so the data is globally
+        // visible before this release-ordered acknowledgement.
+        let _ = c.done.send(ok);
+    }
+}
+
+/// Split `xs`/`ys` into `t` contiguous row chunks and execute them on the
+/// persistent pool, blocking until all are done (that blocking is the
+/// lifetime guarantee for the raw pointers handed to the workers).
+#[allow(clippy::too_many_arguments)]
+fn run_chunked(
+    alg: Algorithm,
+    isa: Isa,
+    xs: &[f32],
+    ys: &mut [f32],
+    n: usize,
+    block: usize,
+    nt: bool,
+    t: usize,
+) {
+    let rows = xs.len() / n;
+    let chunk_rows = rows.div_ceil(t);
+    let chunks = rows.div_ceil(chunk_rows);
+    let lanes = pool().lanes_for(t);
+    let lanes_n = lanes.len();
+    let start = NEXT_LANE.fetch_add(chunks, Ordering::Relaxed);
+    // Capacity = chunks: workers never block acknowledging.
+    let (done_tx, done_rx) = mpsc::sync_channel::<bool>(chunks);
+    let mut xs: &[f32] = xs;
+    let mut ys: &mut [f32] = ys;
+    let mut sent = 0usize;
+    while !xs.is_empty() {
+        let take = (chunk_rows * n).min(xs.len());
+        let (xc, x_rest) = xs.split_at(take);
+        xs = x_rest;
+        let (yc, y_rest) = std::mem::take(&mut ys).split_at_mut(take);
+        ys = y_rest;
+        let item = Chunk {
+            alg,
+            isa,
+            x: xc.as_ptr(),
+            y: yc.as_mut_ptr(),
+            elems: take,
+            n,
+            block,
+            nt,
+            done: done_tx.clone(),
+        };
+        lanes[start.wrapping_add(sent) % lanes_n]
+            .send(item)
+            .expect("softmax pool worker disappeared");
+        sent += 1;
+    }
+    debug_assert_eq!(sent, chunks);
+    drop(done_tx);
+    let mut failed = false;
+    for _ in 0..sent {
+        match done_rx.recv() {
+            Ok(ok) => failed |= !ok,
+            // Chunk dropped unacknowledged (worker torn down): treat as
+            // failed — nothing sane can be returned for this batch.
+            Err(_) => failed = true,
+        }
+    }
+    if failed {
+        // Same blast radius as the old thread::scope design: the batch
+        // that hit the kernel panic dies, the pool survives for the next.
+        panic!("softmax pool worker panicked mid-batch");
     }
 }
 
@@ -278,18 +763,23 @@ fn run_rows(alg: Algorithm, isa: Isa, x: &[f32], y: &mut [f32], n: usize, block:
 // Blocked drivers: generic over the pass functions, so each ISA kernel
 // monomorphizes one copy with its own unroll-tuned passes.  Within a block
 // the loop is pass-major (all rows pass 1, then all rows pass 2, ...);
-// block sizing keeps the whole block cache-resident between passes.
+// block sizing keeps the whole block cache-resident between passes.  When
+// `nt` is set the final (store-only) pass uses its streaming variant and
+// the driver issues an SFENCE at block end.
 // ---------------------------------------------------------------------------
 
 #[inline(always)]
+#[allow(clippy::too_many_arguments)]
 fn drive_recompute(
     x: &[f32],
     y: &mut [f32],
     n: usize,
     block: usize,
+    nt: bool,
     pass_max: impl Fn(&[f32]) -> f32,
     pass_sumexp: impl Fn(&[f32], f32) -> f32,
     pass_scaleexp: impl Fn(&[f32], f32, f32, &mut [f32]),
+    pass_scaleexp_nt: impl Fn(&[f32], f32, f32, &mut [f32]),
 ) {
     let rows = x.len() / n;
     let mut mu = Vec::with_capacity(block.min(rows));
@@ -306,7 +796,15 @@ fn drive_recompute(
             sigma.push(pass_sumexp(&x[r * n..r * n + n], mu[i]));
         }
         for (i, r) in (r0..r0 + b).enumerate() {
-            pass_scaleexp(&x[r * n..r * n + n], mu[i], 1.0 / sigma[i], &mut y[r * n..r * n + n]);
+            let lam = 1.0 / sigma[i];
+            if nt {
+                pass_scaleexp_nt(&x[r * n..r * n + n], mu[i], lam, &mut y[r * n..r * n + n]);
+            } else {
+                pass_scaleexp(&x[r * n..r * n + n], mu[i], lam, &mut y[r * n..r * n + n]);
+            }
+        }
+        if nt {
+            sfence();
         }
         r0 += b;
     }
@@ -344,13 +842,16 @@ fn drive_reload(
 }
 
 #[inline(always)]
+#[allow(clippy::too_many_arguments)]
 fn drive_twopass(
     x: &[f32],
     y: &mut [f32],
     n: usize,
     block: usize,
+    nt: bool,
     pass_accum: impl Fn(&[f32]) -> ExtSum,
     pass_scale: impl Fn(&[f32], f32, f32, &mut [f32]),
+    pass_scale_nt: impl Fn(&[f32], f32, f32, &mut [f32]),
 ) {
     let rows = x.len() / n;
     let mut sums: Vec<ExtSum> = Vec::with_capacity(block.min(rows));
@@ -363,7 +864,14 @@ fn drive_twopass(
         }
         for (i, r) in (r0..r0 + b).enumerate() {
             let s = sums[i];
-            pass_scale(&x[r * n..r * n + n], 1.0 / s.m, s.n, &mut y[r * n..r * n + n]);
+            if nt {
+                pass_scale_nt(&x[r * n..r * n + n], 1.0 / s.m, s.n, &mut y[r * n..r * n + n]);
+            } else {
+                pass_scale(&x[r * n..r * n + n], 1.0 / s.m, s.n, &mut y[r * n..r * n + n]);
+            }
+        }
+        if nt {
+            sfence();
         }
         r0 += b;
     }
@@ -372,19 +880,22 @@ fn drive_twopass(
 // ---------------------------------------------------------------------------
 // Per-ISA kernels.  The unroll factors match the single-row defaults in
 // scalar.rs / avx2.rs / avx512.rs exactly, so per-row outputs are
-// bit-identical to softmax_with.
+// bit-identical to softmax_with.  The reload algorithm ignores `nt`: its
+// final pass re-reads the output, so write-allocate is unavoidable there.
 // ---------------------------------------------------------------------------
 
-fn kernel_scalar(alg: Algorithm, x: &[f32], y: &mut [f32], n: usize, block: usize) {
+fn kernel_scalar(alg: Algorithm, x: &[f32], y: &mut [f32], n: usize, block: usize, nt: bool) {
     match alg {
         Algorithm::ThreePassRecompute => drive_recompute(
             x,
             y,
             n,
             block,
+            nt,
             scalar::pass_max,
             scalar::pass_sumexp,
             scalar::pass_scaleexp,
+            scalar::pass_scaleexp_nt,
         ),
         Algorithm::ThreePassReload => drive_reload(
             x,
@@ -400,26 +911,30 @@ fn kernel_scalar(alg: Algorithm, x: &[f32], y: &mut [f32], n: usize, block: usiz
             y,
             n,
             block,
+            nt,
             scalar::pass_accum_extexp,
             scalar::pass_scale_extexp,
+            scalar::pass_scale_extexp_nt,
         ),
     }
 }
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
-unsafe fn kernel_avx2(alg: Algorithm, x: &[f32], y: &mut [f32], n: usize, block: usize) {
+unsafe fn kernel_avx2(alg: Algorithm, x: &[f32], y: &mut [f32], n: usize, block: usize, nt: bool) {
     match alg {
         Algorithm::ThreePassRecompute => drive_recompute(
             x,
             y,
             n,
             block,
+            nt,
             // SAFETY (all closures): AVX2+FMA availability was checked by
             // the dispatching caller.
             |r| unsafe { avx2::pass_max::<4>(r) },
             |r, mu| unsafe { avx2::pass_sumexp::<8>(r, mu) },
             |r, mu, lam, out| unsafe { avx2::pass_scaleexp::<8>(r, mu, lam, out) },
+            |r, mu, lam, out| unsafe { avx2::pass_scaleexp_nt::<8>(r, mu, lam, out) },
         ),
         Algorithm::ThreePassReload => drive_reload(
             x,
@@ -435,26 +950,30 @@ unsafe fn kernel_avx2(alg: Algorithm, x: &[f32], y: &mut [f32], n: usize, block:
             y,
             n,
             block,
+            nt,
             |r| unsafe { avx2::pass_accum_extexp::<8>(r) },
             |r, lam, n_sum, out| unsafe { avx2::pass_scale_extexp::<8>(r, lam, n_sum, out) },
+            |r, lam, n_sum, out| unsafe { avx2::pass_scale_extexp_nt::<8>(r, lam, n_sum, out) },
         ),
     }
 }
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f")]
-unsafe fn kernel_avx512(alg: Algorithm, x: &[f32], y: &mut [f32], n: usize, block: usize) {
+unsafe fn kernel_avx512(alg: Algorithm, x: &[f32], y: &mut [f32], n: usize, block: usize, nt: bool) {
     match alg {
         Algorithm::ThreePassRecompute => drive_recompute(
             x,
             y,
             n,
             block,
+            nt,
             // SAFETY (all closures): AVX512F availability was checked by
             // the dispatching caller.
             |r| unsafe { avx512::pass_max::<4>(r) },
             |r, mu| unsafe { avx512::pass_sumexp::<8>(r, mu) },
             |r, mu, lam, out| unsafe { avx512::pass_scaleexp::<8>(r, mu, lam, out) },
+            |r, mu, lam, out| unsafe { avx512::pass_scaleexp_nt::<8>(r, mu, lam, out) },
         ),
         Algorithm::ThreePassReload => drive_reload(
             x,
@@ -470,8 +989,10 @@ unsafe fn kernel_avx512(alg: Algorithm, x: &[f32], y: &mut [f32], n: usize, bloc
             y,
             n,
             block,
+            nt,
             |r| unsafe { avx512::pass_accum_extexp::<8>(r) },
             |r, lam, n_sum, out| unsafe { avx512::pass_scale_extexp::<8>(r, lam, n_sum, out) },
+            |r, lam, n_sum, out| unsafe { avx512::pass_scale_extexp_nt::<8>(r, lam, n_sum, out) },
         ),
     }
 }
@@ -514,6 +1035,25 @@ mod tests {
     }
 
     #[test]
+    fn rowbatch_is_64b_aligned_across_constructors_and_growth() {
+        let aligned = |b: &RowBatch| b.as_slice().as_ptr() as usize % ROWBATCH_ALIGN == 0;
+        assert!(aligned(&RowBatch::new(7, 19)));
+        assert!(aligned(&RowBatch::with_capacity(0, 8)));
+        let mut g = RowBatch::with_capacity(1, 11);
+        for r in 0..65 {
+            g.push_row(&[r as f32; 11]).unwrap();
+            assert!(aligned(&g), "after push {r}");
+        }
+        assert_eq!(g.rows(), 65);
+        assert_eq!(g.row(64), &[64.0f32; 11][..]);
+        let v: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let fb = RowBatch::from_vec(v.clone(), 3, 4);
+        assert!(aligned(&fb));
+        assert_eq!(fb.clone().into_vec(), v);
+        assert!(aligned(&fb.clone()));
+    }
+
+    #[test]
     fn batch_matches_single_row_api_bitwise() {
         for &(rows, n) in &[(1usize, 8usize), (3, 7), (5, 100), (2, 1000)] {
             let x = random_batch(rows, n, 42 + n as u64);
@@ -538,7 +1078,7 @@ mod tests {
     }
 
     #[test]
-    fn blocked_and_parallel_match_default() {
+    fn blocked_parallel_nt_and_inplace_match_default() {
         let (rows, n) = (13usize, 257usize);
         let x = random_batch(rows, n, 9);
         for alg in Algorithm::ALL {
@@ -555,6 +1095,17 @@ mod tests {
                 softmax_batch_parallel(alg, isa, &x, &mut y, threads).unwrap();
                 assert_eq!(y, want, "{alg} threads={threads}");
             }
+            for policy in [NtPolicy::Auto, NtPolicy::Always, NtPolicy::Never] {
+                let mut y = RowBatch::new(rows, n);
+                softmax_batch_with_nt(alg, isa, &x, &mut y, policy).unwrap();
+                assert_eq!(y, want, "{alg} {policy:?}");
+            }
+            let mut b = x.clone();
+            softmax_batch_inplace(alg, isa, &mut b).unwrap();
+            assert_eq!(b, want, "{alg} inplace");
+            let mut b = x.clone();
+            softmax_batch_inplace_auto(alg, isa, &mut b, 1, 4).unwrap();
+            assert_eq!(b, want, "{alg} inplace parallel");
         }
     }
 
@@ -563,6 +1114,8 @@ mod tests {
         let x = RowBatch::new(0, 16);
         let mut y = RowBatch::new(0, 16);
         softmax_batch(Algorithm::TwoPass, Isa::Scalar, &x, &mut y).unwrap();
+        let mut e = RowBatch::new(0, 16);
+        softmax_batch_inplace(Algorithm::TwoPass, Isa::Scalar, &mut e).unwrap();
 
         let x = RowBatch::new(2, 16);
         let mut wrong = RowBatch::new(3, 16);
@@ -575,6 +1128,11 @@ mod tests {
         let mut zout = RowBatch::new(2, 0);
         assert_eq!(
             softmax_batch(Algorithm::TwoPass, Isa::Scalar, &zero, &mut zout),
+            Err(SoftmaxError::EmptyInput)
+        );
+        let mut zin = RowBatch::new(2, 0);
+        assert_eq!(
+            softmax_batch_inplace(Algorithm::TwoPass, Isa::Scalar, &mut zin),
             Err(SoftmaxError::EmptyInput)
         );
     }

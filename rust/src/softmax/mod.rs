@@ -4,8 +4,10 @@
 //! AVX512F), each decomposed into the paper's *memory passes* so the
 //! benchmark harness can reproduce the per-pass Figures 3, 4 and 7.
 //! The [`batch`] module lifts the same pass kernels to flat row-major
-//! batches ([`RowBatch`]) with hoisted dispatch, cache-blocked row loops
-//! and an optional scoped worker pool — the serving hot path.
+//! batches (64-byte-aligned [`RowBatch`]) with hoisted dispatch,
+//! cache-blocked row loops, streaming (non-temporal) scale stores for
+//! out-of-cache batches, an in-place path, and a persistent core-pinned
+//! worker pool — the serving hot path.
 //!
 //! ```
 //! use two_pass_softmax::softmax::{softmax, Algorithm};
@@ -26,7 +28,10 @@ pub mod tuning;
 
 use std::fmt;
 
-pub use batch::{softmax_batch, softmax_batch_auto, softmax_batch_parallel, RowBatch};
+pub use batch::{
+    softmax_batch, softmax_batch_auto, softmax_batch_inplace, softmax_batch_parallel, NtPolicy,
+    RowBatch,
+};
 pub use dispatch::Isa;
 pub use exp::ExtSum;
 

@@ -103,6 +103,20 @@ pub fn pass_scale_extexp(x: &[f32], lam: f32, n_sum: f32, y: &mut [f32]) {
     }
 }
 
+/// "Non-temporal" variant of [`pass_scaleexp`] for the batched engine's
+/// uniform per-ISA dispatch: portable Rust has no streaming-store
+/// primitive, so this *is* the temporal pass (bit-identical by
+/// construction).  The SIMD modules provide real `MOVNTPS` variants.
+pub fn pass_scaleexp_nt(x: &[f32], mu: f32, lam: f32, y: &mut [f32]) {
+    pass_scaleexp(x, mu, lam, y);
+}
+
+/// "Non-temporal" variant of [`pass_scale_extexp`]; see
+/// [`pass_scaleexp_nt`] for why this is the temporal pass.
+pub fn pass_scale_extexp_nt(x: &[f32], lam: f32, n_sum: f32, y: &mut [f32]) {
+    pass_scale_extexp(x, lam, n_sum, y);
+}
+
 // ---------------------------------------------------------------------------
 // Full algorithms (compositions of the passes above).
 // ---------------------------------------------------------------------------

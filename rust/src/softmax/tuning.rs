@@ -13,6 +13,7 @@
 //! exactly the paper's protocol.
 
 use std::collections::HashMap;
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use super::{run_pass_with, Isa, Pass, PassOps};
@@ -36,6 +37,12 @@ pub struct TuneEntry {
 #[derive(Debug, Clone, Default)]
 pub struct TuneTable {
     pub entries: Vec<TuneEntry>,
+    /// Bandwidth-derived serving threshold (elements below which one
+    /// batch stays single-threaded), when measured — see
+    /// [`derive_parallel_threshold`].
+    pub parallel_threshold: Option<usize>,
+    /// The single-thread STREAM Scale GB/s the threshold was derived from.
+    pub stream_gbps: Option<f64>,
 }
 
 impl TuneTable {
@@ -48,8 +55,10 @@ impl TuneTable {
             .unwrap_or(DEFAULT_UNROLL)
     }
 
-    /// Serialize to a simple line format: `pass isa n best ns...` per row
-    /// (no external TOML/JSON crates are available offline; see DESIGN.md).
+    /// Serialize to a simple line format: `pass isa n best ns...` per row,
+    /// plus a `parallel_threshold <elems> <gbps>` line when the
+    /// bandwidth-derived serving threshold was measured (no external
+    /// TOML/JSON crates are available offline; see DESIGN.md).
     pub fn to_text(&self) -> String {
         let mut out = String::from("# pass isa n best_unroll ns_per_elem...\n");
         for e in &self.entries {
@@ -59,14 +68,32 @@ impl TuneTable {
             }
             out.push('\n');
         }
+        if let Some(p) = self.parallel_threshold {
+            out.push_str(&format!(
+                "parallel_threshold {} {:.3}\n",
+                p,
+                self.stream_gbps.unwrap_or(0.0)
+            ));
+        }
         out
     }
 
     pub fn from_text(s: &str) -> Result<Self, String> {
-        let mut entries = Vec::new();
+        let mut table = TuneTable::default();
         for line in s.lines() {
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("parallel_threshold ") {
+                let mut it = rest.split_whitespace();
+                table.parallel_threshold = Some(
+                    it.next()
+                        .ok_or("missing threshold value")?
+                        .parse()
+                        .map_err(|e| format!("{e}"))?,
+                );
+                table.stream_gbps = it.next().and_then(|v| v.parse().ok());
                 continue;
             }
             let mut it = line.split_whitespace();
@@ -77,9 +104,9 @@ impl TuneTable {
                 it.next().ok_or("missing best")?.parse().map_err(|e| format!("{e}"))?;
             let ns_per_elem: Vec<f64> =
                 it.map(|v| v.parse::<f64>().map_err(|e| format!("{e}"))).collect::<Result<_, _>>()?;
-            entries.push(TuneEntry { pass, isa, n, ns_per_elem, best_unroll });
+            table.entries.push(TuneEntry { pass, isa, n, ns_per_elem, best_unroll });
         }
-        Ok(TuneTable { entries })
+        Ok(table)
     }
 }
 
@@ -140,7 +167,57 @@ pub fn tune_all(n: usize, reps: usize) -> TuneTable {
             entries.push(tune_pass(pass, isa, n, reps));
         }
     }
-    TuneTable { entries }
+    TuneTable { entries, ..TuneTable::default() }
+}
+
+// ---------------------------------------------------------------------------
+// Bandwidth-derived parallel threshold (replaces the static 512k default).
+// ---------------------------------------------------------------------------
+
+/// Minimum single-thread batch duration (µs of memory traffic) before the
+/// persistent pool hand-off is worth paying.  The hand-off itself is a
+/// channel send + futex wake per worker (~5–20 µs round trip); requiring
+/// ~10× that in kernel time keeps the split from ever being a regression.
+pub const PARALLEL_MIN_US: f64 = 100.0;
+
+/// Lower clamp of the derived threshold: batches smaller than this are
+/// never split whatever the measured bandwidth, so auto-mode callers can
+/// skip the STREAM measurement entirely for batches below it.
+pub const MIN_PARALLEL_THRESHOLD: usize = 1 << 14;
+
+/// Elements below which one batch stays single-threaded, given a measured
+/// single-thread STREAM bandwidth: the element count whose two-pass
+/// traffic (3 transfers × 4 B, Table 2) takes [`PARALLEL_MIN_US`] at that
+/// bandwidth.  Clamped to sane bounds so a wild measurement cannot
+/// disable (or force) parallelism entirely.
+pub fn derive_parallel_threshold(gbps: f64) -> usize {
+    let bytes_per_elem = 12.0; // two-pass: 3 transfers x 4 B per element
+    let elems = gbps * 1e9 * (PARALLEL_MIN_US * 1e-6) / bytes_per_elem;
+    (elems as usize).clamp(MIN_PARALLEL_THRESHOLD, 1 << 23)
+}
+
+/// Measure single-thread STREAM Scale out of cache (arrays ≥ 2× LLC each,
+/// the paper's yardstick for the scale passes) and derive the serving
+/// `parallel_threshold`.  Cached for the process: serving engines consult
+/// this once at startup when the configured threshold is 0 ("auto").
+pub fn measured_parallel_threshold() -> (usize, f64) {
+    static CACHE: OnceLock<(usize, f64)> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        let llc = crate::platform::detect().llc();
+        let n = (2 * llc / std::mem::size_of::<f64>()).max(1 << 20);
+        let gbps = crate::stream::measure_median_gbps(crate::stream::StreamKernel::Scale, n, 3);
+        (derive_parallel_threshold(gbps), gbps)
+    })
+}
+
+/// Resolve a configured `parallel_threshold`: 0 means "derive from
+/// measured STREAM bandwidth at startup", anything else is explicit.
+pub fn resolve_parallel_threshold(configured: usize) -> usize {
+    if configured != 0 {
+        configured
+    } else {
+        measured_parallel_threshold().0
+    }
 }
 
 /// Per-(pass, isa) speedup of the tuned variant over unroll=1, useful as an
@@ -184,12 +261,32 @@ mod tests {
 
     #[test]
     fn table_roundtrips_text() {
-        let t = TuneTable { entries: vec![tune_pass(Pass::ScaleInplace, Isa::Scalar, 1024, 3)] };
+        let t = TuneTable {
+            entries: vec![tune_pass(Pass::ScaleInplace, Isa::Scalar, 1024, 3)],
+            parallel_threshold: Some(123_456),
+            stream_gbps: Some(17.25),
+        };
         let s = t.to_text();
         let back = TuneTable::from_text(&s).unwrap();
         assert_eq!(back.entries.len(), 1);
         assert_eq!(back.best(Pass::ScaleInplace, Isa::Scalar), t.entries[0].best_unroll);
+        assert_eq!(back.parallel_threshold, Some(123_456));
+        assert_eq!(back.stream_gbps, Some(17.25));
         // Unknown pairs fall back to the default.
         assert_eq!(back.best(Pass::Max, Isa::Avx2), DEFAULT_UNROLL);
+        // Tables without a threshold line load with None.
+        let bare = TuneTable::from_text("# pass isa n best\n").unwrap();
+        assert_eq!(bare.parallel_threshold, None);
+    }
+
+    #[test]
+    fn derived_threshold_scales_with_bandwidth_and_clamps() {
+        let t10 = derive_parallel_threshold(10.0);
+        let t40 = derive_parallel_threshold(40.0);
+        assert!(t40 > t10, "{t40} vs {t10}");
+        assert_eq!(derive_parallel_threshold(0.0), MIN_PARALLEL_THRESHOLD);
+        assert_eq!(derive_parallel_threshold(1e9), 1 << 23);
+        // Explicit configuration always wins over auto.
+        assert_eq!(resolve_parallel_threshold(4096), 4096);
     }
 }

@@ -2,11 +2,13 @@
 //! must be *bit-identical* per row to the single-row `softmax_with` API
 //! for every algorithm × available ISA, across ragged tails (n not a
 //! multiple of lane×unroll), single-row batches, the empty batch, cache
-//! blocking and the parallel row-split path.
+//! blocking, the non-temporal scale pass, the in-place path, and the
+//! persistent-pool parallel row split.
 
 use two_pass_softmax::softmax::batch::{
-    softmax_batch, softmax_batch_auto, softmax_batch_parallel, softmax_batch_with_block,
-    RowBatch,
+    pool_spawned_total, pool_stats, softmax_batch, softmax_batch_auto,
+    softmax_batch_inplace, softmax_batch_inplace_auto, softmax_batch_parallel,
+    softmax_batch_with_block, softmax_batch_with_nt, NtPolicy, RowBatch, ROWBATCH_ALIGN,
 };
 use two_pass_softmax::softmax::{softmax_with, Algorithm, Isa, SoftmaxError};
 use two_pass_softmax::util::rng::Rng;
@@ -184,6 +186,147 @@ fn empty_batch_is_ok_and_errors_are_reported() {
             Err(SoftmaxError::IsaUnavailable(Isa::Avx512))
         );
     }
+}
+
+#[test]
+fn rowbatch_alignment_guaranteed_everywhere() {
+    let aligned = |b: &RowBatch| b.as_slice().as_ptr() as usize % ROWBATCH_ALIGN == 0;
+
+    // Fresh zeroed batches and empty reserves.
+    assert!(aligned(&RowBatch::new(5, 37)));
+    assert!(aligned(&RowBatch::new(0, 8)));
+    assert!(aligned(&RowBatch::with_capacity(16, 100)));
+
+    // push_row growth: alignment must survive every reallocation.
+    let mut g = RowBatch::with_capacity(1, 23);
+    for r in 0..200 {
+        g.push_row(&vec![r as f32; 23]).unwrap();
+        assert!(aligned(&g), "after push {r}");
+    }
+    assert_eq!(g.rows(), 200);
+    for r in 0..200 {
+        assert_eq!(g.row(r), &vec![r as f32; 23][..], "row {r} intact after growth");
+    }
+
+    // from_vec: arbitrary (Vec-aligned) input lands in aligned storage,
+    // and into_vec round-trips the contents.
+    let v: Vec<f32> = (0..6 * 17).map(|i| i as f32 * 0.5).collect();
+    let fb = RowBatch::from_vec(v.clone(), 6, 17);
+    assert!(aligned(&fb));
+    assert_eq!(fb.row(5)[16], v[6 * 17 - 1]);
+    assert_eq!(fb.into_vec(), v);
+
+    // Clones get their own aligned allocation.
+    let c = g.clone();
+    assert!(aligned(&c));
+    assert_eq!(c, g);
+}
+
+#[test]
+fn nt_scale_pass_bit_identical_to_temporal_on_every_isa() {
+    // n covers: multiples of 16 (64B-aligned rows, real streaming on both
+    // SIMD ISAs), multiples of 8 only (AVX2 streams, AVX512 falls back),
+    // and odd lengths (everything falls back) — all must be bit-identical.
+    for &(rows, n) in &[(4usize, 1024usize), (3, 1000), (2, 16384), (5, 37), (7, 264)] {
+        let x = random_batch(rows, n, 0xA11 + n as u64, 9.0);
+        for isa in Isa::detect_all() {
+            // NT applies to the algorithms whose final pass is store-only.
+            for alg in [Algorithm::TwoPass, Algorithm::ThreePassRecompute] {
+                let mut temporal = RowBatch::new(rows, n);
+                softmax_batch_with_nt(alg, isa, &x, &mut temporal, NtPolicy::Never).unwrap();
+                let mut streamed = RowBatch::new(rows, n);
+                softmax_batch_with_nt(alg, isa, &x, &mut streamed, NtPolicy::Always).unwrap();
+                assert_bitwise_eq(
+                    &streamed,
+                    &temporal,
+                    &format!("nt {alg}/{isa} rows={rows} n={n}"),
+                );
+            }
+            // Reload ignores the policy (its final pass re-reads y).
+            let mut a = RowBatch::new(rows, n);
+            softmax_batch_with_nt(Algorithm::ThreePassReload, isa, &x, &mut a, NtPolicy::Always)
+                .unwrap();
+            let want = reference_rows(Algorithm::ThreePassReload, isa, &x);
+            assert_bitwise_eq(&a, &want, &format!("reload nt {isa} rows={rows} n={n}"));
+        }
+    }
+}
+
+#[test]
+fn inplace_batch_bit_identical_to_out_of_place() {
+    for &(rows, n) in &[(1usize, 129usize), (6, 257), (9, 1000)] {
+        let x = random_batch(rows, n, 0xC0FFEE + n as u64, 7.0);
+        for (alg, isa) in all_combos() {
+            let want = reference_rows(alg, isa, &x);
+            let mut b = x.clone();
+            softmax_batch_inplace(alg, isa, &mut b).unwrap();
+            assert_bitwise_eq(&b, &want, &format!("inplace {alg}/{isa} rows={rows} n={n}"));
+            // Parallel in-place (forced split) matches too.
+            let mut p = x.clone();
+            softmax_batch_inplace_auto(alg, isa, &mut p, 1, 4).unwrap();
+            assert_bitwise_eq(&p, &want, &format!("inplace par {alg}/{isa} rows={rows} n={n}"));
+        }
+    }
+}
+
+#[test]
+fn persistent_pool_is_reused_and_deterministic() {
+    let isa = Isa::detect_best();
+    let (rows, n) = (16usize, 2048usize);
+    let x = random_batch(rows, n, 44, 5.0);
+    let want = reference_rows(Algorithm::TwoPass, isa, &x);
+    let cores = two_pass_softmax::softmax::batch::available_threads();
+
+    // Repeated parallel batches (threshold 1 forces the split) must not
+    // spawn threads per batch: the pool grows at most to the core count
+    // and is reused.  (Other tests in this binary may also grow the pool
+    // concurrently, so assertions use consistent snapshots and the
+    // core-count bound rather than exact before/after equality.)
+    for _ in 0..20 {
+        let mut y = RowBatch::new(rows, n);
+        softmax_batch_auto(Algorithm::TwoPass, isa, &x, &mut y, 1, 4).unwrap();
+        assert_bitwise_eq(&y, &want, "pool batch");
+    }
+    let (workers, spawned) = pool_stats();
+    assert!(spawned > 0, "parallel batches must have created the pool");
+    assert_eq!(
+        workers, spawned,
+        "every spawned thread must belong to the one persistent pool"
+    );
+    for _ in 0..10 {
+        let mut y = RowBatch::new(rows, n);
+        softmax_batch_auto(Algorithm::TwoPass, isa, &x, &mut y, 1, 2).unwrap();
+    }
+    // 30+ parallel batches so far: spawn-per-batch would need dozens of
+    // threads; the pool never exceeds the host's core count.
+    assert!(
+        pool_spawned_total() <= cores,
+        "pool spawned {} threads on a {cores}-core host — per-batch spawning?",
+        pool_spawned_total()
+    );
+
+    // Concurrent callers share the pool and stay bit-deterministic.
+    let x = std::sync::Arc::new(x);
+    let want = std::sync::Arc::new(want);
+    let mut clients = Vec::new();
+    for c in 0..4 {
+        let x = std::sync::Arc::clone(&x);
+        let want = std::sync::Arc::clone(&want);
+        clients.push(std::thread::spawn(move || {
+            for it in 0..8 {
+                let mut y = RowBatch::new(rows, n);
+                softmax_batch_auto(Algorithm::TwoPass, Isa::detect_best(), &x, &mut y, 1, 3)
+                    .unwrap();
+                assert_bitwise_eq(&y, &want, &format!("concurrent c={c} it={it}"));
+            }
+        }));
+    }
+    for cl in clients {
+        cl.join().unwrap();
+    }
+    let (workers, spawned) = pool_stats();
+    assert_eq!(workers, spawned, "pool invariant after concurrent callers");
+    assert!(spawned <= cores, "concurrent callers must reuse pool workers");
 }
 
 #[test]
