@@ -1,14 +1,23 @@
-//! END-TO-END driver: serve a real (small) transformer LM through the full
-//! three-layer stack and report latency/throughput.
+//! END-TO-END driver: LM decoding through the serving stack's fused
+//! **decode endpoint** — the coordinator answers with sampled token ids +
+//! logprobs, and no normalized probability row is ever materialized
+//! (selection happens on the two-pass algorithm's (m, n)
+//! extended-exponent pairs).
 //!
-//!   L1  Pallas two-pass softmax kernels (attention + vocab head)
-//!   L2  JAX transformer, AOT-lowered to artifacts/lm_probs_b*.hlo.txt
-//!   L3  this process: Rust coordinator (dynamic batcher + worker pool)
-//!       executing the artifacts via PJRT — Python nowhere on this path.
+//! Two modes:
 //!
-//! Run after `make artifacts && cargo build --release`:
+//! * **native decode** (default; runs everywhere, no artifacts needed):
+//!   clients submit vocab-sized logits rows (a synthetic LM head) as
+//!   `Payload::Decode` and receive `Choice { token, logprob }` back.
+//! * **--pjrt-lm** (requires `make artifacts`): the legacy three-layer
+//!   path — token sequences through the AOT-compiled JAX transformer via
+//!   PJRT; each returned distribution is then decoded locally with the
+//!   same fused sampling API over its log-probabilities.
+//!
+//! Run after `cargo build --release`:
 //!   cargo run --release --example lm_serving -- [--requests 64] [--clients 4]
-//!       [--max-batch 8] [--artifacts artifacts]
+//!       [--vocab 50257] [--max-batch 8] [--temperature 1.0] [--top-k 40]
+//!       [--top-p 1.0] [--pjrt-lm] [--artifacts artifacts]
 //!
 //! The reported numbers are recorded in EXPERIMENTS.md §E2E.
 
@@ -18,12 +27,113 @@ use std::time::Instant;
 use two_pass_softmax::config::{Backend, ServeConfig};
 use two_pass_softmax::coordinator::{Coordinator, Payload};
 use two_pass_softmax::runtime::{EntryKind, Runtime};
+use two_pass_softmax::sampling::{self, SamplingParams};
+use two_pass_softmax::softmax::Isa;
 use two_pass_softmax::util::cli::Args;
 use two_pass_softmax::util::rng::Rng;
 use two_pass_softmax::util::stats;
+use two_pass_softmax::workload::LogitsDist;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
+    if args.flag("pjrt-lm") {
+        pjrt_lm(&args)
+    } else {
+        native_decode(&args)
+    }
+}
+
+/// Serve the fused decode endpoint under concurrent load.
+fn native_decode(args: &Args) -> anyhow::Result<()> {
+    let requests: usize = args.get("requests", 64).map_err(anyhow::Error::msg)?;
+    let clients: usize = args.get("clients", 4).map_err(anyhow::Error::msg)?;
+    let vocab: usize = args.get("vocab", 50_257).map_err(anyhow::Error::msg)?;
+    let sp = SamplingParams {
+        temperature: args.get("temperature", 1.0f32).map_err(anyhow::Error::msg)?,
+        top_k: args.get("top-k", 40usize).map_err(anyhow::Error::msg)?,
+        top_p: args.get("top-p", 1.0f32).map_err(anyhow::Error::msg)?,
+        seed: args.get("sample-seed", 7u64).map_err(anyhow::Error::msg)?,
+    };
+
+    let mut cfg = ServeConfig {
+        max_batch: args.get("max-batch", 8).map_err(anyhow::Error::msg)?,
+        max_wait_us: 2000,
+        workers: 2,
+        ..ServeConfig::default()
+    };
+    cfg.apply_args(args)?;
+    println!(
+        "decode endpoint: vocab = {vocab}, temperature = {}, top_k = {}, top_p = {} \
+         (fused two-pass sampling — no normalized rows)",
+        sp.temperature, sp.top_k, sp.top_p
+    );
+
+    let coord = Arc::new(Coordinator::start(cfg)?);
+    println!("serving {requests} decode requests from {clients} concurrent clients ...");
+    let t0 = Instant::now();
+    let per_client = requests.div_ceil(clients.max(1));
+    let mut joins = Vec::new();
+    for c in 0..clients.max(1) {
+        let coord = coord.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + c as u64);
+            let dist = LogitsDist::Normal { mean: 0.0, std: 4.0 };
+            let mut lat_us = Vec::new();
+            let mut decoded = 0usize;
+            for i in 0..per_client {
+                let logits = dist.generate(vocab, &mut rng);
+                let seed = sp.seed ^ ((c as u64) << 32) ^ i as u64;
+                let params = SamplingParams { seed, ..sp };
+                let t = Instant::now();
+                let resp = coord
+                    .submit(Payload::Decode { logits, params })
+                    .expect("submit")
+                    .wait()
+                    .expect("response");
+                lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+                assert!(resp.error.is_none(), "serving error: {:?}", resp.error);
+                assert!(resp.probs.is_empty(), "decode must not ship a probability row");
+                let choice = resp.token.expect("decode response carries a token");
+                assert!((choice.token as usize) < vocab);
+                assert!(choice.logprob.is_finite() && choice.logprob < 1e-6);
+                decoded += 1;
+            }
+            (lat_us, decoded)
+        }));
+    }
+    let mut all_lat = Vec::new();
+    let mut total_ok = 0usize;
+    for j in joins {
+        let (lat, ok) = j.join().expect("client");
+        all_lat.extend(lat);
+        total_ok += ok;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = stats::summarize(&all_lat);
+
+    println!("\n=== E2E RESULTS (record in EXPERIMENTS.md §E2E) ===");
+    println!(
+        "decoded {total_ok} tokens in {wall:.2}s -> {:.1} tokens/s",
+        total_ok as f64 / wall
+    );
+    println!(
+        "latency: p50 {:.1} ms, p95 {:.1} ms, max {:.1} ms",
+        s.median / 1e3,
+        s.p95 / 1e3,
+        s.max / 1e3
+    );
+    println!("{}", coord.metrics());
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.shutdown(),
+        Err(_) => anyhow::bail!("coordinator leak"),
+    }
+    println!("\nOK: every response was a valid token id + finite logprob.");
+    Ok(())
+}
+
+/// Legacy three-layer path: token sequences through PJRT, then the fused
+/// sampling API applied to each returned distribution's log-probs.
+fn pjrt_lm(args: &Args) -> anyhow::Result<()> {
     let requests: usize = args.get("requests", 64).map_err(anyhow::Error::msg)?;
     let clients: usize = args.get("clients", 4).map_err(anyhow::Error::msg)?;
     let artifacts = args.opt("artifacts").unwrap_or("artifacts").to_string();
@@ -50,7 +160,7 @@ fn main() -> anyhow::Result<()> {
         workers: 2,
         ..ServeConfig::default()
     };
-    cfg.apply_args(&args)?;
+    cfg.apply_args(args)?;
 
     let coord = Arc::new(Coordinator::start(cfg)?);
 
@@ -66,6 +176,7 @@ fn main() -> anyhow::Result<()> {
     println!("serving {requests} requests from {clients} concurrent clients ...");
     let t0 = Instant::now();
     let per_client = requests.div_ceil(clients.max(1));
+    let isa = Isa::detect_best();
     let mut joins = Vec::new();
     for c in 0..clients.max(1) {
         let coord = coord.clone();
@@ -73,7 +184,7 @@ fn main() -> anyhow::Result<()> {
             let mut rng = Rng::new(1000 + c as u64);
             let mut lat_us = Vec::new();
             let mut checked = 0usize;
-            for _ in 0..per_client {
+            for i in 0..per_client {
                 let tokens: Vec<i32> =
                     (0..seq).map(|_| rng.below(vocab.min(1000)) as i32).collect();
                 let t = Instant::now();
@@ -88,6 +199,13 @@ fn main() -> anyhow::Result<()> {
                 let sum: f32 = resp.probs.iter().sum();
                 assert!((sum - 1.0).abs() < 1e-4, "row sums to {sum}");
                 assert_eq!(resp.probs.len(), vocab);
+                // Decode a token from the distribution with the fused
+                // sampler (softmax(ln p) = p, so ln-probs are logits).
+                let ln_p: Vec<f32> =
+                    resp.probs.iter().map(|&p| p.max(f32::MIN_POSITIVE).ln()).collect();
+                let params = SamplingParams { top_k: 40, seed: i as u64, ..SamplingParams::default() };
+                let choice = sampling::sample_row(isa, &ln_p, &params).expect("decode");
+                assert!((choice.token as usize) < vocab);
                 checked += 1;
             }
             (lat_us, checked)
@@ -116,6 +234,6 @@ fn main() -> anyhow::Result<()> {
         Ok(c) => c.shutdown(),
         Err(_) => anyhow::bail!("coordinator leak"),
     }
-    println!("\nOK: all responses were valid {vocab}-way distributions.");
+    println!("\nOK: all responses were valid {vocab}-way distributions, decoded fused.");
     Ok(())
 }

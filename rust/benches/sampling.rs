@@ -1,0 +1,151 @@
+//! Bench: fused decode (argmax / top-k sampling straight off the
+//! extended-exponent accumulators) vs the normalize-then-scan serving
+//! path it replaces (full two-pass softmax into an output batch, then a
+//! scan of the normalized row per token).
+//!
+//! `cargo bench --bench sampling [-- --rows 8 --ns 32768,65536,131072,262144
+//!      --top-k 40 --reps 5 --min-time 0.05]`
+//!
+//! Reports ns/token, tokens/s and effective GB/s per path.  Traffic
+//! accounting: fused greedy/top-k decode reads the logits once (1N);
+//! normalize-then-scan moves the two-pass algorithm's 3N plus one more
+//! read of the normalized row (4N).  The sweep is emitted as JSON
+//! (`results/bench/sampling.json`, same shape as `batch_nt.json`) so
+//! successive BENCH_*.json files can track the fused-decode win.
+
+use two_pass_softmax::sampling::{self, SamplingParams};
+use two_pass_softmax::softmax::batch::{softmax_batch, RowBatch};
+use two_pass_softmax::softmax::{Algorithm, Isa};
+use two_pass_softmax::util::cli::Args;
+use two_pass_softmax::util::stats;
+use two_pass_softmax::util::table::Table;
+use two_pass_softmax::workload::{request_rowbatch, LogitsDist};
+
+/// Effective bandwidth for `passes`·N·4B of traffic over `rows` rows.
+fn gbps(passes: usize, elems: usize, secs: f64) -> f64 {
+    (passes * elems * std::mem::size_of::<f32>()) as f64 / secs / 1e9
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    raw.retain(|a| a != "--bench");
+    let args = Args::parse(raw);
+    let isa = Isa::detect_best();
+    let rows: usize = args.get("rows", 8).map_err(anyhow::Error::msg)?;
+    let reps: usize = args.get("reps", 5).map_err(anyhow::Error::msg)?;
+    let min_time: f64 = args.get("min-time", 0.05).map_err(anyhow::Error::msg)?;
+    let top_k: usize = args.get("top-k", 40).map_err(anyhow::Error::msg)?;
+    // LM vocab sizes: 32k (GPT-2-ish) to 256k (large multilingual heads).
+    let ns: Vec<usize> =
+        args.list("ns", &[32_768, 65_536, 131_072, 262_144]).map_err(anyhow::Error::msg)?;
+
+    println!("fused decode vs normalize-then-scan — {isa}, {rows} rows/batch, top_k = {top_k}\n");
+    let mut t = Table::new(
+        &format!("Fused decode vs normalize-then-scan ({isa}, {rows} rows)"),
+        &["n", "path", "ns_per_token", "tokens_s", "gb_s"],
+    );
+
+    let greedy = [SamplingParams::greedy()];
+    let sampled = [SamplingParams { top_k, seed: 9, ..SamplingParams::default() }];
+    let mut sweep: Vec<(usize, f64, f64, f64)> = Vec::new();
+
+    for &n in &ns {
+        let elems = rows * n;
+        let x = request_rowbatch(LogitsDist::Normal { mean: 0.0, std: 4.0 }, rows, n, 13);
+        let mut y = RowBatch::new(rows, n);
+
+        // The path being replaced: normalize the whole batch, then scan
+        // each normalized row for its argmax.
+        let t_norm = stats::measure_median(
+            || {
+                softmax_batch(Algorithm::TwoPass, isa, &x, &mut y).unwrap();
+                let mut picked = 0usize;
+                for r in 0..rows {
+                    let row = y.row(r);
+                    let mut best = 0usize;
+                    for i in 1..row.len() {
+                        if row[i] > row[best] {
+                            best = i;
+                        }
+                    }
+                    picked += best;
+                }
+                std::hint::black_box(picked);
+            },
+            reps,
+            min_time,
+        );
+
+        // Fused greedy decode: one read of the logits, nothing written.
+        let t_fused = stats::measure_median(
+            || {
+                let c = sampling::sample_batch(isa, &x, &greedy).unwrap();
+                std::hint::black_box(&c);
+            },
+            reps,
+            min_time,
+        );
+
+        // Fused top-k categorical sampling (seeded).
+        let t_topk = stats::measure_median(
+            || {
+                let c = sampling::sample_batch(isa, &x, &sampled).unwrap();
+                std::hint::black_box(&c);
+            },
+            reps,
+            min_time,
+        );
+
+        let tokens = rows as f64;
+        for (path, secs, passes) in [
+            ("norm_scan", t_norm, 4usize),
+            ("fused_greedy", t_fused, 1),
+            ("fused_topk", t_topk, 1),
+        ] {
+            t.rowd(&[
+                n.to_string(),
+                path.to_string(),
+                format!("{:.0}", secs * 1e9 / tokens),
+                format!("{:.0}", tokens / secs),
+                format!("{:.2}", gbps(passes, elems, secs)),
+            ]);
+        }
+        println!(
+            "n = {n}: fused greedy {:.2}x vs normalize-then-scan ({:.1} vs {:.1} us/token)",
+            t_norm / t_fused,
+            t_fused * 1e6 / tokens,
+            t_norm * 1e6 / tokens
+        );
+        sweep.push((n, t_norm / tokens, t_fused / tokens, t_topk / tokens));
+    }
+
+    print!("{}", t.to_markdown());
+    t.save(std::path::Path::new("results/bench"), "sampling")?;
+
+    // JSON for the bench trajectory (BENCH_*.json harvesting), matching
+    // the batch_nt.json format.
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"bench\": \"sampling\",\n  \"isa\": \"{isa}\",\n  \"rows\": {rows},\n  \"top_k\": {top_k},\n"
+    ));
+    json.push_str("  \"sweep\": [\n");
+    for (i, (n, s_norm, s_fused, s_topk)) in sweep.iter().enumerate() {
+        // Per-token traffic of the fused scan is one read of the row.
+        let gbps_fused = (*n as f64 * std::mem::size_of::<f32>() as f64) / s_fused / 1e9;
+        json.push_str(&format!(
+            "    {{\"n\": {n}, \"tokens_s_norm_scan\": {:.1}, \"tokens_s_fused_greedy\": {:.1}, \
+             \"tokens_s_fused_topk\": {:.1}, \"gbps_fused_greedy\": {gbps_fused:.3}, \
+             \"speedup\": {:.3}}}{}\n",
+            1.0 / s_norm,
+            1.0 / s_fused,
+            1.0 / s_topk,
+            s_norm / s_fused,
+            if i + 1 == sweep.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::create_dir_all("results/bench")?;
+    std::fs::write("results/bench/sampling.json", json)?;
+    println!("wrote results/bench/sampling.json");
+    Ok(())
+}

@@ -57,6 +57,11 @@ pub struct ServeConfig {
     pub parallel_threshold: usize,
     /// Kernel threads per batch for the native engine (0 = all cores).
     pub batch_threads: usize,
+    /// Pad executed softmax batches to power-of-two row counts on the
+    /// pjrt backend so shape-specialized artifacts hit their exact-fit
+    /// bucket (padding rows are sliced off before response assembly).
+    /// Ignored by the native backend.
+    pub bucket_pow2: bool,
 }
 
 impl Default for ServeConfig {
@@ -75,6 +80,7 @@ impl Default for ServeConfig {
             // fast the host's memory actually is).
             parallel_threshold: 0,
             batch_threads: 0,
+            bucket_pow2: true,
         }
     }
 }
@@ -121,6 +127,9 @@ impl ServeConfig {
         if let Some(v) = root.get("batch_threads").and_then(Json::as_usize) {
             self.batch_threads = v;
         }
+        if let Some(v) = root.get("bucket_pow2").and_then(Json::as_bool) {
+            self.bucket_pow2 = v;
+        }
         self.validate()
     }
 
@@ -146,6 +155,12 @@ impl ServeConfig {
         self.parallel_threshold =
             a.get("parallel-threshold", self.parallel_threshold).map_err(|e| anyhow!(e))?;
         self.batch_threads = a.get("batch-threads", self.batch_threads).map_err(|e| anyhow!(e))?;
+        if a.flag("bucket-pow2") {
+            self.bucket_pow2 = true;
+        }
+        if a.flag("no-bucket-pow2") {
+            self.bucket_pow2 = false;
+        }
         self.validate()
     }
 
@@ -184,7 +199,8 @@ mod tests {
         let j = Json::parse(
             r#"{"backend": "native", "algorithm": "threepass_reload",
                 "max_batch": 16, "workers": 3,
-                "parallel_threshold": 4096, "batch_threads": 2}"#,
+                "parallel_threshold": 4096, "batch_threads": 2,
+                "bucket_pow2": false}"#,
         )
         .unwrap();
         let mut c = ServeConfig::default();
@@ -195,22 +211,26 @@ mod tests {
         assert_eq!(c.workers, 3);
         assert_eq!(c.parallel_threshold, 4096);
         assert_eq!(c.batch_threads, 2);
+        assert!(!c.bucket_pow2);
     }
 
     #[test]
     fn cli_overrides() {
         let a = Args::parse(
             ["--algorithm", "twopass", "--max-batch", "4", "--workers", "1",
-             "--parallel-threshold", "1024", "--batch-threads", "3"]
+             "--parallel-threshold", "1024", "--batch-threads", "3",
+             "--no-bucket-pow2"]
                 .iter()
                 .map(|s| s.to_string()),
         );
         let mut c = ServeConfig::default();
+        assert!(c.bucket_pow2, "bucketing defaults on");
         c.apply_args(&a).unwrap();
         assert_eq!(c.algorithm, Algorithm::TwoPass);
         assert_eq!(c.max_batch, 4);
         assert_eq!(c.parallel_threshold, 1024);
         assert_eq!(c.batch_threads, 3);
+        assert!(!c.bucket_pow2);
     }
 
     #[test]

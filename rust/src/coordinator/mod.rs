@@ -36,7 +36,9 @@ use crate::config::ServeConfig;
 pub use batcher::{Batcher, PushError};
 pub use metrics::{Metrics, Snapshot};
 pub use request::{make_request, Handle, Payload, Request, Response};
-pub use router::Router;
+pub use router::{Executed, Router};
+
+use crate::sampling::SamplingParams;
 
 /// The running coordinator.
 pub struct Coordinator {
@@ -95,6 +97,19 @@ impl Coordinator {
         h.wait().map_err(|e| anyhow::anyhow!("coordinator dropped request: {e}"))
     }
 
+    /// Convenience: decode one token from a logits row (fused sampling —
+    /// the response carries `token`, never a probability row).
+    pub fn decode_blocking(
+        &self,
+        logits: Vec<f32>,
+        params: SamplingParams,
+    ) -> Result<Response> {
+        let h = self
+            .submit(Payload::Decode { logits, params })
+            .map_err(|e| anyhow::anyhow!("submit failed: {e:?}"))?;
+        h.wait().map_err(|e| anyhow::anyhow!("coordinator dropped request: {e}"))
+    }
+
     pub fn metrics(&self) -> Snapshot {
         self.metrics.snapshot()
     }
@@ -125,12 +140,12 @@ fn worker_loop(batcher: &Batcher, metrics: &Metrics, router: &Router) {
             .collect();
         let batch_size = batch.len();
         let result = router.execute(payloads).and_then(|out| {
-            if out.rows() == batch_size {
+            if out.len() == batch_size {
                 Ok(out)
             } else {
                 Err(anyhow::anyhow!(
-                    "router returned {} rows for {batch_size} requests",
-                    out.rows()
+                    "router returned {} results for {batch_size} requests",
+                    out.len()
                 ))
             }
         });
@@ -144,9 +159,16 @@ fn worker_loop(batcher: &Batcher, metrics: &Metrics, router: &Router) {
                         exec_start.duration_since(req.enqueued).as_secs_f64() * 1e6;
                     let e2e_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
                     metrics.record_request(queue_us, e2e_us, true);
+                    // Decode batches answer with a token, softmax/LM
+                    // batches with a probability row.
+                    let (probs, token) = match &out {
+                        Executed::Rows(b) => (b.row(i).to_vec(), None),
+                        Executed::Choices(c) => (Vec::new(), Some(c[i])),
+                    };
                     let _ = req.tx.send(Response {
                         id: req.id,
-                        probs: out.row(i).to_vec(),
+                        probs,
+                        token,
                         queue_us: queue_us as u64,
                         exec_us: exec_us as u64,
                         batch_size,
@@ -163,6 +185,7 @@ fn worker_loop(batcher: &Batcher, metrics: &Metrics, router: &Router) {
                     let _ = req.tx.send(Response {
                         id: req.id,
                         probs: Vec::new(),
+                        token: None,
                         queue_us: queue_us as u64,
                         exec_us: exec_us as u64,
                         batch_size,
@@ -218,6 +241,51 @@ mod tests {
         let snap = c.metrics();
         assert_eq!(snap.completed, 8);
         assert!(snap.avg_batch > 1.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn decode_endpoint_serves_tokens() {
+        let c = Coordinator::start_with_router(&test_config(8, 1), native());
+        let mut logits = vec![0.0f32; 64];
+        logits[17] = 12.0;
+        let greedy = c.decode_blocking(logits.clone(), SamplingParams::greedy()).unwrap();
+        assert!(greedy.error.is_none());
+        assert!(greedy.probs.is_empty(), "decode must not return a probability row");
+        let tok = greedy.token.expect("decode response carries a token");
+        assert_eq!(tok.token, 17);
+        assert!(tok.logprob <= 0.0 && tok.logprob.is_finite());
+        // Seeded sampling is deterministic end to end.
+        let params = SamplingParams { seed: 7, top_k: 8, ..SamplingParams::default() };
+        let a = c.decode_blocking(logits.clone(), params).unwrap().token.unwrap();
+        let b = c.decode_blocking(logits, params).unwrap().token.unwrap();
+        assert_eq!(a, b);
+        c.shutdown();
+    }
+
+    #[test]
+    fn decode_and_softmax_requests_never_share_a_batch() {
+        let c = Coordinator::start_with_router(&test_config(16, 1), native());
+        let mut handles = Vec::new();
+        for i in 0..8u64 {
+            handles.push((true, c.submit(Payload::Logits(vec![i as f32; 32])).unwrap()));
+            let p = Payload::Decode {
+                logits: vec![i as f32; 32],
+                params: SamplingParams::greedy(),
+            };
+            handles.push((false, c.submit(p).unwrap()));
+        }
+        for (is_softmax, h) in handles {
+            let r = h.wait().unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+            if is_softmax {
+                assert!(r.token.is_none());
+                assert_eq!(r.probs.len(), 32);
+            } else {
+                assert!(r.token.is_some());
+                assert!(r.probs.is_empty());
+            }
+        }
         c.shutdown();
     }
 

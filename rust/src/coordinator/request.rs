@@ -3,6 +3,8 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
+use crate::sampling::{Choice, SamplingParams};
+
 /// What a client wants normalized/served.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Payload {
@@ -10,16 +12,22 @@ pub enum Payload {
     Logits(Vec<f32>),
     /// Next-token distribution for a token sequence (LM path).
     Tokens(Vec<i32>),
+    /// Fused decode: sample a token id from a logits row without ever
+    /// materializing the normalized distribution (the response carries
+    /// `token`, not `probs`).  Sampling params ride per-request, so one
+    /// executed batch can mix greedy and sampled rows.
+    Decode { logits: Vec<f32>, params: SamplingParams },
 }
 
 impl Payload {
     /// Batching key: requests with equal keys may share an executed batch.
-    /// Softmax batches by vector length; LM batches by sequence length
-    /// (tagged so the two never mix).
+    /// Softmax batches by vector length; LM batches by sequence length;
+    /// decode batches by logits length (all tagged so kinds never mix).
     pub fn batch_key(&self) -> u64 {
         match self {
             Payload::Logits(v) => v.len() as u64,
             Payload::Tokens(t) => (1 << 63) | t.len() as u64,
+            Payload::Decode { logits, .. } => (1 << 62) | logits.len() as u64,
         }
     }
 
@@ -27,6 +35,7 @@ impl Payload {
         match self {
             Payload::Logits(v) => v.len(),
             Payload::Tokens(t) => t.len(),
+            Payload::Decode { logits, .. } => logits.len(),
         }
     }
 
@@ -48,8 +57,11 @@ pub struct Request {
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
-    /// Probabilities (softmax output or LM next-token distribution).
+    /// Probabilities (softmax output or LM next-token distribution);
+    /// empty for decode requests.
     pub probs: Vec<f32>,
+    /// The sampled token + logprob for decode requests; `None` otherwise.
+    pub token: Option<Choice>,
     /// Time spent waiting in the batch queue.
     pub queue_us: u64,
     /// Execution time of the batch this request rode in.
@@ -96,9 +108,22 @@ mod tests {
         let a = Payload::Logits(vec![0.0; 128]);
         let b = Payload::Logits(vec![0.0; 256]);
         let c = Payload::Tokens(vec![0; 128]);
+        let d = Payload::Decode {
+            logits: vec![0.0; 128],
+            params: crate::sampling::SamplingParams::default(),
+        };
         assert_ne!(a.batch_key(), b.batch_key());
         assert_ne!(a.batch_key(), c.batch_key());
+        assert_ne!(a.batch_key(), d.batch_key());
+        assert_ne!(c.batch_key(), d.batch_key());
         assert_eq!(a.batch_key(), Payload::Logits(vec![1.0; 128]).batch_key());
+        // Decode requests with different sampling params still share a
+        // batch (params ride per-row).
+        let e = Payload::Decode {
+            logits: vec![1.0; 128],
+            params: crate::sampling::SamplingParams::greedy(),
+        };
+        assert_eq!(d.batch_key(), e.batch_key());
     }
 
     #[test]
@@ -107,6 +132,7 @@ mod tests {
         let resp = Response {
             id: 7,
             probs: vec![0.5, 0.5],
+            token: None,
             queue_us: 1,
             exec_us: 2,
             batch_size: 1,

@@ -27,6 +27,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::{Backend, ServeConfig};
 use crate::runtime::service::PjrtService;
+use crate::sampling::{self, Choice, SamplingParams};
 use crate::softmax::batch::{softmax_batch_auto, softmax_batch_inplace_auto, RowBatch};
 use crate::softmax::tuning::{resolve_parallel_threshold, MIN_PARALLEL_THRESHOLD};
 use crate::softmax::{Algorithm, Isa};
@@ -92,6 +93,29 @@ impl NativeEngine {
     }
 }
 
+/// What one executed batch produced: one output row per request
+/// (softmax / LM paths) or one sampled token per request (decode path).
+#[derive(Debug)]
+pub enum Executed {
+    Rows(RowBatch),
+    Choices(Vec<Choice>),
+}
+
+impl Executed {
+    /// Responses this execution can serve (the coordinator checks it
+    /// against the request count).
+    pub fn len(&self) -> usize {
+        match self {
+            Executed::Rows(b) => b.rows(),
+            Executed::Choices(c) => c.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// Executes same-key batches. `Send + Sync`; shared by the worker pool.
 pub enum Router {
     Native(NativeEngine),
@@ -101,6 +125,10 @@ pub enum Router {
         variant: String,
         /// Fallback engine for logits shapes without artifacts.
         native: NativeEngine,
+        /// Pad executed softmax batches up to power-of-two row counts so
+        /// shape-specialized PJRT artifacts hit their exact-fit bucket
+        /// (padding rows are sliced off before response assembly).
+        pad_pow2: bool,
     },
 }
 
@@ -123,19 +151,25 @@ impl Router {
             Backend::Native => Ok(Router::Native(native)),
             Backend::Pjrt => {
                 let svc = PjrtService::start(cfg.artifacts_dir.clone())?;
-                Ok(Router::Pjrt { svc, variant: cfg.algorithm.to_string(), native })
+                Ok(Router::Pjrt {
+                    svc,
+                    variant: cfg.algorithm.to_string(),
+                    native,
+                    pad_pow2: cfg.bucket_pow2,
+                })
             }
         }
     }
 
     /// Execute one batch (all payloads share a batch key).  Consumes the
-    /// payloads and returns the output rows as one flat row-major batch,
-    /// in request order.
-    pub fn execute(&self, batch: Vec<Payload>) -> Result<RowBatch> {
+    /// payloads and returns either the output rows as one flat row-major
+    /// batch or the sampled tokens, in request order.
+    pub fn execute(&self, batch: Vec<Payload>) -> Result<Executed> {
         match batch.first() {
             None => Err(anyhow!("empty batch")),
-            Some(Payload::Logits(_)) => self.execute_logits(batch),
-            Some(Payload::Tokens(_)) => self.execute_tokens(batch),
+            Some(Payload::Logits(_)) => self.execute_logits(batch).map(Executed::Rows),
+            Some(Payload::Tokens(_)) => self.execute_tokens(batch).map(Executed::Rows),
+            Some(Payload::Decode { .. }) => self.execute_decode(batch).map(Executed::Choices),
         }
     }
 
@@ -153,7 +187,7 @@ impl Router {
                     x.push_row(v).map_err(|e| anyhow!("{e}"))?;
                 }
                 Payload::Logits(_) => return Err(anyhow!("mixed lengths in batch")),
-                Payload::Tokens(_) => return Err(anyhow!("mixed payload kinds in batch")),
+                _ => return Err(anyhow!("mixed payload kinds in batch")),
             }
         }
         match self {
@@ -163,17 +197,34 @@ impl Router {
                 engine.run_inplace(&mut x)?;
                 Ok(x)
             }
-            Router::Pjrt { svc, variant, native } => match svc.softmax(variant, x) {
-                Ok(out) => Ok(out),
-                // No artifact for this shape → serve natively; the service
-                // returned the input batch, which is normalized in place —
-                // the fallback costs no re-assembly and no allocation.
-                Err((Some(mut x), e)) if e.to_string().contains("no ") => {
-                    native.run_inplace(&mut x)?;
-                    Ok(x)
+            Router::Pjrt { svc, variant, native, pad_pow2 } => {
+                // Bucket to a power-of-two row count: executables are
+                // shape-specialized, so padding here turns near-miss
+                // batch sizes into exact-fit bucket hits (the padded
+                // batch executes straight off its storage instead of
+                // being re-flattened inside the service).
+                let rows = x.rows();
+                if *pad_pow2 {
+                    pad_to_pow2_rows(&mut x);
                 }
-                Err((_, e)) => Err(e),
-            },
+                match svc.softmax(variant, x) {
+                    Ok(mut out) => {
+                        out.truncate_rows(rows);
+                        Ok(out)
+                    }
+                    // No artifact for this shape → serve natively; the
+                    // service returned the input batch, which is
+                    // normalized in place — the fallback costs no
+                    // re-assembly and no allocation.  Padding rows are
+                    // sliced off before the kernel even runs.
+                    Err((Some(mut x), e)) if e.to_string().contains("no ") => {
+                        x.truncate_rows(rows);
+                        native.run_inplace(&mut x)?;
+                        Ok(x)
+                    }
+                    Err((_, e)) => Err(e),
+                }
+            }
         }
     }
 
@@ -184,12 +235,56 @@ impl Router {
             .into_iter()
             .map(|p| match p {
                 Payload::Tokens(t) => Ok(t),
-                Payload::Logits(_) => Err(anyhow!("mixed payload kinds in batch")),
+                _ => Err(anyhow!("mixed payload kinds in batch")),
             })
             .collect::<Result<_>>()?;
         match self {
             Router::Pjrt { svc, .. } => svc.lm(rows),
             Router::Native(_) => Err(anyhow!("token requests require the pjrt backend")),
+        }
+    }
+
+    /// Decode a batch of logits rows into sampled tokens through the
+    /// fused sampling subsystem — one flat request batch in, one `Choice`
+    /// per request out, and **no normalized row anywhere**: the kernels
+    /// select on `(m, n)` extended-exponent pairs directly.  Decode is a
+    /// native workload on both router variants (the AOT artifacts only
+    /// cover normalization).
+    fn execute_decode(&self, batch: Vec<Payload>) -> Result<Vec<Choice>> {
+        let n = batch[0].len();
+        if n == 0 {
+            return Err(anyhow!("empty logits row"));
+        }
+        let mut x = RowBatch::with_capacity(batch.len(), n);
+        let mut params: Vec<SamplingParams> = Vec::with_capacity(batch.len());
+        for p in &batch {
+            match p {
+                Payload::Decode { logits, params: sp } if logits.len() == n => {
+                    x.push_row(logits).map_err(|e| anyhow!("{e}"))?;
+                    params.push(*sp);
+                }
+                Payload::Decode { .. } => return Err(anyhow!("mixed lengths in batch")),
+                _ => return Err(anyhow!("mixed payload kinds in batch")),
+            }
+        }
+        let engine = match self {
+            Router::Native(e) => e,
+            Router::Pjrt { native, .. } => native,
+        };
+        sampling::sample_batch(engine.isa, &x, &params).map_err(|e| anyhow!("{e}"))
+    }
+}
+
+/// Pad a batch up to the next power-of-two row count by repeating its
+/// first row.  Callers slice the padding back off with
+/// [`RowBatch::truncate_rows`] before responses are assembled.
+fn pad_to_pow2_rows(x: &mut RowBatch) {
+    let rows = x.rows();
+    let want = rows.next_power_of_two();
+    if rows > 0 && want > rows {
+        let row0 = x.row(0).to_vec();
+        for _ in rows..want {
+            x.push_row(&row0).expect("padding row has the batch row length");
         }
     }
 }
@@ -198,6 +293,13 @@ impl Router {
 mod tests {
     use super::*;
 
+    fn rows_of(e: Executed) -> RowBatch {
+        match e {
+            Executed::Rows(b) => b,
+            Executed::Choices(_) => panic!("expected rows"),
+        }
+    }
+
     #[test]
     fn native_router_normalizes_batches() {
         let r = Router::native(Algorithm::TwoPass, Isa::detect_best());
@@ -205,7 +307,7 @@ mod tests {
             Payload::Logits(vec![1.0, 2.0, 3.0]),
             Payload::Logits(vec![0.0, 0.0, 0.0]),
         ];
-        let out = r.execute(batch).unwrap();
+        let out = rows_of(r.execute(batch).unwrap());
         assert_eq!(out.rows(), 2);
         assert_eq!(out.n(), 3);
         for row in out.iter_rows() {
@@ -220,7 +322,7 @@ mod tests {
         let logits: Vec<Vec<f32>> =
             (0..5).map(|i| (0..97).map(|j| ((i * j) % 13) as f32 - 6.0).collect()).collect();
         let batch: Vec<Payload> = logits.iter().map(|v| Payload::Logits(v.clone())).collect();
-        let out = r.execute(batch).unwrap();
+        let out = rows_of(r.execute(batch).unwrap());
         for (i, row) in logits.iter().enumerate() {
             let mut want = vec![0.0f32; row.len()];
             crate::softmax::softmax_with(
@@ -232,6 +334,62 @@ mod tests {
             .unwrap();
             assert_eq!(out.row(i), &want[..], "row {i}");
         }
+    }
+
+    #[test]
+    fn decode_batches_return_tokens_not_rows() {
+        let r = Router::native(Algorithm::TwoPass, Isa::detect_best());
+        // Row 0 peaks at index 3, row 1 at index 0.
+        let mut a = vec![0.0f32; 16];
+        a[3] = 9.0;
+        let mut b = vec![-1.0f32; 16];
+        b[0] = 8.0;
+        let batch = vec![
+            Payload::Decode { logits: a, params: SamplingParams::greedy() },
+            Payload::Decode { logits: b, params: SamplingParams::greedy() },
+        ];
+        let out = r.execute(batch).unwrap();
+        assert_eq!(out.len(), 2);
+        match out {
+            Executed::Choices(c) => {
+                assert_eq!(c[0].token, 3);
+                assert_eq!(c[1].token, 0);
+                assert!(c[0].logprob < 0.0 && c[0].logprob.is_finite());
+            }
+            Executed::Rows(_) => panic!("expected choices"),
+        }
+    }
+
+    #[test]
+    fn decode_rejects_mixed_kinds_and_lengths() {
+        let r = Router::native(Algorithm::TwoPass, Isa::Scalar);
+        let mixed = vec![
+            Payload::Decode { logits: vec![1.0, 2.0], params: SamplingParams::default() },
+            Payload::Logits(vec![1.0, 2.0]),
+        ];
+        assert!(r.execute(mixed).is_err());
+        let lens = vec![
+            Payload::Decode { logits: vec![1.0, 2.0], params: SamplingParams::default() },
+            Payload::Decode { logits: vec![1.0], params: SamplingParams::default() },
+        ];
+        assert!(r.execute(lens).is_err());
+    }
+
+    #[test]
+    fn pow2_padding_rounds_up_and_truncates_back() {
+        let mut x = RowBatch::new(0, 4);
+        for r in 0..5 {
+            x.push_row(&[r as f32; 4]).unwrap();
+        }
+        pad_to_pow2_rows(&mut x);
+        assert_eq!(x.rows(), 8);
+        assert_eq!(x.row(7), x.row(0));
+        x.truncate_rows(5);
+        assert_eq!(x.rows(), 5);
+        // Already a power of two: no padding added.
+        let mut y = RowBatch::new(4, 3);
+        pad_to_pow2_rows(&mut y);
+        assert_eq!(y.rows(), 4);
     }
 
     #[test]

@@ -31,10 +31,12 @@ pub mod figures;
 pub mod membw;
 pub mod platform;
 pub mod runtime;
+pub mod sampling;
 pub mod simmodel;
 pub mod softmax;
 pub mod stream;
 pub mod util;
 pub mod workload;
 
+pub use sampling::{Choice, SamplingParams};
 pub use softmax::{softmax, softmax_batch, softmax_inplace, Algorithm, Isa, RowBatch};

@@ -15,6 +15,7 @@ use anyhow::{anyhow, bail, Result};
 use two_pass_softmax::config::ServeConfig;
 use two_pass_softmax::coordinator::{Coordinator, Payload};
 use two_pass_softmax::figures;
+use two_pass_softmax::sampling::SamplingParams;
 use two_pass_softmax::platform;
 use two_pass_softmax::runtime::{EntryKind, Runtime};
 use two_pass_softmax::softmax::{self, tuning, Algorithm};
@@ -34,6 +35,9 @@ USAGE:
         [--max-wait-us U] [--parallel-threshold ELEMS (0 = auto from STREAM)]
         [--batch-threads T] [--artifacts DIR] [--config FILE]
         [--tune-file FILE (reuse `repro tune --save` threshold, skip re-measuring)]
+        [--no-bucket-pow2 (don't pad pjrt batches to power-of-two rows)]
+        [--decode (serve the fused decode endpoint: token ids, not rows)]
+        [--temperature T] [--top-k K] [--top-p P] [--sample-seed S]
   repro verify [--artifacts DIR]
 ";
 
@@ -144,11 +148,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let requests: usize = args.get("requests", 1000).map_err(|e| anyhow!(e))?;
     let n: usize = args.get("n", 32_768).map_err(|e| anyhow!(e))?;
     let clients: usize = args.get("clients", 4).map_err(|e| anyhow!(e))?;
+    let decode = args.flag("decode");
+    let sp = SamplingParams {
+        temperature: args.get("temperature", 1.0f32).map_err(|e| anyhow!(e))?,
+        top_k: args.get("top-k", 40usize).map_err(|e| anyhow!(e))?,
+        top_p: args.get("top-p", 1.0f32).map_err(|e| anyhow!(e))?,
+        seed: args.get("sample-seed", 42u64).map_err(|e| anyhow!(e))?,
+    };
 
     println!(
-        "serving: backend={:?} algorithm={} isa={} max_batch={} workers={} n={n}",
-        cfg.backend, cfg.algorithm, cfg.isa, cfg.max_batch, cfg.workers
+        "serving: backend={:?} algorithm={} isa={} max_batch={} workers={} n={n} mode={}",
+        cfg.backend,
+        cfg.algorithm,
+        cfg.isa,
+        cfg.max_batch,
+        cfg.workers,
+        if decode { "decode" } else { "softmax" }
     );
+    if decode {
+        println!(
+            "sampling: temperature={} top_k={} top_p={} seed={}",
+            sp.temperature, sp.top_k, sp.top_p, sp.seed
+        );
+    }
     let coord = std::sync::Arc::new(Coordinator::start(cfg)?);
     let t0 = Instant::now();
     let per_client = requests / clients.max(1);
@@ -159,11 +181,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let mut rng = Rng::new(42 + c as u64);
             let dist = LogitsDist::Normal { mean: 0.0, std: 4.0 };
             let mut ok = 0usize;
-            for _ in 0..per_client {
+            for i in 0..per_client {
                 let logits = dist.generate(n, &mut rng);
-                match coord.submit(Payload::Logits(logits)) {
+                let payload = if decode {
+                    // Per-request seed: decoding stays deterministic but
+                    // different requests draw differently.
+                    let seed = sp.seed ^ ((c as u64) << 32) ^ i as u64;
+                    let params = SamplingParams { seed, ..sp };
+                    Payload::Decode { logits, params }
+                } else {
+                    Payload::Logits(logits)
+                };
+                match coord.submit(payload) {
                     Ok(h) => {
-                        if h.wait().map(|r| r.error.is_none()).unwrap_or(false) {
+                        let served = h
+                            .wait()
+                            .map(|r| r.error.is_none() && (!decode || r.token.is_some()))
+                            .unwrap_or(false);
+                        if served {
                             ok += 1;
                         }
                     }
@@ -178,8 +213,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("\n--- results ---");
     println!("{} ok / {} requested in {wall:.2}s", ok, per_client * clients.max(1));
     println!(
-        "throughput: {:.1} req/s ({:.1} Melem/s)",
+        "throughput: {:.1} {}/s ({:.1} Melem/s)",
         ok as f64 / wall,
+        if decode { "tokens" } else { "req" },
         ok as f64 * n as f64 / wall / 1e6
     );
     println!("{}", coord.metrics());

@@ -1,0 +1,123 @@
+//! AVX2+FMA fused scan+select kernel.
+//!
+//! The accumulation side is the batch engine's pass-1 structure
+//! (`softmax::avx2::pass_accum_extexp` with the tuned 8-vector unroll);
+//! the select side adds a vector prefilter over the scaled logits: a lane
+//! can only displace the current k-th candidate if its scaled logit
+//! exceeds the selector threshold (`extexp` is monotone in its input up
+//! to ~1 ulp at the `n`-rounding boundaries; the margin is folded into
+//! the threshold).  Passing lanes — a handful per row for random logits —
+//! are offered to the scalar heap in index order, so every selection
+//! decision is made by exactly the same code as the scalar kernel and
+//! token ids are identical across ISAs by construction.
+//!
+//! # Safety
+//! Every function requires AVX2+FMA at runtime; `sampling::scan_row`
+//! checks availability before selecting this module.
+
+#![cfg(target_arch = "x86_64")]
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use core::arch::x86_64::*;
+
+use crate::softmax::avx2::{accum_step, vexp_parts};
+use crate::softmax::exp::{extexp, ExtSum, EXTSUM_NEG_INIT};
+
+use super::Selector;
+
+const LANES: usize = 8;
+/// Vectors per iteration — matches the tuned `pass_accum_extexp::<8>`.
+const UNROLL: usize = 8;
+
+/// Offer the lanes set in `hits` to the selector, in ascending lane
+/// (= index) order.
+#[inline(always)]
+unsafe fn offer_lanes(
+    sel: &mut Selector,
+    base: usize,
+    xs: __m256,
+    pe: __m256,
+    ne: __m256,
+    mut hits: u32,
+) {
+    let mut xa = [0.0f32; LANES];
+    let mut ma = [0.0f32; LANES];
+    let mut na = [0.0f32; LANES];
+    _mm256_storeu_ps(xa.as_mut_ptr(), xs);
+    _mm256_storeu_ps(ma.as_mut_ptr(), pe);
+    _mm256_storeu_ps(na.as_mut_ptr(), ne);
+    while hits != 0 {
+        let l = hits.trailing_zeros() as usize;
+        sel.offer((base + l) as u32, ma[l], na[l], xa[l]);
+        hits &= hits - 1;
+    }
+}
+
+/// Fused pass 1 + select over one row; see the scalar kernel for the
+/// contract.  The prefilter threshold is re-read once per vector, which
+/// can only make it staler (lower) than the scalar path's per-element
+/// view — extra candidates pass the filter and are rejected by the exact
+/// comparison in [`Selector::offer`], never the reverse.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn scan_select(x: &[f32], inv_t: f32, sel: &mut Selector) -> ExtSum {
+    let vt = _mm256_set1_ps(inv_t);
+    let mut vm = [_mm256_setzero_ps(); UNROLL];
+    let mut vn = [_mm256_set1_ps(EXTSUM_NEG_INIT); UNROLL];
+    let stride = LANES * UNROLL;
+    let mut p = x.as_ptr();
+    let mut base = 0usize;
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..UNROLL {
+            let xs = _mm256_mul_ps(_mm256_loadu_ps(p.add(k * LANES)), vt);
+            let (pe, ne) = vexp_parts(xs);
+            accum_step(&mut vm[k], &mut vn[k], pe, ne);
+            let vth = _mm256_set1_ps(sel.threshold());
+            let hits = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_GT_OQ>(xs, vth)) as u32;
+            if hits != 0 {
+                offer_lanes(sel, base + k * LANES, xs, pe, ne, hits);
+            }
+        }
+        p = p.add(stride);
+        base += stride;
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let xs = _mm256_mul_ps(_mm256_loadu_ps(p), vt);
+        let (pe, ne) = vexp_parts(xs);
+        accum_step(&mut vm[0], &mut vn[0], pe, ne);
+        let vth = _mm256_set1_ps(sel.threshold());
+        let hits = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_GT_OQ>(xs, vth)) as u32;
+        if hits != 0 {
+            offer_lanes(sel, base, xs, pe, ne, hits);
+        }
+        p = p.add(LANES);
+        base += LANES;
+        rem -= LANES;
+    }
+    // Horizontal (m, n) combine: lanes -> scalar ExtSum.
+    let mut s = ExtSum::default();
+    for k in 0..UNROLL {
+        let mut ms = [0.0f32; LANES];
+        let mut ns = [0.0f32; LANES];
+        _mm256_storeu_ps(ms.as_mut_ptr(), vm[k]);
+        _mm256_storeu_ps(ns.as_mut_ptr(), vn[k]);
+        for l in 0..LANES {
+            s.add_pair(ms[l], ns[l]);
+        }
+    }
+    // Scalar tail, still in index order (NaN carries no weight, matching
+    // the scalar kernel).
+    for i in 0..rem {
+        let xs = *p.add(i) * inv_t;
+        if xs.is_nan() {
+            continue;
+        }
+        let (m, n) = extexp(xs);
+        s.add_pair(m, n);
+        if xs > sel.threshold() {
+            sel.offer((base + i) as u32, m, n, xs);
+        }
+    }
+    s
+}

@@ -1,0 +1,762 @@
+//! Fused sampling & decoding on the extended-exponent representation.
+//!
+//! The serving path used to answer "which token?" the expensive way:
+//! normalize a full probability row (the two-pass softmax's scale pass —
+//! a read *and* a write of N elements) and then scan that row again to
+//! pick a token.  But the Two-Pass algorithm's `(m, n)` intermediate form
+//! already contains everything decoding needs: the unnormalized weight of
+//! token `i` is `e^(x_i) = m_i · 2^{n_i}` and the partition function is
+//! the pass-1 accumulator `Σ e^x = m_Σ · 2^{n_Σ}` ([`ExtSum`]).  Following
+//! the fusion argument of *online normalizer calculation for softmax*
+//! (Milakov & Gimelshein, PAPERS.md), this module decodes straight from
+//! those pairs:
+//!
+//! * [`argmax`] / [`top_k`] — a **single fused pass**: the pass-1 `(m, n)`
+//!   accumulation and the candidate selection share one traversal of the
+//!   logits.  Candidates are ordered by *exponent-major* comparison of
+//!   their `(m, n)` pairs ([`ext_gt`] — exact, because `m ∈ [√2/2, √2]`
+//!   makes the only mantissa shift a lossless doubling); there is no
+//!   division, no normalization pass, and no output row anywhere.
+//! * [`top_p`] — nucleus selection that renormalizes **only the selected
+//!   candidates**: a fused top-`k` scan whose budget doubles until the
+//!   candidates' normalized mass reaches `p` (peaked LM heads converge at
+//!   the first budget).
+//! * [`sample_row`] / [`sample_batch`] — temperature / top-k / top-p
+//!   sampling with a caller-seeded [`Rng`] over the unnormalized extended
+//!   weights; the full-categorical case walks the extended CDF against a
+//!   target `u · Σ` instead of materializing probabilities.
+//!
+//! The SIMD kernels (`sampling::avx2`, `sampling::avx512`) reuse the
+//! polynomial and `(m, n)` accumulation of `softmax/exp.rs` and the ISA
+//! modules, and add a vector *prefilter*: a lane can only displace the
+//! current k-th candidate if its scaled logit exceeds the selector
+//! threshold (monotonicity of `extexp` up to a 1-ulp margin folded into
+//! the threshold), so the scalar heap is consulted only for the rare
+//! passing lanes.  Every selection *decision* is made by the same scalar
+//! code in index order on every ISA, which is why token ids are identical
+//! across scalar/AVX2/AVX512 by construction.
+//!
+//! [`ExtSum`]: crate::softmax::exp::ExtSum
+//! [`Rng`]: crate::util::rng::Rng
+
+pub mod avx2;
+pub mod avx512;
+pub mod scalar;
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::softmax::batch::RowBatch;
+use crate::softmax::exp::{extexp, ExtSum};
+use crate::softmax::Isa;
+use crate::util::rng::Rng;
+
+/// Per-request sampling controls (the decode endpoint's per-row knobs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    /// Logits are scaled by `1/temperature` before the scan; `0` means
+    /// greedy decoding (argmax, reported logprob under temperature 1).
+    pub temperature: f32,
+    /// Restrict sampling to the `top_k` heaviest tokens (`0` = no limit).
+    pub top_k: usize,
+    /// Restrict sampling to the smallest candidate prefix whose
+    /// normalized mass reaches `top_p` (`1.0` = no limit).
+    pub top_p: f32,
+    /// Seed for the categorical draw — decoding is a pure function of
+    /// `(logits, params)`.
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 1.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+}
+
+impl SamplingParams {
+    /// Greedy decoding (argmax; temperature 0).
+    pub fn greedy() -> SamplingParams {
+        SamplingParams { temperature: 0.0, ..SamplingParams::default() }
+    }
+
+    fn validate(&self) -> Result<(), SamplingError> {
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            return Err(SamplingError::BadParams(format!(
+                "temperature must be finite and >= 0, got {}",
+                self.temperature
+            )));
+        }
+        // A subnormal temperature makes 1/T infinite and turns zero
+        // logits into 0·inf = NaN inside the kernels.
+        if self.temperature > 0.0 && !self.temperature.recip().is_finite() {
+            return Err(SamplingError::BadParams(format!(
+                "temperature {} too small (1/T overflows)",
+                self.temperature
+            )));
+        }
+        if !self.top_p.is_finite() || self.top_p <= 0.0 || self.top_p > 1.0 {
+            return Err(SamplingError::BadParams(format!(
+                "top_p must be in (0, 1], got {}",
+                self.top_p
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A decoded token: id + its log-probability under the (temperature-
+/// scaled) full softmax distribution, computed as
+/// `ln(m_i · 2^{n_i}) − ln(m_Σ · 2^{n_Σ})` — no normalized row involved.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Choice {
+    pub token: u32,
+    pub logprob: f32,
+}
+
+/// Errors from the sampling entry points.
+#[derive(Debug, PartialEq)]
+pub enum SamplingError {
+    EmptyInput,
+    IsaUnavailable(Isa),
+    BadParams(String),
+    /// `sample_batch` params length is neither 1 nor the row count.
+    ParamsMismatch { rows: usize, params: usize },
+    /// The scan selected nothing — non-finite (NaN/−∞) logits throughout.
+    NoCandidates,
+}
+
+impl fmt::Display for SamplingError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SamplingError::EmptyInput => write!(f, "input is empty"),
+            SamplingError::IsaUnavailable(isa) => {
+                write!(f, "ISA {isa} not available on this host")
+            }
+            SamplingError::BadParams(msg) => write!(f, "bad sampling params: {msg}"),
+            SamplingError::ParamsMismatch { rows, params } => {
+                write!(f, "{params} sampling params for {rows} rows (want 1 or {rows})")
+            }
+            SamplingError::NoCandidates => {
+                write!(f, "no decodable candidate (non-finite logits?)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SamplingError {}
+
+// ---------------------------------------------------------------------------
+// Extended-exponent comparison and the candidate selector.
+// ---------------------------------------------------------------------------
+
+/// Slack subtracted from the prefilter threshold: `extexp` is monotone in
+/// its input up to ~1 ulp at the `n`-rounding boundaries, so a candidate
+/// that beats the k-th weight is guaranteed to have a scaled logit within
+/// this margin of the k-th's.  False positives are re-checked exactly by
+/// [`Selector::offer`]; false negatives cannot happen.
+const PREFILTER_MARGIN: f32 = 1.0e-5;
+
+/// Exponent-major comparison of two `extexp` weights: is
+/// `m_a · 2^{n_a} > m_b · 2^{n_b}`?
+///
+/// Exact: `extexp` mantissas lie in `[√2/2, √2]`, so exponents differing
+/// by ≥ 2 decide outright, and the one remaining case shifts a mantissa
+/// by a single power of two — a lossless f32 doubling.  No division, no
+/// reconstruction, no rounding.
+#[inline(always)]
+pub fn ext_gt(m_a: f32, n_a: f32, m_b: f32, n_b: f32) -> bool {
+    if n_a == n_b {
+        m_a > m_b
+    } else if n_a > n_b {
+        if n_a - n_b >= 2.0 {
+            true
+        } else {
+            2.0 * m_a > m_b
+        }
+    } else if n_b - n_a >= 2.0 {
+        false
+    } else {
+        m_a > 2.0 * m_b
+    }
+}
+
+/// Compare two running extended sums (general mantissas): `a >= b`?
+/// Shifts both to the larger exponent; a shift that underflows belongs to
+/// a summand vanishingly smaller than the other, so the flush is the
+/// right answer for a comparison.
+#[inline(always)]
+fn ext_sum_ge(a: &ExtSum, b: &ExtSum) -> bool {
+    let c = a.n.max(b.n);
+    let va = a.m * crate::softmax::exp::exp2i(a.n - c);
+    let vb = b.m * crate::softmax::exp::exp2i(b.n - c);
+    va >= vb
+}
+
+/// One candidate token: unnormalized weight `e^(x·inv_t) = m · 2^n` plus
+/// the scaled logit `x` the SIMD prefilter compares against.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub idx: u32,
+    pub m: f32,
+    pub n: f32,
+    pub x: f32,
+}
+
+/// Running top-k selection over `(m, n)` candidates: a size-k min-heap
+/// ordered by [`ext_gt`], plus the prefilter threshold fed to the SIMD
+/// scan kernels.
+///
+/// Candidates must be offered in ascending index order (all scan kernels
+/// do); among equal weights the earliest index wins — the same tie-break
+/// a stable descending sort of the normalized row would produce.
+#[derive(Debug)]
+pub struct Selector {
+    k: usize,
+    heap: Vec<Candidate>,
+    thresh: f32,
+}
+
+impl Selector {
+    /// A selector keeping the `k` heaviest candidates (`k >= 1`).
+    pub fn new(k: usize) -> Selector {
+        let k = k.max(1);
+        Selector { k, heap: Vec::with_capacity(k), thresh: f32::NEG_INFINITY }
+    }
+
+    /// Scaled-logit prefilter: only elements with `x > threshold()` can
+    /// change the selection (−∞ until the heap holds `k` candidates).
+    #[inline(always)]
+    pub fn threshold(&self) -> f32 {
+        self.thresh
+    }
+
+    /// Heap order: `a` below `b` when `a`'s weight is smaller; among
+    /// equal weights the *later* index sits closer to the root so ties
+    /// evict newest-first (keeping the earliest indices selected).
+    #[inline(always)]
+    fn below(a: &Candidate, b: &Candidate) -> bool {
+        if ext_gt(a.m, a.n, b.m, b.n) {
+            false
+        } else if ext_gt(b.m, b.n, a.m, a.n) {
+            true
+        } else {
+            a.idx > b.idx
+        }
+    }
+
+    /// Offer candidate `idx` (ascending across calls) with weight
+    /// `m · 2^n` and scaled logit `x`.
+    #[inline]
+    pub fn offer(&mut self, idx: u32, m: f32, n: f32, x: f32) {
+        let cand = Candidate { idx, m, n, x };
+        if self.heap.len() < self.k {
+            self.heap.push(cand);
+            let mut i = self.heap.len() - 1;
+            while i > 0 {
+                let parent = (i - 1) / 2;
+                if Self::below(&self.heap[i], &self.heap[parent]) {
+                    self.heap.swap(i, parent);
+                    i = parent;
+                } else {
+                    break;
+                }
+            }
+            if self.heap.len() == self.k {
+                self.thresh = self.heap[0].x - PREFILTER_MARGIN;
+            }
+            return;
+        }
+        // Replace the minimum only on a strictly greater weight: an equal
+        // weight arriving later must lose the tie.
+        let root = self.heap[0];
+        if !ext_gt(m, n, root.m, root.n) {
+            return;
+        }
+        self.heap[0] = cand;
+        let len = self.heap.len();
+        let mut i = 0;
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut smallest = i;
+            if l < len && Self::below(&self.heap[l], &self.heap[smallest]) {
+                smallest = l;
+            }
+            if r < len && Self::below(&self.heap[r], &self.heap[smallest]) {
+                smallest = r;
+            }
+            if smallest == i {
+                break;
+            }
+            self.heap.swap(i, smallest);
+            i = smallest;
+        }
+        self.thresh = self.heap[0].x - PREFILTER_MARGIN;
+    }
+
+    /// Candidates currently held (`< k` only before the heap fills — or
+    /// never fills, e.g. on a row of non-finite logits).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Selected candidates, heaviest first (ties by ascending index).
+    pub fn into_sorted(self) -> Vec<Candidate> {
+        let mut v = self.heap;
+        v.sort_unstable_by(|a, b| {
+            if ext_gt(a.m, a.n, b.m, b.n) {
+                std::cmp::Ordering::Less
+            } else if ext_gt(b.m, b.n, a.m, a.n) {
+                std::cmp::Ordering::Greater
+            } else {
+                a.idx.cmp(&b.idx)
+            }
+        });
+        v
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused scan dispatch + pass accounting.
+// ---------------------------------------------------------------------------
+
+/// Total fused row scans executed by this module (test hook: together
+/// with [`store_pass_rows`] it proves the decode path's pass count —
+/// decoding performs scans only, never a normalization/store pass).
+///
+/// [`store_pass_rows`]: crate::softmax::batch::store_pass_rows
+pub fn scan_rows_total() -> usize {
+    SCAN_ROWS.load(Ordering::Relaxed)
+}
+
+static SCAN_ROWS: AtomicUsize = AtomicUsize::new(0);
+
+/// One fused traversal of a row: pass-1 `(m, n)` accumulation and
+/// candidate selection share a single read of `x` — no writes anywhere.
+fn scan_row(isa: Isa, x: &[f32], inv_t: f32, sel: &mut Selector) -> ExtSum {
+    SCAN_ROWS.fetch_add(1, Ordering::Relaxed);
+    match isa {
+        Isa::Scalar => scalar::scan_select(x, inv_t, sel),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: callers validated ISA availability.
+        Isa::Avx2 => unsafe { avx2::scan_select(x, inv_t, sel) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: callers validated ISA availability.
+        Isa::Avx512 => unsafe { avx512::scan_select(x, inv_t, sel) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => unreachable!("non-scalar ISA unavailable on this arch"),
+    }
+}
+
+fn validate(isa: Isa, x: &[f32]) -> Result<(), SamplingError> {
+    if x.is_empty() {
+        return Err(SamplingError::EmptyInput);
+    }
+    if !isa.available() {
+        return Err(SamplingError::IsaUnavailable(isa));
+    }
+    Ok(())
+}
+
+#[inline(always)]
+fn ext_ln(m: f32, n: f32) -> f32 {
+    m.ln() + n * core::f32::consts::LN_2
+}
+
+// ---------------------------------------------------------------------------
+// Public decode API.
+// ---------------------------------------------------------------------------
+
+/// Greedy decode: the argmax token and its logprob, in one fused pass
+/// over the logits — no max pass, no normalization, no output row.
+pub fn argmax(isa: Isa, x: &[f32]) -> Result<Choice, SamplingError> {
+    argmax_t(isa, x, 1.0)
+}
+
+fn argmax_t(isa: Isa, x: &[f32], inv_t: f32) -> Result<Choice, SamplingError> {
+    validate(isa, x)?;
+    let mut sel = Selector::new(1);
+    let s = scan_row(isa, x, inv_t, &mut sel);
+    // A NaN-riddled row can offer nothing (NaN compares false against the
+    // prefilter); error instead of panicking a serving worker.
+    let c = sel.into_sorted().into_iter().next().ok_or(SamplingError::NoCandidates)?;
+    Ok(Choice { token: c.idx, logprob: ext_ln(c.m, c.n) - s.ln() })
+}
+
+/// The `k` heaviest tokens with logprobs, heaviest first, in one fused
+/// pass (selection by exponent-major `(m, n)` comparison).
+pub fn top_k(isa: Isa, x: &[f32], k: usize) -> Result<Vec<Choice>, SamplingError> {
+    validate(isa, x)?;
+    let mut sel = Selector::new(k.min(x.len()));
+    let s = scan_row(isa, x, 1.0, &mut sel);
+    let lnz = s.ln();
+    Ok(sel
+        .into_sorted()
+        .into_iter()
+        .map(|c| Choice { token: c.idx, logprob: ext_ln(c.m, c.n) - lnz })
+        .collect())
+}
+
+/// Nucleus (top-p) candidate set at the given temperature: the smallest
+/// weight-descending prefix whose normalized mass reaches `p`, heaviest
+/// first.  Only the selected candidates are ever renormalized; the scan
+/// budget doubles (one extra fused pass per doubling) until the mass
+/// target is met, so peaked distributions finish at the first budget.
+pub fn top_p(
+    isa: Isa,
+    x: &[f32],
+    p: f32,
+    temperature: f32,
+) -> Result<Vec<Choice>, SamplingError> {
+    validate(isa, x)?;
+    let params =
+        SamplingParams { temperature, top_p: p, ..SamplingParams::default() };
+    params.validate()?;
+    let inv_t = if temperature > 0.0 { 1.0 / temperature } else { 1.0 };
+    let (set, _mass) = nucleus(isa, x, inv_t, p, 0)?;
+    Ok(set.into_iter().map(|(c, lp, _)| Choice { token: c.idx, logprob: lp }).collect())
+}
+
+/// Candidate selection honoring `top_k`/`top_p`: fused scan, truncated at
+/// the first candidate where cumulative normalized mass reaches `p`.
+/// Returns the kept `(candidate, logprob, prob)` prefix and its total
+/// mass.
+///
+/// When unrestricted by `top_k`, the scan budget grows from 32 by a
+/// mass-based estimate (`budget · p / mass`, with slack): peaked LM heads
+/// finish at the first scan, and even an adversarially flat row is done
+/// in two or three scans — the candidate count needed is extrapolated
+/// from the mass the current budget covered, and any budget past `n/2`
+/// jumps straight to a single full-row selection rather than creeping up
+/// on it.
+#[allow(clippy::type_complexity)]
+fn nucleus(
+    isa: Isa,
+    x: &[f32],
+    inv_t: f32,
+    p: f32,
+    top_k: usize,
+) -> Result<(Vec<(Candidate, f32, f64)>, f64), SamplingError> {
+    let n = x.len();
+    let mut budget = if top_k > 0 { top_k.min(n) } else { 32.min(n) };
+    loop {
+        let mut sel = Selector::new(budget);
+        let s = scan_row(isa, x, inv_t, &mut sel);
+        let lnz = s.ln();
+        let cands = sel.into_sorted();
+        let mut kept: Vec<(Candidate, f32, f64)> = Vec::with_capacity(cands.len());
+        let mut mass = 0.0f64;
+        let mut reached = false;
+        for c in cands {
+            let lp = ext_ln(c.m, c.n) - lnz;
+            let pr = (lp as f64).exp();
+            mass += pr;
+            kept.push((c, lp, pr));
+            if mass >= p as f64 {
+                reached = true;
+                break;
+            }
+        }
+        // top_k caps the candidate set even when the mass target is not
+        // reached (standard top-k-then-top-p semantics); an unrestricted
+        // nucleus instead grows the budget and rescans.
+        if reached || top_k > 0 || budget >= n {
+            return Ok((kept, mass));
+        }
+        let est = (budget as f64 * p as f64 / mass.max(1e-12) * 1.25).ceil() as usize;
+        budget = est.max(budget * 2).min(n);
+        if budget > n / 2 {
+            budget = n;
+        }
+    }
+}
+
+/// Sample one token from a logits row under `params` (deterministic in
+/// `(x, params)`).  Never materializes a normalized row: greedy and
+/// top-k/top-p paths use the fused scan; the full-categorical path walks
+/// the extended CDF against the target `u · Σe^{x/T}`.
+pub fn sample_row(isa: Isa, x: &[f32], params: &SamplingParams) -> Result<Choice, SamplingError> {
+    validate(isa, x)?;
+    params.validate()?;
+    if params.temperature == 0.0 {
+        return argmax_t(isa, x, 1.0);
+    }
+    let inv_t = 1.0 / params.temperature;
+    if params.top_k == 1 {
+        return argmax_t(isa, x, inv_t);
+    }
+    let mut rng = Rng::new(params.seed);
+    if params.top_k == 0 && params.top_p >= 1.0 {
+        // Full categorical: pass 1 accumulates Σ in (m, n) form (the
+        // fused scan also yields the argmax for free as a fallback);
+        // pass 2 walks the CDF to the target — two reads, zero writes.
+        let mut sel = Selector::new(1);
+        let s = scan_row(isa, x, inv_t, &mut sel);
+        // An empty selection means no element had a finite weight (the
+        // prefilter drops NaN on every ISA); the accumulator guard backs
+        // that up against non-finite sums.
+        if sel.is_empty() || !s.m.is_finite() || !s.n.is_finite() || s.m <= 0.0 {
+            return Err(SamplingError::NoCandidates);
+        }
+        let u = rng.uniform() as f32;
+        let target = ExtSum { m: s.m * u, n: s.n };
+        SCAN_ROWS.fetch_add(1, Ordering::Relaxed);
+        let idx = scalar::scan_cdf(x, inv_t, &target);
+        let (m, n) = extexp(x[idx] * inv_t);
+        return Ok(Choice { token: idx as u32, logprob: ext_ln(m, n) - s.ln() });
+    }
+    let (set, mass) = nucleus(isa, x, inv_t, params.top_p, params.top_k)?;
+    if set.is_empty() {
+        return Err(SamplingError::NoCandidates);
+    }
+    let draw = rng.uniform() * mass;
+    let mut acc = 0.0f64;
+    for (c, lp, pr) in &set {
+        acc += pr;
+        if draw < acc {
+            return Ok(Choice { token: c.idx, logprob: *lp });
+        }
+    }
+    let (c, lp, _) = set.last().expect("nucleus set checked non-empty above");
+    Ok(Choice { token: c.idx, logprob: *lp })
+}
+
+/// Decode every row of a batch; `params` is per-row (`len == rows`) or a
+/// single broadcast entry.  ISA/shape validation happens once up front;
+/// rows are scanned in order, each in one (or, for unrestricted nucleus /
+/// full-categorical rows, two) fused passes.
+pub fn sample_batch(
+    isa: Isa,
+    x: &RowBatch,
+    params: &[SamplingParams],
+) -> Result<Vec<Choice>, SamplingError> {
+    if !isa.available() {
+        return Err(SamplingError::IsaUnavailable(isa));
+    }
+    if x.rows() > 0 && x.n() == 0 {
+        return Err(SamplingError::EmptyInput);
+    }
+    if params.len() != x.rows() && params.len() != 1 {
+        return Err(SamplingError::ParamsMismatch { rows: x.rows(), params: params.len() });
+    }
+    let mut out = Vec::with_capacity(x.rows());
+    for r in 0..x.rows() {
+        let p = if params.len() == 1 { &params[0] } else { &params[r] };
+        out.push(sample_row(isa, x.row(r), p)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_row(n: usize, seed: u64, std: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32(0.0, std)).collect()
+    }
+
+    /// Normalize-then-scan reference: full softmax row, then a strict-`>`
+    /// first-wins scan — exactly what the fused path eliminates.
+    fn ref_argmax(x: &[f32]) -> usize {
+        let mut y = vec![0.0f32; x.len()];
+        crate::softmax::softmax_with(
+            crate::softmax::Algorithm::TwoPass,
+            Isa::Scalar,
+            x,
+            &mut y,
+        )
+        .unwrap();
+        let mut best = 0;
+        for i in 1..y.len() {
+            if y[i] > y[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn ext_gt_orders_weights() {
+        // Same exponent: mantissa decides.
+        assert!(ext_gt(1.2, 3.0, 1.1, 3.0));
+        assert!(!ext_gt(1.1, 3.0, 1.2, 3.0));
+        // Adjacent exponents: exact doubled-mantissa comparison.
+        assert!(ext_gt(0.8, 4.0, 1.5, 3.0)); // 1.6 > 1.5
+        assert!(!ext_gt(0.7, 4.0, 1.5, 3.0)); // 1.4 < 1.5
+        // Far exponents decide outright.
+        assert!(ext_gt(0.71, 10.0, 1.41, 3.0));
+        assert!(!ext_gt(1.41, 3.0, 0.71, 10.0));
+        // Equal weights are not greater either way.
+        assert!(!ext_gt(1.0, 2.0, 1.0, 2.0));
+    }
+
+    #[test]
+    fn selector_keeps_heaviest_with_first_index_ties() {
+        let mut sel = Selector::new(2);
+        sel.offer(0, 1.0, 0.0, 0.0);
+        sel.offer(1, 1.0, 5.0, 3.4); // heavy
+        sel.offer(2, 1.0, 0.0, 0.0); // ties idx 0, later: loses
+        sel.offer(3, 1.0, 4.0, 2.7); // evicts the tied pair's survivor
+        let got = sel.into_sorted();
+        assert_eq!(got[0].idx, 1);
+        assert_eq!(got[1].idx, 3);
+    }
+
+    #[test]
+    fn argmax_matches_reference_on_all_isas() {
+        for &(n, seed, std) in
+            &[(1usize, 1u64, 4.0f32), (7, 2, 4.0), (64, 3, 8.0), (1000, 4, 30.0)]
+        {
+            let x = random_row(n, seed, std);
+            let want = ref_argmax(&x);
+            for isa in Isa::detect_all() {
+                let got = argmax(isa, &x).unwrap();
+                assert_eq!(got.token as usize, want, "{isa} n={n}");
+                assert!(got.logprob <= 0.0 && got.logprob.is_finite(), "{isa} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn argmax_survives_overflow_prone_logits() {
+        // All logits near +90: naive Σe^x is inf, but the (m, n) path
+        // neither overflows nor normalizes.
+        let mut x = random_row(512, 7, 3.0);
+        for v in &mut x {
+            *v += 90.0;
+        }
+        let want = ref_argmax(&x);
+        for isa in Isa::detect_all() {
+            let got = argmax(isa, &x).unwrap();
+            assert_eq!(got.token as usize, want, "{isa}");
+            assert!(got.logprob.is_finite());
+        }
+    }
+
+    #[test]
+    fn top_k_is_sorted_and_isa_identical() {
+        let x = random_row(777, 11, 6.0);
+        for k in [1usize, 2, 8, 50, 777, 2000] {
+            let want = top_k(Isa::Scalar, &x, k).unwrap();
+            assert_eq!(want.len(), k.min(x.len()));
+            for w in want.windows(2) {
+                assert!(w[0].logprob >= w[1].logprob, "k={k} not descending");
+            }
+            for isa in Isa::detect_all() {
+                let got = top_k(isa, &x, k).unwrap();
+                let ids: Vec<u32> = got.iter().map(|c| c.token).collect();
+                let want_ids: Vec<u32> = want.iter().map(|c| c.token).collect();
+                assert_eq!(ids, want_ids, "{isa} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn top_p_mass_reaches_target() {
+        let x = random_row(4096, 5, 5.0);
+        // f64 reference probabilities.
+        let mx = x.iter().cloned().fold(f64::MIN, |a, v| a.max(v as f64));
+        let e: Vec<f64> = x.iter().map(|&v| ((v as f64) - mx).exp()).collect();
+        let z: f64 = e.iter().sum();
+        for &p in &[0.1f32, 0.5, 0.9] {
+            for isa in Isa::detect_all() {
+                let set = top_p(isa, &x, p, 1.0).unwrap();
+                let mass: f64 = set.iter().map(|c| e[c.token as usize] / z).sum();
+                assert!(mass >= p as f64 - 1e-3, "{isa} p={p}: mass {mass}");
+                assert!(!set.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_validates() {
+        let x = random_row(300, 21, 4.0);
+        let isa = Isa::detect_best();
+        for seed in [0u64, 1, 42] {
+            for params in [
+                SamplingParams { seed, ..SamplingParams::default() },
+                SamplingParams { seed, top_k: 10, ..SamplingParams::default() },
+                SamplingParams { seed, top_p: 0.8, ..SamplingParams::default() },
+                SamplingParams { seed, temperature: 0.5, top_k: 5, top_p: 0.9, ..SamplingParams::default() },
+            ] {
+                let a = sample_row(isa, &x, &params).unwrap();
+                let b = sample_row(isa, &x, &params).unwrap();
+                assert_eq!(a, b, "seed {seed} params {params:?}");
+                assert!((a.token as usize) < x.len());
+                assert!(a.logprob <= 0.0 || a.logprob < 1e-6);
+            }
+        }
+        assert_eq!(sample_row(isa, &[], &SamplingParams::default()), Err(SamplingError::EmptyInput));
+        let bad = SamplingParams { temperature: -1.0, ..SamplingParams::default() };
+        assert!(matches!(sample_row(isa, &x, &bad), Err(SamplingError::BadParams(_))));
+        let bad = SamplingParams { top_p: 0.0, ..SamplingParams::default() };
+        assert!(matches!(sample_row(isa, &x, &bad), Err(SamplingError::BadParams(_))));
+    }
+
+    #[test]
+    fn degenerate_rows_and_params_error_instead_of_panicking() {
+        let isa = Isa::detect_best();
+        // NaN-riddled rows select nothing: an error, never a panic (a
+        // panic here would kill a coordinator serving worker for good).
+        let nan_row = vec![f32::NAN; 64];
+        assert_eq!(argmax(isa, &nan_row), Err(SamplingError::NoCandidates));
+        assert_eq!(
+            sample_row(isa, &nan_row, &SamplingParams { top_k: 4, ..SamplingParams::default() }),
+            Err(SamplingError::NoCandidates)
+        );
+        assert_eq!(
+            sample_row(isa, &nan_row, &SamplingParams::default()),
+            Err(SamplingError::NoCandidates)
+        );
+        // A subnormal temperature would turn zero logits into 0·inf = NaN
+        // inside the kernels; rejected up front.
+        let tiny = SamplingParams { temperature: 1.0e-45, ..SamplingParams::default() };
+        assert!(matches!(
+            sample_row(isa, &[0.0f32; 8], &tiny),
+            Err(SamplingError::BadParams(_))
+        ));
+    }
+
+    #[test]
+    fn flat_nucleus_still_reaches_mass() {
+        // Adversarially flat row: top_p = 0.9 needs ~90% of all tokens;
+        // the mass-based budget growth must still deliver the full set
+        // (scan-count bound asserted in tests/integration_sampling.rs,
+        // where the process-global counters are gated).
+        let n = 8192usize;
+        let x = vec![0.0f32; n];
+        let set = top_p(Isa::detect_best(), &x, 0.9, 1.0).unwrap();
+        // Uniform row: the nucleus needs ceil(0.9 n) tokens.
+        assert!(set.len() >= (0.89 * n as f32) as usize, "only {} selected", set.len());
+    }
+
+    #[test]
+    fn sample_batch_broadcasts_and_checks_params_len() {
+        let mut b = RowBatch::new(3, 16);
+        let mut rng = Rng::new(9);
+        for r in 0..3 {
+            for v in b.row_mut(r) {
+                *v = rng.normal_f32(0.0, 4.0);
+            }
+        }
+        let isa = Isa::detect_best();
+        let one = sample_batch(isa, &b, &[SamplingParams::greedy()]).unwrap();
+        assert_eq!(one.len(), 3);
+        let per: Vec<SamplingParams> =
+            (0..3).map(|i| SamplingParams { seed: i as u64, ..SamplingParams::default() }).collect();
+        assert_eq!(sample_batch(isa, &b, &per).unwrap().len(), 3);
+        assert_eq!(
+            sample_batch(isa, &b, &per[..2]),
+            Err(SamplingError::ParamsMismatch { rows: 3, params: 2 })
+        );
+        // Greedy rows match the fused argmax.
+        for (r, c) in one.iter().enumerate() {
+            assert_eq!(c.token, argmax(isa, b.row(r)).unwrap().token);
+        }
+    }
+}

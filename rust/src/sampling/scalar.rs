@@ -1,0 +1,101 @@
+//! Scalar (portable) fused scan kernels: the correctness reference the
+//! SIMD paths are property-tested against, and the fallback on non-x86
+//! hosts.  Mirrors the 4-way accumulator split of
+//! [`softmax::scalar::pass_accum_extexp`], with the candidate select
+//! interleaved into the same traversal.
+//!
+//! [`softmax::scalar::pass_accum_extexp`]: crate::softmax::scalar::pass_accum_extexp
+
+use crate::softmax::exp::{extexp, ExtSum};
+
+use super::{ext_sum_ge, Selector};
+
+/// Fused pass 1 + select: accumulate `Σ e^(x_i · inv_t)` in `(m, n)` form
+/// and offer every element past the selector's prefilter threshold — one
+/// read of `x`, no writes.  Elements are offered in index order, so
+/// first-index tie-breaks match the SIMD kernels exactly.
+pub fn scan_select(x: &[f32], inv_t: f32, sel: &mut Selector) -> ExtSum {
+    let mut acc = [ExtSum::default(); 4];
+    let mut chunks = x.chunks_exact(4);
+    let mut base = 0usize;
+    for c in &mut chunks {
+        for (j, &v) in c.iter().enumerate() {
+            let xs = v * inv_t;
+            // NaN carries no weight and can never be selected (the SIMD
+            // kernels' clamp/compare semantics drop it the same way).
+            if xs.is_nan() {
+                continue;
+            }
+            let (m, n) = extexp(xs);
+            acc[j].add_pair(m, n);
+            if xs > sel.threshold() {
+                sel.offer((base + j) as u32, m, n, xs);
+            }
+        }
+        base += 4;
+    }
+    let mut s = acc[0];
+    s.merge(acc[1]);
+    s.merge(acc[2]);
+    s.merge(acc[3]);
+    for (j, &v) in chunks.remainder().iter().enumerate() {
+        let xs = v * inv_t;
+        if xs.is_nan() {
+            continue;
+        }
+        let (m, n) = extexp(xs);
+        s.add_pair(m, n);
+        if xs > sel.threshold() {
+            sel.offer((base + j) as u32, m, n, xs);
+        }
+    }
+    s
+}
+
+/// CDF walk for full-categorical sampling: the first index where the
+/// running extended sum reaches `target` (= `u · Σ` for a uniform draw
+/// `u`).  One read of `x`, no writes, no division — the comparison stays
+/// in the `(m, n)` representation throughout.  Sequential by nature (a
+/// prefix sum), hence scalar on every ISA.
+pub fn scan_cdf(x: &[f32], inv_t: f32, target: &ExtSum) -> usize {
+    let mut c = ExtSum::default();
+    for (i, &v) in x.iter().enumerate() {
+        let xs = v * inv_t;
+        if xs.is_nan() {
+            continue; // no weight; cannot be drawn
+        }
+        c.add_exp(xs);
+        if ext_sum_ge(&c, target) {
+            return i;
+        }
+    }
+    x.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scan_select_accumulator_matches_pass_accum() {
+        let x: Vec<f32> = (0..513).map(|i| ((i * 37) % 100) as f32 / 10.0 - 5.0).collect();
+        let mut sel = Selector::new(4);
+        let s = scan_select(&x, 1.0, &mut sel);
+        let want = crate::softmax::scalar::pass_accum_extexp(&x);
+        assert!((s.ln() - want.ln()).abs() < 1e-4, "{} vs {}", s.ln(), want.ln());
+    }
+
+    #[test]
+    fn scan_cdf_hits_the_dominant_token() {
+        // One token carries ~all the mass; any target below the total
+        // crosses at that token (everything before it is negligible).
+        let mut x = vec![-40.0f32; 100];
+        x[63] = 30.0;
+        let total = crate::softmax::scalar::pass_accum_extexp(&x);
+        let target = ExtSum { m: total.m * 0.5, n: total.n };
+        assert_eq!(scan_cdf(&x, 1.0, &target), 63);
+        // A target at/above the total saturates at the last index.
+        let over = ExtSum { m: total.m * 2.0, n: total.n };
+        assert_eq!(scan_cdf(&x, 1.0, &over), 99);
+    }
+}

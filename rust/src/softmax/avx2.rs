@@ -24,8 +24,9 @@ const LANES: usize = 8;
 const ROUND: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
 
 /// Range reduction + polynomial: returns `(p, n)` with `e^x ≈ p·2^n`.
+/// `pub(crate)`: the fused sampling kernels (`sampling::avx2`) reuse it.
 #[inline(always)]
-unsafe fn vexp_parts(x: __m256) -> (__m256, __m256) {
+pub(crate) unsafe fn vexp_parts(x: __m256) -> (__m256, __m256) {
     let x = _mm256_max_ps(x, _mm256_set1_ps(-DOMAIN_BOUND));
     let x = _mm256_min_ps(x, _mm256_set1_ps(DOMAIN_BOUND));
     let n = _mm256_round_ps::<ROUND>(_mm256_mul_ps(x, _mm256_set1_ps(LOG2E)));
@@ -241,8 +242,9 @@ pub unsafe fn pass_scale_inplace<const U: usize>(y: &mut [f32], lam: f32) {
 
 /// Fold one `(p, n)` vector into the running `(m, n)` accumulator pair
 /// (paper Alg. 3 inner loop, vectorized: both shifts ≤ 0, so no overflow).
+/// `pub(crate)`: the fused sampling kernels (`sampling::avx2`) reuse it.
 #[inline(always)]
-unsafe fn accum_step(vm: &mut __m256, vn: &mut __m256, p: __m256, n: __m256) {
+pub(crate) unsafe fn accum_step(vm: &mut __m256, vn: &mut __m256, p: __m256, n: __m256) {
     let n_max = _mm256_max_ps(*vn, n);
     let scaled_new = _mm256_mul_ps(p, vexp2i(_mm256_sub_ps(n, n_max)));
     let scaled_acc = _mm256_mul_ps(*vm, vexp2i(_mm256_sub_ps(*vn, n_max)));

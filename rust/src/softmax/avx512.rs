@@ -24,8 +24,9 @@ const LANES: usize = 16;
 const RN: i32 = 0x08;
 
 /// Range reduction + polynomial: `(p, n)` with `e^x ≈ p·2^n`.
+/// `pub(crate)`: the fused sampling kernels (`sampling::avx512`) reuse it.
 #[inline(always)]
-unsafe fn vexp_parts(x: __m512) -> (__m512, __m512) {
+pub(crate) unsafe fn vexp_parts(x: __m512) -> (__m512, __m512) {
     let x = _mm512_max_ps(x, _mm512_set1_ps(-DOMAIN_BOUND));
     let x = _mm512_min_ps(x, _mm512_set1_ps(DOMAIN_BOUND));
     let n = _mm512_roundscale_ps::<RN>(_mm512_mul_ps(x, _mm512_set1_ps(LOG2E)));
@@ -208,8 +209,9 @@ pub unsafe fn pass_scale_inplace<const U: usize>(y: &mut [f32], lam: f32) {
 /// Fold one `(p, n)` vector into the `(m, n)` accumulator pair; the
 /// rescales use VSCALEFPS directly (shift ≤ 0 ⇒ pure downscale, no clamp
 /// logic needed — hardware flushes to zero exactly like the paper wants).
+/// `pub(crate)`: the fused sampling kernels (`sampling::avx512`) reuse it.
 #[inline(always)]
-unsafe fn accum_step(vm: &mut __m512, vn: &mut __m512, p: __m512, n: __m512) {
+pub(crate) unsafe fn accum_step(vm: &mut __m512, vn: &mut __m512, p: __m512, n: __m512) {
     let n_max = _mm512_max_ps(*vn, n);
     let scaled_new = _mm512_scalef_ps(p, _mm512_sub_ps(n, n_max));
     let scaled_acc = _mm512_scalef_ps(*vm, _mm512_sub_ps(*vn, n_max));

@@ -292,6 +292,16 @@ impl RowBatch {
     pub fn into_vec(self) -> Vec<f32> {
         self.data.as_slice().to_vec()
     }
+
+    /// Drop every row past the first `rows` (no-op when the batch is
+    /// already that small).  Used to slice padding rows back off after a
+    /// bucket-padded execution; the allocation is kept.
+    pub fn truncate_rows(&mut self, rows: usize) {
+        if rows < self.rows {
+            self.rows = rows;
+            self.data.len = rows * self.n;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -501,6 +511,60 @@ pub fn softmax_batch_inplace_auto(
         run_chunked(alg, isa, xs, ys, n, block, false, t);
     }
     Ok(())
+}
+
+/// Per-row pass-1 accumulators for a whole batch: `Σ e^{x_i}` of every
+/// row in the `(m, n)` extended-exponent representation, with the ISA
+/// dispatch hoisted out of the row loop.  This is the two-pass
+/// algorithm's entire first pass — everything the fused decoding
+/// subsystem ([`crate::sampling`]) needs to renormalize or compare
+/// tokens without a scale pass ever running.
+pub fn accum_extexp_batch(isa: Isa, x: &RowBatch) -> Result<Vec<ExtSum>, SoftmaxError> {
+    validate_inplace(x, isa)?;
+    let mut out = Vec::with_capacity(x.rows());
+    match isa {
+        Isa::Scalar => {
+            for r in 0..x.rows() {
+                out.push(scalar::pass_accum_extexp(x.row(r)));
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: availability checked by validate_inplace.
+        Isa::Avx2 => unsafe {
+            for r in 0..x.rows() {
+                out.push(avx2::pass_accum_extexp::<8>(x.row(r)));
+            }
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: availability checked by validate_inplace.
+        Isa::Avx512 => unsafe {
+            for r in 0..x.rows() {
+                out.push(avx512::pass_accum_extexp::<8>(x.row(r)));
+            }
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => unreachable!("non-scalar ISA unavailable on this arch"),
+    }
+    Ok(out)
+}
+
+/// Rows whose normalized output was written by a store/scale pass since
+/// process start — every normalization path counts ([`softmax_batch`]
+/// and friends per row, plus the single-row API).  Test hook: the fused
+/// decoding subsystem asserts this does **not** advance while it decodes
+/// (its pass-count guarantee), and that the normalize-then-scan
+/// reference does.
+///
+/// [`softmax_batch`]: crate::softmax::batch::softmax_batch
+pub fn store_pass_rows() -> usize {
+    STORE_PASS_ROWS.load(Ordering::Relaxed)
+}
+
+static STORE_PASS_ROWS: AtomicUsize = AtomicUsize::new(0);
+
+#[inline(always)]
+pub(crate) fn note_store_pass(rows: usize) {
+    STORE_PASS_ROWS.fetch_add(rows, Ordering::Relaxed);
 }
 
 /// Logical CPUs available to this process (1 if detection fails).  Cached:
@@ -795,6 +859,7 @@ fn drive_recompute(
         for (i, r) in (r0..r0 + b).enumerate() {
             sigma.push(pass_sumexp(&x[r * n..r * n + n], mu[i]));
         }
+        note_store_pass(b);
         for (i, r) in (r0..r0 + b).enumerate() {
             let lam = 1.0 / sigma[i];
             if nt {
@@ -834,6 +899,7 @@ fn drive_reload(
         for (i, r) in (r0..r0 + b).enumerate() {
             sigma.push(pass_storeexp(&x[r * n..r * n + n], mu[i], &mut y[r * n..r * n + n]));
         }
+        note_store_pass(b);
         for (i, r) in (r0..r0 + b).enumerate() {
             pass_scale_inplace(&mut y[r * n..r * n + n], 1.0 / sigma[i]);
         }
@@ -862,6 +928,7 @@ fn drive_twopass(
         for r in r0..r0 + b {
             sums.push(pass_accum(&x[r * n..r * n + n]));
         }
+        note_store_pass(b);
         for (i, r) in (r0..r0 + b).enumerate() {
             let s = sums[i];
             if nt {
@@ -1135,6 +1202,42 @@ mod tests {
             softmax_batch_inplace(Algorithm::TwoPass, Isa::Scalar, &mut zin),
             Err(SoftmaxError::EmptyInput)
         );
+    }
+
+    #[test]
+    fn truncate_rows_slices_padding_off() {
+        let mut b = RowBatch::new(0, 4);
+        for r in 0..5 {
+            b.push_row(&[r as f32; 4]).unwrap();
+        }
+        b.truncate_rows(8); // no-op upward
+        assert_eq!(b.rows(), 5);
+        b.truncate_rows(3);
+        assert_eq!(b.rows(), 3);
+        assert_eq!(b.as_slice().len(), 12);
+        assert_eq!(b.row(2), &[2.0f32; 4]);
+        // Growth after truncation reuses the allocation consistently.
+        b.push_row(&[9.0; 4]).unwrap();
+        assert_eq!(b.rows(), 4);
+        assert_eq!(b.row(3), &[9.0f32; 4]);
+    }
+
+    #[test]
+    fn accum_batch_matches_single_row_pass() {
+        let x = random_batch(6, 301, 17);
+        for isa in Isa::detect_all() {
+            let sums = accum_extexp_batch(isa, &x).unwrap();
+            assert_eq!(sums.len(), 6);
+            for (r, s) in sums.iter().enumerate() {
+                let want = crate::softmax::scalar::pass_accum_extexp(x.row(r));
+                assert!(
+                    (s.ln() - want.ln()).abs() < 1e-4,
+                    "{isa} row {r}: {} vs {}",
+                    s.ln(),
+                    want.ln()
+                );
+            }
+        }
     }
 
     #[test]

@@ -29,8 +29,8 @@ pub mod tuning;
 use std::fmt;
 
 pub use batch::{
-    softmax_batch, softmax_batch_auto, softmax_batch_inplace, softmax_batch_parallel, NtPolicy,
-    RowBatch,
+    accum_extexp_batch, softmax_batch, softmax_batch_auto, softmax_batch_inplace,
+    softmax_batch_parallel, store_pass_rows, NtPolicy, RowBatch,
 };
 pub use dispatch::Isa;
 pub use exp::ExtSum;
@@ -133,6 +133,7 @@ pub fn softmax_with(
     if !isa.available() {
         return Err(SoftmaxError::IsaUnavailable(isa));
     }
+    batch::note_store_pass(1);
     match isa {
         Isa::Scalar => match alg {
             Algorithm::ThreePassRecompute => scalar::softmax_threepass_recompute(x, y),
@@ -169,6 +170,7 @@ pub fn softmax_inplace(x: &mut [f32]) -> Result<(), SoftmaxError> {
     if x.is_empty() {
         return Err(SoftmaxError::EmptyInput);
     }
+    batch::note_store_pass(1);
     let isa = Isa::detect_best();
     match isa {
         #[cfg(target_arch = "x86_64")]

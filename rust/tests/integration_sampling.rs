@@ -1,0 +1,246 @@
+//! Integration tests for the fused sampling & decoding subsystem,
+//! including the acceptance assertion: `argmax`/`top_k` produce the same
+//! token ids as a naive normalize-then-scan reference on every ISA while
+//! performing **no normalization pass** (checked against the engine's
+//! store-pass counter and the sampling subsystem's scan counter).
+//!
+//! The counters are process-global, so every test that normalizes or
+//! decodes takes `COUNTER_GATE` first — the default multi-threaded test
+//! runner must not interleave counter-sensitive sections.
+
+use std::sync::Mutex;
+
+use two_pass_softmax::sampling::{self, SamplingParams};
+use two_pass_softmax::softmax::batch::{softmax_batch, store_pass_rows, RowBatch};
+use two_pass_softmax::softmax::{accum_extexp_batch, softmax_with, Algorithm, Isa};
+use two_pass_softmax::util::rng::Rng;
+
+static COUNTER_GATE: Mutex<()> = Mutex::new(());
+
+fn lock_counters() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn random_batch(rows: usize, n: usize, seed: u64, std: f32) -> RowBatch {
+    let mut rng = Rng::new(seed);
+    let mut b = RowBatch::new(rows, n);
+    for r in 0..rows {
+        for v in b.row_mut(r) {
+            *v = rng.normal_f32(0.0, std);
+        }
+    }
+    b
+}
+
+/// Normalize-then-scan reference: the full normalized row plus a
+/// strict-`>` first-wins scan for the top ids.
+fn ref_normalized_row(x: &[f32]) -> Vec<f32> {
+    let mut y = vec![0.0f32; x.len()];
+    softmax_with(Algorithm::TwoPass, Isa::Scalar, x, &mut y).unwrap();
+    y
+}
+
+fn ref_top_ids(y: &[f32], k: usize) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..y.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        y[b as usize].partial_cmp(&y[a as usize]).unwrap().then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// Token ids must be identical; the only tolerated difference is a pair
+/// of ids whose normalized probabilities are bitwise-equal (an exact tie,
+/// where "the" reference order is ambiguous by construction).
+fn assert_ids_match(got: &[u32], want: &[u32], y: &[f32], ctx: &str) {
+    if got == want {
+        return;
+    }
+    assert_eq!(got.len(), want.len(), "{ctx}: length mismatch");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(
+            y[*g as usize].to_bits(),
+            y[*w as usize].to_bits(),
+            "{ctx}: id {g} vs {w} with unequal probabilities"
+        );
+    }
+}
+
+#[test]
+fn acceptance_fused_decode_matches_reference_with_zero_normalization_passes() {
+    let _g = lock_counters();
+    let rows = 6usize;
+    let n = 2048usize;
+    let x = random_batch(rows, n, 2020, 6.0);
+
+    // Reference ids come from normalized rows — computed BEFORE the
+    // counter snapshot so the reference's own store passes don't pollute
+    // the fused-path measurement.
+    let refs: Vec<Vec<f32>> = (0..rows).map(|r| ref_normalized_row(x.row(r))).collect();
+    let store_before = store_pass_rows();
+    let scans_before = sampling::scan_rows_total();
+
+    let mut fused_scans_expected = 0usize;
+    for isa in Isa::detect_all() {
+        for r in 0..rows {
+            let row = x.row(r);
+            let y = &refs[r];
+
+            let got = sampling::argmax(isa, row).unwrap();
+            fused_scans_expected += 1;
+            assert_ids_match(
+                &[got.token],
+                &ref_top_ids(y, 1),
+                y,
+                &format!("{isa} row {r} argmax"),
+            );
+
+            for k in [4usize, 64] {
+                let got: Vec<u32> =
+                    sampling::top_k(isa, row, k).unwrap().iter().map(|c| c.token).collect();
+                fused_scans_expected += 1;
+                assert_ids_match(&got, &ref_top_ids(y, k), y, &format!("{isa} row {r} top_{k}"));
+            }
+        }
+    }
+
+    // The pass-count/store-count assertion: decoding scanned each row
+    // exactly once per call and wrote NOTHING — the engine's store-pass
+    // counter did not move.
+    assert_eq!(
+        sampling::scan_rows_total() - scans_before,
+        fused_scans_expected,
+        "fused decode must scan once per argmax/top_k call"
+    );
+    assert_eq!(
+        store_pass_rows() - store_before,
+        0,
+        "fused decode must not run any normalization/store pass"
+    );
+
+    // Sanity: the reference path DOES advance the store counter.
+    let before = store_pass_rows();
+    let mut y = RowBatch::new(rows, n);
+    softmax_batch(Algorithm::TwoPass, Isa::detect_best(), &x, &mut y).unwrap();
+    assert_eq!(store_pass_rows() - before, rows, "normalization stores every row");
+}
+
+#[test]
+fn sample_batch_decodes_per_row_params_without_stores() {
+    let _g = lock_counters();
+    let rows = 5usize;
+    let x = random_batch(rows, 4096, 77, 4.0);
+    let params: Vec<SamplingParams> = vec![
+        SamplingParams::greedy(),
+        SamplingParams { top_k: 8, seed: 1, ..SamplingParams::default() },
+        SamplingParams { top_p: 0.9, seed: 2, ..SamplingParams::default() },
+        SamplingParams { seed: 3, ..SamplingParams::default() }, // full categorical
+        SamplingParams { temperature: 0.7, top_k: 16, top_p: 0.95, seed: 4, ..SamplingParams::default() },
+    ];
+    let store_before = store_pass_rows();
+    for isa in Isa::detect_all() {
+        let out = sampling::sample_batch(isa, &x, &params).unwrap();
+        assert_eq!(out.len(), rows);
+        for (r, c) in out.iter().enumerate() {
+            assert!((c.token as usize) < 4096, "{isa} row {r}");
+            assert!(c.logprob.is_finite() && c.logprob < 1e-6, "{isa} row {r}");
+        }
+        // Greedy row = fused argmax of the row.
+        assert_eq!(out[0].token, sampling::argmax(isa, x.row(0)).unwrap().token);
+        // Determinism end to end.
+        let again = sampling::sample_batch(isa, &x, &params).unwrap();
+        assert_eq!(out, again, "{isa}");
+    }
+    assert_eq!(store_pass_rows() - store_before, 0, "decode wrote a normalized row");
+}
+
+#[test]
+fn flat_nucleus_converges_in_few_scans() {
+    let _g = lock_counters();
+    // Adversarially flat row: top_p = 0.9 needs ~90% of all tokens.  The
+    // mass-based budget growth must get there in a handful of fused
+    // scans, not O(log n) doublings of a near-n heap.
+    let n = 8192usize;
+    let x = vec![0.0f32; n];
+    let isa = Isa::detect_best();
+    let before = sampling::scan_rows_total();
+    let set = sampling::top_p(isa, &x, 0.9, 1.0).unwrap();
+    let scans = sampling::scan_rows_total() - before;
+    assert!(scans <= 4, "flat nucleus took {scans} scans");
+    assert!(set.len() >= (0.89 * n as f32) as usize, "only {} selected", set.len());
+}
+
+#[test]
+fn logprobs_match_normalized_rows() {
+    let _g = lock_counters();
+    let x = random_batch(4, 1500, 5, 8.0);
+    for isa in Isa::detect_all() {
+        for r in 0..x.rows() {
+            let y = ref_normalized_row(x.row(r));
+            let c = sampling::argmax(isa, x.row(r)).unwrap();
+            let want = y[c.token as usize].ln();
+            assert!(
+                (c.logprob - want).abs() < 1e-4 + want.abs() * 1e-4,
+                "{isa} row {r}: logprob {} vs normalized {}",
+                c.logprob,
+                want
+            );
+        }
+    }
+}
+
+#[test]
+fn accum_batch_agrees_with_fused_scan_partition_function() {
+    let _g = lock_counters();
+    let x = random_batch(3, 700, 99, 20.0);
+    for isa in Isa::detect_all() {
+        let sums = accum_extexp_batch(isa, &x).unwrap();
+        for (r, s) in sums.iter().enumerate() {
+            // The fused argmax logprob implies the same partition
+            // function: ln p = ln w - ln Z.
+            let c = sampling::argmax(isa, x.row(r)).unwrap();
+            let w = {
+                let row = x.row(r);
+                let xi = row[c.token as usize];
+                let (m, n) = two_pass_softmax::softmax::exp::extexp(xi);
+                m.ln() + n * std::f32::consts::LN_2
+            };
+            let lnz = w - c.logprob;
+            assert!(
+                (lnz - s.ln()).abs() < 1e-3 + s.ln().abs() * 1e-5,
+                "{isa} row {r}: {} vs {}",
+                lnz,
+                s.ln()
+            );
+        }
+    }
+}
+
+#[test]
+fn overflow_prone_and_peaked_rows_decode_identically_across_isas() {
+    let _g = lock_counters();
+    let mut rng = Rng::new(3);
+    for case in 0..20 {
+        let n = 16 + rng.below(3000);
+        let mut x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+        match case % 3 {
+            0 => {
+                for v in &mut x {
+                    *v += 90.0; // naive exp overflows
+                }
+            }
+            1 => {
+                let hot = rng.below(n);
+                x[hot] = 50.0; // peaked head
+            }
+            _ => {}
+        }
+        let y = ref_normalized_row(&x);
+        let want = ref_top_ids(&y, 10.min(n));
+        for isa in Isa::detect_all() {
+            let got: Vec<u32> =
+                sampling::top_k(isa, &x, 10.min(n)).unwrap().iter().map(|c| c.token).collect();
+            assert_ids_match(&got, &want, &y, &format!("case {case} {isa} n={n}"));
+        }
+    }
+}

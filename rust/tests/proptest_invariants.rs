@@ -3,9 +3,12 @@
 //! same idea, seeds printed on failure).
 //!
 //! Invariants covered: the (m, n) extended-range accumulator (order
-//! independence, merge associativity, agreement with f64), the batcher
-//! (conservation, FIFO-within-key, key purity), the JSON codec (roundtrip),
-//! and the cost/perf models (bounds, monotonicity).
+//! independence, merge associativity, agreement with f64), the fused
+//! sampling subsystem (argmax vs normalize-then-scan, top-k set equality
+//! across ISAs, top-p mass, seeded-categorical determinism + empirical
+//! frequencies), the batcher (conservation, FIFO-within-key, key purity),
+//! the JSON codec (roundtrip), and the cost/perf models (bounds,
+//! monotonicity).
 
 use std::time::Duration;
 
@@ -13,8 +16,9 @@ use two_pass_softmax::coordinator::batcher::Batcher;
 use two_pass_softmax::coordinator::request::{make_request, Payload};
 use two_pass_softmax::costmodel;
 use two_pass_softmax::platform::SKYLAKE_X;
+use two_pass_softmax::sampling::{self, SamplingParams};
 use two_pass_softmax::simmodel;
-use two_pass_softmax::softmax::{Algorithm, ExtSum, Isa};
+use two_pass_softmax::softmax::{softmax_with, Algorithm, ExtSum, Isa};
 use two_pass_softmax::util::json::Json;
 use two_pass_softmax::util::rng::Rng;
 
@@ -104,6 +108,140 @@ fn extsum_identity_element() {
         let before = s.ln();
         s.merge(ExtSum::default()); // + 0
         assert!((s.ln() - before).abs() < 1e-6);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused sampling & decoding
+// ---------------------------------------------------------------------------
+
+/// Draw a logits row whose shape rotates through the regimes that matter:
+/// well-behaved, wide, overflow-prone (naive Σe^x = inf) and peaked.
+fn random_logits(rng: &mut Rng, case: usize) -> Vec<f32> {
+    let n = 2 + rng.below(400);
+    let mut x: Vec<f32> = match case % 4 {
+        0 => (0..n).map(|_| rng.normal_f32(0.0, 4.0)).collect(),
+        1 => (0..n).map(|_| rng.range_f32(-20.0, 20.0)).collect(),
+        2 => (0..n).map(|_| rng.normal_f32(90.0, 3.0)).collect(),
+        _ => (0..n).map(|_| rng.range_f32(-51.0, -49.0)).collect(),
+    };
+    if case % 4 == 3 {
+        let hot = rng.below(n);
+        x[hot] = 50.0;
+    }
+    x
+}
+
+/// Normalized row via the scalar two-pass kernel (the naive reference the
+/// fused path must agree with token-for-token).
+fn normalized(x: &[f32]) -> Vec<f32> {
+    let mut y = vec![0.0f32; x.len()];
+    softmax_with(Algorithm::TwoPass, Isa::Scalar, x, &mut y).unwrap();
+    y
+}
+
+#[test]
+fn sampling_argmax_matches_normalize_then_scan() {
+    let mut rng = Rng::new(808);
+    for case in 0..300 {
+        let x = random_logits(&mut rng, case);
+        let y = normalized(&x);
+        let mut want = 0usize;
+        for i in 1..y.len() {
+            if y[i] > y[want] {
+                want = i;
+            }
+        }
+        for isa in Isa::detect_all() {
+            let got = sampling::argmax(isa, &x).unwrap();
+            // Identical ids; only a bitwise-exact probability tie (where
+            // "the" argmax is ambiguous) may pick a different index.
+            assert!(
+                got.token as usize == want
+                    || y[got.token as usize].to_bits() == y[want].to_bits(),
+                "case {case} {isa} n={}: got {} want {want}",
+                x.len(),
+                got.token
+            );
+        }
+    }
+}
+
+#[test]
+fn sampling_topk_sets_identical_across_isas() {
+    let mut rng = Rng::new(909);
+    let isas = Isa::detect_all();
+    for case in 0..200 {
+        let x = random_logits(&mut rng, case);
+        let k = 1 + rng.below(24);
+        let want: Vec<u32> =
+            sampling::top_k(Isa::Scalar, &x, k).unwrap().iter().map(|c| c.token).collect();
+        assert_eq!(want.len(), k.min(x.len()));
+        for &isa in &isas {
+            let got: Vec<u32> =
+                sampling::top_k(isa, &x, k).unwrap().iter().map(|c| c.token).collect();
+            assert_eq!(got, want, "case {case} {isa} k={k}");
+        }
+    }
+}
+
+#[test]
+fn sampling_top_p_mass_reaches_p() {
+    let mut rng = Rng::new(1010);
+    for case in 0..60 {
+        let x = random_logits(&mut rng, case);
+        // f64 reference probabilities for the mass check.
+        let mx = x.iter().cloned().fold(f64::MIN, |a, v| a.max(v as f64));
+        let e: Vec<f64> = x.iter().map(|&v| ((v as f64) - mx).exp()).collect();
+        let z: f64 = e.iter().sum();
+        let p = 0.05 + 0.9 * rng.uniform() as f32;
+        for isa in Isa::detect_all() {
+            let set = sampling::top_p(isa, &x, p, 1.0).unwrap();
+            assert!(!set.is_empty(), "case {case} {isa}");
+            let mass: f64 = set.iter().map(|c| e[c.token as usize] / z).sum();
+            assert!(
+                mass >= p as f64 - 1e-3,
+                "case {case} {isa} p={p}: nucleus mass {mass}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sampling_seeded_categorical_is_deterministic_and_unbiased() {
+    // Fixed 6-way distribution; empirical frequencies must match the
+    // true probabilities within a few standard errors.
+    let x = [0.0f32, 0.5, 1.0, 1.5, 2.0, 2.5];
+    let y = normalized(&x);
+    let isa = Isa::detect_best();
+    let draws = 30_000usize;
+    let mut counts = [0usize; 6];
+    for i in 0..draws {
+        let params = SamplingParams { seed: 5000 + i as u64, ..SamplingParams::default() };
+        let a = sampling::sample_row(isa, &x, &params).unwrap();
+        counts[a.token as usize] += 1;
+        if i % 1000 == 0 {
+            // Same seed, same token — decoding is a pure function.
+            let b = sampling::sample_row(isa, &x, &params).unwrap();
+            assert_eq!(a, b, "draw {i} not deterministic");
+        }
+    }
+    for (t, &c) in counts.iter().enumerate() {
+        let freq = c as f64 / draws as f64;
+        let p = y[t] as f64;
+        // 5 sigma of a binomial proportion at 30k draws, plus slack.
+        let tol = 5.0 * (p * (1.0 - p) / draws as f64).sqrt() + 0.002;
+        assert!(
+            (freq - p).abs() < tol,
+            "token {t}: freq {freq:.4} vs p {p:.4} (tol {tol:.4})"
+        );
+    }
+    // Restricted sampling stays inside its candidate set: with top_k = 2
+    // only the two heaviest tokens (4 and 5) may ever be drawn.
+    for i in 0..2_000u64 {
+        let params = SamplingParams { top_k: 2, seed: i, ..SamplingParams::default() };
+        let c = sampling::sample_row(isa, &x, &params).unwrap();
+        assert!(c.token >= 4, "top_k=2 drew token {}", c.token);
     }
 }
 
