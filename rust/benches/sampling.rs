@@ -1,7 +1,10 @@
 //! Bench: fused decode (argmax / top-k sampling straight off the
 //! extended-exponent accumulators) vs the normalize-then-scan serving
 //! path it replaces (full two-pass softmax into an output batch, then a
-//! scan of the normalized row per token).
+//! scan of the normalized row per token), plus pooled vs
+//! submitting-thread placement of the same fused decode (the generic
+//! batch-execution engine's `Decode` jobs, threshold forced to 1 so
+//! every batch splits across all pool workers).
 //!
 //! `cargo bench --bench sampling [-- --rows 8 --ns 32768,65536,131072,262144
 //!      --top-k 40 --reps 5 --min-time 0.05]`
@@ -10,8 +13,9 @@
 //! accounting: fused greedy/top-k decode reads the logits once (1N);
 //! normalize-then-scan moves the two-pass algorithm's 3N plus one more
 //! read of the normalized row (4N).  The sweep is emitted as JSON
-//! (`results/bench/sampling.json`, same shape as `batch_nt.json`) so
-//! successive BENCH_*.json files can track the fused-decode win.
+//! (`results/bench/sampling.json`, schema in `docs/FORMATS.md`) so
+//! successive BENCH_*.json files can track the fused-decode and
+//! pool-placement wins.
 
 use two_pass_softmax::sampling::{self, SamplingParams};
 use two_pass_softmax::softmax::batch::{softmax_batch, RowBatch};
@@ -47,7 +51,7 @@ fn main() -> anyhow::Result<()> {
 
     let greedy = [SamplingParams::greedy()];
     let sampled = [SamplingParams { top_k, seed: 9, ..SamplingParams::default() }];
-    let mut sweep: Vec<(usize, f64, f64, f64)> = Vec::new();
+    let mut sweep: Vec<(usize, f64, f64, f64, f64)> = Vec::new();
 
     for &n in &ns {
         let elems = rows * n;
@@ -96,11 +100,25 @@ fn main() -> anyhow::Result<()> {
             min_time,
         );
 
+        // Pooled fused greedy decode: identical per-row work, split at
+        // row boundaries across the persistent pool workers (threshold 1
+        // forces the split; 0 threads = all cores).  Token ids are
+        // bit-identical to the submitting-thread path by construction.
+        let t_pool = stats::measure_median(
+            || {
+                let c = sampling::sample_batch_auto(isa, &x, &greedy, 1, 0).unwrap();
+                std::hint::black_box(&c);
+            },
+            reps,
+            min_time,
+        );
+
         let tokens = rows as f64;
         for (path, secs, passes) in [
             ("norm_scan", t_norm, 4usize),
             ("fused_greedy", t_fused, 1),
             ("fused_topk", t_topk, 1),
+            ("fused_greedy_pool", t_pool, 1),
         ] {
             t.rowd(&[
                 n.to_string(),
@@ -111,12 +129,14 @@ fn main() -> anyhow::Result<()> {
             ]);
         }
         println!(
-            "n = {n}: fused greedy {:.2}x vs normalize-then-scan ({:.1} vs {:.1} us/token)",
+            "n = {n}: fused greedy {:.2}x vs normalize-then-scan ({:.1} vs {:.1} us/token); \
+             pooled {:.2}x vs submitting thread",
             t_norm / t_fused,
             t_fused * 1e6 / tokens,
-            t_norm * 1e6 / tokens
+            t_norm * 1e6 / tokens,
+            t_fused / t_pool
         );
-        sweep.push((n, t_norm / tokens, t_fused / tokens, t_topk / tokens));
+        sweep.push((n, t_norm / tokens, t_fused / tokens, t_topk / tokens, t_pool / tokens));
     }
 
     print!("{}", t.to_markdown());
@@ -129,17 +149,20 @@ fn main() -> anyhow::Result<()> {
         "  \"bench\": \"sampling\",\n  \"isa\": \"{isa}\",\n  \"rows\": {rows},\n  \"top_k\": {top_k},\n"
     ));
     json.push_str("  \"sweep\": [\n");
-    for (i, (n, s_norm, s_fused, s_topk)) in sweep.iter().enumerate() {
+    for (i, (n, s_norm, s_fused, s_topk, s_pool)) in sweep.iter().enumerate() {
         // Per-token traffic of the fused scan is one read of the row.
         let gbps_fused = (*n as f64 * std::mem::size_of::<f32>() as f64) / s_fused / 1e9;
         json.push_str(&format!(
             "    {{\"n\": {n}, \"tokens_s_norm_scan\": {:.1}, \"tokens_s_fused_greedy\": {:.1}, \
-             \"tokens_s_fused_topk\": {:.1}, \"gbps_fused_greedy\": {gbps_fused:.3}, \
-             \"speedup\": {:.3}}}{}\n",
+             \"tokens_s_fused_topk\": {:.1}, \"tokens_s_fused_greedy_pool\": {:.1}, \
+             \"gbps_fused_greedy\": {gbps_fused:.3}, \
+             \"speedup\": {:.3}, \"pool_speedup\": {:.3}}}{}\n",
             1.0 / s_norm,
             1.0 / s_fused,
             1.0 / s_topk,
+            1.0 / s_pool,
             s_norm / s_fused,
+            s_fused / s_pool,
             if i + 1 == sweep.len() { "" } else { "," }
         ));
     }

@@ -1,6 +1,11 @@
 //! Config system: JSON config files (parsed with the in-tree JSON module)
 //! with CLI overrides — the launcher convention used by `repro serve`,
-//! `repro figures`, and the examples.  See `configs/*.json`.
+//! `repro figures`, and the examples.
+//!
+//! The one serving config is [`ServeConfig`]; every field documents its
+//! default and units.  Precedence is defaults → JSON file
+//! ([`ServeConfig::from_file`]) → CLI flags ([`ServeConfig::apply_args`]),
+//! validated after each layer ([`ServeConfig::validate`]).
 
 use std::path::{Path, PathBuf};
 
@@ -31,36 +36,55 @@ impl std::str::FromStr for Backend {
 }
 
 /// Serving configuration (coordinator + runtime).
+///
+/// Every field can come from a JSON config file ([`ServeConfig::from_file`],
+/// snake_case keys) or from CLI overrides ([`ServeConfig::apply_args`],
+/// kebab-case flags); missing keys keep the documented defaults.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// Which execution backend serves softmax batches: the native Rust
+    /// kernels or AOT XLA artifacts via PJRT.  Default: `native`.
     pub backend: Backend,
+    /// Softmax algorithm for the native engine (paper Algorithms 1–3).
+    /// Default: `twopass` (the paper's contribution, 3N traffic).
     pub algorithm: Algorithm,
+    /// Instruction set for the native kernels.  Default: the best ISA the
+    /// host supports (AVX512F → AVX2 → scalar).
     pub isa: Isa,
-    /// Max rows per executed batch.
+    /// Max rows per executed batch (requests; the dynamic batcher flushes
+    /// at this size).  Default: 8.
     pub max_batch: usize,
-    /// Max time a request waits for batchmates before a partial flush.
+    /// Max time a request waits for batchmates before a partial flush
+    /// (microseconds).  Default: 200.
     pub max_wait_us: u64,
-    /// Executor worker threads.
+    /// Coordinator executor worker threads (each takes whole batches from
+    /// the batcher and runs the router).  Default: 2.
     pub workers: usize,
-    /// Bound on the pending queue before backpressure rejects.
+    /// Bound on the pending request queue before backpressure rejects
+    /// (requests; must be ≥ `max_batch`).  Default: 1024.
     pub queue_capacity: usize,
+    /// Directory holding AOT-compiled PJRT artifacts (pjrt backend only).
+    /// Default: `artifacts`.
     pub artifacts_dir: PathBuf,
     /// Minimum batch size (rows × row length, in elements) before the
-    /// native engine parallelizes one batch across kernel threads; below
-    /// it batches run single-threaded (thread hand-off costs more than the
-    /// memory passes save on small working sets).  `0` (the default) means
+    /// native engine parallelizes one batch — normalize *or* decode —
+    /// across the persistent kernel-thread pool; below it batches run on
+    /// the submitting worker (thread hand-off costs more than the memory
+    /// passes save on small working sets).  `0` (the default) means
     /// *auto*: derived from measured single-thread STREAM bandwidth —
     /// `repro serve` resolves it eagerly at startup (or from
     /// `--tune-file`); library-constructed engines resolve lazily on the
     /// first batch large enough to possibly split (see
     /// [`crate::softmax::tuning::derive_parallel_threshold`]).
     pub parallel_threshold: usize,
-    /// Kernel threads per batch for the native engine (0 = all cores).
+    /// Kernel threads per batch for the native engine's pool splits
+    /// (normalize and decode).  Default: 0 = all logical cores.
     pub batch_threads: usize,
     /// Pad executed softmax batches to power-of-two row counts on the
     /// pjrt backend so shape-specialized artifacts hit their exact-fit
     /// bucket (padding rows are sliced off before response assembly).
-    /// Ignored by the native backend.
+    /// Ignored by the native backend.  Default: `true`
+    /// (`--no-bucket-pow2` disables).
     pub bucket_pow2: bool,
 }
 

@@ -9,7 +9,8 @@
 //!   row loop, and batches above `parallel_threshold` (0 = derived from
 //!   measured STREAM bandwidth, lazily, on the first batch large enough
 //!   to possibly split) are split across the persistent kernel-thread
-//!   pool.
+//!   pool — normalize *and* decode batches alike, as work items of the
+//!   generic batch-execution engine ([`crate::softmax::batch`]).
 //! * [`Router::Pjrt`] — AOT-compiled XLA artifacts through the PJRT
 //!   executor service ([`crate::runtime::service::PjrtService`]): the
 //!   service thread owns the non-`Send` PJRT client, picks the smallest
@@ -90,6 +91,23 @@ impl NativeEngine {
         let threshold = self.threshold_for(x.rows(), x.n());
         softmax_batch_inplace_auto(self.algorithm, self.isa, x, threshold, self.batch_threads)
             .map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Decode every row of `x` through the fused sampling subsystem under
+    /// the same threading policy as normalization: batches of at least
+    /// `parallel_threshold` elements split at row boundaries into decode
+    /// jobs on the persistent worker pool, smaller ones run on the
+    /// submitting worker.  Token ids are bit-identical either way (every
+    /// selection decision is scalar and index-ordered).
+    pub fn decode(&self, x: &RowBatch, params: &[SamplingParams]) -> Result<Vec<Choice>> {
+        sampling::sample_batch_auto(
+            self.isa,
+            x,
+            params,
+            self.threshold_for(x.rows(), x.n()),
+            self.batch_threads,
+        )
+        .map_err(|e| anyhow!("{e}"))
     }
 }
 
@@ -179,8 +197,14 @@ impl Router {
             return Err(anyhow!("empty logits row"));
         }
         // One allocation for the whole batch; rows are copied once, from
-        // the payload straight into kernel-ready row-major storage.
-        let mut x = RowBatch::with_capacity(batch.len(), n);
+        // the payload straight into kernel-ready row-major storage.  On
+        // the pjrt path the padded row count is reserved up front so the
+        // pow2 padding below never reallocates the assembled batch.
+        let cap_rows = match self {
+            Router::Pjrt { pad_pow2: true, .. } => batch.len().next_power_of_two(),
+            _ => batch.len(),
+        };
+        let mut x = RowBatch::with_capacity(cap_rows, n);
         for p in &batch {
             match p {
                 Payload::Logits(v) if v.len() == n => {
@@ -247,9 +271,11 @@ impl Router {
     /// Decode a batch of logits rows into sampled tokens through the
     /// fused sampling subsystem — one flat request batch in, one `Choice`
     /// per request out, and **no normalized row anywhere**: the kernels
-    /// select on `(m, n)` extended-exponent pairs directly.  Decode is a
-    /// native workload on both router variants (the AOT artifacts only
-    /// cover normalization).
+    /// select on `(m, n)` extended-exponent pairs directly.  Batches of
+    /// at least `parallel_threshold` elements split across the persistent
+    /// pool workers exactly like normalize batches ([`NativeEngine::decode`]).
+    /// Decode is a native workload on both router variants (the AOT
+    /// artifacts only cover normalization).
     fn execute_decode(&self, batch: Vec<Payload>) -> Result<Vec<Choice>> {
         let n = batch[0].len();
         if n == 0 {
@@ -271,7 +297,7 @@ impl Router {
             Router::Native(e) => e,
             Router::Pjrt { native, .. } => native,
         };
-        sampling::sample_batch(engine.isa, &x, &params).map_err(|e| anyhow!("{e}"))
+        engine.decode(&x, &params)
     }
 }
 

@@ -1,12 +1,15 @@
 //! `repro` — launcher CLI for the Two-Pass Softmax reproduction.
 //!
 //! Subcommands:
-//!   platform                       print the Table-3-style host report
-//!   figures <id|all> [opts]        regenerate paper tables/figures
-//!   tune [opts]                    auto-tune unroll meta-parameters (§6.3)
-//!   serve [opts]                   run the serving coordinator under load
-//!   verify [opts]                  PJRT artifacts vs native kernels parity
-//!   help                           this text
+//!
+//! ```text
+//! platform                       print the Table-3-style host report
+//! figures <id|all> [opts]        regenerate paper tables/figures
+//! tune [opts]                    auto-tune unroll meta-parameters (§6.3)
+//! serve [opts]                   run the serving coordinator under load
+//! verify [opts]                  PJRT artifacts vs native kernels parity
+//! help                           this text
+//! ```
 
 use std::time::Instant;
 

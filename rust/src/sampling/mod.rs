@@ -25,6 +25,12 @@
 //!   sampling with a caller-seeded [`Rng`] over the unnormalized extended
 //!   weights; the full-categorical case walks the extended CDF against a
 //!   target `u · Σ` instead of materializing probabilities.
+//! * [`sample_batch_auto`] — the serving entry point: decode batches of at
+//!   least `parallel_threshold` elements split at row boundaries across
+//!   the persistent batch-execution engine's worker pool
+//!   ([`crate::softmax::batch`]), exactly like normalize batches; smaller
+//!   ones decode on the submitting thread.  Ids and logprobs are
+//!   bit-identical across placements and thread counts by construction.
 //!
 //! The SIMD kernels (`sampling::avx2`, `sampling::avx512`) reuse the
 //! polynomial and `(m, n)` accumulation of `softmax/exp.rs` and the ISA
@@ -46,7 +52,7 @@ pub mod scalar;
 use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::softmax::batch::RowBatch;
+use crate::softmax::batch::{decode_chunked, note_scan_pass, plan_threads, RowBatch};
 use crate::softmax::exp::{extexp, ExtSum};
 use crate::softmax::Isa;
 use crate::util::rng::Rng;
@@ -361,6 +367,26 @@ fn validate(isa: Isa, x: &[f32]) -> Result<(), SamplingError> {
     Ok(())
 }
 
+/// The one batch-level validation shared by [`sample_batch`] and
+/// [`sample_batch_auto`], so the pooled and submitting-thread entry
+/// points can never drift apart on what they accept.
+fn validate_batch(
+    isa: Isa,
+    x: &RowBatch,
+    params: &[SamplingParams],
+) -> Result<(), SamplingError> {
+    if !isa.available() {
+        return Err(SamplingError::IsaUnavailable(isa));
+    }
+    if x.rows() > 0 && x.n() == 0 {
+        return Err(SamplingError::EmptyInput);
+    }
+    if params.len() != x.rows() && params.len() != 1 {
+        return Err(SamplingError::ParamsMismatch { rows: x.rows(), params: params.len() });
+    }
+    Ok(())
+}
+
 #[inline(always)]
 fn ext_ln(m: f32, n: f32) -> f32 {
     m.ln() + n * core::f32::consts::LN_2
@@ -387,9 +413,14 @@ fn argmax_t(isa: Isa, x: &[f32], inv_t: f32) -> Result<Choice, SamplingError> {
 }
 
 /// The `k` heaviest tokens with logprobs, heaviest first, in one fused
-/// pass (selection by exponent-major `(m, n)` comparison).
+/// pass (selection by exponent-major `(m, n)` comparison).  `k = 0`
+/// selects nothing and returns an empty vector (it would otherwise be
+/// silently clamped to 1 by the selector).
 pub fn top_k(isa: Isa, x: &[f32], k: usize) -> Result<Vec<Choice>, SamplingError> {
     validate(isa, x)?;
+    if k == 0 {
+        return Ok(Vec::new());
+    }
     let mut sel = Selector::new(k.min(x.len()));
     let s = scan_row(isa, x, 1.0, &mut sel);
     let lnz = s.ln();
@@ -415,7 +446,14 @@ pub fn top_p(
     let params =
         SamplingParams { temperature, top_p: p, ..SamplingParams::default() };
     params.validate()?;
-    let inv_t = if temperature > 0.0 { 1.0 / temperature } else { 1.0 };
+    if temperature == 0.0 {
+        // The module-wide greedy contract (temperature 0 = argmax, logprob
+        // reported under temperature 1, as in sample_row): the nucleus
+        // collapses to the single heaviest token instead of silently
+        // falling back to a temperature-1 candidate set.
+        return Ok(vec![argmax(isa, x)?]);
+    }
+    let inv_t = 1.0 / temperature;
     let (set, _mass) = nucleus(isa, x, inv_t, p, 0)?;
     Ok(set.into_iter().map(|(c, lp, _)| Choice { token: c.idx, logprob: lp }).collect())
 }
@@ -481,6 +519,11 @@ fn nucleus(
 pub fn sample_row(isa: Isa, x: &[f32], params: &SamplingParams) -> Result<Choice, SamplingError> {
     validate(isa, x)?;
     params.validate()?;
+    // One decoded row, whatever thread executes it: the engine-level
+    // scan-pass counter ([`crate::softmax::batch::scan_pass_rows`]) is
+    // bumped here so pooled and submitting-thread decode account
+    // identically — one scan pass per row, zero store passes.
+    note_scan_pass(1);
     if params.temperature == 0.0 {
         return argmax_t(isa, x, 1.0);
     }
@@ -533,20 +576,52 @@ pub fn sample_batch(
     x: &RowBatch,
     params: &[SamplingParams],
 ) -> Result<Vec<Choice>, SamplingError> {
-    if !isa.available() {
-        return Err(SamplingError::IsaUnavailable(isa));
-    }
-    if x.rows() > 0 && x.n() == 0 {
-        return Err(SamplingError::EmptyInput);
-    }
-    if params.len() != x.rows() && params.len() != 1 {
-        return Err(SamplingError::ParamsMismatch { rows: x.rows(), params: params.len() });
-    }
+    validate_batch(isa, x, params)?;
     let mut out = Vec::with_capacity(x.rows());
     for r in 0..x.rows() {
         let p = if params.len() == 1 { &params[0] } else { &params[r] };
         out.push(sample_row(isa, x.row(r), p)?);
     }
+    Ok(out)
+}
+
+/// [`sample_batch`] with the serving threading policy of the batched
+/// softmax engine ([`softmax_batch_auto`]): batches of at least
+/// `parallel_threshold` elements (rows × n) split at row boundaries into
+/// fused-decode jobs on the persistent, core-pinned worker pool; smaller
+/// batches decode on the submitting thread.  The threshold is used as
+/// given — `0` splits every batch of ≥ 2 rows; serving callers resolve
+/// the config's auto (`0`) setting to a measured value first, exactly as
+/// they do for normalization (see
+/// [`resolve_parallel_threshold`](crate::softmax::tuning::resolve_parallel_threshold)
+/// and `NativeEngine::threshold_for`).  `max_threads = 0` means "all
+/// available cores".
+///
+/// Token ids and logprobs are **bit-identical** to single-thread
+/// submitting-worker decode on every ISA and for every thread count:
+/// decoding is a pure per-row function of `(logits, params)` and every
+/// selection decision is made by the same scalar, index-ordered code
+/// whatever the row's placement.  A row error (non-finite logits, bad
+/// per-row params) fails the whole batch on both paths; a kernel panic
+/// inside a pool worker is confined to this batch (the pool survives).
+///
+/// [`softmax_batch_auto`]: crate::softmax::batch::softmax_batch_auto
+pub fn sample_batch_auto(
+    isa: Isa,
+    x: &RowBatch,
+    params: &[SamplingParams],
+    parallel_threshold: usize,
+    max_threads: usize,
+) -> Result<Vec<Choice>, SamplingError> {
+    validate_batch(isa, x, params)?;
+    let t = plan_threads(x.rows(), x.n(), parallel_threshold, max_threads);
+    if t <= 1 {
+        return sample_batch(isa, x, params);
+    }
+    // Placeholder-filled output: the pool's decode jobs overwrite every
+    // slot, and errors discard the whole vector.
+    let mut out = vec![Choice { token: 0, logprob: 0.0 }; x.rows()];
+    decode_chunked(isa, x, params, &mut out, t)?;
     Ok(out)
 }
 
@@ -733,6 +808,40 @@ mod tests {
         let set = top_p(Isa::detect_best(), &x, 0.9, 1.0).unwrap();
         // Uniform row: the nucleus needs ceil(0.9 n) tokens.
         assert!(set.len() >= (0.89 * n as f32) as usize, "only {} selected", set.len());
+    }
+
+    #[test]
+    fn sample_batch_auto_pooled_matches_submitting_thread() {
+        let mut b = RowBatch::new(6, 256);
+        let mut rng = Rng::new(31);
+        for r in 0..6 {
+            for v in b.row_mut(r) {
+                *v = rng.normal_f32(0.0, 5.0);
+            }
+        }
+        let params: Vec<SamplingParams> = (0..6usize)
+            .map(|i| SamplingParams {
+                seed: i as u64,
+                top_k: (i % 3) * 8,
+                ..SamplingParams::default()
+            })
+            .collect();
+        let isa = Isa::detect_best();
+        let want = sample_batch(isa, &b, &params).unwrap();
+        // Threshold 1 forces the pool for every t > 1; 0 = all cores.
+        for threads in [1usize, 2, 3, 0] {
+            let got = sample_batch_auto(isa, &b, &params, 1, threads).unwrap();
+            assert_eq!(got, want, "threads={threads}");
+        }
+        // Pooled row errors propagate as errors (not panics) and the
+        // pool keeps serving afterwards.
+        let nanb = RowBatch::from_vec(vec![f32::NAN; 4 * 64], 4, 64);
+        assert_eq!(
+            sample_batch_auto(isa, &nanb, &[SamplingParams::greedy()], 1, 2),
+            Err(SamplingError::NoCandidates)
+        );
+        let again = sample_batch_auto(isa, &b, &params, 1, 2).unwrap();
+        assert_eq!(again, want, "pool must survive a failed decode batch");
     }
 
     #[test]

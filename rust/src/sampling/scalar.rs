@@ -57,19 +57,27 @@ pub fn scan_select(x: &[f32], inv_t: f32, sel: &mut Selector) -> ExtSum {
 /// `u`).  One read of `x`, no writes, no division — the comparison stays
 /// in the `(m, n)` representation throughout.  Sequential by nature (a
 /// prefix sum), hence scalar on every ISA.
+///
+/// If rounding keeps the serial prefix sum below the target for a draw
+/// at the very top of the CDF (the target comes from the *split*
+/// accumulation of the preceding scan, so the two sums can disagree by a
+/// few ulp), the walk falls back to the last index that actually
+/// accumulated weight — never to a NaN slot, which cannot be drawn.
 pub fn scan_cdf(x: &[f32], inv_t: f32, target: &ExtSum) -> usize {
     let mut c = ExtSum::default();
+    let mut last_weighted = 0usize;
     for (i, &v) in x.iter().enumerate() {
         let xs = v * inv_t;
         if xs.is_nan() {
             continue; // no weight; cannot be drawn
         }
+        last_weighted = i;
         c.add_exp(xs);
         if ext_sum_ge(&c, target) {
             return i;
         }
     }
-    x.len() - 1
+    last_weighted
 }
 
 #[cfg(test)]
@@ -97,5 +105,17 @@ mod tests {
         // A target at/above the total saturates at the last index.
         let over = ExtSum { m: total.m * 2.0, n: total.n };
         assert_eq!(scan_cdf(&x, 1.0, &over), 99);
+    }
+
+    #[test]
+    fn scan_cdf_fallback_skips_trailing_nan() {
+        // An over-the-total target must saturate at the last index that
+        // accumulated weight, never at an undrawable NaN slot.
+        let mut x = vec![0.0f32; 8];
+        x[6] = 1.0;
+        x[7] = f32::NAN;
+        let total = crate::softmax::scalar::pass_accum_extexp(&x[..7]);
+        let over = ExtSum { m: total.m * 4.0, n: total.n };
+        assert_eq!(scan_cdf(&x, 1.0, &over), 6);
     }
 }

@@ -52,6 +52,26 @@
 //! so NT is never selected for it, and the in-place path keeps NT off
 //! (its output lines are the just-read input lines — already in cache).
 //!
+//! # Generic batch-execution engine
+//!
+//! The persistent worker pool is not normalize-specific: its work item is
+//! a `BatchJob` covering every row-parallel workload of the serving path —
+//! in-place and out-of-place normalization (temporal or NT stores), the
+//! two-pass algorithm's pass-1 `(m, n)` accumulation
+//! ([`accum_extexp_batch_auto`]), and fused decode (token sampling
+//! straight off the extended-exponent pairs, submitted by
+//! [`sample_batch_auto`]).  Each job carries its own result channel; the
+//! submitting call blocks until every job of its batch is acknowledged
+//! (the lifetime guarantee for the borrowed row ranges), a kernel panic
+//! is confined to the submitting batch (the pool survives), and a
+//! recoverable kernel error (decode only) travels back over the same
+//! channel instead of poisoning the worker.  Row chunking never changes
+//! results: normalization is row-independent and bit-identical whatever
+//! the split, and every decode selection decision is made by scalar
+//! index-ordered code, so token ids are identical across chunkings, ISAs
+//! and thread counts by construction.
+//!
+//! [`sample_batch_auto`]: crate::sampling::sample_batch_auto
 //! [`softmax_with`]: crate::softmax::softmax_with
 
 use std::alloc::{alloc, alloc_zeroed, dealloc, handle_alloc_error, Layout};
@@ -62,6 +82,7 @@ use std::sync::{mpsc, Mutex, OnceLock};
 #[cfg(target_arch = "x86_64")]
 use super::{avx2, avx512};
 use super::{exp::ExtSum, scalar, Algorithm, Isa, SoftmaxError};
+use crate::sampling::{sample_row, Choice, SamplingError, SamplingParams};
 
 /// Alignment of every [`RowBatch`] allocation: one cache line, and the
 /// requirement for `MOVNTPS`/`VMOVNTPS` streaming stores on every ISA.
@@ -430,10 +451,16 @@ pub fn softmax_batch_parallel(
     Ok(())
 }
 
-/// The one threading policy shared by every `_auto` entry point: how many
+/// The one threading policy shared by every `_auto` entry point — the
+/// normalize paths here and decode in [`crate::sampling`]: how many
 /// chunks to split a `rows × n` batch into (1 = stay single-threaded).
 /// `max_threads = 0` means "all available cores".
-fn plan_threads(rows: usize, n: usize, parallel_threshold: usize, max_threads: usize) -> usize {
+pub(crate) fn plan_threads(
+    rows: usize,
+    n: usize,
+    parallel_threshold: usize,
+    max_threads: usize,
+) -> usize {
     let threads = if max_threads == 0 { available_threads() } else { max_threads };
     let t = threads.clamp(1, rows.max(1));
     if t <= 1 || rows < 2 || rows * n < parallel_threshold {
@@ -521,31 +548,75 @@ pub fn softmax_batch_inplace_auto(
 /// tokens without a scale pass ever running.
 pub fn accum_extexp_batch(isa: Isa, x: &RowBatch) -> Result<Vec<ExtSum>, SoftmaxError> {
     validate_inplace(x, isa)?;
-    let mut out = Vec::with_capacity(x.rows());
+    let mut out = vec![ExtSum::default(); x.rows()];
+    accum_rows(isa, x.as_slice(), x.n().max(1), &mut out);
+    Ok(out)
+}
+
+/// [`accum_extexp_batch`] with the serving threading policy of
+/// [`softmax_batch_auto`]: batches of at least `parallel_threshold`
+/// elements split at row boundaries across the persistent worker pool
+/// (accumulation jobs in the generic `BatchJob` queue), smaller ones run
+/// on the submitting thread.  Per-row sums are identical whatever the
+/// split — each row's accumulator is computed by the same pass kernel on
+/// one thread.
+pub fn accum_extexp_batch_auto(
+    isa: Isa,
+    x: &RowBatch,
+    parallel_threshold: usize,
+    max_threads: usize,
+) -> Result<Vec<ExtSum>, SoftmaxError> {
+    validate_inplace(x, isa)?;
+    let (rows, n) = (x.rows(), x.n());
+    let t = plan_threads(rows, n, parallel_threshold, max_threads);
+    if t <= 1 {
+        return accum_extexp_batch(isa, x);
+    }
+    let mut out = vec![ExtSum::default(); rows];
+    let x_ptr = x.as_slice().as_ptr();
+    let out_ptr = out.as_mut_ptr();
+    let kinds = chunk_jobs(rows, t, |r0, rc| JobKind::Accum {
+        isa,
+        // SAFETY: r0 < rows and r0 + rc <= rows, so both offsets stay
+        // inside the batch and `out` allocations (one raw pointer per
+        // buffer, taken once — see [`run_chunked`] on aliasing).
+        x: unsafe { x_ptr.add(r0 * n) },
+        elems: rc * n,
+        n,
+        out: unsafe { out_ptr.add(r0) },
+    });
+    submit_jobs(kinds, t).expect("accumulation jobs report no recoverable errors");
+    Ok(out)
+}
+
+/// The blocked row loop of pass-1 accumulation with the ISA dispatch
+/// hoisted out: one `ExtSum` per row of `xs` (stride `n`) into `out`.
+/// Shared by the single-threaded entry point and the pool's `Accum` jobs.
+fn accum_rows(isa: Isa, xs: &[f32], n: usize, out: &mut [ExtSum]) {
+    debug_assert_eq!(xs.len(), out.len() * n);
     match isa {
         Isa::Scalar => {
-            for r in 0..x.rows() {
-                out.push(scalar::pass_accum_extexp(x.row(r)));
+            for (r, o) in out.iter_mut().enumerate() {
+                *o = scalar::pass_accum_extexp(&xs[r * n..r * n + n]);
             }
         }
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: availability checked by validate_inplace.
+        // SAFETY: availability checked by the dispatching caller.
         Isa::Avx2 => unsafe {
-            for r in 0..x.rows() {
-                out.push(avx2::pass_accum_extexp::<8>(x.row(r)));
+            for (r, o) in out.iter_mut().enumerate() {
+                *o = avx2::pass_accum_extexp::<8>(&xs[r * n..r * n + n]);
             }
         },
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: availability checked by validate_inplace.
+        // SAFETY: availability checked by the dispatching caller.
         Isa::Avx512 => unsafe {
-            for r in 0..x.rows() {
-                out.push(avx512::pass_accum_extexp::<8>(x.row(r)));
+            for (r, o) in out.iter_mut().enumerate() {
+                *o = avx512::pass_accum_extexp::<8>(&xs[r * n..r * n + n]);
             }
         },
         #[cfg(not(target_arch = "x86_64"))]
         _ => unreachable!("non-scalar ISA unavailable on this arch"),
     }
-    Ok(out)
 }
 
 /// Rows whose normalized output was written by a store/scale pass since
@@ -565,6 +636,27 @@ static STORE_PASS_ROWS: AtomicUsize = AtomicUsize::new(0);
 #[inline(always)]
 pub(crate) fn note_store_pass(rows: usize) {
     STORE_PASS_ROWS.fetch_add(rows, Ordering::Relaxed);
+}
+
+/// Rows decoded by the fused sampling subsystem since process start — the
+/// scan-side counterpart of [`store_pass_rows`], bumped exactly once per
+/// decoded row by **every** execution placement (the submitting worker
+/// and the pool's decode jobs alike).  Test hook: decode-path tests
+/// assert one decode per row regardless of where the rows executed, and
+/// that this counter moves while [`store_pass_rows`] stays put.  (The
+/// finer-grained [`scan_rows_total`] counts fused row *traversals*, which
+/// can exceed one per row when a nucleus scan grows its budget.)
+///
+/// [`scan_rows_total`]: crate::sampling::scan_rows_total
+pub fn scan_pass_rows() -> usize {
+    SCAN_PASS_ROWS.load(Ordering::Relaxed)
+}
+
+static SCAN_PASS_ROWS: AtomicUsize = AtomicUsize::new(0);
+
+#[inline(always)]
+pub(crate) fn note_scan_pass(rows: usize) {
+    SCAN_PASS_ROWS.fetch_add(rows, Ordering::Relaxed);
 }
 
 /// Logical CPUs available to this process (1 if detection fails).  Cached:
@@ -631,41 +723,91 @@ fn run_rows(alg: Algorithm, isa: Isa, x: &[f32], y: &mut [f32], n: usize, block:
 }
 
 // ---------------------------------------------------------------------------
-// Persistent worker pool.  Replaces the previous `thread::scope` spawn per
-// batch: workers are spawned lazily, sized by the thread counts actually
-// requested (`batch_threads` on the serving path), growing up to the
-// host's logical CPU count and never shrinking; each worker is pinned to
-// a core where the platform layer supports it and fed row-range work
-// items over its own channel.  The submitting call blocks until every
-// chunk is acknowledged, which is what keeps the raw-pointer borrows in
-// the work items valid.
+// Persistent worker pool: the generic batch-execution engine.  Replaces
+// the previous `thread::scope` spawn per batch: workers are spawned
+// lazily, sized by the thread counts actually requested (`batch_threads`
+// on the serving path), growing up to the host's logical CPU count and
+// never shrinking; each worker is pinned to a core where the platform
+// layer supports it and fed row-range work items over its own channel.
+// The work item is a `BatchJob` — normalize, pass-1 accumulation, or
+// fused decode — each carrying its own result channel.  The submitting
+// call blocks until every job is acknowledged, which is what keeps the
+// raw-pointer borrows in the work items valid.
 // ---------------------------------------------------------------------------
 
-/// One row-range work item.  Raw pointers because the pool threads are
-/// `'static` while the batch borrows are not; see the safety argument on
-/// [`run_chunked`].
-struct Chunk {
-    alg: Algorithm,
-    isa: Isa,
-    x: *const f32,
-    y: *mut f32,
-    elems: usize,
-    n: usize,
-    block: usize,
-    nt: bool,
-    /// Acknowledgement: `true` = chunk completed, `false` = kernel panicked.
-    done: mpsc::SyncSender<bool>,
+/// One row-range work item for the generic batch-execution engine.  Raw
+/// pointers because the pool threads are `'static` while the batch
+/// borrows are not; see the safety argument on [`submit_jobs`].
+enum JobKind {
+    /// Normalize `elems / n` rows (in place when `x == y`; the aliasing
+    /// contract of [`softmax_batch_inplace`] — every pass reads `x[i]`
+    /// strictly before writing `y[i]`).
+    Normalize {
+        alg: Algorithm,
+        isa: Isa,
+        x: *const f32,
+        y: *mut f32,
+        elems: usize,
+        n: usize,
+        block: usize,
+        nt: bool,
+    },
+    /// Pass-1 `(m, n)` accumulation: one [`ExtSum`] per row into `out`.
+    Accum {
+        isa: Isa,
+        x: *const f32,
+        elems: usize,
+        n: usize,
+        out: *mut ExtSum,
+    },
+    /// Fused decode: sample one token per row into `out`.  `params` is
+    /// the *whole* batch's parameter slice (broadcast when its length is
+    /// 1, otherwise indexed from `base_row`), so per-row knobs survive
+    /// any chunking.
+    Decode {
+        isa: Isa,
+        x: *const f32,
+        elems: usize,
+        n: usize,
+        params: *const SamplingParams,
+        params_len: usize,
+        base_row: usize,
+        out: *mut Choice,
+    },
 }
 
-// SAFETY: the submitter keeps the x/y borrows alive until it has received
-// `done` for every chunk, and chunks reference disjoint output ranges.
-unsafe impl Send for Chunk {}
+/// What one executed job reports back on its result channel.
+enum JobOutcome {
+    /// Job completed; its output range is fully written.
+    Done,
+    /// The kernel returned a recoverable error (decode jobs only — a
+    /// non-finite row, bad per-row params).  Fails the submitting batch
+    /// without panicking it.
+    Failed(SamplingError),
+    /// The kernel panicked; the pool worker survives, the submitting
+    /// batch re-panics.
+    Panicked,
+}
+
+struct BatchJob {
+    kind: JobKind,
+    /// Submission index within the batch (chunks are built in row order),
+    /// echoed back with the outcome so the submitter can report the
+    /// earliest failure deterministically.
+    seq: usize,
+    done: mpsc::SyncSender<(usize, JobOutcome)>,
+}
+
+// SAFETY: the submitter keeps every borrow behind the raw pointers alive
+// until it has received an outcome for every job, and jobs reference
+// disjoint output ranges.
+unsafe impl Send for BatchJob {}
 
 struct WorkerPool {
     /// Worker lanes (one channel per worker), grown on demand up to the
     /// host's logical CPU count.  The mutex guards growth and sender
     /// cloning only — it is never held across a send or kernel work.
-    lanes: Mutex<Vec<mpsc::Sender<Chunk>>>,
+    lanes: Mutex<Vec<mpsc::Sender<BatchJob>>>,
 }
 
 static POOL: OnceLock<WorkerPool> = OnceLock::new();
@@ -681,22 +823,22 @@ impl WorkerPool {
     /// Ensure at least `want` workers exist (clamped to the core count —
     /// more can't help a memory-bound kernel) and return clones of the
     /// current lane senders for lock-free submission.
-    fn lanes_for(&self, want: usize) -> Vec<mpsc::Sender<Chunk>> {
+    fn lanes_for(&self, want: usize) -> Vec<mpsc::Sender<BatchJob>> {
         let cpus = available_threads().max(1);
         let want = want.clamp(1, cpus);
         let mut lanes = self.lanes.lock().unwrap();
         while lanes.len() < want {
             let i = lanes.len();
-            let (tx, rx) = mpsc::channel::<Chunk>();
+            let (tx, rx) = mpsc::channel::<BatchJob>();
             std::thread::Builder::new()
-                .name(format!("softmax-pool-{i}"))
+                .name(format!("batch-pool-{i}"))
                 .spawn(move || {
                     // Best-effort affinity: one worker per core where the
                     // platform supports pinning (Linux x86_64).
                     let _ = crate::platform::pin_current_thread(i % cpus);
                     worker_loop(&rx);
                 })
-                .expect("spawn softmax pool worker");
+                .expect("spawn batch pool worker");
             // Counted under the lock so (workers, spawned) snapshots are
             // consistent — see [`pool_stats`].
             POOL_SPAWNS.fetch_add(1, Ordering::Relaxed);
@@ -734,33 +876,162 @@ pub fn pool_stats() -> (usize, usize) {
     }
 }
 
-fn worker_loop(rx: &mpsc::Receiver<Chunk>) {
-    while let Ok(c) = rx.recv() {
+fn worker_loop(rx: &mpsc::Receiver<BatchJob>) {
+    while let Ok(BatchJob { kind, seq, done }) = rx.recv() {
         // Confine a kernel panic to the submitting batch (which re-panics
-        // on the `false` ack) instead of killing this worker and poisoning
-        // every future batch routed to its lane.
-        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            // SAFETY: the submitter blocks in `run_chunked` until this
-            // chunk's `done` is acknowledged, so x/y outlive this use;
-            // chunks cover disjoint row ranges of y.
-            let (x, y) = unsafe {
-                (
-                    std::slice::from_raw_parts(c.x, c.elems),
-                    std::slice::from_raw_parts_mut(c.y, c.elems),
-                )
+        // on the `Panicked` outcome) instead of killing this worker and
+        // poisoning every future batch routed to its lane.
+        let outcome =
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_job(kind))) {
+                Ok(Ok(())) => JobOutcome::Done,
+                Ok(Err(e)) => JobOutcome::Failed(e),
+                Err(_) => JobOutcome::Panicked,
             };
-            run_rows(c.alg, c.isa, x, y, c.n, c.block, c.nt);
-        }))
-        .is_ok();
         // `run_rows` fences after NT blocks, so the data is globally
         // visible before this release-ordered acknowledgement.
-        let _ = c.done.send(ok);
+        let _ = done.send((seq, outcome));
     }
 }
 
-/// Split `xs`/`ys` into `t` contiguous row chunks and execute them on the
-/// persistent pool, blocking until all are done (that blocking is the
-/// lifetime guarantee for the raw pointers handed to the workers).
+/// Execute one work item on the calling pool worker.
+///
+/// SAFETY (all pointer reconstructions): the submitter blocks in
+/// [`submit_jobs`] until this job's outcome is acknowledged, so every
+/// pointed-to range outlives this call; jobs of one batch cover disjoint
+/// output ranges.  The `Normalize` x/y pair may alias (in-place batches),
+/// under the same pass-ordering contract as [`softmax_batch_inplace`].
+fn run_job(kind: JobKind) -> Result<(), SamplingError> {
+    match kind {
+        JobKind::Normalize { alg, isa, x, y, elems, n, block, nt } => {
+            // SAFETY: see function-level argument.
+            let (xs, ys) = unsafe {
+                (
+                    std::slice::from_raw_parts(x, elems),
+                    std::slice::from_raw_parts_mut(y, elems),
+                )
+            };
+            run_rows(alg, isa, xs, ys, n, block, nt);
+            Ok(())
+        }
+        JobKind::Accum { isa, x, elems, n, out } => {
+            // SAFETY: see function-level argument.
+            let (xs, outs) = unsafe {
+                (
+                    std::slice::from_raw_parts(x, elems),
+                    std::slice::from_raw_parts_mut(out, elems / n),
+                )
+            };
+            accum_rows(isa, xs, n, outs);
+            Ok(())
+        }
+        JobKind::Decode { isa, x, elems, n, params, params_len, base_row, out } => {
+            // SAFETY: see function-level argument.
+            let (xs, ps, outs) = unsafe {
+                (
+                    std::slice::from_raw_parts(x, elems),
+                    std::slice::from_raw_parts(params, params_len),
+                    std::slice::from_raw_parts_mut(out, elems / n),
+                )
+            };
+            decode_rows(isa, xs, n, ps, base_row, outs)
+        }
+    }
+}
+
+/// Decode `out.len()` rows of `xs` (stride `n`) through the fused
+/// sampler.  `params` is the whole batch's parameter slice; `base_row`
+/// maps this chunk's local rows onto it.  A row error aborts the chunk —
+/// the submitter discards the batch, so partially written outputs are
+/// never observed.  [`sample_row`] bumps the [`scan_pass_rows`] counter
+/// per row, so pooled and unpooled decode account identically.
+fn decode_rows(
+    isa: Isa,
+    xs: &[f32],
+    n: usize,
+    params: &[SamplingParams],
+    base_row: usize,
+    out: &mut [Choice],
+) -> Result<(), SamplingError> {
+    for (r, o) in out.iter_mut().enumerate() {
+        let p = if params.len() == 1 { &params[0] } else { &params[base_row + r] };
+        *o = sample_row(isa, &xs[r * n..r * n + n], p)?;
+    }
+    Ok(())
+}
+
+/// Split `rows` into up to `t` contiguous chunks and build one job per
+/// chunk via `make(first_row, chunk_rows)` — the one chunking rule every
+/// pooled workload (normalize, accum, decode) shares, so a future tweak
+/// to the split cannot desynchronize them.
+fn chunk_jobs(rows: usize, t: usize, mut make: impl FnMut(usize, usize) -> JobKind) -> Vec<JobKind> {
+    if rows == 0 {
+        return Vec::new();
+    }
+    let chunk_rows = rows.div_ceil(t.max(1));
+    let mut kinds = Vec::with_capacity(rows.div_ceil(chunk_rows));
+    let mut r0 = 0;
+    while r0 < rows {
+        let rc = chunk_rows.min(rows - r0);
+        kinds.push(make(r0, rc));
+        r0 += rc;
+    }
+    kinds
+}
+
+/// Submit one pool job per element of `kinds`, round-robin across at
+/// least `t` worker lanes, and block until every job acknowledges — that
+/// blocking is the lifetime guarantee for the raw pointers inside the
+/// work items.  Panics if any job panicked (same blast radius as the old
+/// `thread::scope` design: the submitting batch dies, the pool survives);
+/// otherwise returns the recoverable error of the *lowest-indexed* failed
+/// job — chunks are built in row order and a chunk fails at its first bad
+/// row, so this is the same error single-threaded execution reports,
+/// whatever the completion order.
+fn submit_jobs(kinds: Vec<JobKind>, t: usize) -> Result<(), SamplingError> {
+    let jobs = kinds.len();
+    let lanes = pool().lanes_for(t);
+    let lanes_n = lanes.len();
+    let start = NEXT_LANE.fetch_add(jobs, Ordering::Relaxed);
+    // Capacity = jobs: workers never block acknowledging.
+    let (done_tx, done_rx) = mpsc::sync_channel::<(usize, JobOutcome)>(jobs);
+    for (i, kind) in kinds.into_iter().enumerate() {
+        lanes[start.wrapping_add(i) % lanes_n]
+            .send(BatchJob { kind, seq: i, done: done_tx.clone() })
+            .expect("batch pool worker disappeared");
+    }
+    drop(done_tx);
+    let mut panicked = false;
+    let mut failed: Option<(usize, SamplingError)> = None;
+    for _ in 0..jobs {
+        match done_rx.recv() {
+            Ok((_, JobOutcome::Done)) => {}
+            Ok((i, JobOutcome::Failed(e))) => {
+                if failed.as_ref().map_or(true, |(fi, _)| i < *fi) {
+                    failed = Some((i, e));
+                }
+            }
+            // A job dropped unacknowledged (worker torn down) is
+            // indistinguishable from a panic: nothing sane can be
+            // returned for this batch.
+            Ok((_, JobOutcome::Panicked)) | Err(_) => panicked = true,
+        }
+    }
+    if panicked {
+        panic!("batch pool worker panicked mid-batch");
+    }
+    match failed {
+        None => Ok(()),
+        Some((_, e)) => Err(e),
+    }
+}
+
+/// Split `xs`/`ys` into `t` contiguous row chunks and execute them as
+/// `Normalize` jobs on the persistent pool, blocking until all are done.
+///
+/// The per-chunk pointers are offsets of *one* raw pointer taken from
+/// each borrow up front (here and in the other chunked submitters):
+/// re-borrowing the output slice per chunk would invalidate the pointers
+/// already handed to earlier jobs under the aliasing model.
 #[allow(clippy::too_many_arguments)]
 fn run_chunked(
     alg: Algorithm,
@@ -773,54 +1044,59 @@ fn run_chunked(
     t: usize,
 ) {
     let rows = xs.len() / n;
-    let chunk_rows = rows.div_ceil(t);
-    let chunks = rows.div_ceil(chunk_rows);
-    let lanes = pool().lanes_for(t);
-    let lanes_n = lanes.len();
-    let start = NEXT_LANE.fetch_add(chunks, Ordering::Relaxed);
-    // Capacity = chunks: workers never block acknowledging.
-    let (done_tx, done_rx) = mpsc::sync_channel::<bool>(chunks);
-    let mut xs: &[f32] = xs;
-    let mut ys: &mut [f32] = ys;
-    let mut sent = 0usize;
-    while !xs.is_empty() {
-        let take = (chunk_rows * n).min(xs.len());
-        let (xc, x_rest) = xs.split_at(take);
-        xs = x_rest;
-        let (yc, y_rest) = std::mem::take(&mut ys).split_at_mut(take);
-        ys = y_rest;
-        let item = Chunk {
-            alg,
-            isa,
-            x: xc.as_ptr(),
-            y: yc.as_mut_ptr(),
-            elems: take,
-            n,
-            block,
-            nt,
-            done: done_tx.clone(),
-        };
-        lanes[start.wrapping_add(sent) % lanes_n]
-            .send(item)
-            .expect("softmax pool worker disappeared");
-        sent += 1;
+    let x_ptr = xs.as_ptr();
+    let y_ptr = ys.as_mut_ptr();
+    let kinds = chunk_jobs(rows, t, |r0, rc| JobKind::Normalize {
+        alg,
+        isa,
+        // SAFETY: r0 < rows and r0 + rc <= rows, so both offsets stay
+        // inside the xs/ys allocations.
+        x: unsafe { x_ptr.add(r0 * n) },
+        y: unsafe { y_ptr.add(r0 * n) },
+        elems: rc * n,
+        n,
+        block,
+        nt,
+    });
+    submit_jobs(kinds, t).expect("normalize jobs report no recoverable errors");
+}
+
+/// Split a decode batch into `t` contiguous row chunks and execute them
+/// as `Decode` jobs on the persistent pool.  Called by
+/// [`sample_batch_auto`](crate::sampling::sample_batch_auto); `out` must
+/// hold exactly one [`Choice`] slot per row.  Token ids and logprobs are
+/// bit-identical to submitting-thread decode for any `t`: every row is
+/// decoded by the same scalar index-ordered selection code whatever its
+/// placement.
+pub(crate) fn decode_chunked(
+    isa: Isa,
+    x: &RowBatch,
+    params: &[SamplingParams],
+    out: &mut [Choice],
+    t: usize,
+) -> Result<(), SamplingError> {
+    let (rows, n) = (x.rows(), x.n());
+    debug_assert_eq!(out.len(), rows);
+    if rows == 0 {
+        return Ok(());
     }
-    debug_assert_eq!(sent, chunks);
-    drop(done_tx);
-    let mut failed = false;
-    for _ in 0..sent {
-        match done_rx.recv() {
-            Ok(ok) => failed |= !ok,
-            // Chunk dropped unacknowledged (worker torn down): treat as
-            // failed — nothing sane can be returned for this batch.
-            Err(_) => failed = true,
-        }
-    }
-    if failed {
-        // Same blast radius as the old thread::scope design: the batch
-        // that hit the kernel panic dies, the pool survives for the next.
-        panic!("softmax pool worker panicked mid-batch");
-    }
+    let t = t.clamp(1, rows);
+    let x_ptr = x.as_slice().as_ptr();
+    let out_ptr = out.as_mut_ptr();
+    let kinds = chunk_jobs(rows, t, |r0, rc| JobKind::Decode {
+        isa,
+        // SAFETY: r0 < rows and r0 + rc <= rows, so both offsets stay
+        // inside the batch and `out` buffers (one raw pointer per
+        // buffer, taken once — see [`run_chunked`] on aliasing).
+        x: unsafe { x_ptr.add(r0 * n) },
+        elems: rc * n,
+        n,
+        params: params.as_ptr(),
+        params_len: params.len(),
+        base_row: r0,
+        out: unsafe { out_ptr.add(r0) },
+    });
+    submit_jobs(kinds, t)
 }
 
 // ---------------------------------------------------------------------------
@@ -1238,6 +1514,25 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn accum_auto_parallel_matches_serial_bitwise() {
+        let x = random_batch(9, 515, 23);
+        for isa in Isa::detect_all() {
+            let want = accum_extexp_batch(isa, &x).unwrap();
+            // threshold 1 forces the pool for every t > 1; 0 = all cores.
+            for threads in [1usize, 2, 4, 0] {
+                let got = accum_extexp_batch_auto(isa, &x, 1, threads).unwrap();
+                assert_eq!(got.len(), want.len());
+                for (r, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g.m.to_bits(), w.m.to_bits(), "{isa} t={threads} row {r}");
+                    assert_eq!(g.n.to_bits(), w.n.to_bits(), "{isa} t={threads} row {r}");
+                }
+            }
+        }
+        let empty = RowBatch::new(0, 64);
+        assert!(accum_extexp_batch_auto(Isa::Scalar, &empty, 1, 4).unwrap().is_empty());
     }
 
     #[test]

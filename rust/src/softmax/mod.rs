@@ -7,7 +7,9 @@
 //! batches (64-byte-aligned [`RowBatch`]) with hoisted dispatch,
 //! cache-blocked row loops, streaming (non-temporal) scale stores for
 //! out-of-cache batches, an in-place path, and a persistent core-pinned
-//! worker pool — the serving hot path.
+//! worker pool generalized into a batch-execution engine — its job queue
+//! runs normalization, pass-1 `(m, n)` accumulation, and fused decode
+//! ([`crate::sampling`]) work items alike.  This is the serving hot path.
 //!
 //! ```
 //! use two_pass_softmax::softmax::{softmax, Algorithm};
@@ -29,8 +31,9 @@ pub mod tuning;
 use std::fmt;
 
 pub use batch::{
-    accum_extexp_batch, softmax_batch, softmax_batch_auto, softmax_batch_inplace,
-    softmax_batch_parallel, store_pass_rows, NtPolicy, RowBatch,
+    accum_extexp_batch, accum_extexp_batch_auto, scan_pass_rows, softmax_batch,
+    softmax_batch_auto, softmax_batch_inplace, softmax_batch_parallel, store_pass_rows,
+    NtPolicy, RowBatch,
 };
 pub use dispatch::Isa;
 pub use exp::ExtSum;
@@ -165,7 +168,7 @@ pub fn softmax_with(
 }
 
 /// In-place softmax (pass structure of Alg. 2, whose last pass is naturally
-/// in place; the store-exp pass reads x[i] strictly before writing y[i]).
+/// in place; the store-exp pass reads `x[i]` strictly before writing `y[i]`).
 pub fn softmax_inplace(x: &mut [f32]) -> Result<(), SoftmaxError> {
     if x.is_empty() {
         return Err(SoftmaxError::EmptyInput);

@@ -3,7 +3,7 @@
 //! The paper expresses "high-level optimization parameters, such as unroll
 //! factor for the loops and the number of accumulator variables in
 //! reduction functions, as meta-parameters of the templated implementations,
-//! and employ[s] auto-tuning to discover their optimal values."  This module
+//! and employ\[s\] auto-tuning to discover their optimal values."  This module
 //! is that auto-tuner: it times every `(pass, isa, unroll)` combination on a
 //! caller-supplied working-set size and reports the winners.
 //!

@@ -18,15 +18,15 @@ use crate::util::stats;
 /// One STREAM kernel.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum StreamKernel {
-    /// c[i] = a[i] — 2 words of traffic per element.
+    /// `c[i] = a[i]` — 2 words of traffic per element.
     Copy,
-    /// b[i] = q·c[i] — 2 words.
+    /// `b[i] = q·c[i]` — 2 words.
     Scale,
-    /// c[i] = a[i] + b[i] — 3 words.
+    /// `c[i] = a[i] + b[i]` — 3 words.
     Add,
-    /// a[i] = b[i] + q·c[i] — 3 words.
+    /// `a[i] = b[i] + q·c[i]` — 3 words.
     Triad,
-    /// a[i] = q·a[i] (in place) — 2 words. Not in classic STREAM; the
+    /// `a[i] = q·a[i]` (in place) — 2 words. Not in classic STREAM; the
     /// paper's Alg. 2 pass 3 equivalent.
     ScaleInplace,
 }

@@ -1,0 +1,174 @@
+//! Pooled decode integration tests: the generic batch-execution engine
+//! must run decode batches above `parallel_threshold` on the persistent
+//! pool workers with bit-identical token ids/logprobs to submitting-thread
+//! decode, without per-batch thread spawns, and with the scan-pass
+//! accounting (`scan_pass_rows`) advancing exactly once per row on every
+//! execution placement while the store-pass counter stays put.
+//!
+//! The pool and the pass counters are process-global, so every test in
+//! this binary takes `GATE` first — the default multi-threaded test
+//! runner must not interleave pool- or counter-sensitive sections.
+
+use std::sync::Mutex;
+
+use two_pass_softmax::config::ServeConfig;
+use two_pass_softmax::coordinator::{Executed, Payload, Router};
+use two_pass_softmax::sampling::{self, SamplingParams};
+use two_pass_softmax::softmax::batch::{
+    available_threads, pool_spawned_total, pool_stats, pool_workers, scan_pass_rows,
+    store_pass_rows, RowBatch,
+};
+use two_pass_softmax::softmax::Isa;
+use two_pass_softmax::util::rng::Rng;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn random_batch(rows: usize, n: usize, seed: u64) -> RowBatch {
+    let mut rng = Rng::new(seed);
+    let mut b = RowBatch::new(rows, n);
+    for r in 0..rows {
+        for v in b.row_mut(r) {
+            *v = rng.normal_f32(0.0, 6.0);
+        }
+    }
+    b
+}
+
+/// Per-row params covering every decode code path: greedy, top-k,
+/// nucleus, and combined temperature/top-k/top-p categorical sampling.
+fn mixed_params(rows: usize) -> Vec<SamplingParams> {
+    (0..rows)
+        .map(|i| match i % 4 {
+            0 => SamplingParams::greedy(),
+            1 => SamplingParams { top_k: 8, seed: i as u64, ..SamplingParams::default() },
+            2 => SamplingParams { top_p: 0.9, seed: i as u64, ..SamplingParams::default() },
+            _ => SamplingParams {
+                temperature: 0.7,
+                top_k: 16,
+                top_p: 0.95,
+                seed: i as u64,
+                ..SamplingParams::default()
+            },
+        })
+        .collect()
+}
+
+#[test]
+fn pooled_decode_is_bit_identical_across_thread_counts_and_isas() {
+    let _g = lock();
+    let (rows, n) = (16usize, 768usize);
+    let x = random_batch(rows, n, 2024);
+    let params = mixed_params(rows);
+    for isa in Isa::detect_all() {
+        // usize::MAX threshold = always the submitting thread.
+        let want = sampling::sample_batch_auto(isa, &x, &params, usize::MAX, 1).unwrap();
+        assert_eq!(want, sampling::sample_batch(isa, &x, &params).unwrap());
+        // Threshold 1 forces the pool for every t > 1; 0 = all cores.
+        for threads in [1usize, 2, available_threads(), 0] {
+            let got = sampling::sample_batch_auto(isa, &x, &params, 1, threads).unwrap();
+            for (r, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.token, w.token, "{isa} threads={threads} row {r}");
+                assert_eq!(
+                    g.logprob.to_bits(),
+                    w.logprob.to_bits(),
+                    "{isa} threads={threads} row {r}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_batches_above_threshold_run_on_pool_workers_without_respawns() {
+    let _g = lock();
+    let (rows, n) = (8usize, 1024usize);
+    let x = random_batch(rows, n, 7);
+    let greedy = [SamplingParams::greedy()];
+    let cores = available_threads();
+
+    // Force the pool (threshold 1, two workers) and check placement via
+    // the pool_workers hook: the pool must have grown to serve decode.
+    let out = sampling::sample_batch_auto(Isa::detect_best(), &x, &greedy, 1, 2).unwrap();
+    assert_eq!(out.len(), rows);
+    if cores >= 2 {
+        assert!(
+            pool_workers() >= 2,
+            "decode above the threshold must execute on pool workers (pool has {})",
+            pool_workers()
+        );
+    }
+
+    // Steady state: repeated pooled decode spawns no further threads and
+    // stays deterministic.
+    let spawned_before = pool_spawned_total();
+    for _ in 0..10 {
+        let again = sampling::sample_batch_auto(Isa::detect_best(), &x, &greedy, 1, 2).unwrap();
+        assert_eq!(again, out, "pooled decode must be deterministic");
+    }
+    assert_eq!(
+        pool_spawned_total(),
+        spawned_before,
+        "repeated pooled decode must not spawn threads"
+    );
+    let (workers, spawned) = pool_stats();
+    assert_eq!(workers, spawned, "every spawned thread belongs to the one pool");
+}
+
+#[test]
+fn scan_accounting_is_placement_independent() {
+    let _g = lock();
+    let (rows, n) = (8usize, 512usize);
+    let x = random_batch(rows, n, 99);
+    let params = mixed_params(rows);
+    let isa = Isa::detect_best();
+    // Submitting-thread decode vs forced pool split: identical accounting.
+    for (label, threshold, threads) in [("submitting", usize::MAX, 1usize), ("pooled", 1, 2)] {
+        let scans_before = scan_pass_rows();
+        let stores_before = store_pass_rows();
+        sampling::sample_batch_auto(isa, &x, &params, threshold, threads).unwrap();
+        assert_eq!(
+            scan_pass_rows() - scans_before,
+            rows,
+            "{label}: exactly one scan pass per decoded row"
+        );
+        assert_eq!(
+            store_pass_rows() - stores_before,
+            0,
+            "{label}: decode must never run a store pass"
+        );
+    }
+}
+
+#[test]
+fn router_decode_splits_across_pool_and_matches_single_thread() {
+    let _g = lock();
+    let (rows, n) = (8usize, 600usize);
+    let x = random_batch(rows, n, 55);
+    // Single-thread reference through the plain batch API.
+    let want =
+        sampling::sample_batch(Isa::detect_best(), &x, &[SamplingParams::greedy()]).unwrap();
+
+    let cfg = ServeConfig { parallel_threshold: 1, batch_threads: 2, ..ServeConfig::default() };
+    let router = Router::from_config(&cfg).unwrap();
+    let batch: Vec<Payload> = x
+        .iter_rows()
+        .map(|row| Payload::Decode { logits: row.to_vec(), params: SamplingParams::greedy() })
+        .collect();
+    match router.execute(batch).unwrap() {
+        Executed::Choices(got) => {
+            assert_eq!(got.len(), rows);
+            for (r, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.token, w.token, "row {r}");
+                assert_eq!(g.logprob.to_bits(), w.logprob.to_bits(), "row {r}");
+            }
+        }
+        Executed::Rows(_) => panic!("decode batch must return choices"),
+    }
+    if available_threads() >= 2 {
+        assert!(pool_workers() >= 2, "router decode must have placed work on the pool");
+    }
+}
