@@ -11,6 +11,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::softmax::tuning::TuneTable;
 use crate::softmax::{Algorithm, Isa};
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -73,12 +74,16 @@ pub struct ServeConfig {
     /// passes save on small working sets).  `0` (the default) means
     /// *auto*: derived from measured single-thread STREAM bandwidth —
     /// `repro serve` resolves it eagerly at startup (or from
-    /// `--tune-file`); library-constructed engines resolve lazily on the
-    /// first batch large enough to possibly split (see
+    /// `--tune-file`); the execution planner ([`crate::plan::Planner`])
+    /// resolves library-constructed engines lazily on the first batch
+    /// large enough to possibly split (see
     /// [`crate::softmax::tuning::derive_parallel_threshold`]).
     pub parallel_threshold: usize,
     /// Kernel threads per batch for the native engine's pool splits
-    /// (normalize and decode).  Default: 0 = all logical cores.
+    /// (normalize and decode).  Must be ≥ 1.  Default: the host's
+    /// logical core count (the historical `0 = all cores` sentinel is
+    /// now rejected by validation — the resolved default says what it
+    /// means).
     pub batch_threads: usize,
     /// Pad executed softmax batches to power-of-two row counts on the
     /// pjrt backend so shape-specialized artifacts hit their exact-fit
@@ -86,6 +91,19 @@ pub struct ServeConfig {
     /// Ignored by the native backend.  Default: `true`
     /// (`--no-bucket-pow2` disables).
     pub bucket_pow2: bool,
+    /// Print every freshly built execution plan in the `docs/FORMATS.md`
+    /// schema (`repro serve --explain-plans`).  Default: `false`.
+    pub explain_plans: bool,
+    /// Parsed tune table attached programmatically by the launcher
+    /// (`repro serve --tune-file`); supplies per-pass unroll picks and
+    /// the measured STREAM bandwidth to the execution planner.  Not a
+    /// JSON/CLI key.  Default: `None`.
+    pub tune_table: Option<TuneTable>,
+    /// Known single-thread STREAM Scale bandwidth (GB/s) for the
+    /// planner's runtime predictions, set programmatically at startup
+    /// when the threshold is auto-derived or a tune table carries it.
+    /// Not a JSON/CLI key.  Default: `None`.
+    pub stream_gbps: Option<f64>,
 }
 
 impl Default for ServeConfig {
@@ -103,10 +121,20 @@ impl Default for ServeConfig {
             // threshold from it (the old static 512k default ignored how
             // fast the host's memory actually is).
             parallel_threshold: 0,
-            batch_threads: 0,
+            batch_threads: default_batch_threads(),
             bucket_pow2: true,
+            explain_plans: false,
+            tune_table: None,
+            stream_gbps: None,
         }
     }
+}
+
+/// Default kernel threads per batch: every logical core (1 if detection
+/// fails).  A resolved number, not a sentinel: `batch_threads = 0` is a
+/// validation error.
+fn default_batch_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 impl ServeConfig {
@@ -130,29 +158,32 @@ impl ServeConfig {
         if let Some(v) = root.get("isa").and_then(Json::as_str) {
             self.isa = v.parse().map_err(|e: String| anyhow!(e))?;
         }
-        if let Some(v) = root.get("max_batch").and_then(Json::as_usize) {
+        if let Some(v) = json_count(root, "max_batch")? {
             self.max_batch = v;
         }
-        if let Some(v) = root.get("max_wait_us").and_then(Json::as_usize) {
+        if let Some(v) = json_count(root, "max_wait_us")? {
             self.max_wait_us = v as u64;
         }
-        if let Some(v) = root.get("workers").and_then(Json::as_usize) {
+        if let Some(v) = json_count(root, "workers")? {
             self.workers = v;
         }
-        if let Some(v) = root.get("queue_capacity").and_then(Json::as_usize) {
+        if let Some(v) = json_count(root, "queue_capacity")? {
             self.queue_capacity = v;
         }
         if let Some(v) = root.get("artifacts_dir").and_then(Json::as_str) {
             self.artifacts_dir = PathBuf::from(v);
         }
-        if let Some(v) = root.get("parallel_threshold").and_then(Json::as_usize) {
+        if let Some(v) = json_count(root, "parallel_threshold")? {
             self.parallel_threshold = v;
         }
-        if let Some(v) = root.get("batch_threads").and_then(Json::as_usize) {
+        if let Some(v) = json_count(root, "batch_threads")? {
             self.batch_threads = v;
         }
         if let Some(v) = root.get("bucket_pow2").and_then(Json::as_bool) {
             self.bucket_pow2 = v;
+        }
+        if let Some(v) = root.get("explain_plans").and_then(Json::as_bool) {
+            self.explain_plans = v;
         }
         self.validate()
     }
@@ -185,6 +216,9 @@ impl ServeConfig {
         if a.flag("no-bucket-pow2") {
             self.bucket_pow2 = false;
         }
+        if a.flag("explain-plans") {
+            self.explain_plans = true;
+        }
         self.validate()
     }
 
@@ -194,6 +228,12 @@ impl ServeConfig {
         }
         if self.workers == 0 {
             return Err(anyhow!("workers must be >= 1"));
+        }
+        if self.batch_threads == 0 {
+            return Err(anyhow!(
+                "batch_threads must be >= 1 (the default is the logical core count, {})",
+                default_batch_threads()
+            ));
         }
         if self.queue_capacity < self.max_batch {
             return Err(anyhow!(
@@ -206,6 +246,20 @@ impl ServeConfig {
             return Err(anyhow!("configured ISA {} unavailable on this host", self.isa));
         }
         Ok(())
+    }
+}
+
+/// Read one non-negative integer config key, rejecting — rather than
+/// silently ignoring or truncating — negative, fractional, and non-finite
+/// JSON numbers (`-1` used to alias `0 = auto` through an `as usize`
+/// cast).
+fn json_count(root: &Json, key: &str) -> Result<Option<usize>> {
+    match root.get(key) {
+        None => Ok(None),
+        Some(v) => match v.as_usize() {
+            Some(u) => Ok(Some(u)),
+            None => Err(anyhow!("config key {key:?}: expected a non-negative integer, got {v}")),
+        },
     }
 }
 
@@ -266,5 +320,44 @@ mod tests {
         c2.queue_capacity = 1;
         c2.max_batch = 8;
         assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn zero_batch_threads_rejected() {
+        // The old `0 = all cores` sentinel is gone: the default is the
+        // resolved core count and an explicit 0 is a validation error.
+        assert!(ServeConfig::default().batch_threads >= 1);
+        let mut c = ServeConfig::default();
+        c.batch_threads = 0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("batch_threads"), "{err}");
+        let a = Args::parse(["--batch-threads", "0"].iter().map(|s| s.to_string()));
+        assert!(ServeConfig::default().apply_args(&a).is_err());
+    }
+
+    #[test]
+    fn bad_json_numerics_rejected_not_clamped() {
+        let mut c = ServeConfig::default();
+        let neg = Json::parse(r#"{"batch_threads": -1}"#).unwrap();
+        let err = c.apply_json(&neg).unwrap_err().to_string();
+        assert!(err.contains("batch_threads"), "{err}");
+        let frac = Json::parse(r#"{"max_batch": 2.5}"#).unwrap();
+        assert!(c.apply_json(&frac).is_err());
+        let negthr = Json::parse(r#"{"parallel_threshold": -4096}"#).unwrap();
+        assert!(c.apply_json(&negthr).is_err());
+        // The config object is left untouched by a rejected key.
+        assert_eq!(c.max_batch, ServeConfig::default().max_batch);
+    }
+
+    #[test]
+    fn explain_plans_round_trips() {
+        let mut c = ServeConfig::default();
+        assert!(!c.explain_plans);
+        c.apply_json(&Json::parse(r#"{"explain_plans": true}"#).unwrap()).unwrap();
+        assert!(c.explain_plans);
+        let mut c2 = ServeConfig::default();
+        let a = Args::parse(["--explain-plans"].iter().map(|s| s.to_string()));
+        c2.apply_args(&a).unwrap();
+        assert!(c2.explain_plans);
     }
 }

@@ -1,8 +1,9 @@
 //! Serving metrics: lock-free counters + a sampled latency reservoir.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
+use crate::plan::PlanCacheCounters;
 use crate::util::stats;
 
 /// Coordinator-wide metrics. Cheap to update from any worker.
@@ -14,6 +15,10 @@ pub struct Metrics {
     pub failed: AtomicU64,
     pub batches: AtomicU64,
     pub rows: AtomicU64,
+    /// Execution-planner cache counters, shared (via `Arc`) with the
+    /// router's planner at coordinator startup: a hit means the batch
+    /// shape's placement was reused with zero re-derivation.
+    pub plan_cache: Arc<PlanCacheCounters>,
     /// Sum of batch sizes (rows) — avg batch size = rows/batches.
     queue_us: Mutex<Vec<f64>>,
     exec_us: Mutex<Vec<f64>>,
@@ -30,6 +35,8 @@ pub struct Snapshot {
     pub batches: u64,
     pub rows: u64,
     pub avg_batch: f64,
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
     pub queue_us: Option<stats::Summary>,
     pub exec_us: Option<stats::Summary>,
     pub e2e_us: Option<stats::Summary>,
@@ -71,6 +78,8 @@ impl Metrics {
             batches,
             rows,
             avg_batch: if batches > 0 { rows as f64 / batches as f64 } else { 0.0 },
+            plan_cache_hits: self.plan_cache.hits(),
+            plan_cache_misses: self.plan_cache.misses(),
             queue_us: summ(&self.queue_us),
             exec_us: summ(&self.exec_us),
             e2e_us: summ(&self.e2e_us),
@@ -89,6 +98,11 @@ impl std::fmt::Display for Snapshot {
             f,
             "batches:  {} ({} rows, avg batch {:.2})",
             self.batches, self.rows, self.avg_batch
+        )?;
+        writeln!(
+            f,
+            "plans:    {} cache hits, {} misses",
+            self.plan_cache_hits, self.plan_cache_misses
         )?;
         let line = |name: &str, s: &Option<stats::Summary>| match s {
             Some(s) => {
@@ -125,5 +139,21 @@ mod tests {
         assert_eq!(s.exec_us.unwrap().n, 2);
         let disp = s.to_string();
         assert!(disp.contains("avg batch 1.50"));
+        assert!(disp.contains("cache hits"));
+    }
+
+    #[test]
+    fn plan_cache_counters_flow_into_snapshots() {
+        use crate::plan::{PlanOp, Planner};
+        use crate::softmax::{Algorithm, Isa};
+
+        let m = Metrics::default();
+        let mut planner = Planner::new(Algorithm::TwoPass, Isa::Scalar, usize::MAX, 1);
+        planner.set_counters(m.plan_cache.clone());
+        let _ = planner.plan(PlanOp::Normalize, 4, 64); // miss
+        let _ = planner.plan(PlanOp::Normalize, 4, 64); // hit
+        let _ = planner.plan(PlanOp::Normalize, 4, 64); // hit
+        let s = m.snapshot();
+        assert_eq!((s.plan_cache_hits, s.plan_cache_misses), (2, 1));
     }
 }

@@ -56,13 +56,16 @@ impl Coordinator {
     }
 
     /// Start with an explicit router (tests inject custom ones).
-    pub fn start_with_router(cfg: &ServeConfig, router: Router) -> Coordinator {
+    pub fn start_with_router(cfg: &ServeConfig, mut router: Router) -> Coordinator {
         let batcher = Arc::new(Batcher::new(
             cfg.queue_capacity,
             cfg.max_batch,
             Duration::from_micros(cfg.max_wait_us),
         ));
         let metrics = Arc::new(Metrics::default());
+        // The router's execution planner reports its plan-cache hits and
+        // misses through the coordinator metrics.
+        router.attach_plan_counters(metrics.plan_cache.clone());
         let router = Arc::new(router);
         let workers = (0..cfg.workers.max(1))
             .map(|_| {

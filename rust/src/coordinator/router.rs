@@ -5,12 +5,17 @@
 //!   row-major [`RowBatch`] (a single 64-byte-aligned allocation, no
 //!   `Vec<Vec<f32>>`) which is normalized **in place** and returned as the
 //!   response batch — the whole native path allocates nothing beyond the
-//!   request assembly.  The algorithm/ISA dispatch is hoisted out of the
-//!   row loop, and batches above `parallel_threshold` (0 = derived from
-//!   measured STREAM bandwidth, lazily, on the first batch large enough
-//!   to possibly split) are split across the persistent kernel-thread
-//!   pool — normalize *and* decode batches alike, as work items of the
-//!   generic batch-execution engine ([`crate::softmax::batch`]).
+//!   request assembly.  Every placement decision is a cached
+//!   [`crate::plan::ExecPlan`] from the engine's [`Planner`]: the router
+//!   plans once per executed batch, and requests of a repeated batch
+//!   shape reuse the cached plan (one lock-free read, hit/miss counters
+//!   in the coordinator metrics).  The plan hoists the algorithm/ISA
+//!   dispatch out of the row loop and splits batches above its resolved
+//!   `parallel_threshold` (0 = derived from measured STREAM bandwidth,
+//!   lazily, on the first batch large enough to possibly split) across
+//!   the persistent kernel-thread pool — normalize *and* decode batches
+//!   alike, as work items of the generic batch-execution engine
+//!   ([`crate::softmax::batch`]).
 //! * [`Router::Pjrt`] — AOT-compiled XLA artifacts through the PJRT
 //!   executor service ([`crate::runtime::service::PjrtService`]): the
 //!   service thread owns the non-`Send` PJRT client, picks the smallest
@@ -24,90 +29,60 @@
 //! `execute` consumes the payloads and returns one output [`RowBatch`];
 //! the coordinator slices per-request responses out of it.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 
 use crate::config::{Backend, ServeConfig};
+use crate::plan::{PlanCacheCounters, PlanOp, Planner};
 use crate::runtime::service::PjrtService;
 use crate::sampling::{self, Choice, SamplingParams};
-use crate::softmax::batch::{softmax_batch_auto, softmax_batch_inplace_auto, RowBatch};
-use crate::softmax::tuning::{resolve_parallel_threshold, MIN_PARALLEL_THRESHOLD};
+use crate::softmax::batch::{softmax_batch_inplace_planned, softmax_batch_planned, RowBatch};
 use crate::softmax::{Algorithm, Isa};
 
 use super::request::Payload;
 
-/// The in-process batched kernel engine and its threading policy.
+/// The in-process batched kernel engine.  Every decision — algorithm,
+/// ISA, submit-vs-pool, chunk layout, NT stores, bucketing — comes from
+/// the engine's [`Planner`] (the single source of truth; duplicating
+/// algorithm/ISA here could only disagree with it): the router plans
+/// once per executed batch and repeated batch shapes reuse their cached
+/// plan with zero re-derivation (one lock-free read; hits/misses surface
+/// in the coordinator metrics).
 pub struct NativeEngine {
-    pub algorithm: Algorithm,
-    pub isa: Isa,
-    /// Elements (rows × n) below which a batch stays single-threaded, as
-    /// configured; 0 = auto, resolved lazily from measured STREAM
-    /// bandwidth by the first batch large enough to possibly split (so
-    /// constructing an engine — or serving only small batches — never
-    /// pays the measurement).
-    pub parallel_threshold: usize,
-    /// Kernel threads per batch (0 = all cores).
-    pub batch_threads: usize,
+    /// The execution planner (per-shape plan cache).
+    pub planner: Planner,
 }
 
 impl NativeEngine {
     pub fn from_config(cfg: &ServeConfig) -> NativeEngine {
-        NativeEngine {
-            algorithm: cfg.algorithm,
-            isa: cfg.isa,
-            parallel_threshold: cfg.parallel_threshold,
-            batch_threads: cfg.batch_threads,
-        }
-    }
-
-    /// The threshold to apply to one `rows × n` batch.  In auto mode (0),
-    /// batches below the derivation's lower clamp can never split, so the
-    /// STREAM measurement is skipped for them entirely.
-    fn threshold_for(&self, rows: usize, n: usize) -> usize {
-        if self.parallel_threshold == 0 && rows * n < MIN_PARALLEL_THRESHOLD {
-            usize::MAX
-        } else {
-            resolve_parallel_threshold(self.parallel_threshold)
-        }
+        NativeEngine { planner: Planner::from_config(cfg) }
     }
 
     /// Normalize every row of `x` into a fresh output batch.
     pub fn run(&self, x: &RowBatch) -> Result<RowBatch> {
+        let plan = self.planner.plan(PlanOp::Normalize, x.rows(), x.n());
         let mut y = RowBatch::new(x.rows(), x.n());
-        softmax_batch_auto(
-            self.algorithm,
-            self.isa,
-            x,
-            &mut y,
-            self.threshold_for(x.rows(), x.n()),
-            self.batch_threads,
-        )
-        .map_err(|e| anyhow!("{e}"))?;
+        softmax_batch_planned(&plan, x, &mut y).map_err(|e| anyhow!("{e}"))?;
         Ok(y)
     }
 
     /// Normalize every row of `x` in place: the request buffer becomes
     /// the response buffer, so the serving path allocates no output batch.
     pub fn run_inplace(&self, x: &mut RowBatch) -> Result<()> {
-        let threshold = self.threshold_for(x.rows(), x.n());
-        softmax_batch_inplace_auto(self.algorithm, self.isa, x, threshold, self.batch_threads)
-            .map_err(|e| anyhow!("{e}"))
+        let plan = self.planner.plan(PlanOp::NormalizeInPlace, x.rows(), x.n());
+        softmax_batch_inplace_planned(&plan, x).map_err(|e| anyhow!("{e}"))
     }
 
     /// Decode every row of `x` through the fused sampling subsystem under
-    /// the same threading policy as normalization: batches of at least
-    /// `parallel_threshold` elements split at row boundaries into decode
-    /// jobs on the persistent worker pool, smaller ones run on the
-    /// submitting worker.  Token ids are bit-identical either way (every
-    /// selection decision is scalar and index-ordered).
+    /// the same planned placement policy as normalization: the plan
+    /// splits batches above its threshold into decode jobs on the
+    /// persistent worker pool, smaller ones run on the submitting worker.
+    /// Token ids are bit-identical either way (every selection decision
+    /// is scalar and index-ordered).
     pub fn decode(&self, x: &RowBatch, params: &[SamplingParams]) -> Result<Vec<Choice>> {
-        sampling::sample_batch_auto(
-            self.isa,
-            x,
-            params,
-            self.threshold_for(x.rows(), x.n()),
-            self.batch_threads,
-        )
-        .map_err(|e| anyhow!("{e}"))
+        let plan = self.planner.plan(PlanOp::Decode, x.rows(), x.n());
+        sampling::sample_batch_planned(&plan, x, params).map_err(|e| anyhow!("{e}"))
     }
 }
 
@@ -155,11 +130,22 @@ impl Router {
     pub fn native(algorithm: Algorithm, isa: Isa) -> Router {
         let defaults = ServeConfig::default();
         Router::Native(NativeEngine {
-            algorithm,
-            isa,
-            parallel_threshold: defaults.parallel_threshold,
-            batch_threads: defaults.batch_threads,
+            planner: Planner::new(
+                algorithm,
+                isa,
+                defaults.parallel_threshold,
+                defaults.batch_threads,
+            ),
         })
+    }
+
+    /// Share the plan-cache counters with the coordinator's metrics
+    /// (both router variants place native work through one planner).
+    pub fn attach_plan_counters(&mut self, counters: Arc<PlanCacheCounters>) {
+        match self {
+            Router::Native(e) => e.planner.set_counters(counters),
+            Router::Pjrt { native, .. } => native.planner.set_counters(counters),
+        }
     }
 
     /// Build from config (starts the PJRT service for the pjrt backend).
@@ -196,15 +182,21 @@ impl Router {
         if n == 0 {
             return Err(anyhow!("empty logits row"));
         }
-        // One allocation for the whole batch; rows are copied once, from
-        // the payload straight into kernel-ready row-major storage.  On
-        // the pjrt path the padded row count is reserved up front so the
-        // pow2 padding below never reallocates the assembled batch.
-        let cap_rows = match self {
-            Router::Pjrt { pad_pow2: true, .. } => batch.len().next_power_of_two(),
-            _ => batch.len(),
+        // One planner bucketing decision per executed batch: it sizes
+        // the allocation up front (so the pow2 padding below never
+        // reallocates) and drives the padding itself.  Deliberately not
+        // a full plan: a successful pjrt execution never needs a native
+        // placement, so it must not trigger the planner's lazy STREAM
+        // threshold resolution.
+        let bucket_rows = match self {
+            Router::Pjrt { native, pad_pow2: true, .. } => {
+                native.planner.bucket_rows(batch.len())
+            }
+            _ => None,
         };
-        let mut x = RowBatch::with_capacity(cap_rows, n);
+        // Rows are copied once, from the payload straight into
+        // kernel-ready row-major storage.
+        let mut x = RowBatch::with_capacity(bucket_rows.unwrap_or(batch.len()), n);
         for p in &batch {
             match p {
                 Payload::Logits(v) if v.len() == n => {
@@ -221,15 +213,15 @@ impl Router {
                 engine.run_inplace(&mut x)?;
                 Ok(x)
             }
-            Router::Pjrt { svc, variant, native, pad_pow2 } => {
-                // Bucket to a power-of-two row count: executables are
-                // shape-specialized, so padding here turns near-miss
-                // batch sizes into exact-fit bucket hits (the padded
-                // batch executes straight off its storage instead of
-                // being re-flattened inside the service).
+            Router::Pjrt { svc, variant, native, .. } => {
+                // Bucket to the plan's power-of-two row count:
+                // executables are shape-specialized, so padding here
+                // turns near-miss batch sizes into exact-fit bucket hits
+                // (the padded batch executes straight off its storage
+                // instead of being re-flattened inside the service).
                 let rows = x.rows();
-                if *pad_pow2 {
-                    pad_to_pow2_rows(&mut x);
+                if let Some(want) = bucket_rows {
+                    pad_rows(&mut x, want);
                 }
                 match svc.softmax(variant, x) {
                     Ok(mut out) => {
@@ -301,12 +293,11 @@ impl Router {
     }
 }
 
-/// Pad a batch up to the next power-of-two row count by repeating its
-/// first row.  Callers slice the padding back off with
+/// Pad a batch up to the plan's bucketed row count by repeating its first
+/// row.  Callers slice the padding back off with
 /// [`RowBatch::truncate_rows`] before responses are assembled.
-fn pad_to_pow2_rows(x: &mut RowBatch) {
+fn pad_rows(x: &mut RowBatch, want: usize) {
     let rows = x.rows();
-    let want = rows.next_power_of_two();
     if rows > 0 && want > rows {
         let row0 = x.row(0).to_vec();
         for _ in rows..want {
@@ -403,19 +394,26 @@ mod tests {
 
     #[test]
     fn pow2_padding_rounds_up_and_truncates_back() {
+        // The padded row count comes from the planner's bucketing
+        // decision, exactly as on the pjrt path.
+        let planner = Planner::new(Algorithm::TwoPass, Isa::Scalar, usize::MAX, 1)
+            .with_bucket_pow2(true);
         let mut x = RowBatch::new(0, 4);
         for r in 0..5 {
             x.push_row(&[r as f32; 4]).unwrap();
         }
-        pad_to_pow2_rows(&mut x);
+        pad_rows(&mut x, planner.bucket_rows(5).unwrap());
         assert_eq!(x.rows(), 8);
         assert_eq!(x.row(7), x.row(0));
         x.truncate_rows(5);
         assert_eq!(x.rows(), 5);
         // Already a power of two: no padding added.
         let mut y = RowBatch::new(4, 3);
-        pad_to_pow2_rows(&mut y);
+        pad_rows(&mut y, planner.bucket_rows(4).unwrap());
         assert_eq!(y.rows(), 4);
+        // Bucketing off: no decision at all.
+        let off = Planner::new(Algorithm::TwoPass, Isa::Scalar, usize::MAX, 1);
+        assert_eq!(off.bucket_rows(5), None);
     }
 
     #[test]

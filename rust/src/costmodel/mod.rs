@@ -41,8 +41,23 @@ pub fn table2() -> Vec<CostRow> {
 /// `gbps` of memory bandwidth, assuming the pass is bandwidth-bound (the
 /// paper's out-of-cache regime).
 pub fn predict_secs(alg: Algorithm, n: usize, gbps: f64) -> f64 {
-    let bytes = cost(alg).bandwidth_n * n * std::mem::size_of::<f32>();
-    bytes as f64 / (gbps * 1e9)
+    predict_batch_secs(alg, 1, n, gbps)
+}
+
+/// Table-2 bandwidth cost of one batched execution, in bytes: `rows × n`
+/// f32 elements through the algorithm's nominal pass traffic.  This is
+/// the number the execution planner records per plan (`plan::ExecPlan::
+/// predicted_bytes`) and `repro plan` prints.
+pub fn batch_bytes(alg: Algorithm, rows: usize, n: usize) -> usize {
+    cost(alg).bandwidth_n * rows * n * std::mem::size_of::<f32>()
+}
+
+/// Predicted runtime (seconds) for a `rows × n` batch on a machine
+/// sustaining `gbps` of memory bandwidth (bandwidth-bound regime) —
+/// [`predict_secs`] generalized to the batched shapes the serving path
+/// executes.
+pub fn predict_batch_secs(alg: Algorithm, rows: usize, n: usize, gbps: f64) -> f64 {
+    batch_bytes(alg, rows, n) as f64 / (gbps * 1e9)
 }
 
 /// Predicted speedup of the two-pass algorithm over `other` in the
@@ -101,11 +116,25 @@ mod tests {
     }
 
     #[test]
+    fn batched_cost_matches_table2_per_row() {
+        for alg in Algorithm::ALL {
+            assert_eq!(batch_bytes(alg, 1, 1024), cost(alg).bandwidth_n * 4096);
+            assert_eq!(batch_bytes(alg, 8, 1024), 8 * batch_bytes(alg, 1, 1024));
+            // A batch of r rows of n elements predicts exactly like one
+            // row of r·n elements: traffic is per element.
+            let batched = predict_batch_secs(alg, 16, 4096, 12.0);
+            let flat = predict_secs(alg, 16 * 4096, 12.0);
+            assert!((batched - flat).abs() < 1e-15, "{alg}");
+        }
+    }
+
+    #[test]
     fn accelerator_estimate_is_memory_bound_at_high_tflops() {
         // With abundant compute, the roofline is the HBM term and the
         // two-pass advantage is the full 4/3 over recompute.
         let t2 = predict_accelerator_secs(Algorithm::TwoPass, 1 << 20, 1200.0, 20.0, 100.0);
-        let t3 = predict_accelerator_secs(Algorithm::ThreePassRecompute, 1 << 20, 1200.0, 20.0, 100.0);
+        let t3 =
+            predict_accelerator_secs(Algorithm::ThreePassRecompute, 1 << 20, 1200.0, 20.0, 100.0);
         assert!((t3 / t2 - 4.0 / 3.0).abs() < 1e-6);
     }
 }

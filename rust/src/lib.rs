@@ -29,6 +29,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod figures;
 pub mod membw;
+pub mod plan;
 pub mod platform;
 pub mod runtime;
 pub mod sampling;
@@ -38,5 +39,6 @@ pub mod stream;
 pub mod util;
 pub mod workload;
 
+pub use plan::{ExecPlan, PlanOp, Planner};
 pub use sampling::{Choice, SamplingParams};
 pub use softmax::{softmax, softmax_batch, softmax_inplace, Algorithm, Isa, RowBatch};

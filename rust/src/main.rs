@@ -6,6 +6,7 @@
 //! platform                       print the Table-3-style host report
 //! figures <id|all> [opts]        regenerate paper tables/figures
 //! tune [opts]                    auto-tune unroll meta-parameters (§6.3)
+//! plan <rows> <n> [opts]         print the execution plan for one shape
 //! serve [opts]                   run the serving coordinator under load
 //! verify [opts]                  PJRT artifacts vs native kernels parity
 //! help                           this text
@@ -18,9 +19,10 @@ use anyhow::{anyhow, bail, Result};
 use two_pass_softmax::config::ServeConfig;
 use two_pass_softmax::coordinator::{Coordinator, Payload};
 use two_pass_softmax::figures;
-use two_pass_softmax::sampling::SamplingParams;
+use two_pass_softmax::plan::{PlanOp, Planner};
 use two_pass_softmax::platform;
 use two_pass_softmax::runtime::{EntryKind, Runtime};
+use two_pass_softmax::sampling::SamplingParams;
 use two_pass_softmax::softmax::{self, tuning, Algorithm};
 use two_pass_softmax::util::cli::Args;
 use two_pass_softmax::util::rng::Rng;
@@ -33,12 +35,18 @@ USAGE:
   repro figures <table1|table2|table3|fig1..fig12|all>
         [--out DIR] [--paper-protocol] [--reps N] [--min-time S] [--max-n N] [--verbose]
   repro tune [--n N] [--reps N] [--save FILE] [--no-stream]
+  repro plan <rows> <n> [--op softmax|inplace|accum|decode]
+        [--backend native|pjrt] [--algorithm twopass|reload|recompute] [--isa I]
+        [--parallel-threshold ELEMS] [--batch-threads T] [--config FILE]
+        [--tune-file FILE] [--no-bucket-pow2]
+        (prints the cached execution plan + cost prediction, docs/FORMATS.md schema)
   repro serve [--backend native|pjrt] [--algorithm twopass|reload|recompute]
         [--requests N] [--n LOGITS] [--clients K] [--max-batch B] [--workers W]
         [--max-wait-us U] [--parallel-threshold ELEMS (0 = auto from STREAM)]
         [--batch-threads T] [--artifacts DIR] [--config FILE]
         [--tune-file FILE (reuse `repro tune --save` threshold, skip re-measuring)]
         [--no-bucket-pow2 (don't pad pjrt batches to power-of-two rows)]
+        [--explain-plans (print each freshly planned batch shape)]
         [--decode (serve the fused decode endpoint: token ids, not rows)]
         [--temperature T] [--top-k K] [--top-p P] [--sample-seed S]
   repro verify [--artifacts DIR]
@@ -82,16 +90,100 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("tune") => cmd_tune(args),
+        Some("plan") => cmd_plan(args),
         Some("serve") => cmd_serve(args),
         Some("verify") => cmd_verify(args),
         Some(other) => bail!("unknown subcommand {other:?}\n{HELP}"),
     }
 }
 
+/// Build a `ServeConfig` from `--config` + CLI overrides, fold in a
+/// `--tune-file` (threshold + unroll table + measured bandwidth), and
+/// resolve an auto threshold eagerly — shared by `serve` and `plan` so a
+/// STREAM measurement never lands in a client's latency.
+fn load_planner_config(args: &Args) -> Result<ServeConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(p) => ServeConfig::from_file(std::path::Path::new(p))?,
+        None => ServeConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    if let Some(path) = args.opt("tune-file") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading tune file {path}: {e}"))?;
+        let table = tuning::TuneTable::from_text(&text).map_err(|e| anyhow!(e))?;
+        // Sanity-check the file against its own recorded bandwidth: a
+        // threshold that disagrees with the derivation by more than 4×
+        // was measured on a different machine (or hand-edited).  Warn —
+        // never silently clamp — and use the file's value as given.
+        if let (Some(thr), Some(gbps)) = (table.parallel_threshold, table.stream_gbps) {
+            let derived = tuning::derive_parallel_threshold(gbps);
+            let ratio = thr as f64 / derived.max(1) as f64;
+            if !(0.25..=4.0).contains(&ratio) {
+                eprintln!(
+                    "warning: tune-file parallel_threshold {thr} disagrees with its own \
+                     bandwidth derivation ({derived} elems from {gbps:.1} GB/s) by {:.1}x; \
+                     using the file's value as given",
+                    if ratio > 1.0 { ratio } else { 1.0 / ratio }
+                );
+            }
+        }
+        if cfg.parallel_threshold == 0 {
+            if let Some(thr) = table.parallel_threshold {
+                cfg.parallel_threshold = thr;
+                println!("tune-file: parallel_threshold = {thr} elems");
+            }
+        }
+        if cfg.stream_gbps.is_none() {
+            cfg.stream_gbps = table.stream_gbps;
+        }
+        cfg.tune_table = Some(table);
+    }
+    if cfg.parallel_threshold == 0 {
+        // Resolve the auto threshold at startup, not on the first large
+        // live request — the STREAM measurement must never land in a
+        // client's latency.
+        let (thr, gbps) = tuning::measured_parallel_threshold();
+        cfg.parallel_threshold = thr;
+        cfg.stream_gbps = Some(gbps);
+        println!(
+            "auto parallel_threshold = {thr} elems (STREAM Scale {gbps:.1} GB/s single-thread)"
+        );
+    }
+    Ok(cfg)
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let shape = |i: usize, what: &str| -> Result<usize> {
+        args.positionals
+            .get(i)
+            .ok_or_else(|| anyhow!("plan: missing <{what}> (try `repro plan 8 32768`)"))?
+            .parse::<usize>()
+            .map_err(|e| anyhow!("plan: bad {what}: {e}"))
+    };
+    let rows = shape(1, "rows")?;
+    let n = shape(2, "n")?;
+    let op = match args.opt("op").unwrap_or("softmax") {
+        "softmax" | "normalize" => PlanOp::Normalize,
+        "inplace" => PlanOp::NormalizeInPlace,
+        "accum" => PlanOp::Accum,
+        "decode" => PlanOp::Decode,
+        other => bail!("plan: unknown --op {other:?} (want softmax|inplace|accum|decode)"),
+    };
+    let cfg = load_planner_config(args)?;
+    let planner = Planner::from_config(&cfg);
+    println!("{}", planner.plan(op, rows, n));
+    Ok(())
+}
+
 fn cmd_tune(args: &Args) -> Result<()> {
     let n = args.get("n", 262_144usize).map_err(|e| anyhow!(e))?;
     let reps = args.get("reps", 5usize).map_err(|e| anyhow!(e))?;
     println!("auto-tuning unroll factors at N = {n} (reps = {reps}) ...");
+    // Record the machine shape the tuning ran on; the execution planner's
+    // chunk placement fields will consume this topology once the pool is
+    // NUMA-aware.
+    let numa = platform::numa_topology();
+    println!("# numa: {} node(s): {numa}", numa.node_count());
     let mut table = tuning::tune_all(n, reps);
     if !args.flag("no-stream") {
         // Bandwidth-derived serving threshold (folded into the saved
@@ -119,35 +211,10 @@ fn cmd_tune(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let mut cfg = match args.opt("config") {
-        Some(p) => ServeConfig::from_file(std::path::Path::new(p))?,
-        None => ServeConfig::default(),
-    };
-    cfg.apply_args(args)?;
-    // A saved tune table carries the bandwidth-derived threshold; use it
-    // when the config left the threshold on auto, so serve startup skips
-    // the STREAM measurement on already-tuned hosts.
-    if let Some(path) = args.opt("tune-file") {
-        let text = std::fs::read_to_string(path)
-            .map_err(|e| anyhow!("reading tune file {path}: {e}"))?;
-        let table = tuning::TuneTable::from_text(&text).map_err(|e| anyhow!(e))?;
-        if cfg.parallel_threshold == 0 {
-            if let Some(thr) = table.parallel_threshold {
-                cfg.parallel_threshold = thr;
-                println!("tune-file: parallel_threshold = {thr} elems");
-            }
-        }
-    }
-    if cfg.parallel_threshold == 0 {
-        // Resolve the auto threshold at startup, not on the first large
-        // live request — the STREAM measurement must never land in a
-        // client's latency.
-        let (thr, gbps) = tuning::measured_parallel_threshold();
-        cfg.parallel_threshold = thr;
-        println!(
-            "auto parallel_threshold = {thr} elems (STREAM Scale {gbps:.1} GB/s single-thread)"
-        );
-    }
+    // A saved tune table carries the bandwidth-derived threshold (and the
+    // planner's unroll picks); otherwise an auto threshold is measured at
+    // startup.  Shared with `repro plan` via `load_planner_config`.
+    let cfg = load_planner_config(args)?;
     let requests: usize = args.get("requests", 1000).map_err(|e| anyhow!(e))?;
     let n: usize = args.get("n", 32_768).map_err(|e| anyhow!(e))?;
     let clients: usize = args.get("clients", 4).map_err(|e| anyhow!(e))?;

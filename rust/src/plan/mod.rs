@@ -1,0 +1,855 @@
+//! Execution planner: one cached per-shape plan drives every kernel,
+//! pool, and routing decision.
+//!
+//! The paper's core claim is that softmax pass structure should be chosen
+//! from memory-traffic analysis (Table 2), yet the serving path used to
+//! re-derive placement policy ad hoc at every layer: the batched engine,
+//! the fused sampler, and the router each independently re-decided ISA,
+//! temporal-vs-NT stores, the parallel threshold, chunking, and pow2
+//! bucketing, while `costmodel` — the module that actually encodes the
+//! paper's bandwidth model — was only used to regenerate figures.  This
+//! module centralizes those decisions, following how the Intel Xeon
+//! softmax study (Czaja et al., 2019) selects blocking from a platform
+//! model and how *Online normalizer calculation for softmax* (Milakov &
+//! Gimelshein, 2018) frames variant choice as a traffic trade-off:
+//!
+//! * [`ExecPlan`] — the complete, immutable decision record for one
+//!   `(op, rows, n)` batch shape: algorithm, ISA, per-pass unrolls (from
+//!   a [`TuneTable`] when one is attached), cache-block size, the
+//!   resolved non-temporal-store decision, submit-vs-pool placement with
+//!   the exact row-chunk layout (including the per-chunk preferred NUMA
+//!   node — a single-node default until the NUMA-aware pool lands), pjrt
+//!   pow2 bucketing, and the cost model's predicted bytes moved and
+//!   bandwidth-bound runtime.
+//! * [`Planner`] — computes plans from a serving configuration and caches
+//!   them per shape.  The read path is **lock-free**: readers load one
+//!   immutable snapshot pointer with a single atomic acquire; writers
+//!   serialize on a mutex and publish a fresh snapshot.  Repeated batch
+//!   shapes therefore reuse their plan with zero re-derivation (and zero
+//!   re-measurement of STREAM bandwidth) — the cache hit/miss counters
+//!   surface in `coordinator/metrics.rs`.
+//! * [`adhoc`] — a one-shot uncached plan with the library `_auto`
+//!   semantics (threshold used as given), backing the compatibility
+//!   wrappers in `softmax::batch` and `sampling`.
+//!
+//! The planner moves *where* decisions are made, never *what* the kernels
+//! compute: a planned execution is bit-identical to the pre-planner paths
+//! by construction (same kernels, same block sizes, same chunk rule, same
+//! NT resolution).  This module is the only place in the tree allowed to
+//! make a placement decision — CI greps for strays.
+//!
+//! [`TuneTable`]: crate::softmax::tuning::TuneTable
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::config::{Backend, ServeConfig};
+use crate::costmodel;
+use crate::softmax::batch::available_threads;
+use crate::softmax::tuning::{
+    default_best_unroll, measured_parallel_threshold, TuneTable, MIN_PARALLEL_THRESHOLD,
+};
+use crate::softmax::{Algorithm, Isa, Pass};
+
+// ---------------------------------------------------------------------------
+// Decision primitives (moved here from softmax/batch.rs and the router).
+// ---------------------------------------------------------------------------
+
+/// Whether the batched engine may use the streaming (non-temporal) scale
+/// pass.  Outputs are bit-identical across policies; only DRAM traffic and
+/// cache-pollution behavior differ.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NtPolicy {
+    /// Stream when the span's working set (input + output) exceeds the
+    /// host LLC — the write-allocate traffic is real only out of cache.
+    Auto,
+    /// Always select the NT scale pass (benches, tests).
+    Always,
+    /// Never stream (benches, tests, and the in-place path).
+    Never,
+}
+
+impl fmt::Display for NtPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            NtPolicy::Auto => "auto",
+            NtPolicy::Always => "always",
+            NtPolicy::Never => "never",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Cache-residency threshold for [`NtPolicy::Auto`]: the host LLC size.
+fn nt_threshold_bytes() -> usize {
+    static B: OnceLock<usize> = OnceLock::new();
+    *B.get_or_init(|| crate::platform::detect().llc())
+}
+
+/// Resolve an NT policy for a span of `span_elems` f32 elements (the one
+/// NtPolicy → bool decision in the tree).
+pub fn resolve_nt(policy: NtPolicy, span_elems: usize) -> bool {
+    match policy {
+        NtPolicy::Always => true,
+        NtPolicy::Never => false,
+        NtPolicy::Auto => 2 * span_elems * std::mem::size_of::<f32>() > nt_threshold_bytes(),
+    }
+}
+
+/// Rows per cache block: input + output block (2 · n · 4 bytes per row)
+/// should fit in half the per-core L2, so every row a pass touched is
+/// still resident when the algorithm's next pass runs over the block.
+pub fn block_rows(n: usize) -> usize {
+    static L2_BUDGET: OnceLock<usize> = OnceLock::new();
+    let budget = *L2_BUDGET.get_or_init(|| crate::platform::detect().l2() / 2);
+    (budget / (2 * std::mem::size_of::<f32>() * n.max(1))).max(1)
+}
+
+/// The one threading policy shared by every execution path — normalize,
+/// pass-1 accumulation, and fused decode: how many chunks to split a
+/// `rows × n` batch into (1 = stay on the submitting thread).
+/// `max_threads = 0` means "all available cores"; the threshold is used
+/// as given (serving callers resolve auto = 0 through the [`Planner`]).
+pub fn plan_threads(rows: usize, n: usize, parallel_threshold: usize, max_threads: usize) -> usize {
+    let threads = if max_threads == 0 { available_threads() } else { max_threads };
+    let t = threads.clamp(1, rows.max(1));
+    if t <= 1 || rows < 2 || rows * n < parallel_threshold {
+        1
+    } else {
+        t
+    }
+}
+
+/// One row-range chunk of a pooled execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkPlan {
+    /// First row of the chunk.
+    pub first_row: usize,
+    /// Rows in the chunk.
+    pub rows: usize,
+    /// Preferred NUMA node for the chunk's pages and worker.  Currently a
+    /// single-node default (the topology's first node); the NUMA-aware
+    /// pool follow-up will spread chunks across the nodes reported by
+    /// [`crate::platform::numa_topology`].
+    pub numa_node: usize,
+}
+
+/// Split `rows` into up to `threads` contiguous chunks — the one chunking
+/// rule every pooled workload (normalize, accum, decode) shares, so a
+/// future tweak to the split cannot desynchronize them.  Matches the
+/// historical `chunk_jobs` rule exactly: ceil(rows / threads) rows per
+/// chunk, last chunk short.
+pub fn chunk_layout(rows: usize, threads: usize) -> Vec<ChunkPlan> {
+    if rows == 0 {
+        return Vec::new();
+    }
+    let node = default_numa_node();
+    let chunk_rows = rows.div_ceil(threads.max(1));
+    let mut out = Vec::with_capacity(rows.div_ceil(chunk_rows));
+    let mut r0 = 0;
+    while r0 < rows {
+        let rc = chunk_rows.min(rows - r0);
+        out.push(ChunkPlan { first_row: r0, rows: rc, numa_node: node });
+        r0 += rc;
+    }
+    out
+}
+
+/// The single-node placement default: the first node of the host topology.
+fn default_numa_node() -> usize {
+    static NODE: OnceLock<usize> = OnceLock::new();
+    *NODE.get_or_init(|| {
+        crate::platform::numa_topology().nodes.first().map(|n| n.id).unwrap_or(0)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The plan.
+// ---------------------------------------------------------------------------
+
+/// Which batched operation a plan covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlanOp {
+    /// Out-of-place batched normalization (`softmax_batch_planned`).
+    Normalize,
+    /// In-place batched normalization — the native serving path.  NT
+    /// stores stay off by design (the output lines are the just-read
+    /// input lines).
+    NormalizeInPlace,
+    /// Pass-1 `(m, n)` accumulation (`accum_extexp_batch_planned`).
+    Accum,
+    /// Fused decode (`sampling::sample_batch_planned`).
+    Decode,
+}
+
+impl fmt::Display for PlanOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            PlanOp::Normalize => "normalize",
+            PlanOp::NormalizeInPlace => "normalize_inplace",
+            PlanOp::Accum => "accum",
+            PlanOp::Decode => "decode",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// The complete execution decision for one `(op, rows, n)` batch shape.
+///
+/// A plan never changes *what* a kernel computes — only where and how it
+/// runs — so planned executions are bit-identical to the unplanned paths.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecPlan {
+    pub op: PlanOp,
+    /// Rows of the planned batch shape.
+    pub rows: usize,
+    /// Row length of the planned batch shape.
+    pub n: usize,
+    /// Softmax algorithm (always `TwoPass` for `Accum`/`Decode`, which
+    /// are defined on the two-pass `(m, n)` representation).
+    pub algorithm: Algorithm,
+    pub isa: Isa,
+    /// Unroll factor per pass of the algorithm, in execution order: the
+    /// measured static defaults the batched kernels are monomorphized at
+    /// ([`default_best_unroll`]) — i.e. what actually runs.
+    pub unrolls: Vec<(Pass, usize)>,
+    /// The attached [`TuneTable`]'s winning unroll per pass, when a table
+    /// was supplied.  Informational until the batched kernels grow
+    /// unroll dispatch (the single-row/figures path already consumes the
+    /// table): `repro plan` prints both lines so a tuned-vs-executed
+    /// disagreement is visible instead of misleading.
+    ///
+    /// [`TuneTable`]: crate::softmax::tuning::TuneTable
+    pub tuned_unrolls: Option<Vec<(Pass, usize)>>,
+    /// Cache-block size in rows (half the per-core L2).
+    pub block_rows: usize,
+    /// The NT policy the decision was made under.
+    pub nt_policy: NtPolicy,
+    /// Resolved non-temporal store decision for the whole batch span.
+    pub nt: bool,
+    /// The parallel threshold (elements) the placement used;
+    /// `usize::MAX` when auto mode skipped the STREAM measurement for a
+    /// batch too small to ever split.
+    pub threshold_elems: usize,
+    /// Planned kernel threads (1 = submitting thread, no pool hand-off).
+    pub threads: usize,
+    /// Row chunks when pooled (`threads > 1`); empty otherwise.
+    pub chunks: Vec<ChunkPlan>,
+    /// pjrt bucketing: the power-of-two padded row count, `Some` only
+    /// when the planner was configured for a bucketing pjrt backend.
+    pub bucket_rows: Option<usize>,
+    /// Predicted bytes moved by the kernel passes (the cost model's
+    /// Table-2 accounting: `costmodel::batch_bytes` for normalization,
+    /// the accumulation pass's read traffic for accum/decode).
+    pub predicted_bytes: usize,
+    /// Single-thread STREAM Scale GB/s the runtime prediction used, when
+    /// known (measured at startup or carried by a tune table).
+    pub gbps: Option<f64>,
+    /// Predicted bandwidth-bound runtime in seconds at [`ExecPlan::gbps`].
+    pub predicted_secs: Option<f64>,
+}
+
+impl ExecPlan {
+    /// Whether the plan hands the batch to the persistent worker pool.
+    pub fn pooled(&self) -> bool {
+        self.threads > 1
+    }
+
+    /// The plan in the line-oriented text schema of `docs/FORMATS.md`
+    /// (printed by `repro plan` and `repro serve --explain-plans`).
+    pub fn to_text(&self) -> String {
+        format!("{self}")
+    }
+}
+
+impl fmt::Display for ExecPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "plan op={} rows={} n={}", self.op, self.rows, self.n)?;
+        writeln!(f, "algorithm {}", self.algorithm)?;
+        writeln!(f, "isa {}", self.isa)?;
+        write!(f, "unroll")?;
+        for (pass, u) in &self.unrolls {
+            write!(f, " {pass}={u}")?;
+        }
+        writeln!(f)?;
+        if let Some(tuned) = &self.tuned_unrolls {
+            write!(f, "tuned_unroll")?;
+            for (pass, u) in tuned {
+                write!(f, " {pass}={u}")?;
+            }
+            writeln!(f)?;
+        }
+        writeln!(f, "block_rows {}", self.block_rows)?;
+        writeln!(f, "nt {} policy={}", self.nt, self.nt_policy)?;
+        if self.threshold_elems == usize::MAX {
+            writeln!(f, "threshold inf")?;
+        } else {
+            writeln!(f, "threshold {}", self.threshold_elems)?;
+        }
+        writeln!(f, "threads {} pool={}", self.threads, self.pooled())?;
+        for (i, c) in self.chunks.iter().enumerate() {
+            writeln!(
+                f,
+                "chunk {i} rows={}..{} node={}",
+                c.first_row,
+                c.first_row + c.rows,
+                c.numa_node
+            )?;
+        }
+        match self.bucket_rows {
+            Some(b) => writeln!(f, "bucket_rows {b}")?,
+            None => writeln!(f, "bucket_rows none")?,
+        }
+        write!(f, "predicted bytes={}", self.predicted_bytes)?;
+        match (self.predicted_secs, self.gbps) {
+            (Some(s), Some(g)) => write!(f, " secs={s:.3e} gbps={g:.1}"),
+            _ => write!(f, " secs=unknown gbps=unknown"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan construction (shared by the cached planner and the adhoc path).
+// ---------------------------------------------------------------------------
+
+struct BuildInputs<'a> {
+    op: PlanOp,
+    algorithm: Algorithm,
+    isa: Isa,
+    rows: usize,
+    n: usize,
+    /// Already-resolved threshold in elements (`usize::MAX` = never split).
+    threshold_elems: usize,
+    max_threads: usize,
+    nt_policy: NtPolicy,
+    bucket_pow2: bool,
+    gbps: Option<f64>,
+    tune: Option<&'a TuneTable>,
+}
+
+/// The one pow2 bucketing rule (shared by [`build_plan`] and
+/// [`Planner::bucket_rows`]).
+fn pow2_bucket(bucket_pow2: bool, rows: usize) -> Option<usize> {
+    if bucket_pow2 && rows > 0 {
+        Some(rows.next_power_of_two())
+    } else {
+        None
+    }
+}
+
+fn build_plan(inp: BuildInputs<'_>) -> ExecPlan {
+    let threads = plan_threads(inp.rows, inp.n, inp.threshold_elems, inp.max_threads);
+    let chunks = if threads > 1 { chunk_layout(inp.rows, threads) } else { Vec::new() };
+    // NT is a whole-batch decision (chunks inherit it), only meaningful
+    // for the out-of-place store pass; the reload algorithm's final pass
+    // re-reads its output and ignores it inside the kernel.
+    let nt = match inp.op {
+        PlanOp::Normalize => resolve_nt(inp.nt_policy, inp.rows * inp.n),
+        PlanOp::NormalizeInPlace | PlanOp::Accum | PlanOp::Decode => false,
+    };
+    let passes: &[Pass] = match inp.op {
+        PlanOp::Normalize | PlanOp::NormalizeInPlace => Pass::of_algorithm(inp.algorithm),
+        PlanOp::Accum | PlanOp::Decode => &[Pass::AccumExtExp],
+    };
+    // `unrolls` records what the monomorphized batch kernels actually
+    // run; the tune table's picks ride along separately so the explain
+    // output never claims a tuned variant executed when it didn't.
+    let unrolls = passes.iter().map(|&p| (p, default_best_unroll(p, inp.isa))).collect();
+    let tuned_unrolls = inp
+        .tune
+        .map(|t| passes.iter().map(|&p| (p, t.best(p, inp.isa))).collect::<Vec<_>>());
+    let predicted_bytes = match inp.op {
+        PlanOp::Normalize | PlanOp::NormalizeInPlace => {
+            costmodel::batch_bytes(inp.algorithm, inp.rows, inp.n)
+        }
+        PlanOp::Accum | PlanOp::Decode => {
+            let (r, w) = Pass::AccumExtExp.traffic();
+            (r + w) * inp.rows * inp.n * std::mem::size_of::<f32>()
+        }
+    };
+    let predicted_secs = inp.gbps.map(|g| predicted_bytes as f64 / (g * 1e9));
+    let bucket_rows = match inp.op {
+        PlanOp::Normalize | PlanOp::NormalizeInPlace => pow2_bucket(inp.bucket_pow2, inp.rows),
+        PlanOp::Accum | PlanOp::Decode => None,
+    };
+    ExecPlan {
+        op: inp.op,
+        rows: inp.rows,
+        n: inp.n,
+        algorithm: inp.algorithm,
+        isa: inp.isa,
+        unrolls,
+        tuned_unrolls,
+        block_rows: block_rows(inp.n),
+        nt_policy: inp.nt_policy,
+        nt,
+        threshold_elems: inp.threshold_elems,
+        threads,
+        chunks,
+        bucket_rows,
+        predicted_bytes,
+        gbps: inp.gbps,
+        predicted_secs,
+    }
+}
+
+/// One-shot uncached plan with the library `_auto` semantics: the
+/// threshold is applied **as given** (0 splits every batch of ≥ 2 rows —
+/// no STREAM resolution), NT is [`NtPolicy::Auto`] for out-of-place
+/// normalization, no bucketing, no tune table.  This is what the
+/// compatibility `_auto` entry points in `softmax::batch` and `sampling`
+/// build per call; serving paths use a cached [`Planner`] instead.
+pub fn adhoc(
+    op: PlanOp,
+    algorithm: Algorithm,
+    isa: Isa,
+    rows: usize,
+    n: usize,
+    parallel_threshold: usize,
+    max_threads: usize,
+) -> ExecPlan {
+    build_plan(BuildInputs {
+        op,
+        algorithm,
+        isa,
+        rows,
+        n,
+        threshold_elems: parallel_threshold,
+        max_threads,
+        nt_policy: NtPolicy::Auto,
+        bucket_pow2: false,
+        gbps: None,
+        tune: None,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Cache counters (held by coordinator metrics, shared with the planner).
+// ---------------------------------------------------------------------------
+
+/// Plan-cache hit/miss counters.  An instance lives in
+/// `coordinator::Metrics` and is shared (via `Arc`) with the router's
+/// planner, so serving metrics report cache behavior without any extra
+/// plumbing on the hot path.
+#[derive(Debug, Default)]
+pub struct PlanCacheCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCacheCounters {
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The cached planner.
+// ---------------------------------------------------------------------------
+
+type PlanKey = (PlanOp, usize, usize);
+type PlanMap = HashMap<PlanKey, Arc<ExecPlan>>;
+
+/// Hard bound on cached shapes per planner.  A serving process sees few
+/// distinct `(op, rows, n)` keys (the batcher bounds rows at `max_batch`
+/// and deployments use a handful of row lengths), but row length is
+/// client-controlled: beyond this cap, new shapes are planned per call
+/// and returned uncached, so an adversary cycling through logits lengths
+/// cannot grow the cache (or its leaked snapshots) without bound.
+const PLAN_CACHE_CAP: usize = 256;
+
+/// Lock-free-read plan cache: readers load one immutable snapshot pointer
+/// with a single atomic acquire; writers serialize on `grow`, clone the
+/// snapshot, insert, and publish a fresh one.  Superseded snapshot maps
+/// are leaked (a reader may hold one indefinitely), which is why the
+/// entry count is capped at [`PLAN_CACHE_CAP`]: total leaked memory is
+/// bounded by the cap, not by client behavior.
+struct PlanCache {
+    map: AtomicPtr<PlanMap>,
+    grow: Mutex<()>,
+}
+
+impl PlanCache {
+    fn new() -> PlanCache {
+        PlanCache { map: AtomicPtr::new(std::ptr::null_mut()), grow: Mutex::new(()) }
+    }
+
+    fn get(&self, key: &PlanKey) -> Option<Arc<ExecPlan>> {
+        let p = self.map.load(Ordering::Acquire);
+        if p.is_null() {
+            return None;
+        }
+        // SAFETY: published snapshots are leaked and never mutated after
+        // the Release store that made them visible.
+        unsafe { (*p).get(key).cloned() }
+    }
+
+    fn insert(&self, key: PlanKey, plan: ExecPlan) -> Arc<ExecPlan> {
+        let _g = self.grow.lock().unwrap();
+        // Re-check under the writer lock: a racing miss may have inserted.
+        let cur = self.map.load(Ordering::Acquire);
+        if !cur.is_null() {
+            // SAFETY: as in `get`.
+            if let Some(p) = unsafe { (*cur).get(&key).cloned() } {
+                return p;
+            }
+        }
+        let plan = Arc::new(plan);
+        let cur_len = if cur.is_null() { 0 } else { unsafe { (*cur).len() } };
+        if cur_len >= PLAN_CACHE_CAP {
+            // Cache full: serve this plan uncached (the caller drops it)
+            // instead of leaking yet another snapshot.
+            return plan;
+        }
+        // SAFETY: as in `get`; the clone shares the Arc entries.
+        let mut next: PlanMap =
+            if cur.is_null() { PlanMap::new() } else { unsafe { (*cur).clone() } };
+        next.insert(key, plan.clone());
+        self.map.store(Box::into_raw(Box::new(next)), Ordering::Release);
+        plan
+    }
+}
+
+/// Computes, caches, and explains [`ExecPlan`]s for a serving
+/// configuration.  Exactly one of these sits on the native engine; every
+/// normalize / accum / decode placement decision of the serving path
+/// flows through [`Planner::plan`].
+pub struct Planner {
+    algorithm: Algorithm,
+    isa: Isa,
+    /// Configured threshold; 0 = auto (resolved from measured STREAM
+    /// bandwidth lazily, per shape, skipping the measurement for batches
+    /// below [`MIN_PARALLEL_THRESHOLD`] that could never split).
+    parallel_threshold: usize,
+    /// Kernel threads per batch (0 = all logical cores).
+    batch_threads: usize,
+    nt_policy: NtPolicy,
+    /// Pad normalize batches to power-of-two row counts (pjrt backend).
+    bucket_pow2: bool,
+    tune: Option<TuneTable>,
+    stream_gbps: Option<f64>,
+    /// Print each freshly built plan (serve `--explain-plans`).
+    explain: bool,
+    counters: Arc<PlanCacheCounters>,
+    cache: PlanCache,
+}
+
+impl Planner {
+    pub fn new(
+        algorithm: Algorithm,
+        isa: Isa,
+        parallel_threshold: usize,
+        batch_threads: usize,
+    ) -> Planner {
+        Planner {
+            algorithm,
+            isa,
+            parallel_threshold,
+            batch_threads,
+            nt_policy: NtPolicy::Auto,
+            bucket_pow2: false,
+            tune: None,
+            stream_gbps: None,
+            explain: false,
+            counters: Arc::new(PlanCacheCounters::default()),
+            cache: PlanCache::new(),
+        }
+    }
+
+    /// Build from a serving config: algorithm/ISA/threshold/threads from
+    /// the config, bucketing only when the pjrt backend would use it, the
+    /// tune table and bandwidth when the launcher attached them.
+    pub fn from_config(cfg: &ServeConfig) -> Planner {
+        let mut p = Planner::new(cfg.algorithm, cfg.isa, cfg.parallel_threshold, cfg.batch_threads);
+        p.bucket_pow2 = cfg.backend == Backend::Pjrt && cfg.bucket_pow2;
+        p.stream_gbps = cfg.stream_gbps;
+        p.explain = cfg.explain_plans;
+        if let Some(t) = &cfg.tune_table {
+            if p.stream_gbps.is_none() {
+                p.stream_gbps = t.stream_gbps;
+            }
+            p.tune = Some(t.clone());
+        }
+        p
+    }
+
+    /// Override the NT store policy (benches, tests).
+    pub fn with_nt_policy(mut self, policy: NtPolicy) -> Planner {
+        self.nt_policy = policy;
+        self
+    }
+
+    /// Enable pjrt power-of-two row bucketing.
+    pub fn with_bucket_pow2(mut self, on: bool) -> Planner {
+        self.bucket_pow2 = on;
+        self
+    }
+
+    /// Attach a tune table (per-pass unroll picks; adopts its measured
+    /// STREAM bandwidth when none was set).
+    pub fn with_tune_table(mut self, table: TuneTable) -> Planner {
+        if self.stream_gbps.is_none() {
+            self.stream_gbps = table.stream_gbps;
+        }
+        self.tune = Some(table);
+        self
+    }
+
+    /// Supply the measured STREAM bandwidth for runtime predictions.
+    pub fn with_stream_gbps(mut self, gbps: Option<f64>) -> Planner {
+        self.stream_gbps = gbps;
+        self
+    }
+
+    /// Print every freshly built plan (`repro serve --explain-plans`).
+    pub fn with_explain(mut self, on: bool) -> Planner {
+        self.explain = on;
+        self
+    }
+
+    /// Share the cache counters (the coordinator attaches its metrics').
+    pub fn set_counters(&mut self, counters: Arc<PlanCacheCounters>) {
+        self.counters = counters;
+    }
+
+    /// `(hits, misses)` of the plan cache.
+    pub fn plan_stats(&self) -> (u64, u64) {
+        (self.counters.hits(), self.counters.misses())
+    }
+
+    /// The pjrt bucketing decision alone — no threshold resolution, no
+    /// cache traffic: the router sizes and pads batches it hands to the
+    /// PJRT service without building (or STREAM-measuring for) a native
+    /// execution plan it may never run.  `None` when bucketing is off.
+    pub fn bucket_rows(&self, rows: usize) -> Option<usize> {
+        pow2_bucket(self.bucket_pow2, rows)
+    }
+
+    /// The plan for one `(op, rows, n)` batch shape — cached: repeated
+    /// shapes return the published plan with one atomic load and no
+    /// re-derivation.  (Two threads missing the same fresh shape at once
+    /// may both count a miss; the cache still stores exactly one plan.
+    /// Past [`PLAN_CACHE_CAP`] distinct shapes, new shapes are planned
+    /// per call and every call counts as a miss.)
+    pub fn plan(&self, op: PlanOp, rows: usize, n: usize) -> Arc<ExecPlan> {
+        let key = (op, rows, n);
+        if let Some(p) = self.cache.get(&key) {
+            self.counters.hits.fetch_add(1, Ordering::Relaxed);
+            return p;
+        }
+        self.counters.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = self.build(op, rows, n);
+        if self.explain {
+            println!("{plan}");
+        }
+        self.cache.insert(key, plan)
+    }
+
+    /// The threshold (elements) and bandwidth for one shape.  Auto mode
+    /// (configured 0) skips the STREAM measurement entirely for batches
+    /// below the derivation's lower clamp — they can never split.
+    fn resolve_threshold(&self, rows: usize, n: usize) -> (usize, Option<f64>) {
+        if self.parallel_threshold != 0 {
+            return (self.parallel_threshold, self.stream_gbps);
+        }
+        if rows * n < MIN_PARALLEL_THRESHOLD {
+            return (usize::MAX, self.stream_gbps);
+        }
+        let (thr, gbps) = measured_parallel_threshold();
+        (thr, Some(gbps))
+    }
+
+    fn build(&self, op: PlanOp, rows: usize, n: usize) -> ExecPlan {
+        // Accum and decode are defined on the two-pass (m, n)
+        // representation whatever algorithm normalization is configured
+        // to use.
+        let algorithm = match op {
+            PlanOp::Accum | PlanOp::Decode => Algorithm::TwoPass,
+            PlanOp::Normalize | PlanOp::NormalizeInPlace => self.algorithm,
+        };
+        let (threshold_elems, gbps) = self.resolve_threshold(rows, n);
+        build_plan(BuildInputs {
+            op,
+            algorithm,
+            isa: self.isa,
+            rows,
+            n,
+            threshold_elems,
+            max_threads: self.batch_threads,
+            nt_policy: self.nt_policy,
+            bucket_pow2: self.bucket_pow2,
+            gbps,
+            tune: self.tune.as_ref(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adhoc_plans_are_deterministic_and_cover_rows() {
+        for &(rows, n) in &[(1usize, 64usize), (7, 333), (64, 4096)] {
+            for op in [PlanOp::Normalize, PlanOp::NormalizeInPlace, PlanOp::Accum, PlanOp::Decode]
+            {
+                let a = adhoc(op, Algorithm::TwoPass, Isa::Scalar, rows, n, 1, 4);
+                let b = adhoc(op, Algorithm::TwoPass, Isa::Scalar, rows, n, 1, 4);
+                assert_eq!(a, b, "{op} rows={rows} n={n}");
+                assert!(a.threads >= 1 && a.block_rows >= 1);
+                if a.threads > 1 {
+                    let covered: usize = a.chunks.iter().map(|c| c.rows).sum();
+                    assert_eq!(covered, rows, "{op} chunks must cover the batch");
+                    assert_eq!(a.chunks[0].first_row, 0);
+                    for w in a.chunks.windows(2) {
+                        assert_eq!(w[0].first_row + w[0].rows, w[1].first_row);
+                    }
+                } else {
+                    assert!(a.chunks.is_empty());
+                }
+                assert!(a.bucket_rows.is_none(), "adhoc plans never bucket");
+            }
+        }
+    }
+
+    #[test]
+    fn cache_hits_repeated_shapes_without_rederiving() {
+        let p = Planner::new(Algorithm::TwoPass, Isa::Scalar, 1 << 20, 2);
+        let first = p.plan(PlanOp::Normalize, 8, 256);
+        for _ in 0..4 {
+            let again = p.plan(PlanOp::Normalize, 8, 256);
+            assert!(Arc::ptr_eq(&first, &again), "cached plan must be reused");
+        }
+        assert_eq!(p.plan_stats(), (4, 1));
+        // A different shape (or op) is a fresh miss.
+        let _ = p.plan(PlanOp::Normalize, 16, 256);
+        let _ = p.plan(PlanOp::Decode, 8, 256);
+        assert_eq!(p.plan_stats(), (4, 3));
+    }
+
+    #[test]
+    fn cache_is_bounded_past_the_cap() {
+        let p = Planner::new(Algorithm::TwoPass, Isa::Scalar, usize::MAX, 1);
+        for n in 0..(PLAN_CACHE_CAP + 10) {
+            let _ = p.plan(PlanOp::Decode, 1, 64 + n);
+        }
+        // Shapes cached before the cap still hit...
+        let cached = p.plan(PlanOp::Decode, 1, 64);
+        let again = p.plan(PlanOp::Decode, 1, 64);
+        assert!(Arc::ptr_eq(&cached, &again));
+        // ...while overflow shapes are planned per call: identical plans,
+        // fresh allocations, no unbounded growth.
+        let over_a = p.plan(PlanOp::Decode, 1, 64 + PLAN_CACHE_CAP + 5);
+        let over_b = p.plan(PlanOp::Decode, 1, 64 + PLAN_CACHE_CAP + 5);
+        assert_eq!(over_a, over_b);
+        assert!(!Arc::ptr_eq(&over_a, &over_b), "past the cap, plans must not be cached");
+    }
+
+    #[test]
+    fn explicit_threshold_is_used_as_configured() {
+        let p = Planner::new(Algorithm::TwoPass, Isa::Scalar, 4096, 4);
+        let small = p.plan(PlanOp::Normalize, 2, 512); // 1024 elems < 4096
+        assert_eq!(small.threads, 1);
+        let big = p.plan(PlanOp::Normalize, 8, 1024); // 8192 elems >= 4096
+        assert!(big.threads > 1);
+        assert_eq!(big.threshold_elems, 4096);
+        let covered: usize = big.chunks.iter().map(|c| c.rows).sum();
+        assert_eq!(covered, 8);
+    }
+
+    #[test]
+    fn auto_mode_never_splits_below_the_lower_clamp() {
+        // rows * n below MIN_PARALLEL_THRESHOLD in auto mode must not
+        // measure STREAM: the plan records an infinite threshold.
+        let p = Planner::new(Algorithm::TwoPass, Isa::Scalar, 0, 4);
+        let plan = p.plan(PlanOp::Normalize, 4, 64);
+        assert_eq!(plan.threshold_elems, usize::MAX);
+        assert_eq!(plan.threads, 1);
+    }
+
+    #[test]
+    fn decode_and_accum_plans_pin_the_two_pass_algorithm() {
+        let p = Planner::new(Algorithm::ThreePassReload, Isa::Scalar, 1 << 20, 1);
+        assert_eq!(p.plan(PlanOp::Decode, 4, 128).algorithm, Algorithm::TwoPass);
+        assert_eq!(p.plan(PlanOp::Accum, 4, 128).algorithm, Algorithm::TwoPass);
+        assert_eq!(p.plan(PlanOp::Normalize, 4, 128).algorithm, Algorithm::ThreePassReload);
+    }
+
+    #[test]
+    fn predicted_bytes_match_the_cost_model() {
+        let p = Planner::new(Algorithm::TwoPass, Isa::Scalar, 1 << 20, 1);
+        for alg in Algorithm::ALL {
+            let pl = Planner::new(alg, Isa::Scalar, 1 << 20, 1);
+            let plan = pl.plan(PlanOp::Normalize, 8, 32768);
+            assert_eq!(plan.predicted_bytes, costmodel::batch_bytes(alg, 8, 32768));
+            assert_eq!(
+                plan.predicted_bytes,
+                costmodel::cost(alg).bandwidth_n * 8 * 32768 * 4
+            );
+        }
+        // Accum/decode move the accumulation pass's 1N read traffic.
+        let d = p.plan(PlanOp::Decode, 8, 32768);
+        assert_eq!(d.predicted_bytes, 8 * 32768 * 4);
+        // Runtime prediction only exists once a bandwidth is known.
+        assert!(d.predicted_secs.is_none());
+        let with_bw =
+            Planner::new(Algorithm::TwoPass, Isa::Scalar, 1 << 20, 1).with_stream_gbps(Some(10.0));
+        let plan = with_bw.plan(PlanOp::Normalize, 8, 32768);
+        let want = costmodel::predict_batch_secs(Algorithm::TwoPass, 8, 32768, 10.0);
+        assert!((plan.predicted_secs.unwrap() - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn bucketing_rounds_rows_up_only_when_enabled() {
+        let p = Planner::new(Algorithm::TwoPass, Isa::Scalar, 1 << 20, 1).with_bucket_pow2(true);
+        assert_eq!(p.plan(PlanOp::NormalizeInPlace, 5, 64).bucket_rows, Some(8));
+        assert_eq!(p.plan(PlanOp::NormalizeInPlace, 8, 64).bucket_rows, Some(8));
+        assert_eq!(p.plan(PlanOp::Decode, 5, 64).bucket_rows, None);
+        let off = Planner::new(Algorithm::TwoPass, Isa::Scalar, 1 << 20, 1);
+        assert_eq!(off.plan(PlanOp::NormalizeInPlace, 5, 64).bucket_rows, None);
+    }
+
+    #[test]
+    fn plan_text_schema_is_line_oriented() {
+        let p = Planner::new(Algorithm::TwoPass, Isa::Scalar, 4096, 2)
+            .with_stream_gbps(Some(14.0));
+        let text = p.plan(PlanOp::Normalize, 8, 1024).to_text();
+        assert!(text.starts_with("plan op=normalize rows=8 n=1024\n"), "{text}");
+        for key in ["algorithm ", "isa ", "unroll ", "block_rows ", "nt ", "threshold ",
+            "threads ", "bucket_rows ", "predicted bytes="]
+        {
+            assert!(text.contains(key), "missing {key:?} in:\n{text}");
+        }
+        assert!(text.contains("gbps=14.0"), "{text}");
+    }
+
+    #[test]
+    fn concurrent_planning_converges_to_one_plan() {
+        let p = std::sync::Arc::new(Planner::new(Algorithm::TwoPass, Isa::Scalar, 4096, 2));
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let p = p.clone();
+            joins.push(std::thread::spawn(move || {
+                (0..100)
+                    .map(|i| Arc::as_ptr(&p.plan(PlanOp::Decode, 4 + (i % 3), 512)) as usize)
+                    .collect::<Vec<usize>>()
+            }));
+        }
+        let all: Vec<Vec<usize>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        // Every thread must have observed the same plan per shape.
+        for shape in 0..3 {
+            let ptrs: std::collections::HashSet<usize> =
+                all.iter().flat_map(|v| v.iter().skip(shape).step_by(3)).copied().collect();
+            assert_eq!(ptrs.len(), 1, "shape {shape} resolved to multiple plans");
+        }
+        let (hits, misses) = p.plan_stats();
+        assert_eq!(hits + misses, 800);
+        assert!(misses >= 3);
+    }
+}

@@ -9,6 +9,7 @@
 use std::fmt;
 use std::fs;
 use std::path::Path;
+use std::sync::OnceLock;
 
 /// One cache level as seen by cpu0.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -202,6 +203,118 @@ pub fn count_cpu_list(s: &str) -> usize {
         .sum()
 }
 
+// ---------------------------------------------------------------------------
+// NUMA topology
+// ---------------------------------------------------------------------------
+
+/// One NUMA node and the logical CPUs it owns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NumaNode {
+    pub id: usize,
+    pub cpus: Vec<usize>,
+}
+
+/// Host NUMA topology as reported by `/sys/devices/system/node`; a
+/// machine (or container) without the sysfs tree reports one node owning
+/// every logical CPU, so consumers never need a special case.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NumaTopology {
+    /// Nodes in increasing id order; never empty.
+    pub nodes: Vec<NumaNode>,
+}
+
+impl NumaTopology {
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The node owning `cpu` (falls back to the first node for CPUs the
+    /// probe didn't see — hotplug, restricted sysfs).
+    pub fn node_of_cpu(&self, cpu: usize) -> usize {
+        self.nodes
+            .iter()
+            .find(|nd| nd.cpus.contains(&cpu))
+            .or(self.nodes.first())
+            .map(|nd| nd.id)
+            .unwrap_or(0)
+    }
+}
+
+impl fmt::Display for NumaTopology {
+    /// `node0: 8 cpus; node1: 8 cpus`
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, nd) in self.nodes.iter().enumerate() {
+            if i > 0 {
+                write!(f, "; ")?;
+            }
+            write!(f, "node{}: {} cpus", nd.id, nd.cpus.len())?;
+        }
+        Ok(())
+    }
+}
+
+/// Probe the host NUMA topology (cached for the process).  The execution
+/// planner reads this to populate per-chunk placement; `repro tune`
+/// surfaces it so saved tuning runs record the machine shape.
+pub fn numa_topology() -> &'static NumaTopology {
+    static T: OnceLock<NumaTopology> = OnceLock::new();
+    T.get_or_init(|| {
+        read_numa_topology(Path::new("/sys/devices/system/node"))
+            .unwrap_or_else(single_node_fallback)
+    })
+}
+
+fn single_node_fallback() -> NumaTopology {
+    let cpus = (0..detect().logical_cpus.max(1)).collect();
+    NumaTopology { nodes: vec![NumaNode { id: 0, cpus }] }
+}
+
+/// Parse `nodeN/cpulist` entries; `None` when the tree is absent or holds
+/// no parseable node (minimal containers), letting the caller fall back.
+fn read_numa_topology(dir: &Path) -> Option<NumaTopology> {
+    let entries = fs::read_dir(dir).ok()?;
+    let mut nodes = Vec::new();
+    for e in entries.flatten() {
+        let name = e.file_name().to_string_lossy().into_owned();
+        let Some(id) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok()) else {
+            continue;
+        };
+        let Ok(cpulist) = fs::read_to_string(e.path().join("cpulist")) else {
+            continue;
+        };
+        let cpus = parse_cpu_list(&cpulist);
+        if !cpus.is_empty() {
+            nodes.push(NumaNode { id, cpus });
+        }
+    }
+    if nodes.is_empty() {
+        return None;
+    }
+    nodes.sort_by_key(|n| n.id);
+    Some(NumaTopology { nodes })
+}
+
+/// Expand a sysfs cpu list like "0-3,8-11" into cpu ids (the id-yielding
+/// sibling of [`count_cpu_list`]).
+pub fn parse_cpu_list(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for part in s.trim().split(',').filter(|p| !p.is_empty()) {
+        match part.split_once('-') {
+            Some((a, b)) => {
+                let a: usize = a.trim().parse().unwrap_or(0);
+                let b: usize = b.trim().parse().unwrap_or(a);
+                out.extend(a..=b);
+            }
+            None => {
+                if let Ok(v) = part.trim().parse() {
+                    out.push(v);
+                }
+            }
+        }
+    }
+    out
+}
+
 /// Pin the calling thread to one CPU (best effort).  Returns whether the
 /// affinity call succeeded; `false` on unsupported platforms or when the
 /// kernel refuses (e.g. a restricted sandbox).  Used by the batched
@@ -356,6 +469,48 @@ mod tests {
         assert_eq!(count_cpu_list("0-3"), 4);
         assert_eq!(count_cpu_list("0-3,8-11"), 8);
         assert_eq!(count_cpu_list(""), 0);
+    }
+
+    #[test]
+    fn cpu_list_expansion() {
+        assert_eq!(parse_cpu_list("0"), vec![0]);
+        assert_eq!(parse_cpu_list("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpu_list("0-1,8-9"), vec![0, 1, 8, 9]);
+        assert_eq!(parse_cpu_list("\n"), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn numa_topology_always_has_a_node() {
+        // Works with or without /sys/devices/system/node: the fallback is
+        // one node owning every logical CPU.
+        let t = numa_topology();
+        assert!(t.node_count() >= 1);
+        assert!(!t.nodes[0].cpus.is_empty());
+        let first = t.nodes[0].id;
+        assert_eq!(t.node_of_cpu(t.nodes[0].cpus[0]), first);
+        // Unknown CPUs fall back to the first node instead of panicking.
+        let _ = t.node_of_cpu(usize::MAX);
+        assert!(!t.to_string().is_empty());
+    }
+
+    #[test]
+    fn numa_probe_reads_a_synthetic_tree() {
+        let dir = std::env::temp_dir().join(format!("numa-probe-test-{}", std::process::id()));
+        let mk = |node: &str, cpulist: &str| {
+            let d = dir.join(node);
+            fs::create_dir_all(&d).unwrap();
+            fs::write(d.join("cpulist"), cpulist).unwrap();
+        };
+        mk("node0", "0-3\n");
+        mk("node1", "4-7\n");
+        fs::create_dir_all(dir.join("not-a-node")).unwrap();
+        let t = read_numa_topology(&dir).expect("synthetic tree parses");
+        assert_eq!(t.node_count(), 2);
+        assert_eq!(t.nodes[0].cpus, vec![0, 1, 2, 3]);
+        assert_eq!(t.node_of_cpu(6), 1);
+        assert_eq!(t.to_string(), "node0: 4 cpus; node1: 4 cpus");
+        let _ = fs::remove_dir_all(&dir);
+        assert!(read_numa_topology(Path::new("/definitely/not/here")).is_none());
     }
 
     #[test]

@@ -25,12 +25,15 @@
 //!   sampling with a caller-seeded [`Rng`] over the unnormalized extended
 //!   weights; the full-categorical case walks the extended CDF against a
 //!   target `u · Σ` instead of materializing probabilities.
-//! * [`sample_batch_auto`] — the serving entry point: decode batches of at
-//!   least `parallel_threshold` elements split at row boundaries across
-//!   the persistent batch-execution engine's worker pool
-//!   ([`crate::softmax::batch`]), exactly like normalize batches; smaller
-//!   ones decode on the submitting thread.  Ids and logprobs are
-//!   bit-identical across placements and thread counts by construction.
+//! * [`sample_batch_planned`] / [`sample_batch_auto`] — the batched entry
+//!   points: decode batches of at least `parallel_threshold` elements
+//!   split at row boundaries across the persistent batch-execution
+//!   engine's worker pool ([`crate::softmax::batch`]), exactly like
+//!   normalize batches; smaller ones decode on the submitting thread.
+//!   The placement comes from an execution plan ([`crate::plan`]) — the
+//!   serving path reuses a cached per-shape plan, the `_auto` wrapper
+//!   builds a one-shot one.  Ids and logprobs are bit-identical across
+//!   placements and thread counts by construction.
 //!
 //! The SIMD kernels (`sampling::avx2`, `sampling::avx512`) reuse the
 //! polynomial and `(m, n)` accumulation of `softmax/exp.rs` and the ISA
@@ -52,9 +55,10 @@ pub mod scalar;
 use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::softmax::batch::{decode_chunked, note_scan_pass, plan_threads, RowBatch};
+use crate::plan::{self, ExecPlan, PlanOp};
+use crate::softmax::batch::{decode_chunked, note_scan_pass, RowBatch};
 use crate::softmax::exp::{extexp, ExtSum};
-use crate::softmax::Isa;
+use crate::softmax::{Algorithm, Isa};
 use crate::util::rng::Rng;
 
 /// Per-request sampling controls (the decode endpoint's per-row knobs).
@@ -590,20 +594,11 @@ pub fn sample_batch(
 /// `parallel_threshold` elements (rows × n) split at row boundaries into
 /// fused-decode jobs on the persistent, core-pinned worker pool; smaller
 /// batches decode on the submitting thread.  The threshold is used as
-/// given — `0` splits every batch of ≥ 2 rows; serving callers resolve
-/// the config's auto (`0`) setting to a measured value first, exactly as
-/// they do for normalization (see
-/// [`resolve_parallel_threshold`](crate::softmax::tuning::resolve_parallel_threshold)
-/// and `NativeEngine::threshold_for`).  `max_threads = 0` means "all
+/// given — `0` splits every batch of ≥ 2 rows; serving callers plan
+/// through the cached [`crate::plan::Planner`] (which resolves the
+/// config's auto = `0` setting to a measured value) and call
+/// [`sample_batch_planned`] instead.  `max_threads = 0` means "all
 /// available cores".
-///
-/// Token ids and logprobs are **bit-identical** to single-thread
-/// submitting-worker decode on every ISA and for every thread count:
-/// decoding is a pure per-row function of `(logits, params)` and every
-/// selection decision is made by the same scalar, index-ordered code
-/// whatever the row's placement.  A row error (non-finite logits, bad
-/// per-row params) fails the whole batch on both paths; a kernel panic
-/// inside a pool worker is confined to this batch (the pool survives).
 ///
 /// [`softmax_batch_auto`]: crate::softmax::batch::softmax_batch_auto
 pub fn sample_batch_auto(
@@ -613,15 +608,56 @@ pub fn sample_batch_auto(
     parallel_threshold: usize,
     max_threads: usize,
 ) -> Result<Vec<Choice>, SamplingError> {
-    validate_batch(isa, x, params)?;
-    let t = plan_threads(x.rows(), x.n(), parallel_threshold, max_threads);
-    if t <= 1 {
-        return sample_batch(isa, x, params);
+    let p = plan::adhoc(
+        PlanOp::Decode,
+        Algorithm::TwoPass,
+        isa,
+        x.rows(),
+        x.n(),
+        parallel_threshold,
+        max_threads,
+    );
+    sample_batch_planned(&p, x, params)
+}
+
+/// Execute one planned decode batch: the submit-vs-pool decision and the
+/// chunk layout come from the plan; this function only scans rows.
+///
+/// Token ids and logprobs are **bit-identical** to single-thread
+/// submitting-worker decode on every ISA and for every plan placement:
+/// decoding is a pure per-row function of `(logits, params)` and every
+/// selection decision is made by the same scalar, index-ordered code
+/// whatever the row's placement.  A row error (non-finite logits, bad
+/// per-row params) fails the whole batch on both paths; a kernel panic
+/// inside a pool worker is confined to this batch (the pool survives).
+pub fn sample_batch_planned(
+    p: &ExecPlan,
+    x: &RowBatch,
+    params: &[SamplingParams],
+) -> Result<Vec<Choice>, SamplingError> {
+    validate_batch(p.isa, x, params)?;
+    if p.op != PlanOp::Decode {
+        return Err(SamplingError::BadParams(format!(
+            "plan built for op {} cannot decode",
+            p.op
+        )));
+    }
+    if (p.rows, p.n) != (x.rows(), x.n()) {
+        return Err(SamplingError::BadParams(format!(
+            "plan shape {}x{} does not match batch {}x{}",
+            p.rows,
+            p.n,
+            x.rows(),
+            x.n()
+        )));
+    }
+    if p.threads <= 1 {
+        return sample_batch(p.isa, x, params);
     }
     // Placeholder-filled output: the pool's decode jobs overwrite every
     // slot, and errors discard the whole vector.
     let mut out = vec![Choice { token: 0, logprob: 0.0 }; x.rows()];
-    decode_chunked(isa, x, params, &mut out, t)?;
+    decode_chunked(p, x, params, &mut out)?;
     Ok(out)
 }
 
@@ -757,7 +793,13 @@ mod tests {
                 SamplingParams { seed, ..SamplingParams::default() },
                 SamplingParams { seed, top_k: 10, ..SamplingParams::default() },
                 SamplingParams { seed, top_p: 0.8, ..SamplingParams::default() },
-                SamplingParams { seed, temperature: 0.5, top_k: 5, top_p: 0.9, ..SamplingParams::default() },
+                SamplingParams {
+                    seed,
+                    temperature: 0.5,
+                    top_k: 5,
+                    top_p: 0.9,
+                    ..SamplingParams::default()
+                },
             ] {
                 let a = sample_row(isa, &x, &params).unwrap();
                 let b = sample_row(isa, &x, &params).unwrap();
@@ -766,7 +808,10 @@ mod tests {
                 assert!(a.logprob <= 0.0 || a.logprob < 1e-6);
             }
         }
-        assert_eq!(sample_row(isa, &[], &SamplingParams::default()), Err(SamplingError::EmptyInput));
+        assert_eq!(
+            sample_row(isa, &[], &SamplingParams::default()),
+            Err(SamplingError::EmptyInput)
+        );
         let bad = SamplingParams { temperature: -1.0, ..SamplingParams::default() };
         assert!(matches!(sample_row(isa, &x, &bad), Err(SamplingError::BadParams(_))));
         let bad = SamplingParams { top_p: 0.0, ..SamplingParams::default() };
@@ -856,8 +901,9 @@ mod tests {
         let isa = Isa::detect_best();
         let one = sample_batch(isa, &b, &[SamplingParams::greedy()]).unwrap();
         assert_eq!(one.len(), 3);
-        let per: Vec<SamplingParams> =
-            (0..3).map(|i| SamplingParams { seed: i as u64, ..SamplingParams::default() }).collect();
+        let per: Vec<SamplingParams> = (0..3)
+            .map(|i| SamplingParams { seed: i as u64, ..SamplingParams::default() })
+            .collect();
         assert_eq!(sample_batch(isa, &b, &per).unwrap().len(), 3);
         assert_eq!(
             sample_batch(isa, &b, &per[..2]),

@@ -24,10 +24,18 @@
 //! * [`softmax_batch_inplace`] — normalize a batch into its own storage
 //!   (the coordinator reuses request buffers for responses; no output
 //!   allocation on the native serving path);
-//! * [`softmax_batch_auto`] — the serving entry point: single-threaded
-//!   below a configurable element-count threshold
-//!   ([`crate::config::ServeConfig::parallel_threshold`], 0 = derived from
-//!   measured STREAM bandwidth), parallel above.
+//! * [`softmax_batch_auto`] — the compatibility entry point: single-
+//!   threaded below a configurable element-count threshold
+//!   ([`crate::config::ServeConfig::parallel_threshold`], applied as
+//!   given), parallel above — implemented as a one-shot
+//!   [`crate::plan::adhoc`] plan;
+//! * [`softmax_batch_planned`] / [`softmax_batch_inplace_planned`] /
+//!   [`accum_extexp_batch_planned`] — the serving entry points: every
+//!   placement decision (block size, NT stores, submit-vs-pool, chunk
+//!   layout) comes from a [`crate::plan::ExecPlan`] computed and cached
+//!   by the execution planner; these functions only move bytes, which is
+//!   why planned outputs are bit-identical to the unplanned paths by
+//!   construction.
 //!
 //! # Write-allocate avoidance (non-temporal stores)
 //!
@@ -82,7 +90,10 @@ use std::sync::{mpsc, Mutex, OnceLock};
 #[cfg(target_arch = "x86_64")]
 use super::{avx2, avx512};
 use super::{exp::ExtSum, scalar, Algorithm, Isa, SoftmaxError};
+use crate::plan::{self, ChunkPlan, ExecPlan, PlanOp};
 use crate::sampling::{sample_row, Choice, SamplingError, SamplingParams};
+
+pub use crate::plan::NtPolicy;
 
 /// Alignment of every [`RowBatch`] allocation: one cache line, and the
 /// requirement for `MOVNTPS`/`VMOVNTPS` streaming stores on every ISA.
@@ -326,38 +337,10 @@ impl RowBatch {
 }
 
 // ---------------------------------------------------------------------------
-// Non-temporal store policy
+// Non-temporal store policy: the [`NtPolicy`] enum and its resolution
+// live in [`crate::plan`] — the only module allowed to make placement
+// decisions — and are re-exported here for the kernels' callers.
 // ---------------------------------------------------------------------------
-
-/// Whether the batched engine may use the streaming (non-temporal) scale
-/// pass.  Outputs are bit-identical across policies; only DRAM traffic and
-/// cache-pollution behavior differ.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum NtPolicy {
-    /// Stream when the span's working set (input + output) exceeds the
-    /// host LLC — the write-allocate traffic is real only out of cache.
-    Auto,
-    /// Always select the NT scale pass (benches, tests).
-    Always,
-    /// Never stream (benches, tests, and the in-place path).
-    Never,
-}
-
-/// Cache-residency threshold for [`NtPolicy::Auto`]: the host LLC size.
-fn nt_threshold_bytes() -> usize {
-    static B: OnceLock<usize> = OnceLock::new();
-    *B.get_or_init(|| crate::platform::detect().llc())
-}
-
-fn use_nt(policy: NtPolicy, span_elems: usize) -> bool {
-    match policy {
-        NtPolicy::Always => true,
-        NtPolicy::Never => false,
-        NtPolicy::Auto => {
-            2 * span_elems * std::mem::size_of::<f32>() > nt_threshold_bytes()
-        }
-    }
-}
 
 /// Make preceding streaming stores globally visible (no-op off x86_64).
 #[inline]
@@ -400,8 +383,8 @@ pub fn softmax_batch_with_nt(
     if x.rows == 0 {
         return Ok(());
     }
-    let nt = use_nt(policy, x.rows * x.n);
-    run_rows(alg, isa, x.as_slice(), y.as_mut_slice(), x.n, block_rows_for(x.n), nt);
+    let nt = plan::resolve_nt(policy, x.rows * x.n);
+    run_rows(alg, isa, x.as_slice(), y.as_mut_slice(), x.n, plan::block_rows(x.n), nt);
     Ok(())
 }
 
@@ -418,7 +401,7 @@ pub fn softmax_batch_with_block(
     if x.rows == 0 {
         return Ok(());
     }
-    let nt = use_nt(NtPolicy::Auto, x.rows * x.n);
+    let nt = plan::resolve_nt(NtPolicy::Auto, x.rows * x.n);
     run_rows(alg, isa, x.as_slice(), y.as_mut_slice(), x.n, block_rows.max(1), nt);
     Ok(())
 }
@@ -441,38 +424,24 @@ pub fn softmax_batch_parallel(
     }
     let t = threads.clamp(1, x.rows);
     let n = x.n;
-    let block = block_rows_for(n);
-    let nt = use_nt(NtPolicy::Auto, x.rows * n);
+    let block = plan::block_rows(n);
+    let nt = plan::resolve_nt(NtPolicy::Auto, x.rows * n);
     if t <= 1 {
         run_rows(alg, isa, x.as_slice(), y.as_mut_slice(), n, block, nt);
         return Ok(());
     }
-    run_chunked(alg, isa, x.as_slice(), y.as_mut_slice(), n, block, nt, t);
+    let chunks = plan::chunk_layout(x.rows, t);
+    run_chunked(alg, isa, x.as_slice(), y.as_mut_slice(), n, block, nt, &chunks, t);
     Ok(())
-}
-
-/// The one threading policy shared by every `_auto` entry point — the
-/// normalize paths here and decode in [`crate::sampling`]: how many
-/// chunks to split a `rows × n` batch into (1 = stay single-threaded).
-/// `max_threads = 0` means "all available cores".
-pub(crate) fn plan_threads(
-    rows: usize,
-    n: usize,
-    parallel_threshold: usize,
-    max_threads: usize,
-) -> usize {
-    let threads = if max_threads == 0 { available_threads() } else { max_threads };
-    let t = threads.clamp(1, rows.max(1));
-    if t <= 1 || rows < 2 || rows * n < parallel_threshold {
-        1
-    } else {
-        t
-    }
 }
 
 /// Serving entry point: single-threaded when the batch is small
 /// (`rows · n < parallel_threshold`), parallel otherwise.  `max_threads =
-/// 0` means "all available cores".
+/// 0` means "all available cores".  Builds a one-shot plan
+/// ([`crate::plan::adhoc`] — the threshold is applied as given) and runs
+/// it; serving callers with a stable configuration plan through the
+/// cached [`crate::plan::Planner`] and call [`softmax_batch_planned`]
+/// instead.
 pub fn softmax_batch_auto(
     alg: Algorithm,
     isa: Isa,
@@ -481,12 +450,64 @@ pub fn softmax_batch_auto(
     parallel_threshold: usize,
     max_threads: usize,
 ) -> Result<(), SoftmaxError> {
-    let t = plan_threads(x.rows(), x.n(), parallel_threshold, max_threads);
-    if t <= 1 {
-        softmax_batch(alg, isa, x, y)
-    } else {
-        softmax_batch_parallel(alg, isa, x, y, t)
+    let p =
+        plan::adhoc(PlanOp::Normalize, alg, isa, x.rows(), x.n(), parallel_threshold, max_threads);
+    softmax_batch_planned(&p, x, y)
+}
+
+/// Execute one planned out-of-place normalization: every decision —
+/// algorithm, ISA, block size, NT stores, submit-vs-pool, chunk layout —
+/// comes from the plan; this function only moves bytes.  Outputs are
+/// bit-identical to [`softmax_batch`] / [`softmax_with`] per row
+/// whatever the plan's placement (normalization is row-independent).
+///
+/// The plan must have been built for this operation and this batch's
+/// exact `(rows, n)` shape ([`SoftmaxError::PlanMismatch`] /
+/// [`SoftmaxError::LengthMismatch`] otherwise).
+///
+/// [`softmax_with`]: crate::softmax::softmax_with
+pub fn softmax_batch_planned(
+    p: &ExecPlan,
+    x: &RowBatch,
+    y: &mut RowBatch,
+) -> Result<(), SoftmaxError> {
+    validate(x, y, p.isa)?;
+    check_plan(p, PlanOp::Normalize, x.rows(), x.n())?;
+    if x.rows == 0 {
+        return Ok(());
     }
+    if p.threads <= 1 {
+        run_rows(p.algorithm, p.isa, x.as_slice(), y.as_mut_slice(), x.n, p.block_rows, p.nt);
+        return Ok(());
+    }
+    run_chunked(
+        p.algorithm,
+        p.isa,
+        x.as_slice(),
+        y.as_mut_slice(),
+        x.n,
+        p.block_rows,
+        p.nt,
+        &p.chunks,
+        p.threads,
+    );
+    Ok(())
+}
+
+/// A plan is only valid for the operation and the exact batch shape it
+/// was built for (its algorithm/NT decisions are op-specific and its
+/// chunk layout indexes rows).
+fn check_plan(p: &ExecPlan, want: PlanOp, rows: usize, n: usize) -> Result<(), SoftmaxError> {
+    if p.op != want {
+        return Err(SoftmaxError::PlanMismatch { plan: p.op, want });
+    }
+    if p.n != n {
+        return Err(SoftmaxError::LengthMismatch { x: n, y: p.n });
+    }
+    if p.rows != rows {
+        return Err(SoftmaxError::LengthMismatch { x: rows, y: p.rows });
+    }
+    Ok(())
 }
 
 /// Normalize every row of the batch *in place*: the input buffer becomes
@@ -508,7 +529,7 @@ pub fn softmax_batch_inplace(
         return Ok(());
     }
     let n = b.n;
-    let block = block_rows_for(n);
+    let block = plan::block_rows(n);
     let (xs, ys) = super::alias_same(b.as_mut_slice());
     run_rows(alg, isa, xs, ys, n, block, false);
     Ok(())
@@ -516,7 +537,8 @@ pub fn softmax_batch_inplace(
 
 /// [`softmax_batch_inplace`] with the serving threading policy of
 /// [`softmax_batch_auto`]: parallel across the persistent pool above
-/// `parallel_threshold` elements, single-threaded below.
+/// `parallel_threshold` elements, single-threaded below (one-shot
+/// [`crate::plan::adhoc`] plan).
 pub fn softmax_batch_inplace_auto(
     alg: Algorithm,
     isa: Isa,
@@ -524,18 +546,34 @@ pub fn softmax_batch_inplace_auto(
     parallel_threshold: usize,
     max_threads: usize,
 ) -> Result<(), SoftmaxError> {
-    validate_inplace(b, isa)?;
+    let p = plan::adhoc(
+        PlanOp::NormalizeInPlace,
+        alg,
+        isa,
+        b.rows(),
+        b.n(),
+        parallel_threshold,
+        max_threads,
+    );
+    softmax_batch_inplace_planned(&p, b)
+}
+
+/// Execute one planned in-place normalization ([`softmax_batch_inplace`]
+/// semantics, placement from the plan).  NT stores stay off whatever the
+/// plan says — in place, the output lines are the just-read input lines,
+/// already cache-resident.
+pub fn softmax_batch_inplace_planned(p: &ExecPlan, b: &mut RowBatch) -> Result<(), SoftmaxError> {
+    validate_inplace(b, p.isa)?;
+    check_plan(p, PlanOp::NormalizeInPlace, b.rows(), b.n())?;
     if b.rows == 0 {
         return Ok(());
     }
-    let t = plan_threads(b.rows, b.n, parallel_threshold, max_threads);
     let n = b.n;
-    let block = block_rows_for(n);
     let (xs, ys) = super::alias_same(b.as_mut_slice());
-    if t <= 1 {
-        run_rows(alg, isa, xs, ys, n, block, false);
+    if p.threads <= 1 {
+        run_rows(p.algorithm, p.isa, xs, ys, n, p.block_rows, false);
     } else {
-        run_chunked(alg, isa, xs, ys, n, block, false, t);
+        run_chunked(p.algorithm, p.isa, xs, ys, n, p.block_rows, false, &p.chunks, p.threads);
     }
     Ok(())
 }
@@ -566,26 +604,48 @@ pub fn accum_extexp_batch_auto(
     parallel_threshold: usize,
     max_threads: usize,
 ) -> Result<Vec<ExtSum>, SoftmaxError> {
-    validate_inplace(x, isa)?;
+    let p = plan::adhoc(
+        PlanOp::Accum,
+        Algorithm::TwoPass,
+        isa,
+        x.rows(),
+        x.n(),
+        parallel_threshold,
+        max_threads,
+    );
+    accum_extexp_batch_planned(&p, x)
+}
+
+/// Execute one planned pass-1 accumulation: placement (submit-vs-pool and
+/// chunk layout) from the plan, per-row sums bit-identical whatever the
+/// split — each row's accumulator is computed by the same pass kernel on
+/// one thread.
+pub fn accum_extexp_batch_planned(
+    p: &ExecPlan,
+    x: &RowBatch,
+) -> Result<Vec<ExtSum>, SoftmaxError> {
+    validate_inplace(x, p.isa)?;
+    check_plan(p, PlanOp::Accum, x.rows(), x.n())?;
     let (rows, n) = (x.rows(), x.n());
-    let t = plan_threads(rows, n, parallel_threshold, max_threads);
-    if t <= 1 {
-        return accum_extexp_batch(isa, x);
+    if p.threads <= 1 {
+        return accum_extexp_batch(p.isa, x);
     }
     let mut out = vec![ExtSum::default(); rows];
     let x_ptr = x.as_slice().as_ptr();
     let out_ptr = out.as_mut_ptr();
-    let kinds = chunk_jobs(rows, t, |r0, rc| JobKind::Accum {
+    let isa = p.isa;
+    let kinds = jobs_for_chunks(&p.chunks, |r0, rc| JobKind::Accum {
         isa,
-        // SAFETY: r0 < rows and r0 + rc <= rows, so both offsets stay
-        // inside the batch and `out` allocations (one raw pointer per
-        // buffer, taken once — see [`run_chunked`] on aliasing).
+        // SAFETY: the plan's chunks cover 0..rows disjointly (r0 < rows,
+        // r0 + rc <= rows), so both offsets stay inside the batch and
+        // `out` allocations (one raw pointer per buffer, taken once —
+        // see [`run_chunked`] on aliasing).
         x: unsafe { x_ptr.add(r0 * n) },
         elems: rc * n,
         n,
         out: unsafe { out_ptr.add(r0) },
     });
-    submit_jobs(kinds, t).expect("accumulation jobs report no recoverable errors");
+    submit_jobs(kinds, p.threads).expect("accumulation jobs report no recoverable errors");
     Ok(out)
 }
 
@@ -694,15 +754,6 @@ fn validate_inplace(b: &RowBatch, isa: Isa) -> Result<(), SoftmaxError> {
         return Err(SoftmaxError::IsaUnavailable(isa));
     }
     Ok(())
-}
-
-/// Rows per cache block: input + output block (2 · n · 4 bytes per row)
-/// should fit in half the per-core L2, so every row a pass touched is
-/// still resident when the algorithm's next pass runs over the block.
-fn block_rows_for(n: usize) -> usize {
-    static L2_BUDGET: OnceLock<usize> = OnceLock::new();
-    let budget = *L2_BUDGET.get_or_init(|| crate::platform::detect().l2() / 2);
-    (budget / (2 * std::mem::size_of::<f32>() * n.max(1))).max(1)
 }
 
 /// One-time dispatch, then the blocked row loop on the chosen kernel.
@@ -959,23 +1010,15 @@ fn decode_rows(
     Ok(())
 }
 
-/// Split `rows` into up to `t` contiguous chunks and build one job per
-/// chunk via `make(first_row, chunk_rows)` — the one chunking rule every
-/// pooled workload (normalize, accum, decode) shares, so a future tweak
-/// to the split cannot desynchronize them.
-fn chunk_jobs(rows: usize, t: usize, mut make: impl FnMut(usize, usize) -> JobKind) -> Vec<JobKind> {
-    if rows == 0 {
-        return Vec::new();
-    }
-    let chunk_rows = rows.div_ceil(t.max(1));
-    let mut kinds = Vec::with_capacity(rows.div_ceil(chunk_rows));
-    let mut r0 = 0;
-    while r0 < rows {
-        let rc = chunk_rows.min(rows - r0);
-        kinds.push(make(r0, rc));
-        r0 += rc;
-    }
-    kinds
+/// Build one pool job per plan chunk via `make(first_row, chunk_rows)`.
+/// The chunk layout itself is the planner's ([`crate::plan::chunk_layout`]
+/// — one rule shared by every pooled workload, so a future tweak to the
+/// split cannot desynchronize normalize, accum, and decode).
+fn jobs_for_chunks(
+    chunks: &[ChunkPlan],
+    mut make: impl FnMut(usize, usize) -> JobKind,
+) -> Vec<JobKind> {
+    chunks.iter().map(|c| make(c.first_row, c.rows)).collect()
 }
 
 /// Submit one pool job per element of `kinds`, round-robin across at
@@ -1025,8 +1068,8 @@ fn submit_jobs(kinds: Vec<JobKind>, t: usize) -> Result<(), SamplingError> {
     }
 }
 
-/// Split `xs`/`ys` into `t` contiguous row chunks and execute them as
-/// `Normalize` jobs on the persistent pool, blocking until all are done.
+/// Execute `xs`/`ys` as `Normalize` jobs on the persistent pool — one job
+/// per chunk of the plan's layout — blocking until all are done.
 ///
 /// The per-chunk pointers are offsets of *one* raw pointer taken from
 /// each borrow up front (here and in the other chunked submitters):
@@ -1041,16 +1084,17 @@ fn run_chunked(
     n: usize,
     block: usize,
     nt: bool,
+    chunks: &[ChunkPlan],
     t: usize,
 ) {
-    let rows = xs.len() / n;
     let x_ptr = xs.as_ptr();
     let y_ptr = ys.as_mut_ptr();
-    let kinds = chunk_jobs(rows, t, |r0, rc| JobKind::Normalize {
+    let kinds = jobs_for_chunks(chunks, |r0, rc| JobKind::Normalize {
         alg,
         isa,
-        // SAFETY: r0 < rows and r0 + rc <= rows, so both offsets stay
-        // inside the xs/ys allocations.
+        // SAFETY: the chunks cover 0..rows disjointly (r0 < rows and
+        // r0 + rc <= rows), so both offsets stay inside the xs/ys
+        // allocations.
         x: unsafe { x_ptr.add(r0 * n) },
         y: unsafe { y_ptr.add(r0 * n) },
         elems: rc * n,
@@ -1061,33 +1105,34 @@ fn run_chunked(
     submit_jobs(kinds, t).expect("normalize jobs report no recoverable errors");
 }
 
-/// Split a decode batch into `t` contiguous row chunks and execute them
-/// as `Decode` jobs on the persistent pool.  Called by
-/// [`sample_batch_auto`](crate::sampling::sample_batch_auto); `out` must
-/// hold exactly one [`Choice`] slot per row.  Token ids and logprobs are
-/// bit-identical to submitting-thread decode for any `t`: every row is
-/// decoded by the same scalar index-ordered selection code whatever its
-/// placement.
+/// Execute a planned decode batch as `Decode` jobs on the persistent
+/// pool, one per plan chunk.  Called by
+/// [`sample_batch_planned`](crate::sampling::sample_batch_planned); `out`
+/// must hold exactly one [`Choice`] slot per row.  Token ids and logprobs
+/// are bit-identical to submitting-thread decode for any chunking: every
+/// row is decoded by the same scalar index-ordered selection code
+/// whatever its placement.
 pub(crate) fn decode_chunked(
-    isa: Isa,
+    p: &ExecPlan,
     x: &RowBatch,
     params: &[SamplingParams],
     out: &mut [Choice],
-    t: usize,
 ) -> Result<(), SamplingError> {
     let (rows, n) = (x.rows(), x.n());
     debug_assert_eq!(out.len(), rows);
+    debug_assert_eq!((p.rows, p.n), (rows, n));
     if rows == 0 {
         return Ok(());
     }
-    let t = t.clamp(1, rows);
     let x_ptr = x.as_slice().as_ptr();
     let out_ptr = out.as_mut_ptr();
-    let kinds = chunk_jobs(rows, t, |r0, rc| JobKind::Decode {
+    let isa = p.isa;
+    let kinds = jobs_for_chunks(&p.chunks, |r0, rc| JobKind::Decode {
         isa,
-        // SAFETY: r0 < rows and r0 + rc <= rows, so both offsets stay
-        // inside the batch and `out` buffers (one raw pointer per
-        // buffer, taken once — see [`run_chunked`] on aliasing).
+        // SAFETY: the plan's chunks cover 0..rows disjointly (r0 < rows,
+        // r0 + rc <= rows), so both offsets stay inside the batch and
+        // `out` buffers (one raw pointer per buffer, taken once — see
+        // [`run_chunked`] on aliasing).
         x: unsafe { x_ptr.add(r0 * n) },
         elems: rc * n,
         n,
@@ -1096,7 +1141,7 @@ pub(crate) fn decode_chunked(
         base_row: r0,
         out: unsafe { out_ptr.add(r0) },
     });
-    submit_jobs(kinds, t)
+    submit_jobs(kinds, p.threads)
 }
 
 // ---------------------------------------------------------------------------
@@ -1303,7 +1348,14 @@ unsafe fn kernel_avx2(alg: Algorithm, x: &[f32], y: &mut [f32], n: usize, block:
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f")]
-unsafe fn kernel_avx512(alg: Algorithm, x: &[f32], y: &mut [f32], n: usize, block: usize, nt: bool) {
+unsafe fn kernel_avx512(
+    alg: Algorithm,
+    x: &[f32],
+    y: &mut [f32],
+    n: usize,
+    block: usize,
+    nt: bool,
+) {
     match alg {
         Algorithm::ThreePassRecompute => drive_recompute(
             x,

@@ -97,6 +97,9 @@ pub enum SoftmaxError {
     EmptyInput,
     LengthMismatch { x: usize, y: usize },
     IsaUnavailable(Isa),
+    /// A `*_planned` entry point was handed an [`crate::plan::ExecPlan`]
+    /// built for a different operation.
+    PlanMismatch { plan: crate::plan::PlanOp, want: crate::plan::PlanOp },
 }
 
 impl fmt::Display for SoftmaxError {
@@ -108,6 +111,9 @@ impl fmt::Display for SoftmaxError {
             }
             SoftmaxError::IsaUnavailable(isa) => {
                 write!(f, "ISA {isa} not available on this host")
+            }
+            SoftmaxError::PlanMismatch { plan, want } => {
+                write!(f, "plan built for op {plan} cannot execute op {want}")
             }
         }
     }

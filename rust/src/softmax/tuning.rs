@@ -210,16 +210,6 @@ pub fn measured_parallel_threshold() -> (usize, f64) {
     })
 }
 
-/// Resolve a configured `parallel_threshold`: 0 means "derive from
-/// measured STREAM bandwidth at startup", anything else is explicit.
-pub fn resolve_parallel_threshold(configured: usize) -> usize {
-    if configured != 0 {
-        configured
-    } else {
-        measured_parallel_threshold().0
-    }
-}
-
 /// Per-(pass, isa) speedup of the tuned variant over unroll=1, useful as an
 /// ablation of the paper's auto-tuning claim.
 pub fn tuning_gains(table: &TuneTable) -> HashMap<(Pass, Isa), f64> {
@@ -286,7 +276,5 @@ mod tests {
         assert!(t40 > t10, "{t40} vs {t10}");
         assert_eq!(derive_parallel_threshold(0.0), MIN_PARALLEL_THRESHOLD);
         assert_eq!(derive_parallel_threshold(1e9), 1 << 23);
-        // Explicit configuration always wins over auto.
-        assert_eq!(resolve_parallel_threshold(4096), 4096);
     }
 }

@@ -53,8 +53,20 @@ impl Json {
         }
     }
 
+    /// A non-negative integral number as `usize`.  Strict: negative,
+    /// fractional, and non-finite numbers return `None` instead of being
+    /// saturated through an `as` cast (a `-1` silently becoming `0` is
+    /// how config typos used to alias sentinel values).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|n| n as usize)
+        match self.as_f64() {
+            // Exclusive upper bound: `usize::MAX as f64` rounds up to
+            // 2^64, which is NOT representable — `<=` would let exactly
+            // 2^64 through and saturate the cast.
+            Some(n) if n.is_finite() && n >= 0.0 && n.fract() == 0.0 && n < usize::MAX as f64 => {
+                Some(n as usize)
+            }
+            _ => None,
+        }
     }
 
     pub fn as_arr(&self) -> Option<&[Json]> {
@@ -359,6 +371,20 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn as_usize_is_strict() {
+        assert_eq!(Json::Num(1024.0).as_usize(), Some(1024));
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        // Negative, fractional, and non-finite numbers are not counts.
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(1.5).as_usize(), None);
+        assert_eq!(Json::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_usize(), None);
+        // 2^64 is not representable in usize; it must not saturate.
+        assert_eq!(Json::Num(2f64.powi(64)).as_usize(), None);
+        assert_eq!(Json::Str("7".into()).as_usize(), None);
     }
 
     #[test]

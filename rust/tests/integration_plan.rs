@@ -1,0 +1,241 @@
+//! Execution-planner integration: plans are deterministic per shape,
+//! planner-driven execution is bit-identical to the seed
+//! normalize/accum/decode paths on every ISA × thread count, repeated
+//! shapes hit the plan cache (surfaced through coordinator metrics)
+//! without re-deriving anything, and the recorded cost prediction matches
+//! `costmodel::cost`.
+
+use two_pass_softmax::config::ServeConfig;
+use two_pass_softmax::coordinator::{Coordinator, Payload, Router};
+use two_pass_softmax::costmodel;
+use two_pass_softmax::plan::{adhoc, PlanOp, Planner};
+use two_pass_softmax::sampling::{self, SamplingParams};
+use two_pass_softmax::softmax::batch::{
+    accum_extexp_batch, accum_extexp_batch_planned, softmax_batch_inplace_planned,
+    softmax_batch_planned, RowBatch,
+};
+use two_pass_softmax::softmax::{softmax_with, Algorithm, Isa};
+use two_pass_softmax::util::rng::Rng;
+
+fn random_batch(rows: usize, n: usize, seed: u64) -> RowBatch {
+    let mut rng = Rng::new(seed);
+    let mut b = RowBatch::new(rows, n);
+    for r in 0..rows {
+        for v in b.row_mut(r) {
+            *v = rng.normal_f32(0.0, 8.0);
+        }
+    }
+    b
+}
+
+/// Two planners with identical configuration must produce identical plans
+/// for every shape — and so must two calls on one planner (the cache
+/// aside, plans are pure functions of configuration and shape).
+#[test]
+fn plans_are_deterministic_per_shape() {
+    for isa in Isa::detect_all() {
+        for alg in Algorithm::ALL {
+            let a = Planner::new(alg, isa, 4096, 3);
+            let b = Planner::new(alg, isa, 4096, 3);
+            for &(rows, n) in &[(1usize, 64usize), (5, 311), (16, 1024), (64, 256)] {
+                for op in
+                    [PlanOp::Normalize, PlanOp::NormalizeInPlace, PlanOp::Accum, PlanOp::Decode]
+                {
+                    assert_eq!(a.plan(op, rows, n), b.plan(op, rows, n), "{alg}/{isa} {op}");
+                    assert_eq!(
+                        adhoc(op, alg, isa, rows, n, 4096, 3),
+                        adhoc(op, alg, isa, rows, n, 4096, 3),
+                        "{alg}/{isa} {op} adhoc"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The acceptance sweep: planner-driven normalize / accum / decode are
+/// bit-identical to the seed paths on every ISA and thread count.
+#[test]
+fn planned_execution_bit_identical_to_seed_paths() {
+    let (rows, n) = (13usize, 257usize);
+    let x = random_batch(rows, n, 2020);
+    for isa in Isa::detect_all() {
+        // Normalize (out-of-place and in-place), every algorithm.
+        for alg in Algorithm::ALL {
+            let mut want = RowBatch::new(rows, n);
+            // Seed reference: the single-row API, row by row.
+            for r in 0..rows {
+                let mut row = vec![0.0f32; n];
+                softmax_with(alg, isa, x.row(r), &mut row).unwrap();
+                want.row_mut(r).copy_from_slice(&row);
+            }
+            for threads in [1usize, 2, 3, 8] {
+                // threshold 1: any multi-row batch splits when threads > 1.
+                let p = adhoc(PlanOp::Normalize, alg, isa, rows, n, 1, threads);
+                let mut y = RowBatch::new(rows, n);
+                softmax_batch_planned(&p, &x, &mut y).unwrap();
+                for r in 0..rows {
+                    for i in 0..n {
+                        assert_eq!(
+                            y.row(r)[i].to_bits(),
+                            want.row(r)[i].to_bits(),
+                            "{alg}/{isa} t={threads} r={r} i={i}"
+                        );
+                    }
+                }
+                let pi = adhoc(PlanOp::NormalizeInPlace, alg, isa, rows, n, 1, threads);
+                let mut b = x.clone();
+                softmax_batch_inplace_planned(&pi, &mut b).unwrap();
+                assert_eq!(b, want, "{alg}/{isa} t={threads} inplace");
+            }
+        }
+        // Pass-1 accumulation.
+        let want = accum_extexp_batch(isa, &x).unwrap();
+        for threads in [1usize, 2, 4] {
+            let p = adhoc(PlanOp::Accum, Algorithm::TwoPass, isa, rows, n, 1, threads);
+            let got = accum_extexp_batch_planned(&p, &x).unwrap();
+            for (r, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.m.to_bits(), w.m.to_bits(), "{isa} t={threads} row {r}");
+                assert_eq!(g.n.to_bits(), w.n.to_bits(), "{isa} t={threads} row {r}");
+            }
+        }
+        // Fused decode, broadcast and per-row params.
+        let params: Vec<SamplingParams> = (0..rows)
+            .map(|r| SamplingParams { seed: r as u64, top_k: 1 + r % 5, ..Default::default() })
+            .collect();
+        for ps in [vec![SamplingParams::greedy()], params] {
+            let want = sampling::sample_batch(isa, &x, &ps).unwrap();
+            for threads in [1usize, 2, 4] {
+                let p = adhoc(PlanOp::Decode, Algorithm::TwoPass, isa, rows, n, 1, threads);
+                let got = sampling::sample_batch_planned(&p, &x, &ps).unwrap();
+                assert_eq!(got.len(), want.len());
+                for (r, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g.token, w.token, "{isa} t={threads} row {r}");
+                    assert_eq!(
+                        g.logprob.to_bits(),
+                        w.logprob.to_bits(),
+                        "{isa} t={threads} row {r}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Repeated shapes must be served from the plan cache: one miss, then
+/// hits, with no re-derivation (the explicit threshold also means no
+/// STREAM measurement anywhere in this test).
+#[test]
+fn plan_cache_hits_repeated_shapes() {
+    let planner = Planner::new(Algorithm::TwoPass, Isa::detect_best(), 1 << 20, 2);
+    let first = planner.plan(PlanOp::NormalizeInPlace, 8, 512);
+    assert_eq!(first.threshold_elems, 1 << 20, "explicit threshold used as configured");
+    for _ in 0..9 {
+        let again = planner.plan(PlanOp::NormalizeInPlace, 8, 512);
+        assert!(
+            std::sync::Arc::ptr_eq(&first, &again),
+            "repeated shape must reuse the cached plan"
+        );
+    }
+    assert_eq!(planner.plan_stats(), (9, 1));
+}
+
+/// The cache counters surface in coordinator metrics: serving the same
+/// batch shape repeatedly records hits, not fresh derivations.
+#[test]
+fn plan_cache_metrics_flow_through_the_coordinator() {
+    let cfg = ServeConfig {
+        max_batch: 4,
+        workers: 1,
+        parallel_threshold: 1 << 20,
+        ..ServeConfig::default()
+    };
+    let router = Router::native(Algorithm::TwoPass, Isa::detect_best());
+    let c = Coordinator::start_with_router(&cfg, router);
+    // Sequential submits: every request is its own rows=1 batch of the
+    // same (op, rows, n) key.
+    for _ in 0..4 {
+        let r = c.softmax_blocking(vec![1.0f32; 64]).unwrap();
+        assert!(r.error.is_none());
+    }
+    let snap = c.metrics();
+    assert!(snap.plan_cache_misses >= 1, "{snap:?}");
+    assert!(
+        snap.plan_cache_hits >= 2,
+        "repeated shapes must hit the cache: {snap:?}"
+    );
+    assert_eq!(snap.plan_cache_hits + snap.plan_cache_misses, 4);
+    c.shutdown();
+}
+
+/// A plan only executes the operation it was built for: handing a decode
+/// plan to a normalize entry point (or vice versa) is an error, not a
+/// silent algorithm/NT swap.
+#[test]
+fn planned_entry_points_reject_wrong_op_plans() {
+    let x = random_batch(2, 8, 1);
+    let mut y = RowBatch::new(2, 8);
+    let decode_plan = adhoc(PlanOp::Decode, Algorithm::TwoPass, Isa::Scalar, 2, 8, usize::MAX, 1);
+    assert!(softmax_batch_planned(&decode_plan, &x, &mut y).is_err());
+    assert!(accum_extexp_batch_planned(&decode_plan, &x).is_err());
+    let mut b = x.clone();
+    assert!(softmax_batch_inplace_planned(&decode_plan, &mut b).is_err());
+    let norm_plan = adhoc(PlanOp::Normalize, Algorithm::TwoPass, Isa::Scalar, 2, 8, usize::MAX, 1);
+    assert!(sampling::sample_batch_planned(&norm_plan, &x, &[SamplingParams::greedy()]).is_err());
+    // And a matching plan with a stale shape is rejected too.
+    let stale = adhoc(PlanOp::Normalize, Algorithm::TwoPass, Isa::Scalar, 4, 8, usize::MAX, 1);
+    assert!(softmax_batch_planned(&stale, &x, &mut y).is_err());
+}
+
+/// `repro plan` acceptance: the plan's predicted bytes-moved equals the
+/// cost model's Table-2 accounting for the chosen algorithm.
+#[test]
+fn predicted_bytes_match_costmodel_cost() {
+    for alg in Algorithm::ALL {
+        let planner = Planner::new(alg, Isa::detect_best(), 1 << 20, 1);
+        let plan = planner.plan(PlanOp::Normalize, 8, 32768);
+        let row = costmodel::cost(alg);
+        assert_eq!(plan.predicted_bytes, row.bandwidth_n * 8 * 32768 * 4, "{alg}");
+        assert_eq!(plan.predicted_bytes, costmodel::batch_bytes(alg, 8, 32768), "{alg}");
+    }
+}
+
+/// Decode through the router must plan exactly like direct decode: same
+/// token ids with and without the pool, and per-row params survive any
+/// chunking (regression guard for the planner rewiring of the decode
+/// path).
+#[test]
+fn planned_router_decode_matches_direct_decode() {
+    let rows = 8usize;
+    let n = 300usize;
+    let x = random_batch(rows, n, 7);
+    let isa = Isa::detect_best();
+    let params: Vec<SamplingParams> = (0..rows)
+        .map(|r| SamplingParams { seed: 1 + r as u64, top_k: 4, ..Default::default() })
+        .collect();
+    let want = sampling::sample_batch(isa, &x, &params).unwrap();
+
+    let cfg = ServeConfig {
+        max_batch: rows,
+        workers: 1,
+        max_wait_us: 20_000,
+        parallel_threshold: 1,
+        batch_threads: 2,
+        ..ServeConfig::default()
+    };
+    let router = Router::from_config(&cfg).unwrap();
+    let c = Coordinator::start_with_router(&cfg, router);
+    let handles: Vec<_> = (0..rows)
+        .map(|r| {
+            c.submit(Payload::Decode { logits: x.row(r).to_vec(), params: params[r] }).unwrap()
+        })
+        .collect();
+    for (r, h) in handles.into_iter().enumerate() {
+        let resp = h.wait().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        let tok = resp.token.expect("decode response carries a token");
+        assert_eq!(tok.token, want[r].token, "row {r}");
+        assert_eq!(tok.logprob.to_bits(), want[r].logprob.to_bits(), "row {r}");
+    }
+    c.shutdown();
+}

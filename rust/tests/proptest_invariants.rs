@@ -360,3 +360,53 @@ fn cost_model_consistent_with_pass_structure() {
         assert!(costmodel::predict_secs(alg, 1 << 20, 10.0) > 0.0);
     }
 }
+
+// ---------------------------------------------------------------------------
+// Execution planner
+// ---------------------------------------------------------------------------
+
+/// Plans are a pure function of (configuration, op, rows, n): two
+/// identically configured planners agree on thousands of random shapes,
+/// and every plan satisfies the structural invariants the executors rely
+/// on (threads ≥ 1, chunks disjointly cover exactly the batch rows, cost
+/// prediction matches the Table-2 accounting).
+#[test]
+fn plans_deterministic_and_well_formed_over_random_shapes() {
+    use two_pass_softmax::plan::{PlanOp, Planner};
+
+    let mut rng = Rng::new(4242);
+    let isa = Isa::detect_best();
+    let a = Planner::new(Algorithm::TwoPass, isa, 1 << 14, 4);
+    let b = Planner::new(Algorithm::TwoPass, isa, 1 << 14, 4);
+    let ops = [PlanOp::Normalize, PlanOp::NormalizeInPlace, PlanOp::Accum, PlanOp::Decode];
+    for case in 0..2000 {
+        let rows = 1 + rng.below(128);
+        let n = 1 + rng.below(1 << 14);
+        let op = ops[case % ops.len()];
+        let pa = a.plan(op, rows, n);
+        let pb = b.plan(op, rows, n);
+        assert_eq!(pa, pb, "case {case}: {op} rows={rows} n={n}");
+        assert!(pa.threads >= 1 && pa.block_rows >= 1);
+        assert!(pa.threads <= rows.max(1));
+        if pa.threads > 1 {
+            assert!(rows * n >= 1 << 14, "split below threshold: rows={rows} n={n}");
+            let covered: usize = pa.chunks.iter().map(|c| c.rows).sum();
+            assert_eq!(covered, rows, "chunks must cover the batch exactly");
+            let mut next = 0;
+            for c in &pa.chunks {
+                assert_eq!(c.first_row, next, "chunks must be contiguous and ordered");
+                assert!(c.rows > 0);
+                next += c.rows;
+            }
+        } else {
+            assert!(pa.chunks.is_empty());
+        }
+        let bytes_per_elem = match op {
+            PlanOp::Normalize | PlanOp::NormalizeInPlace => {
+                costmodel::cost(pa.algorithm).bandwidth_n * 4
+            }
+            PlanOp::Accum | PlanOp::Decode => 4,
+        };
+        assert_eq!(pa.predicted_bytes, bytes_per_elem * rows * n, "case {case}");
+    }
+}
