@@ -10,6 +10,11 @@
 //! for the pre-batching serving path — one `softmax_with` call plus one
 //! `Vec` allocation per row, exactly what `Router` used to do.
 //!
+//! The dtype sweep re-runs the batched engine with bf16/f16 logit storage
+//! (same shapes, single thread) and reports native-width GB/s next to
+//! f32-equivalent GB/s — row throughput in f32-byte units, the
+//! halve-the-bytes headline (`results/bench/batch_dtype.json`).
+//!
 //! The NT sweep runs the single-threaded engine with streaming stores
 //! forced off and forced on, over working sets from L2-resident to
 //! 4× LLC, and reports the crossover size (first working set where the
@@ -20,14 +25,25 @@
 use two_pass_softmax::softmax::batch::{
     softmax_batch, softmax_batch_parallel, softmax_batch_with_nt, NtPolicy, RowBatch,
 };
-use two_pass_softmax::softmax::{softmax_with, Algorithm, Isa};
+use two_pass_softmax::softmax::{softmax_with, Algorithm, Dtype, Isa};
 use two_pass_softmax::util::cli::Args;
 use two_pass_softmax::util::stats;
 use two_pass_softmax::util::table::Table;
 use two_pass_softmax::workload::{request_rowbatch, LogitsDist};
 
-fn gbps(alg: Algorithm, elems: usize, secs: f64) -> f64 {
-    (alg.bandwidth_cost() * elems * std::mem::size_of::<f32>()) as f64 / secs / 1e9
+/// Effective bandwidth at the batch's storage width (Table-2 traffic ×
+/// `elem_bytes` per element).
+fn gbps(alg: Algorithm, elems: usize, elem_bytes: usize, secs: f64) -> f64 {
+    (alg.bandwidth_cost() * elems * elem_bytes) as f64 / secs / 1e9
+}
+
+/// Requantize an f32 batch into `dtype` storage (identity for f32).
+fn quantize(x: &RowBatch, dtype: Dtype) -> RowBatch {
+    let mut q = RowBatch::with_capacity_dtype(x.rows(), x.n(), dtype);
+    for r in 0..x.rows() {
+        q.push_row_quantized(x.row(r)).unwrap();
+    }
+    q
 }
 
 fn main() -> anyhow::Result<()> {
@@ -85,7 +101,7 @@ fn main() -> anyhow::Result<()> {
                 "rowloop".to_string(),
                 "1".to_string(),
                 format!("{:.4}", t_row * 1e9 / elems as f64),
-                format!("{:.2}", gbps(alg, elems, t_row)),
+                format!("{:.2}", gbps(alg, elems, 4, t_row)),
                 "1.00".to_string(),
             ]);
 
@@ -104,7 +120,7 @@ fn main() -> anyhow::Result<()> {
                 "batch".to_string(),
                 "1".to_string(),
                 format!("{:.4}", t_one * 1e9 / elems as f64),
-                format!("{:.2}", gbps(alg, elems, t_one)),
+                format!("{:.2}", gbps(alg, elems, 4, t_one)),
                 format!("{:.2}", t_row / t_one),
             ]);
 
@@ -126,7 +142,7 @@ fn main() -> anyhow::Result<()> {
                     "batch_par".to_string(),
                     workers.to_string(),
                     format!("{:.4}", t_par * 1e9 / elems as f64),
-                    format!("{:.2}", gbps(alg, elems, t_par)),
+                    format!("{:.2}", gbps(alg, elems, 4, t_par)),
                     format!("{:.2}", t_row / t_par),
                 ]);
             }
@@ -148,7 +164,95 @@ fn main() -> anyhow::Result<()> {
     print!("{}", t.to_markdown());
     t.save(std::path::Path::new("results/bench"), "batch")?;
 
+    dtype_sweep(alg, isa, &batches, &ns, reps, min_time)?;
     nt_sweep(alg, isa, reps, min_time)?;
+    Ok(())
+}
+
+/// The halve-the-bytes headline: the same batched normalization with
+/// bf16/f16 logit storage.  `gb_s_native` moves `elem_bytes` per element
+/// (what the wires carry); `gb_s_f32eq` charges every dtype f32 traffic,
+/// so it is row throughput in f32-byte units — the acceptance criterion's
+/// "GB/s-equivalent" (bf16 ≥ 1.5× f32 on out-of-cache shapes).  Also
+/// emitted as JSON (`results/bench/batch_dtype.json`) for BENCH_*.json
+/// harvesting.
+fn dtype_sweep(
+    alg: Algorithm,
+    isa: Isa,
+    batches: &[usize],
+    ns: &[usize],
+    reps: usize,
+    min_time: f64,
+) -> anyhow::Result<()> {
+    println!("\ndtype sweep — {alg} on {isa}");
+    let mut t = Table::new(
+        &format!("Storage dtype sweep ({alg}, {isa}, single thread)"),
+        &["batch", "n", "dtype", "ns_per_elem", "gb_s_native", "gb_s_f32eq", "rows_s_vs_f32"],
+    );
+    let mut sweep: Vec<(usize, usize, Dtype, f64, f64, f64)> = Vec::new();
+    for &rows in batches {
+        for &n in ns {
+            let elems = rows * n;
+            let xf = request_rowbatch(LogitsDist::Normal { mean: 0.0, std: 4.0 }, rows, n, 7);
+            let mut t_f32 = f64::INFINITY;
+            for dtype in Dtype::ALL {
+                let x = quantize(&xf, dtype);
+                let mut y = RowBatch::new_with_dtype(rows, n, dtype);
+                let secs = stats::measure_median(
+                    || {
+                        softmax_batch(alg, isa, &x, &mut y).unwrap();
+                        std::hint::black_box(&y);
+                    },
+                    reps,
+                    min_time,
+                );
+                if dtype == Dtype::F32 {
+                    t_f32 = secs;
+                }
+                let g_native = gbps(alg, elems, dtype.size(), secs);
+                let g_f32eq = gbps(alg, elems, 4, secs);
+                t.rowd(&[
+                    rows.to_string(),
+                    n.to_string(),
+                    dtype.to_string(),
+                    format!("{:.4}", secs * 1e9 / elems as f64),
+                    format!("{g_native:.2}"),
+                    format!("{g_f32eq:.2}"),
+                    format!("{:.2}", t_f32 / secs),
+                ]);
+                sweep.push((rows, n, dtype, g_native, g_f32eq, t_f32 / secs));
+            }
+            if rows == 64 && n == 32768 {
+                let ratio = sweep
+                    .iter()
+                    .find(|s| s.0 == rows && s.1 == n && s.2 == Dtype::Bf16)
+                    .map(|s| s.5)
+                    .unwrap_or(0.0);
+                println!(
+                    "acceptance 64x32768: bf16/f32 f32-equivalent row throughput = {ratio:.2}x \
+                     (want >= 1.50x)"
+                );
+            }
+        }
+    }
+    print!("{}", t.to_markdown());
+    t.save(std::path::Path::new("results/bench"), "batch_dtype")?;
+
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"bench\": \"batch_dtype\",\n  \"algorithm\": \"{alg}\",\n  \"isa\": \"{isa}\",\n  \"sweep\": [\n"
+    ));
+    for (i, (rows, n, dtype, g_native, g_f32eq, vs)) in sweep.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"rows\": {rows}, \"n\": {n}, \"dtype\": \"{dtype}\", \
+             \"gbps_native\": {g_native:.3}, \"gbps_f32eq\": {g_f32eq:.3}, \
+             \"rows_per_s_vs_f32\": {vs:.3}}}{}\n",
+            if i + 1 == sweep.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::create_dir_all("results/bench")?;
+    std::fs::write("results/bench/batch_dtype.json", json)?;
     Ok(())
 }
 
@@ -195,8 +299,8 @@ fn nt_sweep(alg: Algorithm, isa: Isa, reps: usize, min_time: f64) -> anyhow::Res
             reps,
             min_time,
         );
-        let g_tmp = gbps(alg, elems, t_tmp);
-        let g_nt = gbps(alg, elems, t_nt);
+        let g_tmp = gbps(alg, elems, 4, t_tmp);
+        let g_nt = gbps(alg, elems, 4, t_nt);
         if crossover.is_none() && t_nt < t_tmp {
             crossover = Some(n);
         }

@@ -15,19 +15,20 @@
 //! read of the normalized row (4N).  The sweep is emitted as JSON
 //! (`results/bench/sampling.json`, schema in `docs/FORMATS.md`) so
 //! successive BENCH_*.json files can track the fused-decode and
-//! pool-placement wins.
+//! pool-placement wins.  A dtype sweep re-runs the fused paths with
+//! bf16/f16 logit storage (`results/bench/sampling_dtype.json`).
 
 use two_pass_softmax::sampling::{self, SamplingParams};
 use two_pass_softmax::softmax::batch::{softmax_batch, RowBatch};
-use two_pass_softmax::softmax::{Algorithm, Isa};
+use two_pass_softmax::softmax::{Algorithm, Dtype, Isa};
 use two_pass_softmax::util::cli::Args;
 use two_pass_softmax::util::stats;
 use two_pass_softmax::util::table::Table;
 use two_pass_softmax::workload::{request_rowbatch, LogitsDist};
 
-/// Effective bandwidth for `passes`·N·4B of traffic over `rows` rows.
-fn gbps(passes: usize, elems: usize, secs: f64) -> f64 {
-    (passes * elems * std::mem::size_of::<f32>()) as f64 / secs / 1e9
+/// Effective bandwidth for `passes`·N·`elem_bytes` of traffic.
+fn gbps(passes: usize, elems: usize, elem_bytes: usize, secs: f64) -> f64 {
+    (passes * elems * elem_bytes) as f64 / secs / 1e9
 }
 
 fn main() -> anyhow::Result<()> {
@@ -125,7 +126,7 @@ fn main() -> anyhow::Result<()> {
                 path.to_string(),
                 format!("{:.0}", secs * 1e9 / tokens),
                 format!("{:.0}", tokens / secs),
-                format!("{:.2}", gbps(passes, elems, secs)),
+                format!("{:.2}", gbps(passes, elems, 4, secs)),
             ]);
         }
         println!(
@@ -170,5 +171,92 @@ fn main() -> anyhow::Result<()> {
     std::fs::create_dir_all("results/bench")?;
     std::fs::write("results/bench/sampling.json", json)?;
     println!("wrote results/bench/sampling.json");
+
+    dtype_sweep(isa, rows, &ns, top_k, reps, min_time)?;
+    Ok(())
+}
+
+/// Fused decode with half-width logit storage: the sampling kernels read
+/// bf16/f16 bits straight into the `(m, n)` accumulators, so decode is a
+/// pure read stream of `elem_bytes` per element — half-width doubles the
+/// bandwidth-bound token rate.  `gb_s_f32eq` charges every dtype f32
+/// traffic (token throughput in f32-byte units).  Emitted as JSON
+/// (`results/bench/sampling_dtype.json`).
+fn dtype_sweep(
+    isa: Isa,
+    rows: usize,
+    ns: &[usize],
+    top_k: usize,
+    reps: usize,
+    min_time: f64,
+) -> anyhow::Result<()> {
+    println!("\ndtype sweep — fused decode on {isa}, {rows} rows/batch");
+    let mut t = Table::new(
+        &format!("Fused decode dtype sweep ({isa}, {rows} rows)"),
+        &["n", "dtype", "path", "ns_per_token", "tokens_s", "gb_s_native", "gb_s_f32eq"],
+    );
+    let greedy = [SamplingParams::greedy()];
+    let sampled = [SamplingParams { top_k, seed: 9, ..SamplingParams::default() }];
+    let mut sweep: Vec<(usize, Dtype, f64, f64)> = Vec::new();
+    for &n in ns {
+        let elems = rows * n;
+        let xf = request_rowbatch(LogitsDist::Normal { mean: 0.0, std: 4.0 }, rows, n, 13);
+        let mut tok_f32 = 0.0f64;
+        for dtype in Dtype::ALL {
+            let mut x = RowBatch::with_capacity_dtype(rows, n, dtype);
+            for r in 0..rows {
+                x.push_row_quantized(xf.row(r)).unwrap();
+            }
+            let t_greedy = stats::measure_median(
+                || {
+                    let c = sampling::sample_batch(isa, &x, &greedy).unwrap();
+                    std::hint::black_box(&c);
+                },
+                reps,
+                min_time,
+            );
+            let t_topk = stats::measure_median(
+                || {
+                    let c = sampling::sample_batch(isa, &x, &sampled).unwrap();
+                    std::hint::black_box(&c);
+                },
+                reps,
+                min_time,
+            );
+            let tokens = rows as f64;
+            if dtype == Dtype::F32 {
+                tok_f32 = tokens / t_greedy;
+            }
+            for (path, secs) in [("fused_greedy", t_greedy), ("fused_topk", t_topk)] {
+                t.rowd(&[
+                    n.to_string(),
+                    dtype.to_string(),
+                    path.to_string(),
+                    format!("{:.0}", secs * 1e9 / tokens),
+                    format!("{:.0}", tokens / secs),
+                    format!("{:.2}", gbps(1, elems, dtype.size(), secs)),
+                    format!("{:.2}", gbps(1, elems, 4, secs)),
+                ]);
+            }
+            sweep.push((n, dtype, tokens / t_greedy, (tokens / t_greedy) / tok_f32));
+        }
+    }
+    print!("{}", t.to_markdown());
+    t.save(std::path::Path::new("results/bench"), "sampling_dtype")?;
+
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"bench\": \"sampling_dtype\",\n  \"isa\": \"{isa}\",\n  \"rows\": {rows},\n  \"sweep\": [\n"
+    ));
+    for (i, (n, dtype, tok_s, vs)) in sweep.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"n\": {n}, \"dtype\": \"{dtype}\", \"tokens_s_fused_greedy\": {tok_s:.1}, \
+             \"tokens_s_vs_f32\": {vs:.3}}}{}\n",
+            if i + 1 == sweep.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("results/bench/sampling_dtype.json", json)?;
+    println!("wrote results/bench/sampling_dtype.json");
     Ok(())
 }

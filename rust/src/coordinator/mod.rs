@@ -39,6 +39,7 @@ pub use request::{make_request, Handle, Payload, Request, Response};
 pub use router::{Executed, Router};
 
 use crate::sampling::SamplingParams;
+use crate::softmax::Dtype;
 
 /// The running coordinator.
 pub struct Coordinator {
@@ -96,6 +97,31 @@ impl Coordinator {
     pub fn softmax_blocking(&self, logits: Vec<f32>) -> Result<Response> {
         let h = self
             .submit(Payload::Logits(logits))
+            .map_err(|e| anyhow::anyhow!("submit failed: {e:?}"))?;
+        h.wait().map_err(|e| anyhow::anyhow!("coordinator dropped request: {e}"))
+    }
+
+    /// Convenience: submit half-width logits (raw bf16/f16 bit patterns)
+    /// and wait.  The response `probs` are f32, widened at assembly; the
+    /// executed batch itself moves half the bytes of the f32 path.
+    pub fn softmax_half_blocking(&self, bits: Vec<u16>, dtype: Dtype) -> Result<Response> {
+        let h = self
+            .submit(Payload::LogitsHalf { bits, dtype })
+            .map_err(|e| anyhow::anyhow!("submit failed: {e:?}"))?;
+        h.wait().map_err(|e| anyhow::anyhow!("coordinator dropped request: {e}"))
+    }
+
+    /// Convenience: decode one token from a half-width logits row.  The
+    /// fused sampling kernels read the bf16/f16 bits directly into the
+    /// extended-exponent accumulators — no f32 row is materialized.
+    pub fn decode_half_blocking(
+        &self,
+        bits: Vec<u16>,
+        dtype: Dtype,
+        params: SamplingParams,
+    ) -> Result<Response> {
+        let h = self
+            .submit(Payload::DecodeHalf { bits, dtype, params })
             .map_err(|e| anyhow::anyhow!("submit failed: {e:?}"))?;
         h.wait().map_err(|e| anyhow::anyhow!("coordinator dropped request: {e}"))
     }
@@ -163,9 +189,11 @@ fn worker_loop(batcher: &Batcher, metrics: &Metrics, router: &Router) {
                     let e2e_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
                     metrics.record_request(queue_us, e2e_us, true);
                     // Decode batches answer with a token, softmax/LM
-                    // batches with a probability row.
+                    // batches with a probability row (widened to f32 at
+                    // assembly when the batch executed at half width —
+                    // responses are f32 regardless of logits dtype).
                     let (probs, token) = match &out {
-                        Executed::Rows(b) => (b.row(i).to_vec(), None),
+                        Executed::Rows(b) => (b.row_f32(i), None),
                         Executed::Choices(c) => (Vec::new(), Some(c[i])),
                     };
                     let _ = req.tx.send(Response {
@@ -263,6 +291,35 @@ mod tests {
         let a = c.decode_blocking(logits.clone(), params).unwrap().token.unwrap();
         let b = c.decode_blocking(logits, params).unwrap().token.unwrap();
         assert_eq!(a, b);
+        c.shutdown();
+    }
+
+    #[test]
+    fn serves_half_width_softmax_and_decode() {
+        use crate::softmax::{Bf16, Element, F16};
+        let c = Coordinator::start_with_router(&test_config(4, 1), native());
+        let mut logits: Vec<f32> = (0..64).map(|i| (i % 7) as f32 - 3.0).collect();
+        logits[17] = 9.0; // unique argmax, exactly representable in both halves
+        for dtype in [Dtype::Bf16, Dtype::F16] {
+            let bits: Vec<u16> = logits
+                .iter()
+                .map(|&v| match dtype {
+                    Dtype::Bf16 => Bf16::from_f32(v).to_bits(),
+                    _ => F16::from_f32(v).to_bits(),
+                })
+                .collect();
+            let r = c.softmax_half_blocking(bits.clone(), dtype).unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert_eq!(r.probs.len(), 64, "{dtype}");
+            // Outputs are narrowed to the request dtype then widened for
+            // the response: the row still sums to 1 within half precision.
+            assert!((r.probs.iter().sum::<f32>() - 1.0).abs() < 2e-2, "{dtype}");
+            let tok =
+                c.decode_half_blocking(bits, dtype, SamplingParams::greedy()).unwrap();
+            assert!(tok.error.is_none(), "{:?}", tok.error);
+            assert!(tok.probs.is_empty());
+            assert_eq!(tok.token.unwrap().token, 17, "{dtype}");
+        }
         c.shutdown();
     }
 

@@ -4,12 +4,20 @@ use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::sampling::{Choice, SamplingParams};
+use crate::softmax::Dtype;
 
 /// What a client wants normalized/served.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Payload {
     /// Softmax over a logits vector (the paper's workload).
     Logits(Vec<f32>),
+    /// Softmax over a half-width logits vector: raw bf16/f16 bit patterns
+    /// plus their dtype.  The row lands in a half-width [`crate::softmax::
+    /// batch::RowBatch`] untouched — the kernels widen on load — so a half
+    /// request moves half the bytes of [`Payload::Logits`] end to end.
+    /// The response still carries f32 `probs` (widened at assembly).
+    /// `dtype` must be `Bf16` or `F16`.
+    LogitsHalf { bits: Vec<u16>, dtype: Dtype },
     /// Next-token distribution for a token sequence (LM path).
     Tokens(Vec<i32>),
     /// Fused decode: sample a token id from a logits row without ever
@@ -17,25 +25,55 @@ pub enum Payload {
     /// `token`, not `probs`).  Sampling params ride per-request, so one
     /// executed batch can mix greedy and sampled rows.
     Decode { logits: Vec<f32>, params: SamplingParams },
+    /// Fused decode over half-width logits: the sampling kernels read the
+    /// bf16/f16 bits straight into `(m, n)` extended-exponent accumulators
+    /// — no f32 row is ever materialized.  `dtype` must be `Bf16` or `F16`.
+    DecodeHalf { bits: Vec<u16>, dtype: Dtype, params: SamplingParams },
+}
+
+/// Batch-key tag for a half dtype (bits 61–60; f32 contributes no tag so
+/// existing keys are unchanged).
+fn dtype_tag(d: Dtype) -> u64 {
+    match d {
+        Dtype::F32 => 0,
+        Dtype::Bf16 => 1 << 61,
+        Dtype::F16 => (1 << 61) | (1 << 60),
+    }
 }
 
 impl Payload {
     /// Batching key: requests with equal keys may share an executed batch.
     /// Softmax batches by vector length; LM batches by sequence length;
-    /// decode batches by logits length (all tagged so kinds never mix).
+    /// decode batches by logits length; half-width requests additionally
+    /// carry their dtype in bits 61–60 (all tagged so kinds — and storage
+    /// dtypes, which fix the batch's element width — never mix).
     pub fn batch_key(&self) -> u64 {
         match self {
             Payload::Logits(v) => v.len() as u64,
+            Payload::LogitsHalf { bits, dtype } => dtype_tag(*dtype) | bits.len() as u64,
             Payload::Tokens(t) => (1 << 63) | t.len() as u64,
             Payload::Decode { logits, .. } => (1 << 62) | logits.len() as u64,
+            Payload::DecodeHalf { bits, dtype, .. } => {
+                (1 << 62) | dtype_tag(*dtype) | bits.len() as u64
+            }
+        }
+    }
+
+    /// The storage dtype a batch of this payload executes with.
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Payload::LogitsHalf { dtype, .. } | Payload::DecodeHalf { dtype, .. } => *dtype,
+            _ => Dtype::F32,
         }
     }
 
     pub fn len(&self) -> usize {
         match self {
             Payload::Logits(v) => v.len(),
+            Payload::LogitsHalf { bits, .. } => bits.len(),
             Payload::Tokens(t) => t.len(),
             Payload::Decode { logits, .. } => logits.len(),
+            Payload::DecodeHalf { bits, .. } => bits.len(),
         }
     }
 
@@ -124,6 +162,46 @@ mod tests {
             params: crate::sampling::SamplingParams::greedy(),
         };
         assert_eq!(d.batch_key(), e.batch_key());
+    }
+
+    #[test]
+    fn batch_keys_separate_dtypes() {
+        let f32_sm = Payload::Logits(vec![0.0; 128]);
+        let bf = Payload::LogitsHalf { bits: vec![0; 128], dtype: Dtype::Bf16 };
+        let fp = Payload::LogitsHalf { bits: vec![0; 128], dtype: Dtype::F16 };
+        let bf_dec = Payload::DecodeHalf {
+            bits: vec![0; 128],
+            dtype: Dtype::Bf16,
+            params: crate::sampling::SamplingParams::default(),
+        };
+        let fp_dec = Payload::DecodeHalf {
+            bits: vec![0; 128],
+            dtype: Dtype::F16,
+            params: crate::sampling::SamplingParams::default(),
+        };
+        let f32_dec = Payload::Decode {
+            logits: vec![0.0; 128],
+            params: crate::sampling::SamplingParams::default(),
+        };
+        let keys = [
+            f32_sm.batch_key(),
+            bf.batch_key(),
+            fp.batch_key(),
+            f32_dec.batch_key(),
+            bf_dec.batch_key(),
+            fp_dec.batch_key(),
+        ];
+        for (i, a) in keys.iter().enumerate() {
+            for b in &keys[i + 1..] {
+                assert_ne!(a, b, "dtype/kind keys must never collide");
+            }
+        }
+        // Same dtype + length still batches together.
+        let bf2 = Payload::LogitsHalf { bits: vec![7; 128], dtype: Dtype::Bf16 };
+        assert_eq!(bf.batch_key(), bf2.batch_key());
+        assert_eq!(bf.dtype(), Dtype::Bf16);
+        assert_eq!(fp.len(), 128);
+        assert_eq!(f32_sm.dtype(), Dtype::F32);
     }
 
     #[test]

@@ -38,7 +38,7 @@ use crate::plan::{PlanCacheCounters, PlanOp, Planner};
 use crate::runtime::service::PjrtService;
 use crate::sampling::{self, Choice, SamplingParams};
 use crate::softmax::batch::{softmax_batch_inplace_planned, softmax_batch_planned, RowBatch};
-use crate::softmax::{Algorithm, Isa};
+use crate::softmax::{Algorithm, Dtype, Isa};
 
 use super::request::Payload;
 
@@ -59,10 +59,11 @@ impl NativeEngine {
         NativeEngine { planner: Planner::from_config(cfg) }
     }
 
-    /// Normalize every row of `x` into a fresh output batch.
+    /// Normalize every row of `x` into a fresh output batch (same dtype:
+    /// half-width in, half-width out — the response widens per row).
     pub fn run(&self, x: &RowBatch) -> Result<RowBatch> {
-        let plan = self.planner.plan(PlanOp::Normalize, x.rows(), x.n());
-        let mut y = RowBatch::new(x.rows(), x.n());
+        let plan = self.planner.plan_dtype(PlanOp::Normalize, x.dtype(), x.rows(), x.n());
+        let mut y = RowBatch::new_with_dtype(x.rows(), x.n(), x.dtype());
         softmax_batch_planned(&plan, x, &mut y).map_err(|e| anyhow!("{e}"))?;
         Ok(y)
     }
@@ -70,7 +71,8 @@ impl NativeEngine {
     /// Normalize every row of `x` in place: the request buffer becomes
     /// the response buffer, so the serving path allocates no output batch.
     pub fn run_inplace(&self, x: &mut RowBatch) -> Result<()> {
-        let plan = self.planner.plan(PlanOp::NormalizeInPlace, x.rows(), x.n());
+        let plan =
+            self.planner.plan_dtype(PlanOp::NormalizeInPlace, x.dtype(), x.rows(), x.n());
         softmax_batch_inplace_planned(&plan, x).map_err(|e| anyhow!("{e}"))
     }
 
@@ -81,7 +83,7 @@ impl NativeEngine {
     /// Token ids are bit-identical either way (every selection decision
     /// is scalar and index-ordered).
     pub fn decode(&self, x: &RowBatch, params: &[SamplingParams]) -> Result<Vec<Choice>> {
-        let plan = self.planner.plan(PlanOp::Decode, x.rows(), x.n());
+        let plan = self.planner.plan_dtype(PlanOp::Decode, x.dtype(), x.rows(), x.n());
         sampling::sample_batch_planned(&plan, x, params).map_err(|e| anyhow!("{e}"))
     }
 }
@@ -172,8 +174,13 @@ impl Router {
         match batch.first() {
             None => Err(anyhow!("empty batch")),
             Some(Payload::Logits(_)) => self.execute_logits(batch).map(Executed::Rows),
+            Some(Payload::LogitsHalf { .. }) => {
+                self.execute_logits_half(batch).map(Executed::Rows)
+            }
             Some(Payload::Tokens(_)) => self.execute_tokens(batch).map(Executed::Rows),
-            Some(Payload::Decode { .. }) => self.execute_decode(batch).map(Executed::Choices),
+            Some(Payload::Decode { .. }) | Some(Payload::DecodeHalf { .. }) => {
+                self.execute_decode(batch).map(Executed::Choices)
+            }
         }
     }
 
@@ -244,6 +251,40 @@ impl Router {
         }
     }
 
+    /// Softmax over half-width (bf16/f16) logits.  The quantized bits are
+    /// copied once into a half-width batch — half the request-assembly
+    /// bytes of the f32 path — and normalized in place; the batcher's
+    /// dtype-tagged keys guarantee every payload here shares one dtype.
+    /// Half batches are a native workload on both router variants (the
+    /// AOT PJRT artifacts are compiled for f32 I/O only).
+    fn execute_logits_half(&self, batch: Vec<Payload>) -> Result<RowBatch> {
+        let (n, dtype) = match &batch[0] {
+            Payload::LogitsHalf { bits, dtype } => (bits.len(), *dtype),
+            _ => unreachable!("execute_logits_half dispatched on LogitsHalf"),
+        };
+        if n == 0 {
+            return Err(anyhow!("empty logits row"));
+        }
+        let mut x = RowBatch::with_capacity_dtype(batch.len(), n, dtype);
+        for p in &batch {
+            match p {
+                Payload::LogitsHalf { bits, dtype: d } if bits.len() == n && *d == dtype => {
+                    x.push_row_bits(bits).map_err(|e| anyhow!("{e}"))?;
+                }
+                Payload::LogitsHalf { .. } => {
+                    return Err(anyhow!("mixed lengths or dtypes in batch"))
+                }
+                _ => return Err(anyhow!("mixed payload kinds in batch")),
+            }
+        }
+        let engine = match self {
+            Router::Native(e) => e,
+            Router::Pjrt { native, .. } => native,
+        };
+        engine.run_inplace(&mut x)?;
+        Ok(x)
+    }
+
     fn execute_tokens(&self, batch: Vec<Payload>) -> Result<RowBatch> {
         // Token rows are moved out of the payloads, not cloned; the PJRT
         // service flattens them into its bucket-padded buffer.
@@ -273,15 +314,29 @@ impl Router {
         if n == 0 {
             return Err(anyhow!("empty logits row"));
         }
-        let mut x = RowBatch::with_capacity(batch.len(), n);
+        // Half decode rows keep their quantized bits all the way into the
+        // sampling kernels (which widen on load into the `(m, n)`
+        // accumulators) — the batch is assembled at the payload's width.
+        let dtype = batch[0].dtype();
+        let mut x = RowBatch::with_capacity_dtype(batch.len(), n, dtype);
         let mut params: Vec<SamplingParams> = Vec::with_capacity(batch.len());
         for p in &batch {
             match p {
-                Payload::Decode { logits, params: sp } if logits.len() == n => {
+                Payload::Decode { logits, params: sp }
+                    if logits.len() == n && dtype == Dtype::F32 =>
+                {
                     x.push_row(logits).map_err(|e| anyhow!("{e}"))?;
                     params.push(*sp);
                 }
-                Payload::Decode { .. } => return Err(anyhow!("mixed lengths in batch")),
+                Payload::DecodeHalf { bits, dtype: d, params: sp }
+                    if bits.len() == n && *d == dtype =>
+                {
+                    x.push_row_bits(bits).map_err(|e| anyhow!("{e}"))?;
+                    params.push(*sp);
+                }
+                Payload::Decode { .. } | Payload::DecodeHalf { .. } => {
+                    return Err(anyhow!("mixed lengths or dtypes in batch"))
+                }
                 _ => return Err(anyhow!("mixed payload kinds in batch")),
             }
         }
@@ -373,6 +428,42 @@ mod tests {
                 assert_eq!(c[1].token, 0);
                 assert!(c[0].logprob < 0.0 && c[0].logprob.is_finite());
             }
+            Executed::Rows(_) => panic!("expected choices"),
+        }
+    }
+
+    #[test]
+    fn half_width_batches_normalize_and_decode() {
+        use crate::softmax::{Bf16, Element};
+        let r = Router::native(Algorithm::TwoPass, Isa::detect_best());
+        let bits: Vec<u16> =
+            (0..32).map(|i| Bf16::from_f32(i as f32 * 0.25 - 4.0).to_bits()).collect();
+        let batch = vec![
+            Payload::LogitsHalf { bits: bits.clone(), dtype: Dtype::Bf16 },
+            Payload::LogitsHalf { bits: bits.clone(), dtype: Dtype::Bf16 },
+        ];
+        let out = rows_of(r.execute(batch).unwrap());
+        assert_eq!(out.rows(), 2);
+        assert_eq!(out.dtype(), Dtype::Bf16);
+        assert!((out.row_f32(0).iter().sum::<f32>() - 1.0).abs() < 2e-2);
+        // Mixed dtypes never share a batch key; the router still rejects
+        // them defensively.
+        let mixed = vec![
+            Payload::LogitsHalf { bits: bits.clone(), dtype: Dtype::Bf16 },
+            Payload::LogitsHalf { bits: bits.clone(), dtype: Dtype::F16 },
+        ];
+        assert!(r.execute(mixed).is_err());
+        // Fused half decode: tokens out, no probability rows anywhere.
+        let mut peaked = vec![0.0f32; 32];
+        peaked[5] = 8.0;
+        let pb: Vec<u16> = peaked.iter().map(|&v| Bf16::from_f32(v).to_bits()).collect();
+        let dec = vec![Payload::DecodeHalf {
+            bits: pb,
+            dtype: Dtype::Bf16,
+            params: SamplingParams::greedy(),
+        }];
+        match r.execute(dec).unwrap() {
+            Executed::Choices(c) => assert_eq!(c[0].token, 5),
             Executed::Rows(_) => panic!("expected choices"),
         }
     }

@@ -41,23 +41,25 @@ pub fn table2() -> Vec<CostRow> {
 /// `gbps` of memory bandwidth, assuming the pass is bandwidth-bound (the
 /// paper's out-of-cache regime).
 pub fn predict_secs(alg: Algorithm, n: usize, gbps: f64) -> f64 {
-    predict_batch_secs(alg, 1, n, gbps)
+    predict_batch_secs(alg, 1, n, std::mem::size_of::<f32>(), gbps)
 }
 
 /// Table-2 bandwidth cost of one batched execution, in bytes: `rows × n`
-/// f32 elements through the algorithm's nominal pass traffic.  This is
+/// elements of `elem_bytes` each (4 for f32, 2 for bf16/f16 — the paper's
+/// traffic counts are per *element*, so half-width storage halves the
+/// bytes outright) through the algorithm's nominal pass traffic.  This is
 /// the number the execution planner records per plan (`plan::ExecPlan::
 /// predicted_bytes`) and `repro plan` prints.
-pub fn batch_bytes(alg: Algorithm, rows: usize, n: usize) -> usize {
-    cost(alg).bandwidth_n * rows * n * std::mem::size_of::<f32>()
+pub fn batch_bytes(alg: Algorithm, rows: usize, n: usize, elem_bytes: usize) -> usize {
+    cost(alg).bandwidth_n * rows * n * elem_bytes
 }
 
-/// Predicted runtime (seconds) for a `rows × n` batch on a machine
-/// sustaining `gbps` of memory bandwidth (bandwidth-bound regime) —
-/// [`predict_secs`] generalized to the batched shapes the serving path
-/// executes.
-pub fn predict_batch_secs(alg: Algorithm, rows: usize, n: usize, gbps: f64) -> f64 {
-    batch_bytes(alg, rows, n) as f64 / (gbps * 1e9)
+/// Predicted runtime (seconds) for a `rows × n` batch of `elem_bytes`-wide
+/// elements on a machine sustaining `gbps` of memory bandwidth
+/// (bandwidth-bound regime) — [`predict_secs`] generalized to the batched
+/// shapes and storage dtypes the serving path executes.
+pub fn predict_batch_secs(alg: Algorithm, rows: usize, n: usize, elem_bytes: usize, gbps: f64) -> f64 {
+    batch_bytes(alg, rows, n, elem_bytes) as f64 / (gbps * 1e9)
 }
 
 /// Predicted speedup of the two-pass algorithm over `other` in the
@@ -118,11 +120,13 @@ mod tests {
     #[test]
     fn batched_cost_matches_table2_per_row() {
         for alg in Algorithm::ALL {
-            assert_eq!(batch_bytes(alg, 1, 1024), cost(alg).bandwidth_n * 4096);
-            assert_eq!(batch_bytes(alg, 8, 1024), 8 * batch_bytes(alg, 1, 1024));
+            assert_eq!(batch_bytes(alg, 1, 1024, 4), cost(alg).bandwidth_n * 4096);
+            assert_eq!(batch_bytes(alg, 8, 1024, 4), 8 * batch_bytes(alg, 1, 1024, 4));
+            // Half-width storage halves the predicted traffic outright.
+            assert_eq!(batch_bytes(alg, 8, 1024, 2) * 2, batch_bytes(alg, 8, 1024, 4));
             // A batch of r rows of n elements predicts exactly like one
             // row of r·n elements: traffic is per element.
-            let batched = predict_batch_secs(alg, 16, 4096, 12.0);
+            let batched = predict_batch_secs(alg, 16, 4096, 4, 12.0);
             let flat = predict_secs(alg, 16 * 4096, 12.0);
             assert!((batched - flat).abs() < 1e-15, "{alg}");
         }

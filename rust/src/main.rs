@@ -7,6 +7,7 @@
 //! figures <id|all> [opts]        regenerate paper tables/figures
 //! tune [opts]                    auto-tune unroll meta-parameters (§6.3)
 //! plan <rows> <n> [opts]         print the execution plan for one shape
+//! bench --all [opts]             run the dtype bench suite -> BENCH_<host>.json
 //! serve [opts]                   run the serving coordinator under load
 //! verify [opts]                  PJRT artifacts vs native kernels parity
 //! help                           this text
@@ -23,7 +24,7 @@ use two_pass_softmax::plan::{PlanOp, Planner};
 use two_pass_softmax::platform;
 use two_pass_softmax::runtime::{EntryKind, Runtime};
 use two_pass_softmax::sampling::SamplingParams;
-use two_pass_softmax::softmax::{self, tuning, Algorithm};
+use two_pass_softmax::softmax::{self, tuning, Algorithm, Dtype};
 use two_pass_softmax::util::cli::Args;
 use two_pass_softmax::util::rng::Rng;
 use two_pass_softmax::workload::LogitsDist;
@@ -35,11 +36,17 @@ USAGE:
   repro figures <table1|table2|table3|fig1..fig12|all>
         [--out DIR] [--paper-protocol] [--reps N] [--min-time S] [--max-n N] [--verbose]
   repro tune [--n N] [--reps N] [--save FILE] [--no-stream]
-  repro plan <rows> <n> [--op softmax|inplace|accum|decode]
+  repro plan <rows> <n> [--op softmax|inplace|accum|decode] [--dtype f32|bf16|f16]
         [--backend native|pjrt] [--algorithm twopass|reload|recompute] [--isa I]
         [--parallel-threshold ELEMS] [--batch-threads T] [--config FILE]
         [--tune-file FILE] [--no-bucket-pow2]
         (prints the cached execution plan + cost prediction, docs/FORMATS.md schema)
+  repro bench --all [--rows R] [--n N] [--reps N] [--min-time S]
+        [--algorithm twopass|reload|recompute] [--host NAME] [--out FILE]
+        [--projected (cost-model numbers only — no measurement)] [--gbps B]
+        (one normalized BENCH_<host>.json: GB/s + tokens/s per dtype,
+         plan-cache hit rate; --projected derives every number from the
+         Table-2 cost model at --gbps instead of timing kernels)
   repro serve [--backend native|pjrt] [--algorithm twopass|reload|recompute]
         [--requests N] [--n LOGITS] [--clients K] [--max-batch B] [--workers W]
         [--max-wait-us U] [--parallel-threshold ELEMS (0 = auto from STREAM)]
@@ -91,6 +98,7 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         Some("tune") => cmd_tune(args),
         Some("plan") => cmd_plan(args),
+        Some("bench") => cmd_bench(args),
         Some("serve") => cmd_serve(args),
         Some("verify") => cmd_verify(args),
         Some(other) => bail!("unknown subcommand {other:?}\n{HELP}"),
@@ -169,10 +177,199 @@ fn cmd_plan(args: &Args) -> Result<()> {
         "decode" => PlanOp::Decode,
         other => bail!("plan: unknown --op {other:?} (want softmax|inplace|accum|decode)"),
     };
+    let dtype: Dtype =
+        args.opt("dtype").unwrap_or("f32").parse().map_err(|e: String| anyhow!(e))?;
     let cfg = load_planner_config(args)?;
     let planner = Planner::from_config(&cfg);
-    println!("{}", planner.plan(op, rows, n));
+    println!("{}", planner.plan_dtype(op, dtype, rows, n));
     Ok(())
+}
+
+/// `repro bench --all`: the normalized bench suite.  Sweeps the batched
+/// softmax engine and the fused decoder over every storage dtype on one
+/// out-of-cache shape and writes a single `BENCH_<host>.json` (schema
+/// checked in CI): per-dtype GB/s at native width, f32-equivalent GB/s
+/// (row throughput in f32-byte units — the halve-the-bytes headline),
+/// rows/s, decode tokens/s, and the planner's cache hit rate.  With
+/// `--projected` every number comes from the Table-2 cost model at
+/// `--gbps` of sustained bandwidth instead of timing kernels (the
+/// bandwidth-bound upper bound; provenance is recorded in the file).
+fn cmd_bench(args: &Args) -> Result<()> {
+    use two_pass_softmax::softmax::batch::{softmax_batch_planned, RowBatch};
+    use two_pass_softmax::softmax::Isa;
+    use two_pass_softmax::util::json::Json;
+    use two_pass_softmax::util::stats;
+    use two_pass_softmax::{costmodel, json_obj, sampling};
+
+    if !args.flag("all") {
+        bail!("bench: pass --all to run the full suite (see `repro help`)");
+    }
+    let rows: usize = args.get("rows", 64).map_err(|e| anyhow!(e))?;
+    let n: usize = args.get("n", 32_768).map_err(|e| anyhow!(e))?;
+    let reps: usize = args.get("reps", 5).map_err(|e| anyhow!(e))?;
+    let min_time: f64 = args.get("min-time", 0.05).map_err(|e| anyhow!(e))?;
+    let projected = args.flag("projected");
+    let gbps_assumed: f64 = args.get("gbps", 20.0).map_err(|e| anyhow!(e))?;
+    let alg: Algorithm =
+        args.opt("algorithm").unwrap_or("twopass").parse().map_err(|e: String| anyhow!(e))?;
+    let isa: Isa = match args.opt("isa") {
+        Some(s) => s.parse().map_err(|e: String| anyhow!(e))?,
+        None => Isa::detect_best(),
+    };
+    let host = match args.opt("host") {
+        Some(h) => h.to_string(),
+        None => hostname(),
+    };
+    // Rounding keeps the emitted file stable across runs of equal speed
+    // (and byte-reproducible for the projected mode).
+    let r1 = |x: f64| (x * 10.0).round() / 10.0;
+    let r3 = |x: f64| (x * 1000.0).round() / 1000.0;
+
+    // Plans come from one planner so the cache counters below reflect
+    // exactly this suite: each (op, dtype) shape misses once, then every
+    // re-plan is a hit (steady serving state).  Threshold `usize::MAX`
+    // keeps the suite single-threaded and measurement-free in projected
+    // mode (no lazy STREAM resolution).
+    let planner = Planner::new(alg, isa, usize::MAX, 1);
+    let stream_gbps = if projected {
+        gbps_assumed
+    } else {
+        let (_, gbps) = tuning::measured_parallel_threshold();
+        gbps
+    };
+
+    let dist = LogitsDist::Normal { mean: 0.0, std: 4.0 };
+    let mut rng = Rng::new(7);
+    let xf: Vec<Vec<f32>> = (0..rows).map(|_| dist.generate(n, &mut rng)).collect();
+    let f32_bytes = costmodel::batch_bytes(alg, rows, n, 4);
+    let mut f32_rows_per_s = 0.0f64;
+    let mut dts = Vec::new();
+    println!(
+        "bench --all: {alg} on {isa}, {rows} x {n} ({})",
+        if projected {
+            format!("projected from the cost model at {gbps_assumed} GB/s")
+        } else {
+            format!("measured, reps={reps}")
+        }
+    );
+    for dtype in Dtype::ALL {
+        let esz = dtype.size();
+        let native_bytes = costmodel::batch_bytes(alg, rows, n, esz);
+        let plan = planner.plan_dtype(PlanOp::Normalize, dtype, rows, n);
+        let dplan = planner.plan_dtype(PlanOp::Decode, dtype, rows, n);
+        let (softmax_secs, decode_secs) = if projected {
+            (
+                costmodel::predict_batch_secs(alg, rows, n, esz, gbps_assumed),
+                // Fused decode streams the logits exactly once (one read
+                // pass into the extended-exponent accumulators).
+                (rows * n * esz) as f64 / (gbps_assumed * 1e9),
+            )
+        } else {
+            let mut x = RowBatch::with_capacity_dtype(rows, n, dtype);
+            for row in &xf {
+                x.push_row_quantized(row).map_err(|e| anyhow!("{e}"))?;
+            }
+            let mut y = RowBatch::new_with_dtype(rows, n, dtype);
+            let s = stats::measure_median(
+                || {
+                    softmax_batch_planned(&plan, &x, &mut y).unwrap();
+                    std::hint::black_box(&y);
+                },
+                reps,
+                min_time,
+            );
+            let params = vec![SamplingParams::greedy(); rows];
+            let d = stats::measure_median(
+                || {
+                    std::hint::black_box(
+                        sampling::sample_batch_planned(&dplan, &x, &params).unwrap(),
+                    );
+                },
+                reps,
+                min_time,
+            );
+            (s, d)
+        };
+        let rows_per_s = rows as f64 / softmax_secs;
+        if dtype == Dtype::F32 {
+            f32_rows_per_s = rows_per_s;
+        }
+        let speedup = rows_per_s / f32_rows_per_s;
+        println!(
+            "  {dtype:<5} softmax {:7.2} GB/s native, {:7.2} GB/s f32-equiv, \
+             {:9.1} rows/s ({speedup:.2}x f32), decode {:9.1} tok/s",
+            native_bytes as f64 / softmax_secs / 1e9,
+            f32_bytes as f64 / softmax_secs / 1e9,
+            rows_per_s,
+            rows as f64 / decode_secs,
+        );
+        dts.push(json_obj! {
+            "decode_tokens_per_s" => Json::Num(r1(rows as f64 / decode_secs)),
+            "dtype" => Json::Str(dtype.to_string()),
+            "elem_bytes" => Json::Num(esz as f64),
+            "rows_per_s" => Json::Num(r1(rows_per_s)),
+            "softmax_f32eq_gbps" => Json::Num(r3(f32_bytes as f64 / softmax_secs / 1e9)),
+            "softmax_gbps" => Json::Num(r3(native_bytes as f64 / softmax_secs / 1e9)),
+            "speedup_vs_f32" => Json::Num(r3(speedup)),
+        });
+    }
+    // Steady state: every suite shape re-planned is a cache hit.
+    for dtype in Dtype::ALL {
+        let _ = planner.plan_dtype(PlanOp::Normalize, dtype, rows, n);
+        let _ = planner.plan_dtype(PlanOp::Decode, dtype, rows, n);
+    }
+    let (hits, misses) = planner.plan_stats();
+    let hit_rate = hits as f64 / (hits + misses).max(1) as f64;
+    let out = json_obj! {
+        "algorithm" => Json::Str(alg.to_string()),
+        "dtypes" => Json::Arr(dts),
+        "host" => Json::Str(host.clone()),
+        "isa" => Json::Str(isa.to_string()),
+        "n" => Json::Num(n as f64),
+        "plan_cache" => json_obj! {
+            "hit_rate" => Json::Num(hit_rate),
+            "hits" => Json::Num(hits as f64),
+            "misses" => Json::Num(misses as f64),
+        },
+        "provenance" => Json::Str(
+            if projected {
+                "cost-model-projection (Table-2 traffic at the stated bandwidth; \
+                 regenerate with `repro bench --all` on target hardware)"
+            } else {
+                "measured"
+            }
+            .to_string(),
+        ),
+        "rows" => Json::Num(rows as f64),
+        "schema" => Json::Str("two-pass-softmax-bench-v1".to_string()),
+        "stream_gbps" => Json::Num(r3(stream_gbps)),
+    };
+    let path = match args.opt("out") {
+        Some(p) => p.to_string(),
+        None => format!("BENCH_{host}.json"),
+    };
+    std::fs::write(&path, format!("{out}\n"))?;
+    println!("plan cache: {hits} hits / {misses} misses (rate {hit_rate:.2})");
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Sanitized kernel hostname for `BENCH_<host>.json` (filename-safe).
+fn hostname() -> String {
+    let raw = std::fs::read_to_string("/proc/sys/kernel/hostname")
+        .ok()
+        .or_else(|| std::env::var("HOSTNAME").ok())
+        .unwrap_or_default();
+    let s: String = raw
+        .trim()
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '-' })
+        .collect();
+    if s.is_empty() {
+        "host".to_string()
+    } else {
+        s
+    }
 }
 
 fn cmd_tune(args: &Args) -> Result<()> {

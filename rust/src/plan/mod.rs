@@ -14,8 +14,11 @@
 //! Gimelshein, 2018) frames variant choice as a traffic trade-off:
 //!
 //! * [`ExecPlan`] — the complete, immutable decision record for one
-//!   `(op, rows, n)` batch shape: algorithm, ISA, per-pass unrolls (from
-//!   a [`TuneTable`] when one is attached), cache-block size, the
+//!   `(op, dtype, rows, n)` batch shape: algorithm, ISA, storage element
+//!   width (every byte-keyed decision — blocking, NT stores, predicted
+//!   traffic — halves automatically for bf16/f16 batches), per-pass
+//!   unrolls (from a [`TuneTable`] when one is attached, executed by the
+//!   batch kernels' unroll dispatch), cache-block size, the
 //!   resolved non-temporal-store decision, submit-vs-pool placement with
 //!   the exact row-chunk layout (including the per-chunk preferred NUMA
 //!   node — a single-node default until the NUMA-aware pool lands), pjrt
@@ -51,7 +54,7 @@ use crate::softmax::batch::available_threads;
 use crate::softmax::tuning::{
     default_best_unroll, measured_parallel_threshold, TuneTable, MIN_PARALLEL_THRESHOLD,
 };
-use crate::softmax::{Algorithm, Isa, Pass};
+use crate::softmax::{Algorithm, Dtype, Isa, Pass};
 
 // ---------------------------------------------------------------------------
 // Decision primitives (moved here from softmax/batch.rs and the router).
@@ -88,23 +91,26 @@ fn nt_threshold_bytes() -> usize {
     *B.get_or_init(|| crate::platform::detect().llc())
 }
 
-/// Resolve an NT policy for a span of `span_elems` f32 elements (the one
-/// NtPolicy → bool decision in the tree).
-pub fn resolve_nt(policy: NtPolicy, span_elems: usize) -> bool {
+/// Resolve an NT policy for a span of `span_elems` elements of
+/// `elem_bytes` each (the one NtPolicy → bool decision in the tree).
+/// Keyed off *bytes*, so a bf16/f16 batch — half the working set — stays
+/// on temporal stores up to twice the element count of an f32 batch.
+pub fn resolve_nt(policy: NtPolicy, span_elems: usize, elem_bytes: usize) -> bool {
     match policy {
         NtPolicy::Always => true,
         NtPolicy::Never => false,
-        NtPolicy::Auto => 2 * span_elems * std::mem::size_of::<f32>() > nt_threshold_bytes(),
+        NtPolicy::Auto => 2 * span_elems * elem_bytes > nt_threshold_bytes(),
     }
 }
 
-/// Rows per cache block: input + output block (2 · n · 4 bytes per row)
-/// should fit in half the per-core L2, so every row a pass touched is
-/// still resident when the algorithm's next pass runs over the block.
-pub fn block_rows(n: usize) -> usize {
+/// Rows per cache block: input + output block (2 · n · `elem_bytes` per
+/// row) should fit in half the per-core L2, so every row a pass touched
+/// is still resident when the algorithm's next pass runs over the block.
+/// Half-width batches automatically block twice as many rows.
+pub fn block_rows(n: usize, elem_bytes: usize) -> usize {
     static L2_BUDGET: OnceLock<usize> = OnceLock::new();
     let budget = *L2_BUDGET.get_or_init(|| crate::platform::detect().l2() / 2);
-    (budget / (2 * std::mem::size_of::<f32>() * n.max(1))).max(1)
+    (budget / (2 * elem_bytes * n.max(1))).max(1)
 }
 
 /// The one threading policy shared by every execution path — normalize,
@@ -196,7 +202,8 @@ impl fmt::Display for PlanOp {
     }
 }
 
-/// The complete execution decision for one `(op, rows, n)` batch shape.
+/// The complete execution decision for one `(op, dtype, rows, n)` batch
+/// shape.
 ///
 /// A plan never changes *what* a kernel computes — only where and how it
 /// runs — so planned executions are bit-identical to the unplanned paths.
@@ -211,18 +218,19 @@ pub struct ExecPlan {
     /// are defined on the two-pass `(m, n)` representation).
     pub algorithm: Algorithm,
     pub isa: Isa,
-    /// Unroll factor per pass of the algorithm, in execution order: the
-    /// measured static defaults the batched kernels are monomorphized at
-    /// ([`default_best_unroll`]) — i.e. what actually runs.
-    pub unrolls: Vec<(Pass, usize)>,
-    /// The attached [`TuneTable`]'s winning unroll per pass, when a table
-    /// was supplied.  Informational until the batched kernels grow
-    /// unroll dispatch (the single-row/figures path already consumes the
-    /// table): `repro plan` prints both lines so a tuned-vs-executed
-    /// disagreement is visible instead of misleading.
+    /// Storage element type of the planned batch.  Every byte-keyed
+    /// decision below (block size, NT resolution, predicted traffic) uses
+    /// this element's width; the kernels widen to f32 on load, so the
+    /// arithmetic itself is dtype-independent.
+    pub dtype: Dtype,
+    /// Unroll factor per pass of the algorithm, in execution order —
+    /// what the batched kernels execute (they dispatch on this value):
+    /// the attached [`TuneTable`]'s winning unroll per pass when a table
+    /// was supplied, the measured static defaults
+    /// ([`default_best_unroll`]) otherwise.
     ///
     /// [`TuneTable`]: crate::softmax::tuning::TuneTable
-    pub tuned_unrolls: Option<Vec<(Pass, usize)>>,
+    pub unrolls: Vec<(Pass, usize)>,
     /// Cache-block size in rows (half the per-core L2).
     pub block_rows: usize,
     /// The NT policy the decision was made under.
@@ -269,18 +277,12 @@ impl fmt::Display for ExecPlan {
         writeln!(f, "plan op={} rows={} n={}", self.op, self.rows, self.n)?;
         writeln!(f, "algorithm {}", self.algorithm)?;
         writeln!(f, "isa {}", self.isa)?;
+        writeln!(f, "dtype {} elem_bytes={}", self.dtype, self.dtype.size())?;
         write!(f, "unroll")?;
         for (pass, u) in &self.unrolls {
             write!(f, " {pass}={u}")?;
         }
         writeln!(f)?;
-        if let Some(tuned) = &self.tuned_unrolls {
-            write!(f, "tuned_unroll")?;
-            for (pass, u) in tuned {
-                write!(f, " {pass}={u}")?;
-            }
-            writeln!(f)?;
-        }
         writeln!(f, "block_rows {}", self.block_rows)?;
         writeln!(f, "nt {} policy={}", self.nt, self.nt_policy)?;
         if self.threshold_elems == usize::MAX {
@@ -318,6 +320,7 @@ struct BuildInputs<'a> {
     op: PlanOp,
     algorithm: Algorithm,
     isa: Isa,
+    dtype: Dtype,
     rows: usize,
     n: usize,
     /// Already-resolved threshold in elements (`usize::MAX` = never split).
@@ -340,33 +343,36 @@ fn pow2_bucket(bucket_pow2: bool, rows: usize) -> Option<usize> {
 }
 
 fn build_plan(inp: BuildInputs<'_>) -> ExecPlan {
+    let esz = inp.dtype.size();
     let threads = plan_threads(inp.rows, inp.n, inp.threshold_elems, inp.max_threads);
     let chunks = if threads > 1 { chunk_layout(inp.rows, threads) } else { Vec::new() };
     // NT is a whole-batch decision (chunks inherit it), only meaningful
     // for the out-of-place store pass; the reload algorithm's final pass
-    // re-reads its output and ignores it inside the kernel.
+    // re-reads its output and ignores it inside the kernel.  Byte-keyed:
+    // half-width batches cross the streaming threshold at twice the
+    // element count.
     let nt = match inp.op {
-        PlanOp::Normalize => resolve_nt(inp.nt_policy, inp.rows * inp.n),
+        PlanOp::Normalize => resolve_nt(inp.nt_policy, inp.rows * inp.n, esz),
         PlanOp::NormalizeInPlace | PlanOp::Accum | PlanOp::Decode => false,
     };
     let passes: &[Pass] = match inp.op {
         PlanOp::Normalize | PlanOp::NormalizeInPlace => Pass::of_algorithm(inp.algorithm),
         PlanOp::Accum | PlanOp::Decode => &[Pass::AccumExtExp],
     };
-    // `unrolls` records what the monomorphized batch kernels actually
-    // run; the tune table's picks ride along separately so the explain
-    // output never claims a tuned variant executed when it didn't.
-    let unrolls = passes.iter().map(|&p| (p, default_best_unroll(p, inp.isa))).collect();
-    let tuned_unrolls = inp
-        .tune
-        .map(|t| passes.iter().map(|&p| (p, t.best(p, inp.isa))).collect::<Vec<_>>());
+    // `unrolls` is what the batch kernels execute — they dispatch on the
+    // plan's value per pass: the tune table's winning unroll when a table
+    // is attached, the measured static defaults otherwise.
+    let unrolls = match inp.tune {
+        Some(t) => passes.iter().map(|&p| (p, t.best(p, inp.isa))).collect(),
+        None => passes.iter().map(|&p| (p, default_best_unroll(p, inp.isa))).collect(),
+    };
     let predicted_bytes = match inp.op {
         PlanOp::Normalize | PlanOp::NormalizeInPlace => {
-            costmodel::batch_bytes(inp.algorithm, inp.rows, inp.n)
+            costmodel::batch_bytes(inp.algorithm, inp.rows, inp.n, esz)
         }
         PlanOp::Accum | PlanOp::Decode => {
             let (r, w) = Pass::AccumExtExp.traffic();
-            (r + w) * inp.rows * inp.n * std::mem::size_of::<f32>()
+            (r + w) * inp.rows * inp.n * esz
         }
     };
     let predicted_secs = inp.gbps.map(|g| predicted_bytes as f64 / (g * 1e9));
@@ -380,9 +386,9 @@ fn build_plan(inp: BuildInputs<'_>) -> ExecPlan {
         n: inp.n,
         algorithm: inp.algorithm,
         isa: inp.isa,
+        dtype: inp.dtype,
         unrolls,
-        tuned_unrolls,
-        block_rows: block_rows(inp.n),
+        block_rows: block_rows(inp.n, esz),
         nt_policy: inp.nt_policy,
         nt,
         threshold_elems: inp.threshold_elems,
@@ -410,10 +416,27 @@ pub fn adhoc(
     parallel_threshold: usize,
     max_threads: usize,
 ) -> ExecPlan {
+    adhoc_dtype(op, algorithm, isa, Dtype::F32, rows, n, parallel_threshold, max_threads)
+}
+
+/// [`adhoc`] for an explicit storage dtype (the `_auto` wrappers pass the
+/// batch's own dtype through).
+#[allow(clippy::too_many_arguments)]
+pub fn adhoc_dtype(
+    op: PlanOp,
+    algorithm: Algorithm,
+    isa: Isa,
+    dtype: Dtype,
+    rows: usize,
+    n: usize,
+    parallel_threshold: usize,
+    max_threads: usize,
+) -> ExecPlan {
     build_plan(BuildInputs {
         op,
         algorithm,
         isa,
+        dtype,
         rows,
         n,
         threshold_elems: parallel_threshold,
@@ -453,7 +476,7 @@ impl PlanCacheCounters {
 // The cached planner.
 // ---------------------------------------------------------------------------
 
-type PlanKey = (PlanOp, usize, usize);
+type PlanKey = (PlanOp, Dtype, usize, usize);
 type PlanMap = HashMap<PlanKey, Arc<ExecPlan>>;
 
 /// Hard bound on cached shapes per planner.  A serving process sees few
@@ -631,20 +654,26 @@ impl Planner {
         pow2_bucket(self.bucket_pow2, rows)
     }
 
-    /// The plan for one `(op, rows, n)` batch shape — cached: repeated
-    /// shapes return the published plan with one atomic load and no
-    /// re-derivation.  (Two threads missing the same fresh shape at once
-    /// may both count a miss; the cache still stores exactly one plan.
-    /// Past [`PLAN_CACHE_CAP`] distinct shapes, new shapes are planned
-    /// per call and every call counts as a miss.)
+    /// The plan for one f32 `(op, rows, n)` batch shape — see
+    /// [`Planner::plan_dtype`].
     pub fn plan(&self, op: PlanOp, rows: usize, n: usize) -> Arc<ExecPlan> {
-        let key = (op, rows, n);
+        self.plan_dtype(op, Dtype::F32, rows, n)
+    }
+
+    /// The plan for one `(op, dtype, rows, n)` batch shape — cached:
+    /// repeated shapes return the published plan with one atomic load and
+    /// no re-derivation.  (Two threads missing the same fresh shape at
+    /// once may both count a miss; the cache still stores exactly one
+    /// plan.  Past [`PLAN_CACHE_CAP`] distinct shapes, new shapes are
+    /// planned per call and every call counts as a miss.)
+    pub fn plan_dtype(&self, op: PlanOp, dtype: Dtype, rows: usize, n: usize) -> Arc<ExecPlan> {
+        let key = (op, dtype, rows, n);
         if let Some(p) = self.cache.get(&key) {
             self.counters.hits.fetch_add(1, Ordering::Relaxed);
             return p;
         }
         self.counters.misses.fetch_add(1, Ordering::Relaxed);
-        let plan = self.build(op, rows, n);
+        let plan = self.build(op, dtype, rows, n);
         if self.explain {
             println!("{plan}");
         }
@@ -665,7 +694,7 @@ impl Planner {
         (thr, Some(gbps))
     }
 
-    fn build(&self, op: PlanOp, rows: usize, n: usize) -> ExecPlan {
+    fn build(&self, op: PlanOp, dtype: Dtype, rows: usize, n: usize) -> ExecPlan {
         // Accum and decode are defined on the two-pass (m, n)
         // representation whatever algorithm normalization is configured
         // to use.
@@ -678,6 +707,7 @@ impl Planner {
             op,
             algorithm,
             isa: self.isa,
+            dtype,
             rows,
             n,
             threshold_elems,
@@ -787,7 +817,7 @@ mod tests {
         for alg in Algorithm::ALL {
             let pl = Planner::new(alg, Isa::Scalar, 1 << 20, 1);
             let plan = pl.plan(PlanOp::Normalize, 8, 32768);
-            assert_eq!(plan.predicted_bytes, costmodel::batch_bytes(alg, 8, 32768));
+            assert_eq!(plan.predicted_bytes, costmodel::batch_bytes(alg, 8, 32768, 4));
             assert_eq!(
                 plan.predicted_bytes,
                 costmodel::cost(alg).bandwidth_n * 8 * 32768 * 4
@@ -801,8 +831,28 @@ mod tests {
         let with_bw =
             Planner::new(Algorithm::TwoPass, Isa::Scalar, 1 << 20, 1).with_stream_gbps(Some(10.0));
         let plan = with_bw.plan(PlanOp::Normalize, 8, 32768);
-        let want = costmodel::predict_batch_secs(Algorithm::TwoPass, 8, 32768, 10.0);
+        let want = costmodel::predict_batch_secs(Algorithm::TwoPass, 8, 32768, 4, 10.0);
         assert!((plan.predicted_secs.unwrap() - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn half_width_plans_halve_traffic_and_double_blocking() {
+        let p = Planner::new(Algorithm::TwoPass, Isa::Scalar, 1 << 20, 1);
+        let f32p = p.plan_dtype(PlanOp::Normalize, Dtype::F32, 8, 32768);
+        for dtype in [Dtype::Bf16, Dtype::F16] {
+            let h = p.plan_dtype(PlanOp::Normalize, dtype, 8, 32768);
+            assert_eq!(h.dtype, dtype);
+            assert_eq!(h.predicted_bytes * 2, f32p.predicted_bytes, "{dtype}");
+            assert_eq!(h.block_rows, f32p.block_rows * 2, "{dtype}");
+            // Distinct cache keys per dtype: the f32 plan must survive.
+            assert!(Arc::ptr_eq(&f32p, &p.plan_dtype(PlanOp::Normalize, Dtype::F32, 8, 32768)));
+        }
+        // The elements-based threshold is dtype-independent by design
+        // (it bounds per-row *work*, resolved before dtype is known).
+        assert_eq!(
+            p.plan_dtype(PlanOp::Decode, Dtype::Bf16, 8, 32768).threshold_elems,
+            f32p.threshold_elems
+        );
     }
 
     #[test]
@@ -821,11 +871,12 @@ mod tests {
             .with_stream_gbps(Some(14.0));
         let text = p.plan(PlanOp::Normalize, 8, 1024).to_text();
         assert!(text.starts_with("plan op=normalize rows=8 n=1024\n"), "{text}");
-        for key in ["algorithm ", "isa ", "unroll ", "block_rows ", "nt ", "threshold ",
-            "threads ", "bucket_rows ", "predicted bytes="]
+        for key in ["algorithm ", "isa ", "dtype ", "unroll ", "block_rows ", "nt ",
+            "threshold ", "threads ", "bucket_rows ", "predicted bytes="]
         {
             assert!(text.contains(key), "missing {key:?} in:\n{text}");
         }
+        assert!(text.contains("dtype f32 elem_bytes=4"), "{text}");
         assert!(text.contains("gbps=14.0"), "{text}");
     }
 

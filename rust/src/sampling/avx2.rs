@@ -20,8 +20,9 @@
 
 use core::arch::x86_64::*;
 
-use crate::softmax::avx2::{accum_step, vexp_parts};
+use crate::softmax::avx2::{accum_step, vexp_parts, Avx2Elem};
 use crate::softmax::exp::{extexp, ExtSum, EXTSUM_NEG_INIT};
+use crate::softmax::kernels::Element;
 
 use super::Selector;
 
@@ -57,9 +58,11 @@ unsafe fn offer_lanes(
 /// contract.  The prefilter threshold is re-read once per vector, which
 /// can only make it staler (lower) than the scalar path's per-element
 /// view — extra candidates pass the filter and are rejected by the exact
-/// comparison in [`Selector::offer`], never the reverse.
-#[target_feature(enable = "avx2,fma")]
-pub unsafe fn scan_select(x: &[f32], inv_t: f32, sel: &mut Selector) -> ExtSum {
+/// comparison in [`Selector::offer`], never the reverse.  Generic over
+/// the storage element ([`Avx2Elem`]): half-width logits widen to f32
+/// lanes on load (F16C), so the scan itself is dtype-independent.
+#[target_feature(enable = "avx2,fma,f16c")]
+pub unsafe fn scan_select<E: Avx2Elem>(x: &[E], inv_t: f32, sel: &mut Selector) -> ExtSum {
     let vt = _mm256_set1_ps(inv_t);
     let mut vm = [_mm256_setzero_ps(); UNROLL];
     let mut vn = [_mm256_set1_ps(EXTSUM_NEG_INIT); UNROLL];
@@ -69,7 +72,7 @@ pub unsafe fn scan_select(x: &[f32], inv_t: f32, sel: &mut Selector) -> ExtSum {
     let mut rem = x.len();
     while rem >= stride {
         for k in 0..UNROLL {
-            let xs = _mm256_mul_ps(_mm256_loadu_ps(p.add(k * LANES)), vt);
+            let xs = _mm256_mul_ps(E::loadv(p.add(k * LANES)), vt);
             let (pe, ne) = vexp_parts(xs);
             accum_step(&mut vm[k], &mut vn[k], pe, ne);
             let vth = _mm256_set1_ps(sel.threshold());
@@ -83,7 +86,7 @@ pub unsafe fn scan_select(x: &[f32], inv_t: f32, sel: &mut Selector) -> ExtSum {
         rem -= stride;
     }
     while rem >= LANES {
-        let xs = _mm256_mul_ps(_mm256_loadu_ps(p), vt);
+        let xs = _mm256_mul_ps(E::loadv(p), vt);
         let (pe, ne) = vexp_parts(xs);
         accum_step(&mut vm[0], &mut vn[0], pe, ne);
         let vth = _mm256_set1_ps(sel.threshold());
@@ -109,7 +112,7 @@ pub unsafe fn scan_select(x: &[f32], inv_t: f32, sel: &mut Selector) -> ExtSum {
     // Scalar tail, still in index order (NaN carries no weight, matching
     // the scalar kernel).
     for i in 0..rem {
-        let xs = *p.add(i) * inv_t;
+        let xs = (*p.add(i)).to_f32() * inv_t;
         if xs.is_nan() {
             continue;
         }

@@ -11,8 +11,9 @@
 
 use core::arch::x86_64::*;
 
-use crate::softmax::avx512::{accum_step, vexp_parts};
+use crate::softmax::avx512::{accum_step, vexp_parts, Avx512Elem};
 use crate::softmax::exp::{extexp, ExtSum, EXTSUM_NEG_INIT};
+use crate::softmax::kernels::Element;
 
 use super::Selector;
 
@@ -45,9 +46,11 @@ unsafe fn offer_lanes(
 }
 
 /// Fused pass 1 + select over one row; see the scalar kernel for the
-/// contract and `sampling::avx2` for the prefilter argument.
-#[target_feature(enable = "avx512f")]
-pub unsafe fn scan_select(x: &[f32], inv_t: f32, sel: &mut Selector) -> ExtSum {
+/// contract and `sampling::avx2` for the prefilter argument.  Generic
+/// over the storage element ([`Avx512Elem`]): half-width logits widen to
+/// f32 lanes on load, so the scan itself is dtype-independent.
+#[target_feature(enable = "avx512f,f16c")]
+pub unsafe fn scan_select<E: Avx512Elem>(x: &[E], inv_t: f32, sel: &mut Selector) -> ExtSum {
     let vt = _mm512_set1_ps(inv_t);
     let mut vm = [_mm512_setzero_ps(); UNROLL];
     let mut vn = [_mm512_set1_ps(EXTSUM_NEG_INIT); UNROLL];
@@ -57,7 +60,7 @@ pub unsafe fn scan_select(x: &[f32], inv_t: f32, sel: &mut Selector) -> ExtSum {
     let mut rem = x.len();
     while rem >= stride {
         for k in 0..UNROLL {
-            let xs = _mm512_mul_ps(_mm512_loadu_ps(p.add(k * LANES)), vt);
+            let xs = _mm512_mul_ps(E::loadv(p.add(k * LANES)), vt);
             let (pe, ne) = vexp_parts(xs);
             accum_step(&mut vm[k], &mut vn[k], pe, ne);
             let vth = _mm512_set1_ps(sel.threshold());
@@ -71,7 +74,7 @@ pub unsafe fn scan_select(x: &[f32], inv_t: f32, sel: &mut Selector) -> ExtSum {
         rem -= stride;
     }
     while rem >= LANES {
-        let xs = _mm512_mul_ps(_mm512_loadu_ps(p), vt);
+        let xs = _mm512_mul_ps(E::loadv(p), vt);
         let (pe, ne) = vexp_parts(xs);
         accum_step(&mut vm[0], &mut vn[0], pe, ne);
         let vth = _mm512_set1_ps(sel.threshold());
@@ -96,7 +99,7 @@ pub unsafe fn scan_select(x: &[f32], inv_t: f32, sel: &mut Selector) -> ExtSum {
     // Scalar tail, still in index order (NaN carries no weight, matching
     // the scalar kernel).
     for i in 0..rem {
-        let xs = *p.add(i) * inv_t;
+        let xs = (*p.add(i)).to_f32() * inv_t;
         if xs.is_nan() {
             continue;
         }

@@ -35,6 +35,13 @@
 //!   builds a one-shot one.  Ids and logprobs are bit-identical across
 //!   placements and thread counts by construction.
 //!
+//! Every scan is generic over the storage element
+//! ([`crate::softmax::kernels::KernelElement`]): bf16/f16 logit rows are
+//! widened to f32 lanes on load inside the kernels and decode directly
+//! into the `(m, n)` accumulators — a half-width batch is never
+//! materialized as f32 rows, so decode reads half the bytes outright.
+//! Ids are identical to decoding the row's exact f32 widening.
+//!
 //! The SIMD kernels (`sampling::avx2`, `sampling::avx512`) reuse the
 //! polynomial and `(m, n)` accumulation of `softmax/exp.rs` and the ISA
 //! modules, and add a vector *prefilter*: a lane can only displace the
@@ -58,8 +65,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use crate::plan::{self, ExecPlan, PlanOp};
 use crate::softmax::batch::{decode_chunked, note_scan_pass, RowBatch};
 use crate::softmax::exp::{extexp, ExtSum};
+use crate::softmax::kernels::{Element, KernelElement};
 use crate::softmax::{Algorithm, Isa};
 use crate::util::rng::Rng;
+use crate::with_elem;
 
 /// Per-request sampling controls (the decode endpoint's per-row knobs).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -346,7 +355,9 @@ static SCAN_ROWS: AtomicUsize = AtomicUsize::new(0);
 
 /// One fused traversal of a row: pass-1 `(m, n)` accumulation and
 /// candidate selection share a single read of `x` — no writes anywhere.
-fn scan_row(isa: Isa, x: &[f32], inv_t: f32, sel: &mut Selector) -> ExtSum {
+/// Generic over the storage element: half-width logits are widened to f32
+/// lanes on load inside the kernels, never materialized as an f32 row.
+fn scan_row<E: KernelElement>(isa: Isa, x: &[E], inv_t: f32, sel: &mut Selector) -> ExtSum {
     SCAN_ROWS.fetch_add(1, Ordering::Relaxed);
     match isa {
         Isa::Scalar => scalar::scan_select(x, inv_t, sel),
@@ -361,7 +372,7 @@ fn scan_row(isa: Isa, x: &[f32], inv_t: f32, sel: &mut Selector) -> ExtSum {
     }
 }
 
-fn validate(isa: Isa, x: &[f32]) -> Result<(), SamplingError> {
+fn validate<E: KernelElement>(isa: Isa, x: &[E]) -> Result<(), SamplingError> {
     if x.is_empty() {
         return Err(SamplingError::EmptyInput);
     }
@@ -402,11 +413,11 @@ fn ext_ln(m: f32, n: f32) -> f32 {
 
 /// Greedy decode: the argmax token and its logprob, in one fused pass
 /// over the logits — no max pass, no normalization, no output row.
-pub fn argmax(isa: Isa, x: &[f32]) -> Result<Choice, SamplingError> {
+pub fn argmax<E: KernelElement>(isa: Isa, x: &[E]) -> Result<Choice, SamplingError> {
     argmax_t(isa, x, 1.0)
 }
 
-fn argmax_t(isa: Isa, x: &[f32], inv_t: f32) -> Result<Choice, SamplingError> {
+fn argmax_t<E: KernelElement>(isa: Isa, x: &[E], inv_t: f32) -> Result<Choice, SamplingError> {
     validate(isa, x)?;
     let mut sel = Selector::new(1);
     let s = scan_row(isa, x, inv_t, &mut sel);
@@ -420,7 +431,7 @@ fn argmax_t(isa: Isa, x: &[f32], inv_t: f32) -> Result<Choice, SamplingError> {
 /// pass (selection by exponent-major `(m, n)` comparison).  `k = 0`
 /// selects nothing and returns an empty vector (it would otherwise be
 /// silently clamped to 1 by the selector).
-pub fn top_k(isa: Isa, x: &[f32], k: usize) -> Result<Vec<Choice>, SamplingError> {
+pub fn top_k<E: KernelElement>(isa: Isa, x: &[E], k: usize) -> Result<Vec<Choice>, SamplingError> {
     validate(isa, x)?;
     if k == 0 {
         return Ok(Vec::new());
@@ -440,9 +451,9 @@ pub fn top_k(isa: Isa, x: &[f32], k: usize) -> Result<Vec<Choice>, SamplingError
 /// first.  Only the selected candidates are ever renormalized; the scan
 /// budget doubles (one extra fused pass per doubling) until the mass
 /// target is met, so peaked distributions finish at the first budget.
-pub fn top_p(
+pub fn top_p<E: KernelElement>(
     isa: Isa,
-    x: &[f32],
+    x: &[E],
     p: f32,
     temperature: f32,
 ) -> Result<Vec<Choice>, SamplingError> {
@@ -475,9 +486,9 @@ pub fn top_p(
 /// jumps straight to a single full-row selection rather than creeping up
 /// on it.
 #[allow(clippy::type_complexity)]
-fn nucleus(
+fn nucleus<E: KernelElement>(
     isa: Isa,
-    x: &[f32],
+    x: &[E],
     inv_t: f32,
     p: f32,
     top_k: usize,
@@ -521,6 +532,19 @@ fn nucleus(
 /// top-k/top-p paths use the fused scan; the full-categorical path walks
 /// the extended CDF against the target `u · Σe^{x/T}`.
 pub fn sample_row(isa: Isa, x: &[f32], params: &SamplingParams) -> Result<Choice, SamplingError> {
+    sample_row_elems(isa, x, params)
+}
+
+/// [`sample_row`] generic over the storage element: bf16/f16 logit rows
+/// decode directly into the `(m, n)` accumulators — the fused scan widens
+/// per vector on load, so no f32 copy of the row ever exists.  Ids are
+/// identical to decoding the row's exact f32 widening (same lanes, same
+/// scalar index-ordered decisions).
+pub fn sample_row_elems<E: KernelElement>(
+    isa: Isa,
+    x: &[E],
+    params: &SamplingParams,
+) -> Result<Choice, SamplingError> {
     validate(isa, x)?;
     params.validate()?;
     // One decoded row, whatever thread executes it: the engine-level
@@ -552,7 +576,7 @@ pub fn sample_row(isa: Isa, x: &[f32], params: &SamplingParams) -> Result<Choice
         let target = ExtSum { m: s.m * u, n: s.n };
         SCAN_ROWS.fetch_add(1, Ordering::Relaxed);
         let idx = scalar::scan_cdf(x, inv_t, &target);
-        let (m, n) = extexp(x[idx] * inv_t);
+        let (m, n) = extexp(x[idx].to_f32() * inv_t);
         return Ok(Choice { token: idx as u32, logprob: ext_ln(m, n) - s.ln() });
     }
     let (set, mass) = nucleus(isa, x, inv_t, params.top_p, params.top_k)?;
@@ -581,12 +605,15 @@ pub fn sample_batch(
     params: &[SamplingParams],
 ) -> Result<Vec<Choice>, SamplingError> {
     validate_batch(isa, x, params)?;
-    let mut out = Vec::with_capacity(x.rows());
-    for r in 0..x.rows() {
-        let p = if params.len() == 1 { &params[0] } else { &params[r] };
-        out.push(sample_row(isa, x.row(r), p)?);
-    }
-    Ok(out)
+    let dtype = x.dtype();
+    with_elem!(dtype, E, {
+        let mut out = Vec::with_capacity(x.rows());
+        for r in 0..x.rows() {
+            let p = if params.len() == 1 { &params[0] } else { &params[r] };
+            out.push(sample_row_elems(isa, x.row_elems::<E>(r), p)?);
+        }
+        Ok(out)
+    })
 }
 
 /// [`sample_batch`] with the serving threading policy of the batched
@@ -608,10 +635,11 @@ pub fn sample_batch_auto(
     parallel_threshold: usize,
     max_threads: usize,
 ) -> Result<Vec<Choice>, SamplingError> {
-    let p = plan::adhoc(
+    let p = plan::adhoc_dtype(
         PlanOp::Decode,
         Algorithm::TwoPass,
         isa,
+        x.dtype(),
         x.rows(),
         x.n(),
         parallel_threshold,
@@ -649,6 +677,13 @@ pub fn sample_batch_planned(
             p.n,
             x.rows(),
             x.n()
+        )));
+    }
+    if p.dtype != x.dtype() {
+        return Err(SamplingError::BadParams(format!(
+            "plan dtype {} does not match batch dtype {}",
+            p.dtype,
+            x.dtype()
         )));
     }
     if p.threads <= 1 {
@@ -887,6 +922,40 @@ mod tests {
         );
         let again = sample_batch_auto(isa, &b, &params, 1, 2).unwrap();
         assert_eq!(again, want, "pool must survive a failed decode batch");
+    }
+
+    #[test]
+    fn half_batch_decode_matches_widened_f32() {
+        // Widen-on-load: a half batch and its exact f32 widening present
+        // identical lanes to the fused scan, so token ids and logprobs
+        // must be bit-identical — on every ISA, pooled or not.
+        use crate::softmax::Dtype;
+        for dtype in [Dtype::Bf16, Dtype::F16] {
+            let (rows, n) = (5usize, 300usize);
+            let mut rng = Rng::new(61);
+            let mut half = RowBatch::with_capacity_dtype(rows, n, dtype);
+            let mut wide = RowBatch::with_capacity(rows, n);
+            for _ in 0..rows {
+                let row: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 5.0)).collect();
+                half.push_row_quantized(&row).unwrap();
+                wide.push_row(&half.row_f32(half.rows() - 1)).unwrap();
+            }
+            let params: Vec<SamplingParams> = (0..rows)
+                .map(|i| SamplingParams {
+                    seed: i as u64,
+                    top_k: (i % 3) * 8,
+                    ..SamplingParams::default()
+                })
+                .collect();
+            for isa in Isa::detect_all() {
+                let h = sample_batch(isa, &half, &params).unwrap();
+                let w = sample_batch(isa, &wide, &params).unwrap();
+                assert_eq!(h, w, "{isa}/{dtype}");
+                // Pooled placement changes nothing either.
+                let pooled = sample_batch_auto(isa, &half, &params, 1, 3).unwrap();
+                assert_eq!(pooled, h, "{isa}/{dtype} pooled");
+            }
+        }
     }
 
     #[test]

@@ -7,20 +7,23 @@
 //! [`softmax::scalar::pass_accum_extexp`]: crate::softmax::scalar::pass_accum_extexp
 
 use crate::softmax::exp::{extexp, ExtSum};
+use crate::softmax::kernels::Element;
 
 use super::{ext_sum_ge, Selector};
 
 /// Fused pass 1 + select: accumulate `Σ e^(x_i · inv_t)` in `(m, n)` form
 /// and offer every element past the selector's prefilter threshold — one
 /// read of `x`, no writes.  Elements are offered in index order, so
-/// first-index tie-breaks match the SIMD kernels exactly.
-pub fn scan_select(x: &[f32], inv_t: f32, sel: &mut Selector) -> ExtSum {
+/// first-index tie-breaks match the SIMD kernels exactly.  Generic over
+/// the storage element: half-width logits are widened per element and the
+/// `(m, n)` arithmetic stays f32 — decode never materializes an f32 row.
+pub fn scan_select<E: Element>(x: &[E], inv_t: f32, sel: &mut Selector) -> ExtSum {
     let mut acc = [ExtSum::default(); 4];
     let mut chunks = x.chunks_exact(4);
     let mut base = 0usize;
     for c in &mut chunks {
-        for (j, &v) in c.iter().enumerate() {
-            let xs = v * inv_t;
+        for (j, v) in c.iter().enumerate() {
+            let xs = v.to_f32() * inv_t;
             // NaN carries no weight and can never be selected (the SIMD
             // kernels' clamp/compare semantics drop it the same way).
             if xs.is_nan() {
@@ -38,8 +41,8 @@ pub fn scan_select(x: &[f32], inv_t: f32, sel: &mut Selector) -> ExtSum {
     s.merge(acc[1]);
     s.merge(acc[2]);
     s.merge(acc[3]);
-    for (j, &v) in chunks.remainder().iter().enumerate() {
-        let xs = v * inv_t;
+    for (j, v) in chunks.remainder().iter().enumerate() {
+        let xs = v.to_f32() * inv_t;
         if xs.is_nan() {
             continue;
         }
@@ -63,11 +66,11 @@ pub fn scan_select(x: &[f32], inv_t: f32, sel: &mut Selector) -> ExtSum {
 /// accumulation of the preceding scan, so the two sums can disagree by a
 /// few ulp), the walk falls back to the last index that actually
 /// accumulated weight — never to a NaN slot, which cannot be drawn.
-pub fn scan_cdf(x: &[f32], inv_t: f32, target: &ExtSum) -> usize {
+pub fn scan_cdf<E: Element>(x: &[E], inv_t: f32, target: &ExtSum) -> usize {
     let mut c = ExtSum::default();
     let mut last_weighted = 0usize;
-    for (i, &v) in x.iter().enumerate() {
-        let xs = v * inv_t;
+    for (i, v) in x.iter().enumerate() {
+        let xs = v.to_f32() * inv_t;
         if xs.is_nan() {
             continue; // no weight; cannot be drawn
         }

@@ -9,10 +9,10 @@
 //!
 //! * [`RowBatch`] — one contiguous 64-byte-aligned row-major buffer
 //!   (rows × n) with per-row views, the batch currency of the coordinator;
-//! * [`softmax_batch`] — per-ISA batched kernels where the
-//!   algorithm/ISA dispatch is hoisted *out* of the row loop and the same
-//!   unroll-tuned pass functions as the single-row API are reused across
-//!   rows (outputs are bit-identical to [`softmax_with`] per row);
+//! * [`softmax_batch`] — batched kernels where the algorithm/ISA/dtype
+//!   dispatch is hoisted *out* of the row loop and the same pass kernels
+//!   as the single-row API are reused across rows (f32 outputs are
+//!   bit-identical to [`softmax_with`] per row);
 //! * cache blocking: rows are processed in blocks sized to half the
 //!   per-core L2, pass-major *within* a block — every row of a block is
 //!   still cache-resident when its next pass runs, and short rows get
@@ -32,10 +32,23 @@
 //! * [`softmax_batch_planned`] / [`softmax_batch_inplace_planned`] /
 //!   [`accum_extexp_batch_planned`] — the serving entry points: every
 //!   placement decision (block size, NT stores, submit-vs-pool, chunk
-//!   layout) comes from a [`crate::plan::ExecPlan`] computed and cached
-//!   by the execution planner; these functions only move bytes, which is
-//!   why planned outputs are bit-identical to the unplanned paths by
-//!   construction.
+//!   layout, per-pass unrolls) comes from a [`crate::plan::ExecPlan`]
+//!   computed and cached by the execution planner; these functions only
+//!   move bytes.
+//!
+//! # Half-width logits (bf16 / f16)
+//!
+//! A [`RowBatch`] carries a [`Dtype`]: its storage is still one
+//! contiguous aligned buffer, but the element width may be 2 bytes
+//! ([`Bf16`] / [`F16`]) instead of 4.  The engine is generic over
+//! [`KernelElement`]: kernels widen to f32 lanes on load and narrow on
+//! store (see `softmax::kernels`), so µ, σ, and the `(m, n)` accumulators
+//! are identical f32 arithmetic for every dtype — half-width formats
+//! halve the bytes a memory-bound pass moves without touching the math.
+//! Cache-block sizing and the NT-store decision key off *bytes*
+//! ([`crate::plan::block_rows`] / [`crate::plan::resolve_nt`] take the
+//! element width), so half batches automatically block twice as many rows
+//! and cross the streaming threshold at twice the element count.
 //!
 //! # Write-allocate avoidance (non-temporal stores)
 //!
@@ -48,17 +61,18 @@
 //! `MOVNTPS`.  When the working set of the span being processed exceeds
 //! the LLC ([`NtPolicy::Auto`]), the engine selects the non-temporal
 //! variant of the scale pass (`pass_scale_extexp_nt` /
-//! `pass_scaleexp_nt` in the ISA modules): the output stream bypasses the
-//! cache entirely, is written exactly once, and the pass's true traffic
-//! drops back to 2N.  An `SFENCE` is issued at the end of every block so
-//! the weakly-ordered streaming stores are globally visible before the
-//! batch is published to other threads.  The NT variants compute exactly
-//! the same lanes as the temporal passes (only the store instruction
-//! differs), so outputs stay bit-identical; rows whose start is not
-//! 64-byte-aligned silently fall back to temporal stores inside the pass.
-//! The three-pass-reload algorithm re-reads its output in its final pass,
-//! so NT is never selected for it, and the in-place path keeps NT off
-//! (its output lines are the just-read input lines — already in cache).
+//! `pass_scaleexp_nt` in the kernel layer): the output stream bypasses
+//! the cache entirely, is written exactly once, and the pass's true
+//! traffic drops back to 2N.  An `SFENCE` is issued at the end of every
+//! block so the weakly-ordered streaming stores are globally visible
+//! before the batch is published to other threads.  The NT variants
+//! compute exactly the same lanes as the temporal passes (only the store
+//! instruction differs), so outputs stay bit-identical; rows whose start
+//! is not sufficiently aligned for their element width silently fall
+//! back to temporal stores inside the pass.  The three-pass-reload
+//! algorithm re-reads its output in its final pass, so NT is never
+//! selected for it, and the in-place path keeps NT off (its output lines
+//! are the just-read input lines — already in cache).
 //!
 //! # Generic batch-execution engine
 //!
@@ -68,30 +82,34 @@
 //! two-pass algorithm's pass-1 `(m, n)` accumulation
 //! ([`accum_extexp_batch_auto`]), and fused decode (token sampling
 //! straight off the extended-exponent pairs, submitted by
-//! [`sample_batch_auto`]).  Each job carries its own result channel; the
-//! submitting call blocks until every job of its batch is acknowledged
-//! (the lifetime guarantee for the borrowed row ranges), a kernel panic
-//! is confined to the submitting batch (the pool survives), and a
-//! recoverable kernel error (decode only) travels back over the same
-//! channel instead of poisoning the worker.  Row chunking never changes
-//! results: normalization is row-independent and bit-identical whatever
-//! the split, and every decode selection decision is made by scalar
+//! [`sample_batch_auto`]).  Work items carry their dtype and reconstruct
+//! typed rows on the worker, so half-width batches flow through the same
+//! pool.  Each job carries its own result channel; the submitting call
+//! blocks until every job of its batch is acknowledged (the lifetime
+//! guarantee for the borrowed row ranges), a kernel panic is confined to
+//! the submitting batch (the pool survives), and a recoverable kernel
+//! error (decode only) travels back over the same channel instead of
+//! poisoning the worker.  Row chunking never changes results:
+//! normalization is row-independent and bit-identical whatever the
+//! split, and every decode selection decision is made by scalar
 //! index-ordered code, so token ids are identical across chunkings, ISAs
 //! and thread counts by construction.
 //!
 //! [`sample_batch_auto`]: crate::sampling::sample_batch_auto
 //! [`softmax_with`]: crate::softmax::softmax_with
+//! [`KernelElement`]: crate::softmax::kernels::KernelElement
 
 use std::alloc::{alloc, alloc_zeroed, dealloc, handle_alloc_error, Layout};
 use std::ptr::NonNull;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Mutex, OnceLock};
 
-#[cfg(target_arch = "x86_64")]
-use super::{avx2, avx512};
-use super::{exp::ExtSum, scalar, Algorithm, Isa, SoftmaxError};
+use super::kernels::{self, Bf16, Dtype, Element, KernelElement, F16};
+use super::{exp::ExtSum, Algorithm, Isa, Pass, SoftmaxError};
 use crate::plan::{self, ChunkPlan, ExecPlan, PlanOp};
-use crate::sampling::{sample_row, Choice, SamplingError, SamplingParams};
+use crate::sampling::{sample_row_elems, Choice, SamplingError, SamplingParams};
+use crate::softmax::tuning::default_best_unroll;
+use crate::with_elem;
 
 pub use crate::plan::NtPolicy;
 
@@ -100,33 +118,37 @@ pub use crate::plan::NtPolicy;
 pub const ROWBATCH_ALIGN: usize = 64;
 
 // ---------------------------------------------------------------------------
-// AlignedBuf: a minimal growable f32 buffer with 64-byte-aligned storage.
+// AlignedBuf: a minimal growable byte buffer with 64-byte-aligned storage.
 // ---------------------------------------------------------------------------
 
 /// Backing storage for [`RowBatch`].  `Vec<f32>` only guarantees 4-byte
 /// alignment, which would defeat the streaming scale pass on most batches;
 /// this buffer allocates with [`ROWBATCH_ALIGN`] and preserves it across
-/// growth (grow = aligned alloc + copy, never `realloc`).
+/// growth (grow = aligned alloc + copy, never `realloc`).  It is untyped
+/// (lengths in bytes) so one buffer type backs every [`Dtype`]; typed
+/// views are created through `as_slice_of` / `as_mut_slice_of`.
 struct AlignedBuf {
-    ptr: NonNull<f32>,
+    ptr: NonNull<u8>,
+    /// Initialized length in bytes.
     len: usize,
+    /// Allocated capacity in bytes.
     cap: usize,
 }
 
 // SAFETY: AlignedBuf exclusively owns its allocation; it is a plain
-// contiguous f32 buffer with no interior mutability or thread affinity.
+// contiguous byte buffer with no interior mutability or thread affinity.
 unsafe impl Send for AlignedBuf {}
 unsafe impl Sync for AlignedBuf {}
 
 impl AlignedBuf {
     /// Aligned, non-null placeholder for the empty buffer (never read).
-    fn dangling() -> NonNull<f32> {
-        // SAFETY: ROWBATCH_ALIGN is non-zero and f32-aligned.
-        unsafe { NonNull::new_unchecked(ROWBATCH_ALIGN as *mut f32) }
+    fn dangling() -> NonNull<u8> {
+        // SAFETY: ROWBATCH_ALIGN is non-zero.
+        unsafe { NonNull::new_unchecked(ROWBATCH_ALIGN as *mut u8) }
     }
 
     fn layout(cap: usize) -> Layout {
-        Layout::from_size_align(cap * std::mem::size_of::<f32>(), ROWBATCH_ALIGN)
+        Layout::from_size_align(cap, ROWBATCH_ALIGN)
             .expect("RowBatch capacity overflows a Layout")
     }
 
@@ -134,32 +156,26 @@ impl AlignedBuf {
         AlignedBuf { ptr: Self::dangling(), len: 0, cap: 0 }
     }
 
-    fn zeroed(len: usize) -> AlignedBuf {
-        if len == 0 {
+    fn zeroed(bytes: usize) -> AlignedBuf {
+        if bytes == 0 {
             return Self::empty();
         }
-        let layout = Self::layout(len);
+        let layout = Self::layout(bytes);
         // SAFETY: layout has non-zero size.
-        let p = unsafe { alloc_zeroed(layout) } as *mut f32;
+        let p = unsafe { alloc_zeroed(layout) };
         let Some(ptr) = NonNull::new(p) else { handle_alloc_error(layout) };
-        AlignedBuf { ptr, len, cap: len }
+        AlignedBuf { ptr, len: bytes, cap: bytes }
     }
 
-    fn with_capacity(cap: usize) -> AlignedBuf {
-        if cap == 0 {
+    fn with_capacity(bytes: usize) -> AlignedBuf {
+        if bytes == 0 {
             return Self::empty();
         }
-        let layout = Self::layout(cap);
+        let layout = Self::layout(bytes);
         // SAFETY: layout has non-zero size.
-        let p = unsafe { alloc(layout) } as *mut f32;
+        let p = unsafe { alloc(layout) };
         let Some(ptr) = NonNull::new(p) else { handle_alloc_error(layout) };
-        AlignedBuf { ptr, len: 0, cap }
-    }
-
-    fn from_slice(s: &[f32]) -> AlignedBuf {
-        let mut b = Self::with_capacity(s.len());
-        b.extend_from_slice(s);
-        b
+        AlignedBuf { ptr, len: 0, cap: bytes }
     }
 
     fn reserve(&mut self, additional: usize) {
@@ -169,7 +185,7 @@ impl AlignedBuf {
         }
         // Fresh aligned allocation + copy: std's realloc is not guaranteed
         // to keep over-alignment on every allocator.
-        let mut grown = Self::with_capacity(need.max(self.cap * 2).max(16));
+        let mut grown = Self::with_capacity(need.max(self.cap * 2).max(ROWBATCH_ALIGN));
         // SAFETY: both buffers are live; grown.cap >= self.len; disjoint.
         unsafe {
             std::ptr::copy_nonoverlapping(self.ptr.as_ptr(), grown.ptr.as_ptr(), self.len);
@@ -178,23 +194,48 @@ impl AlignedBuf {
         *self = grown; // drops (frees) the old allocation
     }
 
-    fn extend_from_slice(&mut self, s: &[f32]) {
-        self.reserve(s.len());
+    /// Append the raw bytes of a slice of plain-old-data elements (every
+    /// [`Element`] and `u16` qualify; alignment ≤ [`ROWBATCH_ALIGN`]).
+    fn extend_from_elems<E: Copy>(&mut self, s: &[E]) {
+        let bytes = std::mem::size_of_val(s);
+        self.reserve(bytes);
         // SAFETY: reserve guaranteed capacity; source and dest are disjoint.
         unsafe {
-            std::ptr::copy_nonoverlapping(s.as_ptr(), self.ptr.as_ptr().add(self.len), s.len());
+            std::ptr::copy_nonoverlapping(
+                s.as_ptr() as *const u8,
+                self.ptr.as_ptr().add(self.len),
+                bytes,
+            );
         }
-        self.len += s.len();
+        self.len += bytes;
     }
 
-    fn as_slice(&self) -> &[f32] {
+    fn as_bytes(&self) -> &[u8] {
         // SAFETY: ptr is valid for len reads (dangling only when len == 0).
         unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
     }
 
-    fn as_mut_slice(&mut self) -> &mut [f32] {
+    fn as_slice_of<E: Copy>(&self) -> &[E] {
+        debug_assert_eq!(self.len % std::mem::size_of::<E>(), 0);
+        // SAFETY: the allocation is ROWBATCH_ALIGN-aligned (≥ align of any
+        // element type) and valid for len bytes.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.ptr.as_ptr() as *const E,
+                self.len / std::mem::size_of::<E>(),
+            )
+        }
+    }
+
+    fn as_mut_slice_of<E: Copy>(&mut self) -> &mut [E] {
+        debug_assert_eq!(self.len % std::mem::size_of::<E>(), 0);
         // SAFETY: as above, plus exclusive access via &mut self.
-        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.ptr.as_ptr() as *mut E,
+                self.len / std::mem::size_of::<E>(),
+            )
+        }
     }
 }
 
@@ -202,26 +243,22 @@ impl Drop for AlignedBuf {
     fn drop(&mut self) {
         if self.cap != 0 {
             // SAFETY: allocated with this exact layout in this module.
-            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.cap)) };
+            unsafe { dealloc(self.ptr.as_ptr(), Self::layout(self.cap)) };
         }
     }
 }
 
 impl Clone for AlignedBuf {
     fn clone(&self) -> AlignedBuf {
-        Self::from_slice(self.as_slice())
-    }
-}
-
-impl std::fmt::Debug for AlignedBuf {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        self.as_slice().fmt(f)
+        let mut b = Self::with_capacity(self.len);
+        b.extend_from_elems(self.as_bytes());
+        b
     }
 }
 
 impl PartialEq for AlignedBuf {
     fn eq(&self, other: &AlignedBuf) -> bool {
-        self.as_slice() == other.as_slice()
+        self.as_bytes() == other.as_bytes()
     }
 }
 
@@ -230,39 +267,65 @@ impl PartialEq for AlignedBuf {
 // ---------------------------------------------------------------------------
 
 /// A dense row-major batch of `rows` vectors of length `n`, backed by one
-/// contiguous 64-byte-aligned allocation (stride == `n`, no padding).
+/// contiguous 64-byte-aligned allocation (stride == `n`, no padding), with
+/// a [`Dtype`] selecting the element width.
 ///
 /// The alignment guarantee holds across every constructor and across
 /// [`RowBatch::push_row`] growth; [`RowBatch::from_vec`] copies its input
 /// into aligned storage (a `Vec` allocation is practically never 64-byte
 /// aligned, and adopting one would tie deallocation to the wrong layout).
-#[derive(Debug, Clone, PartialEq)]
+///
+/// The f32-typed accessors ([`RowBatch::row`], [`RowBatch::as_slice`],
+/// ...) keep their historical signatures and panic on a half-width batch;
+/// dtype-generic code uses [`RowBatch::elems`] / [`RowBatch::row_elems`]
+/// or the widening helpers [`RowBatch::row_f32`] / [`RowBatch::to_f32_vec`].
+#[derive(Clone, PartialEq)]
 pub struct RowBatch {
     data: AlignedBuf,
     rows: usize,
     n: usize,
+    dtype: Dtype,
 }
 
 impl RowBatch {
-    /// A zero-filled `rows × n` batch (the usual output buffer).
+    /// A zero-filled f32 `rows × n` batch (the usual output buffer).
     pub fn new(rows: usize, n: usize) -> RowBatch {
-        RowBatch { data: AlignedBuf::zeroed(rows * n), rows, n }
+        Self::new_with_dtype(rows, n, Dtype::F32)
     }
 
-    /// An empty batch of row length `n` with room for `rows` rows
+    /// A zero-filled `rows × n` batch of the given element type (the
+    /// all-zero bit pattern is 0.0 in every supported format).
+    pub fn new_with_dtype(rows: usize, n: usize, dtype: Dtype) -> RowBatch {
+        RowBatch { data: AlignedBuf::zeroed(rows * n * dtype.size()), rows, n, dtype }
+    }
+
+    /// An empty f32 batch of row length `n` with room for `rows` rows
     /// pre-reserved; fill it with [`RowBatch::push_row`].
     pub fn with_capacity(rows: usize, n: usize) -> RowBatch {
-        RowBatch { data: AlignedBuf::with_capacity(rows * n), rows: 0, n }
+        Self::with_capacity_dtype(rows, n, Dtype::F32)
+    }
+
+    /// [`RowBatch::with_capacity`] with an explicit element type; fill it
+    /// with [`RowBatch::push_row_quantized`] or [`RowBatch::push_row_bits`].
+    pub fn with_capacity_dtype(rows: usize, n: usize, dtype: Dtype) -> RowBatch {
+        RowBatch {
+            data: AlignedBuf::with_capacity(rows * n * dtype.size()),
+            rows: 0,
+            n,
+            dtype,
+        }
     }
 
     /// Copy an existing flat row-major buffer (must be exactly `rows × n`)
-    /// into aligned batch storage.
+    /// into aligned f32 batch storage.
     pub fn from_vec(data: Vec<f32>, rows: usize, n: usize) -> RowBatch {
         assert_eq!(data.len(), rows * n, "flat buffer is not rows x n");
-        RowBatch { data: AlignedBuf::from_slice(&data), rows, n }
+        let mut buf = AlignedBuf::with_capacity(data.len() * 4);
+        buf.extend_from_elems(&data);
+        RowBatch { data: buf, rows, n, dtype: Dtype::F32 }
     }
 
-    /// Copy borrowed rows (all of length `n`) into a fresh batch.
+    /// Copy borrowed f32 rows (all of length `n`) into a fresh batch.
     pub fn from_rows<'a, I>(rows: I, n: usize) -> Result<RowBatch, SoftmaxError>
     where
         I: IntoIterator<Item = &'a [f32]>,
@@ -274,14 +337,60 @@ impl RowBatch {
         Ok(b)
     }
 
-    /// Append one row; its length must equal the batch row length.
+    /// Append one f32 row; its length must equal the batch row length.
+    /// Panics on a half-width batch — use [`RowBatch::push_row_quantized`]
+    /// (narrowing) or [`RowBatch::push_row_bits`] (raw) there.
     pub fn push_row(&mut self, row: &[f32]) -> Result<(), SoftmaxError> {
+        assert_eq!(
+            self.dtype,
+            Dtype::F32,
+            "push_row on a {} batch (use push_row_quantized / push_row_bits)",
+            self.dtype
+        );
         if row.len() != self.n {
             return Err(SoftmaxError::LengthMismatch { x: row.len(), y: self.n });
         }
-        self.data.extend_from_slice(row);
+        self.data.extend_from_elems(row);
         self.rows += 1;
         Ok(())
+    }
+
+    /// Append one row given as f32, narrowing (round-to-nearest-even) to
+    /// the batch's element type.  For an f32 batch this is a plain copy.
+    pub fn push_row_quantized(&mut self, row: &[f32]) -> Result<(), SoftmaxError> {
+        if row.len() != self.n {
+            return Err(SoftmaxError::LengthMismatch { x: row.len(), y: self.n });
+        }
+        match self.dtype {
+            Dtype::F32 => self.data.extend_from_elems(row),
+            Dtype::Bf16 => {
+                let q: Vec<Bf16> = row.iter().map(|&v| Bf16::from_f32(v)).collect();
+                self.data.extend_from_elems(&q);
+            }
+            Dtype::F16 => {
+                let q: Vec<F16> = row.iter().map(|&v| F16::from_f32(v)).collect();
+                self.data.extend_from_elems(&q);
+            }
+        }
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// Append one half-width row from its raw bit pattern (the wire format
+    /// of bf16/f16 request payloads).  Panics on an f32 batch.
+    pub fn push_row_bits(&mut self, bits: &[u16]) -> Result<(), SoftmaxError> {
+        assert_ne!(self.dtype, Dtype::F32, "push_row_bits on an f32 batch");
+        if bits.len() != self.n {
+            return Err(SoftmaxError::LengthMismatch { x: bits.len(), y: self.n });
+        }
+        self.data.extend_from_elems(bits);
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// Element type of the batch's storage.
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
     }
 
     pub fn rows(&self) -> usize {
@@ -297,32 +406,73 @@ impl RowBatch {
         self.rows == 0
     }
 
+    /// Typed flat view of the whole batch; `E` must match the dtype.
+    pub fn elems<E: Element>(&self) -> &[E] {
+        assert_eq!(E::DTYPE, self.dtype, "typed view does not match batch dtype");
+        self.data.as_slice_of::<E>()
+    }
+
+    /// Typed mutable flat view; `E` must match the dtype.
+    pub fn elems_mut<E: Element>(&mut self) -> &mut [E] {
+        assert_eq!(E::DTYPE, self.dtype, "typed view does not match batch dtype");
+        self.data.as_mut_slice_of::<E>()
+    }
+
+    /// Typed view of row `i`; `E` must match the dtype.
+    pub fn row_elems<E: Element>(&self, i: usize) -> &[E] {
+        &self.elems::<E>()[i * self.n..i * self.n + self.n]
+    }
+
+    /// Typed mutable view of row `i`; `E` must match the dtype.
+    pub fn row_elems_mut<E: Element>(&mut self, i: usize) -> &mut [E] {
+        let n = self.n;
+        &mut self.elems_mut::<E>()[i * n..i * n + n]
+    }
+
+    /// Row `i` of an f32 batch (panics on half-width batches — use
+    /// [`RowBatch::row_elems`] or [`RowBatch::row_f32`]).
     pub fn row(&self, i: usize) -> &[f32] {
-        &self.data.as_slice()[i * self.n..i * self.n + self.n]
+        self.row_elems::<f32>(i)
     }
 
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
-        &mut self.data.as_mut_slice()[i * self.n..i * self.n + self.n]
+        self.row_elems_mut::<f32>(i)
+    }
+
+    /// Row `i` widened to f32, whatever the dtype (response assembly and
+    /// reference paths; allocates).
+    pub fn row_f32(&self, i: usize) -> Vec<f32> {
+        with_elem!(self.dtype, E, {
+            self.row_elems::<E>(i).iter().map(|v| v.to_f32()).collect()
+        })
+    }
+
+    /// The whole batch widened to f32, row-major (allocates).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        with_elem!(self.dtype, E, {
+            self.elems::<E>().iter().map(|v| v.to_f32()).collect()
+        })
     }
 
     pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> {
         (0..self.rows).map(move |i| self.row(i))
     }
 
-    /// The whole batch as one flat row-major slice.
+    /// The whole f32 batch as one flat row-major slice (panics on
+    /// half-width batches — use [`RowBatch::elems`]).
     pub fn as_slice(&self) -> &[f32] {
-        self.data.as_slice()
+        self.elems::<f32>()
     }
 
     pub fn as_mut_slice(&mut self) -> &mut [f32] {
-        self.data.as_mut_slice()
+        self.elems_mut::<f32>()
     }
 
-    /// Copy the flat buffer out into a plain `Vec` (e.g. to hand to an
+    /// Copy the flat f32 buffer out into a plain `Vec` (e.g. to hand to an
     /// executor that pads it).  This copies: the aligned allocation cannot
     /// be adopted by `Vec`, whose deallocation layout differs.
     pub fn into_vec(self) -> Vec<f32> {
-        self.data.as_slice().to_vec()
+        self.as_slice().to_vec()
     }
 
     /// Drop every row past the first `rows` (no-op when the batch is
@@ -331,8 +481,19 @@ impl RowBatch {
     pub fn truncate_rows(&mut self, rows: usize) {
         if rows < self.rows {
             self.rows = rows;
-            self.data.len = rows * self.n;
+            self.data.len = rows * self.n * self.dtype.size();
         }
+    }
+}
+
+impl std::fmt::Debug for RowBatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RowBatch")
+            .field("dtype", &self.dtype)
+            .field("rows", &self.rows)
+            .field("n", &self.n)
+            .field("data", &self.to_f32_vec())
+            .finish()
     }
 }
 
@@ -353,12 +514,55 @@ fn sfence() {
 }
 
 // ---------------------------------------------------------------------------
+// Per-pass unroll resolution: plans carry `Vec<(Pass, usize)>`; the
+// drivers want O(1) lookup and the pool's work items want something
+// `Copy`, so the list is resolved into a small dense table up front.
+// ---------------------------------------------------------------------------
+
+/// Per-pass unroll factors, dense over [`Pass::ALL`].  What the batched
+/// drivers actually execute: built from the plan's `unrolls` (tune-table
+/// picks when a table was attached) over the static defaults.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PassUnrolls([usize; Pass::ALL.len()]);
+
+impl PassUnrolls {
+    /// The measured static defaults ([`default_best_unroll`]) — exactly
+    /// the factors the pre-generic batch kernels were monomorphized at,
+    /// so default execution is bit-identical to the historical paths.
+    fn defaults(isa: Isa) -> PassUnrolls {
+        let mut u = [0usize; Pass::ALL.len()];
+        for (i, p) in Pass::ALL.iter().enumerate() {
+            u[i] = default_best_unroll(*p, isa);
+        }
+        PassUnrolls(u)
+    }
+
+    /// The plan's per-pass picks over the defaults (a plan only lists the
+    /// passes of its own algorithm).
+    pub(crate) fn from_plan(p: &ExecPlan) -> PassUnrolls {
+        let mut u = Self::defaults(p.isa);
+        for &(pass, unroll) in &p.unrolls {
+            u.0[Self::idx(pass)] = unroll;
+        }
+        u
+    }
+
+    fn idx(p: Pass) -> usize {
+        Pass::ALL.iter().position(|q| *q == p).expect("pass is in Pass::ALL")
+    }
+
+    fn of(&self, p: Pass) -> usize {
+        self.0[Self::idx(p)]
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Batched kernels
 // ---------------------------------------------------------------------------
 
 /// Compute `y[r] = softmax(x[r])` for every row of the batch, single
-/// thread.  Dispatch on (algorithm, ISA) happens once per call, not once
-/// per row; rows run through the same unroll-tuned pass functions as
+/// thread.  Dispatch on (algorithm, ISA, dtype) happens once per call, not
+/// once per row; rows run through the same unroll-tuned pass kernels as
 /// [`softmax_with`](crate::softmax::softmax_with), in L2-sized row blocks.
 /// Out-of-cache batches stream their output ([`NtPolicy::Auto`]).
 pub fn softmax_batch(
@@ -383,8 +587,10 @@ pub fn softmax_batch_with_nt(
     if x.rows == 0 {
         return Ok(());
     }
-    let nt = plan::resolve_nt(policy, x.rows * x.n);
-    run_rows(alg, isa, x.as_slice(), y.as_mut_slice(), x.n, plan::block_rows(x.n), nt);
+    let esz = x.dtype.size();
+    let nt = plan::resolve_nt(policy, x.rows * x.n, esz);
+    let block = plan::block_rows(x.n, esz);
+    run_rows_dyn(alg, isa, PassUnrolls::defaults(isa), x, y, block, nt);
     Ok(())
 }
 
@@ -401,8 +607,8 @@ pub fn softmax_batch_with_block(
     if x.rows == 0 {
         return Ok(());
     }
-    let nt = plan::resolve_nt(NtPolicy::Auto, x.rows * x.n);
-    run_rows(alg, isa, x.as_slice(), y.as_mut_slice(), x.n, block_rows.max(1), nt);
+    let nt = plan::resolve_nt(NtPolicy::Auto, x.rows * x.n, x.dtype.size());
+    run_rows_dyn(alg, isa, PassUnrolls::defaults(isa), x, y, block_rows.max(1), nt);
     Ok(())
 }
 
@@ -424,22 +630,29 @@ pub fn softmax_batch_parallel(
     }
     let t = threads.clamp(1, x.rows);
     let n = x.n;
-    let block = plan::block_rows(n);
-    let nt = plan::resolve_nt(NtPolicy::Auto, x.rows * n);
-    if t <= 1 {
-        run_rows(alg, isa, x.as_slice(), y.as_mut_slice(), n, block, nt);
-        return Ok(());
-    }
-    let chunks = plan::chunk_layout(x.rows, t);
-    run_chunked(alg, isa, x.as_slice(), y.as_mut_slice(), n, block, nt, &chunks, t);
+    let esz = x.dtype.size();
+    let block = plan::block_rows(n, esz);
+    let nt = plan::resolve_nt(NtPolicy::Auto, x.rows * n, esz);
+    let u = PassUnrolls::defaults(isa);
+    let dtype = x.dtype;
+    with_elem!(dtype, E, {
+        let xs = x.elems::<E>();
+        let ys = y.elems_mut::<E>();
+        if t <= 1 {
+            run_rows_with::<E>(alg, isa, u, xs, ys, n, block, nt);
+        } else {
+            let chunks = plan::chunk_layout(x.rows, t);
+            run_chunked::<E>(alg, isa, u, xs, ys, n, block, nt, &chunks, t);
+        }
+    });
     Ok(())
 }
 
 /// Serving entry point: single-threaded when the batch is small
 /// (`rows · n < parallel_threshold`), parallel otherwise.  `max_threads =
 /// 0` means "all available cores".  Builds a one-shot plan
-/// ([`crate::plan::adhoc`] — the threshold is applied as given) and runs
-/// it; serving callers with a stable configuration plan through the
+/// ([`crate::plan::adhoc_dtype`] — the threshold is applied as given) and
+/// runs it; serving callers with a stable configuration plan through the
 /// cached [`crate::plan::Planner`] and call [`softmax_batch_planned`]
 /// instead.
 pub fn softmax_batch_auto(
@@ -450,20 +663,30 @@ pub fn softmax_batch_auto(
     parallel_threshold: usize,
     max_threads: usize,
 ) -> Result<(), SoftmaxError> {
-    let p =
-        plan::adhoc(PlanOp::Normalize, alg, isa, x.rows(), x.n(), parallel_threshold, max_threads);
+    let p = plan::adhoc_dtype(
+        PlanOp::Normalize,
+        alg,
+        isa,
+        x.dtype(),
+        x.rows(),
+        x.n(),
+        parallel_threshold,
+        max_threads,
+    );
     softmax_batch_planned(&p, x, y)
 }
 
 /// Execute one planned out-of-place normalization: every decision —
-/// algorithm, ISA, block size, NT stores, submit-vs-pool, chunk layout —
-/// comes from the plan; this function only moves bytes.  Outputs are
-/// bit-identical to [`softmax_batch`] / [`softmax_with`] per row
-/// whatever the plan's placement (normalization is row-independent).
+/// algorithm, ISA, per-pass unrolls, block size, NT stores,
+/// submit-vs-pool, chunk layout — comes from the plan; this function only
+/// moves bytes.  Default-unroll f32 outputs are bit-identical to
+/// [`softmax_batch`] / [`softmax_with`] per row whatever the plan's
+/// placement (normalization is row-independent).
 ///
 /// The plan must have been built for this operation and this batch's
-/// exact `(rows, n)` shape ([`SoftmaxError::PlanMismatch`] /
-/// [`SoftmaxError::LengthMismatch`] otherwise).
+/// exact `(dtype, rows, n)` shape ([`SoftmaxError::PlanMismatch`] /
+/// [`SoftmaxError::DtypeMismatch`] / [`SoftmaxError::LengthMismatch`]
+/// otherwise).
 ///
 /// [`softmax_with`]: crate::softmax::softmax_with
 pub fn softmax_batch_planned(
@@ -472,34 +695,51 @@ pub fn softmax_batch_planned(
     y: &mut RowBatch,
 ) -> Result<(), SoftmaxError> {
     validate(x, y, p.isa)?;
-    check_plan(p, PlanOp::Normalize, x.rows(), x.n())?;
+    check_plan(p, PlanOp::Normalize, x.rows(), x.n(), x.dtype())?;
     if x.rows == 0 {
         return Ok(());
     }
-    if p.threads <= 1 {
-        run_rows(p.algorithm, p.isa, x.as_slice(), y.as_mut_slice(), x.n, p.block_rows, p.nt);
-        return Ok(());
-    }
-    run_chunked(
-        p.algorithm,
-        p.isa,
-        x.as_slice(),
-        y.as_mut_slice(),
-        x.n,
-        p.block_rows,
-        p.nt,
-        &p.chunks,
-        p.threads,
-    );
+    let n = x.n;
+    let u = PassUnrolls::from_plan(p);
+    let dtype = x.dtype;
+    with_elem!(dtype, E, {
+        let xs = x.elems::<E>();
+        let ys = y.elems_mut::<E>();
+        if p.threads <= 1 {
+            run_rows_with::<E>(p.algorithm, p.isa, u, xs, ys, n, p.block_rows, p.nt);
+        } else {
+            run_chunked::<E>(
+                p.algorithm,
+                p.isa,
+                u,
+                xs,
+                ys,
+                n,
+                p.block_rows,
+                p.nt,
+                &p.chunks,
+                p.threads,
+            );
+        }
+    });
     Ok(())
 }
 
-/// A plan is only valid for the operation and the exact batch shape it
-/// was built for (its algorithm/NT decisions are op-specific and its
-/// chunk layout indexes rows).
-fn check_plan(p: &ExecPlan, want: PlanOp, rows: usize, n: usize) -> Result<(), SoftmaxError> {
+/// A plan is only valid for the operation and the exact batch shape and
+/// dtype it was built for (its algorithm/NT/block decisions are
+/// byte-count-dependent and its chunk layout indexes rows).
+fn check_plan(
+    p: &ExecPlan,
+    want: PlanOp,
+    rows: usize,
+    n: usize,
+    dtype: Dtype,
+) -> Result<(), SoftmaxError> {
     if p.op != want {
         return Err(SoftmaxError::PlanMismatch { plan: p.op, want });
+    }
+    if p.dtype != dtype {
+        return Err(SoftmaxError::DtypeMismatch { have: dtype, want: p.dtype });
     }
     if p.n != n {
         return Err(SoftmaxError::LengthMismatch { x: n, y: p.n });
@@ -529,16 +769,20 @@ pub fn softmax_batch_inplace(
         return Ok(());
     }
     let n = b.n;
-    let block = plan::block_rows(n);
-    let (xs, ys) = super::alias_same(b.as_mut_slice());
-    run_rows(alg, isa, xs, ys, n, block, false);
+    let block = plan::block_rows(n, b.dtype.size());
+    let u = PassUnrolls::defaults(isa);
+    let dtype = b.dtype;
+    with_elem!(dtype, E, {
+        let (xs, ys) = alias_same_elems(b.elems_mut::<E>());
+        run_rows_with::<E>(alg, isa, u, xs, ys, n, block, false);
+    });
     Ok(())
 }
 
 /// [`softmax_batch_inplace`] with the serving threading policy of
 /// [`softmax_batch_auto`]: parallel across the persistent pool above
 /// `parallel_threshold` elements, single-threaded below (one-shot
-/// [`crate::plan::adhoc`] plan).
+/// [`crate::plan::adhoc_dtype`] plan).
 pub fn softmax_batch_inplace_auto(
     alg: Algorithm,
     isa: Isa,
@@ -546,10 +790,11 @@ pub fn softmax_batch_inplace_auto(
     parallel_threshold: usize,
     max_threads: usize,
 ) -> Result<(), SoftmaxError> {
-    let p = plan::adhoc(
+    let p = plan::adhoc_dtype(
         PlanOp::NormalizeInPlace,
         alg,
         isa,
+        b.dtype(),
         b.rows(),
         b.n(),
         parallel_threshold,
@@ -564,30 +809,63 @@ pub fn softmax_batch_inplace_auto(
 /// already cache-resident.
 pub fn softmax_batch_inplace_planned(p: &ExecPlan, b: &mut RowBatch) -> Result<(), SoftmaxError> {
     validate_inplace(b, p.isa)?;
-    check_plan(p, PlanOp::NormalizeInPlace, b.rows(), b.n())?;
+    check_plan(p, PlanOp::NormalizeInPlace, b.rows(), b.n(), b.dtype())?;
     if b.rows == 0 {
         return Ok(());
     }
     let n = b.n;
-    let (xs, ys) = super::alias_same(b.as_mut_slice());
-    if p.threads <= 1 {
-        run_rows(p.algorithm, p.isa, xs, ys, n, p.block_rows, false);
-    } else {
-        run_chunked(p.algorithm, p.isa, xs, ys, n, p.block_rows, false, &p.chunks, p.threads);
-    }
+    let u = PassUnrolls::from_plan(p);
+    let dtype = b.dtype;
+    with_elem!(dtype, E, {
+        let (xs, ys) = alias_same_elems(b.elems_mut::<E>());
+        if p.threads <= 1 {
+            run_rows_with::<E>(p.algorithm, p.isa, u, xs, ys, n, p.block_rows, false);
+        } else {
+            run_chunked::<E>(
+                p.algorithm,
+                p.isa,
+                u,
+                xs,
+                ys,
+                n,
+                p.block_rows,
+                false,
+                &p.chunks,
+                p.threads,
+            );
+        }
+    });
     Ok(())
 }
 
+/// Generic equivalent of [`crate::softmax::alias_same`]: one buffer viewed
+/// as both input and output.
+///
+/// SAFETY contract (same as `alias_same`): every pass reads `x[i]`
+/// strictly before writing `y[i]` at the same index, so the aliased reads
+/// never observe a torn or stale value the algorithm cares about.
+fn alias_same_elems<E>(b: &mut [E]) -> (&[E], &mut [E]) {
+    let len = b.len();
+    let ptr = b.as_mut_ptr();
+    // SAFETY: see the contract above; both views borrow `b` for the same
+    // lifetime, so the buffer outlives them.
+    unsafe { (std::slice::from_raw_parts(ptr, len), std::slice::from_raw_parts_mut(ptr, len)) }
+}
+
 /// Per-row pass-1 accumulators for a whole batch: `Σ e^{x_i}` of every
-/// row in the `(m, n)` extended-exponent representation, with the ISA
-/// dispatch hoisted out of the row loop.  This is the two-pass
+/// row in the `(m, n)` extended-exponent representation, with the
+/// ISA/dtype dispatch hoisted out of the row loop.  This is the two-pass
 /// algorithm's entire first pass — everything the fused decoding
 /// subsystem ([`crate::sampling`]) needs to renormalize or compare
-/// tokens without a scale pass ever running.
+/// tokens without a scale pass ever running.  Half-width rows widen on
+/// load; the accumulators are f32 for every dtype.
 pub fn accum_extexp_batch(isa: Isa, x: &RowBatch) -> Result<Vec<ExtSum>, SoftmaxError> {
     validate_inplace(x, isa)?;
     let mut out = vec![ExtSum::default(); x.rows()];
-    accum_rows(isa, x.as_slice(), x.n().max(1), &mut out);
+    let unroll = default_best_unroll(Pass::AccumExtExp, isa);
+    let n = x.n().max(1);
+    let dtype = x.dtype;
+    with_elem!(dtype, E, accum_rows::<E>(isa, unroll, x.elems::<E>(), n, &mut out));
     Ok(out)
 }
 
@@ -604,10 +882,11 @@ pub fn accum_extexp_batch_auto(
     parallel_threshold: usize,
     max_threads: usize,
 ) -> Result<Vec<ExtSum>, SoftmaxError> {
-    let p = plan::adhoc(
+    let p = plan::adhoc_dtype(
         PlanOp::Accum,
         Algorithm::TwoPass,
         isa,
+        x.dtype(),
         x.rows(),
         x.n(),
         parallel_threshold,
@@ -617,30 +896,38 @@ pub fn accum_extexp_batch_auto(
 }
 
 /// Execute one planned pass-1 accumulation: placement (submit-vs-pool and
-/// chunk layout) from the plan, per-row sums bit-identical whatever the
-/// split — each row's accumulator is computed by the same pass kernel on
-/// one thread.
+/// chunk layout) and the pass unroll from the plan, per-row sums
+/// bit-identical whatever the split — each row's accumulator is computed
+/// by the same pass kernel on one thread.
 pub fn accum_extexp_batch_planned(
     p: &ExecPlan,
     x: &RowBatch,
 ) -> Result<Vec<ExtSum>, SoftmaxError> {
     validate_inplace(x, p.isa)?;
-    check_plan(p, PlanOp::Accum, x.rows(), x.n())?;
+    check_plan(p, PlanOp::Accum, x.rows(), x.n(), x.dtype())?;
     let (rows, n) = (x.rows(), x.n());
-    if p.threads <= 1 {
-        return accum_extexp_batch(p.isa, x);
-    }
+    let unroll = PassUnrolls::from_plan(p).of(Pass::AccumExtExp);
     let mut out = vec![ExtSum::default(); rows];
-    let x_ptr = x.as_slice().as_ptr();
+    let dtype = x.dtype;
+    if p.threads <= 1 {
+        with_elem!(dtype, E, {
+            accum_rows::<E>(p.isa, unroll, x.elems::<E>(), n.max(1), &mut out);
+        });
+        return Ok(out);
+    }
+    let esz = dtype.size();
+    let x_ptr = x.data.as_bytes().as_ptr();
     let out_ptr = out.as_mut_ptr();
     let isa = p.isa;
     let kinds = jobs_for_chunks(&p.chunks, |r0, rc| JobKind::Accum {
         isa,
+        unroll,
+        dtype,
         // SAFETY: the plan's chunks cover 0..rows disjointly (r0 < rows,
         // r0 + rc <= rows), so both offsets stay inside the batch and
         // `out` allocations (one raw pointer per buffer, taken once —
         // see [`run_chunked`] on aliasing).
-        x: unsafe { x_ptr.add(r0 * n) },
+        x: unsafe { x_ptr.add(r0 * n * esz) },
         elems: rc * n,
         n,
         out: unsafe { out_ptr.add(r0) },
@@ -649,33 +936,19 @@ pub fn accum_extexp_batch_planned(
     Ok(out)
 }
 
-/// The blocked row loop of pass-1 accumulation with the ISA dispatch
+/// The row loop of pass-1 accumulation with the ISA/dtype dispatch
 /// hoisted out: one `ExtSum` per row of `xs` (stride `n`) into `out`.
 /// Shared by the single-threaded entry point and the pool's `Accum` jobs.
-fn accum_rows(isa: Isa, xs: &[f32], n: usize, out: &mut [ExtSum]) {
+fn accum_rows<E: KernelElement>(
+    isa: Isa,
+    unroll: usize,
+    xs: &[E],
+    n: usize,
+    out: &mut [ExtSum],
+) {
     debug_assert_eq!(xs.len(), out.len() * n);
-    match isa {
-        Isa::Scalar => {
-            for (r, o) in out.iter_mut().enumerate() {
-                *o = scalar::pass_accum_extexp(&xs[r * n..r * n + n]);
-            }
-        }
-        #[cfg(target_arch = "x86_64")]
-        // SAFETY: availability checked by the dispatching caller.
-        Isa::Avx2 => unsafe {
-            for (r, o) in out.iter_mut().enumerate() {
-                *o = avx2::pass_accum_extexp::<8>(&xs[r * n..r * n + n]);
-            }
-        },
-        #[cfg(target_arch = "x86_64")]
-        // SAFETY: availability checked by the dispatching caller.
-        Isa::Avx512 => unsafe {
-            for (r, o) in out.iter_mut().enumerate() {
-                *o = avx512::pass_accum_extexp::<8>(&xs[r * n..r * n + n]);
-            }
-        },
-        #[cfg(not(target_arch = "x86_64"))]
-        _ => unreachable!("non-scalar ISA unavailable on this arch"),
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = kernels::run_accum_extexp(isa, unroll, &xs[r * n..r * n + n]);
     }
 }
 
@@ -729,8 +1002,12 @@ pub fn available_threads() -> usize {
 }
 
 fn validate(x: &RowBatch, y: &RowBatch, isa: Isa) -> Result<(), SoftmaxError> {
-    // Report the dimension that actually disagrees (row length first, then
-    // row count) so the numbers in the error are ones the caller recognizes.
+    // Report the dimension that actually disagrees (dtype first, then row
+    // length, then row count) so the numbers in the error are ones the
+    // caller recognizes.
+    if x.dtype != y.dtype {
+        return Err(SoftmaxError::DtypeMismatch { have: y.dtype, want: x.dtype });
+    }
     if x.n != y.n {
         return Err(SoftmaxError::LengthMismatch { x: x.n, y: y.n });
     }
@@ -756,20 +1033,84 @@ fn validate_inplace(b: &RowBatch, isa: Isa) -> Result<(), SoftmaxError> {
     Ok(())
 }
 
-/// One-time dispatch, then the blocked row loop on the chosen kernel.
-fn run_rows(alg: Algorithm, isa: Isa, x: &[f32], y: &mut [f32], n: usize, block: usize, nt: bool) {
+/// Dtype dispatch, then the blocked row loop on the generic engine.
+fn run_rows_dyn(
+    alg: Algorithm,
+    isa: Isa,
+    u: PassUnrolls,
+    x: &RowBatch,
+    y: &mut RowBatch,
+    block: usize,
+    nt: bool,
+) {
+    let n = x.n;
+    let dtype = x.dtype;
+    with_elem!(dtype, E, {
+        run_rows_with::<E>(alg, isa, u, x.elems::<E>(), y.elems_mut::<E>(), n, block, nt);
+    });
+}
+
+/// The one batched row engine: algorithm dispatch, then the blocked
+/// drivers on the plan-driven pass dispatchers of the kernel layer
+/// ([`kernels::run_max`] and friends).  Replaces the historical
+/// `kernel_scalar` / `kernel_avx2` / `kernel_avx512` triplication: the
+/// ISA is a runtime value handed to the dispatchers, the element type a
+/// compile-time parameter, and the unroll factors come from the plan
+/// instead of static defaults.
+///
+/// Callers must have validated that `isa` is available on this host (the
+/// dispatchers' contract).
+fn run_rows_with<E: KernelElement>(
+    alg: Algorithm,
+    isa: Isa,
+    u: PassUnrolls,
+    x: &[E],
+    y: &mut [E],
+    n: usize,
+    block: usize,
+    nt: bool,
+) {
     debug_assert_eq!(x.len(), y.len());
-    debug_assert_eq!(x.len() % n, 0);
-    match isa {
-        Isa::Scalar => kernel_scalar(alg, x, y, n, block, nt),
-        #[cfg(target_arch = "x86_64")]
-        // SAFETY: callers validated ISA availability.
-        Isa::Avx2 => unsafe { kernel_avx2(alg, x, y, n, block, nt) },
-        #[cfg(target_arch = "x86_64")]
-        // SAFETY: callers validated ISA availability.
-        Isa::Avx512 => unsafe { kernel_avx512(alg, x, y, n, block, nt) },
-        #[cfg(not(target_arch = "x86_64"))]
-        _ => unreachable!("non-scalar ISA unavailable on this arch"),
+    debug_assert_eq!(x.len() % n.max(1), 0);
+    match alg {
+        Algorithm::ThreePassRecompute => drive_recompute(
+            x,
+            y,
+            n,
+            block,
+            nt,
+            |r| kernels::run_max(isa, u.of(Pass::Max), r),
+            |r, mu| kernels::run_sumexp(isa, u.of(Pass::SumExp), r, mu),
+            |r, mu, lam, out| {
+                kernels::run_scaleexp(isa, u.of(Pass::ScaleExp), false, r, mu, lam, out)
+            },
+            |r, mu, lam, out| {
+                kernels::run_scaleexp(isa, u.of(Pass::ScaleExp), true, r, mu, lam, out)
+            },
+        ),
+        Algorithm::ThreePassReload => drive_reload(
+            x,
+            y,
+            n,
+            block,
+            |r| kernels::run_max(isa, u.of(Pass::Max), r),
+            |r, mu, out| kernels::run_storeexp(isa, u.of(Pass::StoreExp), r, mu, out),
+            |out, lam| kernels::run_scale_inplace(isa, u.of(Pass::ScaleInplace), out, lam),
+        ),
+        Algorithm::TwoPass => drive_twopass(
+            x,
+            y,
+            n,
+            block,
+            nt,
+            |r| kernels::run_accum_extexp(isa, u.of(Pass::AccumExtExp), r),
+            |r, lam, n_sum, out| {
+                kernels::run_scale_extexp(isa, u.of(Pass::ScaleExtExp), false, r, lam, n_sum, out)
+            },
+            |r, lam, n_sum, out| {
+                kernels::run_scale_extexp(isa, u.of(Pass::ScaleExtExp), true, r, lam, n_sum, out)
+            },
+        ),
     }
 }
 
@@ -787,8 +1128,10 @@ fn run_rows(alg: Algorithm, isa: Isa, x: &[f32], y: &mut [f32], n: usize, block:
 // ---------------------------------------------------------------------------
 
 /// One row-range work item for the generic batch-execution engine.  Raw
-/// pointers because the pool threads are `'static` while the batch
-/// borrows are not; see the safety argument on [`submit_jobs`].
+/// byte pointers (plus the dtype to reconstruct the typed rows) because
+/// the pool threads are `'static` while the batch borrows are not — and
+/// because a typed pointer would force the enum itself to be generic; see
+/// the safety argument on [`submit_jobs`].
 enum JobKind {
     /// Normalize `elems / n` rows (in place when `x == y`; the aliasing
     /// contract of [`softmax_batch_inplace`] — every pass reads `x[i]`
@@ -796,8 +1139,10 @@ enum JobKind {
     Normalize {
         alg: Algorithm,
         isa: Isa,
-        x: *const f32,
-        y: *mut f32,
+        unrolls: PassUnrolls,
+        dtype: Dtype,
+        x: *const u8,
+        y: *mut u8,
         elems: usize,
         n: usize,
         block: usize,
@@ -806,7 +1151,9 @@ enum JobKind {
     /// Pass-1 `(m, n)` accumulation: one [`ExtSum`] per row into `out`.
     Accum {
         isa: Isa,
-        x: *const f32,
+        unroll: usize,
+        dtype: Dtype,
+        x: *const u8,
         elems: usize,
         n: usize,
         out: *mut ExtSum,
@@ -817,7 +1164,8 @@ enum JobKind {
     /// any chunking.
     Decode {
         isa: Isa,
-        x: *const f32,
+        dtype: Dtype,
+        x: *const u8,
         elems: usize,
         n: usize,
         params: *const SamplingParams,
@@ -938,7 +1286,7 @@ fn worker_loop(rx: &mpsc::Receiver<BatchJob>) {
                 Ok(Err(e)) => JobOutcome::Failed(e),
                 Err(_) => JobOutcome::Panicked,
             };
-        // `run_rows` fences after NT blocks, so the data is globally
+        // `run_rows_with` fences after NT blocks, so the data is globally
         // visible before this release-ordered acknowledgement.
         let _ = done.send((seq, outcome));
     }
@@ -949,42 +1297,51 @@ fn worker_loop(rx: &mpsc::Receiver<BatchJob>) {
 /// SAFETY (all pointer reconstructions): the submitter blocks in
 /// [`submit_jobs`] until this job's outcome is acknowledged, so every
 /// pointed-to range outlives this call; jobs of one batch cover disjoint
-/// output ranges.  The `Normalize` x/y pair may alias (in-place batches),
-/// under the same pass-ordering contract as [`softmax_batch_inplace`].
+/// output ranges.  The byte pointers were taken from a batch of the
+/// carried `dtype`, so the typed reconstruction matches the original
+/// element type and the ROWBATCH_ALIGN-aligned allocation.  The
+/// `Normalize` x/y pair may alias (in-place batches), under the same
+/// pass-ordering contract as [`softmax_batch_inplace`].
 fn run_job(kind: JobKind) -> Result<(), SamplingError> {
     match kind {
-        JobKind::Normalize { alg, isa, x, y, elems, n, block, nt } => {
-            // SAFETY: see function-level argument.
-            let (xs, ys) = unsafe {
-                (
-                    std::slice::from_raw_parts(x, elems),
-                    std::slice::from_raw_parts_mut(y, elems),
-                )
-            };
-            run_rows(alg, isa, xs, ys, n, block, nt);
+        JobKind::Normalize { alg, isa, unrolls, dtype, x, y, elems, n, block, nt } => {
+            with_elem!(dtype, E, {
+                // SAFETY: see function-level argument.
+                let (xs, ys) = unsafe {
+                    (
+                        std::slice::from_raw_parts(x as *const E, elems),
+                        std::slice::from_raw_parts_mut(y as *mut E, elems),
+                    )
+                };
+                run_rows_with::<E>(alg, isa, unrolls, xs, ys, n, block, nt);
+            });
             Ok(())
         }
-        JobKind::Accum { isa, x, elems, n, out } => {
-            // SAFETY: see function-level argument.
-            let (xs, outs) = unsafe {
-                (
-                    std::slice::from_raw_parts(x, elems),
-                    std::slice::from_raw_parts_mut(out, elems / n),
-                )
-            };
-            accum_rows(isa, xs, n, outs);
+        JobKind::Accum { isa, unroll, dtype, x, elems, n, out } => {
+            with_elem!(dtype, E, {
+                // SAFETY: see function-level argument.
+                let (xs, outs) = unsafe {
+                    (
+                        std::slice::from_raw_parts(x as *const E, elems),
+                        std::slice::from_raw_parts_mut(out, elems / n),
+                    )
+                };
+                accum_rows::<E>(isa, unroll, xs, n, outs);
+            });
             Ok(())
         }
-        JobKind::Decode { isa, x, elems, n, params, params_len, base_row, out } => {
-            // SAFETY: see function-level argument.
-            let (xs, ps, outs) = unsafe {
-                (
-                    std::slice::from_raw_parts(x, elems),
-                    std::slice::from_raw_parts(params, params_len),
-                    std::slice::from_raw_parts_mut(out, elems / n),
-                )
-            };
-            decode_rows(isa, xs, n, ps, base_row, outs)
+        JobKind::Decode { isa, dtype, x, elems, n, params, params_len, base_row, out } => {
+            with_elem!(dtype, E, {
+                // SAFETY: see function-level argument.
+                let (xs, ps, outs) = unsafe {
+                    (
+                        std::slice::from_raw_parts(x as *const E, elems),
+                        std::slice::from_raw_parts(params, params_len),
+                        std::slice::from_raw_parts_mut(out, elems / n),
+                    )
+                };
+                decode_rows::<E>(isa, xs, n, ps, base_row, outs)
+            })
         }
     }
 }
@@ -993,11 +1350,11 @@ fn run_job(kind: JobKind) -> Result<(), SamplingError> {
 /// sampler.  `params` is the whole batch's parameter slice; `base_row`
 /// maps this chunk's local rows onto it.  A row error aborts the chunk —
 /// the submitter discards the batch, so partially written outputs are
-/// never observed.  [`sample_row`] bumps the [`scan_pass_rows`] counter
-/// per row, so pooled and unpooled decode account identically.
-fn decode_rows(
+/// never observed.  [`sample_row_elems`] bumps the [`scan_pass_rows`]
+/// counter per row, so pooled and unpooled decode account identically.
+fn decode_rows<E: KernelElement>(
     isa: Isa,
-    xs: &[f32],
+    xs: &[E],
     n: usize,
     params: &[SamplingParams],
     base_row: usize,
@@ -1005,7 +1362,7 @@ fn decode_rows(
 ) -> Result<(), SamplingError> {
     for (r, o) in out.iter_mut().enumerate() {
         let p = if params.len() == 1 { &params[0] } else { &params[base_row + r] };
-        *o = sample_row(isa, &xs[r * n..r * n + n], p)?;
+        *o = sample_row_elems(isa, &xs[r * n..r * n + n], p)?;
     }
     Ok(())
 }
@@ -1076,27 +1433,31 @@ fn submit_jobs(kinds: Vec<JobKind>, t: usize) -> Result<(), SamplingError> {
 /// re-borrowing the output slice per chunk would invalidate the pointers
 /// already handed to earlier jobs under the aliasing model.
 #[allow(clippy::too_many_arguments)]
-fn run_chunked(
+fn run_chunked<E: KernelElement>(
     alg: Algorithm,
     isa: Isa,
-    xs: &[f32],
-    ys: &mut [f32],
+    u: PassUnrolls,
+    xs: &[E],
+    ys: &mut [E],
     n: usize,
     block: usize,
     nt: bool,
     chunks: &[ChunkPlan],
     t: usize,
 ) {
-    let x_ptr = xs.as_ptr();
-    let y_ptr = ys.as_mut_ptr();
+    let esz = std::mem::size_of::<E>();
+    let x_ptr = xs.as_ptr() as *const u8;
+    let y_ptr = ys.as_mut_ptr() as *mut u8;
     let kinds = jobs_for_chunks(chunks, |r0, rc| JobKind::Normalize {
         alg,
         isa,
+        unrolls: u,
+        dtype: E::DTYPE,
         // SAFETY: the chunks cover 0..rows disjointly (r0 < rows and
         // r0 + rc <= rows), so both offsets stay inside the xs/ys
         // allocations.
-        x: unsafe { x_ptr.add(r0 * n) },
-        y: unsafe { y_ptr.add(r0 * n) },
+        x: unsafe { x_ptr.add(r0 * n * esz) },
+        y: unsafe { y_ptr.add(r0 * n * esz) },
         elems: rc * n,
         n,
         block,
@@ -1124,16 +1485,19 @@ pub(crate) fn decode_chunked(
     if rows == 0 {
         return Ok(());
     }
-    let x_ptr = x.as_slice().as_ptr();
+    let dtype = x.dtype;
+    let esz = dtype.size();
+    let x_ptr = x.data.as_bytes().as_ptr();
     let out_ptr = out.as_mut_ptr();
     let isa = p.isa;
     let kinds = jobs_for_chunks(&p.chunks, |r0, rc| JobKind::Decode {
         isa,
+        dtype,
         // SAFETY: the plan's chunks cover 0..rows disjointly (r0 < rows,
         // r0 + rc <= rows), so both offsets stay inside the batch and
         // `out` buffers (one raw pointer per buffer, taken once — see
         // [`run_chunked`] on aliasing).
-        x: unsafe { x_ptr.add(r0 * n) },
+        x: unsafe { x_ptr.add(r0 * n * esz) },
         elems: rc * n,
         n,
         params: params.as_ptr(),
@@ -1145,26 +1509,29 @@ pub(crate) fn decode_chunked(
 }
 
 // ---------------------------------------------------------------------------
-// Blocked drivers: generic over the pass functions, so each ISA kernel
-// monomorphizes one copy with its own unroll-tuned passes.  Within a block
-// the loop is pass-major (all rows pass 1, then all rows pass 2, ...);
-// block sizing keeps the whole block cache-resident between passes.  When
-// `nt` is set the final (store-only) pass uses its streaming variant and
-// the driver issues an SFENCE at block end.
+// Blocked drivers: generic over the element type and the pass functions,
+// so each ISA × dtype instantiation monomorphizes one copy with its own
+// unroll-dispatched passes.  Within a block the loop is pass-major (all
+// rows pass 1, then all rows pass 2, ...); block sizing keeps the whole
+// block cache-resident between passes.  µ, σ, and the `(m, n)` sums stay
+// f32 for every element type — the reduction values never round-trip
+// through the storage dtype.  When `nt` is set the final (store-only)
+// pass uses its streaming variant and the driver issues an SFENCE at
+// block end.
 // ---------------------------------------------------------------------------
 
 #[inline(always)]
 #[allow(clippy::too_many_arguments)]
-fn drive_recompute(
-    x: &[f32],
-    y: &mut [f32],
+fn drive_recompute<E: Element>(
+    x: &[E],
+    y: &mut [E],
     n: usize,
     block: usize,
     nt: bool,
-    pass_max: impl Fn(&[f32]) -> f32,
-    pass_sumexp: impl Fn(&[f32], f32) -> f32,
-    pass_scaleexp: impl Fn(&[f32], f32, f32, &mut [f32]),
-    pass_scaleexp_nt: impl Fn(&[f32], f32, f32, &mut [f32]),
+    pass_max: impl Fn(&[E]) -> f32,
+    pass_sumexp: impl Fn(&[E], f32) -> f32,
+    pass_scaleexp: impl Fn(&[E], f32, f32, &mut [E]),
+    pass_scaleexp_nt: impl Fn(&[E], f32, f32, &mut [E]),
 ) {
     let rows = x.len() / n;
     let mut mu = Vec::with_capacity(block.min(rows));
@@ -1197,14 +1564,14 @@ fn drive_recompute(
 }
 
 #[inline(always)]
-fn drive_reload(
-    x: &[f32],
-    y: &mut [f32],
+fn drive_reload<E: Element>(
+    x: &[E],
+    y: &mut [E],
     n: usize,
     block: usize,
-    pass_max: impl Fn(&[f32]) -> f32,
-    pass_storeexp: impl Fn(&[f32], f32, &mut [f32]) -> f32,
-    pass_scale_inplace: impl Fn(&mut [f32], f32),
+    pass_max: impl Fn(&[E]) -> f32,
+    pass_storeexp: impl Fn(&[E], f32, &mut [E]) -> f32,
+    pass_scale_inplace: impl Fn(&mut [E], f32),
 ) {
     let rows = x.len() / n;
     let mut mu = Vec::with_capacity(block.min(rows));
@@ -1230,15 +1597,15 @@ fn drive_reload(
 
 #[inline(always)]
 #[allow(clippy::too_many_arguments)]
-fn drive_twopass(
-    x: &[f32],
-    y: &mut [f32],
+fn drive_twopass<E: Element>(
+    x: &[E],
+    y: &mut [E],
     n: usize,
     block: usize,
     nt: bool,
-    pass_accum: impl Fn(&[f32]) -> ExtSum,
-    pass_scale: impl Fn(&[f32], f32, f32, &mut [f32]),
-    pass_scale_nt: impl Fn(&[f32], f32, f32, &mut [f32]),
+    pass_accum: impl Fn(&[E]) -> ExtSum,
+    pass_scale: impl Fn(&[E], f32, f32, &mut [E]),
+    pass_scale_nt: impl Fn(&[E], f32, f32, &mut [E]),
 ) {
     let rows = x.len() / n;
     let mut sums: Vec<ExtSum> = Vec::with_capacity(block.min(rows));
@@ -1265,133 +1632,6 @@ fn drive_twopass(
     }
 }
 
-// ---------------------------------------------------------------------------
-// Per-ISA kernels.  The unroll factors match the single-row defaults in
-// scalar.rs / avx2.rs / avx512.rs exactly, so per-row outputs are
-// bit-identical to softmax_with.  The reload algorithm ignores `nt`: its
-// final pass re-reads the output, so write-allocate is unavoidable there.
-// ---------------------------------------------------------------------------
-
-fn kernel_scalar(alg: Algorithm, x: &[f32], y: &mut [f32], n: usize, block: usize, nt: bool) {
-    match alg {
-        Algorithm::ThreePassRecompute => drive_recompute(
-            x,
-            y,
-            n,
-            block,
-            nt,
-            scalar::pass_max,
-            scalar::pass_sumexp,
-            scalar::pass_scaleexp,
-            scalar::pass_scaleexp_nt,
-        ),
-        Algorithm::ThreePassReload => drive_reload(
-            x,
-            y,
-            n,
-            block,
-            scalar::pass_max,
-            scalar::pass_storeexp,
-            scalar::pass_scale_inplace,
-        ),
-        Algorithm::TwoPass => drive_twopass(
-            x,
-            y,
-            n,
-            block,
-            nt,
-            scalar::pass_accum_extexp,
-            scalar::pass_scale_extexp,
-            scalar::pass_scale_extexp_nt,
-        ),
-    }
-}
-
-#[cfg(target_arch = "x86_64")]
-#[target_feature(enable = "avx2,fma")]
-unsafe fn kernel_avx2(alg: Algorithm, x: &[f32], y: &mut [f32], n: usize, block: usize, nt: bool) {
-    match alg {
-        Algorithm::ThreePassRecompute => drive_recompute(
-            x,
-            y,
-            n,
-            block,
-            nt,
-            // SAFETY (all closures): AVX2+FMA availability was checked by
-            // the dispatching caller.
-            |r| unsafe { avx2::pass_max::<4>(r) },
-            |r, mu| unsafe { avx2::pass_sumexp::<8>(r, mu) },
-            |r, mu, lam, out| unsafe { avx2::pass_scaleexp::<8>(r, mu, lam, out) },
-            |r, mu, lam, out| unsafe { avx2::pass_scaleexp_nt::<8>(r, mu, lam, out) },
-        ),
-        Algorithm::ThreePassReload => drive_reload(
-            x,
-            y,
-            n,
-            block,
-            |r| unsafe { avx2::pass_max::<4>(r) },
-            |r, mu, out| unsafe { avx2::pass_storeexp::<2>(r, mu, out) },
-            |out, lam| unsafe { avx2::pass_scale_inplace::<8>(out, lam) },
-        ),
-        Algorithm::TwoPass => drive_twopass(
-            x,
-            y,
-            n,
-            block,
-            nt,
-            |r| unsafe { avx2::pass_accum_extexp::<8>(r) },
-            |r, lam, n_sum, out| unsafe { avx2::pass_scale_extexp::<8>(r, lam, n_sum, out) },
-            |r, lam, n_sum, out| unsafe { avx2::pass_scale_extexp_nt::<8>(r, lam, n_sum, out) },
-        ),
-    }
-}
-
-#[cfg(target_arch = "x86_64")]
-#[target_feature(enable = "avx512f")]
-unsafe fn kernel_avx512(
-    alg: Algorithm,
-    x: &[f32],
-    y: &mut [f32],
-    n: usize,
-    block: usize,
-    nt: bool,
-) {
-    match alg {
-        Algorithm::ThreePassRecompute => drive_recompute(
-            x,
-            y,
-            n,
-            block,
-            nt,
-            // SAFETY (all closures): AVX512F availability was checked by
-            // the dispatching caller.
-            |r| unsafe { avx512::pass_max::<4>(r) },
-            |r, mu| unsafe { avx512::pass_sumexp::<8>(r, mu) },
-            |r, mu, lam, out| unsafe { avx512::pass_scaleexp::<8>(r, mu, lam, out) },
-            |r, mu, lam, out| unsafe { avx512::pass_scaleexp_nt::<8>(r, mu, lam, out) },
-        ),
-        Algorithm::ThreePassReload => drive_reload(
-            x,
-            y,
-            n,
-            block,
-            |r| unsafe { avx512::pass_max::<4>(r) },
-            |r, mu, out| unsafe { avx512::pass_storeexp::<2>(r, mu, out) },
-            |out, lam| unsafe { avx512::pass_scale_inplace::<8>(out, lam) },
-        ),
-        Algorithm::TwoPass => drive_twopass(
-            x,
-            y,
-            n,
-            block,
-            nt,
-            |r| unsafe { avx512::pass_accum_extexp::<8>(r) },
-            |r, lam, n_sum, out| unsafe { avx512::pass_scale_extexp::<8>(r, lam, n_sum, out) },
-            |r, lam, n_sum, out| unsafe { avx512::pass_scale_extexp_nt::<8>(r, lam, n_sum, out) },
-        ),
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1409,6 +1649,21 @@ mod tests {
         b
     }
 
+    /// A half-width batch of quantized normal logits plus its exact f32
+    /// widening (the widened batch holds bit-identical values to what the
+    /// kernels see after widen-on-load).
+    fn quantized_batch(rows: usize, n: usize, dtype: Dtype, seed: u64) -> (RowBatch, RowBatch) {
+        let mut rng = Rng::new(seed);
+        let mut half = RowBatch::with_capacity_dtype(rows, n, dtype);
+        let mut wide = RowBatch::with_capacity(rows, n);
+        for _ in 0..rows {
+            let row: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 8.0)).collect();
+            half.push_row_quantized(&row).unwrap();
+            wide.push_row(&half.row_f32(half.rows() - 1)).unwrap();
+        }
+        (half, wide)
+    }
+
     #[test]
     fn rowbatch_construction_and_views() {
         let mut b = RowBatch::with_capacity(2, 3);
@@ -1417,6 +1672,7 @@ mod tests {
         b.push_row(&[4.0, 5.0, 6.0]).unwrap();
         assert_eq!(b.rows(), 2);
         assert_eq!(b.n(), 3);
+        assert_eq!(b.dtype(), Dtype::F32);
         assert_eq!(b.row(1), &[4.0, 5.0, 6.0]);
         assert_eq!(b.as_slice(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         assert_eq!(
@@ -1446,6 +1702,42 @@ mod tests {
         assert!(aligned(&fb));
         assert_eq!(fb.clone().into_vec(), v);
         assert!(aligned(&fb.clone()));
+    }
+
+    #[test]
+    fn half_rowbatch_construction_and_views() {
+        for dtype in [Dtype::Bf16, Dtype::F16] {
+            let z = RowBatch::new_with_dtype(2, 4, dtype);
+            assert_eq!(z.dtype(), dtype);
+            assert_eq!(z.row_f32(1), vec![0.0f32; 4], "{dtype}: zeroed rows widen to 0.0");
+
+            let mut b = RowBatch::with_capacity_dtype(0, 3, dtype);
+            b.push_row_quantized(&[0.5, -1.0, 2.0]).unwrap();
+            // 0.5 / -1.0 / 2.0 are exactly representable in both formats.
+            assert_eq!(b.row_f32(0), vec![0.5, -1.0, 2.0], "{dtype}");
+            assert_eq!(
+                b.push_row_quantized(&[1.0]),
+                Err(SoftmaxError::LengthMismatch { x: 1, y: 3 })
+            );
+            let bits: Vec<u16> = match dtype {
+                Dtype::Bf16 => vec![Bf16::from_f32(1.5).to_bits(); 3],
+                _ => vec![F16::from_f32(1.5).to_bits(); 3],
+            };
+            b.push_row_bits(&bits).unwrap();
+            assert_eq!(b.row_f32(1), vec![1.5f32; 3], "{dtype}: bit push widens");
+            assert_eq!(b.rows(), 2);
+
+            // Typed views agree with the widened view.
+            if dtype == Dtype::Bf16 {
+                assert_eq!(b.row_elems::<Bf16>(0)[0].to_f32(), 0.5);
+            } else {
+                assert_eq!(b.row_elems::<F16>(0)[0].to_f32(), 0.5);
+            }
+
+            b.truncate_rows(1);
+            assert_eq!(b.rows(), 1);
+            assert!(b.data.as_bytes().as_ptr() as usize % ROWBATCH_ALIGN == 0);
+        }
     }
 
     #[test]
@@ -1505,6 +1797,62 @@ mod tests {
     }
 
     #[test]
+    fn half_batch_normalization_within_bounds() {
+        // Documented half-width accuracy bounds (docs/ARCHITECTURE.md):
+        // outputs are probabilities in [0, 1], compared against an f64
+        // reference evaluated on the *quantized* inputs (quantization
+        // error is a property of the input format, not the kernel).
+        for (dtype, tol) in [(Dtype::Bf16, 4e-3f64), (Dtype::F16, 5e-4f64)] {
+            let (rows, n) = (5usize, 257usize);
+            let (x, wide) = quantized_batch(rows, n, dtype, 77);
+            for alg in Algorithm::ALL {
+                for isa in Isa::detect_all() {
+                    let mut y = RowBatch::new_with_dtype(rows, n, dtype);
+                    softmax_batch(alg, isa, &x, &mut y).unwrap();
+                    for r in 0..rows {
+                        let xr = wide.row(r);
+                        let mu = xr.iter().fold(f64::MIN, |a, &v| a.max(v as f64));
+                        let e: Vec<f64> = xr.iter().map(|&v| ((v as f64) - mu).exp()).collect();
+                        let s: f64 = e.iter().sum();
+                        for (i, got) in y.row_f32(r).iter().enumerate() {
+                            let want = e[i] / s;
+                            assert!(
+                                ((*got as f64) - want).abs() <= tol,
+                                "{alg}/{isa}/{dtype} r={r} i={i}: {got} vs {want}"
+                            );
+                        }
+                    }
+                    // Parallel + in-place agree bitwise with the serial path.
+                    let mut p = RowBatch::new_with_dtype(rows, n, dtype);
+                    softmax_batch_parallel(alg, isa, &x, &mut p, 3).unwrap();
+                    assert_eq!(p, y, "{alg}/{isa}/{dtype} parallel");
+                    let mut b = x.clone();
+                    softmax_batch_inplace(alg, isa, &mut b).unwrap();
+                    assert_eq!(b, y, "{alg}/{isa}/{dtype} inplace");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn half_accum_bitwise_matches_widened_f32() {
+        // Widen-on-load means a half batch and its f32 widening present
+        // identical lanes to the accumulator — the (m, n) sums must be
+        // bit-equal, on every ISA.
+        for dtype in [Dtype::Bf16, Dtype::F16] {
+            let (half, wide) = quantized_batch(4, 143, dtype, 5);
+            for isa in Isa::detect_all() {
+                let got = accum_extexp_batch(isa, &half).unwrap();
+                let want = accum_extexp_batch(isa, &wide).unwrap();
+                for (r, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g.m.to_bits(), w.m.to_bits(), "{isa}/{dtype} row {r}");
+                    assert_eq!(g.n.to_bits(), w.n.to_bits(), "{isa}/{dtype} row {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn empty_batch_and_error_cases() {
         let x = RowBatch::new(0, 16);
         let mut y = RowBatch::new(0, 16);
@@ -1530,6 +1878,56 @@ mod tests {
             softmax_batch_inplace(Algorithm::TwoPass, Isa::Scalar, &mut zin),
             Err(SoftmaxError::EmptyInput)
         );
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let x = RowBatch::new_with_dtype(2, 8, Dtype::Bf16);
+        let mut y = RowBatch::new(2, 8);
+        assert_eq!(
+            softmax_batch(Algorithm::TwoPass, Isa::Scalar, &x, &mut y),
+            Err(SoftmaxError::DtypeMismatch { have: Dtype::F32, want: Dtype::Bf16 })
+        );
+        // A plan built for one dtype refuses a batch of another.
+        let p = plan::adhoc(
+            PlanOp::Normalize,
+            Algorithm::TwoPass,
+            Isa::Scalar,
+            2,
+            8,
+            0,
+            1,
+        );
+        let mut hy = RowBatch::new_with_dtype(2, 8, Dtype::Bf16);
+        assert_eq!(
+            softmax_batch_planned(&p, &x, &mut hy),
+            Err(SoftmaxError::DtypeMismatch { have: Dtype::Bf16, want: Dtype::F32 })
+        );
+    }
+
+    #[test]
+    fn planned_unroll_overrides_still_normalize() {
+        let (rows, n) = (6usize, 333usize);
+        let x = random_batch(rows, n, 31);
+        let isa = Isa::detect_best();
+        for alg in Algorithm::ALL {
+            let mut p = plan::adhoc(PlanOp::Normalize, alg, isa, rows, n, 0, 1);
+            // Exercise every non-default unroll the dispatcher snaps to.
+            p.unrolls = Pass::of_algorithm(alg).iter().map(|&ps| (ps, 1usize)).collect();
+            let mut y = RowBatch::new(rows, n);
+            softmax_batch_planned(&p, &x, &mut y).unwrap();
+            for r in 0..rows {
+                let s: f32 = y.row(r).iter().sum();
+                assert!((s - 1.0).abs() < 1e-5, "{alg} unroll=1 row {r}: {s}");
+            }
+            p.unrolls = Pass::of_algorithm(alg).iter().map(|&ps| (ps, 2usize)).collect();
+            let mut y2 = RowBatch::new(rows, n);
+            softmax_batch_planned(&p, &x, &mut y2).unwrap();
+            for r in 0..rows {
+                let s: f32 = y2.row(r).iter().sum();
+                assert!((s - 1.0).abs() < 1e-5, "{alg} unroll=2 row {r}: {s}");
+            }
+        }
     }
 
     #[test]

@@ -22,12 +22,20 @@ impl Isa {
     pub fn available(self) -> bool {
         match self {
             Isa::Scalar => true,
+            // F16C is required by the half-width element loads/stores in
+            // the kernel layer.  It predates both AVX2 (Haswell) and
+            // AVX512F (Skylake-SP) — Ivy Bridge introduced it — so the
+            // extra check does not shrink the supported CPU set.
             #[cfg(target_arch = "x86_64")]
             Isa::Avx2 => {
-                is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+                is_x86_feature_detected!("avx2")
+                    && is_x86_feature_detected!("fma")
+                    && is_x86_feature_detected!("f16c")
             }
             #[cfg(target_arch = "x86_64")]
-            Isa::Avx512 => is_x86_feature_detected!("avx512f"),
+            Isa::Avx512 => {
+                is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("f16c")
+            }
             #[cfg(not(target_arch = "x86_64"))]
             _ => false,
         }

@@ -1,0 +1,876 @@
+//! AVX2+FMA implementations of the three softmax algorithms (paper §6.3).
+//!
+//! Mirrors the paper's templated C implementation: every pass is generic
+//! over an `UNROLL` meta-parameter (number of 8-lane vectors processed per
+//! iteration, each with its own accumulator register to break the FMA
+//! dependency chain); the auto-tuner (`tuning.rs`) picks the winner per
+//! pass.  The `e^x` reconstruction uses the paper's AVX2 trick — build the
+//! `2^n` scale by integer exponent-field manipulation and flush to zero for
+//! `n < −126` — since AVX2 has no `VSCALEFPS`.
+//!
+//! Every pass is additionally generic over the storage [`Element`] via
+//! [`Avx2Elem`]: elements are widened to f32 lanes on load and narrowed
+//! on store (f32 loads/stores directly; bf16 by integer shift with
+//! round-to-nearest-even narrowing; f16 via the F16C converters).  All
+//! lane arithmetic and every accumulator stay f32, so for `E = f32` the
+//! monomorphized passes are instruction-for-instruction the pre-generic
+//! kernels and their results are bit-identical.
+//!
+//! # Safety
+//! Every function in this module requires AVX2+FMA+F16C at runtime; the
+//! public entry points in `dispatch.rs` check `is_x86_feature_detected!`
+//! before selecting them.  (F16C predates AVX2 — Ivy Bridge vs Haswell —
+//! so requiring it does not shrink the supported CPU set.)
+
+#![cfg(target_arch = "x86_64")]
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use core::arch::x86_64::*;
+
+use super::element::{Bf16, Element, F16};
+use crate::softmax::exp::{
+    ExtSum, C1, C2, C3, C4, C5, DOMAIN_BOUND, EXTSUM_NEG_INIT, LN2_HI, LN2_LO, LOG2E,
+};
+
+const LANES: usize = 8;
+const ROUND: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
+
+/// Range reduction + polynomial: returns `(p, n)` with `e^x ≈ p·2^n`.
+/// `pub(crate)`: the fused sampling kernels (`sampling::avx2`) reuse it.
+#[inline(always)]
+pub(crate) unsafe fn vexp_parts(x: __m256) -> (__m256, __m256) {
+    let x = _mm256_max_ps(x, _mm256_set1_ps(-DOMAIN_BOUND));
+    let x = _mm256_min_ps(x, _mm256_set1_ps(DOMAIN_BOUND));
+    let n = _mm256_round_ps::<ROUND>(_mm256_mul_ps(x, _mm256_set1_ps(LOG2E)));
+    let t = _mm256_fnmadd_ps(n, _mm256_set1_ps(LN2_HI), x);
+    let t = _mm256_fnmadd_ps(n, _mm256_set1_ps(LN2_LO), t);
+    let p = _mm256_set1_ps(C5);
+    let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(C4));
+    let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(C3));
+    let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(C2));
+    let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(C1));
+    let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(1.0));
+    (p, n)
+}
+
+/// `2^n` for integral-float lanes with `n ≤ 127`, flushed to 0 below −126.
+/// The paper's AVX2 reconstruction: `(n + 127) << 23` reinterpreted as f32.
+#[inline(always)]
+unsafe fn vexp2i(n: __m256) -> __m256 {
+    let clamped = _mm256_max_ps(n, _mm256_set1_ps(-127.0));
+    let bits = _mm256_slli_epi32::<23>(_mm256_add_epi32(
+        _mm256_cvtps_epi32(clamped),
+        _mm256_set1_epi32(127),
+    ));
+    let s = _mm256_castsi256_ps(bits);
+    // Zero the lanes that underflow (n < −126): subnormal flush, paper §6.3.
+    let keep = _mm256_cmp_ps::<_CMP_GE_OQ>(n, _mm256_set1_ps(-126.0));
+    _mm256_and_ps(s, keep)
+}
+
+/// Full `e^x` for `x ≤ 0` lanes (Three-Pass regime).
+#[inline(always)]
+unsafe fn vexp(x: __m256) -> __m256 {
+    let (p, n) = vexp_parts(x);
+    _mm256_mul_ps(p, vexp2i(n))
+}
+
+#[inline(always)]
+unsafe fn hmax(v: __m256) -> f32 {
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let m = _mm_max_ps(_mm256_castps256_ps128(v), hi);
+    let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
+    let m = _mm_max_ss(m, _mm_shuffle_ps::<1>(m, m));
+    _mm_cvtss_f32(m)
+}
+
+#[inline(always)]
+unsafe fn hsum(v: __m256) -> f32 {
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let s = _mm_add_ps(_mm256_castps256_ps128(v), hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+    _mm_cvtss_f32(s)
+}
+
+// ---------------------------------------------------------------------------
+// Element-width extension: widen-on-load / narrow-on-store per dtype.
+// ---------------------------------------------------------------------------
+
+/// Per-element AVX2 memory operations.  Implementations only translate
+/// between storage and f32 lanes; no arithmetic happens in half
+/// precision.
+///
+/// # Safety
+/// Trait methods cannot carry `#[target_feature]`, so these are
+/// `#[inline(always)]` unsafe methods that must only be called from a
+/// context compiled with `avx2,fma,f16c` enabled — i.e. from the passes
+/// in this module (the intrinsics they wrap carry their own feature
+/// attributes, so the contract is the usual runtime-detection one).
+pub trait Avx2Elem: Element {
+    /// Byte alignment a pointer handed to `storev_nt` must satisfy.
+    const NT_ALIGN: usize;
+    /// Load 8 elements from `p`, widened to f32 lanes.
+    unsafe fn loadv(p: *const Self) -> __m256;
+    /// Narrow 8 f32 lanes (round-to-nearest-even) and store at `p`.
+    unsafe fn storev(p: *mut Self, v: __m256);
+    /// As `storev`, with a non-temporal (streaming) store; `p` must be
+    /// `NT_ALIGN`-aligned.
+    unsafe fn storev_nt(p: *mut Self, v: __m256);
+}
+
+impl Avx2Elem for f32 {
+    const NT_ALIGN: usize = 32;
+
+    #[inline(always)]
+    unsafe fn loadv(p: *const Self) -> __m256 {
+        _mm256_loadu_ps(p)
+    }
+
+    #[inline(always)]
+    unsafe fn storev(p: *mut Self, v: __m256) {
+        _mm256_storeu_ps(p, v)
+    }
+
+    #[inline(always)]
+    unsafe fn storev_nt(p: *mut Self, v: __m256) {
+        _mm256_stream_ps(p, v)
+    }
+}
+
+/// Narrow 8 f32 lanes to bf16 with round-to-nearest-even, quieting NaNs —
+/// the vector form of [`Bf16::from_f32`] (bit-identical per lane).
+#[inline(always)]
+unsafe fn bf16_narrow(v: __m256) -> __m128i {
+    let bits = _mm256_castps_si256(v);
+    // RNE on bit 16: add 0x7fff plus the LSB of the surviving mantissa.
+    let lsb = _mm256_and_si256(_mm256_srli_epi32::<16>(bits), _mm256_set1_epi32(1));
+    let rne = _mm256_add_epi32(_mm256_add_epi32(bits, _mm256_set1_epi32(0x7fff)), lsb);
+    let hi = _mm256_srli_epi32::<16>(rne);
+    // NaN lanes: truncate and force the quiet bit instead of rounding.
+    let qnan = _mm256_or_si256(_mm256_srli_epi32::<16>(bits), _mm256_set1_epi32(0x0040));
+    let is_nan = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_UNORD_Q>(v, v));
+    let hi = _mm256_blendv_epi8(hi, qnan, is_nan);
+    // 32→16 pack (values ≤ 0xffff: unsigned saturation is a no-op), then
+    // gather qwords 0 and 2 so the low 128 bits hold lanes 0..7 in order.
+    let packed = _mm256_packus_epi32(hi, hi);
+    let fixed = _mm256_permute4x64_epi64::<0b00_00_10_00>(packed);
+    _mm256_castsi256_si128(fixed)
+}
+
+impl Avx2Elem for Bf16 {
+    const NT_ALIGN: usize = 16;
+
+    #[inline(always)]
+    unsafe fn loadv(p: *const Self) -> __m256 {
+        let raw = _mm_loadu_si128(p as *const __m128i);
+        _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(raw)))
+    }
+
+    #[inline(always)]
+    unsafe fn storev(p: *mut Self, v: __m256) {
+        _mm_storeu_si128(p as *mut __m128i, bf16_narrow(v));
+    }
+
+    #[inline(always)]
+    unsafe fn storev_nt(p: *mut Self, v: __m256) {
+        _mm_stream_si128(p as *mut __m128i, bf16_narrow(v));
+    }
+}
+
+impl Avx2Elem for F16 {
+    const NT_ALIGN: usize = 16;
+
+    #[inline(always)]
+    unsafe fn loadv(p: *const Self) -> __m256 {
+        _mm256_cvtph_ps(_mm_loadu_si128(p as *const __m128i))
+    }
+
+    #[inline(always)]
+    unsafe fn storev(p: *mut Self, v: __m256) {
+        _mm_storeu_si128(p as *mut __m128i, _mm256_cvtps_ph::<ROUND>(v));
+    }
+
+    #[inline(always)]
+    unsafe fn storev_nt(p: *mut Self, v: __m256) {
+        _mm_stream_si128(p as *mut __m128i, _mm256_cvtps_ph::<ROUND>(v));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Passes, generic over the element type and UNROLL (vectors per iteration).
+// ---------------------------------------------------------------------------
+
+#[target_feature(enable = "avx2,fma,f16c")]
+pub unsafe fn pass_max<E: Avx2Elem, const U: usize>(x: &[E]) -> f32 {
+    let mut acc = [_mm256_set1_ps(f32::MIN); U];
+    let stride = LANES * U;
+    let mut p = x.as_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            acc[k] = _mm256_max_ps(acc[k], E::loadv(p.add(k * LANES)));
+        }
+        p = p.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        acc[0] = _mm256_max_ps(acc[0], E::loadv(p));
+        p = p.add(LANES);
+        rem -= LANES;
+    }
+    let mut v = acc[0];
+    for k in 1..U {
+        v = _mm256_max_ps(v, acc[k]);
+    }
+    let mut m = hmax(v);
+    for i in 0..rem {
+        m = m.max((*p.add(i)).to_f32());
+    }
+    m
+}
+
+#[target_feature(enable = "avx2,fma,f16c")]
+pub unsafe fn pass_sumexp<E: Avx2Elem, const U: usize>(x: &[E], mu: f32) -> f32 {
+    let vmu = _mm256_set1_ps(mu);
+    let mut acc = [_mm256_setzero_ps(); U];
+    let stride = LANES * U;
+    let mut p = x.as_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let v = _mm256_sub_ps(E::loadv(p.add(k * LANES)), vmu);
+            acc[k] = _mm256_add_ps(acc[k], vexp(v));
+        }
+        p = p.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let v = _mm256_sub_ps(E::loadv(p), vmu);
+        acc[0] = _mm256_add_ps(acc[0], vexp(v));
+        p = p.add(LANES);
+        rem -= LANES;
+    }
+    let mut v = acc[0];
+    for k in 1..U {
+        v = _mm256_add_ps(v, acc[k]);
+    }
+    let mut s = hsum(v);
+    for i in 0..rem {
+        s += crate::softmax::exp::exp((*p.add(i)).to_f32() - mu);
+    }
+    s
+}
+
+#[target_feature(enable = "avx2,fma,f16c")]
+pub unsafe fn pass_storeexp<E: Avx2Elem, const U: usize>(x: &[E], mu: f32, y: &mut [E]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let vmu = _mm256_set1_ps(mu);
+    let mut acc = [_mm256_setzero_ps(); U];
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let e = vexp(_mm256_sub_ps(E::loadv(px.add(k * LANES)), vmu));
+            E::storev(py.add(k * LANES), e);
+            acc[k] = _mm256_add_ps(acc[k], e);
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let e = vexp(_mm256_sub_ps(E::loadv(px), vmu));
+        E::storev(py, e);
+        acc[0] = _mm256_add_ps(acc[0], e);
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    let mut v = acc[0];
+    for k in 1..U {
+        v = _mm256_add_ps(v, acc[k]);
+    }
+    // The returned sum is of the full-precision values *before* narrowing
+    // (narrowing is storage-only; accumulators stay f32 for every dtype).
+    let mut s = hsum(v);
+    for i in 0..rem {
+        let e = crate::softmax::exp::exp((*px.add(i)).to_f32() - mu);
+        *py.add(i) = E::from_f32(e);
+        s += e;
+    }
+    s
+}
+
+#[target_feature(enable = "avx2,fma,f16c")]
+pub unsafe fn pass_scaleexp<E: Avx2Elem, const U: usize>(x: &[E], mu: f32, lam: f32, y: &mut [E]) {
+    debug_assert_eq!(x.len(), y.len());
+    let vmu = _mm256_set1_ps(mu);
+    let vlam = _mm256_set1_ps(lam);
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let e = vexp(_mm256_sub_ps(E::loadv(px.add(k * LANES)), vmu));
+            E::storev(py.add(k * LANES), _mm256_mul_ps(e, vlam));
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let e = vexp(_mm256_sub_ps(E::loadv(px), vmu));
+        E::storev(py, _mm256_mul_ps(e, vlam));
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        *py.add(i) = E::from_f32(lam * crate::softmax::exp::exp((*px.add(i)).to_f32() - mu));
+    }
+}
+
+#[target_feature(enable = "avx2,fma,f16c")]
+pub unsafe fn pass_scale_inplace<E: Avx2Elem, const U: usize>(y: &mut [E], lam: f32) {
+    let vlam = _mm256_set1_ps(lam);
+    let stride = LANES * U;
+    let mut p = y.as_mut_ptr();
+    let mut rem = y.len();
+    while rem >= stride {
+        for k in 0..U {
+            let v = _mm256_mul_ps(E::loadv(p.add(k * LANES)), vlam);
+            E::storev(p.add(k * LANES), v);
+        }
+        p = p.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        E::storev(p, _mm256_mul_ps(E::loadv(p), vlam));
+        p = p.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        let v = (*p.add(i)).to_f32() * lam;
+        *p.add(i) = E::from_f32(v);
+    }
+}
+
+/// Fold one `(p, n)` vector into the running `(m, n)` accumulator pair
+/// (paper Alg. 3 inner loop, vectorized: both shifts ≤ 0, so no overflow).
+/// `pub(crate)`: the fused sampling kernels (`sampling::avx2`) reuse it.
+#[inline(always)]
+pub(crate) unsafe fn accum_step(vm: &mut __m256, vn: &mut __m256, p: __m256, n: __m256) {
+    let n_max = _mm256_max_ps(*vn, n);
+    let scaled_new = _mm256_mul_ps(p, vexp2i(_mm256_sub_ps(n, n_max)));
+    let scaled_acc = _mm256_mul_ps(*vm, vexp2i(_mm256_sub_ps(*vn, n_max)));
+    *vm = _mm256_add_ps(scaled_new, scaled_acc);
+    *vn = n_max;
+}
+
+#[target_feature(enable = "avx2,fma,f16c")]
+pub unsafe fn pass_accum_extexp<E: Avx2Elem, const U: usize>(x: &[E]) -> ExtSum {
+    let mut vm = [_mm256_setzero_ps(); U];
+    let mut vn = [_mm256_set1_ps(EXTSUM_NEG_INIT); U];
+    let stride = LANES * U;
+    let mut p = x.as_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let (pe, ne) = vexp_parts(E::loadv(p.add(k * LANES)));
+            accum_step(&mut vm[k], &mut vn[k], pe, ne);
+        }
+        p = p.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let (pe, ne) = vexp_parts(E::loadv(p));
+        accum_step(&mut vm[0], &mut vn[0], pe, ne);
+        p = p.add(LANES);
+        rem -= LANES;
+    }
+    // Horizontal (m, n) combine: lanes → scalar ExtSum.
+    let mut s = ExtSum::default();
+    for k in 0..U {
+        let mut ms = [0.0f32; LANES];
+        let mut ns = [0.0f32; LANES];
+        _mm256_storeu_ps(ms.as_mut_ptr(), vm[k]);
+        _mm256_storeu_ps(ns.as_mut_ptr(), vn[k]);
+        for l in 0..LANES {
+            s.add_pair(ms[l], ns[l]);
+        }
+    }
+    for i in 0..rem {
+        s.add_exp((*p.add(i)).to_f32());
+    }
+    s
+}
+
+#[target_feature(enable = "avx2,fma,f16c")]
+pub unsafe fn pass_scale_extexp<E: Avx2Elem, const U: usize>(
+    x: &[E],
+    lam: f32,
+    n_sum: f32,
+    y: &mut [E],
+) {
+    debug_assert_eq!(x.len(), y.len());
+    let vlam = _mm256_set1_ps(lam);
+    let vns = _mm256_set1_ps(n_sum);
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let (pe, ne) = vexp_parts(E::loadv(px.add(k * LANES)));
+            let s = vexp2i(_mm256_sub_ps(ne, vns));
+            let v = _mm256_mul_ps(_mm256_mul_ps(pe, vlam), s);
+            E::storev(py.add(k * LANES), v);
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let (pe, ne) = vexp_parts(E::loadv(px));
+        let s = vexp2i(_mm256_sub_ps(ne, vns));
+        E::storev(py, _mm256_mul_ps(_mm256_mul_ps(pe, vlam), s));
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        let (m_i, n_i) = crate::softmax::exp::extexp((*px.add(i)).to_f32());
+        *py.add(i) = E::from_f32(m_i * lam * crate::softmax::exp::exp2i(n_i - n_sum));
+    }
+}
+
+/// Pass 3 of Alg. 1 with non-temporal stores (`VMOVNTPS` for f32,
+/// `MOVNTDQ` on the narrowed vector for the half dtypes): out of cache
+/// the output is written exactly once and never re-read, so streaming
+/// bypasses the write-allocate RFO and cuts the pass's true traffic from
+/// 3 transfers (read x + RFO y + write y) to 2.  Requires
+/// `E::NT_ALIGN`-byte alignment of `y` (guaranteed from a [`RowBatch`]
+/// start — the batched engine's use); falls back to the temporal pass
+/// otherwise.  Lane grouping is identical to [`pass_scaleexp`], so
+/// outputs are bit-identical; only the store instruction differs.
+/// Callers must execute `SFENCE` before publishing `y` to other threads
+/// (the batched engine fences at block end).
+///
+/// [`RowBatch`]: crate::softmax::batch::RowBatch
+#[target_feature(enable = "avx2,fma,f16c")]
+pub unsafe fn pass_scaleexp_nt<E: Avx2Elem, const U: usize>(
+    x: &[E],
+    mu: f32,
+    lam: f32,
+    y: &mut [E],
+) {
+    debug_assert_eq!(x.len(), y.len());
+    if y.as_ptr() as usize % E::NT_ALIGN != 0 {
+        return pass_scaleexp::<E, U>(x, mu, lam, y);
+    }
+    let vmu = _mm256_set1_ps(mu);
+    let vlam = _mm256_set1_ps(lam);
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let e = vexp(_mm256_sub_ps(E::loadv(px.add(k * LANES)), vmu));
+            E::storev_nt(py.add(k * LANES), _mm256_mul_ps(e, vlam));
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let e = vexp(_mm256_sub_ps(E::loadv(px), vmu));
+        E::storev_nt(py, _mm256_mul_ps(e, vlam));
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        *py.add(i) = E::from_f32(lam * crate::softmax::exp::exp((*px.add(i)).to_f32() - mu));
+    }
+}
+
+/// Pass 2 of Alg. 3 with non-temporal stores; same contract as
+/// [`pass_scaleexp_nt`] (`E::NT_ALIGN`-aligned `y` or temporal fallback,
+/// bit-identical outputs, caller-side `SFENCE` before publication).
+#[target_feature(enable = "avx2,fma,f16c")]
+pub unsafe fn pass_scale_extexp_nt<E: Avx2Elem, const U: usize>(
+    x: &[E],
+    lam: f32,
+    n_sum: f32,
+    y: &mut [E],
+) {
+    debug_assert_eq!(x.len(), y.len());
+    if y.as_ptr() as usize % E::NT_ALIGN != 0 {
+        return pass_scale_extexp::<E, U>(x, lam, n_sum, y);
+    }
+    let vlam = _mm256_set1_ps(lam);
+    let vns = _mm256_set1_ps(n_sum);
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let (pe, ne) = vexp_parts(E::loadv(px.add(k * LANES)));
+            let s = vexp2i(_mm256_sub_ps(ne, vns));
+            let v = _mm256_mul_ps(_mm256_mul_ps(pe, vlam), s);
+            E::storev_nt(py.add(k * LANES), v);
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let (pe, ne) = vexp_parts(E::loadv(px));
+        let s = vexp2i(_mm256_sub_ps(ne, vns));
+        E::storev_nt(py, _mm256_mul_ps(_mm256_mul_ps(pe, vlam), s));
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        let (m_i, n_i) = crate::softmax::exp::extexp((*px.add(i)).to_f32());
+        *py.add(i) = E::from_f32(m_i * lam * crate::softmax::exp::exp2i(n_i - n_sum));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full algorithms with the default (tuned) unroll factors.
+// ---------------------------------------------------------------------------
+
+/// Paper Algorithm 1, AVX2. 3 reads + 1 write.
+#[target_feature(enable = "avx2,fma,f16c")]
+pub unsafe fn softmax_threepass_recompute<E: Avx2Elem>(x: &[E], y: &mut [E]) {
+    let mu = pass_max::<E, 4>(x);
+    let sigma = pass_sumexp::<E, 8>(x, mu);
+    pass_scaleexp::<E, 8>(x, mu, 1.0 / sigma, y);
+}
+
+/// Paper Algorithm 2, AVX2. 3 reads + 2 writes.
+#[target_feature(enable = "avx2,fma,f16c")]
+pub unsafe fn softmax_threepass_reload<E: Avx2Elem>(x: &[E], y: &mut [E]) {
+    let mu = pass_max::<E, 4>(x);
+    let sigma = pass_storeexp::<E, 2>(x, mu, y);
+    pass_scale_inplace::<E, 8>(y, 1.0 / sigma);
+}
+
+/// Paper Algorithm 3 (the contribution), AVX2. 2 reads + 1 write.
+#[target_feature(enable = "avx2,fma,f16c")]
+pub unsafe fn softmax_twopass<E: Avx2Elem>(x: &[E], y: &mut [E]) {
+    let s = pass_accum_extexp::<E, 8>(x);
+    pass_scale_extexp::<E, 8>(x, 1.0 / s.m, s.n, y);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have() -> bool {
+        is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+            && is_x86_feature_detected!("f16c")
+    }
+
+    fn ref_softmax(x: &[f32]) -> Vec<f32> {
+        let mu = x.iter().cloned().fold(f64::MIN, |a, v| a.max(v as f64));
+        let e: Vec<f64> = x.iter().map(|&v| ((v as f64) - mu).exp()).collect();
+        let s: f64 = e.iter().sum();
+        e.iter().map(|&v| (v / s) as f32).collect()
+    }
+
+    fn inputs(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (((i * 2654435761) % 2000) as f32) / 100.0 - 10.0).collect()
+    }
+
+    #[test]
+    fn avx2_algorithms_match_reference() {
+        if !have() {
+            return;
+        }
+        for n in [1usize, 7, 8, 9, 16, 63, 64, 65, 255, 1000, 4096, 10_007] {
+            let x = inputs(n);
+            let want = ref_softmax(&x);
+            for (name, f) in [
+                ("recompute", softmax_threepass_recompute as unsafe fn(&[f32], &mut [f32])),
+                ("reload", softmax_threepass_reload),
+                ("twopass", softmax_twopass),
+            ] {
+                let mut y = vec![0.0f32; n];
+                unsafe { f(&x, &mut y) };
+                for i in 0..n {
+                    assert!(
+                        (y[i] - want[i]).abs() < 1e-6,
+                        "{name} n={n} i={i}: {} vs {}",
+                        y[i],
+                        want[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_passes_match_scalar() {
+        if !have() {
+            return;
+        }
+        let x = inputs(1003);
+        let mu = unsafe { pass_max::<f32, 4>(&x) };
+        assert_eq!(mu, crate::softmax::scalar::pass_max(&x));
+        let s_v = unsafe { pass_sumexp::<f32, 2>(&x, mu) };
+        let s_s = crate::softmax::scalar::pass_sumexp(&x, mu);
+        assert!((s_v - s_s).abs() / s_s < 1e-5, "{s_v} vs {s_s}");
+        let e_v = unsafe { pass_accum_extexp::<f32, 2>(&x) };
+        let e_s = crate::softmax::scalar::pass_accum_extexp(&x);
+        assert!((e_v.ln() - e_s.ln()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn avx2_unroll_variants_agree() {
+        if !have() {
+            return;
+        }
+        let x = inputs(2049);
+        let m1 = unsafe { pass_max::<f32, 1>(&x) };
+        let m2 = unsafe { pass_max::<f32, 2>(&x) };
+        let m4 = unsafe { pass_max::<f32, 4>(&x) };
+        let m8 = unsafe { pass_max::<f32, 8>(&x) };
+        assert!(m1 == m2 && m2 == m4 && m4 == m8);
+        let a1 = unsafe { pass_accum_extexp::<f32, 1>(&x) };
+        let a4 = unsafe { pass_accum_extexp::<f32, 4>(&x) };
+        assert!((a1.ln() - a4.ln()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn avx2_nt_scale_passes_match_temporal() {
+        if !have() {
+            return;
+        }
+        let x = inputs(4096 + 11);
+        let s = unsafe { pass_accum_extexp::<f32, 2>(&x) };
+        let mu = unsafe { pass_max::<f32, 4>(&x) };
+        // 32-byte-aligned output window inside an overallocated buffer.
+        let mut buf = vec![0.0f32; x.len() + 8];
+        let off = (32 - (buf.as_ptr() as usize % 32)) / 4 % 8;
+        for variant in 0..2 {
+            let mut want = vec![0.0f32; x.len()];
+            unsafe {
+                if variant == 0 {
+                    pass_scale_extexp::<f32, 2>(&x, 1.0 / s.m, s.n, &mut want);
+                    pass_scale_extexp_nt::<f32, 2>(
+                        &x,
+                        1.0 / s.m,
+                        s.n,
+                        &mut buf[off..off + x.len()],
+                    );
+                } else {
+                    pass_scaleexp::<f32, 2>(&x, mu, 0.25, &mut want);
+                    pass_scaleexp_nt::<f32, 2>(&x, mu, 0.25, &mut buf[off..off + x.len()]);
+                }
+                core::arch::x86_64::_mm_sfence();
+            }
+            for i in 0..x.len() {
+                assert_eq!(
+                    buf[off + i].to_bits(),
+                    want[i].to_bits(),
+                    "variant {variant} i={i}"
+                );
+            }
+            // Unaligned output takes the temporal fallback and still matches.
+            let mut y2 = vec![0.0f32; x.len() + 1];
+            unsafe {
+                if variant == 0 {
+                    pass_scale_extexp_nt::<f32, 2>(&x, 1.0 / s.m, s.n, &mut y2[1..]);
+                } else {
+                    pass_scaleexp_nt::<f32, 2>(&x, mu, 0.25, &mut y2[1..]);
+                }
+            }
+            for i in 0..x.len() {
+                assert_eq!(y2[1 + i].to_bits(), want[i].to_bits(), "unaligned {variant} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_twopass_handles_overflow_range() {
+        if !have() {
+            return;
+        }
+        let x = vec![95.0f32; 512]; // e^95 overflows f32
+        let mut y = vec![0.0f32; 512];
+        unsafe { softmax_twopass(&x, &mut y) };
+        for &v in &y {
+            assert!((v - 1.0 / 512.0).abs() < 1e-8, "{v}");
+        }
+    }
+
+    // -- half-width element coverage ---------------------------------------
+
+    /// SIMD widen (loadv) must agree bit-for-bit with the scalar
+    /// `Element::to_f32` over every possible 16-bit pattern, NaNs
+    /// included — this is what keeps the vector body and the scalar tail
+    /// of every pass consistent.
+    #[test]
+    fn avx2_widen_matches_scalar_exhaustively() {
+        if !have() {
+            return;
+        }
+        let mut batch = [0u16; LANES];
+        for base in (0..=u16::MAX as usize).step_by(LANES) {
+            for (i, b) in batch.iter_mut().enumerate() {
+                *b = (base + i) as u16;
+            }
+            let bf: [Bf16; LANES] = batch.map(Bf16::from_bits);
+            let fh: [F16; LANES] = batch.map(F16::from_bits);
+            let mut got = [0.0f32; LANES];
+            unsafe {
+                _mm256_storeu_ps(got.as_mut_ptr(), Bf16::loadv(bf.as_ptr()));
+            }
+            for i in 0..LANES {
+                assert_eq!(got[i].to_bits(), bf[i].to_f32().to_bits(), "bf16 {:#06x}", batch[i]);
+            }
+            unsafe {
+                _mm256_storeu_ps(got.as_mut_ptr(), F16::loadv(fh.as_ptr()));
+            }
+            for i in 0..LANES {
+                assert_eq!(got[i].to_bits(), fh[i].to_f32().to_bits(), "f16 {:#06x}", batch[i]);
+            }
+        }
+    }
+
+    /// SIMD narrow (storev) must agree bit-for-bit with the scalar
+    /// `Element::from_f32` on normals, subnormal-range values, halfway
+    /// rounding cases, signed zeros, infinities, and NaNs.
+    #[test]
+    fn avx2_narrow_matches_scalar() {
+        if !have() {
+            return;
+        }
+        let mut vals: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            65504.0,
+            65520.0,
+            -65520.0,
+            1e30,
+            -1e30,
+            6.0e-8,
+            -6.0e-8,
+            2.0e-8,
+            1e-40,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::from_bits(0x3f80_4000), // bf16 halfway, even
+            f32::from_bits(0x3f81_8000), // bf16 halfway, odd
+            f32::from_bits(0x3c00_1000), // f16 halfway
+        ];
+        let mut state = 0x9e3779b97f4a7c15u64;
+        for _ in 0..4096 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = f32::from_bits((state >> 32) as u32);
+            if v.is_finite() {
+                vals.push(v);
+            }
+        }
+        while vals.len() % LANES != 0 {
+            vals.push(0.0);
+        }
+        for chunk in vals.chunks_exact(LANES) {
+            let mut v = [0.0f32; LANES];
+            v.copy_from_slice(chunk);
+            let mut got_bf = [Bf16::from_bits(0); LANES];
+            let mut got_f16 = [F16::from_bits(0); LANES];
+            unsafe {
+                let lanes = _mm256_loadu_ps(v.as_ptr());
+                Bf16::storev(got_bf.as_mut_ptr(), lanes);
+                F16::storev(got_f16.as_mut_ptr(), lanes);
+            }
+            for i in 0..LANES {
+                assert_eq!(
+                    got_bf[i].to_bits(),
+                    Bf16::from_f32(v[i]).to_bits(),
+                    "bf16 narrow of {:#010x}",
+                    v[i].to_bits()
+                );
+                assert_eq!(
+                    got_f16[i].to_bits(),
+                    F16::from_f32(v[i]).to_bits(),
+                    "f16 narrow of {:#010x}",
+                    v[i].to_bits()
+                );
+            }
+        }
+    }
+
+    /// Half-width AVX2 softmax against the f64 reference on the
+    /// quantized inputs (same bounds as the scalar kernels: widen is
+    /// exact, arithmetic is the f32 kernel, one narrowing on store).
+    #[test]
+    fn avx2_half_softmax_within_documented_bounds() {
+        if !have() {
+            return;
+        }
+        fn check<E: Avx2Elem>(n: usize, tol: f32) {
+            let raw = inputs(n);
+            let q: Vec<E> = raw.iter().map(|&v| E::from_f32(v)).collect();
+            let want = ref_softmax(&q.iter().map(|v| v.to_f32()).collect::<Vec<f32>>());
+            let mut y = vec![E::from_f32(0.0); n];
+            unsafe { softmax_twopass(&q, &mut y) };
+            for i in 0..n {
+                let got = y[i].to_f32();
+                assert!(
+                    (got - want[i]).abs() <= tol,
+                    "{:?} n={n} i={i}: got {got}, want {}",
+                    E::DTYPE,
+                    want[i]
+                );
+            }
+        }
+        for n in [9usize, 64, 1000, 4096] {
+            check::<Bf16>(n, 4e-3);
+            check::<F16>(n, 5e-4);
+        }
+    }
+
+    /// NT stores for half dtypes: 16-byte-aligned windows stream, any
+    /// other alignment falls back — outputs bit-identical either way.
+    #[test]
+    fn avx2_half_nt_stores_match_temporal() {
+        if !have() {
+            return;
+        }
+        let raw = inputs(1024 + 5);
+        let q: Vec<Bf16> = raw.iter().map(|&v| Bf16::from_f32(v)).collect();
+        let s = unsafe { pass_accum_extexp::<Bf16, 2>(&q) };
+        let mut want = vec![Bf16::from_bits(0); q.len()];
+        unsafe { pass_scale_extexp::<Bf16, 2>(&q, 1.0 / s.m, s.n, &mut want) };
+        let mut buf = vec![Bf16::from_bits(0); q.len() + 8];
+        let off = (16 - (buf.as_ptr() as usize % 16)) / 2 % 8;
+        unsafe {
+            pass_scale_extexp_nt::<Bf16, 2>(&q, 1.0 / s.m, s.n, &mut buf[off..off + q.len()]);
+            core::arch::x86_64::_mm_sfence();
+        }
+        for i in 0..q.len() {
+            assert_eq!(buf[off + i].to_bits(), want[i].to_bits(), "i={i}");
+        }
+        // Odd element offset → 2-byte alignment → temporal fallback.
+        let mut y2 = vec![Bf16::from_bits(0); q.len() + 1];
+        unsafe { pass_scale_extexp_nt::<Bf16, 2>(&q, 1.0 / s.m, s.n, &mut y2[1..]) };
+        for i in 0..q.len() {
+            assert_eq!(y2[1 + i].to_bits(), want[i].to_bits(), "unaligned i={i}");
+        }
+    }
+}

@@ -1,0 +1,815 @@
+//! AVX512F implementations of the three softmax algorithms (paper §6.3).
+//!
+//! Same structure as `avx2.rs` (16 lanes instead of 8), with the paper's
+//! AVX512-specific reconstruction: the `VSCALEFPS` instruction
+//! (`_mm512_scalef_ps`) computes `p·2^n` in one hardware operation with
+//! correct underflow/overflow semantics, replacing the integer
+//! exponent-manipulation trick — both in the `e^x` reconstruction and in
+//! the `(m, n)` accumulation rescaling of the Two-Pass algorithm.
+//!
+//! Every pass is generic over the storage [`Element`] via [`Avx512Elem`]:
+//! widen-on-load / narrow-on-store, all arithmetic in f32 lanes (bf16 by
+//! integer shift + round-to-nearest-even; f16 via two 256-bit F16C
+//! conversions per 512-bit vector — AVX512F has no own f16 converter
+//! short of AVX512-FP16).  For `E = f32` the monomorphized passes are the
+//! pre-generic kernels, bit-identical.
+//!
+//! # Safety
+//! Requires AVX512F+F16C at runtime; `dispatch.rs` guards selection with
+//! `is_x86_feature_detected!` for both.
+//!
+//! [`Element`]: super::element::Element
+
+#![cfg(target_arch = "x86_64")]
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use core::arch::x86_64::*;
+
+use super::element::{Bf16, Element, F16};
+use crate::softmax::exp::{
+    ExtSum, C1, C2, C3, C4, C5, DOMAIN_BOUND, EXTSUM_NEG_INIT, LN2_HI, LN2_LO, LOG2E,
+};
+
+const LANES: usize = 16;
+/// imm8 for `_mm512_roundscale_ps`: round to nearest-even, suppress
+/// exceptions (scale = 2^0, i.e. plain rounding).
+const RN: i32 = 0x08;
+/// Rounding imm8 for the 256-bit F16C narrowing converter.
+const PH_ROUND: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
+
+/// Range reduction + polynomial: `(p, n)` with `e^x ≈ p·2^n`.
+/// `pub(crate)`: the fused sampling kernels (`sampling::avx512`) reuse it.
+#[inline(always)]
+pub(crate) unsafe fn vexp_parts(x: __m512) -> (__m512, __m512) {
+    let x = _mm512_max_ps(x, _mm512_set1_ps(-DOMAIN_BOUND));
+    let x = _mm512_min_ps(x, _mm512_set1_ps(DOMAIN_BOUND));
+    let n = _mm512_roundscale_ps::<RN>(_mm512_mul_ps(x, _mm512_set1_ps(LOG2E)));
+    let t = _mm512_fnmadd_ps(n, _mm512_set1_ps(LN2_HI), x);
+    let t = _mm512_fnmadd_ps(n, _mm512_set1_ps(LN2_LO), t);
+    let p = _mm512_set1_ps(C5);
+    let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(C4));
+    let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(C3));
+    let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(C2));
+    let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(C1));
+    let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(1.0));
+    (p, n)
+}
+
+/// `e^x` via VSCALEFPS reconstruction (one instruction, handles flush).
+#[inline(always)]
+unsafe fn vexp(x: __m512) -> __m512 {
+    let (p, n) = vexp_parts(x);
+    _mm512_scalef_ps(p, n)
+}
+
+// ---------------------------------------------------------------------------
+// Element-width extension: widen-on-load / narrow-on-store per dtype.
+// ---------------------------------------------------------------------------
+
+/// Per-element AVX512 memory operations; same contract as
+/// [`Avx2Elem`](super::avx2::Avx2Elem) with 16 lanes: translation between
+/// storage and f32 lanes only, callable solely from the
+/// `avx512f,f16c`-enabled passes in this module.
+pub trait Avx512Elem: Element {
+    /// Byte alignment a pointer handed to `storev_nt` must satisfy.
+    const NT_ALIGN: usize;
+    /// Load 16 elements from `p`, widened to f32 lanes.
+    unsafe fn loadv(p: *const Self) -> __m512;
+    /// Narrow 16 f32 lanes (round-to-nearest-even) and store at `p`.
+    unsafe fn storev(p: *mut Self, v: __m512);
+    /// As `storev`, with a non-temporal (streaming) store; `p` must be
+    /// `NT_ALIGN`-aligned.
+    unsafe fn storev_nt(p: *mut Self, v: __m512);
+}
+
+impl Avx512Elem for f32 {
+    const NT_ALIGN: usize = 64;
+
+    #[inline(always)]
+    unsafe fn loadv(p: *const Self) -> __m512 {
+        _mm512_loadu_ps(p)
+    }
+
+    #[inline(always)]
+    unsafe fn storev(p: *mut Self, v: __m512) {
+        _mm512_storeu_ps(p, v)
+    }
+
+    #[inline(always)]
+    unsafe fn storev_nt(p: *mut Self, v: __m512) {
+        _mm512_stream_ps(p, v)
+    }
+}
+
+/// Narrow 16 f32 lanes to bf16 with round-to-nearest-even, quieting NaNs
+/// (the 512-bit form of the AVX2 helper; bit-identical per lane to
+/// [`Bf16::from_f32`]).  The final 32→16 truncation is `VPMOVDW`.
+#[inline(always)]
+unsafe fn bf16_narrow(v: __m512) -> __m256i {
+    let bits = _mm512_castps_si512(v);
+    let lsb = _mm512_and_si512(_mm512_srli_epi32::<16>(bits), _mm512_set1_epi32(1));
+    let rne = _mm512_add_epi32(_mm512_add_epi32(bits, _mm512_set1_epi32(0x7fff)), lsb);
+    let hi = _mm512_srli_epi32::<16>(rne);
+    let qnan = _mm512_or_si512(_mm512_srli_epi32::<16>(bits), _mm512_set1_epi32(0x0040));
+    let is_nan = _mm512_cmp_ps_mask::<_CMP_UNORD_Q>(v, v);
+    let hi = _mm512_mask_mov_epi32(hi, is_nan, qnan);
+    _mm512_cvtepi32_epi16(hi)
+}
+
+impl Avx512Elem for Bf16 {
+    const NT_ALIGN: usize = 32;
+
+    #[inline(always)]
+    unsafe fn loadv(p: *const Self) -> __m512 {
+        let raw = _mm256_loadu_si256(p as *const __m256i);
+        _mm512_castsi512_ps(_mm512_slli_epi32::<16>(_mm512_cvtepu16_epi32(raw)))
+    }
+
+    #[inline(always)]
+    unsafe fn storev(p: *mut Self, v: __m512) {
+        _mm256_storeu_si256(p as *mut __m256i, bf16_narrow(v));
+    }
+
+    #[inline(always)]
+    unsafe fn storev_nt(p: *mut Self, v: __m512) {
+        _mm256_stream_si256(p as *mut __m256i, bf16_narrow(v));
+    }
+}
+
+/// Narrow 16 f32 lanes to f16: split into 256-bit halves and run the F16C
+/// converter on each (AVX512F itself has no f16 conversion).
+#[inline(always)]
+unsafe fn f16_narrow(v: __m512) -> __m256i {
+    let lo = _mm512_castps512_ps256(v);
+    let hi = _mm256_castpd_ps(_mm512_extractf64x4_pd::<1>(_mm512_castps_pd(v)));
+    _mm256_set_m128i(_mm256_cvtps_ph::<PH_ROUND>(hi), _mm256_cvtps_ph::<PH_ROUND>(lo))
+}
+
+impl Avx512Elem for F16 {
+    const NT_ALIGN: usize = 32;
+
+    #[inline(always)]
+    unsafe fn loadv(p: *const Self) -> __m512 {
+        let raw = _mm256_loadu_si256(p as *const __m256i);
+        let lo = _mm256_cvtph_ps(_mm256_castsi256_si128(raw));
+        let hi = _mm256_cvtph_ps(_mm256_extracti128_si256::<1>(raw));
+        let v = _mm512_castps_pd(_mm512_castps256_ps512(lo));
+        _mm512_castpd_ps(_mm512_insertf64x4::<1>(v, _mm256_castps_pd(hi)))
+    }
+
+    #[inline(always)]
+    unsafe fn storev(p: *mut Self, v: __m512) {
+        _mm256_storeu_si256(p as *mut __m256i, f16_narrow(v));
+    }
+
+    #[inline(always)]
+    unsafe fn storev_nt(p: *mut Self, v: __m512) {
+        _mm256_stream_si256(p as *mut __m256i, f16_narrow(v));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Passes, generic over the element type and UNROLL.
+// ---------------------------------------------------------------------------
+
+#[target_feature(enable = "avx512f,f16c")]
+pub unsafe fn pass_max<E: Avx512Elem, const U: usize>(x: &[E]) -> f32 {
+    let mut acc = [_mm512_set1_ps(f32::MIN); U];
+    let stride = LANES * U;
+    let mut p = x.as_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            acc[k] = _mm512_max_ps(acc[k], E::loadv(p.add(k * LANES)));
+        }
+        p = p.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        acc[0] = _mm512_max_ps(acc[0], E::loadv(p));
+        p = p.add(LANES);
+        rem -= LANES;
+    }
+    let mut v = acc[0];
+    for k in 1..U {
+        v = _mm512_max_ps(v, acc[k]);
+    }
+    let mut m = _mm512_reduce_max_ps(v);
+    for i in 0..rem {
+        m = m.max((*p.add(i)).to_f32());
+    }
+    m
+}
+
+#[target_feature(enable = "avx512f,f16c")]
+pub unsafe fn pass_sumexp<E: Avx512Elem, const U: usize>(x: &[E], mu: f32) -> f32 {
+    let vmu = _mm512_set1_ps(mu);
+    let mut acc = [_mm512_setzero_ps(); U];
+    let stride = LANES * U;
+    let mut p = x.as_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let v = _mm512_sub_ps(E::loadv(p.add(k * LANES)), vmu);
+            acc[k] = _mm512_add_ps(acc[k], vexp(v));
+        }
+        p = p.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        acc[0] = _mm512_add_ps(acc[0], vexp(_mm512_sub_ps(E::loadv(p), vmu)));
+        p = p.add(LANES);
+        rem -= LANES;
+    }
+    let mut v = acc[0];
+    for k in 1..U {
+        v = _mm512_add_ps(v, acc[k]);
+    }
+    let mut s = _mm512_reduce_add_ps(v);
+    for i in 0..rem {
+        s += crate::softmax::exp::exp((*p.add(i)).to_f32() - mu);
+    }
+    s
+}
+
+#[target_feature(enable = "avx512f,f16c")]
+pub unsafe fn pass_storeexp<E: Avx512Elem, const U: usize>(x: &[E], mu: f32, y: &mut [E]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let vmu = _mm512_set1_ps(mu);
+    let mut acc = [_mm512_setzero_ps(); U];
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let e = vexp(_mm512_sub_ps(E::loadv(px.add(k * LANES)), vmu));
+            E::storev(py.add(k * LANES), e);
+            acc[k] = _mm512_add_ps(acc[k], e);
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let e = vexp(_mm512_sub_ps(E::loadv(px), vmu));
+        E::storev(py, e);
+        acc[0] = _mm512_add_ps(acc[0], e);
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    let mut v = acc[0];
+    for k in 1..U {
+        v = _mm512_add_ps(v, acc[k]);
+    }
+    // Sum of the pre-narrowing f32 values; narrowing is storage-only.
+    let mut s = _mm512_reduce_add_ps(v);
+    for i in 0..rem {
+        let e = crate::softmax::exp::exp((*px.add(i)).to_f32() - mu);
+        *py.add(i) = E::from_f32(e);
+        s += e;
+    }
+    s
+}
+
+#[target_feature(enable = "avx512f,f16c")]
+pub unsafe fn pass_scaleexp<E: Avx512Elem, const U: usize>(x: &[E], mu: f32, lam: f32, y: &mut [E]) {
+    debug_assert_eq!(x.len(), y.len());
+    let vmu = _mm512_set1_ps(mu);
+    let vlam = _mm512_set1_ps(lam);
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let e = vexp(_mm512_sub_ps(E::loadv(px.add(k * LANES)), vmu));
+            E::storev(py.add(k * LANES), _mm512_mul_ps(e, vlam));
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let e = vexp(_mm512_sub_ps(E::loadv(px), vmu));
+        E::storev(py, _mm512_mul_ps(e, vlam));
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        *py.add(i) = E::from_f32(lam * crate::softmax::exp::exp((*px.add(i)).to_f32() - mu));
+    }
+}
+
+#[target_feature(enable = "avx512f,f16c")]
+pub unsafe fn pass_scale_inplace<E: Avx512Elem, const U: usize>(y: &mut [E], lam: f32) {
+    let vlam = _mm512_set1_ps(lam);
+    let stride = LANES * U;
+    let mut p = y.as_mut_ptr();
+    let mut rem = y.len();
+    while rem >= stride {
+        for k in 0..U {
+            let v = _mm512_mul_ps(E::loadv(p.add(k * LANES)), vlam);
+            E::storev(p.add(k * LANES), v);
+        }
+        p = p.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        E::storev(p, _mm512_mul_ps(E::loadv(p), vlam));
+        p = p.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        let v = (*p.add(i)).to_f32() * lam;
+        *p.add(i) = E::from_f32(v);
+    }
+}
+
+/// Fold one `(p, n)` vector into the `(m, n)` accumulator pair; the
+/// rescales use VSCALEFPS directly (shift ≤ 0 ⇒ pure downscale, no clamp
+/// logic needed — hardware flushes to zero exactly like the paper wants).
+/// `pub(crate)`: the fused sampling kernels (`sampling::avx512`) reuse it.
+#[inline(always)]
+pub(crate) unsafe fn accum_step(vm: &mut __m512, vn: &mut __m512, p: __m512, n: __m512) {
+    let n_max = _mm512_max_ps(*vn, n);
+    let scaled_new = _mm512_scalef_ps(p, _mm512_sub_ps(n, n_max));
+    let scaled_acc = _mm512_scalef_ps(*vm, _mm512_sub_ps(*vn, n_max));
+    *vm = _mm512_add_ps(scaled_new, scaled_acc);
+    *vn = n_max;
+}
+
+#[target_feature(enable = "avx512f,f16c")]
+pub unsafe fn pass_accum_extexp<E: Avx512Elem, const U: usize>(x: &[E]) -> ExtSum {
+    let mut vm = [_mm512_setzero_ps(); U];
+    let mut vn = [_mm512_set1_ps(EXTSUM_NEG_INIT); U];
+    let stride = LANES * U;
+    let mut p = x.as_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let (pe, ne) = vexp_parts(E::loadv(p.add(k * LANES)));
+            accum_step(&mut vm[k], &mut vn[k], pe, ne);
+        }
+        p = p.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let (pe, ne) = vexp_parts(E::loadv(p));
+        accum_step(&mut vm[0], &mut vn[0], pe, ne);
+        p = p.add(LANES);
+        rem -= LANES;
+    }
+    let mut s = ExtSum::default();
+    for k in 0..U {
+        let mut ms = [0.0f32; LANES];
+        let mut ns = [0.0f32; LANES];
+        _mm512_storeu_ps(ms.as_mut_ptr(), vm[k]);
+        _mm512_storeu_ps(ns.as_mut_ptr(), vn[k]);
+        for l in 0..LANES {
+            s.add_pair(ms[l], ns[l]);
+        }
+    }
+    for i in 0..rem {
+        s.add_exp((*p.add(i)).to_f32());
+    }
+    s
+}
+
+#[target_feature(enable = "avx512f,f16c")]
+pub unsafe fn pass_scale_extexp<E: Avx512Elem, const U: usize>(
+    x: &[E],
+    lam: f32,
+    n_sum: f32,
+    y: &mut [E],
+) {
+    debug_assert_eq!(x.len(), y.len());
+    let vlam = _mm512_set1_ps(lam);
+    let vns = _mm512_set1_ps(n_sum);
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let (pe, ne) = vexp_parts(E::loadv(px.add(k * LANES)));
+            let v = _mm512_scalef_ps(_mm512_mul_ps(pe, vlam), _mm512_sub_ps(ne, vns));
+            E::storev(py.add(k * LANES), v);
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let (pe, ne) = vexp_parts(E::loadv(px));
+        let v = _mm512_scalef_ps(_mm512_mul_ps(pe, vlam), _mm512_sub_ps(ne, vns));
+        E::storev(py, v);
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        let (m_i, n_i) = crate::softmax::exp::extexp((*px.add(i)).to_f32());
+        *py.add(i) = E::from_f32(m_i * lam * crate::softmax::exp::exp2i(n_i - n_sum));
+    }
+}
+
+/// Pass 2 of the Two-Pass algorithm with non-temporal stores
+/// (`VMOVNTPS` for f32, `VMOVNTDQ` on the narrowed vector for the half
+/// dtypes). Out of cache the output is written exactly once and never
+/// re-read, so bypassing the write-allocate RFO cuts the pass's true
+/// traffic from 3 transfers (read x + RFO y + write y) to 2.  Requires
+/// `E::NT_ALIGN`-byte alignment of `y` (guaranteed from a
+/// [`RowBatch`](crate::softmax::batch::RowBatch) start); falls back to
+/// the regular pass otherwise.  Lane grouping matches
+/// [`pass_scale_extexp`] exactly, so outputs are bit-identical.  Callers
+/// must execute `SFENCE` before publishing `y` to other threads — the
+/// batched engine, which selects this pass for out-of-cache batches,
+/// fences at block end.
+#[target_feature(enable = "avx512f,f16c")]
+pub unsafe fn pass_scale_extexp_nt<E: Avx512Elem, const U: usize>(
+    x: &[E],
+    lam: f32,
+    n_sum: f32,
+    y: &mut [E],
+) {
+    debug_assert_eq!(x.len(), y.len());
+    if y.as_ptr() as usize % E::NT_ALIGN != 0 {
+        return pass_scale_extexp::<E, U>(x, lam, n_sum, y);
+    }
+    let vlam = _mm512_set1_ps(lam);
+    let vns = _mm512_set1_ps(n_sum);
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let (pe, ne) = vexp_parts(E::loadv(px.add(k * LANES)));
+            let v = _mm512_scalef_ps(_mm512_mul_ps(pe, vlam), _mm512_sub_ps(ne, vns));
+            E::storev_nt(py.add(k * LANES), v);
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let (pe, ne) = vexp_parts(E::loadv(px));
+        let v = _mm512_scalef_ps(_mm512_mul_ps(pe, vlam), _mm512_sub_ps(ne, vns));
+        E::storev(py, v);
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        let (m_i, n_i) = crate::softmax::exp::extexp((*px.add(i)).to_f32());
+        *py.add(i) = E::from_f32(m_i * lam * crate::softmax::exp::exp2i(n_i - n_sum));
+    }
+}
+
+/// Pass 3 of Alg. 1 (recompute) with non-temporal stores; same contract
+/// as [`pass_scale_extexp_nt`] (`E::NT_ALIGN`-aligned `y` or temporal
+/// fallback, bit-identical outputs, caller-side `SFENCE` before
+/// publication).
+#[target_feature(enable = "avx512f,f16c")]
+pub unsafe fn pass_scaleexp_nt<E: Avx512Elem, const U: usize>(
+    x: &[E],
+    mu: f32,
+    lam: f32,
+    y: &mut [E],
+) {
+    debug_assert_eq!(x.len(), y.len());
+    if y.as_ptr() as usize % E::NT_ALIGN != 0 {
+        return pass_scaleexp::<E, U>(x, mu, lam, y);
+    }
+    let vmu = _mm512_set1_ps(mu);
+    let vlam = _mm512_set1_ps(lam);
+    let stride = LANES * U;
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let e = vexp(_mm512_sub_ps(E::loadv(px.add(k * LANES)), vmu));
+            E::storev_nt(py.add(k * LANES), _mm512_mul_ps(e, vlam));
+        }
+        px = px.add(stride);
+        py = py.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let e = vexp(_mm512_sub_ps(E::loadv(px), vmu));
+        E::storev_nt(py, _mm512_mul_ps(e, vlam));
+        px = px.add(LANES);
+        py = py.add(LANES);
+        rem -= LANES;
+    }
+    for i in 0..rem {
+        *py.add(i) = E::from_f32(lam * crate::softmax::exp::exp((*px.add(i)).to_f32() - mu));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full algorithms with the default (tuned) unroll factors.
+// ---------------------------------------------------------------------------
+
+/// Paper Algorithm 1, AVX512. 3 reads + 1 write.
+#[target_feature(enable = "avx512f,f16c")]
+pub unsafe fn softmax_threepass_recompute<E: Avx512Elem>(x: &[E], y: &mut [E]) {
+    let mu = pass_max::<E, 4>(x);
+    let sigma = pass_sumexp::<E, 8>(x, mu);
+    pass_scaleexp::<E, 8>(x, mu, 1.0 / sigma, y);
+}
+
+/// Paper Algorithm 2, AVX512. 3 reads + 2 writes.
+#[target_feature(enable = "avx512f,f16c")]
+pub unsafe fn softmax_threepass_reload<E: Avx512Elem>(x: &[E], y: &mut [E]) {
+    let mu = pass_max::<E, 4>(x);
+    let sigma = pass_storeexp::<E, 2>(x, mu, y);
+    pass_scale_inplace::<E, 8>(y, 1.0 / sigma);
+}
+
+/// Paper Algorithm 3 (the contribution), AVX512. 2 reads + 1 write.
+#[target_feature(enable = "avx512f,f16c")]
+pub unsafe fn softmax_twopass<E: Avx512Elem>(x: &[E], y: &mut [E]) {
+    let s = pass_accum_extexp::<E, 8>(x);
+    pass_scale_extexp::<E, 8>(x, 1.0 / s.m, s.n, y);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have() -> bool {
+        is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("f16c")
+    }
+
+    fn ref_softmax(x: &[f32]) -> Vec<f32> {
+        let mu = x.iter().cloned().fold(f64::MIN, |a, v| a.max(v as f64));
+        let e: Vec<f64> = x.iter().map(|&v| ((v as f64) - mu).exp()).collect();
+        let s: f64 = e.iter().sum();
+        e.iter().map(|&v| (v / s) as f32).collect()
+    }
+
+    fn inputs(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (((i * 2654435761) % 2000) as f32) / 100.0 - 10.0).collect()
+    }
+
+    #[test]
+    fn avx512_algorithms_match_reference() {
+        if !have() {
+            return;
+        }
+        for n in [1usize, 15, 16, 17, 31, 64, 100, 1000, 4096, 10_007] {
+            let x = inputs(n);
+            let want = ref_softmax(&x);
+            for (name, f) in [
+                ("recompute", softmax_threepass_recompute as unsafe fn(&[f32], &mut [f32])),
+                ("reload", softmax_threepass_reload),
+                ("twopass", softmax_twopass),
+            ] {
+                let mut y = vec![0.0f32; n];
+                unsafe { f(&x, &mut y) };
+                for i in 0..n {
+                    assert!(
+                        (y[i] - want[i]).abs() < 1e-6,
+                        "{name} n={n} i={i}: {} vs {}",
+                        y[i],
+                        want[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn avx512_matches_avx2_bitwise_on_vector_body() {
+        if !have() || !is_x86_feature_detected!("avx2") || !is_x86_feature_detected!("fma") {
+            return;
+        }
+        // Same constants, same polynomial: the scalef path and the integer
+        // path must agree to the last bit for in-range exponents.
+        let x = inputs(4096);
+        let mut y512 = vec![0.0f32; 4096];
+        let mut y256 = vec![0.0f32; 4096];
+        unsafe {
+            softmax_twopass(&x, &mut y512);
+            crate::softmax::avx2::softmax_twopass(&x, &mut y256);
+        }
+        for i in 0..4096 {
+            assert_eq!(y512[i].to_bits(), y256[i].to_bits(), "i={i}");
+        }
+    }
+
+    /// Cross-ISA bit-identity holds per dtype, not just for f32: the
+    /// widen steps are exact and identical, the f32 arithmetic agrees to
+    /// the last bit (test above), and both ISAs narrow with the same
+    /// round-to-nearest-even.
+    #[test]
+    fn avx512_matches_avx2_bitwise_per_half_dtype() {
+        if !have() || !is_x86_feature_detected!("avx2") || !is_x86_feature_detected!("fma") {
+            return;
+        }
+        fn check<E>()
+        where
+            E: Avx512Elem + super::super::avx2::Avx2Elem,
+        {
+            let x: Vec<E> = inputs(4096).iter().map(|&v| E::from_f32(v)).collect();
+            let mut y512 = vec![E::from_f32(0.0); 4096];
+            let mut y256 = vec![E::from_f32(0.0); 4096];
+            unsafe {
+                softmax_twopass(&x, &mut y512);
+                super::super::avx2::softmax_twopass(&x, &mut y256);
+            }
+            for i in 0..4096 {
+                assert_eq!(
+                    y512[i].to_f32().to_bits(),
+                    y256[i].to_f32().to_bits(),
+                    "{:?} i={i}",
+                    E::DTYPE
+                );
+            }
+        }
+        check::<Bf16>();
+        check::<F16>();
+    }
+
+    #[test]
+    fn avx512_unroll_variants_agree() {
+        if !have() {
+            return;
+        }
+        let x = inputs(4099);
+        let m1 = unsafe { pass_max::<f32, 1>(&x) };
+        let m8 = unsafe { pass_max::<f32, 8>(&x) };
+        assert_eq!(m1, m8);
+        let a1 = unsafe { pass_accum_extexp::<f32, 1>(&x) };
+        let a4 = unsafe { pass_accum_extexp::<f32, 4>(&x) };
+        assert!((a1.ln() - a4.ln()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn nt_scale_passes_match_regular() {
+        if !have() {
+            return;
+        }
+        let x = inputs(4096 + 7);
+        let s = unsafe { pass_accum_extexp::<f32, 2>(&x) };
+        let mu = unsafe { pass_max::<f32, 4>(&x) };
+        // 64-byte-aligned output buffer.
+        let mut buf = vec![0.0f32; x.len() + 16];
+        let off = (64 - (buf.as_ptr() as usize % 64) % 64) / 4 % 16;
+        let mut want = vec![0.0f32; x.len()];
+        unsafe {
+            pass_scale_extexp::<f32, 2>(&x, 1.0 / s.m, s.n, &mut want);
+            let y = &mut buf[off..off + x.len()];
+            pass_scale_extexp_nt::<f32, 2>(&x, 1.0 / s.m, s.n, y);
+            _mm_sfence();
+            for i in 0..x.len() {
+                assert_eq!(y[i].to_bits(), want[i].to_bits(), "i={i}");
+            }
+        }
+        unsafe {
+            pass_scaleexp::<f32, 2>(&x, mu, 0.25, &mut want);
+            let y = &mut buf[off..off + x.len()];
+            pass_scaleexp_nt::<f32, 2>(&x, mu, 0.25, y);
+            _mm_sfence();
+            for i in 0..x.len() {
+                assert_eq!(y[i].to_bits(), want[i].to_bits(), "scaleexp i={i}");
+            }
+        }
+        // Unaligned output takes the fallback path and still matches.
+        unsafe { pass_scale_extexp::<f32, 2>(&x, 1.0 / s.m, s.n, &mut want) };
+        let mut y2 = vec![0.0f32; x.len() + 1];
+        unsafe { pass_scale_extexp_nt::<f32, 2>(&x, 1.0 / s.m, s.n, &mut y2[1..]) };
+        for i in 0..x.len() {
+            assert_eq!(y2[1 + i].to_bits(), want[i].to_bits(), "unaligned i={i}");
+        }
+    }
+
+    /// Half-dtype NT stores: aligned windows stream through `VMOVNTDQ`,
+    /// unaligned fall back — bit-identical either way.
+    #[test]
+    fn avx512_half_nt_stores_match_regular() {
+        if !have() {
+            return;
+        }
+        let raw = inputs(2048 + 9);
+        let q: Vec<F16> = raw.iter().map(|&v| F16::from_f32(v)).collect();
+        let s = unsafe { pass_accum_extexp::<F16, 2>(&q) };
+        let mut want = vec![F16::from_bits(0); q.len()];
+        unsafe { pass_scale_extexp::<F16, 2>(&q, 1.0 / s.m, s.n, &mut want) };
+        let mut buf = vec![F16::from_bits(0); q.len() + 16];
+        let off = (32 - (buf.as_ptr() as usize % 32)) / 2 % 16;
+        unsafe {
+            pass_scale_extexp_nt::<F16, 2>(&q, 1.0 / s.m, s.n, &mut buf[off..off + q.len()]);
+            _mm_sfence();
+        }
+        for i in 0..q.len() {
+            assert_eq!(buf[off + i].to_bits(), want[i].to_bits(), "i={i}");
+        }
+        let mut y2 = vec![F16::from_bits(0); q.len() + 1];
+        unsafe { pass_scale_extexp_nt::<F16, 2>(&q, 1.0 / s.m, s.n, &mut y2[1..]) };
+        for i in 0..q.len() {
+            assert_eq!(y2[1 + i].to_bits(), want[i].to_bits(), "unaligned i={i}");
+        }
+    }
+
+    /// The 512-bit widen/narrow helpers must agree bit-for-bit with the
+    /// scalar `Element` conversions (NaNs included) — they share lanes
+    /// with the scalar tail of every pass.
+    #[test]
+    fn avx512_conversions_match_scalar() {
+        if !have() {
+            return;
+        }
+        let mut batch = [0u16; LANES];
+        for base in (0..=u16::MAX as usize).step_by(LANES) {
+            for (i, b) in batch.iter_mut().enumerate() {
+                *b = (base + i) as u16;
+            }
+            let bf: [Bf16; LANES] = batch.map(Bf16::from_bits);
+            let fh: [F16; LANES] = batch.map(F16::from_bits);
+            let mut got = [0.0f32; LANES];
+            unsafe {
+                _mm512_storeu_ps(got.as_mut_ptr(), <Bf16 as Avx512Elem>::loadv(bf.as_ptr()));
+            }
+            for i in 0..LANES {
+                assert_eq!(got[i].to_bits(), bf[i].to_f32().to_bits(), "bf16 {:#06x}", batch[i]);
+            }
+            unsafe {
+                _mm512_storeu_ps(got.as_mut_ptr(), <F16 as Avx512Elem>::loadv(fh.as_ptr()));
+            }
+            for i in 0..LANES {
+                assert_eq!(got[i].to_bits(), fh[i].to_f32().to_bits(), "f16 {:#06x}", batch[i]);
+            }
+        }
+        // Narrow on a value sweep incl. specials.
+        let mut vals: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            65504.0,
+            65520.0,
+            1e30,
+            6.0e-8,
+            2.0e-8,
+            1e-40,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::from_bits(0x3f80_4000),
+            f32::from_bits(0x3f81_8000),
+        ];
+        let mut state = 0x243f6a8885a308d3u64;
+        for _ in 0..4096 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = f32::from_bits((state >> 32) as u32);
+            if v.is_finite() {
+                vals.push(v);
+            }
+        }
+        while vals.len() % LANES != 0 {
+            vals.push(0.0);
+        }
+        for chunk in vals.chunks_exact(LANES) {
+            let mut v = [0.0f32; LANES];
+            v.copy_from_slice(chunk);
+            let mut got_bf = [Bf16::from_bits(0); LANES];
+            let mut got_f16 = [F16::from_bits(0); LANES];
+            unsafe {
+                let lanes = _mm512_loadu_ps(v.as_ptr());
+                <Bf16 as Avx512Elem>::storev(got_bf.as_mut_ptr(), lanes);
+                <F16 as Avx512Elem>::storev(got_f16.as_mut_ptr(), lanes);
+            }
+            for i in 0..LANES {
+                assert_eq!(
+                    got_bf[i].to_bits(),
+                    Bf16::from_f32(v[i]).to_bits(),
+                    "bf16 narrow of {:#010x}",
+                    v[i].to_bits()
+                );
+                assert_eq!(
+                    got_f16[i].to_bits(),
+                    F16::from_f32(v[i]).to_bits(),
+                    "f16 narrow of {:#010x}",
+                    v[i].to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn avx512_twopass_handles_overflow_range() {
+        if !have() {
+            return;
+        }
+        let x = vec![95.0f32; 513];
+        let mut y = vec![0.0f32; 513];
+        unsafe { softmax_twopass(&x, &mut y) };
+        for &v in &y {
+            assert!((v - 1.0 / 513.0).abs() < 1e-8, "{v}");
+        }
+    }
+}

@@ -1,0 +1,387 @@
+//! Element types for the kernel layer: `f32` plus the two half-width
+//! logit formats, `Bf16` and `F16`.
+//!
+//! The kernels never do arithmetic in half precision. Every pass widens
+//! elements to `f32` on load and (for passes that write element output)
+//! narrows back on store; accumulators — µ, σ, and the `(m, n)`
+//! extended-exponent sums — stay `f32` for every dtype. The conversions
+//! here are hand-written (no external crate) and bit-match the x86
+//! hardware converters so the scalar tails of the SIMD passes agree with
+//! the vector bodies:
+//!
+//! * `F16` widen/narrow match `VCVTPH2PS` / `VCVTPS2PH` with
+//!   round-to-nearest-even, including SNaN quieting on widen.
+//! * `Bf16` narrowing uses round-to-nearest-even on the high 16 bits of
+//!   the `f32` representation (the same rounding Intel's `VCVTNEPS2BF16`
+//!   performs), quieting NaNs; widening is exact (low 16 bits zeroed).
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Element type of a logit buffer. Storage-level property: every kernel
+/// widens to `f32` for arithmetic regardless of dtype.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum Dtype {
+    /// 4-byte IEEE-754 single precision (the seed format).
+    #[default]
+    F32,
+    /// 2-byte bfloat16: f32's exponent range, 8 significand bits.
+    Bf16,
+    /// 2-byte IEEE-754 half precision: 5 exponent / 11 significand bits.
+    F16,
+}
+
+impl Dtype {
+    /// All supported dtypes, in declaration order.
+    pub const ALL: [Dtype; 3] = [Dtype::F32, Dtype::Bf16, Dtype::F16];
+
+    /// Element width in bytes.
+    #[inline]
+    pub const fn size(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::Bf16 | Dtype::F16 => 2,
+        }
+    }
+}
+
+impl fmt::Display for Dtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Dtype::F32 => "f32",
+            Dtype::Bf16 => "bf16",
+            Dtype::F16 => "f16",
+        })
+    }
+}
+
+impl FromStr for Dtype {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "f32" | "fp32" | "float32" => Ok(Dtype::F32),
+            "bf16" | "bfloat16" => Ok(Dtype::Bf16),
+            "f16" | "fp16" | "float16" | "half" => Ok(Dtype::F16),
+            other => Err(format!("unknown dtype '{other}' (expected f32, bf16, or f16)")),
+        }
+    }
+}
+
+/// A storable logit element. Kernels are generic over this: the only
+/// operations an element must support are scalar widen/narrow (the SIMD
+/// equivalents live on the per-ISA extension traits in `avx2.rs` /
+/// `avx512.rs`).
+pub trait Element: Copy + Send + Sync + 'static {
+    /// The dtype tag matching this type.
+    const DTYPE: Dtype;
+
+    /// Widen to `f32` (exact for `f32` and `Bf16`; `F16` widening is
+    /// also exact — every f16 value is representable in f32).
+    fn to_f32(self) -> f32;
+
+    /// Narrow from `f32` with round-to-nearest-even.
+    fn from_f32(x: f32) -> Self;
+}
+
+impl Element for f32 {
+    const DTYPE: Dtype = Dtype::F32;
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        self
+    }
+
+    #[inline(always)]
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+}
+
+/// bfloat16 storage: the high 16 bits of an `f32`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    /// Reinterpret raw storage bits.
+    #[inline(always)]
+    pub const fn from_bits(bits: u16) -> Self {
+        Bf16(bits)
+    }
+
+    /// Raw storage bits.
+    #[inline(always)]
+    pub const fn to_bits(self) -> u16 {
+        self.0
+    }
+}
+
+impl Element for Bf16 {
+    const DTYPE: Dtype = Dtype::Bf16;
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    #[inline(always)]
+    fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // Truncate and force a quiet bit so the payload stays a NaN.
+            Bf16(((bits >> 16) as u16) | 0x0040)
+        } else {
+            // Round-to-nearest-even on bit 16: add 0x7fff plus the LSB
+            // of the surviving mantissa. Carry into the exponent (and
+            // into infinity) is the correct RNE behaviour.
+            let rounded = bits.wrapping_add(0x7fff + ((bits >> 16) & 1));
+            Bf16((rounded >> 16) as u16)
+        }
+    }
+}
+
+/// IEEE-754 binary16 storage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct F16(pub u16);
+
+impl F16 {
+    /// Reinterpret raw storage bits.
+    #[inline(always)]
+    pub const fn from_bits(bits: u16) -> Self {
+        F16(bits)
+    }
+
+    /// Raw storage bits.
+    #[inline(always)]
+    pub const fn to_bits(self) -> u16 {
+        self.0
+    }
+}
+
+impl Element for F16 {
+    const DTYPE: Dtype = Dtype::F16;
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        let h = self.0 as u32;
+        let sign = (h & 0x8000) << 16;
+        let exp = (h >> 10) & 0x1f;
+        let man = h & 0x03ff;
+        let bits = if exp == 0x1f {
+            // Inf / NaN. Hardware (VCVTPH2PS) quiets signalling NaNs.
+            sign | 0x7f80_0000 | (man << 13) | if man != 0 { 0x0040_0000 } else { 0 }
+        } else if exp == 0 {
+            if man == 0 {
+                sign // signed zero
+            } else {
+                // Subnormal: normalize. man has 22..=31 leading zeros,
+                // so the shift renormalizes the hidden bit into place.
+                let lz = man.leading_zeros();
+                let m32 = (man << (lz - 8)) & 0x007f_ffff;
+                let e32 = 134 - lz;
+                sign | (e32 << 23) | m32
+            }
+        } else {
+            // Normal: rebias 15 -> 127, widen the mantissa.
+            sign | ((exp + 112) << 23) | (man << 13)
+        };
+        f32::from_bits(bits)
+    }
+
+    #[inline(always)]
+    fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = (bits >> 23) & 0xff;
+        let man = bits & 0x007f_ffff;
+        if exp == 0xff {
+            // Inf / NaN; quiet the NaN and keep the payload head.
+            let h = if man == 0 { 0 } else { 0x0200 | (man >> 13) as u16 };
+            return F16(sign | 0x7c00 | h);
+        }
+        let e = exp as i32 - 127;
+        if e > 15 {
+            return F16(sign | 0x7c00); // overflow -> inf
+        }
+        if e >= -14 {
+            // Normal range: keep 10 mantissa bits, RNE on the rest.
+            let mut h = (((e + 15) as u32) << 10) | (man >> 13);
+            let rem = man & 0x1fff;
+            if rem > 0x1000 || (rem == 0x1000 && (man >> 13) & 1 == 1) {
+                h += 1; // carry into the exponent (or inf) is correct RNE
+            }
+            return F16(sign | h as u16);
+        }
+        if e >= -25 {
+            // Subnormal result: shift the full significand (hidden bit
+            // restored) right and round to nearest even.
+            let full = 0x0080_0000 | man;
+            let s = (-e - 1) as u32; // 14..=24
+            let mut h = full >> s;
+            let rem = full & ((1u32 << s) - 1);
+            let half = 1u32 << (s - 1);
+            if rem > half || (rem == half && h & 1 == 1) {
+                h += 1;
+            }
+            return F16(sign | h as u16);
+        }
+        F16(sign) // underflow to signed zero
+    }
+}
+
+/// Dispatch a block of code over a runtime [`Dtype`], binding the chosen
+/// element type as `$E`. This is the single bridge between dynamically
+/// typed buffers (`RowBatch`, pool jobs, request payloads) and the
+/// statically typed kernels.
+#[macro_export]
+macro_rules! with_elem {
+    ($dtype:expr, $E:ident, $body:block) => {
+        match $dtype {
+            $crate::softmax::kernels::Dtype::F32 => {
+                type $E = f32;
+                $body
+            }
+            $crate::softmax::kernels::Dtype::Bf16 => {
+                type $E = $crate::softmax::kernels::Bf16;
+                $body
+            }
+            $crate::softmax::kernels::Dtype::F16 => {
+                type $E = $crate::softmax::kernels::F16;
+                $body
+            }
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference f16 -> f32 via a table-free independent path: decompose
+    /// arithmetically with `powi`, no bit tricks shared with the impl.
+    fn f16_widen_ref(h: u16) -> f32 {
+        let sign = if h & 0x8000 != 0 { -1.0f64 } else { 1.0 };
+        let exp = ((h >> 10) & 0x1f) as i32;
+        let man = (h & 0x3ff) as f64;
+        let v = if exp == 0x1f {
+            if man == 0.0 {
+                f64::INFINITY
+            } else {
+                f64::NAN
+            }
+        } else if exp == 0 {
+            man * 2f64.powi(-24)
+        } else {
+            (1.0 + man / 1024.0) * 2f64.powi(exp - 15)
+        };
+        (sign * v) as f32
+    }
+
+    #[test]
+    fn f16_widen_matches_reference_exhaustively() {
+        for bits in 0..=u16::MAX {
+            let got = F16::from_bits(bits).to_f32();
+            let want = f16_widen_ref(bits);
+            if want.is_nan() {
+                assert!(got.is_nan(), "{bits:#06x}: got {got}, want NaN");
+            } else {
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "{bits:#06x}: got {got}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f16_narrow_widen_roundtrips_exhaustively() {
+        // Every finite f16 value is exactly representable in f32, so
+        // widen -> narrow must return the original bits (NaNs keep the
+        // quiet bit but stay NaN).
+        for bits in 0..=u16::MAX {
+            let wide = F16::from_bits(bits).to_f32();
+            let back = F16::from_f32(wide);
+            if wide.is_nan() {
+                assert_eq!(back.0 & 0x7c00, 0x7c00, "{bits:#06x}");
+                assert_ne!(back.0 & 0x03ff, 0, "{bits:#06x}");
+            } else {
+                // Widen quiets nothing for non-NaN; exact round-trip.
+                assert_eq!(back.0, bits, "{bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_widen_narrow_roundtrips_exhaustively() {
+        for bits in 0..=u16::MAX {
+            let wide = Bf16::from_bits(bits).to_f32();
+            let back = Bf16::from_f32(wide);
+            if wide.is_nan() {
+                assert_eq!(back.0 & 0x7f80, 0x7f80, "{bits:#06x}");
+                assert_ne!(back.0 & 0x007f, 0, "{bits:#06x}");
+            } else {
+                assert_eq!(back.0, bits, "{bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_narrowing_rounds_to_nearest_even() {
+        // 1.0 + 2^-9 is exactly halfway between bf16(1.0) and the next
+        // value up; RNE keeps the even mantissa (1.0).
+        let halfway = f32::from_bits(0x3f80_4000);
+        assert_eq!(Bf16::from_f32(halfway).0, 0x3f80);
+        // Just above halfway rounds up.
+        let above = f32::from_bits(0x3f80_4001);
+        assert_eq!(Bf16::from_f32(above).0, 0x3f81);
+        // Odd mantissa at halfway rounds up to even.
+        let odd_half = f32::from_bits(0x3f81_8000);
+        assert_eq!(Bf16::from_f32(odd_half).0, 0x3f82);
+        // Overflow saturates into infinity via the exponent carry.
+        assert_eq!(Bf16::from_f32(f32::MAX).0, 0x7f80);
+        assert_eq!(Bf16::from_f32(f32::INFINITY).0, 0x7f80);
+        assert_eq!(Bf16::from_f32(f32::NEG_INFINITY).0, 0xff80);
+    }
+
+    #[test]
+    fn f16_narrowing_edge_cases() {
+        assert_eq!(F16::from_f32(0.0).0, 0x0000);
+        assert_eq!(F16::from_f32(-0.0).0, 0x8000);
+        assert_eq!(F16::from_f32(1.0).0, 0x3c00);
+        assert_eq!(F16::from_f32(-2.0).0, 0xc000);
+        assert_eq!(F16::from_f32(65504.0).0, 0x7bff); // f16::MAX
+        assert_eq!(F16::from_f32(65520.0).0, 0x7c00); // rounds to inf
+        assert_eq!(F16::from_f32(f32::INFINITY).0, 0x7c00);
+        assert_eq!(F16::from_f32(6.0e-8).0, 0x0001); // smallest subnormal
+        assert_eq!(F16::from_f32(2.0e-8).0, 0x0000); // below half-ulp -> 0
+        assert_eq!(F16::from_f32(-6.104e-5).0, 0x8400); // -f16 min normal
+        let q = F16::from_f32(f32::NAN);
+        assert_eq!(q.0 & 0x7c00, 0x7c00);
+        assert_ne!(q.0 & 0x03ff, 0);
+    }
+
+    #[test]
+    fn dtype_size_display_parse() {
+        assert_eq!(Dtype::F32.size(), 4);
+        assert_eq!(Dtype::Bf16.size(), 2);
+        assert_eq!(Dtype::F16.size(), 2);
+        for d in Dtype::ALL {
+            assert_eq!(d.to_string().parse::<Dtype>().unwrap(), d);
+        }
+        assert_eq!("bfloat16".parse::<Dtype>().unwrap(), Dtype::Bf16);
+        assert_eq!("half".parse::<Dtype>().unwrap(), Dtype::F16);
+        assert!("f64".parse::<Dtype>().is_err());
+        assert_eq!(Dtype::default(), Dtype::F32);
+    }
+
+    #[test]
+    fn with_elem_binds_the_matching_type() {
+        for d in Dtype::ALL {
+            let got = with_elem!(d, E, { E::DTYPE });
+            assert_eq!(got, d);
+        }
+    }
+}

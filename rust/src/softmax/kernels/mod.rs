@@ -1,0 +1,321 @@
+//! The trait-generic kernel layer: every per-ISA softmax pass lives in
+//! this directory and nowhere else (CI greps for strays).
+//!
+//! Two orthogonal axes instantiate each pass:
+//!
+//! * **Element type** ([`Element`]: `f32`, [`Bf16`], [`F16`]) — storage
+//!   only.  Kernels widen to f32 lanes on load and narrow on store
+//!   (vectorized on the SIMD paths via the [`Avx2Elem`] / [`Avx512Elem`]
+//!   extension traits); µ, σ, and the `(m, n)` extended-exponent
+//!   accumulators stay f32 for every dtype, so half-width formats change
+//!   bytes moved, not the arithmetic.
+//! * **Unroll factor** (const generic `U` ∈ {1, 2, 4, 8}) — vectors per
+//!   loop iteration, each with its own accumulator register.
+//!
+//! The `run_*` dispatchers below are the bridge from runtime plan values
+//! (`ExecPlan { isa, unrolls, dtype, .. }`) to the statically
+//! monomorphized kernels: they snap the plan's unroll to the nearest
+//! compiled variant and select the ISA module.  The batched engine
+//! (`softmax::batch`) drives every pass through them, so plans — not
+//! static defaults — decide the executed unroll.
+//!
+//! [`Avx2Elem`]: avx2::Avx2Elem
+//! [`Avx512Elem`]: avx512::Avx512Elem
+
+pub mod avx2;
+pub mod avx512;
+pub mod element;
+pub mod scalar;
+
+pub use element::{Bf16, Dtype, Element, F16};
+
+use crate::softmax::dispatch::Isa;
+use crate::softmax::exp::ExtSum;
+
+/// The bound the batched engine and the dispatchers below require: an
+/// [`Element`] with load/store implementations on every compiled ISA.
+/// Blanket-implemented, so it is exactly the set {`f32`, [`Bf16`],
+/// [`F16`]}.
+#[cfg(target_arch = "x86_64")]
+pub trait KernelElement: Element + avx2::Avx2Elem + avx512::Avx512Elem {}
+#[cfg(target_arch = "x86_64")]
+impl<T: Element + avx2::Avx2Elem + avx512::Avx512Elem> KernelElement for T {}
+
+/// Non-x86 fallback: only the scalar kernels exist, so plain [`Element`]
+/// suffices.
+#[cfg(not(target_arch = "x86_64"))]
+pub trait KernelElement: Element {}
+#[cfg(not(target_arch = "x86_64"))]
+impl<T: Element> KernelElement for T {}
+
+/// Snap a runtime unroll factor to the nearest compiled const-generic
+/// variant (1, 2, 4, 8 — the `tuning::UNROLLS` set) and run `$e` with
+/// `$U` bound to it.
+#[cfg(target_arch = "x86_64")]
+macro_rules! with_unroll {
+    ($u:expr, $U:ident, $e:expr) => {
+        match $u {
+            0 | 1 => {
+                const $U: usize = 1;
+                $e
+            }
+            2 | 3 => {
+                const $U: usize = 2;
+                $e
+            }
+            4..=7 => {
+                const $U: usize = 4;
+                $e
+            }
+            _ => {
+                const $U: usize = 8;
+                $e
+            }
+        }
+    };
+}
+
+// ---------------------------------------------------------------------------
+// Plan-driven pass dispatchers.
+//
+// Each takes the plan's (isa, unroll) pair at runtime and forwards to the
+// matching monomorphized kernel.  The scalar kernels have a fixed
+// 4-accumulator structure, so the unroll does not apply there.
+//
+// SAFETY (all of them): the caller must pass an `Isa` that is available
+// on the running CPU — plans are built from `dispatch::detect_*`, which
+// checks `is_x86_feature_detected!` for every SIMD variant.
+// ---------------------------------------------------------------------------
+
+/// Pass 1 of Algs. 1 & 2: max-reduction.
+pub fn run_max<E: KernelElement>(isa: Isa, unroll: usize, x: &[E]) -> f32 {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { with_unroll!(unroll, U, avx2::pass_max::<E, U>(x)) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => unsafe { with_unroll!(unroll, U, avx512::pass_max::<E, U>(x)) },
+        _ => {
+            let _ = unroll;
+            scalar::pass_max(x)
+        }
+    }
+}
+
+/// Pass 2 of Alg. 1: `Σ e^(x_i − µ)`.
+pub fn run_sumexp<E: KernelElement>(isa: Isa, unroll: usize, x: &[E], mu: f32) -> f32 {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { with_unroll!(unroll, U, avx2::pass_sumexp::<E, U>(x, mu)) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => unsafe { with_unroll!(unroll, U, avx512::pass_sumexp::<E, U>(x, mu)) },
+        _ => {
+            let _ = unroll;
+            scalar::pass_sumexp(x, mu)
+        }
+    }
+}
+
+/// Pass 2 of Alg. 2: `y_i = e^(x_i − µ)`, returning the sum.
+pub fn run_storeexp<E: KernelElement>(
+    isa: Isa,
+    unroll: usize,
+    x: &[E],
+    mu: f32,
+    y: &mut [E],
+) -> f32 {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { with_unroll!(unroll, U, avx2::pass_storeexp::<E, U>(x, mu, y)) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => unsafe { with_unroll!(unroll, U, avx512::pass_storeexp::<E, U>(x, mu, y)) },
+        _ => {
+            let _ = unroll;
+            scalar::pass_storeexp(x, mu, y)
+        }
+    }
+}
+
+/// Pass 3 of Alg. 1: `y_i = λ·e^(x_i − µ)`; `nt` selects the
+/// streaming-store variant (the scalar ISA has no streaming primitive,
+/// so there it is the temporal pass by definition).
+pub fn run_scaleexp<E: KernelElement>(
+    isa: Isa,
+    unroll: usize,
+    nt: bool,
+    x: &[E],
+    mu: f32,
+    lam: f32,
+    y: &mut [E],
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            if nt {
+                with_unroll!(unroll, U, avx2::pass_scaleexp_nt::<E, U>(x, mu, lam, y))
+            } else {
+                with_unroll!(unroll, U, avx2::pass_scaleexp::<E, U>(x, mu, lam, y))
+            }
+        },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => unsafe {
+            if nt {
+                with_unroll!(unroll, U, avx512::pass_scaleexp_nt::<E, U>(x, mu, lam, y))
+            } else {
+                with_unroll!(unroll, U, avx512::pass_scaleexp::<E, U>(x, mu, lam, y))
+            }
+        },
+        _ => {
+            let _ = unroll;
+            if nt {
+                scalar::pass_scaleexp_nt(x, mu, lam, y)
+            } else {
+                scalar::pass_scaleexp(x, mu, lam, y)
+            }
+        }
+    }
+}
+
+/// Pass 3 of Alg. 2: in-place `y_i *= λ`.
+pub fn run_scale_inplace<E: KernelElement>(isa: Isa, unroll: usize, y: &mut [E], lam: f32) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { with_unroll!(unroll, U, avx2::pass_scale_inplace::<E, U>(y, lam)) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => unsafe {
+            with_unroll!(unroll, U, avx512::pass_scale_inplace::<E, U>(y, lam))
+        },
+        _ => {
+            let _ = unroll;
+            scalar::pass_scale_inplace(y, lam)
+        }
+    }
+}
+
+/// Pass 1 of Alg. 3: accumulate `Σ e^(x_i)` in the `(m, n)`
+/// representation.
+pub fn run_accum_extexp<E: KernelElement>(isa: Isa, unroll: usize, x: &[E]) -> ExtSum {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { with_unroll!(unroll, U, avx2::pass_accum_extexp::<E, U>(x)) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => unsafe { with_unroll!(unroll, U, avx512::pass_accum_extexp::<E, U>(x)) },
+        _ => {
+            let _ = unroll;
+            scalar::pass_accum_extexp(x)
+        }
+    }
+}
+
+/// Pass 2 of Alg. 3: `y_i = m_i · λ · 2^(n_i − n_sum)`; `nt` as in
+/// [`run_scaleexp`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_scale_extexp<E: KernelElement>(
+    isa: Isa,
+    unroll: usize,
+    nt: bool,
+    x: &[E],
+    lam: f32,
+    n_sum: f32,
+    y: &mut [E],
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            if nt {
+                with_unroll!(unroll, U, avx2::pass_scale_extexp_nt::<E, U>(x, lam, n_sum, y))
+            } else {
+                with_unroll!(unroll, U, avx2::pass_scale_extexp::<E, U>(x, lam, n_sum, y))
+            }
+        },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => unsafe {
+            if nt {
+                with_unroll!(unroll, U, avx512::pass_scale_extexp_nt::<E, U>(x, lam, n_sum, y))
+            } else {
+                with_unroll!(unroll, U, avx512::pass_scale_extexp::<E, U>(x, lam, n_sum, y))
+            }
+        },
+        _ => {
+            let _ = unroll;
+            if nt {
+                scalar::pass_scale_extexp_nt(x, lam, n_sum, y)
+            } else {
+                scalar::pass_scale_extexp(x, lam, n_sum, y)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::dispatch;
+    use crate::with_elem;
+
+    /// The dispatchers must snap arbitrary runtime unrolls onto compiled
+    /// variants and agree with a direct scalar composition for every
+    /// available ISA × dtype.
+    #[test]
+    fn dispatchers_compose_softmax_for_every_isa_and_dtype() {
+        let raw: Vec<f32> = (0..1003).map(|i| (((i * 193) % 400) as f32) / 20.0 - 10.0).collect();
+        for isa in dispatch::Isa::detect_all() {
+            for dtype in Dtype::ALL {
+                with_elem!(dtype, E, {
+                    let x: Vec<E> = raw.iter().map(|&v| E::from_f32(v)).collect();
+                    let mut y = vec![E::from_f32(0.0); x.len()];
+                    for unroll in [0usize, 1, 2, 3, 5, 8, 64] {
+                        let s = run_accum_extexp::<E>(isa, unroll, &x);
+                        run_scale_extexp::<E>(isa, unroll, false, &x, 1.0 / s.m, s.n, &mut y);
+                        let total: f32 = y.iter().map(|v| v.to_f32()).sum();
+                        assert!(
+                            (total - 1.0).abs() < 3e-2,
+                            "{isa} {dtype} unroll={unroll}: Σy = {total}"
+                        );
+                        let mu = run_max::<E>(isa, unroll, &x);
+                        let sigma = run_sumexp::<E>(isa, unroll, &x, mu);
+                        run_scaleexp::<E>(isa, unroll, true, &x, mu, 1.0 / sigma, &mut y);
+                        let total: f32 = y.iter().map(|v| v.to_f32()).sum();
+                        assert!(
+                            (total - 1.0).abs() < 3e-2,
+                            "{isa} {dtype} recompute unroll={unroll}: Σy = {total}"
+                        );
+                        let sigma2 = run_storeexp::<E>(isa, unroll, &x, mu, &mut y);
+                        run_scale_inplace::<E>(isa, unroll, &mut y, 1.0 / sigma2);
+                        let total: f32 = y.iter().map(|v| v.to_f32()).sum();
+                        assert!(
+                            (total - 1.0).abs() < 3e-2,
+                            "{isa} {dtype} reload unroll={unroll}: Σy = {total}"
+                        );
+                    }
+                });
+            }
+        }
+    }
+
+    /// f32 dispatch at the default unrolls must be bit-identical to the
+    /// full-algorithm compositions (the pre-refactor code path).
+    #[test]
+    fn f32_dispatch_matches_full_algorithms_bitwise() {
+        let x: Vec<f32> = (0..2049).map(|i| (((i * 37) % 500) as f32) / 25.0 - 10.0).collect();
+        for isa in dispatch::Isa::detect_all() {
+            let mut via_dispatch = vec![0.0f32; x.len()];
+            let s = run_accum_extexp::<f32>(isa, 8, &x);
+            run_scale_extexp::<f32>(isa, 8, false, &x, 1.0 / s.m, s.n, &mut via_dispatch);
+            let mut via_full = vec![0.0f32; x.len()];
+            match isa {
+                #[cfg(target_arch = "x86_64")]
+                Isa::Avx2 => unsafe { avx2::softmax_twopass(&x, &mut via_full) },
+                #[cfg(target_arch = "x86_64")]
+                Isa::Avx512 => unsafe { avx512::softmax_twopass(&x, &mut via_full) },
+                _ => scalar::softmax_twopass(&x, &mut via_full),
+            }
+            for i in 0..x.len() {
+                assert_eq!(
+                    via_dispatch[i].to_bits(),
+                    via_full[i].to_bits(),
+                    "{isa} i={i}"
+                );
+            }
+        }
+    }
+}

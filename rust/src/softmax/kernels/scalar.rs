@@ -7,85 +7,93 @@
 //! Each *memory pass* of the paper is a standalone function so the figure
 //! harness (Figs 3, 4, 7) can time passes individually; the full algorithms
 //! are compositions of passes, exactly like the paper's implementation.
+//!
+//! Every pass is generic over [`Element`]: elements widen to `f32` on
+//! load and narrow on store, and all arithmetic — including every
+//! accumulator — is `f32` regardless of the storage dtype.  For
+//! `E = f32` the widen/narrow calls are identities, so the monomorphized
+//! code (and its results) are bit-identical to the pre-generic kernels.
 
-use super::exp::{exp, extexp, ExtSum};
+use super::element::Element;
+use crate::softmax::exp::{exp, extexp, ExtSum};
 
 /// Pass 1 (Algs. 1 & 2): max-reduction over the input. Reads `x` once.
-pub fn pass_max(x: &[f32]) -> f32 {
+pub fn pass_max<E: Element>(x: &[E]) -> f32 {
     // Multiple accumulators break the dependency chain (the paper's
     // "number of accumulator variables" meta-parameter; 4 is the tuned
     // scalar value — see tuning.rs for the measured alternatives).
     let mut acc = [f32::MIN; 4];
     let mut chunks = x.chunks_exact(4);
     for c in &mut chunks {
-        acc[0] = acc[0].max(c[0]);
-        acc[1] = acc[1].max(c[1]);
-        acc[2] = acc[2].max(c[2]);
-        acc[3] = acc[3].max(c[3]);
+        acc[0] = acc[0].max(c[0].to_f32());
+        acc[1] = acc[1].max(c[1].to_f32());
+        acc[2] = acc[2].max(c[2].to_f32());
+        acc[3] = acc[3].max(c[3].to_f32());
     }
     for &v in chunks.remainder() {
-        acc[0] = acc[0].max(v);
+        acc[0] = acc[0].max(v.to_f32());
     }
     acc[0].max(acc[1]).max(acc[2].max(acc[3]))
 }
 
 /// Pass 2 of Alg. 1: `Σ e^(x_i − µ)`. Reads `x` once, writes nothing.
-pub fn pass_sumexp(x: &[f32], mu: f32) -> f32 {
+pub fn pass_sumexp<E: Element>(x: &[E], mu: f32) -> f32 {
     let mut acc = [0.0f32; 4];
     let mut chunks = x.chunks_exact(4);
     for c in &mut chunks {
-        acc[0] += exp(c[0] - mu);
-        acc[1] += exp(c[1] - mu);
-        acc[2] += exp(c[2] - mu);
-        acc[3] += exp(c[3] - mu);
+        acc[0] += exp(c[0].to_f32() - mu);
+        acc[1] += exp(c[1].to_f32() - mu);
+        acc[2] += exp(c[2].to_f32() - mu);
+        acc[3] += exp(c[3].to_f32() - mu);
     }
     for &v in chunks.remainder() {
-        acc[0] += exp(v - mu);
+        acc[0] += exp(v.to_f32() - mu);
     }
     (acc[0] + acc[1]) + (acc[2] + acc[3])
 }
 
 /// Pass 2 of Alg. 2: `y_i = e^(x_i − µ)`, returning the sum.
-/// Reads `x`, writes `y`.
-pub fn pass_storeexp(x: &[f32], mu: f32, y: &mut [f32]) -> f32 {
+/// Reads `x`, writes `y`.  The returned sum is of the full-precision
+/// `f32` values *before* narrowing to `E` (narrowing is storage-only).
+pub fn pass_storeexp<E: Element>(x: &[E], mu: f32, y: &mut [E]) -> f32 {
     debug_assert_eq!(x.len(), y.len());
     let mut acc = 0.0f32;
     for (xi, yi) in x.iter().zip(y.iter_mut()) {
-        let e = exp(xi - mu);
-        *yi = e;
+        let e = exp(xi.to_f32() - mu);
+        *yi = E::from_f32(e);
         acc += e;
     }
     acc
 }
 
 /// Pass 3 of Alg. 1: `y_i = λ·e^(x_i − µ)`. Reads `x`, writes `y`.
-pub fn pass_scaleexp(x: &[f32], mu: f32, lam: f32, y: &mut [f32]) {
+pub fn pass_scaleexp<E: Element>(x: &[E], mu: f32, lam: f32, y: &mut [E]) {
     debug_assert_eq!(x.len(), y.len());
     for (xi, yi) in x.iter().zip(y.iter_mut()) {
-        *yi = lam * exp(xi - mu);
+        *yi = E::from_f32(lam * exp(xi.to_f32() - mu));
     }
 }
 
 /// Pass 3 of Alg. 2: in-place `y_i *= λ` (STREAM-Scale-like, in place).
-pub fn pass_scale_inplace(y: &mut [f32], lam: f32) {
+pub fn pass_scale_inplace<E: Element>(y: &mut [E], lam: f32) {
     for yi in y.iter_mut() {
-        *yi *= lam;
+        *yi = E::from_f32(yi.to_f32() * lam);
     }
 }
 
 /// Pass 1 of Alg. 3: accumulate `Σ e^(x_i)` in the `(m, n)` representation.
 /// Reads `x` once; no max pass needed, cannot overflow.
-pub fn pass_accum_extexp(x: &[f32]) -> ExtSum {
+pub fn pass_accum_extexp<E: Element>(x: &[E]) -> ExtSum {
     let mut acc = [ExtSum::default(); 4];
     let mut chunks = x.chunks_exact(4);
     for c in &mut chunks {
-        acc[0].add_exp(c[0]);
-        acc[1].add_exp(c[1]);
-        acc[2].add_exp(c[2]);
-        acc[3].add_exp(c[3]);
+        acc[0].add_exp(c[0].to_f32());
+        acc[1].add_exp(c[1].to_f32());
+        acc[2].add_exp(c[2].to_f32());
+        acc[3].add_exp(c[3].to_f32());
     }
     for &v in chunks.remainder() {
-        acc[0].add_exp(v);
+        acc[0].add_exp(v.to_f32());
     }
     let mut s = acc[0];
     s.merge(acc[1]);
@@ -95,11 +103,11 @@ pub fn pass_accum_extexp(x: &[f32]) -> ExtSum {
 }
 
 /// Pass 2 of Alg. 3: `y_i = m_i · λ · 2^(n_i − n_sum)`. Reads `x`, writes `y`.
-pub fn pass_scale_extexp(x: &[f32], lam: f32, n_sum: f32, y: &mut [f32]) {
+pub fn pass_scale_extexp<E: Element>(x: &[E], lam: f32, n_sum: f32, y: &mut [E]) {
     debug_assert_eq!(x.len(), y.len());
     for (xi, yi) in x.iter().zip(y.iter_mut()) {
-        let (m_i, n_i) = extexp(*xi);
-        *yi = m_i * lam * super::exp::exp2i(n_i - n_sum);
+        let (m_i, n_i) = extexp(xi.to_f32());
+        *yi = E::from_f32(m_i * lam * crate::softmax::exp::exp2i(n_i - n_sum));
     }
 }
 
@@ -107,13 +115,13 @@ pub fn pass_scale_extexp(x: &[f32], lam: f32, n_sum: f32, y: &mut [f32]) {
 /// uniform per-ISA dispatch: portable Rust has no streaming-store
 /// primitive, so this *is* the temporal pass (bit-identical by
 /// construction).  The SIMD modules provide real `MOVNTPS` variants.
-pub fn pass_scaleexp_nt(x: &[f32], mu: f32, lam: f32, y: &mut [f32]) {
+pub fn pass_scaleexp_nt<E: Element>(x: &[E], mu: f32, lam: f32, y: &mut [E]) {
     pass_scaleexp(x, mu, lam, y);
 }
 
 /// "Non-temporal" variant of [`pass_scale_extexp`]; see
 /// [`pass_scaleexp_nt`] for why this is the temporal pass.
-pub fn pass_scale_extexp_nt(x: &[f32], lam: f32, n_sum: f32, y: &mut [f32]) {
+pub fn pass_scale_extexp_nt<E: Element>(x: &[E], lam: f32, n_sum: f32, y: &mut [E]) {
     pass_scale_extexp(x, lam, n_sum, y);
 }
 
@@ -122,21 +130,21 @@ pub fn pass_scale_extexp_nt(x: &[f32], lam: f32, n_sum: f32, y: &mut [f32]) {
 // ---------------------------------------------------------------------------
 
 /// Paper Algorithm 1: Three-Pass with recomputation. 3 reads + 1 write.
-pub fn softmax_threepass_recompute(x: &[f32], y: &mut [f32]) {
+pub fn softmax_threepass_recompute<E: Element>(x: &[E], y: &mut [E]) {
     let mu = pass_max(x);
     let sigma = pass_sumexp(x, mu);
     pass_scaleexp(x, mu, 1.0 / sigma, y);
 }
 
 /// Paper Algorithm 2: Three-Pass with reloading. 3 reads + 2 writes.
-pub fn softmax_threepass_reload(x: &[f32], y: &mut [f32]) {
+pub fn softmax_threepass_reload<E: Element>(x: &[E], y: &mut [E]) {
     let mu = pass_max(x);
     let sigma = pass_storeexp(x, mu, y);
     pass_scale_inplace(y, 1.0 / sigma);
 }
 
 /// Paper Algorithm 3: Two-Pass. 2 reads + 1 write.
-pub fn softmax_twopass(x: &[f32], y: &mut [f32]) {
+pub fn softmax_twopass<E: Element>(x: &[E], y: &mut [E]) {
     let s = pass_accum_extexp(x);
     pass_scale_extexp(x, 1.0 / s.m, s.n, y);
 }
@@ -144,6 +152,7 @@ pub fn softmax_twopass(x: &[f32], y: &mut [f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::softmax::kernels::{Bf16, F16};
 
     fn ref_softmax(x: &[f32]) -> Vec<f32> {
         let mu = x.iter().cloned().fold(f64::MIN, |a, v| a.max(v as f64));
@@ -223,5 +232,42 @@ mod tests {
         let lse = s.ln();
         let want_lse = sigma_a.ln() + mu;
         assert!((lse - want_lse).abs() < 1e-4, "{lse} vs {want_lse}");
+    }
+
+    /// Half-width softmax against the f64 reference evaluated on the
+    /// *quantized* inputs: the kernels see only the quantized values, so
+    /// that is the function whose output we bound.  Outputs live in
+    /// [0, 1], so one narrowing step bounds the absolute error by ~ε/2
+    /// of the dtype (bf16 ε = 2⁻⁸, f16 ε = 2⁻¹¹) plus the f32 kernel's
+    /// own error — the documented bounds 4e-3 / 5e-4.
+    fn check_half<E: Element + PartialEq>(n: usize, tol: f32) {
+        let raw: Vec<f32> = (0..n).map(|i| (((i * 131) % 400) as f32) / 20.0 - 10.0).collect();
+        let q: Vec<E> = raw.iter().map(|&v| E::from_f32(v)).collect();
+        let want = ref_softmax(&q.iter().map(|v| v.to_f32()).collect::<Vec<f32>>());
+        for (name, f) in [
+            ("recompute", softmax_threepass_recompute::<E> as fn(&[E], &mut [E])),
+            ("reload", softmax_threepass_reload::<E>),
+            ("twopass", softmax_twopass::<E>),
+        ] {
+            let mut y = vec![E::from_f32(0.0); n];
+            f(&q, &mut y);
+            for i in 0..n {
+                let got = y[i].to_f32();
+                assert!(
+                    (got - want[i]).abs() <= tol,
+                    "{name}[{i}]: got {got}, want {} (dtype {:?})",
+                    want[i],
+                    E::DTYPE
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn half_width_softmax_within_documented_bounds() {
+        for n in [1usize, 5, 64, 1000] {
+            check_half::<Bf16>(n, 4e-3);
+            check_half::<F16>(n, 5e-4);
+        }
     }
 }

@@ -19,14 +19,30 @@
 //! assert!((y.iter().sum::<f32>() - 1.0).abs() < 1e-6);
 //! ```
 
-pub mod avx2;
-pub mod avx512;
 pub mod batch;
 pub mod dispatch;
 pub mod exp;
+pub mod kernels;
 pub mod online;
-pub mod scalar;
 pub mod tuning;
+
+/// Facade preserving the pre-kernel-layer path `softmax::scalar`; every
+/// pass definition lives in [`kernels`].
+pub mod scalar {
+    pub use super::kernels::scalar::*;
+}
+
+/// Facade preserving the pre-kernel-layer path `softmax::avx2`.
+pub mod avx2 {
+    #[cfg(target_arch = "x86_64")]
+    pub use super::kernels::avx2::*;
+}
+
+/// Facade preserving the pre-kernel-layer path `softmax::avx512`.
+pub mod avx512 {
+    #[cfg(target_arch = "x86_64")]
+    pub use super::kernels::avx512::*;
+}
 
 use std::fmt;
 
@@ -37,6 +53,7 @@ pub use batch::{
 };
 pub use dispatch::Isa;
 pub use exp::ExtSum;
+pub use kernels::{Bf16, Dtype, Element, F16};
 
 /// The three softmax algorithms evaluated in the paper.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -100,6 +117,9 @@ pub enum SoftmaxError {
     /// A `*_planned` entry point was handed an [`crate::plan::ExecPlan`]
     /// built for a different operation.
     PlanMismatch { plan: crate::plan::PlanOp, want: crate::plan::PlanOp },
+    /// Input/output batches (or a plan and its batch) disagree on the
+    /// storage element type.
+    DtypeMismatch { have: Dtype, want: Dtype },
 }
 
 impl fmt::Display for SoftmaxError {
@@ -114,6 +134,9 @@ impl fmt::Display for SoftmaxError {
             }
             SoftmaxError::PlanMismatch { plan, want } => {
                 write!(f, "plan built for op {plan} cannot execute op {want}")
+            }
+            SoftmaxError::DtypeMismatch { have, want } => {
+                write!(f, "dtype {have} does not match expected dtype {want}")
             }
         }
     }
@@ -186,22 +209,22 @@ pub fn softmax_inplace(x: &mut [f32]) -> Result<(), SoftmaxError> {
         // SAFETY: ISA availability by detect_best; aliasing is well-ordered
         // (each element is read before it is overwritten at the same index).
         Isa::Avx512 => unsafe {
-            let mu = avx512::pass_max::<4>(x);
+            let mu = avx512::pass_max::<f32, 4>(x);
             let sigma = {
                 let (xs, ys) = alias_same(x);
-                avx512::pass_storeexp::<2>(xs, mu, ys)
+                avx512::pass_storeexp::<f32, 2>(xs, mu, ys)
             };
-            avx512::pass_scale_inplace::<4>(x, 1.0 / sigma);
+            avx512::pass_scale_inplace::<f32, 4>(x, 1.0 / sigma);
         },
         #[cfg(target_arch = "x86_64")]
         // SAFETY: as above.
         Isa::Avx2 => unsafe {
-            let mu = avx2::pass_max::<4>(x);
+            let mu = avx2::pass_max::<f32, 4>(x);
             let sigma = {
                 let (xs, ys) = alias_same(x);
-                avx2::pass_storeexp::<2>(xs, mu, ys)
+                avx2::pass_storeexp::<f32, 2>(xs, mu, ys)
             };
-            avx2::pass_scale_inplace::<4>(x, 1.0 / sigma);
+            avx2::pass_scale_inplace::<f32, 4>(x, 1.0 / sigma);
         },
         _ => {
             let mu = scalar::pass_max(x);
@@ -363,20 +386,20 @@ pub fn run_pass_with(
             macro_rules! with_unroll {
                 ($u:literal) => {
                     match pass {
-                        Pass::Max => $m::pass_max::<$u>(x),
-                        Pass::SumExp => $m::pass_sumexp::<$u>(x, mu),
-                        Pass::StoreExp => $m::pass_storeexp::<$u>(x, mu, y),
+                        Pass::Max => $m::pass_max::<f32, $u>(x),
+                        Pass::SumExp => $m::pass_sumexp::<f32, $u>(x, mu),
+                        Pass::StoreExp => $m::pass_storeexp::<f32, $u>(x, mu, y),
                         Pass::ScaleExp => {
-                            $m::pass_scaleexp::<$u>(x, mu, lam, y);
+                            $m::pass_scaleexp::<f32, $u>(x, mu, lam, y);
                             0.0
                         }
                         Pass::ScaleInplace => {
-                            $m::pass_scale_inplace::<$u>(y, lam);
+                            $m::pass_scale_inplace::<f32, $u>(y, lam);
                             0.0
                         }
-                        Pass::AccumExtExp => $m::pass_accum_extexp::<$u>(x).ln(),
+                        Pass::AccumExtExp => $m::pass_accum_extexp::<f32, $u>(x).ln(),
                         Pass::ScaleExtExp => {
-                            $m::pass_scale_extexp::<$u>(x, lam, n_sum, y);
+                            $m::pass_scale_extexp::<f32, $u>(x, lam, n_sum, y);
                             0.0
                         }
                     }

@@ -163,7 +163,7 @@ pub mod simd {
     #[target_feature(enable = "avx512f")]
     pub unsafe fn softmax_online(x: &[f32], y: &mut [f32]) {
         let (m, s) = pass_online_accum::<8>(x);
-        crate::softmax::avx512::pass_scaleexp::<8>(x, m, 1.0 / s, y);
+        crate::softmax::avx512::pass_scaleexp::<f32, 8>(x, m, 1.0 / s, y);
     }
 
     /// AVX2 variant (8-lane; the rescale costs two of the integer-trick
@@ -246,7 +246,7 @@ pub mod simd {
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn softmax_online_avx2(x: &[f32], y: &mut [f32]) {
         let (m, s) = pass_online_accum_avx2::<8>(x);
-        crate::softmax::avx2::pass_scaleexp::<8>(x, m, 1.0 / s, y);
+        crate::softmax::avx2::pass_scaleexp::<f32, 8>(x, m, 1.0 / s, y);
     }
 }
 

@@ -8,13 +8,13 @@
 use two_pass_softmax::config::ServeConfig;
 use two_pass_softmax::coordinator::{Coordinator, Payload, Router};
 use two_pass_softmax::costmodel;
-use two_pass_softmax::plan::{adhoc, PlanOp, Planner};
+use two_pass_softmax::plan::{adhoc, adhoc_dtype, PlanOp, Planner};
 use two_pass_softmax::sampling::{self, SamplingParams};
 use two_pass_softmax::softmax::batch::{
     accum_extexp_batch, accum_extexp_batch_planned, softmax_batch_inplace_planned,
     softmax_batch_planned, RowBatch,
 };
-use two_pass_softmax::softmax::{softmax_with, Algorithm, Isa};
+use two_pass_softmax::softmax::{softmax_with, Algorithm, Dtype, Isa};
 use two_pass_softmax::util::rng::Rng;
 
 fn random_batch(rows: usize, n: usize, seed: u64) -> RowBatch {
@@ -196,7 +196,81 @@ fn predicted_bytes_match_costmodel_cost() {
         let plan = planner.plan(PlanOp::Normalize, 8, 32768);
         let row = costmodel::cost(alg);
         assert_eq!(plan.predicted_bytes, row.bandwidth_n * 8 * 32768 * 4, "{alg}");
-        assert_eq!(plan.predicted_bytes, costmodel::batch_bytes(alg, 8, 32768), "{alg}");
+        assert_eq!(plan.predicted_bytes, costmodel::batch_bytes(alg, 8, 32768, 4), "{alg}");
+        // Half-width plans of the same shape predict exactly half the bytes.
+        let half = planner.plan_dtype(PlanOp::Normalize, Dtype::Bf16, 8, 32768);
+        assert_eq!(2 * half.predicted_bytes, plan.predicted_bytes, "{alg}");
+        assert_eq!(half.predicted_bytes, costmodel::batch_bytes(alg, 8, 32768, 2), "{alg}");
+    }
+}
+
+/// Half-width planned execution equals "run the same batch in f32, then
+/// quantize the outputs" bit-for-bit on every detected ISA × algorithm ×
+/// thread count: widen-on-load is exact and every accumulator stays f32,
+/// so the only rounding anywhere in the half path is the final
+/// round-to-nearest-even narrow.  Fused decode over the half batch picks
+/// the same tokens (with bit-identical logprobs) as decoding the widened
+/// f32 batch.
+#[test]
+fn half_width_planned_execution_is_quantized_f32_execution() {
+    let (rows, n) = (7usize, 193usize);
+    for dtype in [Dtype::Bf16, Dtype::F16] {
+        // Quantize the inputs once, then widen back: both paths see
+        // exactly the same logit values.
+        let seed_f = random_batch(rows, n, 77);
+        let mut xh = RowBatch::with_capacity_dtype(rows, n, dtype);
+        for r in 0..rows {
+            xh.push_row_quantized(seed_f.row(r)).unwrap();
+        }
+        let mut xf = RowBatch::new(rows, n);
+        for r in 0..rows {
+            xf.row_mut(r).copy_from_slice(&xh.row_f32(r));
+        }
+        for isa in Isa::detect_all() {
+            for alg in Algorithm::ALL {
+                for threads in [1usize, 2, 4] {
+                    let pf = adhoc(PlanOp::Normalize, alg, isa, rows, n, 1, threads);
+                    let mut yf = RowBatch::new(rows, n);
+                    softmax_batch_planned(&pf, &xf, &mut yf).unwrap();
+                    let mut want = RowBatch::with_capacity_dtype(rows, n, dtype);
+                    for r in 0..rows {
+                        want.push_row_quantized(yf.row(r)).unwrap();
+                    }
+                    let ph =
+                        adhoc_dtype(PlanOp::Normalize, alg, isa, dtype, rows, n, 1, threads);
+                    let mut yh = RowBatch::new_with_dtype(rows, n, dtype);
+                    softmax_batch_planned(&ph, &xh, &mut yh).unwrap();
+                    assert_eq!(yh, want, "{dtype}/{alg}/{isa} t={threads}");
+                }
+            }
+            // Fused decode: same tokens off the half bits as off the
+            // widened f32 batch, pooled or not.
+            let ps: Vec<SamplingParams> = (0..rows)
+                .map(|r| SamplingParams { seed: r as u64, top_k: 3, ..Default::default() })
+                .collect();
+            let want = sampling::sample_batch(isa, &xf, &ps).unwrap();
+            for threads in [1usize, 2] {
+                let p = adhoc_dtype(
+                    PlanOp::Decode,
+                    Algorithm::TwoPass,
+                    isa,
+                    dtype,
+                    rows,
+                    n,
+                    1,
+                    threads,
+                );
+                let got = sampling::sample_batch_planned(&p, &xh, &ps).unwrap();
+                for (r, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g.token, w.token, "{dtype}/{isa} t={threads} row {r}");
+                    assert_eq!(
+                        g.logprob.to_bits(),
+                        w.logprob.to_bits(),
+                        "{dtype}/{isa} t={threads} row {r}"
+                    );
+                }
+            }
+        }
     }
 }
 

@@ -6,9 +6,11 @@
 //! independence, merge associativity, agreement with f64), the fused
 //! sampling subsystem (argmax vs normalize-then-scan, top-k set equality
 //! across ISAs, top-p mass, seeded-categorical determinism + empirical
-//! frequencies), the batcher (conservation, FIFO-within-key, key purity),
-//! the JSON codec (roundtrip), and the cost/perf models (bounds,
-//! monotonicity).
+//! frequencies), half-width (bf16/f16) logit storage (softmax and fused
+//! decode within documented per-dtype error bounds of an f64 reference,
+//! top-k set equality across ISAs per dtype), the batcher (conservation,
+//! FIFO-within-key, key purity), the JSON codec (roundtrip), and the
+//! cost/perf models (bounds, monotonicity).
 
 use std::time::Duration;
 
@@ -18,7 +20,8 @@ use two_pass_softmax::costmodel;
 use two_pass_softmax::platform::SKYLAKE_X;
 use two_pass_softmax::sampling::{self, SamplingParams};
 use two_pass_softmax::simmodel;
-use two_pass_softmax::softmax::{softmax_with, Algorithm, ExtSum, Isa};
+use two_pass_softmax::softmax::batch::{softmax_batch, RowBatch};
+use two_pass_softmax::softmax::{softmax_with, Algorithm, Bf16, Dtype, ExtSum, Isa, F16};
 use two_pass_softmax::util::json::Json;
 use two_pass_softmax::util::rng::Rng;
 
@@ -242,6 +245,153 @@ fn sampling_seeded_categorical_is_deterministic_and_unbiased() {
         let params = SamplingParams { top_k: 2, seed: i, ..SamplingParams::default() };
         let c = sampling::sample_row(isa, &x, &params).unwrap();
         assert!(c.token >= 4, "top_k=2 drew token {}", c.token);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Half-width (bf16/f16) logit storage
+// ---------------------------------------------------------------------------
+
+/// Documented per-dtype absolute error bound for softmax probabilities vs
+/// an f64 reference over the *same quantized* inputs.  Quantizing the
+/// logits is the caller's choice (that error is theirs); what the kernel
+/// path adds on top is one exact widen, f32 pass arithmetic, and one
+/// round-to-nearest-even narrow of outputs in [0, 1]: bf16 keeps 8
+/// significand bits (unit roundoff 2⁻⁹ ≈ 2.0e-3), f16 keeps 11
+/// (2⁻¹² ≈ 2.4e-4).  The bounds below are those narrowing errors with
+/// ~2x slack for the f32 pass arithmetic, and are quoted in
+/// `docs/ARCHITECTURE.md`.
+fn half_abs_tol(dtype: Dtype) -> f64 {
+    match dtype {
+        Dtype::Bf16 => 4e-3,
+        _ => 5e-4,
+    }
+}
+
+/// The quantized row both as a half [`RowBatch`] and widened back to the
+/// exact f32 values every kernel sees after its widen-on-load.
+fn quantized_row(x: &[f32], dtype: Dtype) -> (RowBatch, Vec<f32>) {
+    let mut xb = RowBatch::with_capacity_dtype(1, x.len(), dtype);
+    xb.push_row_quantized(x).unwrap();
+    let xq = xb.row_f32(0);
+    (xb, xq)
+}
+
+#[test]
+fn half_softmax_within_documented_bounds_of_f64_reference() {
+    let mut rng = Rng::new(616);
+    let isas = Isa::detect_all();
+    for case in 0..120 {
+        let x = random_logits(&mut rng, case);
+        let n = x.len();
+        for dtype in [Dtype::Bf16, Dtype::F16] {
+            let (xb, xq) = quantized_row(&x, dtype);
+            // f64 reference over the values the kernels actually see.
+            let mx = xq.iter().cloned().fold(f64::MIN, |a, v| a.max(v as f64));
+            let e: Vec<f64> = xq.iter().map(|&v| ((v as f64) - mx).exp()).collect();
+            let z: f64 = e.iter().sum();
+            let tol = half_abs_tol(dtype);
+            for &isa in &isas {
+                for alg in Algorithm::ALL {
+                    let mut yb = RowBatch::new_with_dtype(1, n, dtype);
+                    softmax_batch(alg, isa, &xb, &mut yb).unwrap();
+                    let y = yb.row_f32(0);
+                    let sum: f64 = y.iter().map(|&v| v as f64).sum();
+                    assert!(
+                        (sum - 1.0).abs() < 2.0 * tol,
+                        "case {case} {dtype}/{alg}/{isa}: sum {sum}"
+                    );
+                    for i in 0..n {
+                        let want = e[i] / z;
+                        assert!(
+                            ((y[i] as f64) - want).abs() < tol,
+                            "case {case} {dtype}/{alg}/{isa} i={i}: {} vs {want}",
+                            y[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn half_fused_decode_matches_f64_reference() {
+    let mut rng = Rng::new(717);
+    let isas = Isa::detect_all();
+    let greedy = [SamplingParams::greedy()];
+    for case in 0..120 {
+        let x = random_logits(&mut rng, case);
+        let n = x.len();
+        for dtype in [Dtype::Bf16, Dtype::F16] {
+            let (xb, xq) = quantized_row(&x, dtype);
+            // f64 reference: first index of the (quantized) maximum and
+            // its log-probability.
+            let mut want = 0usize;
+            for i in 1..n {
+                if xq[i] > xq[want] {
+                    want = i;
+                }
+            }
+            let mx = xq[want] as f64;
+            let z: f64 = xq.iter().map(|&v| ((v as f64) - mx).exp()).sum();
+            let want_lp = -z.ln();
+            for &isa in &isas {
+                let got = sampling::sample_batch(isa, &xb, &greedy).unwrap()[0];
+                // Identical ids; only a bitwise tie of quantized logits
+                // (where "the" argmax is ambiguous) may pick another index.
+                assert!(
+                    got.token as usize == want
+                        || xq[got.token as usize].to_bits() == xq[want].to_bits(),
+                    "case {case} {dtype} {isa}: token {} want {want}",
+                    got.token
+                );
+                // The logprob is computed in f32 off the same quantized
+                // inputs, so it tracks the f64 reference at f32-path
+                // accuracy — no extra half-width error term.
+                assert!(
+                    ((got.logprob as f64) - want_lp).abs() < 3e-3 + want_lp.abs() * 1e-3,
+                    "case {case} {dtype} {isa}: logprob {} vs {want_lp}",
+                    got.logprob
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn half_topk_sets_identical_across_isas() {
+    let mut rng = Rng::new(818);
+    let isas = Isa::detect_all();
+    for case in 0..150 {
+        let x = random_logits(&mut rng, case);
+        let k = 1 + rng.below(24);
+        for dtype in [Dtype::Bf16, Dtype::F16] {
+            let (xb, _) = quantized_row(&x, dtype);
+            // Quantization collapses nearby logits into exact ties, so
+            // this also exercises the earliest-index tie-break on every
+            // ISA (offers arrive in ascending index order everywhere).
+            let want: Vec<u32> = match dtype {
+                Dtype::Bf16 => sampling::top_k(Isa::Scalar, xb.row_elems::<Bf16>(0), k),
+                _ => sampling::top_k(Isa::Scalar, xb.row_elems::<F16>(0), k),
+            }
+            .unwrap()
+            .iter()
+            .map(|c| c.token)
+            .collect();
+            assert_eq!(want.len(), k.min(x.len()));
+            for &isa in &isas {
+                let got: Vec<u32> = match dtype {
+                    Dtype::Bf16 => sampling::top_k(isa, xb.row_elems::<Bf16>(0), k),
+                    _ => sampling::top_k(isa, xb.row_elems::<F16>(0), k),
+                }
+                .unwrap()
+                .iter()
+                .map(|c| c.token)
+                .collect();
+                assert_eq!(got, want, "case {case} {dtype} {isa} k={k}");
+            }
+        }
     }
 }
 
