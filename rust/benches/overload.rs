@@ -1,0 +1,138 @@
+//! Bench: overload defense — open-loop saturation sweep of the serving
+//! coordinator with admission control on.
+//!
+//! A pacing thread offers softmax requests at a fixed rate (open loop:
+//! submissions never wait for responses), sweeping the offered rate from
+//! well under to far past the admission budget's sustainable rate.  The
+//! table reports, per offered load: how much was admitted, how much was
+//! shed with `Rejected::Overloaded`, how many admitted requests missed
+//! their deadline anyway, and the goodput (responses that completed
+//! within deadline per second).  The defense works when goodput stays
+//! flat past saturation instead of collapsing.
+//!
+//! `cargo bench --bench overload [-- --n LOGITS --gbps G --budget-ms B]`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use two_pass_softmax::config::ServeConfig;
+use two_pass_softmax::coordinator::{Coordinator, Payload, Rejected, Router, SubmitOptions};
+use two_pass_softmax::softmax::{Algorithm, Isa};
+use two_pass_softmax::util::cli::Args;
+use two_pass_softmax::util::rng::Rng;
+use two_pass_softmax::util::table::Table;
+
+struct Point {
+    offered_rps: f64,
+    admitted: usize,
+    shed: usize,
+    deadline_missed: usize,
+    failed: usize,
+    goodput_rps: f64,
+}
+
+fn run_point(n: usize, gbps: f64, budget_ms: u64, offered_rps: f64, secs: f64) -> Point {
+    let cfg = ServeConfig {
+        admission_budget_ms: budget_ms,
+        stream_gbps: Some(gbps),
+        max_batch: 8,
+        workers: 2,
+        max_wait_us: 200,
+        queue_capacity: 1 << 14,
+        ..ServeConfig::default()
+    };
+    let router = Router::native(Algorithm::TwoPass, Isa::detect_best());
+    let coord = Arc::new(Coordinator::start_with_router(&cfg, router));
+    // Generous relative to the budget: an admitted request only misses
+    // this when the queue ahead of it drains slower than predicted.
+    let deadline = Duration::from_millis(budget_ms.max(1) * 10 + 20);
+    // Bound the point so the 8x column doesn't degenerate into minutes
+    // of cloning shed payloads; the sweep needs the rate, not the count.
+    let total = ((offered_rps * secs) as usize).clamp(50, 20_000);
+    let interval = Duration::from_secs_f64(1.0 / offered_rps);
+    let mut rng = Rng::new(7);
+    let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 4.0)).collect();
+
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(total);
+    let mut shed = 0usize;
+    let mut next = t0;
+    for _ in 0..total {
+        // Open loop: pace submissions by wall clock, never by responses.
+        while Instant::now() < next {
+            std::hint::spin_loop();
+        }
+        next += interval;
+        match coord.submit_with(Payload::Logits(x.clone()), SubmitOptions::with_deadline(deadline))
+        {
+            Ok(h) => handles.push(h),
+            Err(Rejected::Overloaded { .. }) => shed += 1,
+            Err(Rejected::QueueFull { .. }) => shed += 1,
+            Err(e) => panic!("unexpected rejection {e:?}"),
+        }
+    }
+    let admitted = handles.len();
+    let mut completed = 0usize;
+    let mut deadline_missed = 0usize;
+    let mut failed = 0usize;
+    for h in handles {
+        let r = h.wait().expect("coordinator dropped a request");
+        match (&r.rejected, &r.error) {
+            (Some(Rejected::DeadlineExceeded { .. }), _) => deadline_missed += 1,
+            (Some(_), _) | (None, Some(_)) => failed += 1,
+            (None, None) => completed += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.shutdown(),
+        Err(_) => panic!("leak"),
+    }
+    Point {
+        offered_rps,
+        admitted,
+        shed,
+        deadline_missed,
+        failed,
+        goodput_rps: completed as f64 / wall,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    raw.retain(|a| a != "--bench");
+    let args = Args::parse(raw);
+    let n: usize = args.get("n", 16384).map_err(anyhow::Error::msg)?;
+    let gbps: f64 = args.get("gbps", 8.0).map_err(anyhow::Error::msg)?;
+    let budget_ms: u64 = args.get("budget-ms", 2).map_err(anyhow::Error::msg)?;
+    let secs: f64 = args.get("secs", 0.5).map_err(anyhow::Error::msg)?;
+
+    // The admission controller's own price for one two-pass f32 request:
+    // 3N traffic at the configured bandwidth.  The sustainable rate is
+    // what the two coordinator workers can drain at that price.
+    let cost_secs = 3.0 * n as f64 * 4.0 / (gbps * 1e9);
+    let sustainable_rps = 2.0 / cost_secs;
+
+    let mut t = Table::new(
+        &format!(
+            "Overload sweep (N = {n}, {gbps} GB/s price, budget {budget_ms} ms, \
+             predicted sustainable {sustainable_rps:.0} req/s)"
+        ),
+        &["offered_x", "offered_rps", "admitted", "shed", "missed", "failed", "goodput_rps"],
+    );
+    for mult in [0.5, 1.0, 2.0, 4.0, 8.0] {
+        let p = run_point(n, gbps, budget_ms, sustainable_rps * mult, secs);
+        t.rowd(&[
+            format!("{mult:.1}"),
+            format!("{:.0}", p.offered_rps),
+            p.admitted.to_string(),
+            p.shed.to_string(),
+            p.deadline_missed.to_string(),
+            p.failed.to_string(),
+            format!("{:.0}", p.goodput_rps),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    t.save(std::path::Path::new("results/bench"), "overload")?;
+    Ok(())
+}

@@ -104,6 +104,18 @@ pub struct ServeConfig {
     /// when the threshold is auto-derived or a tune table carries it.
     /// Not a JSON/CLI key.  Default: `None`.
     pub stream_gbps: Option<f64>,
+    /// Admission-control queue budget in **predicted milliseconds** of
+    /// work (see `coordinator::admission`): arrivals that would push the
+    /// queue's predicted drain time past this are shed with
+    /// `Rejected::Overloaded`.  `0` (the default) disables admission
+    /// control — every request that fits `queue_capacity` is accepted.
+    pub admission_budget_ms: u64,
+    /// Per-job timeout for the kernel-thread pool (milliseconds): a pool
+    /// job that neither completes nor panics within this is abandoned,
+    /// its lane quarantined and respawned, and the batch fails with a
+    /// timeout error instead of wedging the worker forever.  `0`
+    /// disables the timeout.  Default: 2000.
+    pub job_timeout_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -126,6 +138,8 @@ impl Default for ServeConfig {
             explain_plans: false,
             tune_table: None,
             stream_gbps: None,
+            admission_budget_ms: 0,
+            job_timeout_ms: 2000,
         }
     }
 }
@@ -185,6 +199,12 @@ impl ServeConfig {
         if let Some(v) = root.get("explain_plans").and_then(Json::as_bool) {
             self.explain_plans = v;
         }
+        if let Some(v) = json_count(root, "admission_budget_ms")? {
+            self.admission_budget_ms = v as u64;
+        }
+        if let Some(v) = json_count(root, "job_timeout_ms")? {
+            self.job_timeout_ms = v as u64;
+        }
         self.validate()
     }
 
@@ -219,6 +239,10 @@ impl ServeConfig {
         if a.flag("explain-plans") {
             self.explain_plans = true;
         }
+        self.admission_budget_ms =
+            a.get("admission-budget-ms", self.admission_budget_ms).map_err(|e| anyhow!(e))?;
+        self.job_timeout_ms =
+            a.get("job-timeout-ms", self.job_timeout_ms).map_err(|e| anyhow!(e))?;
         self.validate()
     }
 
@@ -347,6 +371,27 @@ mod tests {
         assert!(c.apply_json(&negthr).is_err());
         // The config object is left untouched by a rejected key.
         assert_eq!(c.max_batch, ServeConfig::default().max_batch);
+    }
+
+    #[test]
+    fn overload_knobs_round_trip() {
+        let d = ServeConfig::default();
+        assert_eq!(d.admission_budget_ms, 0, "admission off by default");
+        assert_eq!(d.job_timeout_ms, 2000);
+        let j = Json::parse(r#"{"admission_budget_ms": 50, "job_timeout_ms": 0}"#).unwrap();
+        let mut c = ServeConfig::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.admission_budget_ms, 50);
+        assert_eq!(c.job_timeout_ms, 0);
+        let a = Args::parse(
+            ["--admission-budget-ms", "25", "--job-timeout-ms", "1500"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let mut c2 = ServeConfig::default();
+        c2.apply_args(&a).unwrap();
+        assert_eq!(c2.admission_budget_ms, 25);
+        assert_eq!(c2.job_timeout_ms, 1500);
     }
 
     #[test]

@@ -1,0 +1,301 @@
+//! Admission control: a queue bounded in **predicted seconds**, not
+//! request count.
+//!
+//! The batcher's `queue_capacity` is a hard count bound, but a count says
+//! nothing about *work*: 1024 queued rows of n=64 drain in microseconds
+//! while 1024 rows of n=262144 are seconds of memory traffic — the first
+//! deserves admission, the second is a latency catastrophe already in
+//! progress.  The execution planner's cost model
+//! ([`costmodel::predict_batch_secs`]) prices any `(rows, n, dtype)`
+//! shape from the algorithm's per-element traffic (Table 2 of the paper:
+//! 3N for two-pass) and a measured STREAM bandwidth, which is exactly the
+//! admission signal: this controller keeps a running sum of the predicted
+//! seconds of admitted-but-unfinished work and sheds arrivals once that
+//! drain time would exceed a configured budget.
+//!
+//! Decisions, in order, per arrival (see `Coordinator::submit_with`):
+//!
+//! 1. **Overload shed** — `queued + cost > budget` →
+//!    [`Rejected::Overloaded`] with a `retry_after` hint equal to the
+//!    predicted drain time of the excess.
+//! 2. **Predicted deadline miss** — the request carries a deadline and
+//!    `queued + cost` exceeds what's left of it →
+//!    [`Rejected::DeadlineExceeded`] *before* any bandwidth is burned.
+//! 3. **Degradation ladder** — past [`DEGRADE_FRAC`] of the budget,
+//!    best-effort decode requests are downgraded to a cheaper execution
+//!    (clamped top-k candidate budget, nucleus scan off) instead of shed.
+//! 4. Admit: `queued += cost`; the exact cost is released when the
+//!    request leaves the queue (executed, failed, or deadline-dropped).
+//!
+//! The controller is deliberately approximate — it prices single requests
+//! with the same model the planner trusts for placement, and its error is
+//! bounded by the model's — but it is *load-proportional*: an attacker
+//! cycling through giant rows saturates the seconds budget immediately,
+//! where a count bound would happily queue minutes of work.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::config::ServeConfig;
+use crate::costmodel;
+use crate::sampling::SamplingParams;
+use crate::softmax::Algorithm;
+
+use super::request::{Payload, Rejected};
+
+/// Pricing bandwidth (GB/s) when no STREAM measurement is available —
+/// deliberately conservative (below most DDR4 single-thread Scale rates)
+/// so an unmeasured host sheds early rather than late.
+pub const DEFAULT_GBPS: f64 = 8.0;
+
+/// Fraction of the seconds budget past which the degradation ladder
+/// engages for best-effort requests.
+pub const DEGRADE_FRAC: f64 = 0.5;
+
+/// Candidate budget a degraded decode request is clamped to: enough for
+/// useful sampling, small enough that the selector's heap work and any
+/// nucleus re-scan stop scaling with the client's ask.
+pub const DEGRADED_TOP_K: usize = 8;
+
+/// What admission decided for one accepted request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Admitted {
+    /// Predicted cost charged to the queue (release exactly this much).
+    pub cost_secs: f64,
+    /// The ladder says degrade (applied only to best-effort requests).
+    pub degrade: bool,
+}
+
+/// The admission controller.  One per coordinator, in front of the
+/// batcher; `None` (admission off) when the configured budget is zero.
+pub struct Admission {
+    budget_secs: f64,
+    gbps: f64,
+    algorithm: Algorithm,
+    /// Predicted seconds of admitted-but-unfinished work.  A `Mutex<f64>`
+    /// (not atomics): the critical sections are a handful of arithmetic
+    /// ops, and admission runs on client threads, never inside a kernel.
+    queued_secs: Mutex<f64>,
+}
+
+impl Admission {
+    pub fn new(budget: Duration, gbps: f64, algorithm: Algorithm) -> Admission {
+        Admission {
+            budget_secs: budget.as_secs_f64(),
+            gbps: if gbps > 0.0 { gbps } else { DEFAULT_GBPS },
+            algorithm,
+            queued_secs: Mutex::new(0.0),
+        }
+    }
+
+    /// Build from config: `None` when `admission_budget_ms` is 0 (off).
+    /// Prices with the measured STREAM bandwidth when the launcher
+    /// resolved one, [`DEFAULT_GBPS`] otherwise.
+    pub fn from_config(cfg: &ServeConfig) -> Option<Admission> {
+        if cfg.admission_budget_ms == 0 {
+            return None;
+        }
+        Some(Admission::new(
+            Duration::from_millis(cfg.admission_budget_ms),
+            cfg.stream_gbps.unwrap_or(DEFAULT_GBPS),
+            cfg.algorithm,
+        ))
+    }
+
+    /// Predicted seconds one request costs to serve.  Normalization
+    /// requests move the algorithm's full per-element traffic; decode
+    /// requests are priced at the accumulation pass's single read of the
+    /// row (the fused path's whole point — no store pass ever runs).
+    pub fn price(&self, payload: &Payload) -> f64 {
+        let n = payload.len().max(1);
+        let esz = payload.dtype().size();
+        match payload {
+            Payload::Decode { .. } | Payload::DecodeHalf { .. } => {
+                (n * esz) as f64 / (self.gbps * 1e9)
+            }
+            _ => costmodel::predict_batch_secs(self.algorithm, 1, n, esz, self.gbps),
+        }
+    }
+
+    /// Admit or reject one arrival (see the module docs for the decision
+    /// order).  On `Ok` the queue has been charged `cost_secs`; the
+    /// caller must [`release`](Admission::release) that amount when the
+    /// request leaves the queue — including when a later stage drops it.
+    pub fn try_admit(
+        &self,
+        payload: &Payload,
+        deadline_left: Option<Duration>,
+    ) -> Result<Admitted, Rejected> {
+        let cost = self.price(payload);
+        let mut queued = self.queued_secs.lock().unwrap();
+        let after = *queued + cost;
+        if after > self.budget_secs {
+            let excess = after - self.budget_secs;
+            return Err(Rejected::Overloaded {
+                retry_after_us: ((excess * 1e6).ceil() as u64).max(1),
+            });
+        }
+        if let Some(left) = deadline_left {
+            // `queued` is the predicted wait before this request starts;
+            // if wait + its own cost already overruns the deadline, the
+            // execution would be wasted bandwidth.
+            if after > left.as_secs_f64() {
+                return Err(Rejected::DeadlineExceeded { waited_us: 0 });
+            }
+        }
+        let degrade = after > DEGRADE_FRAC * self.budget_secs;
+        *queued = after;
+        Ok(Admitted { cost_secs: cost, degrade })
+    }
+
+    /// Release previously admitted work (request executed, failed,
+    /// rejected downstream, or dropped at shutdown).
+    pub fn release(&self, cost_secs: f64) {
+        let mut queued = self.queued_secs.lock().unwrap();
+        *queued = (*queued - cost_secs).max(0.0);
+    }
+
+    /// Predicted seconds of work currently admitted (metrics/tests).
+    pub fn queued_secs(&self) -> f64 {
+        *self.queued_secs.lock().unwrap()
+    }
+
+    pub fn budget_secs(&self) -> f64 {
+        self.budget_secs
+    }
+
+    /// Apply the degradation ladder to one best-effort decode request's
+    /// params: clamp the candidate budget to [`DEGRADED_TOP_K`] and turn
+    /// the nucleus scan off (its budget-doubling re-scans are the
+    /// unbounded part of decode cost).  Returns whether anything changed
+    /// (the metrics `degraded` counter only counts real downgrades).
+    pub fn degrade_decode(params: &mut SamplingParams) -> bool {
+        let mut changed = false;
+        if params.top_k == 0 || params.top_k > DEGRADED_TOP_K {
+            params.top_k = DEGRADED_TOP_K;
+            changed = true;
+        }
+        if params.top_p < 1.0 {
+            params.top_p = 1.0;
+            changed = true;
+        }
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(n: usize) -> Payload {
+        Payload::Logits(vec![0.0; n])
+    }
+
+    // 3N f32 traffic at 1 GB/s: cost(n) = 12n ns — big ns per element so
+    // the budgets below are exact, hardware-independent arithmetic.
+    fn adm(budget_ms: u64) -> Admission {
+        Admission::new(Duration::from_millis(budget_ms), 1.0, Algorithm::TwoPass)
+    }
+
+    #[test]
+    fn prices_scale_with_shape_and_kind() {
+        let a = adm(100);
+        let small = a.price(&payload(1024));
+        let big = a.price(&payload(4096));
+        assert!((big / small - 4.0).abs() < 1e-9, "cost is linear in n");
+        // Decode moves 1N (one fused read), normalize 3N.
+        let dec = a.price(&Payload::Decode {
+            logits: vec![0.0; 4096],
+            params: SamplingParams::default(),
+        });
+        assert!((big / dec - 3.0).abs() < 1e-9, "decode prices at 1N vs two-pass 3N");
+        // Half-width rows move half the bytes.
+        let half = a.price(&Payload::LogitsHalf {
+            bits: vec![0; 4096],
+            dtype: crate::softmax::Dtype::Bf16,
+        });
+        assert!((big / half - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sheds_past_the_budget_with_a_drain_hint() {
+        // Budget 1 ms = 1e-3 s; each n=16384 f32 request costs
+        // 3*16384*4 / 1e9 = 196.6 µs → 5 fit, the 6th overflows.
+        let a = adm(1);
+        for _ in 0..5 {
+            a.try_admit(&payload(16384), None).expect("fits the budget");
+        }
+        let rej = a.try_admit(&payload(16384), None).unwrap_err();
+        match rej {
+            Rejected::Overloaded { retry_after_us } => {
+                // Excess = 6*196.6µs - 1000µs ≈ 180µs.
+                assert!(
+                    (100..400).contains(&retry_after_us),
+                    "hint {retry_after_us}us should be the excess drain time"
+                );
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // Releasing one admits the next.
+        let cost = a.price(&payload(16384));
+        a.release(cost);
+        a.try_admit(&payload(16384), None).expect("freed budget readmits");
+    }
+
+    #[test]
+    fn predicted_deadline_misses_are_rejected_before_execution() {
+        let a = adm(1000);
+        // Fill ~2ms of work, then ask for a 1ms deadline: predicted wait
+        // alone overruns it.
+        for _ in 0..11 {
+            a.try_admit(&payload(16384), None).unwrap();
+        }
+        assert!(a.queued_secs() > 2.0e-3);
+        let rej = a.try_admit(&payload(16384), Some(Duration::from_millis(1))).unwrap_err();
+        assert_eq!(rej, Rejected::DeadlineExceeded { waited_us: 0 });
+        // A generous deadline still admits.
+        a.try_admit(&payload(16384), Some(Duration::from_secs(1))).unwrap();
+    }
+
+    #[test]
+    fn degrade_ladder_engages_past_half_budget() {
+        let a = adm(1);
+        // First request: queue nearly empty, no degradation.
+        let first = a.try_admit(&payload(16384), None).unwrap();
+        assert!(!first.degrade);
+        // Past 50% of the budget (500µs): degrade.
+        let mut last = first;
+        for _ in 0..3 {
+            last = a.try_admit(&payload(16384), None).unwrap();
+        }
+        assert!(last.degrade, "queued {}s of 0.001s budget", a.queued_secs());
+    }
+
+    #[test]
+    fn degrade_clamps_candidate_budgets() {
+        let mut p = SamplingParams { top_k: 0, top_p: 0.9, ..SamplingParams::default() };
+        assert!(Admission::degrade_decode(&mut p));
+        assert_eq!(p.top_k, DEGRADED_TOP_K);
+        assert_eq!(p.top_p, 1.0);
+        // Already cheaper than the clamp: untouched.
+        let mut q = SamplingParams { top_k: 4, top_p: 1.0, ..SamplingParams::default() };
+        assert!(!Admission::degrade_decode(&mut q));
+        assert_eq!(q.top_k, 4);
+    }
+
+    #[test]
+    fn release_floors_at_zero() {
+        let a = adm(10);
+        a.release(123.0);
+        assert_eq!(a.queued_secs(), 0.0);
+    }
+
+    #[test]
+    fn from_config_respects_the_off_switch() {
+        let cfg = ServeConfig::default();
+        assert!(Admission::from_config(&cfg).is_none(), "budget 0 = admission off");
+        let on = ServeConfig { admission_budget_ms: 50, ..ServeConfig::default() };
+        let a = Admission::from_config(&on).expect("budget > 0 enables admission");
+        assert!((a.budget_secs() - 0.05).abs() < 1e-12);
+    }
+}

@@ -105,6 +105,10 @@ impl Batcher {
                 }
                 drop(st);
                 self.cv.notify_all(); // capacity freed
+                // Fault-injection site (tests only; sleep/panic actions):
+                // evaluated after the lock drops so an injected stall
+                // delays this flush, not the whole queue.
+                crate::fail_point!("batcher.flush");
                 return Some(batch);
             }
             // Not full yet: wait for batchmates or the age deadline.

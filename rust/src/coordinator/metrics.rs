@@ -15,6 +15,16 @@ pub struct Metrics {
     pub failed: AtomicU64,
     pub batches: AtomicU64,
     pub rows: AtomicU64,
+    /// Requests shed by the admission controller (`Rejected::Overloaded`);
+    /// a subset of `rejected`.
+    pub shed: AtomicU64,
+    /// Requests dropped for an expired or unmeetable deadline
+    /// (`Rejected::DeadlineExceeded`, at submission, admission, or worker
+    /// dequeue); a subset of `rejected`.
+    pub deadline_missed: AtomicU64,
+    /// Best-effort requests actually downgraded by the degradation ladder
+    /// (admitted and served, so *not* counted in `rejected`).
+    pub degraded: AtomicU64,
     /// Execution-planner cache counters, shared (via `Arc`) with the
     /// router's planner at coordinator startup: a hit means the batch
     /// shape's placement was reused with zero re-derivation.
@@ -23,6 +33,9 @@ pub struct Metrics {
     queue_us: Mutex<Vec<f64>>,
     exec_us: Mutex<Vec<f64>>,
     e2e_us: Mutex<Vec<f64>>,
+    /// Batcher queue depth (requests), sampled at every batch dequeue —
+    /// the overload bench's saturation signal.
+    queue_depth: Mutex<Vec<f64>>,
 }
 
 /// Printable snapshot.
@@ -35,11 +48,15 @@ pub struct Snapshot {
     pub batches: u64,
     pub rows: u64,
     pub avg_batch: f64,
+    pub shed: u64,
+    pub deadline_missed: u64,
+    pub degraded: u64,
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
     pub queue_us: Option<stats::Summary>,
     pub exec_us: Option<stats::Summary>,
     pub e2e_us: Option<stats::Summary>,
+    pub queue_depth: Option<stats::Summary>,
 }
 
 impl Metrics {
@@ -57,6 +74,26 @@ impl Metrics {
         }
         self.queue_us.lock().unwrap().push(queue_us);
         self.e2e_us.lock().unwrap().push(e2e_us);
+    }
+
+    /// Record one typed rejection (total + the per-variant counter).
+    pub fn record_rejection(&self, rej: &super::request::Rejected) {
+        use super::request::Rejected;
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        match rej {
+            Rejected::Overloaded { .. } => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+            }
+            Rejected::DeadlineExceeded { .. } => {
+                self.deadline_missed.fetch_add(1, Ordering::Relaxed);
+            }
+            Rejected::QueueFull { .. } | Rejected::ShuttingDown => {}
+        }
+    }
+
+    /// Sample the batcher queue depth (called by workers at dequeue).
+    pub fn record_queue_depth(&self, depth: usize) {
+        self.queue_depth.lock().unwrap().push(depth as f64);
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -78,11 +115,15 @@ impl Metrics {
             batches,
             rows,
             avg_batch: if batches > 0 { rows as f64 / batches as f64 } else { 0.0 },
+            shed: self.shed.load(Ordering::Relaxed),
+            deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
             plan_cache_hits: self.plan_cache.hits(),
             plan_cache_misses: self.plan_cache.misses(),
             queue_us: summ(&self.queue_us),
             exec_us: summ(&self.exec_us),
             e2e_us: summ(&self.e2e_us),
+            queue_depth: summ(&self.queue_depth),
         }
     }
 }
@@ -101,6 +142,11 @@ impl std::fmt::Display for Snapshot {
         )?;
         writeln!(
             f,
+            "overload: {} shed, {} deadline-missed, {} degraded",
+            self.shed, self.deadline_missed, self.degraded
+        )?;
+        writeln!(
+            f,
             "plans:    {} cache hits, {} misses",
             self.plan_cache_hits, self.plan_cache_misses
         )?;
@@ -112,7 +158,15 @@ impl std::fmt::Display for Snapshot {
         };
         writeln!(f, "{}", line("queue ", &self.queue_us))?;
         writeln!(f, "{}", line("exec  ", &self.exec_us))?;
-        write!(f, "{}", line("e2e   ", &self.e2e_us))
+        writeln!(f, "{}", line("e2e   ", &self.e2e_us))?;
+        match &self.queue_depth {
+            Some(s) => write!(
+                f,
+                "depth : p50 {:.0} p95 {:.0} max {:.0} (requests at dequeue)",
+                s.median, s.p95, s.max
+            ),
+            None => write!(f, "depth : (no samples)"),
+        }
     }
 }
 
@@ -140,6 +194,29 @@ mod tests {
         let disp = s.to_string();
         assert!(disp.contains("avg batch 1.50"));
         assert!(disp.contains("cache hits"));
+    }
+
+    #[test]
+    fn rejections_split_by_variant() {
+        use crate::coordinator::request::Rejected;
+        let m = Metrics::default();
+        m.record_rejection(&Rejected::Overloaded { retry_after_us: 10 });
+        m.record_rejection(&Rejected::Overloaded { retry_after_us: 20 });
+        m.record_rejection(&Rejected::DeadlineExceeded { waited_us: 5 });
+        m.record_rejection(&Rejected::QueueFull { capacity: 8 });
+        m.record_queue_depth(3);
+        m.record_queue_depth(7);
+        let s = m.snapshot();
+        assert_eq!(s.rejected, 4);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.deadline_missed, 1);
+        assert_eq!(s.degraded, 0);
+        let depth = s.queue_depth.clone().unwrap();
+        assert_eq!(depth.n, 2);
+        assert_eq!(depth.max, 7.0);
+        let disp = s.to_string();
+        assert!(disp.contains("2 shed"), "{disp}");
+        assert!(disp.contains("1 deadline-missed"), "{disp}");
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! coord.shutdown();
 //! ```
 
+pub mod admission;
 pub mod batcher;
 pub mod metrics;
 pub mod request;
@@ -33,9 +34,13 @@ use anyhow::Result;
 
 use crate::config::ServeConfig;
 
+pub use admission::Admission;
 pub use batcher::{Batcher, PushError};
 pub use metrics::{Metrics, Snapshot};
-pub use request::{make_request, Handle, Payload, Request, Response};
+pub use request::{
+    make_request, make_request_with, Class, Handle, Payload, Rejected, Request, Response,
+    SubmitOptions,
+};
 pub use router::{Executed, Router};
 
 use crate::sampling::SamplingParams;
@@ -45,6 +50,9 @@ use crate::softmax::Dtype;
 pub struct Coordinator {
     batcher: Arc<Batcher>,
     metrics: Arc<Metrics>,
+    /// Predicted-seconds admission controller; `None` = admission off
+    /// (`admission_budget_ms = 0`), only `queue_capacity` backpressure.
+    admission: Option<Arc<Admission>>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
 }
@@ -68,27 +76,85 @@ impl Coordinator {
         // misses through the coordinator metrics.
         router.attach_plan_counters(metrics.plan_cache.clone());
         let router = Arc::new(router);
+        let admission = Admission::from_config(cfg).map(Arc::new);
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
                 let b = batcher.clone();
                 let m = metrics.clone();
                 let r = router.clone();
-                std::thread::spawn(move || worker_loop(&b, &m, &r))
+                let a = admission.clone();
+                std::thread::spawn(move || worker_loop(&b, &m, &r, a.as_deref()))
             })
             .collect();
-        Coordinator { batcher, metrics, workers, next_id: AtomicU64::new(1) }
+        Coordinator { batcher, metrics, admission, workers, next_id: AtomicU64::new(1) }
     }
 
-    /// Submit a request; fails fast under backpressure.
-    pub fn submit(&self, payload: Payload) -> Result<Handle, PushError> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (req, handle) = make_request(id, payload);
+    /// Submit a request (no deadline, standard class); fails fast with a
+    /// typed [`Rejected`] under backpressure or admission shed.
+    pub fn submit(&self, payload: Payload) -> Result<Handle, Rejected> {
+        self.submit_with(payload, SubmitOptions::default())
+    }
+
+    /// Submit with per-request options (deadline, service class).
+    ///
+    /// The overload-defense decision chain, in order:
+    /// 1. admission control — predicted-seconds budget exhausted →
+    ///    [`Rejected::Overloaded`]; deadline provably unmeetable →
+    ///    [`Rejected::DeadlineExceeded`] (nothing executed either way);
+    /// 2. degradation — under sustained load, best-effort decode requests
+    ///    are downgraded to a cheaper execution instead of shed;
+    /// 3. queue backpressure — [`Rejected::QueueFull`] /
+    ///    [`Rejected::ShuttingDown`] from the batcher.
+    ///
+    /// Requests that pass all three can still be dropped later: a worker
+    /// re-checks the deadline at dequeue and answers expired work with a
+    /// `Response { rejected: Some(DeadlineExceeded), .. }` instead of
+    /// executing it.
+    pub fn submit_with(
+        &self,
+        mut payload: Payload,
+        opts: SubmitOptions,
+    ) -> Result<Handle, Rejected> {
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let mut cost_secs = 0.0;
+        if let Some(adm) = &self.admission {
+            match adm.try_admit(&payload, opts.deadline) {
+                Ok(admitted) => {
+                    cost_secs = admitted.cost_secs;
+                    if admitted.degrade && opts.class == Class::BestEffort {
+                        let changed = match &mut payload {
+                            Payload::Decode { params, .. }
+                            | Payload::DecodeHalf { params, .. } => {
+                                Admission::degrade_decode(params)
+                            }
+                            _ => false,
+                        };
+                        if changed {
+                            self.metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                Err(rej) => {
+                    self.metrics.record_rejection(&rej);
+                    return Err(rej);
+                }
+            }
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (req, handle) = make_request_with(id, payload, opts, cost_secs);
         match self.batcher.push(req) {
             Ok(()) => Ok(handle),
             Err(e) => {
-                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(e)
+                // The request never queued: give its admission charge back.
+                if let Some(adm) = &self.admission {
+                    adm.release(cost_secs);
+                }
+                let rej = match e {
+                    PushError::QueueFull { capacity } => Rejected::QueueFull { capacity },
+                    PushError::ShuttingDown => Rejected::ShuttingDown,
+                };
+                self.metrics.record_rejection(&rej);
+                Err(rej)
             }
         }
     }
@@ -147,6 +213,12 @@ impl Coordinator {
         self.batcher.depth()
     }
 
+    /// Predicted seconds of admitted-but-unfinished work, when admission
+    /// control is on (tests and the overload bench read this).
+    pub fn admission_queued_secs(&self) -> Option<f64> {
+        self.admission.as_ref().map(|a| a.queued_secs())
+    }
+
     /// Drain the queue and stop the workers.
     pub fn shutdown(self) {
         self.batcher.shutdown();
@@ -156,73 +228,168 @@ impl Coordinator {
     }
 }
 
-fn worker_loop(batcher: &Batcher, metrics: &Metrics, router: &Router) {
-    while let Some(mut batch) = batcher.take_batch() {
-        let exec_start = Instant::now();
-        // Move the payloads out of the requests instead of deep-copying the
-        // logits on the hot path (§Perf: ~6% of serve time at N=8192); the
-        // router consumes them into one flat row-major batch and returns
-        // the outputs the same way.
-        let payloads: Vec<Payload> = batch
-            .iter_mut()
-            .map(|r| std::mem::replace(&mut r.payload, Payload::Logits(Vec::new())))
-            .collect();
-        let batch_size = batch.len();
-        let result = router.execute(payloads).and_then(|out| {
-            if out.len() == batch_size {
-                Ok(out)
-            } else {
-                Err(anyhow::anyhow!(
-                    "router returned {} results for {batch_size} requests",
-                    out.len()
-                ))
-            }
-        });
-        let exec_us = exec_start.elapsed().as_secs_f64() * 1e6;
-        metrics.record_batch(batch_size, exec_us);
-
-        match result {
-            Ok(out) => {
-                for (i, req) in batch.into_iter().enumerate() {
-                    let queue_us =
-                        exec_start.duration_since(req.enqueued).as_secs_f64() * 1e6;
-                    let e2e_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
-                    metrics.record_request(queue_us, e2e_us, true);
-                    // Decode batches answer with a token, softmax/LM
-                    // batches with a probability row (widened to f32 at
-                    // assembly when the batch executed at half width —
-                    // responses are f32 regardless of logits dtype).
-                    let (probs, token) = match &out {
-                        Executed::Rows(b) => (b.row_f32(i), None),
-                        Executed::Choices(c) => (Vec::new(), Some(c[i])),
-                    };
-                    let _ = req.tx.send(Response {
-                        id: req.id,
-                        probs,
-                        token,
-                        queue_us: queue_us as u64,
-                        exec_us: exec_us as u64,
-                        batch_size,
-                        error: None,
-                    });
-                }
-            }
-            Err(e) => {
-                let msg = e.to_string();
-                for req in batch {
-                    let queue_us =
-                        exec_start.duration_since(req.enqueued).as_secs_f64() * 1e6;
-                    metrics.record_request(queue_us, queue_us + exec_us, false);
+fn worker_loop(
+    batcher: &Batcher,
+    metrics: &Metrics,
+    router: &Router,
+    admission: Option<&Admission>,
+) {
+    while let Some(batch) = batcher.take_batch() {
+        metrics.record_queue_depth(batcher.depth());
+        // Deadline re-check at dequeue: anything that expired while queued
+        // is answered with a typed rejection, never executed — under
+        // overload the expensive thing is precisely the work nobody is
+        // still waiting for.
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(batch.len());
+        for req in batch {
+            match req.deadline {
+                Some(d) if d <= now => {
+                    if let Some(adm) = admission {
+                        adm.release(req.cost_secs);
+                    }
+                    let waited_us = now.duration_since(req.enqueued).as_micros() as u64;
+                    let rej = Rejected::DeadlineExceeded { waited_us };
+                    metrics.record_rejection(&rej);
                     let _ = req.tx.send(Response {
                         id: req.id,
                         probs: Vec::new(),
                         token: None,
-                        queue_us: queue_us as u64,
-                        exec_us: exec_us as u64,
-                        batch_size,
-                        error: Some(msg.clone()),
+                        queue_us: waited_us,
+                        exec_us: 0,
+                        batch_size: 0,
+                        error: None,
+                        rejected: Some(rej),
                     });
                 }
+                _ => live.push(req),
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+        // Defense in depth: split the flush into runs of equal batch keys
+        // before execution.  The batcher guarantees single-key batches,
+        // but if that invariant ever breaks (or the deadline filter above
+        // leaves a gap between runs), each run degrades to its own smaller
+        // executed batch instead of the whole flush dying on a
+        // mixed-shape/mixed-dtype error.
+        let mut groups: Vec<Vec<Request>> = Vec::new();
+        let mut last_key = None;
+        for req in live {
+            let key = req.payload.batch_key();
+            if last_key != Some(key) {
+                groups.push(Vec::new());
+                last_key = Some(key);
+            }
+            groups.last_mut().unwrap().push(req);
+        }
+        for group in groups {
+            execute_group(group, metrics, router, admission);
+        }
+    }
+}
+
+/// Extract a human-readable message from a caught panic payload.  `&str`
+/// and `String` payloads (everything `panic!` produces) survive verbatim.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Execute one single-key group of requests and answer each of them.
+fn execute_group(
+    mut batch: Vec<Request>,
+    metrics: &Metrics,
+    router: &Router,
+    admission: Option<&Admission>,
+) {
+    let exec_start = Instant::now();
+    // Move the payloads out of the requests instead of deep-copying the
+    // logits on the hot path (§Perf: ~6% of serve time at N=8192); the
+    // router consumes them into one flat row-major batch and returns
+    // the outputs the same way.
+    let payloads: Vec<Payload> = batch
+        .iter_mut()
+        .map(|r| std::mem::replace(&mut r.payload, Payload::Logits(Vec::new())))
+        .collect();
+    let batch_size = batch.len();
+    // Panics out of execution (a kernel bug, an injected pool fault) are
+    // confined to this batch: its requests get error responses carrying
+    // the panic message and the worker thread survives to take the next
+    // batch.  Safe to catch here: the pool's submit path joins every
+    // outstanding job before propagating a panic, so no borrowed batch
+    // memory is still referenced when the unwind reaches us.
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        router.execute(payloads)
+    }))
+    .unwrap_or_else(|p| Err(anyhow::anyhow!("execution panicked: {}", panic_message(&*p))))
+    .and_then(|out| {
+        if out.len() == batch_size {
+            Ok(out)
+        } else {
+            Err(anyhow::anyhow!(
+                "router returned {} results for {batch_size} requests",
+                out.len()
+            ))
+        }
+    });
+    let exec_us = exec_start.elapsed().as_secs_f64() * 1e6;
+    metrics.record_batch(batch_size, exec_us);
+    // Executed (or failed) work has left the queue either way: release
+    // its admission charge so new arrivals see the drained budget.
+    if let Some(adm) = admission {
+        for req in &batch {
+            adm.release(req.cost_secs);
+        }
+    }
+
+    match result {
+        Ok(out) => {
+            for (i, req) in batch.into_iter().enumerate() {
+                let queue_us = exec_start.duration_since(req.enqueued).as_secs_f64() * 1e6;
+                let e2e_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
+                metrics.record_request(queue_us, e2e_us, true);
+                // Decode batches answer with a token, softmax/LM
+                // batches with a probability row (widened to f32 at
+                // assembly when the batch executed at half width —
+                // responses are f32 regardless of logits dtype).
+                let (probs, token) = match &out {
+                    Executed::Rows(b) => (b.row_f32(i), None),
+                    Executed::Choices(c) => (Vec::new(), Some(c[i])),
+                };
+                let _ = req.tx.send(Response {
+                    id: req.id,
+                    probs,
+                    token,
+                    queue_us: queue_us as u64,
+                    exec_us: exec_us as u64,
+                    batch_size,
+                    error: None,
+                    rejected: None,
+                });
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for req in batch {
+                let queue_us = exec_start.duration_since(req.enqueued).as_secs_f64() * 1e6;
+                metrics.record_request(queue_us, queue_us + exec_us, false);
+                let _ = req.tx.send(Response {
+                    id: req.id,
+                    probs: Vec::new(),
+                    token: None,
+                    queue_us: queue_us as u64,
+                    exec_us: exec_us as u64,
+                    batch_size,
+                    error: Some(msg.clone()),
+                    rejected: None,
+                });
             }
         }
     }
@@ -381,6 +548,154 @@ mod tests {
         let snap = c.metrics();
         assert_eq!(snap.completed, 100);
         Arc::try_unwrap(c).ok().unwrap().shutdown();
+    }
+
+    #[test]
+    fn expired_deadlines_are_rejected_at_dequeue_not_executed() {
+        // One worker, a queue that only flushes on age: the 1ms deadline
+        // is long dead by the time the batch dequeues at ~30ms.
+        let cfg = ServeConfig {
+            max_batch: 64,
+            workers: 1,
+            max_wait_us: 30_000,
+            queue_capacity: 4096,
+            ..ServeConfig::default()
+        };
+        let c = Coordinator::start_with_router(&cfg, native());
+        let h = c
+            .submit_with(
+                Payload::Logits(vec![1.0; 64]),
+                SubmitOptions::with_deadline(Duration::from_millis(1)),
+            )
+            .unwrap();
+        let r = h.wait().unwrap();
+        match r.rejected {
+            Some(Rejected::DeadlineExceeded { waited_us }) => {
+                assert!(waited_us >= 1_000, "waited {waited_us}us");
+            }
+            other => panic!("expected a deadline rejection, got {other:?}"),
+        }
+        assert!(r.probs.is_empty());
+        assert!(r.error.is_none(), "a rejection is not an execution failure");
+        let snap = c.metrics();
+        assert_eq!(snap.deadline_missed, 1);
+        assert_eq!(snap.completed, 0, "expired work must never execute");
+        c.shutdown();
+    }
+
+    #[test]
+    fn admission_sheds_under_predicted_overload() {
+        // Hold the queue (age-only flush at 200ms) so the budget cannot
+        // drain while we submit.  At 1 GB/s each n=16384 f32 request
+        // costs 3*16384*4/1e9 ≈ 197µs: five fit the 1ms budget, the
+        // sixth must shed with a positive retry hint.
+        let cfg = ServeConfig {
+            admission_budget_ms: 1,
+            stream_gbps: Some(1.0),
+            max_batch: 64,
+            workers: 1,
+            max_wait_us: 200_000,
+            queue_capacity: 4096,
+            ..ServeConfig::default()
+        };
+        let c = Coordinator::start_with_router(&cfg, native());
+        let mut handles = Vec::new();
+        let mut shed = None;
+        for _ in 0..6 {
+            match c.submit(Payload::Logits(vec![0.5; 16384])) {
+                Ok(h) => handles.push(h),
+                Err(r) => {
+                    shed = Some(r);
+                    break;
+                }
+            }
+        }
+        let rej = shed.expect("sixth arrival overflows the predicted-seconds budget");
+        assert!(
+            matches!(rej, Rejected::Overloaded { retry_after_us } if retry_after_us > 0),
+            "{rej:?}"
+        );
+        assert_eq!(c.metrics().shed, 1);
+        assert!(c.admission_queued_secs().unwrap() > 0.0);
+        // Shutdown drains the held queue; every admitted request is served
+        // and its admission charge released.
+        c.shutdown();
+        for h in handles {
+            assert!(h.wait().unwrap().error.is_none());
+        }
+    }
+
+    #[test]
+    fn best_effort_decode_degrades_under_load_standard_does_not() {
+        let cfg = ServeConfig {
+            admission_budget_ms: 1,
+            stream_gbps: Some(1.0),
+            max_batch: 64,
+            workers: 1,
+            max_wait_us: 200_000,
+            queue_capacity: 4096,
+            ..ServeConfig::default()
+        };
+        let c = Coordinator::start_with_router(&cfg, native());
+        // Fill past half the budget (3 × 197µs > 500µs) to engage the
+        // degradation ladder.
+        let _fill: Vec<_> =
+            (0..3).map(|_| c.submit(Payload::Logits(vec![0.5; 16384])).unwrap()).collect();
+        let decode = Payload::Decode {
+            logits: vec![0.1; 4096],
+            params: SamplingParams { top_k: 0, seed: 3, ..SamplingParams::default() },
+        };
+        let _be = c.submit_with(decode.clone(), SubmitOptions::best_effort()).unwrap();
+        assert_eq!(c.metrics().degraded, 1, "best-effort decode downgraded");
+        let _std = c.submit_with(decode, SubmitOptions::default()).unwrap();
+        assert_eq!(c.metrics().degraded, 1, "standard class is never degraded");
+        c.shutdown();
+    }
+
+    #[test]
+    fn mixed_key_flushes_execute_per_group() {
+        // Hand the execution path a deliberately mixed flush (interleaved
+        // keys, which the batcher normally never emits) and check every
+        // request is still answered correctly in its own single-key group.
+        let metrics = Metrics::default();
+        let router = native();
+        let mut rxs = Vec::new();
+        let payloads = [
+            Payload::Logits(vec![1.0; 8]),
+            Payload::Logits(vec![2.0; 16]),
+            Payload::Logits(vec![3.0; 8]),
+            Payload::Decode { logits: vec![9.0; 8], params: SamplingParams::greedy() },
+        ];
+        let mut batch = Vec::new();
+        for (i, p) in payloads.into_iter().enumerate() {
+            let (req, h) = make_request(i as u64, p);
+            rxs.push(h);
+            batch.push(req);
+        }
+        let mut groups: Vec<Vec<Request>> = Vec::new();
+        let mut last_key = None;
+        for req in batch {
+            let key = req.payload.batch_key();
+            if last_key != Some(key) {
+                groups.push(Vec::new());
+                last_key = Some(key);
+            }
+            groups.last_mut().unwrap().push(req);
+        }
+        assert_eq!(groups.len(), 4, "interleaved keys split into runs");
+        for group in groups {
+            execute_group(group, &metrics, &router, None);
+        }
+        let r0 = rxs.remove(0).wait().unwrap();
+        assert_eq!(r0.probs.len(), 8);
+        assert!(r0.error.is_none());
+        let r1 = rxs.remove(0).wait().unwrap();
+        assert_eq!(r1.probs.len(), 16);
+        let r2 = rxs.remove(0).wait().unwrap();
+        assert_eq!(r2.probs.len(), 8);
+        let r3 = rxs.remove(0).wait().unwrap();
+        assert!(r3.token.is_some());
+        assert_eq!(metrics.snapshot().completed, 4);
     }
 
     #[test]

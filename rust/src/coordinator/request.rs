@@ -1,10 +1,62 @@
 //! Request/response types and the one-shot completion channel.
 
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::sampling::{Choice, SamplingParams};
 use crate::softmax::Dtype;
+
+/// Service class of a request: what the overload-defense layer may do to
+/// it before shedding it outright (see `coordinator::admission`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Class {
+    /// Never degraded: served as submitted or rejected.
+    #[default]
+    Standard,
+    /// Under sustained overload the admission controller may downgrade
+    /// this request to a cheaper execution (e.g. a clamped top-k
+    /// candidate budget for decode) before shedding it.
+    BestEffort,
+}
+
+/// Why the coordinator refused to serve a request.  A typed rejection is
+/// a *successful* response in the protocol sense: the client gets a
+/// [`Response`] with `rejected: Some(..)` (or an `Err` from `submit` for
+/// rejections decided before the request ever queued) and can act on the
+/// variant — retry after a hint, resubmit with a looser deadline, or back
+/// off.  `docs/FORMATS.md` documents the wire fields.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Rejected {
+    /// The request's deadline expired (or admission predicted it could
+    /// not be met) — the work was dropped, **never executed**.
+    /// `waited_us` is how long the request had been queued when the
+    /// deadline check dropped it (0 when rejected at submission).
+    DeadlineExceeded { waited_us: u64 },
+    /// The admission controller's predicted-seconds queue budget is
+    /// exhausted; retry after roughly `retry_after_us` (the predicted
+    /// drain time of the excess work).
+    Overloaded { retry_after_us: u64 },
+    /// Hard request-count backpressure: the batcher queue is full.
+    QueueFull { capacity: usize },
+    ShuttingDown,
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejected::DeadlineExceeded { waited_us } => {
+                write!(f, "deadline exceeded after {waited_us}us in queue")
+            }
+            Rejected::Overloaded { retry_after_us } => {
+                write!(f, "overloaded; retry after {retry_after_us}us")
+            }
+            Rejected::QueueFull { capacity } => {
+                write!(f, "queue full (capacity {capacity})")
+            }
+            Rejected::ShuttingDown => write!(f, "shutting down"),
+        }
+    }
+}
 
 /// What a client wants normalized/served.
 #[derive(Debug, Clone, PartialEq)]
@@ -88,6 +140,17 @@ pub struct Request {
     pub id: u64,
     pub payload: Payload,
     pub enqueued: Instant,
+    /// Absolute completion deadline.  Checked at submission, at admission
+    /// (predicted drain + cost must fit the remaining budget), and again
+    /// when a worker dequeues the batch: expired requests are answered
+    /// with [`Rejected::DeadlineExceeded`] and never executed.
+    pub deadline: Option<Instant>,
+    /// Service class (see [`Class`]).
+    pub class: Class,
+    /// The admission controller's predicted cost of this request in
+    /// seconds (0 when admission is off).  Carried so the exact amount
+    /// admitted is released when the request leaves the queue.
+    pub cost_secs: f64,
     pub tx: mpsc::SyncSender<Response>,
 }
 
@@ -108,6 +171,11 @@ pub struct Response {
     pub batch_size: usize,
     /// Error message when serving failed (probs empty in that case).
     pub error: Option<String>,
+    /// Set when the coordinator refused the work (deadline miss detected
+    /// after queuing, load shed mid-queue): the request was dropped
+    /// without executing.  `probs` empty, `token` none, `error` none —
+    /// a rejection is a policy outcome, not an execution failure.
+    pub rejected: Option<Rejected>,
 }
 
 /// Client-side handle: await the response.
@@ -131,10 +199,55 @@ impl Handle {
     }
 }
 
-/// Create a request + its client handle.
+/// Create a request + its client handle (no deadline, standard class).
 pub fn make_request(id: u64, payload: Payload) -> (Request, Handle) {
+    make_request_with(id, payload, SubmitOptions::default(), 0.0)
+}
+
+/// Per-submission options for `Coordinator::submit_with`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOptions {
+    /// Time budget from submission to response; expired work is dropped
+    /// with [`Rejected::DeadlineExceeded`] instead of executed.
+    pub deadline: Option<Duration>,
+    /// Service class (see [`Class`]).
+    pub class: Class,
+}
+
+impl SubmitOptions {
+    /// Standard-class submission with a deadline.
+    pub fn with_deadline(d: Duration) -> SubmitOptions {
+        SubmitOptions { deadline: Some(d), class: Class::Standard }
+    }
+
+    /// Best-effort submission (degradable under overload), no deadline.
+    pub fn best_effort() -> SubmitOptions {
+        SubmitOptions { deadline: None, class: Class::BestEffort }
+    }
+}
+
+/// Create a request + its client handle with explicit submit options and
+/// admission cost.
+pub fn make_request_with(
+    id: u64,
+    payload: Payload,
+    opts: SubmitOptions,
+    cost_secs: f64,
+) -> (Request, Handle) {
     let (tx, rx) = mpsc::sync_channel(1);
-    (Request { id, payload, enqueued: Instant::now(), tx }, Handle { id, rx })
+    let enqueued = Instant::now();
+    (
+        Request {
+            id,
+            payload,
+            enqueued,
+            deadline: opts.deadline.map(|d| enqueued + d),
+            class: opts.class,
+            cost_secs,
+            tx,
+        },
+        Handle { id, rx },
+    )
 }
 
 #[cfg(test)]
@@ -215,9 +328,34 @@ mod tests {
             exec_us: 2,
             batch_size: 1,
             error: None,
+            rejected: None,
         };
         req.tx.send(resp.clone()).unwrap();
         let got = handle.wait().unwrap();
         assert_eq!(got.probs, resp.probs);
+        assert_eq!(req.class, Class::Standard);
+        assert_eq!(req.deadline, None);
+    }
+
+    #[test]
+    fn deadlines_and_classes_ride_the_request() {
+        let opts = SubmitOptions::with_deadline(Duration::from_millis(5));
+        let (req, _h) = make_request_with(1, Payload::Logits(vec![1.0]), opts, 0.25);
+        let d = req.deadline.expect("deadline set");
+        assert!(d > req.enqueued && d <= req.enqueued + Duration::from_millis(5));
+        assert_eq!(req.cost_secs, 0.25);
+        let be = SubmitOptions::best_effort();
+        let (req2, _h2) = make_request_with(2, Payload::Logits(vec![1.0]), be, 0.0);
+        assert_eq!(req2.class, Class::BestEffort);
+        assert!(req2.deadline.is_none());
+    }
+
+    #[test]
+    fn rejection_display_is_actionable() {
+        let s = Rejected::Overloaded { retry_after_us: 1500 }.to_string();
+        assert!(s.contains("1500us"), "{s}");
+        let s = Rejected::DeadlineExceeded { waited_us: 90 }.to_string();
+        assert!(s.contains("deadline"), "{s}");
+        assert!(Rejected::QueueFull { capacity: 4 }.to_string().contains("4"));
     }
 }

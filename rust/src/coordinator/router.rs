@@ -86,6 +86,18 @@ impl NativeEngine {
         let plan = self.planner.plan_dtype(PlanOp::Decode, x.dtype(), x.rows(), x.n());
         sampling::sample_batch_planned(&plan, x, params).map_err(|e| anyhow!("{e}"))
     }
+
+    /// [`NativeEngine::decode`] for a batch the caller owns outright —
+    /// the serving path.  Ownership is what makes the plan's per-job
+    /// pool timeout sound to arm: if a pooled decode job wedges past the
+    /// heartbeat, the batch and parameter storage are leaked (a
+    /// quarantined worker may still hold pointers into them) and the
+    /// whole batch fails with a timeout error instead of hanging the
+    /// coordinator worker forever.
+    pub fn decode_owned(&self, x: RowBatch, params: Vec<SamplingParams>) -> Result<Vec<Choice>> {
+        let plan = self.planner.plan_dtype(PlanOp::Decode, x.dtype(), x.rows(), x.n());
+        sampling::sample_batch_planned_owned(&plan, x, params).map_err(|e| anyhow!("{e}"))
+    }
 }
 
 /// What one executed batch produced: one output row per request
@@ -344,7 +356,9 @@ impl Router {
             Router::Native(e) => e,
             Router::Pjrt { native, .. } => native,
         };
-        engine.decode(&x, &params)
+        // The router owns the freshly assembled batch, so the timed
+        // (leak-on-timeout) decode path is sound here.
+        engine.decode_owned(x, params)
     }
 }
 

@@ -1,0 +1,166 @@
+//! Fault injection for robustness tests (`--features failpoints`).
+//!
+//! A *failpoint* is a named site in the serving stack where a test can
+//! inject a fault: a sleep (wedged-worker simulation), a panic (kernel
+//! crash simulation; the payload is a `String`, exercising the pool's
+//! payload-preserving panic reporting), or a typed error return.  The
+//! sites are compiled in **only** under the `failpoints` feature — the
+//! [`fail_point!`](crate::fail_point) macro expands to nothing without it,
+//! so release builds carry zero failpoint code, not even a branch (CI
+//! greps pin every `failpoint::` reference to this module).
+//!
+//! Current injection sites (names are stable test API):
+//!
+//! | name                 | where                                        | honored actions |
+//! |----------------------|----------------------------------------------|-----------------|
+//! | `pool.run_job`       | pool worker, before executing a `BatchJob`   | all             |
+//! | `batcher.flush`      | batcher, as a flushed batch leaves the queue | sleep, panic    |
+//! | `pjrt.exec_softmax`  | PJRT service, before artifact execution      | all (error-capable site) |
+//!
+//! Usage from a test:
+//!
+//! ```ignore
+//! failpoint::configure("pool.run_job", FailAction::Sleep(Duration::from_millis(500)), Some(1));
+//! // ... drive the serving stack ...
+//! failpoint::clear_all();
+//! ```
+//!
+//! Configuration is process-global (the pool and coordinator are shared
+//! state); tests that configure failpoints must serialize themselves
+//! (see `tests/integration_overload.rs`).
+
+#[cfg(feature = "failpoints")]
+use std::collections::HashMap;
+#[cfg(feature = "failpoints")]
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// What a triggered failpoint does at its site.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FailAction {
+    /// Block the site for this long (a wedged worker / slow flush).
+    Sleep(Duration),
+    /// Panic at the site with this message — deliberately a `String`
+    /// payload, the case the pool's panic reporting must preserve.
+    Panic(String),
+    /// Make the site fail with this message, where the site can return
+    /// an error (sites that can't treat it as a no-op).
+    Error(String),
+}
+
+#[cfg(feature = "failpoints")]
+struct Entry {
+    action: FailAction,
+    /// Remaining trigger count; `None` = unlimited.
+    remaining: Option<usize>,
+}
+
+#[cfg(feature = "failpoints")]
+fn registry() -> &'static Mutex<HashMap<String, Entry>> {
+    static REG: OnceLock<Mutex<HashMap<String, Entry>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Arm a failpoint: the next `times` evaluations of `name` perform
+/// `action` (`None` = every evaluation until [`clear`]).
+#[cfg(feature = "failpoints")]
+pub fn configure(name: &str, action: FailAction, times: Option<usize>) {
+    registry()
+        .lock()
+        .unwrap()
+        .insert(name.to_string(), Entry { action, remaining: times });
+}
+
+/// Disarm one failpoint.
+#[cfg(feature = "failpoints")]
+pub fn clear(name: &str) {
+    registry().lock().unwrap().remove(name);
+}
+
+/// Disarm every failpoint (test teardown).
+#[cfg(feature = "failpoints")]
+pub fn clear_all() {
+    registry().lock().unwrap().clear();
+}
+
+/// Evaluate a site: sleep or panic here, or hand an injected error
+/// message back to the site.  Called only through the
+/// [`fail_point!`](crate::fail_point) macro.
+#[cfg(feature = "failpoints")]
+pub fn eval(name: &str) -> Option<String> {
+    let action = {
+        let mut reg = registry().lock().unwrap();
+        let Some(entry) = reg.get_mut(name) else { return None };
+        let action = entry.action.clone();
+        if let Some(left) = &mut entry.remaining {
+            *left -= 1;
+            if *left == 0 {
+                reg.remove(name);
+            }
+        }
+        action
+    };
+    match action {
+        FailAction::Sleep(d) => {
+            std::thread::sleep(d);
+            None
+        }
+        // `panic!` with a format string carries a `String` payload.
+        FailAction::Panic(msg) => panic!("{}", msg),
+        FailAction::Error(msg) => Some(msg),
+    }
+}
+
+/// Evaluate the named failpoint at this site.  Two forms:
+///
+/// * `fail_point!("name")` — sleep/panic actions only; an `Error` action
+///   is ignored (the site has no error channel).
+/// * `fail_point!("name", |msg| expr)` — additionally, an `Error` action
+///   makes the enclosing function `return expr`, with `msg: String`.
+///
+/// Without the `failpoints` feature both forms expand to nothing.
+#[macro_export]
+macro_rules! fail_point {
+    ($name:expr) => {
+        #[cfg(feature = "failpoints")]
+        {
+            let _ = $crate::failpoint::eval($name);
+        }
+    };
+    ($name:expr, $on_err:expr) => {
+        #[cfg(feature = "failpoints")]
+        {
+            if let Some(msg) = $crate::failpoint::eval($name) {
+                return $on_err(msg);
+            }
+        }
+    };
+}
+
+#[cfg(all(test, feature = "failpoints"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_counts_and_clearing() {
+        configure("fp.test.count", FailAction::Error("boom".into()), Some(2));
+        assert_eq!(eval("fp.test.count"), Some("boom".into()));
+        assert_eq!(eval("fp.test.count"), Some("boom".into()));
+        assert_eq!(eval("fp.test.count"), None, "exhausted failpoints disarm");
+        configure("fp.test.clear", FailAction::Error("x".into()), None);
+        clear("fp.test.clear");
+        assert_eq!(eval("fp.test.clear"), None);
+    }
+
+    #[test]
+    fn error_form_returns_from_the_enclosing_function() {
+        fn site() -> Result<u32, String> {
+            crate::fail_point!("fp.test.ret", |msg: String| Err(msg));
+            Ok(7)
+        }
+        assert_eq!(site(), Ok(7));
+        configure("fp.test.ret", FailAction::Error("injected".into()), Some(1));
+        assert_eq!(site(), Err("injected".into()));
+        assert_eq!(site(), Ok(7));
+    }
+}

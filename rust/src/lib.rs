@@ -27,6 +27,7 @@ pub mod baseline;
 pub mod config;
 pub mod coordinator;
 pub mod costmodel;
+pub mod failpoint;
 pub mod figures;
 pub mod membw;
 pub mod plan;

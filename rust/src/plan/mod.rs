@@ -47,6 +47,7 @@ use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
 
 use crate::config::{Backend, ServeConfig};
 use crate::costmodel;
@@ -257,6 +258,14 @@ pub struct ExecPlan {
     pub gbps: Option<f64>,
     /// Predicted bandwidth-bound runtime in seconds at [`ExecPlan::gbps`].
     pub predicted_secs: Option<f64>,
+    /// Per-job pool heartbeat: how long `submit_jobs` waits for each
+    /// pooled chunk's completion before quarantining the wedged lane and
+    /// failing the batch.  `None` (the default, and always the value for
+    /// adhoc plans) disables the timeout.  Only executions whose buffers
+    /// the kernel path *owns* arm it — a timed-out worker still holds raw
+    /// pointers into the batch, so the timed paths leak the referenced
+    /// storage instead of freeing it (see `softmax::batch::PoolError`).
+    pub job_timeout: Option<Duration>,
 }
 
 impl ExecPlan {
@@ -304,6 +313,10 @@ impl fmt::Display for ExecPlan {
             Some(b) => writeln!(f, "bucket_rows {b}")?,
             None => writeln!(f, "bucket_rows none")?,
         }
+        match self.job_timeout {
+            Some(d) => writeln!(f, "job_timeout {}ms", d.as_millis())?,
+            None => writeln!(f, "job_timeout none")?,
+        }
         write!(f, "predicted bytes={}", self.predicted_bytes)?;
         match (self.predicted_secs, self.gbps) {
             (Some(s), Some(g)) => write!(f, " secs={s:.3e} gbps={g:.1}"),
@@ -330,6 +343,7 @@ struct BuildInputs<'a> {
     bucket_pow2: bool,
     gbps: Option<f64>,
     tune: Option<&'a TuneTable>,
+    job_timeout: Option<Duration>,
 }
 
 /// The one pow2 bucketing rule (shared by [`build_plan`] and
@@ -398,6 +412,7 @@ fn build_plan(inp: BuildInputs<'_>) -> ExecPlan {
         predicted_bytes,
         gbps: inp.gbps,
         predicted_secs,
+        job_timeout: inp.job_timeout,
     }
 }
 
@@ -445,6 +460,7 @@ pub fn adhoc_dtype(
         bucket_pow2: false,
         gbps: None,
         tune: None,
+        job_timeout: None,
     })
 }
 
@@ -557,6 +573,8 @@ pub struct Planner {
     bucket_pow2: bool,
     tune: Option<TuneTable>,
     stream_gbps: Option<f64>,
+    /// Per-job pool heartbeat carried into every plan (`None` = off).
+    job_timeout: Option<Duration>,
     /// Print each freshly built plan (serve `--explain-plans`).
     explain: bool,
     counters: Arc<PlanCacheCounters>,
@@ -579,6 +597,7 @@ impl Planner {
             bucket_pow2: false,
             tune: None,
             stream_gbps: None,
+            job_timeout: None,
             explain: false,
             counters: Arc::new(PlanCacheCounters::default()),
             cache: PlanCache::new(),
@@ -592,6 +611,10 @@ impl Planner {
         let mut p = Planner::new(cfg.algorithm, cfg.isa, cfg.parallel_threshold, cfg.batch_threads);
         p.bucket_pow2 = cfg.backend == Backend::Pjrt && cfg.bucket_pow2;
         p.stream_gbps = cfg.stream_gbps;
+        p.job_timeout = match cfg.job_timeout_ms {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        };
         p.explain = cfg.explain_plans;
         if let Some(t) = &cfg.tune_table {
             if p.stream_gbps.is_none() {
@@ -627,6 +650,12 @@ impl Planner {
     /// Supply the measured STREAM bandwidth for runtime predictions.
     pub fn with_stream_gbps(mut self, gbps: Option<f64>) -> Planner {
         self.stream_gbps = gbps;
+        self
+    }
+
+    /// Arm the per-job pool heartbeat (`None` = off, the default).
+    pub fn with_job_timeout(mut self, timeout: Option<Duration>) -> Planner {
+        self.job_timeout = timeout;
         self
     }
 
@@ -716,6 +745,7 @@ impl Planner {
             bucket_pow2: self.bucket_pow2,
             gbps,
             tune: self.tune.as_ref(),
+            job_timeout: self.job_timeout,
         })
     }
 }
@@ -872,12 +902,25 @@ mod tests {
         let text = p.plan(PlanOp::Normalize, 8, 1024).to_text();
         assert!(text.starts_with("plan op=normalize rows=8 n=1024\n"), "{text}");
         for key in ["algorithm ", "isa ", "dtype ", "unroll ", "block_rows ", "nt ",
-            "threshold ", "threads ", "bucket_rows ", "predicted bytes="]
+            "threshold ", "threads ", "bucket_rows ", "job_timeout ", "predicted bytes="]
         {
             assert!(text.contains(key), "missing {key:?} in:\n{text}");
         }
         assert!(text.contains("dtype f32 elem_bytes=4"), "{text}");
         assert!(text.contains("gbps=14.0"), "{text}");
+    }
+
+    #[test]
+    fn job_timeout_flows_into_plans_only_when_armed() {
+        let p = Planner::new(Algorithm::TwoPass, Isa::Scalar, 4096, 2)
+            .with_job_timeout(Some(Duration::from_millis(250)));
+        let plan = p.plan(PlanOp::NormalizeInPlace, 8, 1024);
+        assert_eq!(plan.job_timeout, Some(Duration::from_millis(250)));
+        assert!(plan.to_text().contains("job_timeout 250ms"), "{}", plan.to_text());
+        let off = Planner::new(Algorithm::TwoPass, Isa::Scalar, 4096, 2);
+        assert!(off.plan(PlanOp::NormalizeInPlace, 8, 1024).job_timeout.is_none());
+        let a = adhoc(PlanOp::Decode, Algorithm::TwoPass, Isa::Scalar, 4, 64, 1, 2);
+        assert!(a.job_timeout.is_none(), "adhoc plans never arm the heartbeat");
     }
 
     #[test]

@@ -142,6 +142,12 @@ fn service_loop(rt: &Runtime, rx: &mpsc::Receiver<Job>) {
 }
 
 fn exec_softmax(rt: &Runtime, variant: &str, batch: &RowBatch) -> Result<RowBatch> {
+    // Fault-injection site (tests only): an injected error exercises the
+    // artifact-failure path — the service hands the batch back and the
+    // router serves it natively or surfaces the error per request.
+    crate::fail_point!("pjrt.exec_softmax", |msg: String| Err(anyhow!(
+        "injected pjrt failure: {msg}"
+    )));
     let rows = batch.rows();
     let n = batch.n();
     if rows == 0 {

@@ -63,7 +63,7 @@ use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::plan::{self, ExecPlan, PlanOp};
-use crate::softmax::batch::{decode_chunked, note_scan_pass, RowBatch};
+use crate::softmax::batch::{decode_chunked, note_scan_pass, PoolError, RowBatch};
 use crate::softmax::exp::{extexp, ExtSum};
 use crate::softmax::kernels::{Element, KernelElement};
 use crate::softmax::{Algorithm, Isa};
@@ -142,6 +142,12 @@ pub enum SamplingError {
     ParamsMismatch { rows: usize, params: usize },
     /// The scan selected nothing — non-finite (NaN/−∞) logits throughout.
     NoCandidates,
+    /// A pooled decode job neither completed nor panicked within the
+    /// plan's `job_timeout`: its lane was quarantined and respawned and
+    /// the batch's buffers were leaked (the wedged worker may still write
+    /// through them).  Only the owned-input serving path
+    /// ([`sample_batch_planned_owned`]) arms the timeout.
+    PoolTimeout { waited_ms: u64 },
 }
 
 impl fmt::Display for SamplingError {
@@ -157,6 +163,9 @@ impl fmt::Display for SamplingError {
             }
             SamplingError::NoCandidates => {
                 write!(f, "no decodable candidate (non-finite logits?)")
+            }
+            SamplingError::PoolTimeout { waited_ms } => {
+                write!(f, "kernel pool job timed out after {waited_ms}ms (lane quarantined)")
             }
         }
     }
@@ -690,10 +699,71 @@ pub fn sample_batch_planned(
         return sample_batch(p.isa, x, params);
     }
     // Placeholder-filled output: the pool's decode jobs overwrite every
-    // slot, and errors discard the whole vector.
+    // slot, and errors discard the whole vector.  No timeout on this
+    // borrowed-input path: `x` cannot be leaked from here, so abandoning
+    // a wedged job would be unsound (see `sample_batch_planned_owned`).
     let mut out = vec![Choice { token: 0, logprob: 0.0 }; x.rows()];
-    decode_chunked(p, x, params, &mut out)?;
-    Ok(out)
+    match decode_chunked(p, x, params, &mut out, None) {
+        Ok(()) => Ok(out),
+        Err(PoolError::Failed(e)) => Err(e),
+        Err(PoolError::TimedOut { .. }) => {
+            unreachable!("untimed decode submissions cannot time out")
+        }
+    }
+}
+
+/// [`sample_batch_planned`] over an **owned** batch: the serving path's
+/// decode entry point, and the only one that arms the plan's
+/// `job_timeout`.  Ownership is what makes the timeout sound — when a
+/// pooled decode job wedges past it, this function leaks the batch, the
+/// params, and the output buffer (the quarantined worker still holds raw
+/// pointers into all three) and fails with
+/// [`SamplingError::PoolTimeout`]; one wedged job costs one batch's
+/// memory, not the process.
+pub fn sample_batch_planned_owned(
+    p: &ExecPlan,
+    x: RowBatch,
+    params: Vec<SamplingParams>,
+) -> Result<Vec<Choice>, SamplingError> {
+    if p.threads <= 1 || p.job_timeout.is_none() {
+        return sample_batch_planned(p, &x, &params);
+    }
+    validate_batch(p.isa, &x, &params)?;
+    if p.op != PlanOp::Decode {
+        return Err(SamplingError::BadParams(format!(
+            "plan built for op {} cannot decode",
+            p.op
+        )));
+    }
+    if (p.rows, p.n) != (x.rows(), x.n()) {
+        return Err(SamplingError::BadParams(format!(
+            "plan shape {}x{} does not match batch {}x{}",
+            p.rows,
+            p.n,
+            x.rows(),
+            x.n()
+        )));
+    }
+    if p.dtype != x.dtype() {
+        return Err(SamplingError::BadParams(format!(
+            "plan dtype {} does not match batch dtype {}",
+            p.dtype,
+            x.dtype()
+        )));
+    }
+    let mut out = vec![Choice { token: 0, logprob: 0.0 }; x.rows()];
+    match decode_chunked(p, &x, &params, &mut out, p.job_timeout) {
+        Ok(()) => Ok(out),
+        Err(PoolError::Failed(e)) => Err(e),
+        Err(PoolError::TimedOut { waited_ms }) => {
+            // SAFETY requirement of PoolError::TimedOut: every buffer the
+            // abandoned jobs reference must outlive the process.
+            std::mem::forget(x);
+            std::mem::forget(params);
+            std::mem::forget(out);
+            Err(SamplingError::PoolTimeout { waited_ms })
+        }
+    }
 }
 
 #[cfg(test)]

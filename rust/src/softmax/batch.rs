@@ -316,6 +316,17 @@ impl RowBatch {
         }
     }
 
+    /// Abandon the backing storage **without freeing it**, leaving a
+    /// valid empty batch.  Called on a pool-job timeout: a quarantined
+    /// worker still holds raw pointers into this allocation and may
+    /// write through them arbitrarily later, so the memory must outlive
+    /// the process.  One deliberate leak per wedged job — the
+    /// alternative is a use-after-free.
+    pub(crate) fn leak_storage(&mut self) {
+        std::mem::forget(std::mem::replace(&mut self.data, AlignedBuf::empty()));
+        self.rows = 0;
+    }
+
     /// Copy an existing flat row-major buffer (must be exactly `rows × n`)
     /// into aligned f32 batch storage.
     pub fn from_vec(data: Vec<f32>, rows: usize, n: usize) -> RowBatch {
@@ -708,6 +719,11 @@ pub fn softmax_batch_planned(
         if p.threads <= 1 {
             run_rows_with::<E>(p.algorithm, p.isa, u, xs, ys, n, p.block_rows, p.nt);
         } else {
+            // No job timeout on the out-of-place path: `x` is a shared
+            // borrow this function cannot leak, so abandoning a wedged
+            // job here would be unsound.  The serving path normalizes in
+            // place ([`softmax_batch_inplace_planned`]), which owns its
+            // buffer and does honor the plan's timeout.
             run_chunked::<E>(
                 p.algorithm,
                 p.isa,
@@ -719,7 +735,9 @@ pub fn softmax_batch_planned(
                 p.nt,
                 &p.chunks,
                 p.threads,
-            );
+                None,
+            )
+            .expect("untimed normalize submissions cannot fail");
         }
     });
     Ok(())
@@ -807,6 +825,13 @@ pub fn softmax_batch_inplace_auto(
 /// semantics, placement from the plan).  NT stores stay off whatever the
 /// plan says — in place, the output lines are the just-read input lines,
 /// already cache-resident.
+///
+/// When the plan carries a `job_timeout` and a pooled job wedges past it,
+/// the batch fails with [`SoftmaxError::PoolTimeout`] and **the batch's
+/// storage is leaked** (`b` is left valid but empty): the abandoned
+/// worker may still write through its job pointers at any later time, so
+/// the memory can never be freed or reused.  One wedged job costs one
+/// batch's buffer and one quarantined lane — not the process.
 pub fn softmax_batch_inplace_planned(p: &ExecPlan, b: &mut RowBatch) -> Result<(), SoftmaxError> {
     validate_inplace(b, p.isa)?;
     check_plan(p, PlanOp::NormalizeInPlace, b.rows(), b.n(), b.dtype())?;
@@ -816,12 +841,13 @@ pub fn softmax_batch_inplace_planned(p: &ExecPlan, b: &mut RowBatch) -> Result<(
     let n = b.n;
     let u = PassUnrolls::from_plan(p);
     let dtype = b.dtype;
+    let mut pool_result = Ok(());
     with_elem!(dtype, E, {
         let (xs, ys) = alias_same_elems(b.elems_mut::<E>());
         if p.threads <= 1 {
             run_rows_with::<E>(p.algorithm, p.isa, u, xs, ys, n, p.block_rows, false);
         } else {
-            run_chunked::<E>(
+            pool_result = run_chunked::<E>(
                 p.algorithm,
                 p.isa,
                 u,
@@ -832,10 +858,22 @@ pub fn softmax_batch_inplace_planned(p: &ExecPlan, b: &mut RowBatch) -> Result<(
                 false,
                 &p.chunks,
                 p.threads,
+                p.job_timeout,
             );
         }
     });
-    Ok(())
+    match pool_result {
+        Ok(()) => Ok(()),
+        Err(PoolError::TimedOut { waited_ms }) => {
+            // SAFETY requirement of PoolError::TimedOut: the wedged
+            // worker still holds raw pointers into this batch's buffer.
+            b.leak_storage();
+            Err(SoftmaxError::PoolTimeout { waited_ms })
+        }
+        Err(PoolError::Failed(e)) => {
+            unreachable!("normalize jobs report no recoverable errors: {e:?}")
+        }
+    }
 }
 
 /// Generic equivalent of [`crate::softmax::alias_same`]: one buffer viewed
@@ -932,7 +970,10 @@ pub fn accum_extexp_batch_planned(
         n,
         out: unsafe { out_ptr.add(r0) },
     });
-    submit_jobs(kinds, p.threads).expect("accumulation jobs report no recoverable errors");
+    // No timeout: `x` is a shared borrow this function cannot leak (see
+    // softmax_batch_planned); untimed accumulation submissions have no
+    // failure path.
+    submit_jobs(kinds, p.threads, None).expect("accumulation jobs report no recoverable errors");
     Ok(out)
 }
 
@@ -1184,8 +1225,23 @@ enum JobOutcome {
     /// without panicking it.
     Failed(SamplingError),
     /// The kernel panicked; the pool worker survives, the submitting
-    /// batch re-panics.
-    Panicked,
+    /// batch re-panics.  Carries the original panic message (`&str` and
+    /// `String` payloads preserved verbatim) so the injected or organic
+    /// failure is diagnosable from the re-panic.
+    Panicked(String),
+}
+
+/// Why a pool submission failed (batch-scoped; the pool itself survives).
+#[derive(Debug, PartialEq)]
+pub(crate) enum PoolError {
+    /// A job reported a recoverable kernel error (decode only).
+    Failed(SamplingError),
+    /// At least one job neither completed nor panicked within the
+    /// submitter's per-job timeout.  The lanes owning the missing jobs
+    /// have been quarantined (see [`WorkerPool::quarantine`]); the caller
+    /// **must leak every buffer the batch's raw pointers reference** —
+    /// the wedged worker may still write through them at any later time.
+    TimedOut { waited_ms: u64 },
 }
 
 struct BatchJob {
@@ -1210,10 +1266,14 @@ struct WorkerPool {
 }
 
 static POOL: OnceLock<WorkerPool> = OnceLock::new();
-/// Cumulative kernel threads ever spawned (test hook: stays equal to
-/// [`pool_workers`] — spawning happens only when the pool grows to meet a
-/// larger thread request, never per batch).
+/// Cumulative kernel threads ever spawned (test hook: equals
+/// [`pool_workers`] + [`pool_quarantined_total`] — spawning happens only
+/// when the pool grows to meet a larger thread request or when a
+/// quarantined lane is respawned, never per batch).
 static POOL_SPAWNS: AtomicUsize = AtomicUsize::new(0);
+/// Lanes ever quarantined after a job timeout (each one also spawned a
+/// replacement worker, counted in [`POOL_SPAWNS`]).
+static POOL_QUARANTINED: AtomicUsize = AtomicUsize::new(0);
 /// Rotating lane offset so concurrent submitters don't all queue their
 /// first (and often only) chunks on the same few workers.
 static NEXT_LANE: AtomicUsize = AtomicUsize::new(0);
@@ -1245,6 +1305,32 @@ impl WorkerPool {
         }
         lanes.clone()
     }
+
+    /// Replace lane `idx` after a job timeout: the wedged worker's sender
+    /// is swapped for a fresh worker's, so new batches route around it.
+    /// The abandoned worker keeps its receiver alive through clones held
+    /// by in-flight submitters; once those drain it sees a disconnect and
+    /// exits (or stays wedged forever — either way it never receives new
+    /// work from here on).  Its thread and any borrowed memory are
+    /// deliberately leaked: see [`PoolError::TimedOut`].
+    fn quarantine(&self, idx: usize) {
+        let cpus = available_threads().max(1);
+        let mut lanes = self.lanes.lock().unwrap();
+        if idx >= lanes.len() {
+            return;
+        }
+        let (tx, rx) = mpsc::channel::<BatchJob>();
+        std::thread::Builder::new()
+            .name(format!("batch-pool-{idx}r"))
+            .spawn(move || {
+                let _ = crate::platform::pin_current_thread(idx % cpus);
+                worker_loop(&rx);
+            })
+            .expect("spawn replacement batch pool worker");
+        POOL_SPAWNS.fetch_add(1, Ordering::Relaxed);
+        POOL_QUARANTINED.fetch_add(1, Ordering::Relaxed);
+        lanes[idx] = tx;
+    }
 }
 
 fn pool() -> &'static WorkerPool {
@@ -1256,15 +1342,22 @@ pub fn pool_workers() -> usize {
     pool_stats().0
 }
 
-/// Total pool threads ever spawned — equals [`pool_workers`]: threads are
-/// only spawned by pool growth, never per batch.
+/// Total pool threads ever spawned — equals [`pool_workers`] +
+/// [`pool_quarantined_total`]: threads are only spawned by pool growth or
+/// quarantine replacement, never per batch.
 pub fn pool_spawned_total() -> usize {
     POOL_SPAWNS.load(Ordering::Relaxed)
 }
 
+/// Lanes quarantined (and respawned) after a pool-job timeout since
+/// process start — the recovery counter the hung-worker tests assert on.
+pub fn pool_quarantined_total() -> usize {
+    POOL_QUARANTINED.load(Ordering::Relaxed)
+}
+
 /// Consistent `(workers, spawned_total)` snapshot taken under the pool
-/// lock (the two are always equal; test hook for the no-spawn-per-batch
-/// guarantee).
+/// lock (`spawned_total - pool_quarantined_total() == workers`; test hook
+/// for the no-spawn-per-batch guarantee).
 pub fn pool_stats() -> (usize, usize) {
     match POOL.get() {
         None => (0, POOL_SPAWNS.load(Ordering::Relaxed)),
@@ -1284,11 +1377,25 @@ fn worker_loop(rx: &mpsc::Receiver<BatchJob>) {
             match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_job(kind))) {
                 Ok(Ok(())) => JobOutcome::Done,
                 Ok(Err(e)) => JobOutcome::Failed(e),
-                Err(_) => JobOutcome::Panicked,
+                Err(p) => JobOutcome::Panicked(panic_payload_message(&*p)),
             };
         // `run_rows_with` fences after NT blocks, so the data is globally
         // visible before this release-ordered acknowledgement.
         let _ = done.send((seq, outcome));
+    }
+}
+
+/// Extract the message from a caught panic payload.  `panic!("...")` with
+/// any format arguments produces a `String` payload, a literal-only
+/// `panic!` a `&str` — both survive verbatim so the submitter's re-panic
+/// carries the original diagnosis instead of an opaque "worker panicked".
+fn panic_payload_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -1303,6 +1410,10 @@ fn worker_loop(rx: &mpsc::Receiver<BatchJob>) {
 /// `Normalize` x/y pair may alias (in-place batches), under the same
 /// pass-ordering contract as [`softmax_batch_inplace`].
 fn run_job(kind: JobKind) -> Result<(), SamplingError> {
+    // Fault-injection site (tests only): evaluated inside the worker's
+    // catch_unwind, so injected sleeps simulate a wedged kernel and
+    // injected panics exercise the payload-preserving panic channel.
+    crate::fail_point!("pool.run_job");
     match kind {
         JobKind::Normalize { alg, isa, unrolls, dtype, x, y, elems, n, block, nt } => {
             with_elem!(dtype, E, {
@@ -1381,13 +1492,27 @@ fn jobs_for_chunks(
 /// Submit one pool job per element of `kinds`, round-robin across at
 /// least `t` worker lanes, and block until every job acknowledges — that
 /// blocking is the lifetime guarantee for the raw pointers inside the
-/// work items.  Panics if any job panicked (same blast radius as the old
-/// `thread::scope` design: the submitting batch dies, the pool survives);
-/// otherwise returns the recoverable error of the *lowest-indexed* failed
-/// job — chunks are built in row order and a chunk fails at its first bad
-/// row, so this is the same error single-threaded execution reports,
-/// whatever the completion order.
-fn submit_jobs(kinds: Vec<JobKind>, t: usize) -> Result<(), SamplingError> {
+/// work items.  Panics if any job panicked, re-raising the worker's
+/// original panic message (same blast radius as the old `thread::scope`
+/// design: the submitting batch dies, the pool survives); otherwise
+/// returns the recoverable error of the *lowest-indexed* failed job —
+/// chunks are built in row order and a chunk fails at its first bad row,
+/// so this is the same error single-threaded execution reports, whatever
+/// the completion order.
+///
+/// With a `timeout`, each job must acknowledge within `timeout` of the
+/// *previous* acknowledgement (a per-job heartbeat, not a whole-batch
+/// budget — a big batch on few lanes legitimately takes many job-times).
+/// On expiry the lanes still owing outcomes are quarantined
+/// ([`WorkerPool::quarantine`]) and the call returns
+/// [`PoolError::TimedOut`] — at which point the caller must leak every
+/// buffer the batch referenced, because the wedged workers may still
+/// write through their job pointers arbitrarily later.
+fn submit_jobs(
+    kinds: Vec<JobKind>,
+    t: usize,
+    timeout: Option<std::time::Duration>,
+) -> Result<(), PoolError> {
     let jobs = kinds.len();
     let lanes = pool().lanes_for(t);
     let lanes_n = lanes.len();
@@ -1400,28 +1525,60 @@ fn submit_jobs(kinds: Vec<JobKind>, t: usize) -> Result<(), SamplingError> {
             .expect("batch pool worker disappeared");
     }
     drop(done_tx);
-    let mut panicked = false;
+    let waited_start = std::time::Instant::now();
+    let mut acked = vec![false; jobs];
+    let mut panicked: Option<String> = None;
     let mut failed: Option<(usize, SamplingError)> = None;
     for _ in 0..jobs {
-        match done_rx.recv() {
-            Ok((_, JobOutcome::Done)) => {}
+        let received = match timeout {
+            None => done_rx.recv().map_err(|_| ()),
+            Some(d) => match done_rx.recv_timeout(d) {
+                Ok(v) => Ok(v),
+                Err(mpsc::RecvTimeoutError::Disconnected) => Err(()),
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // Quarantine every lane still owing an outcome (the
+                    // job → lane mapping is the round-robin above).
+                    let mut hit = vec![false; lanes_n];
+                    for (i, a) in acked.iter().enumerate() {
+                        if !a {
+                            hit[start.wrapping_add(i) % lanes_n] = true;
+                        }
+                    }
+                    for (lane, h) in hit.into_iter().enumerate() {
+                        if h {
+                            pool().quarantine(lane);
+                        }
+                    }
+                    return Err(PoolError::TimedOut {
+                        waited_ms: waited_start.elapsed().as_millis() as u64,
+                    });
+                }
+            },
+        };
+        match received {
+            Ok((i, JobOutcome::Done)) => acked[i] = true,
             Ok((i, JobOutcome::Failed(e))) => {
+                acked[i] = true;
                 if failed.as_ref().map_or(true, |(fi, _)| i < *fi) {
                     failed = Some((i, e));
                 }
             }
+            Ok((i, JobOutcome::Panicked(msg))) => {
+                acked[i] = true;
+                panicked = Some(msg);
+            }
             // A job dropped unacknowledged (worker torn down) is
             // indistinguishable from a panic: nothing sane can be
             // returned for this batch.
-            Ok((_, JobOutcome::Panicked)) | Err(_) => panicked = true,
+            Err(()) => panicked = Some("pool worker torn down mid-batch".to_string()),
         }
     }
-    if panicked {
-        panic!("batch pool worker panicked mid-batch");
+    if let Some(msg) = panicked {
+        panic!("batch pool worker panicked mid-batch: {msg}");
     }
     match failed {
         None => Ok(()),
-        Some((_, e)) => Err(e),
+        Some((_, e)) => Err(PoolError::Failed(e)),
     }
 }
 
@@ -1444,7 +1601,8 @@ fn run_chunked<E: KernelElement>(
     nt: bool,
     chunks: &[ChunkPlan],
     t: usize,
-) {
+    timeout: Option<std::time::Duration>,
+) -> Result<(), PoolError> {
     let esz = std::mem::size_of::<E>();
     let x_ptr = xs.as_ptr() as *const u8;
     let y_ptr = ys.as_mut_ptr() as *mut u8;
@@ -1463,22 +1621,34 @@ fn run_chunked<E: KernelElement>(
         block,
         nt,
     });
-    submit_jobs(kinds, t).expect("normalize jobs report no recoverable errors");
+    match submit_jobs(kinds, t, timeout) {
+        Ok(()) => Ok(()),
+        // Normalize jobs have no recoverable-error path; the only Err a
+        // timeout-armed submission can produce is TimedOut.
+        Err(PoolError::Failed(e)) => {
+            unreachable!("normalize jobs report no recoverable errors: {e:?}")
+        }
+        Err(e @ PoolError::TimedOut { .. }) => Err(e),
+    }
 }
 
 /// Execute a planned decode batch as `Decode` jobs on the persistent
 /// pool, one per plan chunk.  Called by
-/// [`sample_batch_planned`](crate::sampling::sample_batch_planned); `out`
-/// must hold exactly one [`Choice`] slot per row.  Token ids and logprobs
-/// are bit-identical to submitting-thread decode for any chunking: every
-/// row is decoded by the same scalar index-ordered selection code
-/// whatever its placement.
+/// [`sample_batch_planned`](crate::sampling::sample_batch_planned)
+/// (untimed, `timeout = None`) and by the owned-input serving path
+/// ([`sample_batch_planned_owned`](crate::sampling::sample_batch_planned_owned),
+/// which passes the plan's job timeout and leaks its owned buffers on
+/// [`PoolError::TimedOut`]); `out` must hold exactly one [`Choice`] slot
+/// per row.  Token ids and logprobs are bit-identical to
+/// submitting-thread decode for any chunking: every row is decoded by
+/// the same scalar index-ordered selection code whatever its placement.
 pub(crate) fn decode_chunked(
     p: &ExecPlan,
     x: &RowBatch,
     params: &[SamplingParams],
     out: &mut [Choice],
-) -> Result<(), SamplingError> {
+    timeout: Option<std::time::Duration>,
+) -> Result<(), PoolError> {
     let (rows, n) = (x.rows(), x.n());
     debug_assert_eq!(out.len(), rows);
     debug_assert_eq!((p.rows, p.n), (rows, n));
@@ -1505,7 +1675,7 @@ pub(crate) fn decode_chunked(
         base_row: r0,
         out: unsafe { out_ptr.add(r0) },
     });
-    submit_jobs(kinds, p.threads)
+    submit_jobs(kinds, p.threads, timeout)
 }
 
 // ---------------------------------------------------------------------------

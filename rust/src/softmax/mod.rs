@@ -120,6 +120,12 @@ pub enum SoftmaxError {
     /// Input/output batches (or a plan and its batch) disagree on the
     /// storage element type.
     DtypeMismatch { have: Dtype, want: Dtype },
+    /// A pooled kernel job neither completed nor panicked within the
+    /// plan's `job_timeout`: its lane was quarantined and respawned, the
+    /// batch's storage was leaked (the wedged worker may still write
+    /// through it), and the batch failed instead of wedging its
+    /// coordinator worker forever.
+    PoolTimeout { waited_ms: u64 },
 }
 
 impl fmt::Display for SoftmaxError {
@@ -137,6 +143,9 @@ impl fmt::Display for SoftmaxError {
             }
             SoftmaxError::DtypeMismatch { have, want } => {
                 write!(f, "dtype {have} does not match expected dtype {want}")
+            }
+            SoftmaxError::PoolTimeout { waited_ms } => {
+                write!(f, "kernel pool job timed out after {waited_ms}ms (lane quarantined)")
             }
         }
     }

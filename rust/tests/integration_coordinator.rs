@@ -6,7 +6,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use two_pass_softmax::config::{Backend, ServeConfig};
-use two_pass_softmax::coordinator::{Coordinator, Payload, PushError, Router};
+use two_pass_softmax::coordinator::{Coordinator, Payload, Rejected, Router};
 use two_pass_softmax::softmax::{Algorithm, Isa};
 use two_pass_softmax::util::rng::Rng;
 
@@ -64,7 +64,7 @@ fn backpressure_surfaces_queue_full() {
     for _ in 0..64 {
         match coord.submit(Payload::Logits(vec![0.5; 128])) {
             Ok(h) => handles.push(h),
-            Err(PushError::QueueFull { capacity }) => {
+            Err(Rejected::QueueFull { capacity }) => {
                 assert_eq!(capacity, 4);
                 rejected += 1;
             }

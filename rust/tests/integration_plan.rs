@@ -274,6 +274,55 @@ fn half_width_planned_execution_is_quantized_f32_execution() {
     }
 }
 
+/// The 256-shape plan-cache cap under concurrent pressure: 8 threads
+/// plan disjoint shape ranges far past the cap.  Every call must return
+/// a correct plan for its requested shape (cached or overflow), and the
+/// hit/miss counters must stay consistent — every call is exactly one
+/// hit or one miss, never both, never neither.
+#[test]
+fn plan_cache_cap_overflow_under_concurrency_stays_correct_and_counted() {
+    const THREADS: usize = 8;
+    const SHAPES_PER_THREAD: usize = 48; // 384 distinct shapes >> 256 cap
+    const PASSES: usize = 3;
+    let planner = std::sync::Arc::new(Planner::new(
+        Algorithm::TwoPass,
+        Isa::detect_best(),
+        1 << 20, // explicit threshold: no STREAM measurement under load
+        2,
+    ));
+    let mut joins = Vec::new();
+    for t in 0..THREADS {
+        let p = planner.clone();
+        joins.push(std::thread::spawn(move || {
+            for pass in 0..PASSES {
+                for s in 0..SHAPES_PER_THREAD {
+                    let n = 64 + t * SHAPES_PER_THREAD + s;
+                    let plan = p.plan(PlanOp::NormalizeInPlace, 1, n);
+                    assert_eq!(
+                        (plan.rows, plan.n),
+                        (1, n),
+                        "thread {t} pass {pass} got a plan for the wrong shape"
+                    );
+                    assert_eq!(plan.threshold_elems, 1 << 20);
+                    assert_eq!(plan.threads, 1, "a 1-row batch can never split");
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let (hits, misses) = planner.plan_stats();
+    let total = (THREADS * SHAPES_PER_THREAD * PASSES) as u64;
+    assert_eq!(hits + misses, total, "counters must account for every call");
+    // Each of the 384 distinct shapes misses at least its first call.
+    assert!(misses >= (THREADS * SHAPES_PER_THREAD) as u64, "misses {misses}");
+    // Exactly 256 shapes win a cache slot (insertions are permanent, the
+    // cap is checked under the writer lock); each is planned by a single
+    // thread, so its two later passes are guaranteed hits.
+    assert!(hits >= 2 * 256, "cached shapes must hit on later passes: {hits}");
+}
+
 /// Decode through the router must plan exactly like direct decode: same
 /// token ids with and without the pool, and per-row params survive any
 /// chunking (regression guard for the planner rewiring of the decode
