@@ -116,6 +116,19 @@ pub struct ServeConfig {
     /// timeout error instead of wedging the worker forever.  `0`
     /// disables the timeout.  Default: 2000.
     pub job_timeout_ms: u64,
+    /// Request tracing (`--trace`): requests carry span contexts through
+    /// admit → queue → batch → exec → respond (plus kernel-layer plan /
+    /// pool / pass events) and finished traces export as JSONL under
+    /// `trace_dir`.  Default: `false` — span bookkeeping costs nothing
+    /// when off.
+    pub trace: bool,
+    /// Trace sampling rate: export 1 completed request in `trace_sample`
+    /// (must be ≥ 1; rejected, deadline-missed, and failed requests are
+    /// always exported).  Default: 16.
+    pub trace_sample: u64,
+    /// Directory for trace JSONL exports (`trace-<pid>.jsonl`, schema
+    /// `trace-jsonl-v1` in docs/FORMATS.md).  Default: `results/trace`.
+    pub trace_dir: PathBuf,
 }
 
 impl Default for ServeConfig {
@@ -140,6 +153,9 @@ impl Default for ServeConfig {
             stream_gbps: None,
             admission_budget_ms: 0,
             job_timeout_ms: 2000,
+            trace: false,
+            trace_sample: 16,
+            trace_dir: PathBuf::from("results/trace"),
         }
     }
 }
@@ -205,6 +221,15 @@ impl ServeConfig {
         if let Some(v) = json_count(root, "job_timeout_ms")? {
             self.job_timeout_ms = v as u64;
         }
+        if let Some(v) = root.get("trace").and_then(Json::as_bool) {
+            self.trace = v;
+        }
+        if let Some(v) = json_count(root, "trace_sample")? {
+            self.trace_sample = v as u64;
+        }
+        if let Some(v) = root.get("trace_dir").and_then(Json::as_str) {
+            self.trace_dir = PathBuf::from(v);
+        }
         self.validate()
     }
 
@@ -243,6 +268,13 @@ impl ServeConfig {
             a.get("admission-budget-ms", self.admission_budget_ms).map_err(|e| anyhow!(e))?;
         self.job_timeout_ms =
             a.get("job-timeout-ms", self.job_timeout_ms).map_err(|e| anyhow!(e))?;
+        if a.flag("trace") {
+            self.trace = true;
+        }
+        self.trace_sample = a.get("trace-sample", self.trace_sample).map_err(|e| anyhow!(e))?;
+        if let Some(v) = a.opt("trace-dir") {
+            self.trace_dir = PathBuf::from(v);
+        }
         self.validate()
     }
 
@@ -268,6 +300,9 @@ impl ServeConfig {
         }
         if !self.isa.available() {
             return Err(anyhow!("configured ISA {} unavailable on this host", self.isa));
+        }
+        if self.trace_sample == 0 {
+            return Err(anyhow!("trace_sample must be >= 1 (export 1 request in N)"));
         }
         Ok(())
     }
@@ -392,6 +427,34 @@ mod tests {
         c2.apply_args(&a).unwrap();
         assert_eq!(c2.admission_budget_ms, 25);
         assert_eq!(c2.job_timeout_ms, 1500);
+    }
+
+    #[test]
+    fn trace_knobs_round_trip_and_validate() {
+        let d = ServeConfig::default();
+        assert!(!d.trace, "tracing off by default");
+        assert_eq!(d.trace_sample, 16);
+        assert_eq!(d.trace_dir, PathBuf::from("results/trace"));
+        let j = Json::parse(r#"{"trace": true, "trace_sample": 4, "trace_dir": "/tmp/tr"}"#)
+            .unwrap();
+        let mut c = ServeConfig::default();
+        c.apply_json(&j).unwrap();
+        assert!(c.trace);
+        assert_eq!(c.trace_sample, 4);
+        assert_eq!(c.trace_dir, PathBuf::from("/tmp/tr"));
+        let a = Args::parse(
+            ["--trace", "--trace-sample", "8", "--trace-dir", "out/tr"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let mut c2 = ServeConfig::default();
+        c2.apply_args(&a).unwrap();
+        assert!(c2.trace);
+        assert_eq!(c2.trace_sample, 8);
+        assert_eq!(c2.trace_dir, PathBuf::from("out/tr"));
+        // 1-in-0 is meaningless: rejected at validation, not divided by.
+        let zero = Json::parse(r#"{"trace_sample": 0}"#).unwrap();
+        assert!(ServeConfig::default().apply_json(&zero).is_err());
     }
 
     #[test]

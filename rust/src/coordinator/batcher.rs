@@ -124,7 +124,6 @@ mod tests {
     use super::*;
     use crate::coordinator::request::{make_request, Payload};
     use std::sync::Arc;
-    use std::time::Instant;
 
     fn req(id: u64, n: usize) -> Request {
         make_request(id, Payload::Logits(vec![0.0; n])).0
@@ -145,7 +144,7 @@ mod tests {
     fn flushes_partial_on_timeout() {
         let b = Batcher::new(64, 8, Duration::from_millis(5));
         b.push(req(1, 100)).unwrap();
-        let t0 = Instant::now();
+        let t0 = crate::obs::clock::now();
         let batch = b.take_batch().unwrap();
         assert_eq!(batch.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(4));

@@ -1,8 +1,24 @@
-//! Serving metrics: lock-free counters + a sampled latency reservoir.
+//! Serving metrics: lock-free counters + wait-free latency histograms.
+//!
+//! The latency "reservoirs" used to be `Mutex<Vec<f64>>` — a lock on
+//! every request and memory that grew with uptime, and rejected requests
+//! never got a latency sample at all.  They are now
+//! [`obs::histogram::Histogram`]s: recording is five relaxed atomic RMWs,
+//! storage is constant-size, and dequeue-rejected requests record their
+//! queue wait like everything else ([`Metrics::record_rejected_latency`]).
+//!
+//! Accounting invariant (tested under concurrent load in
+//! `tests/integration_obs.rs`): every submitted request ends in exactly
+//! one of four buckets, so at quiescence
+//! `submitted == admitted + shed + deadline_missed + queue_full`.
+//! `admitted` counts requests that reached execution (completing OR
+//! failing there); the other three are the typed refusals.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
+use crate::obs::expo::{Expo, LATENCY_US_LE};
+use crate::obs::histogram::Histogram;
 use crate::plan::PlanCacheCounters;
 use crate::util::stats;
 
@@ -11,6 +27,9 @@ use crate::util::stats;
 pub struct Metrics {
     pub submitted: AtomicU64,
     pub rejected: AtomicU64,
+    /// Requests that reached batch execution (they complete or fail
+    /// there; never also counted shed/deadline-missed/queue-full).
+    pub admitted: AtomicU64,
     pub completed: AtomicU64,
     pub failed: AtomicU64,
     pub batches: AtomicU64,
@@ -22,6 +41,9 @@ pub struct Metrics {
     /// (`Rejected::DeadlineExceeded`, at submission, admission, or worker
     /// dequeue); a subset of `rejected`.
     pub deadline_missed: AtomicU64,
+    /// Requests refused because the batcher queue was at capacity
+    /// (`Rejected::QueueFull`); a subset of `rejected`.
+    pub queue_full: AtomicU64,
     /// Best-effort requests actually downgraded by the degradation ladder
     /// (admitted and served, so *not* counted in `rejected`).
     pub degraded: AtomicU64,
@@ -29,13 +51,12 @@ pub struct Metrics {
     /// router's planner at coordinator startup: a hit means the batch
     /// shape's placement was reused with zero re-derivation.
     pub plan_cache: Arc<PlanCacheCounters>,
-    /// Sum of batch sizes (rows) — avg batch size = rows/batches.
-    queue_us: Mutex<Vec<f64>>,
-    exec_us: Mutex<Vec<f64>>,
-    e2e_us: Mutex<Vec<f64>>,
+    queue_us: Histogram,
+    exec_us: Histogram,
+    e2e_us: Histogram,
     /// Batcher queue depth (requests), sampled at every batch dequeue —
     /// the overload bench's saturation signal.
-    queue_depth: Mutex<Vec<f64>>,
+    queue_depth: Histogram,
 }
 
 /// Printable snapshot.
@@ -43,6 +64,7 @@ pub struct Metrics {
 pub struct Snapshot {
     pub submitted: u64,
     pub rejected: u64,
+    pub admitted: u64,
     pub completed: u64,
     pub failed: u64,
     pub batches: u64,
@@ -50,6 +72,7 @@ pub struct Snapshot {
     pub avg_batch: f64,
     pub shed: u64,
     pub deadline_missed: u64,
+    pub queue_full: u64,
     pub degraded: u64,
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
@@ -63,7 +86,7 @@ impl Metrics {
     pub fn record_batch(&self, batch_rows: usize, exec_us: f64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.rows.fetch_add(batch_rows as u64, Ordering::Relaxed);
-        self.exec_us.lock().unwrap().push(exec_us);
+        self.exec_us.record(us(exec_us));
     }
 
     pub fn record_request(&self, queue_us: f64, e2e_us: f64, ok: bool) {
@@ -72,8 +95,18 @@ impl Metrics {
         } else {
             self.failed.fetch_add(1, Ordering::Relaxed);
         }
-        self.queue_us.lock().unwrap().push(queue_us);
-        self.e2e_us.lock().unwrap().push(e2e_us);
+        self.queue_us.record(us(queue_us));
+        self.e2e_us.record(us(e2e_us));
+    }
+
+    /// Latency samples for a request rejected at dequeue: it waited in
+    /// the queue like any other, and that wait (== its whole lifetime)
+    /// belongs in the histograms — hiding rejected waits would bias
+    /// queue-wait percentiles *down* exactly when the system is saturated
+    /// and they matter most.
+    pub fn record_rejected_latency(&self, waited_us: f64) {
+        self.queue_us.record(us(waited_us));
+        self.e2e_us.record(us(waited_us));
     }
 
     /// Record one typed rejection (total + the per-variant counter).
@@ -87,29 +120,25 @@ impl Metrics {
             Rejected::DeadlineExceeded { .. } => {
                 self.deadline_missed.fetch_add(1, Ordering::Relaxed);
             }
-            Rejected::QueueFull { .. } | Rejected::ShuttingDown => {}
+            Rejected::QueueFull { .. } => {
+                self.queue_full.fetch_add(1, Ordering::Relaxed);
+            }
+            Rejected::ShuttingDown => {}
         }
     }
 
     /// Sample the batcher queue depth (called by workers at dequeue).
     pub fn record_queue_depth(&self, depth: usize) {
-        self.queue_depth.lock().unwrap().push(depth as f64);
+        self.queue_depth.record(depth as u64);
     }
 
     pub fn snapshot(&self) -> Snapshot {
         let batches = self.batches.load(Ordering::Relaxed);
         let rows = self.rows.load(Ordering::Relaxed);
-        let summ = |m: &Mutex<Vec<f64>>| {
-            let v = m.lock().unwrap();
-            if v.is_empty() {
-                None
-            } else {
-                Some(stats::summarize(&v))
-            }
-        };
         Snapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             batches,
@@ -117,14 +146,124 @@ impl Metrics {
             avg_batch: if batches > 0 { rows as f64 / batches as f64 } else { 0.0 },
             shed: self.shed.load(Ordering::Relaxed),
             deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
+            queue_full: self.queue_full.load(Ordering::Relaxed),
             degraded: self.degraded.load(Ordering::Relaxed),
             plan_cache_hits: self.plan_cache.hits(),
             plan_cache_misses: self.plan_cache.misses(),
-            queue_us: summ(&self.queue_us),
-            exec_us: summ(&self.exec_us),
-            e2e_us: summ(&self.e2e_us),
-            queue_depth: summ(&self.queue_depth),
+            queue_us: self.queue_us.summary(),
+            exec_us: self.exec_us.summary(),
+            e2e_us: self.e2e_us.summary(),
+            queue_depth: self.queue_depth.summary(),
         }
+    }
+
+    /// Render every counter and histogram into a Prometheus-text
+    /// exposition ([`Coordinator::metrics_text`] adds the admission,
+    /// pool, and per-pass sections on top).
+    ///
+    /// [`Coordinator::metrics_text`]: super::Coordinator::metrics_text
+    pub fn render_prometheus(&self, e: &mut Expo) {
+        let c = |v: &AtomicU64| v.load(Ordering::Relaxed);
+        e.counter("repro_requests_submitted_total", "Requests submitted.", "", c(&self.submitted));
+        e.counter(
+            "repro_requests_admitted_total",
+            "Requests that reached batch execution.",
+            "",
+            c(&self.admitted),
+        );
+        e.counter("repro_requests_completed_total", "Requests served.", "", c(&self.completed));
+        e.counter(
+            "repro_requests_failed_total",
+            "Requests that failed in execution.",
+            "",
+            c(&self.failed),
+        );
+        e.counter(
+            "repro_requests_rejected_total",
+            "Requests refused by policy (all variants).",
+            "",
+            c(&self.rejected),
+        );
+        e.counter(
+            "repro_requests_shed_total",
+            "Requests shed by admission control (Overloaded).",
+            "",
+            c(&self.shed),
+        );
+        e.counter(
+            "repro_requests_deadline_missed_total",
+            "Requests dropped for an expired or unmeetable deadline.",
+            "",
+            c(&self.deadline_missed),
+        );
+        e.counter(
+            "repro_requests_queue_full_total",
+            "Requests refused because the batcher queue was full.",
+            "",
+            c(&self.queue_full),
+        );
+        e.counter(
+            "repro_requests_degraded_total",
+            "Best-effort requests downgraded by the degradation ladder.",
+            "",
+            c(&self.degraded),
+        );
+        e.counter("repro_batches_total", "Batches executed.", "", c(&self.batches));
+        e.counter("repro_batch_rows_total", "Rows executed across all batches.", "", c(&self.rows));
+        e.counter(
+            "repro_plan_cache_hits_total",
+            "Plan-cache lookups that reused a published plan.",
+            "",
+            self.plan_cache.hits(),
+        );
+        e.counter(
+            "repro_plan_cache_misses_total",
+            "Plan-cache lookups that derived a fresh plan.",
+            "",
+            self.plan_cache.misses(),
+        );
+        e.histogram(
+            "repro_queue_wait_microseconds",
+            "Enqueue-to-dequeue wait per request (rejected requests included).",
+            "",
+            &self.queue_us,
+            LATENCY_US_LE,
+        );
+        e.histogram(
+            "repro_exec_microseconds",
+            "Batch execution wall time.",
+            "",
+            &self.exec_us,
+            LATENCY_US_LE,
+        );
+        e.histogram(
+            "repro_e2e_microseconds",
+            "Submit-to-response wall time per request.",
+            "",
+            &self.e2e_us,
+            LATENCY_US_LE,
+        );
+        e.histogram(
+            "repro_queue_depth",
+            "Batcher queue depth sampled at each dequeue.",
+            "",
+            &self.queue_depth,
+            DEPTH_LE,
+        );
+    }
+}
+
+/// Queue-depth bucket bounds (requests): exact to 16, powers of two after.
+const DEPTH_LE: &[f64] =
+    &[0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 4096.0];
+
+/// Clamp a caller-side `f64` microsecond value into a histogram sample.
+#[inline]
+fn us(v: f64) -> u64 {
+    if v.is_finite() && v > 0.0 {
+        v as u64
+    } else {
+        0
     }
 }
 
@@ -210,6 +349,7 @@ mod tests {
         assert_eq!(s.rejected, 4);
         assert_eq!(s.shed, 2);
         assert_eq!(s.deadline_missed, 1);
+        assert_eq!(s.queue_full, 1);
         assert_eq!(s.degraded, 0);
         let depth = s.queue_depth.clone().unwrap();
         assert_eq!(depth.n, 2);
@@ -232,5 +372,35 @@ mod tests {
         let _ = planner.plan(PlanOp::Normalize, 4, 64); // hit
         let s = m.snapshot();
         assert_eq!((s.plan_cache_hits, s.plan_cache_misses), (2, 1));
+    }
+
+    #[test]
+    fn rejected_requests_record_their_queue_wait() {
+        let m = Metrics::default();
+        m.record_request(10.0, 15.0, true);
+        m.record_rejected_latency(5_000.0);
+        let s = m.snapshot();
+        let q = s.queue_us.unwrap();
+        assert_eq!(q.n, 2, "the rejected request's wait must be sampled");
+        assert!(q.max >= 5_000.0, "saturated waits dominate the tail: {}", q.max);
+        assert_eq!(s.e2e_us.unwrap().n, 2);
+    }
+
+    #[test]
+    fn prometheus_rendering_is_well_formed() {
+        let m = Metrics::default();
+        m.submitted.fetch_add(5, Ordering::Relaxed);
+        m.admitted.fetch_add(4, Ordering::Relaxed);
+        m.record_batch(4, 120.0);
+        m.record_request(10.0, 130.0, true);
+        m.record_queue_depth(2);
+        let mut e = Expo::new();
+        m.render_prometheus(&mut e);
+        let body = e.finish();
+        assert!(crate::obs::expo::first_invalid_line(&body).is_none(), "{body}");
+        assert!(body.contains("repro_requests_submitted_total 5"));
+        assert!(body.contains("repro_requests_admitted_total 4"));
+        assert!(body.contains("# TYPE repro_queue_wait_microseconds histogram"));
+        assert!(body.contains("repro_queue_depth_bucket{le=\"4\"} 1"));
     }
 }

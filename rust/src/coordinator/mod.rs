@@ -33,6 +33,9 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::config::ServeConfig;
+use crate::obs;
+use crate::obs::expo::Expo;
+use crate::obs::trace::{self, Outcome, Trace, TraceSink};
 
 pub use admission::Admission;
 pub use batcher::{Batcher, PushError};
@@ -53,6 +56,9 @@ pub struct Coordinator {
     /// Predicted-seconds admission controller; `None` = admission off
     /// (`admission_budget_ms = 0`), only `queue_capacity` backpressure.
     admission: Option<Arc<Admission>>,
+    /// Trace sink, present when `ServeConfig.trace` is on: requests carry
+    /// span contexts and finished traces export as JSONL.
+    tracer: Option<Arc<TraceSink>>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
 }
@@ -66,6 +72,9 @@ impl Coordinator {
 
     /// Start with an explicit router (tests inject custom ones).
     pub fn start_with_router(cfg: &ServeConfig, mut router: Router) -> Coordinator {
+        // A serving coordinator always wants per-pass bandwidth accounting
+        // (sticky, process-global; one-shot CLI paths leave it off).
+        obs::enable_passes();
         let batcher = Arc::new(Batcher::new(
             cfg.queue_capacity,
             cfg.max_batch,
@@ -77,16 +86,21 @@ impl Coordinator {
         router.attach_plan_counters(metrics.plan_cache.clone());
         let router = Arc::new(router);
         let admission = Admission::from_config(cfg).map(Arc::new);
+        let tracer =
+            cfg.trace.then(|| Arc::new(TraceSink::new(&cfg.trace_dir, cfg.trace_sample)));
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
                 let b = batcher.clone();
                 let m = metrics.clone();
                 let r = router.clone();
                 let a = admission.clone();
-                std::thread::spawn(move || worker_loop(&b, &m, &r, a.as_deref()))
+                let t = tracer.clone();
+                std::thread::spawn(move || {
+                    worker_loop(&b, &m, &r, a.as_deref(), t.as_deref())
+                })
             })
             .collect();
-        Coordinator { batcher, metrics, admission, workers, next_id: AtomicU64::new(1) }
+        Coordinator { batcher, metrics, admission, tracer, workers, next_id: AtomicU64::new(1) }
     }
 
     /// Submit a request (no deadline, standard class); fails fast with a
@@ -116,6 +130,8 @@ impl Coordinator {
         opts: SubmitOptions,
     ) -> Result<Handle, Rejected> {
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        // Admit-stage span start, paid only when tracing is on.
+        let admit_start = self.tracer.as_ref().map(|_| obs::clock::now());
         let mut cost_secs = 0.0;
         if let Some(adm) = &self.admission {
             match adm.try_admit(&payload, opts.deadline) {
@@ -136,12 +152,24 @@ impl Coordinator {
                 }
                 Err(rej) => {
                     self.metrics.record_rejection(&rej);
+                    self.trace_submit_rejection(0, admit_start, &rej);
                     return Err(rej);
                 }
             }
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (req, handle) = make_request_with(id, payload, opts, cost_secs);
+        // Close the admit span *before* the request is stamped `enqueued`
+        // so sequential stages never overlap: admit ends at or before the
+        // queue span starts.
+        let trace = if let (Some(sink), Some(t0)) = (&self.tracer, admit_start) {
+            let mut t = sink.begin(id);
+            t.span("admit", t0, obs::clock::now());
+            Some(t)
+        } else {
+            None
+        };
+        let (mut req, handle) = make_request_with(id, payload, opts, cost_secs);
+        req.trace = trace;
         match self.batcher.push(req) {
             Ok(()) => Ok(handle),
             Err(e) => {
@@ -154,8 +182,30 @@ impl Coordinator {
                     PushError::ShuttingDown => Rejected::ShuttingDown,
                 };
                 self.metrics.record_rejection(&rej);
+                // `push` consumed the request (and its span context); a
+                // rejected request must still leave a trace, so emit a
+                // fresh one — rejections bypass sampling anyway.
+                self.trace_submit_rejection(id, admit_start, &rej);
                 Err(rej)
             }
+        }
+    }
+
+    /// Export a trace for a request refused before it ever queued (shed
+    /// at admission or bounced off a full queue): one `admit` span, a
+    /// `rejected:<variant>` outcome, and zero kernel spans by
+    /// construction.
+    fn trace_submit_rejection(
+        &self,
+        id: u64,
+        admit_start: Option<Instant>,
+        rej: &Rejected,
+    ) {
+        if let (Some(sink), Some(t0)) = (&self.tracer, admit_start) {
+            let mut t = Trace::new(id, false);
+            t.span("admit", t0, obs::clock::now());
+            t.outcome = Outcome::Rejected(rej.variant_name());
+            sink.finish(Box::new(t));
         }
     }
 
@@ -209,6 +259,78 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
+    /// Render the full Prometheus-text exposition: every coordinator
+    /// counter and latency histogram, admission-budget gauges, kernel-pool
+    /// health, trace-sink health, and the per-pass bandwidth registry
+    /// (measured GB/s next to the plan's prediction).  Hermetic — a
+    /// string, no HTTP; `repro serve --metrics-file` dumps it periodically
+    /// and the CI smoke job validates every line.
+    pub fn metrics_text(&self) -> String {
+        let mut e = Expo::new();
+        self.metrics.render_prometheus(&mut e);
+        e.gauge(
+            "repro_queue_depth_current",
+            "Requests in the batch queue right now.",
+            "",
+            self.batcher.depth() as f64,
+        );
+        if let Some(adm) = &self.admission {
+            e.gauge(
+                "repro_admission_queued_seconds",
+                "Predicted seconds of admitted-but-unfinished work.",
+                "",
+                adm.queued_secs(),
+            );
+            e.gauge(
+                "repro_admission_budget_seconds",
+                "Admission controller's predicted-seconds budget.",
+                "",
+                adm.budget_secs(),
+            );
+        }
+        let (pool_workers, pool_spawned) = crate::softmax::batch::pool_stats();
+        e.gauge(
+            "repro_pool_workers",
+            "Live kernel-pool worker lanes.",
+            "",
+            pool_workers as f64,
+        );
+        e.counter(
+            "repro_pool_spawned_total",
+            "Kernel-pool lanes spawned since process start.",
+            "",
+            pool_spawned as u64,
+        );
+        e.counter(
+            "repro_pool_quarantined_total",
+            "Kernel-pool lanes quarantined after a job timeout.",
+            "",
+            crate::softmax::batch::pool_quarantined_total() as u64,
+        );
+        e.counter(
+            "repro_pass_series_dropped_total",
+            "Pass samples dropped because the series registry hit its cap.",
+            "",
+            obs::passes_dropped(),
+        );
+        if let Some(t) = &self.tracer {
+            e.counter(
+                "repro_traces_dropped_total",
+                "Trace lines lost to failed JSONL flushes.",
+                "",
+                t.dropped(),
+            );
+        }
+        obs::expo::render_passes(&mut e);
+        e.finish()
+    }
+
+    /// The trace sink when tracing is on (tests and `repro serve` inspect
+    /// buffered traces and flush through this).
+    pub fn trace_sink(&self) -> Option<&TraceSink> {
+        self.tracer.as_deref()
+    }
+
     pub fn queue_depth(&self) -> usize {
         self.batcher.depth()
     }
@@ -225,6 +347,10 @@ impl Coordinator {
         for w in self.workers {
             let _ = w.join();
         }
+        // Export whatever the bounded ring still holds.
+        if let Some(t) = &self.tracer {
+            let _ = t.flush();
+        }
     }
 }
 
@@ -233,6 +359,7 @@ fn worker_loop(
     metrics: &Metrics,
     router: &Router,
     admission: Option<&Admission>,
+    tracer: Option<&TraceSink>,
 ) {
     while let Some(batch) = batcher.take_batch() {
         metrics.record_queue_depth(batcher.depth());
@@ -240,9 +367,9 @@ fn worker_loop(
         // is answered with a typed rejection, never executed — under
         // overload the expensive thing is precisely the work nobody is
         // still waiting for.
-        let now = Instant::now();
+        let now = obs::clock::now();
         let mut live = Vec::with_capacity(batch.len());
-        for req in batch {
+        for mut req in batch {
             match req.deadline {
                 Some(d) if d <= now => {
                     if let Some(adm) = admission {
@@ -251,6 +378,14 @@ fn worker_loop(
                     let waited_us = now.duration_since(req.enqueued).as_micros() as u64;
                     let rej = Rejected::DeadlineExceeded { waited_us };
                     metrics.record_rejection(&rej);
+                    // Its wait was real — it belongs in the latency
+                    // histograms (the whole lifetime was queueing).
+                    metrics.record_rejected_latency(waited_us as f64);
+                    if let (Some(sink), Some(mut t)) = (tracer, req.trace.take()) {
+                        t.span("queue", req.enqueued, now);
+                        t.outcome = Outcome::Rejected(rej.variant_name());
+                        sink.finish(t);
+                    }
                     let _ = req.tx.send(Response {
                         id: req.id,
                         probs: Vec::new(),
@@ -285,7 +420,7 @@ fn worker_loop(
             groups.last_mut().unwrap().push(req);
         }
         for group in groups {
-            execute_group(group, metrics, router, admission);
+            execute_group(group, metrics, router, admission, tracer, now);
         }
     }
 }
@@ -303,13 +438,24 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 }
 
 /// Execute one single-key group of requests and answer each of them.
+/// `dequeued` is when the worker pulled the flush this group came from
+/// (the queue span's end and the batch-formation span's start).
 fn execute_group(
     mut batch: Vec<Request>,
     metrics: &Metrics,
     router: &Router,
     admission: Option<&Admission>,
+    tracer: Option<&TraceSink>,
+    dequeued: Instant,
 ) {
-    let exec_start = Instant::now();
+    // Arm the thread-local kernel event collector only when someone in
+    // this group is actually tracing: the router and kernels execute on
+    // this worker thread and report plan/pool/pass events through it.
+    let tracing = tracer.is_some() && batch.iter().any(|r| r.trace.is_some());
+    if tracing {
+        trace::arm();
+    }
+    let exec_start = obs::clock::now();
     // Move the payloads out of the requests instead of deep-copying the
     // logits on the hot path (§Perf: ~6% of serve time at N=8192); the
     // router consumes them into one flat row-major batch and returns
@@ -339,8 +485,19 @@ fn execute_group(
             ))
         }
     });
-    let exec_us = exec_start.elapsed().as_secs_f64() * 1e6;
+    let exec_end = obs::clock::now();
+    let exec_us = exec_end.duration_since(exec_start).as_secs_f64() * 1e6;
+    // Kernel-layer events collected while the router ran on this thread
+    // (empty when not tracing); grafted into every trace of the group.
+    let events = if tracing { trace::take_events() } else { Vec::new() };
+    let exec_start_us = obs::clock::micros_since_origin(exec_start);
+    let exec_end_us = obs::clock::micros_since_origin(exec_end);
     metrics.record_batch(batch_size, exec_us);
+    // Everything in this group reached execution (it completes or fails
+    // below, never re-queues): the `admitted` side of the accounting
+    // invariant `submitted == admitted + shed + deadline_missed +
+    // queue_full`.
+    metrics.admitted.fetch_add(batch_size as u64, Ordering::Relaxed);
     // Executed (or failed) work has left the queue either way: release
     // its admission charge so new arrivals see the drained budget.
     if let Some(adm) = admission {
@@ -349,9 +506,21 @@ fn execute_group(
         }
     }
 
+    // Close one request's trace: the shared queue/batch/exec spans, the
+    // grafted kernel events, and a respond span ending now.
+    let finish_trace =
+        |t: &mut Trace, enqueued: Instant, respond_start: Instant, outcome: Outcome| {
+            t.span("queue", enqueued, dequeued);
+            t.span("batch", dequeued, exec_start);
+            t.span("exec", exec_start, exec_end);
+            t.graft_events(&events, exec_start_us, exec_end_us);
+            t.span("respond", respond_start, obs::clock::now());
+            t.outcome = outcome;
+        };
+
     match result {
         Ok(out) => {
-            for (i, req) in batch.into_iter().enumerate() {
+            for (i, mut req) in batch.into_iter().enumerate() {
                 let queue_us = exec_start.duration_since(req.enqueued).as_secs_f64() * 1e6;
                 let e2e_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
                 metrics.record_request(queue_us, e2e_us, true);
@@ -363,6 +532,7 @@ fn execute_group(
                     Executed::Rows(b) => (b.row_f32(i), None),
                     Executed::Choices(c) => (Vec::new(), Some(c[i])),
                 };
+                let respond_start = obs::clock::now();
                 let _ = req.tx.send(Response {
                     id: req.id,
                     probs,
@@ -373,13 +543,18 @@ fn execute_group(
                     error: None,
                     rejected: None,
                 });
+                if let (Some(sink), Some(mut t)) = (tracer, req.trace.take()) {
+                    finish_trace(&mut t, req.enqueued, respond_start, Outcome::Completed);
+                    sink.finish(t);
+                }
             }
         }
         Err(e) => {
             let msg = e.to_string();
-            for req in batch {
+            for mut req in batch {
                 let queue_us = exec_start.duration_since(req.enqueued).as_secs_f64() * 1e6;
                 metrics.record_request(queue_us, queue_us + exec_us, false);
+                let respond_start = obs::clock::now();
                 let _ = req.tx.send(Response {
                     id: req.id,
                     probs: Vec::new(),
@@ -390,6 +565,10 @@ fn execute_group(
                     error: Some(msg.clone()),
                     rejected: None,
                 });
+                if let (Some(sink), Some(mut t)) = (tracer, req.trace.take()) {
+                    finish_trace(&mut t, req.enqueued, respond_start, Outcome::Failed);
+                    sink.finish(t);
+                }
             }
         }
     }
@@ -684,7 +863,7 @@ mod tests {
         }
         assert_eq!(groups.len(), 4, "interleaved keys split into runs");
         for group in groups {
-            execute_group(group, &metrics, &router, None);
+            execute_group(group, &metrics, &router, None, None, crate::obs::clock::now());
         }
         let r0 = rxs.remove(0).wait().unwrap();
         assert_eq!(r0.probs.len(), 8);

@@ -41,6 +41,19 @@ pub enum Rejected {
     ShuttingDown,
 }
 
+impl Rejected {
+    /// Stable variant name for traces and exposition labels: a rejected
+    /// request's trace ends in `rejected:<variant_name>`.
+    pub fn variant_name(&self) -> &'static str {
+        match self {
+            Rejected::DeadlineExceeded { .. } => "DeadlineExceeded",
+            Rejected::Overloaded { .. } => "Overloaded",
+            Rejected::QueueFull { .. } => "QueueFull",
+            Rejected::ShuttingDown => "ShuttingDown",
+        }
+    }
+}
+
 impl std::fmt::Display for Rejected {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -151,6 +164,11 @@ pub struct Request {
     /// seconds (0 when admission is off).  Carried so the exact amount
     /// admitted is released when the request leaves the queue.
     pub cost_secs: f64,
+    /// Span context, present when this request was picked for tracing
+    /// (`None` costs nothing on the hot path).  The coordinator opens the
+    /// admit span at submission and hands the trace back to the sink with
+    /// the response outcome.
+    pub trace: Option<Box<crate::obs::trace::Trace>>,
     pub tx: mpsc::SyncSender<Response>,
 }
 
@@ -235,7 +253,7 @@ pub fn make_request_with(
     cost_secs: f64,
 ) -> (Request, Handle) {
     let (tx, rx) = mpsc::sync_channel(1);
-    let enqueued = Instant::now();
+    let enqueued = crate::obs::clock::now();
     (
         Request {
             id,
@@ -244,6 +262,7 @@ pub fn make_request_with(
             deadline: opts.deadline.map(|d| enqueued + d),
             class: opts.class,
             cost_secs,
+            trace: None,
             tx,
         },
         Handle { id, rx },

@@ -13,7 +13,6 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Barrier};
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -55,7 +54,7 @@ pub fn measure_threads(
         }));
     }
     barrier.wait();
-    let t0 = Instant::now();
+    let t0 = crate::obs::clock::now();
     std::thread::sleep(std::time::Duration::from_secs_f64(min_time.max(0.02)));
     stop.store(true, Ordering::Relaxed);
     let wall = t0.elapsed().as_secs_f64();

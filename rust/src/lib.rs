@@ -30,6 +30,7 @@ pub mod costmodel;
 pub mod failpoint;
 pub mod figures;
 pub mod membw;
+pub mod obs;
 pub mod plan;
 pub mod platform;
 pub mod runtime;

@@ -10,7 +10,6 @@
 //! it fits" — `evict()` implements the eviction by streaming a
 //! cache-sized dummy buffer between iterations.
 
-use std::time::Instant;
 
 use crate::softmax::{run_pass_with, Isa, Pass, PassOps};
 use crate::util::stats;
@@ -68,7 +67,7 @@ pub fn measure_pass(
             if let Some(e) = ev.as_deref_mut() {
                 e.evict();
             }
-            let t0 = Instant::now();
+            let t0 = crate::obs::clock::now();
             let r = run_pass_with(pass, isa, unroll, &x, &mut y, ops);
             let dt = t0.elapsed().as_secs_f64();
             std::hint::black_box(r.ok());

@@ -1,0 +1,98 @@
+//! The central monotonic clock: the **only** allowed `Instant::now` call
+//! site in the crate (CI pins this with a grep gate, the same style as
+//! the planner-placement and kernel-layer gates).
+//!
+//! Funneling every timestamp through one module buys three things:
+//!
+//! 1. **One origin.**  Trace spans and exposition timestamps are
+//!    microseconds since [`origin`] — a process-wide anchor captured on
+//!    first use — so timestamps from different threads, requests, and
+//!    subsystems land on one comparable axis without carrying `Instant`s
+//!    across serialization boundaries.
+//! 2. **Auditable monotonicity.**  Everything observability-shaped in
+//!    this crate (span ordering tests, pass-time histograms, deadline
+//!    checks) assumes a monotonic clock; a single call site makes that
+//!    assumption checkable instead of folklore.
+//! 3. **A seam.**  A future simulated/virtual clock (for deterministic
+//!    batcher tests) only has to replace this module.
+//!
+//! `Instant` values still travel freely (they are just opaque points on
+//! the monotonic axis); only their *creation* is pinned here.
+
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// The process-wide time origin: captured once, on the first call to any
+/// function in this module.  All `*_us` timestamps in traces and
+/// exposition output are microseconds since this point.
+pub fn origin() -> Instant {
+    static ORIGIN: OnceLock<Instant> = OnceLock::new();
+    *ORIGIN.get_or_init(Instant::now)
+}
+
+/// Read the monotonic clock.  The one sanctioned `Instant::now` wrapper.
+#[inline]
+pub fn now() -> Instant {
+    // Make sure the origin predates every reading handed out, so
+    // `micros_since_origin` never saturates for a real timestamp.
+    origin();
+    Instant::now()
+}
+
+/// Microseconds from the process [`origin`] to `t` (saturating at 0 for
+/// pre-origin instants, which cannot be produced by [`now`]).
+#[inline]
+pub fn micros_since_origin(t: Instant) -> u64 {
+    t.saturating_duration_since(origin()).as_micros() as u64
+}
+
+/// Microseconds since the process [`origin`], right now.
+#[inline]
+pub fn now_us() -> u64 {
+    micros_since_origin(now())
+}
+
+/// Nanoseconds elapsed since `t0`, saturating into `u64` (585 years).
+#[inline]
+pub fn nanos_since(t0: Instant) -> u64 {
+    duration_nanos(now().saturating_duration_since(t0))
+}
+
+/// A `Duration` as saturating whole nanoseconds.
+#[inline]
+pub fn duration_nanos(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn origin_is_stable_and_precedes_now() {
+        let a = origin();
+        let t = now();
+        let b = origin();
+        assert_eq!(a, b, "origin must be captured exactly once");
+        assert!(t >= a);
+    }
+
+    #[test]
+    fn micros_are_monotone() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+        // A fresh instant measured after `a` cannot land before it.
+        assert!(micros_since_origin(now()) >= a);
+    }
+
+    #[test]
+    fn nanos_since_measures_forward_only() {
+        let t0 = now();
+        std::thread::sleep(Duration::from_millis(1));
+        let dt = nanos_since(t0);
+        assert!(dt >= 1_000_000, "slept 1ms, measured {dt}ns");
+        // The origin itself sits at exactly zero on the shared axis.
+        assert_eq!(micros_since_origin(origin()), 0);
+    }
+}

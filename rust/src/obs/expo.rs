@@ -1,0 +1,235 @@
+//! Prometheus-text-format exposition, hermetically: a string builder, no
+//! HTTP server and no client library.  `Coordinator::metrics_text()`
+//! assembles a full scrape body from the counters in
+//! `coordinator/metrics.rs`, the pass registry in [`super`], and the pool
+//! health counters; `repro serve --metrics-file` dumps it periodically.
+//!
+//! Naming conventions (docs/OBSERVABILITY.md): every metric is prefixed
+//! `repro_`, units ride in the name (`_microseconds`, `_gbps`, `_total`
+//! for counters), labels are `{op,dtype,pass,rows,n}` for per-shape
+//! series.  Output is line-oriented and validated by a CI awk gate: each
+//! non-empty line is `# HELP`, `# TYPE`, or `name{labels} value`.
+
+use std::fmt::Write;
+
+use super::histogram::Histogram;
+
+/// Builder for one exposition body.  Emits `# HELP`/`# TYPE` headers once
+/// per metric name (Prometheus rejects duplicates) in first-use order.
+#[derive(Default)]
+pub struct Expo {
+    out: String,
+    seen: Vec<&'static str>,
+}
+
+impl Expo {
+    pub fn new() -> Expo {
+        Expo::default()
+    }
+
+    fn header(&mut self, name: &'static str, help: &str, kind: &str) {
+        if self.seen.contains(&name) {
+            return;
+        }
+        self.seen.push(name);
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    fn sample(&mut self, name: &str, labels: &str, value: f64) {
+        // Prometheus floats: integers render bare, non-finite as +Inf/NaN
+        // never happens here (callers pass finite values).
+        if labels.is_empty() {
+            let _ = writeln!(self.out, "{name} {}", fmt_value(value));
+        } else {
+            let _ = writeln!(self.out, "{name}{{{labels}}} {}", fmt_value(value));
+        }
+    }
+
+    /// A monotone counter (`_total` suffix by convention, caller-named).
+    pub fn counter(&mut self, name: &'static str, help: &str, labels: &str, value: u64) {
+        self.header(name, help, "counter");
+        self.sample(name, labels, value as f64);
+    }
+
+    /// A point-in-time gauge.
+    pub fn gauge(&mut self, name: &'static str, help: &str, labels: &str, value: f64) {
+        self.header(name, help, "gauge");
+        self.sample(name, labels, value);
+    }
+
+    /// A full histogram family: `_bucket{le=...}` lines over `les`
+    /// (ascending; `+Inf` appended automatically), plus `_sum`/`_count`.
+    pub fn histogram(
+        &mut self,
+        name: &'static str,
+        help: &str,
+        labels: &str,
+        h: &Histogram,
+        les: &[f64],
+    ) {
+        self.header(name, help, "histogram");
+        let mut bounds: Vec<f64> = les.to_vec();
+        bounds.push(f64::INFINITY);
+        let cum = h.cumulative(&bounds);
+        for (le, c) in bounds.iter().zip(cum.iter()) {
+            let le_s = if le.is_infinite() { "+Inf".to_string() } else { fmt_value(*le) };
+            let full = if labels.is_empty() {
+                format!("le=\"{le_s}\"")
+            } else {
+                format!("{labels},le=\"{le_s}\"")
+            };
+            let _ = writeln!(self.out, "{name}_bucket{{{full}}} {c}");
+        }
+        self.sample(&format!("{name}_sum"), labels, h.sum() as f64);
+        self.sample(&format!("{name}_count"), labels, h.count() as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Default microsecond-latency bounds: powers of 4 from 1µs to ~16s.
+pub const LATENCY_US_LE: &[f64] = &[
+    1.0, 4.0, 16.0, 64.0, 256.0, 1_024.0, 4_096.0, 16_384.0, 65_536.0, 262_144.0, 1_048_576.0,
+    4_194_304.0, 16_777_216.0,
+];
+
+/// Bounds for per-pass GB/s histograms (milli-GB/s samples): 1 → 512 GB/s.
+pub const GBPS_MILLI_LE: &[f64] = &[
+    1_000.0, 2_000.0, 4_000.0, 8_000.0, 16_000.0, 32_000.0, 64_000.0, 128_000.0, 256_000.0,
+    512_000.0,
+];
+
+/// Render the process-global per-pass registry: time histograms, achieved
+/// GB/s (exact, from total bytes / total nanos), and the plan's predicted
+/// GB/s side by side, all under identical `{op,dtype,pass,rows,n}` labels
+/// so measured-vs-predicted drift is one PromQL division away.
+pub fn render_passes(expo: &mut Expo) {
+    for e in super::pass_entries() {
+        let labels = format!(
+            "op=\"{}\",dtype=\"{}\",pass=\"{}\",rows=\"{}\",n=\"{}\"",
+            e.op, e.dtype, e.pass, e.rows, e.n
+        );
+        expo.histogram(
+            "repro_pass_time_microseconds",
+            "Measured wall time of one kernel memory pass over one batch.",
+            &labels,
+            &e.stat.time_us,
+            LATENCY_US_LE,
+        );
+        if let Some(gbps) = e.stat.achieved_gbps() {
+            expo.gauge(
+                "repro_pass_achieved_gbps",
+                "Achieved memory bandwidth of this pass (total bytes / total time).",
+                &labels,
+                gbps,
+            );
+        }
+        let predicted = e.stat.predicted_gbps();
+        if predicted > 0.0 {
+            expo.gauge(
+                "repro_pass_predicted_gbps",
+                "Plan cost model's predicted bandwidth for this pass's shape.",
+                &labels,
+                predicted,
+            );
+        }
+    }
+}
+
+/// Validate one exposition body the way the CI gate does: every non-empty
+/// line is a `# HELP`/`# TYPE` header or a `name{labels} value` sample.
+/// Returns the first offending line, if any (tests use this).
+pub fn first_invalid_line(body: &str) -> Option<&str> {
+    for line in body.lines() {
+        if line.is_empty() || line.starts_with("# HELP ") || line.starts_with("# TYPE ") {
+            continue;
+        }
+        if !valid_sample_line(line) {
+            return Some(line);
+        }
+    }
+    None
+}
+
+fn valid_sample_line(line: &str) -> bool {
+    // name{labels} value | name value
+    let (series, value) = match line.rsplit_once(' ') {
+        Some(parts) => parts,
+        None => return false,
+    };
+    if value.parse::<f64>().is_err() && value != "+Inf" && value != "-Inf" {
+        return false;
+    }
+    let name = match series.split_once('{') {
+        Some((n, rest)) => {
+            if !rest.ends_with('}') {
+                return false;
+            }
+            n
+        }
+        None => series,
+    };
+    !name.is_empty()
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        && name.chars().next().is_some_and(|c| !c.is_ascii_digit())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render_with_single_headers() {
+        let mut e = Expo::new();
+        e.counter("repro_requests_total", "Requests submitted.", "", 42);
+        e.counter("repro_requests_total", "Requests submitted.", "class=\"best_effort\"", 7);
+        e.gauge("repro_queue_depth", "Current queue depth.", "", 3.0);
+        let body = e.finish();
+        assert_eq!(body.matches("# HELP repro_requests_total").count(), 1);
+        assert_eq!(body.matches("# TYPE repro_requests_total counter").count(), 1);
+        assert!(body.contains("repro_requests_total 42"));
+        assert!(body.contains("repro_requests_total{class=\"best_effort\"} 7"));
+        assert!(body.contains("repro_queue_depth 3"));
+        assert!(first_invalid_line(&body).is_none(), "{body}");
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_buckets() {
+        let h = Histogram::new();
+        for v in [2u64, 10, 300, 5_000] {
+            h.record(v);
+        }
+        let mut e = Expo::new();
+        e.histogram("repro_queue_wait_microseconds", "Queue wait.", "", &h, LATENCY_US_LE);
+        let body = e.finish();
+        assert!(body.contains("# TYPE repro_queue_wait_microseconds histogram"));
+        assert!(body.contains("repro_queue_wait_microseconds_bucket{le=\"+Inf\"} 4"));
+        assert!(body.contains("repro_queue_wait_microseconds_count 4"));
+        assert!(body.contains("repro_queue_wait_microseconds_sum 5312"));
+        assert!(first_invalid_line(&body).is_none(), "{body}");
+        // Buckets are cumulative: the le=16 bound already holds 2 and 10.
+        assert!(body.contains("repro_queue_wait_microseconds_bucket{le=\"16\"} 2"));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_lines() {
+        assert!(first_invalid_line("repro_x 1\nrepro_y{a=\"b\"} 2.5\n").is_none());
+        assert_eq!(first_invalid_line("not a metric line"), Some("not a metric line"));
+        assert_eq!(first_invalid_line("bad{unclosed 3"), Some("bad{unclosed 3"));
+        assert_eq!(first_invalid_line("1leading_digit 3"), Some("1leading_digit 3"));
+        assert_eq!(first_invalid_line("no_value"), Some("no_value"));
+    }
+}

@@ -1,0 +1,319 @@
+//! Lock-free log-linear histograms for latency and bandwidth samples.
+//!
+//! The coordinator's original latency "reservoir" was an unbounded
+//! `Mutex<Vec<f64>>` — a lock on every request and memory that grows with
+//! uptime.  This histogram replaces it: a fixed array of relaxed atomic
+//! buckets, so recording is wait-free, constant-size, and safe to call
+//! from kernel pool workers.
+//!
+//! Bucket layout (documented in `docs/OBSERVABILITY.md`): values `0..16`
+//! get exact unit buckets; above that, each power-of-two octave is split
+//! into 8 linear sub-buckets, so the relative bucket width is ≤ 1/8 =
+//! 12.5% everywhere.  With 60 octaves (up to `u64::MAX`) the whole
+//! histogram is `16 + 60×8 = 496` buckets — ~4 KB of atomics.
+//!
+//! Exact `count`/`sum`/`min`/`max` ride alongside the buckets, so means
+//! and extrema are exact; quantiles and the standard deviation come from
+//! bucket midpoints (≤ ~6% relative error by construction).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::stats;
+
+/// Values below this index map 1:1 to their own bucket.
+const LINEAR: u64 = 16;
+/// Log-linear region: 8 sub-buckets per octave, octaves 4..=63.
+const SUB: usize = 8;
+const OCTAVES: usize = 60;
+/// Total bucket count.
+pub const BUCKETS: usize = LINEAR as usize + OCTAVES * SUB;
+
+/// A fixed-size, wait-free log-linear histogram over `u64` samples.
+pub struct Histogram {
+    buckets: Box<[AtomicU64; BUCKETS]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("sum", &self.sum())
+            .finish()
+    }
+}
+
+/// Bucket index of a value.
+#[inline]
+fn index_of(v: u64) -> usize {
+    if v < LINEAR {
+        return v as usize;
+    }
+    // Octave = position of the leading bit (≥ 4 here); the next 3 bits
+    // select one of 8 linear sub-buckets inside it.
+    let octave = 63 - v.leading_zeros() as usize;
+    let sub = ((v >> (octave - 3)) & 0x7) as usize;
+    LINEAR as usize + (octave - 4) * SUB + sub
+}
+
+/// Inclusive-exclusive value range `[lo, hi)` covered by bucket `i`.
+fn bounds_of(i: usize) -> (u64, u64) {
+    if (i as u64) < LINEAR {
+        return (i as u64, i as u64 + 1);
+    }
+    let k = i - LINEAR as usize;
+    let octave = 4 + k / SUB;
+    let sub = (k % SUB) as u64;
+    let width = 1u64 << (octave - 3);
+    let lo = (1u64 << octave) + sub * width;
+    (lo, lo.saturating_add(width))
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: Box::new(std::array::from_fn(|_| AtomicU64::new(0))),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample.  Wait-free: five relaxed atomic RMWs.
+    pub fn record(&self, v: u64) {
+        self.buckets[index_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn min(&self) -> Option<u64> {
+        let m = self.min.load(Ordering::Relaxed);
+        (m != u64::MAX || self.count() > 0).then_some(m)
+    }
+
+    pub fn max(&self) -> Option<u64> {
+        (self.count() > 0).then(|| self.max.load(Ordering::Relaxed))
+    }
+
+    /// Exact mean (sum / count), `None` when empty.
+    pub fn mean(&self) -> Option<f64> {
+        let c = self.count();
+        (c > 0).then(|| self.sum() as f64 / c as f64)
+    }
+
+    /// Approximate quantile from bucket midpoints (`0.0 ≤ q ≤ 1.0`),
+    /// clamped into the exact `[min, max]` observed range.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let total = self.count();
+        if total == 0 {
+            return None;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                let (lo, hi) = bounds_of(i);
+                let mid = (lo as f64 + hi as f64) / 2.0;
+                let lo_ex = self.min.load(Ordering::Relaxed) as f64;
+                let hi_ex = self.max.load(Ordering::Relaxed) as f64;
+                return Some(mid.clamp(lo_ex, hi_ex));
+            }
+        }
+        self.max().map(|m| m as f64)
+    }
+
+    /// A [`stats::Summary`]-shaped view: exact `n`/`mean`/`min`/`max`,
+    /// bucket-midpoint quantiles, bucket-midpoint standard deviation.
+    pub fn summary(&self) -> Option<stats::Summary> {
+        let n = self.count();
+        if n == 0 {
+            return None;
+        }
+        let mean = self.mean().unwrap_or(0.0);
+        // E[x²] from bucket midpoints for the spread; good to the bucket
+        // resolution, which is all a serving dashboard needs.
+        let mut sq = 0.0f64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c > 0 {
+                let (lo, hi) = bounds_of(i);
+                let mid = (lo as f64 + hi as f64) / 2.0;
+                sq += c as f64 * mid * mid;
+            }
+        }
+        let var = (sq / n as f64 - mean * mean).max(0.0);
+        Some(stats::Summary {
+            n: n as usize,
+            mean,
+            median: self.quantile(0.5).unwrap_or(mean),
+            std: var.sqrt(),
+            min: self.min().unwrap_or(0) as f64,
+            max: self.max().unwrap_or(0) as f64,
+            p05: self.quantile(0.05).unwrap_or(mean),
+            p95: self.quantile(0.95).unwrap_or(mean),
+        })
+    }
+
+    /// Cumulative counts at each upper bound in `les` (ascending), for
+    /// Prometheus `_bucket{le=...}` lines.  A bucket is attributed to the
+    /// first bound its midpoint fits under — exact for bounds on bucket
+    /// edges, off by at most one bucket width otherwise.
+    pub fn cumulative(&self, les: &[f64]) -> Vec<u64> {
+        let mut cum = vec![0u64; les.len()];
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            let (lo, hi) = bounds_of(i);
+            let mid = (lo as f64 + hi as f64) / 2.0;
+            for (j, le) in les.iter().enumerate() {
+                if mid <= *le {
+                    for slot in cum.iter_mut().skip(j) {
+                        *slot += c;
+                    }
+                    break;
+                }
+            }
+        }
+        cum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_region_is_exact() {
+        for v in 0..LINEAR {
+            let i = index_of(v);
+            assert_eq!(i, v as usize);
+            let (lo, hi) = bounds_of(i);
+            assert_eq!((lo, hi), (v, v + 1));
+        }
+    }
+
+    #[test]
+    fn every_value_lands_inside_its_bucket_bounds() {
+        for &v in &[
+            0u64,
+            1,
+            15,
+            16,
+            17,
+            31,
+            32,
+            100,
+            1_000,
+            65_535,
+            65_536,
+            1 << 40,
+            u64::MAX / 2,
+            u64::MAX,
+        ] {
+            let i = index_of(v);
+            assert!(i < BUCKETS, "index {i} out of range for {v}");
+            let (lo, hi) = bounds_of(i);
+            assert!(lo <= v, "{v} below bucket lo {lo}");
+            // The topmost bucket's upper bound saturates at u64::MAX,
+            // which is therefore the one value sitting *on* its bound.
+            assert!(v < hi || v == u64::MAX, "{v} at/above bucket hi {hi}");
+        }
+    }
+
+    #[test]
+    fn relative_resolution_is_bounded() {
+        // Log-linear promise: bucket width ≤ 12.5% of its lower bound.
+        for i in LINEAR as usize..BUCKETS {
+            let (lo, hi) = bounds_of(i);
+            if hi > lo {
+                assert!(
+                    (hi - lo) as f64 <= lo as f64 / 8.0 + 1.0,
+                    "bucket {i}: [{lo}, {hi}) too wide"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_stats_and_bounded_quantiles() {
+        let h = Histogram::new();
+        assert!(h.summary().is_none());
+        for v in [3u64, 7, 100, 1000, 1000, 50_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum(), 3 + 7 + 100 + 1000 + 1000 + 50_000);
+        assert_eq!(h.min(), Some(3));
+        assert_eq!(h.max(), Some(50_000));
+        let s = h.summary().unwrap();
+        assert_eq!(s.n, 6);
+        assert_eq!(s.min, 3.0);
+        assert_eq!(s.max, 50_000.0);
+        // Median of {3,7,100,1000,1000,50000} lies in [100, 1000]; the
+        // bucket estimate must land within 12.5% of a true sample region.
+        assert!(s.median >= 90.0 && s.median <= 1130.0, "median {}", s.median);
+        // Quantiles stay inside the observed range.
+        assert!(s.p05 >= 3.0 && s.p95 <= 50_000.0);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(t * 1_000 + (i % 97));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+        let total: u64 =
+            h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        assert_eq!(total, 40_000, "every sample lands in exactly one bucket");
+    }
+
+    #[test]
+    fn cumulative_counts_are_monotone_and_complete() {
+        let h = Histogram::new();
+        for v in [1u64, 2, 10, 100, 10_000] {
+            h.record(v);
+        }
+        let les = [1.0, 16.0, 256.0, 1e9, f64::INFINITY];
+        let cum = h.cumulative(&les);
+        assert_eq!(cum.len(), 5);
+        for w in cum.windows(2) {
+            assert!(w[0] <= w[1], "cumulative counts must be monotone");
+        }
+        assert_eq!(*cum.last().unwrap(), 5, "+Inf bound sees every sample");
+        assert!(cum[1] >= 3, "1, 2, 10 all at/under le=16");
+    }
+}

@@ -1,0 +1,406 @@
+//! End-to-end observability: where did the time go, and how fast did the
+//! memory move?
+//!
+//! The paper's thesis is that softmax is memory-bandwidth-bound, so the
+//! production number that matters is *achieved GB/s per pass per shape* —
+//! measured, next to what the plan's cost model predicted.  This module
+//! provides the three pieces the serving stack needs to answer that:
+//!
+//! - [`clock`] — the one sanctioned `Instant::now` call site (CI-pinned),
+//!   giving every subsystem a shared monotonic origin.
+//! - [`histogram`] — wait-free log-linear histograms for latency and
+//!   bandwidth samples (replacing the coordinator's lock-guarded,
+//!   unbounded latency reservoirs).
+//! - [`trace`] — per-request span contexts exported as JSONL, with
+//!   bounded-ring 1-in-N sampling (rejections and failures always kept).
+//! - [`expo`] — hermetic Prometheus-text exposition over all of it.
+//!
+//! This file holds the **pass registry**: a process-global, lock-free-read
+//! map from `(op, dtype, rows, n, pass)` to measured pass timings and
+//! byte counts.  Kernel drivers time each memory pass with a [`PassTally`]
+//! (a few nanosecond-level clock reads per *batch*, not per element) and
+//! the batch layer records the result here along with the bytes that pass
+//! moved (from `Pass::traffic`) and the plan's predicted bandwidth
+//! ([`PassObs`]).  The registry mirrors the plan cache's concurrency
+//! design: readers load an immutable snapshot with one atomic acquire,
+//! writers serialize on a grow lock and publish a fresh snapshot, and the
+//! entry count is capped so leaked superseded snapshots stay bounded no
+//! matter what shapes clients send.
+//!
+//! Everything here is off until a coordinator starts ([`enable_passes`]):
+//! bare kernel benchmarks never take a timestamp or touch the registry —
+//! the per-pass cost when disabled is one relaxed atomic load.
+
+pub mod clock;
+pub mod expo;
+pub mod histogram;
+pub mod trace;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::softmax::Dtype;
+use histogram::Histogram;
+
+// ---------------------------------------------------------------------------
+// Global enable flag.
+// ---------------------------------------------------------------------------
+
+static PASSES_ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn on pass accounting process-wide (sticky; the coordinator calls
+/// this at startup).  Kernel entry points check [`passes_enabled`] before
+/// reading the clock, so standalone bench runs pay ~nothing.
+pub fn enable_passes() {
+    PASSES_ENABLED.store(true, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn passes_enabled() -> bool {
+    PASSES_ENABLED.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Kernel-side timing helpers.
+// ---------------------------------------------------------------------------
+
+/// What the batch layer tells the kernel path about the op being run, so
+/// pass records land under the right registry key.  `Copy` and two words
+/// wide — it rides through job structs for free.
+#[derive(Clone, Copy, Debug)]
+pub struct PassObs {
+    /// Plan op name (`normalize`, `normalize_inplace`, `accum`, `decode`).
+    pub op: &'static str,
+    /// The plan's predicted bandwidth for this shape, in milli-GB/s
+    /// (fixed-point: keeps the struct `Copy + Eq`-friendly and atomic).
+    pub predicted_mgbps: u32,
+}
+
+impl PassObs {
+    pub fn new(op: &'static str, predicted_gbps: f64) -> PassObs {
+        let m = (predicted_gbps * 1_000.0).clamp(0.0, u32::MAX as f64);
+        PassObs { op, predicted_mgbps: m as u32 }
+    }
+
+    /// An execution with no plan behind it (the direct batch APIs):
+    /// samples still land in the registry, with no bandwidth prediction.
+    pub fn unplanned(op: &'static str) -> PassObs {
+        PassObs { op, predicted_mgbps: 0 }
+    }
+
+    /// The observation context of a planned execution: the plan's op name
+    /// and its cost model's bandwidth assumption.
+    pub fn of_plan(p: &crate::plan::ExecPlan) -> PassObs {
+        PassObs::new(p.op.name(), p.gbps.unwrap_or(0.0))
+    }
+}
+
+/// Per-driver pass stopwatch.  Lives on the stack of one driver call;
+/// `slots` accumulate nanoseconds per pass **in execution order** (the
+/// blocked drivers revisit each pass once per cache block, so a slot sums
+/// across blocks).  When accounting is disabled, [`stamp`] returns `None`
+/// and the whole thing compiles down to a branch on a bool.
+///
+/// [`stamp`]: PassTally::stamp
+#[derive(Debug)]
+pub struct PassTally {
+    on: bool,
+    pub slots: [u64; 3],
+}
+
+impl PassTally {
+    #[inline]
+    pub fn new() -> PassTally {
+        PassTally { on: passes_enabled(), slots: [0; 3] }
+    }
+
+    /// Start timing one pass iteration; `None` when accounting is off.
+    #[inline]
+    pub fn stamp(&self) -> Option<std::time::Instant> {
+        self.on.then(clock::now)
+    }
+
+    /// Charge the time since `t0` to pass slot `slot`.
+    #[inline]
+    pub fn lap(&mut self, slot: usize, t0: Option<std::time::Instant>) {
+        if let Some(t0) = t0 {
+            self.slots[slot] += clock::nanos_since(t0);
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.on
+    }
+}
+
+impl Default for PassTally {
+    fn default() -> Self {
+        PassTally::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The pass registry.
+// ---------------------------------------------------------------------------
+
+/// Measured record for one `(op, dtype, rows, n, pass)` series.
+pub struct PassStat {
+    /// Wall time per recorded batch execution of this pass, microseconds.
+    pub time_us: Histogram,
+    /// Achieved bandwidth per execution, milli-GB/s (1 GB/s = 1000).
+    pub gbps_milli: Histogram,
+    /// Exact totals: achieved GB/s over all executions = bytes / nanos.
+    bytes: AtomicU64,
+    nanos: AtomicU64,
+    /// Latest plan prediction for this shape, milli-GB/s.
+    predicted_mgbps: AtomicU64,
+}
+
+impl PassStat {
+    fn new() -> PassStat {
+        PassStat {
+            time_us: Histogram::new(),
+            gbps_milli: Histogram::new(),
+            bytes: AtomicU64::new(0),
+            nanos: AtomicU64::new(0),
+            predicted_mgbps: AtomicU64::new(0),
+        }
+    }
+
+    fn record(&self, nanos: u64, bytes: u64, predicted_mgbps: u32) {
+        self.time_us.record(nanos / 1_000);
+        if nanos > 0 {
+            // bytes/ns == GB/s, so milli-GB/s = bytes * 1000 / nanos.
+            let mg = (bytes as u128 * 1_000 / nanos as u128).min(u64::MAX as u128);
+            self.gbps_milli.record(mg as u64);
+        }
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.nanos.fetch_add(nanos, Ordering::Relaxed);
+        self.predicted_mgbps.store(predicted_mgbps as u64, Ordering::Relaxed);
+    }
+
+    /// Aggregate achieved bandwidth in GB/s (total bytes / total time);
+    /// `None` before any timed execution.
+    pub fn achieved_gbps(&self) -> Option<f64> {
+        let ns = self.nanos.load(Ordering::Relaxed);
+        (ns > 0).then(|| self.bytes.load(Ordering::Relaxed) as f64 / ns as f64)
+    }
+
+    /// The plan cost model's predicted bandwidth in GB/s (0.0 = unknown).
+    pub fn predicted_gbps(&self) -> f64 {
+        self.predicted_mgbps.load(Ordering::Relaxed) as f64 / 1_000.0
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}
+
+type PassKey = (&'static str, Dtype, usize, usize, &'static str);
+type PassMap = HashMap<PassKey, &'static PassStat>;
+
+/// Hard bound on distinct registry series.  Shape count is client-driven
+/// (row length is arbitrary), and superseded snapshot maps are leaked
+/// like the plan cache's; past the cap new shapes are silently counted in
+/// [`passes_dropped`] instead of allocated.
+const PASS_REGISTRY_CAP: usize = 512;
+
+struct PassRegistry {
+    map: AtomicPtr<PassMap>,
+    grow: Mutex<()>,
+    dropped: AtomicU64,
+}
+
+static REGISTRY: PassRegistry = PassRegistry {
+    map: AtomicPtr::new(std::ptr::null_mut()),
+    grow: Mutex::new(()),
+    dropped: AtomicU64::new(0),
+};
+
+impl PassRegistry {
+    fn get(&self, key: &PassKey) -> Option<&'static PassStat> {
+        let p = self.map.load(Ordering::Acquire);
+        if p.is_null() {
+            return None;
+        }
+        // SAFETY: published snapshots are leaked, never freed, so the
+        // pointer stays valid for 'static (same invariant as PlanCache).
+        unsafe { (*p).get(key).copied() }
+    }
+
+    fn get_or_insert(&self, key: PassKey) -> Option<&'static PassStat> {
+        if let Some(s) = self.get(&key) {
+            return Some(s);
+        }
+        let _g = self.grow.lock().unwrap();
+        let cur = self.map.load(Ordering::Acquire);
+        if !cur.is_null() {
+            // SAFETY: as in `get`.
+            if let Some(s) = unsafe { (*cur).get(&key).copied() } {
+                return Some(s);
+            }
+        }
+        let cur_len = if cur.is_null() { 0 } else { unsafe { (*cur).len() } };
+        if cur_len >= PASS_REGISTRY_CAP {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let stat: &'static PassStat = Box::leak(Box::new(PassStat::new()));
+        // SAFETY: as in `get`; the clone shares the leaked stat refs.
+        let mut next: PassMap =
+            if cur.is_null() { HashMap::new() } else { unsafe { (*cur).clone() } };
+        next.insert(key, stat);
+        self.map.store(Box::into_raw(Box::new(next)), Ordering::Release);
+        Some(stat)
+    }
+
+    fn entries(&self) -> Vec<(PassKey, &'static PassStat)> {
+        let p = self.map.load(Ordering::Acquire);
+        if p.is_null() {
+            return Vec::new();
+        }
+        // SAFETY: as in `get`.
+        let mut v: Vec<_> = unsafe { (*p).iter().map(|(k, s)| (*k, *s)) }.collect();
+        v.sort_by_key(|((op, d, rows, n, pass), _)| {
+            (*op, format!("{d}"), *pass, *rows, *n)
+        });
+        v
+    }
+}
+
+/// Record one timed pass execution into the process-global registry.
+///
+/// `bytes` is the traffic this pass moved (rows × n × elem size ×
+/// (reads + writes) from `Pass::traffic`); `nanos` its measured wall
+/// time; `predicted_mgbps` the plan's modelled bandwidth in milli-GB/s.
+pub fn record_pass(
+    op: &'static str,
+    dtype: Dtype,
+    rows: usize,
+    n: usize,
+    pass: &'static str,
+    nanos: u64,
+    bytes: u64,
+    predicted_mgbps: u32,
+) {
+    if let Some(stat) = REGISTRY.get_or_insert((op, dtype, rows, n, pass)) {
+        stat.record(nanos, bytes, predicted_mgbps);
+    }
+}
+
+/// One exposition-ready registry row.
+pub struct PassEntry {
+    pub op: &'static str,
+    pub dtype: Dtype,
+    pub rows: usize,
+    pub n: usize,
+    pub pass: &'static str,
+    pub stat: &'static PassStat,
+}
+
+/// Every recorded series, deterministically ordered (op, dtype, pass,
+/// rows, n) for stable exposition output.
+pub fn pass_entries() -> Vec<PassEntry> {
+    REGISTRY
+        .entries()
+        .into_iter()
+        .map(|((op, dtype, rows, n, pass), stat)| PassEntry { op, dtype, rows, n, pass, stat })
+        .collect()
+}
+
+/// Pass executions dropped because the registry hit its series cap.
+pub fn passes_dropped() -> u64 {
+    REGISTRY.dropped.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tally_takes_no_timestamps() {
+        // The flag may already be on if a coordinator test ran first in
+        // this process; construct the off state directly.
+        let mut t = PassTally { on: false, slots: [0; 3] };
+        let s = t.stamp();
+        assert!(s.is_none());
+        t.lap(0, s);
+        assert_eq!(t.slots, [0; 3]);
+    }
+
+    #[test]
+    fn tally_accumulates_per_slot() {
+        let mut t = PassTally { on: true, slots: [0; 3] };
+        for _ in 0..3 {
+            let s = t.stamp();
+            std::hint::black_box(0u64);
+            t.lap(1, s);
+        }
+        assert_eq!(t.slots[0], 0);
+        assert!(t.slots[1] > 0, "three laps must accumulate time");
+        assert_eq!(t.slots[2], 0);
+    }
+
+    #[test]
+    fn registry_keys_series_by_shape_and_pass() {
+        record_pass("t_norm", Dtype::F32, 4, 256, "max", 1_000, 4_096, 25_000);
+        record_pass("t_norm", Dtype::F32, 4, 256, "max", 1_000, 4_096, 25_000);
+        record_pass("t_norm", Dtype::F32, 4, 256, "sum_exp", 2_000, 4_096, 25_000);
+        let rows: Vec<PassEntry> = pass_entries()
+            .into_iter()
+            .filter(|e| e.op == "t_norm" && e.rows == 4 && e.n == 256)
+            .collect();
+        assert_eq!(rows.len(), 2, "one series per pass");
+        let max = rows.iter().find(|e| e.pass == "max").unwrap();
+        assert_eq!(max.stat.time_us.count(), 2);
+        assert_eq!(max.stat.total_bytes(), 8_192);
+        // 4096 bytes / 1000 ns = 4.096 GB/s aggregate.
+        let g = max.stat.achieved_gbps().unwrap();
+        assert!((g - 4.096).abs() < 1e-9, "achieved {g}");
+        assert!((max.stat.predicted_gbps() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registry_is_bounded_and_counts_drops() {
+        // A fresh local registry: overflowing the process-global one
+        // would starve sibling tests sharing it.
+        let reg = PassRegistry {
+            map: AtomicPtr::new(std::ptr::null_mut()),
+            grow: Mutex::new(()),
+            dropped: AtomicU64::new(0),
+        };
+        for n in 0..PASS_REGISTRY_CAP + 8 {
+            let got = reg.get_or_insert(("t_capfill", Dtype::Bf16, 1, 10_000 + n, "max"));
+            assert_eq!(got.is_some(), n < PASS_REGISTRY_CAP, "at n={n}");
+        }
+        assert_eq!(reg.dropped.load(Ordering::Relaxed), 8);
+        assert_eq!(reg.entries().len(), PASS_REGISTRY_CAP);
+        // Existing series still resolve after the cap is hit.
+        assert!(reg.get(&("t_capfill", Dtype::Bf16, 1, 10_000, "max")).is_some());
+    }
+
+    #[test]
+    fn concurrent_recording_converges_to_one_series() {
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    for _ in 0..500 {
+                        record_pass(
+                            "t_conc", Dtype::F16, 2, 777, "scale_extexp", 100, 3_108, 30_000,
+                        );
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let rows: Vec<PassEntry> =
+            pass_entries().into_iter().filter(|e| e.op == "t_conc").collect();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].stat.time_us.count(), 2_000);
+        assert_eq!(rows[0].stat.total_bytes(), 2_000 * 3_108);
+    }
+}

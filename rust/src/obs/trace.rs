@@ -1,0 +1,460 @@
+//! Request tracing: where did this request's time go?
+//!
+//! Every request (when `ServeConfig.trace` is on) carries a [`Trace`] —
+//! an owned, lock-free span list that rides inside the `Request` through
+//! submit → queue → worker → response, picking up one [`Span`] per serving
+//! stage.  Ownership does the synchronization: exactly one thread touches
+//! a trace at any moment (the submitting client, then the dequeuing
+//! worker), so there is no locking on the request path.
+//!
+//! Stage taxonomy (docs/OBSERVABILITY.md): `admit` (admission decision),
+//! `queue` (enqueue → dequeue), `batch` (dequeue → group execution
+//! start), `plan:hit`/`plan:miss` (planner lookup), `pool_dispatch`
+//! (kernel pool hand-off + drain), `pass:<name>` (one kernel memory
+//! pass; durations are measured, offsets synthesized sequentially inside
+//! the exec window — see [`Trace::graft_events`]), `exec` (router
+//! execution), `respond` (response assembly + send).
+//!
+//! Completed traces go to a [`TraceSink`]: 1-in-N sampled for exports,
+//! with rejected / deadline-missed / failed requests always exported, and
+//! buffered in a bounded ring that flushes to
+//! `<trace_dir>/trace-<pid>.jsonl` when full and at shutdown.
+//!
+//! Kernel-side stages (`plan`, `pool_dispatch`, `pass:*`) happen layers
+//! below the coordinator, inside code that knows nothing about requests.
+//! They report through a **thread-local event collector** ([`arm`] /
+//! [`take_events`]): the coordinator worker arms its thread before
+//! invoking the router, the kernel layers append events if (and only if)
+//! their thread is armed, and the worker grafts the collected events into
+//! every trace of the executed batch.  Pool workers are never armed, so
+//! pooled chunks contribute to the pass *histograms* (process-global)
+//! but not to per-request span lists — documented, deliberate: traces
+//! answer "where did the time go", histograms answer "how fast is the
+//! kernel", and only the latter needs cross-thread visibility.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::clock;
+
+/// One timed serving stage of one request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    /// Stage name (`admit`, `queue`, `batch`, `exec`, `respond`,
+    /// `plan:hit`, `plan:miss`, `pool_dispatch`, `pass:<pass>`).
+    pub stage: &'static str,
+    /// Microseconds since the process clock origin.
+    pub start_us: u64,
+    pub end_us: u64,
+}
+
+/// How a traced request ended.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Outcome {
+    /// Still in flight (never exported in this state).
+    Pending,
+    /// Served a normal response.
+    Completed,
+    /// Execution failed (the response carries `error`).
+    Failed,
+    /// Refused by policy; carries the `Rejected` variant name
+    /// (`DeadlineExceeded`, `Overloaded`, `QueueFull`, `ShuttingDown`).
+    Rejected(&'static str),
+}
+
+/// A kernel-layer timing event, reported via the thread-local collector.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// `plan`, `pool_dispatch`, or `pass`.
+    pub kind: &'static str,
+    /// Refinement: `hit`/`miss` for `plan`, the pass name for `pass`.
+    pub detail: &'static str,
+    /// Microseconds since the clock origin when the event began.
+    pub start_us: u64,
+    /// Measured duration in nanoseconds.
+    pub dur_ns: u64,
+}
+
+/// The span context one request carries through the serving stack.
+#[derive(Debug)]
+pub struct Trace {
+    pub id: u64,
+    /// Chosen by the sink's 1-in-N sampler at creation.  Rejected and
+    /// failed requests are exported regardless of this flag.
+    pub sampled: bool,
+    pub spans: Vec<Span>,
+    pub outcome: Outcome,
+}
+
+impl Trace {
+    pub fn new(id: u64, sampled: bool) -> Trace {
+        Trace { id, sampled, spans: Vec::with_capacity(8), outcome: Outcome::Pending }
+    }
+
+    /// Append a stage span from two clock instants.
+    pub fn span(&mut self, stage: &'static str, start: Instant, end: Instant) {
+        self.span_us(
+            stage,
+            clock::micros_since_origin(start),
+            clock::micros_since_origin(end),
+        );
+    }
+
+    /// Append a stage span from origin-relative microsecond stamps.
+    pub fn span_us(&mut self, stage: &'static str, start_us: u64, end_us: u64) {
+        self.spans.push(Span { stage, start_us, end_us: end_us.max(start_us) });
+    }
+
+    /// Graft kernel-layer events collected during this request's batch
+    /// into the trace, nested inside `[exec_start_us, exec_end_us]`.
+    ///
+    /// `plan` and `pool_dispatch` events carry real offsets and keep
+    /// them.  `pass` events carry *measured durations* but synthetic
+    /// placement: the blocked drivers interleave passes across cache
+    /// blocks, so per-pass wall spans do not exist as contiguous
+    /// intervals — they are laid out sequentially from the first pass
+    /// event's start, preserving exact durations and execution order.
+    pub fn graft_events(&mut self, events: &[Event], exec_start_us: u64, exec_end_us: u64) {
+        let clamp = |us: u64| us.clamp(exec_start_us, exec_end_us);
+        let mut pass_cursor: Option<u64> = None;
+        for ev in events {
+            let dur_us = ev.dur_ns / 1_000;
+            match ev.kind {
+                "pass" => {
+                    let start = clamp(pass_cursor.unwrap_or(ev.start_us));
+                    let end = clamp(start + dur_us);
+                    // Static names only: pass names come from a fixed set.
+                    let stage: &'static str = match ev.detail {
+                        "max" => "pass:max",
+                        "sum_exp" => "pass:sum_exp",
+                        "store_exp" => "pass:store_exp",
+                        "scale_exp" => "pass:scale_exp",
+                        "scale_inplace" => "pass:scale_inplace",
+                        "accum_extexp" => "pass:accum_extexp",
+                        "scale_extexp" => "pass:scale_extexp",
+                        "fused_scan" => "pass:fused_scan",
+                        _ => "pass:other",
+                    };
+                    self.span_us(stage, start, end);
+                    pass_cursor = Some(end);
+                }
+                "plan" => {
+                    let stage = if ev.detail == "hit" { "plan:hit" } else { "plan:miss" };
+                    let start = clamp(ev.start_us);
+                    self.span_us(stage, start, clamp(start + dur_us.max(1)));
+                }
+                _ => {
+                    let start = clamp(ev.start_us);
+                    self.span_us("pool_dispatch", start, clamp(start + dur_us));
+                }
+            }
+        }
+    }
+
+    /// Count of kernel pass spans (`pass:*`) — zero for any request that
+    /// was rejected instead of executed (trace-integrity invariant).
+    pub fn kernel_spans(&self) -> usize {
+        self.spans.iter().filter(|s| s.stage.starts_with("pass:")).count()
+    }
+
+    /// One JSONL line (schema in docs/FORMATS.md, `trace-jsonl-v1`).
+    pub fn to_json_line(&self) -> String {
+        let outcome = match &self.outcome {
+            Outcome::Pending => "pending".to_string(),
+            Outcome::Completed => "completed".to_string(),
+            Outcome::Failed => "failed".to_string(),
+            Outcome::Rejected(v) => format!("rejected:{v}"),
+        };
+        let mut s = String::with_capacity(96 + self.spans.len() * 48);
+        s.push_str(&format!(
+            "{{\"schema\":\"trace-jsonl-v1\",\"id\":{},\"sampled\":{},\"outcome\":\"{}\",\"spans\":[",
+            self.id, self.sampled, outcome
+        ));
+        for (i, sp) in self.spans.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"stage\":\"{}\",\"start_us\":{},\"end_us\":{}}}",
+                sp.stage, sp.start_us, sp.end_us
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local kernel event collector.
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static EVENTS: RefCell<Option<Vec<Event>>> = const { RefCell::new(None) };
+}
+
+/// Arm the current thread's event collector (coordinator workers, before
+/// invoking the router).  Re-arming discards any stale events.
+pub fn arm() {
+    EVENTS.with(|e| *e.borrow_mut() = Some(Vec::new()));
+}
+
+/// Is the current thread collecting kernel events?  Kernel layers check
+/// this before paying for a clock read.
+#[inline]
+pub fn armed() -> bool {
+    EVENTS.with(|e| e.borrow().is_some())
+}
+
+/// Disarm and return everything collected since [`arm`].
+pub fn take_events() -> Vec<Event> {
+    EVENTS.with(|e| e.borrow_mut().take()).unwrap_or_default()
+}
+
+/// Append one kernel event if this thread is armed (no-op otherwise).
+pub fn event(kind: &'static str, detail: &'static str, start: Instant, dur_ns: u64) {
+    EVENTS.with(|e| {
+        if let Some(v) = e.borrow_mut().as_mut() {
+            v.push(Event {
+                kind,
+                detail,
+                start_us: clock::micros_since_origin(start),
+                dur_ns,
+            });
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// The sink: sampling + bounded ring + JSONL flush.
+// ---------------------------------------------------------------------------
+
+/// Collects finished traces, samples which to keep, and flushes them as
+/// JSONL.  Lines buffer in a bounded ring (`RING_CAP`); when the ring
+/// fills it is appended to `<dir>/trace-<pid>.jsonl`, and [`flush`] at
+/// coordinator shutdown drains the remainder.  Memory is therefore
+/// bounded regardless of uptime; the file only grows by what sampling
+/// lets through.
+///
+/// [`flush`]: TraceSink::flush
+pub struct TraceSink {
+    /// Export 1 request in `sample` (≥ 1); rejected/failed always export.
+    sample: u64,
+    counter: AtomicU64,
+    ring: Mutex<VecDeque<String>>,
+    path: PathBuf,
+    /// Lines dropped because a flush failed (exposition surfaces this).
+    dropped: AtomicU64,
+}
+
+/// Ring capacity in buffered trace lines before a flush to disk.
+const RING_CAP: usize = 1024;
+
+impl TraceSink {
+    /// `dir` is created lazily on first flush.
+    pub fn new(dir: &Path, sample: u64) -> TraceSink {
+        TraceSink {
+            sample: sample.max(1),
+            counter: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::with_capacity(64)),
+            path: dir.join(format!("trace-{}.jsonl", std::process::id())),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Where flushed traces land.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Begin a trace for request `id`, rolling the 1-in-N sample die.
+    pub fn begin(&self, id: u64) -> Box<Trace> {
+        let sampled = self.counter.fetch_add(1, Ordering::Relaxed) % self.sample == 0;
+        Box::new(Trace::new(id, sampled))
+    }
+
+    /// Accept a finished trace.  Kept when sampled, or unconditionally
+    /// for rejections and failures (the interesting requests are rare by
+    /// construction, so they never lose the sampling lottery).
+    pub fn finish(&self, trace: Box<Trace>) {
+        let keep = trace.sampled
+            || matches!(trace.outcome, Outcome::Rejected(_) | Outcome::Failed);
+        if !keep {
+            return;
+        }
+        let line = trace.to_json_line();
+        let full = {
+            let mut ring = self.ring.lock().unwrap();
+            ring.push_back(line);
+            ring.len() >= RING_CAP
+        };
+        if full {
+            let _ = self.flush();
+        }
+    }
+
+    /// Buffered lines not yet flushed (tests inspect traces through this
+    /// without touching the filesystem).
+    pub fn buffered(&self) -> Vec<String> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Lines lost to failed flushes.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Append every buffered line to the JSONL file, creating the
+    /// directory on first use.  Returns the file path.
+    pub fn flush(&self) -> std::io::Result<PathBuf> {
+        let drained: Vec<String> = {
+            let mut ring = self.ring.lock().unwrap();
+            ring.drain(..).collect()
+        };
+        if drained.is_empty() {
+            return Ok(self.path.clone());
+        }
+        let write = (|| -> std::io::Result<()> {
+            if let Some(dir) = self.path.parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&self.path)?;
+            for line in &drained {
+                writeln!(f, "{line}")?;
+            }
+            f.flush()
+        })();
+        match write {
+            Ok(()) => Ok(self.path.clone()),
+            Err(e) => {
+                self.dropped.fetch_add(drained.len() as u64, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_serialize_in_order() {
+        let mut t = Trace::new(7, true);
+        t.span_us("admit", 10, 12);
+        t.span_us("queue", 12, 40);
+        t.outcome = Outcome::Completed;
+        let line = t.to_json_line();
+        assert!(line.starts_with("{\"schema\":\"trace-jsonl-v1\""), "{line}");
+        assert!(line.contains("\"id\":7"), "{line}");
+        assert!(line.contains("\"outcome\":\"completed\""), "{line}");
+        let admit = line.find("admit").unwrap();
+        let queue = line.find("queue").unwrap();
+        assert!(admit < queue, "span order preserved");
+        // The line parses with the in-tree JSON reader.
+        let j = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(j.path(&["spans"]).unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn rejected_outcome_carries_variant() {
+        let mut t = Trace::new(1, false);
+        t.span_us("admit", 0, 5);
+        t.outcome = Outcome::Rejected("QueueFull");
+        assert!(t.to_json_line().contains("\"outcome\":\"rejected:QueueFull\""));
+        assert_eq!(t.kernel_spans(), 0);
+    }
+
+    #[test]
+    fn graft_lays_passes_sequentially_inside_exec() {
+        let mut t = Trace::new(2, true);
+        let events = vec![
+            Event { kind: "plan", detail: "miss", start_us: 100, dur_ns: 3_000 },
+            Event { kind: "pass", detail: "accum_extexp", start_us: 105, dur_ns: 40_000 },
+            Event { kind: "pass", detail: "scale_extexp", start_us: 105, dur_ns: 60_000 },
+        ];
+        t.graft_events(&events, 100, 300);
+        t.span_us("exec", 100, 300);
+        let passes: Vec<&Span> =
+            t.spans.iter().filter(|s| s.stage.starts_with("pass:")).collect();
+        assert_eq!(passes.len(), 2);
+        // Sequential, non-overlapping, duration-preserving (40µs then 60µs).
+        assert_eq!(passes[0].end_us - passes[0].start_us, 40);
+        assert!(passes[1].start_us >= passes[0].end_us);
+        assert_eq!(passes[1].end_us - passes[1].start_us, 60);
+        // Nested in the exec window.
+        for p in &passes {
+            assert!(p.start_us >= 100 && p.end_us <= 300);
+        }
+        assert_eq!(t.kernel_spans(), 2);
+    }
+
+    #[test]
+    fn collector_is_per_thread_and_disarmed_by_default() {
+        assert!(!armed());
+        event("pass", "max", clock::now(), 10); // no-op while disarmed
+        arm();
+        assert!(armed());
+        event("plan", "hit", clock::now(), 500);
+        let on_other_thread = std::thread::spawn(|| {
+            event("pass", "max", clock::now(), 10);
+            armed()
+        })
+        .join()
+        .unwrap();
+        assert!(!on_other_thread, "arming must not leak across threads");
+        let ev = take_events();
+        assert_eq!(ev.len(), 1);
+        assert_eq!((ev[0].kind, ev[0].detail), ("plan", "hit"));
+        assert!(!armed(), "take_events disarms");
+    }
+
+    #[test]
+    fn sink_samples_one_in_n_but_keeps_rejections() {
+        let dir = std::env::temp_dir().join("two-pass-trace-test-unit");
+        let sink = TraceSink::new(&dir, 4);
+        for i in 0..8u64 {
+            let mut t = sink.begin(i);
+            t.outcome = Outcome::Completed;
+            sink.finish(t);
+        }
+        // 1-in-4 of 8 completed traces → exactly 2 buffered.
+        assert_eq!(sink.buffered().len(), 2);
+        let mut t = sink.begin(99);
+        assert!(!t.sampled, "9th roll of 1-in-4 must lose");
+        t.outcome = Outcome::Rejected("Overloaded");
+        sink.finish(t);
+        assert_eq!(sink.buffered().len(), 3, "rejections always kept");
+        assert_eq!(sink.dropped(), 0);
+    }
+
+    #[test]
+    fn sink_flushes_jsonl() {
+        let dir = std::env::temp_dir()
+            .join(format!("two-pass-trace-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let sink = TraceSink::new(&dir, 1);
+        for i in 0..3u64 {
+            let mut t = sink.begin(i);
+            t.span_us("admit", i, i + 1);
+            t.outcome = Outcome::Completed;
+            sink.finish(t);
+        }
+        let path = sink.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for l in lines {
+            crate::util::json::Json::parse(l).unwrap();
+        }
+        assert!(sink.buffered().is_empty(), "flush drains the ring");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

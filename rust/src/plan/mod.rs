@@ -191,15 +191,21 @@ pub enum PlanOp {
     Decode,
 }
 
-impl fmt::Display for PlanOp {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let s = match self {
+impl PlanOp {
+    /// Stable lowercase name — metric labels and trace stages key on it.
+    pub fn name(self) -> &'static str {
+        match self {
             PlanOp::Normalize => "normalize",
             PlanOp::NormalizeInPlace => "normalize_inplace",
             PlanOp::Accum => "accum",
             PlanOp::Decode => "decode",
-        };
-        write!(f, "{s}")
+        }
+    }
+}
+
+impl fmt::Display for PlanOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
     }
 }
 
@@ -697,14 +703,24 @@ impl Planner {
     /// planned per call and every call counts as a miss.)
     pub fn plan_dtype(&self, op: PlanOp, dtype: Dtype, rows: usize, n: usize) -> Arc<ExecPlan> {
         let key = (op, dtype, rows, n);
+        // Trace the lookup when the calling thread is collecting events
+        // (coordinator workers): hit vs miss, and how long a miss's
+        // plan derivation took.
+        let t0 = crate::obs::trace::armed().then(crate::obs::clock::now);
         if let Some(p) = self.cache.get(&key) {
             self.counters.hits.fetch_add(1, Ordering::Relaxed);
+            if let Some(t0) = t0 {
+                crate::obs::trace::event("plan", "hit", t0, crate::obs::clock::nanos_since(t0));
+            }
             return p;
         }
         self.counters.misses.fetch_add(1, Ordering::Relaxed);
         let plan = self.build(op, dtype, rows, n);
         if self.explain {
             println!("{plan}");
+        }
+        if let Some(t0) = t0 {
+            crate::obs::trace::event("plan", "miss", t0, crate::obs::clock::nanos_since(t0));
         }
         self.cache.insert(key, plan)
     }

@@ -695,8 +695,14 @@ pub fn sample_batch_planned(
             x.dtype()
         )));
     }
+    // The fused scan is one read pass over the batch whatever the
+    // placement — timed whole-op here (like pass-1 accumulation) and
+    // recorded under the decode plan's registry series.
+    let t0 = crate::obs::passes_enabled().then(crate::obs::clock::now);
     if p.threads <= 1 {
-        return sample_batch(p.isa, x, params);
+        let out = sample_batch(p.isa, x, params)?;
+        record_scan_pass(p, x, t0);
+        return Ok(out);
     }
     // Placeholder-filled output: the pool's decode jobs overwrite every
     // slot, and errors discard the whole vector.  No timeout on this
@@ -704,12 +710,29 @@ pub fn sample_batch_planned(
     // a wedged job would be unsound (see `sample_batch_planned_owned`).
     let mut out = vec![Choice { token: 0, logprob: 0.0 }; x.rows()];
     match decode_chunked(p, x, params, &mut out, None) {
-        Ok(()) => Ok(out),
+        Ok(()) => {
+            record_scan_pass(p, x, t0);
+            Ok(out)
+        }
         Err(PoolError::Failed(e)) => Err(e),
         Err(PoolError::TimedOut { .. }) => {
             unreachable!("untimed decode submissions cannot time out")
         }
     }
+}
+
+/// Record one whole-batch fused-scan execution: the decode counterpart
+/// of the normalize pass records ("fused_scan" is not a `Pass` — it is
+/// the sampling subsystem's read-only traversal of the logits).
+fn record_scan_pass(p: &ExecPlan, x: &RowBatch, t0: Option<std::time::Instant>) {
+    crate::softmax::batch::record_read_pass(
+        crate::obs::PassObs::of_plan(p),
+        x.dtype(),
+        x.rows(),
+        x.n(),
+        "fused_scan",
+        t0,
+    );
 }
 
 /// [`sample_batch_planned`] over an **owned** batch: the serving path's
@@ -751,9 +774,13 @@ pub fn sample_batch_planned_owned(
             x.dtype()
         )));
     }
+    let t0 = crate::obs::passes_enabled().then(crate::obs::clock::now);
     let mut out = vec![Choice { token: 0, logprob: 0.0 }; x.rows()];
     match decode_chunked(p, &x, &params, &mut out, p.job_timeout) {
-        Ok(()) => Ok(out),
+        Ok(()) => {
+            record_scan_pass(p, &x, t0);
+            Ok(out)
+        }
         Err(PoolError::Failed(e)) => Err(e),
         Err(PoolError::TimedOut { waited_ms }) => {
             // SAFETY requirement of PoolError::TimedOut: every buffer the

@@ -106,6 +106,7 @@ use std::sync::{mpsc, Mutex, OnceLock};
 
 use super::kernels::{self, Bf16, Dtype, Element, KernelElement, F16};
 use super::{exp::ExtSum, Algorithm, Isa, Pass, SoftmaxError};
+use crate::obs::{self, PassObs, PassTally};
 use crate::plan::{self, ChunkPlan, ExecPlan, PlanOp};
 use crate::sampling::{sample_row_elems, Choice, SamplingError, SamplingParams};
 use crate::softmax::tuning::default_best_unroll;
@@ -650,10 +651,24 @@ pub fn softmax_batch_parallel(
         let xs = x.elems::<E>();
         let ys = y.elems_mut::<E>();
         if t <= 1 {
-            run_rows_with::<E>(alg, isa, u, xs, ys, n, block, nt);
+            run_rows_with::<E>(alg, isa, u, xs, ys, n, block, nt, PassObs::unplanned("normalize"));
         } else {
             let chunks = plan::chunk_layout(x.rows, t);
-            run_chunked::<E>(alg, isa, u, xs, ys, n, block, nt, &chunks, t);
+            run_chunked::<E>(
+                alg,
+                isa,
+                u,
+                xs,
+                ys,
+                n,
+                block,
+                nt,
+                &chunks,
+                t,
+                None,
+                PassObs::unplanned("normalize"),
+            )
+            .expect("untimed normalize submissions cannot fail");
         }
     });
     Ok(())
@@ -713,11 +728,12 @@ pub fn softmax_batch_planned(
     let n = x.n;
     let u = PassUnrolls::from_plan(p);
     let dtype = x.dtype;
+    let pobs = PassObs::of_plan(p);
     with_elem!(dtype, E, {
         let xs = x.elems::<E>();
         let ys = y.elems_mut::<E>();
         if p.threads <= 1 {
-            run_rows_with::<E>(p.algorithm, p.isa, u, xs, ys, n, p.block_rows, p.nt);
+            run_rows_with::<E>(p.algorithm, p.isa, u, xs, ys, n, p.block_rows, p.nt, pobs);
         } else {
             // No job timeout on the out-of-place path: `x` is a shared
             // borrow this function cannot leak, so abandoning a wedged
@@ -736,6 +752,7 @@ pub fn softmax_batch_planned(
                 &p.chunks,
                 p.threads,
                 None,
+                pobs,
             )
             .expect("untimed normalize submissions cannot fail");
         }
@@ -792,7 +809,17 @@ pub fn softmax_batch_inplace(
     let dtype = b.dtype;
     with_elem!(dtype, E, {
         let (xs, ys) = alias_same_elems(b.elems_mut::<E>());
-        run_rows_with::<E>(alg, isa, u, xs, ys, n, block, false);
+        run_rows_with::<E>(
+            alg,
+            isa,
+            u,
+            xs,
+            ys,
+            n,
+            block,
+            false,
+            PassObs::unplanned("normalize_inplace"),
+        );
     });
     Ok(())
 }
@@ -841,11 +868,12 @@ pub fn softmax_batch_inplace_planned(p: &ExecPlan, b: &mut RowBatch) -> Result<(
     let n = b.n;
     let u = PassUnrolls::from_plan(p);
     let dtype = b.dtype;
+    let pobs = PassObs::of_plan(p);
     let mut pool_result = Ok(());
     with_elem!(dtype, E, {
         let (xs, ys) = alias_same_elems(b.elems_mut::<E>());
         if p.threads <= 1 {
-            run_rows_with::<E>(p.algorithm, p.isa, u, xs, ys, n, p.block_rows, false);
+            run_rows_with::<E>(p.algorithm, p.isa, u, xs, ys, n, p.block_rows, false, pobs);
         } else {
             pool_result = run_chunked::<E>(
                 p.algorithm,
@@ -859,6 +887,7 @@ pub fn softmax_batch_inplace_planned(p: &ExecPlan, b: &mut RowBatch) -> Result<(
                 &p.chunks,
                 p.threads,
                 p.job_timeout,
+                pobs,
             );
         }
     });
@@ -947,10 +976,16 @@ pub fn accum_extexp_batch_planned(
     let unroll = PassUnrolls::from_plan(p).of(Pass::AccumExtExp);
     let mut out = vec![ExtSum::default(); rows];
     let dtype = x.dtype;
+    // Accumulation IS the two-pass algorithm's pass 1, so the whole op is
+    // one read pass — timed at this entry point for both placements
+    // (per-chunk timing would need the pool workers to report back).
+    let t0 = obs::passes_enabled().then(obs::clock::now);
+    let pobs = PassObs::of_plan(p);
     if p.threads <= 1 {
         with_elem!(dtype, E, {
             accum_rows::<E>(p.isa, unroll, x.elems::<E>(), n.max(1), &mut out);
         });
+        record_read_pass(pobs, dtype, rows, n, Pass::AccumExtExp.name(), t0);
         return Ok(out);
     }
     let esz = dtype.size();
@@ -974,7 +1009,27 @@ pub fn accum_extexp_batch_planned(
     // softmax_batch_planned); untimed accumulation submissions have no
     // failure path.
     submit_jobs(kinds, p.threads, None).expect("accumulation jobs report no recoverable errors");
+    record_read_pass(pobs, dtype, rows, n, Pass::AccumExtExp.name(), t0);
     Ok(out)
+}
+
+/// Record one whole-op, read-only pass execution (pass-1 accumulation
+/// here; the fused decode scan in [`crate::sampling`]): registry sample
+/// plus a thread-local trace event when this thread is collecting.
+/// No-op when `t0` is `None` (accounting disabled).
+pub(crate) fn record_read_pass(
+    pobs: PassObs,
+    dtype: Dtype,
+    rows: usize,
+    n: usize,
+    pass: &'static str,
+    t0: Option<std::time::Instant>,
+) {
+    let Some(t0) = t0 else { return };
+    let nanos = obs::clock::nanos_since(t0);
+    let bytes = (rows * n * dtype.size()) as u64;
+    obs::record_pass(pobs.op, dtype, rows, n, pass, nanos, bytes, pobs.predicted_mgbps);
+    obs::trace::event("pass", pass, t0, nanos);
 }
 
 /// The row loop of pass-1 accumulation with the ISA/dtype dispatch
@@ -1086,8 +1141,9 @@ fn run_rows_dyn(
 ) {
     let n = x.n;
     let dtype = x.dtype;
+    let pobs = PassObs::unplanned("normalize");
     with_elem!(dtype, E, {
-        run_rows_with::<E>(alg, isa, u, x.elems::<E>(), y.elems_mut::<E>(), n, block, nt);
+        run_rows_with::<E>(alg, isa, u, x.elems::<E>(), y.elems_mut::<E>(), n, block, nt, pobs);
     });
 }
 
@@ -1101,6 +1157,7 @@ fn run_rows_dyn(
 ///
 /// Callers must have validated that `isa` is available on this host (the
 /// dispatchers' contract).
+#[allow(clippy::too_many_arguments)]
 fn run_rows_with<E: KernelElement>(
     alg: Algorithm,
     isa: Isa,
@@ -1110,9 +1167,11 @@ fn run_rows_with<E: KernelElement>(
     n: usize,
     block: usize,
     nt: bool,
+    pobs: PassObs,
 ) {
     debug_assert_eq!(x.len(), y.len());
     debug_assert_eq!(x.len() % n.max(1), 0);
+    let mut tally = PassTally::new();
     match alg {
         Algorithm::ThreePassRecompute => drive_recompute(
             x,
@@ -1120,6 +1179,7 @@ fn run_rows_with<E: KernelElement>(
             n,
             block,
             nt,
+            &mut tally,
             |r| kernels::run_max(isa, u.of(Pass::Max), r),
             |r, mu| kernels::run_sumexp(isa, u.of(Pass::SumExp), r, mu),
             |r, mu, lam, out| {
@@ -1134,6 +1194,7 @@ fn run_rows_with<E: KernelElement>(
             y,
             n,
             block,
+            &mut tally,
             |r| kernels::run_max(isa, u.of(Pass::Max), r),
             |r, mu, out| kernels::run_storeexp(isa, u.of(Pass::StoreExp), r, mu, out),
             |out, lam| kernels::run_scale_inplace(isa, u.of(Pass::ScaleInplace), out, lam),
@@ -1144,6 +1205,7 @@ fn run_rows_with<E: KernelElement>(
             n,
             block,
             nt,
+            &mut tally,
             |r| kernels::run_accum_extexp(isa, u.of(Pass::AccumExtExp), r),
             |r, lam, n_sum, out| {
                 kernels::run_scale_extexp(isa, u.of(Pass::ScaleExtExp), false, r, lam, n_sum, out)
@@ -1152,6 +1214,32 @@ fn run_rows_with<E: KernelElement>(
                 kernels::run_scale_extexp(isa, u.of(Pass::ScaleExtExp), true, r, lam, n_sum, out)
             },
         ),
+    }
+    if tally.enabled() {
+        record_pass_tally::<E>(alg, &tally, pobs, x.len() / n.max(1), n);
+    }
+}
+
+/// Publish one driver invocation's pass timings: a registry sample per
+/// pass under the op and batch shape, plus thread-local trace events when
+/// the calling thread is collecting (coordinator workers; pool workers
+/// are not, so pooled chunks feed histograms only — see `obs::trace`).
+/// `tally.slots` are indexed by the algorithm's pass execution order,
+/// matching `Pass::of_algorithm`.
+fn record_pass_tally<E: KernelElement>(
+    alg: Algorithm,
+    tally: &PassTally,
+    pobs: PassObs,
+    rows: usize,
+    n: usize,
+) {
+    let at = obs::clock::now();
+    for (slot, pass) in Pass::of_algorithm(alg).iter().enumerate() {
+        let (reads, writes) = pass.traffic();
+        let bytes = ((reads + writes) * rows * n * std::mem::size_of::<E>()) as u64;
+        let nanos = tally.slots[slot];
+        obs::record_pass(pobs.op, E::DTYPE, rows, n, pass.name(), nanos, bytes, pobs.predicted_mgbps);
+        obs::trace::event("pass", pass.name(), at, nanos);
     }
 }
 
@@ -1188,6 +1276,10 @@ enum JobKind {
         n: usize,
         block: usize,
         nt: bool,
+        /// Observation context (op + predicted bandwidth) so pooled
+        /// chunks land in the same pass-registry series as submitted
+        /// ones.
+        pobs: PassObs,
     },
     /// Pass-1 `(m, n)` accumulation: one [`ExtSum`] per row into `out`.
     Accum {
@@ -1415,7 +1507,7 @@ fn run_job(kind: JobKind) -> Result<(), SamplingError> {
     // injected panics exercise the payload-preserving panic channel.
     crate::fail_point!("pool.run_job");
     match kind {
-        JobKind::Normalize { alg, isa, unrolls, dtype, x, y, elems, n, block, nt } => {
+        JobKind::Normalize { alg, isa, unrolls, dtype, x, y, elems, n, block, nt, pobs } => {
             with_elem!(dtype, E, {
                 // SAFETY: see function-level argument.
                 let (xs, ys) = unsafe {
@@ -1424,7 +1516,7 @@ fn run_job(kind: JobKind) -> Result<(), SamplingError> {
                         std::slice::from_raw_parts_mut(y as *mut E, elems),
                     )
                 };
-                run_rows_with::<E>(alg, isa, unrolls, xs, ys, n, block, nt);
+                run_rows_with::<E>(alg, isa, unrolls, xs, ys, n, block, nt, pobs);
             });
             Ok(())
         }
@@ -1514,6 +1606,10 @@ fn submit_jobs(
     timeout: Option<std::time::Duration>,
 ) -> Result<(), PoolError> {
     let jobs = kinds.len();
+    // Trace the pool hand-off (send → last acknowledgement) when the
+    // submitting thread is collecting events — it is the coordinator
+    // worker on the pooled serving path.
+    let dispatch_t0 = obs::trace::armed().then(obs::clock::now);
     let lanes = pool().lanes_for(t);
     let lanes_n = lanes.len();
     let start = NEXT_LANE.fetch_add(jobs, Ordering::Relaxed);
@@ -1525,7 +1621,7 @@ fn submit_jobs(
             .expect("batch pool worker disappeared");
     }
     drop(done_tx);
-    let waited_start = std::time::Instant::now();
+    let waited_start = obs::clock::now();
     let mut acked = vec![false; jobs];
     let mut panicked: Option<String> = None;
     let mut failed: Option<(usize, SamplingError)> = None;
@@ -1573,6 +1669,9 @@ fn submit_jobs(
             Err(()) => panicked = Some("pool worker torn down mid-batch".to_string()),
         }
     }
+    if let Some(t0) = dispatch_t0 {
+        obs::trace::event("pool_dispatch", "", t0, obs::clock::nanos_since(t0));
+    }
     if let Some(msg) = panicked {
         panic!("batch pool worker panicked mid-batch: {msg}");
     }
@@ -1602,6 +1701,7 @@ fn run_chunked<E: KernelElement>(
     chunks: &[ChunkPlan],
     t: usize,
     timeout: Option<std::time::Duration>,
+    pobs: PassObs,
 ) -> Result<(), PoolError> {
     let esz = std::mem::size_of::<E>();
     let x_ptr = xs.as_ptr() as *const u8;
@@ -1620,6 +1720,7 @@ fn run_chunked<E: KernelElement>(
         n,
         block,
         nt,
+        pobs,
     });
     match submit_jobs(kinds, t, timeout) {
         Ok(()) => Ok(()),
@@ -1698,6 +1799,7 @@ fn drive_recompute<E: Element>(
     n: usize,
     block: usize,
     nt: bool,
+    tally: &mut PassTally,
     pass_max: impl Fn(&[E]) -> f32,
     pass_sumexp: impl Fn(&[E], f32) -> f32,
     pass_scaleexp: impl Fn(&[E], f32, f32, &mut [E]),
@@ -1711,13 +1813,21 @@ fn drive_recompute<E: Element>(
         let b = block.min(rows - r0);
         mu.clear();
         sigma.clear();
+        // Tally slots follow pass execution order (Pass::of_algorithm):
+        // a slot sums its pass's loops across all cache blocks.  When
+        // accounting is off, stamp() is None and lap() is a no-op.
+        let t = tally.stamp();
         for r in r0..r0 + b {
             mu.push(pass_max(&x[r * n..r * n + n]));
         }
+        tally.lap(0, t);
+        let t = tally.stamp();
         for (i, r) in (r0..r0 + b).enumerate() {
             sigma.push(pass_sumexp(&x[r * n..r * n + n], mu[i]));
         }
+        tally.lap(1, t);
         note_store_pass(b);
+        let t = tally.stamp();
         for (i, r) in (r0..r0 + b).enumerate() {
             let lam = 1.0 / sigma[i];
             if nt {
@@ -1727,8 +1837,10 @@ fn drive_recompute<E: Element>(
             }
         }
         if nt {
+            // The fence is part of the streaming store pass's cost.
             sfence();
         }
+        tally.lap(2, t);
         r0 += b;
     }
 }
@@ -1739,6 +1851,7 @@ fn drive_reload<E: Element>(
     y: &mut [E],
     n: usize,
     block: usize,
+    tally: &mut PassTally,
     pass_max: impl Fn(&[E]) -> f32,
     pass_storeexp: impl Fn(&[E], f32, &mut [E]) -> f32,
     pass_scale_inplace: impl Fn(&mut [E], f32),
@@ -1751,16 +1864,22 @@ fn drive_reload<E: Element>(
         let b = block.min(rows - r0);
         mu.clear();
         sigma.clear();
+        let t = tally.stamp();
         for r in r0..r0 + b {
             mu.push(pass_max(&x[r * n..r * n + n]));
         }
+        tally.lap(0, t);
+        let t = tally.stamp();
         for (i, r) in (r0..r0 + b).enumerate() {
             sigma.push(pass_storeexp(&x[r * n..r * n + n], mu[i], &mut y[r * n..r * n + n]));
         }
+        tally.lap(1, t);
         note_store_pass(b);
+        let t = tally.stamp();
         for (i, r) in (r0..r0 + b).enumerate() {
             pass_scale_inplace(&mut y[r * n..r * n + n], 1.0 / sigma[i]);
         }
+        tally.lap(2, t);
         r0 += b;
     }
 }
@@ -1773,6 +1892,7 @@ fn drive_twopass<E: Element>(
     n: usize,
     block: usize,
     nt: bool,
+    tally: &mut PassTally,
     pass_accum: impl Fn(&[E]) -> ExtSum,
     pass_scale: impl Fn(&[E], f32, f32, &mut [E]),
     pass_scale_nt: impl Fn(&[E], f32, f32, &mut [E]),
@@ -1783,10 +1903,13 @@ fn drive_twopass<E: Element>(
     while r0 < rows {
         let b = block.min(rows - r0);
         sums.clear();
+        let t = tally.stamp();
         for r in r0..r0 + b {
             sums.push(pass_accum(&x[r * n..r * n + n]));
         }
+        tally.lap(0, t);
         note_store_pass(b);
+        let t = tally.stamp();
         for (i, r) in (r0..r0 + b).enumerate() {
             let s = sums[i];
             if nt {
@@ -1796,8 +1919,10 @@ fn drive_twopass<E: Element>(
             }
         }
         if nt {
+            // The fence is part of the streaming store pass's cost.
             sfence();
         }
+        tally.lap(1, t);
         r0 += b;
     }
 }

@@ -307,11 +307,10 @@ impl Pass {
             Algorithm::TwoPass => &[Pass::AccumExtExp, Pass::ScaleExtExp],
         }
     }
-}
 
-impl fmt::Display for Pass {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let s = match self {
+    /// Stable lowercase name — metric labels and trace stages key on it.
+    pub fn name(self) -> &'static str {
+        match self {
             Pass::Max => "max",
             Pass::SumExp => "sum_exp",
             Pass::StoreExp => "store_exp",
@@ -319,8 +318,13 @@ impl fmt::Display for Pass {
             Pass::ScaleInplace => "scale_inplace",
             Pass::AccumExtExp => "accum_extexp",
             Pass::ScaleExtExp => "scale_extexp",
-        };
-        write!(f, "{s}")
+        }
+    }
+}
+
+impl fmt::Display for Pass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
     }
 }
 

@@ -14,7 +14,6 @@
 
 use std::collections::HashMap;
 use std::sync::OnceLock;
-use std::time::Instant;
 
 use super::{run_pass_with, Isa, Pass, PassOps};
 
@@ -135,7 +134,7 @@ pub fn time_pass(pass: Pass, isa: Isa, unroll: usize, n: usize, reps: usize) -> 
     let _ = run_pass_with(pass, isa, unroll, &x, &mut y, ops);
     let mut samples: Vec<f64> = (0..reps.max(3))
         .map(|_| {
-            let t0 = Instant::now();
+            let t0 = crate::obs::clock::now();
             let r = run_pass_with(pass, isa, unroll, &x, &mut y, ops);
             let dt = t0.elapsed().as_secs_f64();
             std::hint::black_box(r.ok());

@@ -11,7 +11,7 @@
 //! target supports; out of cache they run at memory speed on any ISA, which
 //! is exactly the property the paper leans on.
 
-use std::time::Instant;
+use crate::obs::clock;
 
 use crate::util::stats;
 
@@ -120,7 +120,7 @@ pub fn measure(k: StreamKernel, n: usize, reps: usize) -> StreamResult {
     bufs.run(k); // warm-up / page-in
     let mut best = f64::MAX;
     for _ in 0..reps.max(1) {
-        let t0 = Instant::now();
+        let t0 = clock::now();
         bufs.run(k);
         let dt = t0.elapsed().as_secs_f64();
         std::hint::black_box(&bufs.a);

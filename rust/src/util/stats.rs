@@ -2,7 +2,7 @@
 //! aggregation): median/mean/stddev/percentiles over timing samples, plus
 //! the paper's measurement protocol (§6.2: repeat, take the median).
 
-use std::time::Instant;
+use crate::obs::clock;
 
 /// Summary statistics of a sample set.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -58,7 +58,7 @@ pub fn measure_median<F: FnMut()>(mut f: F, reps: usize, min_time: f64) -> f64 {
     for _ in 0..reps.max(1) {
         // One measurement: run for >= min_time, report secs/call.
         let mut calls = 0u64;
-        let t0 = Instant::now();
+        let t0 = clock::now();
         loop {
             f();
             calls += 1;

@@ -1,0 +1,346 @@
+//! Integration tests for the observability layer: the accounting
+//! invariant under concurrent load, trace span integrity, per-pass
+//! bandwidth histograms, and the Prometheus-text exposition surface.
+//!
+//! Tests that inspect the process-global pass registry use distinct `n`
+//! values so their registry keys never collide with a sibling test
+//! running in parallel in this binary.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use two_pass_softmax::config::ServeConfig;
+use two_pass_softmax::coordinator::{Coordinator, Payload, Rejected, Router, SubmitOptions};
+use two_pass_softmax::obs;
+use two_pass_softmax::sampling::SamplingParams;
+use two_pass_softmax::softmax::{Algorithm, Bf16, Dtype, Element, Isa, F16};
+use two_pass_softmax::util::json::Json;
+
+fn native() -> Router {
+    Router::native(Algorithm::TwoPass, Isa::detect_best())
+}
+
+fn temp_trace_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("two-pass-obs-{tag}-{}", std::process::id()))
+}
+
+/// Every submitted request ends in exactly one accounting bucket, even
+/// when four clients burst into a saturated coordinator: at quiescence
+/// `submitted == admitted + shed + deadline_missed + queue_full`.
+#[test]
+fn accounting_invariant_holds_under_concurrent_load() {
+    // A 1ms predicted-seconds budget at a claimed 1 GB/s makes each
+    // n=16384 f32 request cost ~197µs: about five fit, and the 4-deep
+    // queue backstops admission — open-loop bursts must shed.
+    let cfg = ServeConfig {
+        admission_budget_ms: 1,
+        stream_gbps: Some(1.0),
+        max_batch: 8,
+        workers: 2,
+        max_wait_us: 300,
+        queue_capacity: 4,
+        ..ServeConfig::default()
+    };
+    let c = Arc::new(Coordinator::start_with_router(&cfg, native()));
+    let mut clients = Vec::new();
+    for _ in 0..4 {
+        let c = c.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut handles = Vec::new();
+            for i in 0..60 {
+                // Every fifth request carries a deadline too tight to
+                // survive queueing under this load.
+                let opts = if i % 5 == 0 {
+                    SubmitOptions::with_deadline(Duration::from_micros(50))
+                } else {
+                    SubmitOptions::default()
+                };
+                match c.submit_with(Payload::Logits(vec![0.5; 16384]), opts) {
+                    Ok(h) => handles.push(h),
+                    Err(Rejected::ShuttingDown) => {
+                        panic!("coordinator must not shut down mid-test")
+                    }
+                    // Typed rejection: counted in its bucket at submit.
+                    Err(_) => {}
+                }
+            }
+            // Drain every accepted request (it completes, fails, or is
+            // rejected at dequeue — all of which settle the counters).
+            for h in handles {
+                let _ = h.wait().unwrap();
+            }
+        }));
+    }
+    for cl in clients {
+        cl.join().unwrap();
+    }
+    let snap = c.metrics();
+    assert_eq!(snap.submitted, 240);
+    assert_eq!(
+        snap.submitted,
+        snap.admitted + snap.shed + snap.deadline_missed + snap.queue_full,
+        "accounting invariant violated: {snap:?}"
+    );
+    assert_eq!(
+        snap.admitted,
+        snap.completed + snap.failed,
+        "admitted work either completes or fails: {snap:?}"
+    );
+    assert_eq!(snap.rejected, snap.shed + snap.deadline_missed + snap.queue_full);
+    assert!(snap.rejected > 0, "this load must produce rejections: {snap:?}");
+    assert!(snap.completed > 0, "some requests must still be served: {snap:?}");
+    // Latency accounting: one queue-wait sample per executed request
+    // plus one per *dequeue*-side deadline miss (submit-side misses never
+    // queued, so they carry no wait).
+    let q = snap.queue_us.clone().expect("queue-wait samples recorded");
+    assert!(
+        q.n as u64 >= snap.completed + snap.failed
+            && q.n as u64 <= snap.completed + snap.failed + snap.deadline_missed,
+        "queue-wait sample count off: {} for {snap:?}",
+        q.n
+    );
+    Arc::try_unwrap(c).ok().unwrap().shutdown();
+}
+
+/// With `trace_sample = 1` every completed request exports a trace whose
+/// sequential stages (admit → queue → batch → exec → respond) are
+/// ordered and non-overlapping, with kernel spans nested inside `exec`.
+#[test]
+fn traces_record_ordered_non_overlapping_stages() {
+    let dir = temp_trace_dir("order");
+    let cfg = ServeConfig {
+        trace: true,
+        trace_sample: 1,
+        trace_dir: dir.clone(),
+        max_batch: 4,
+        workers: 1,
+        max_wait_us: 300,
+        queue_capacity: 1024,
+        ..ServeConfig::default()
+    };
+    let c = Coordinator::start_with_router(&cfg, native());
+    let handles: Vec<_> = (0..8)
+        .map(|i| c.submit(Payload::Logits(vec![i as f32; 256])).unwrap())
+        .collect();
+    for h in handles {
+        assert!(h.wait().unwrap().error.is_none());
+    }
+    let lines = c.trace_sink().expect("tracing is on").buffered();
+    assert_eq!(lines.len(), 8, "sample=1 keeps every trace");
+    for line in &lines {
+        let j = Json::parse(line).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "trace-jsonl-v1");
+        assert_eq!(j.get("outcome").unwrap().as_str().unwrap(), "completed");
+        let spans = j.get("spans").unwrap().as_arr().unwrap();
+        let bounds = |stage: &str| -> (u64, u64) {
+            let s = spans
+                .iter()
+                .find(|s| s.get("stage").unwrap().as_str().unwrap() == stage)
+                .unwrap_or_else(|| panic!("missing {stage} span: {line}"));
+            (
+                s.get("start_us").unwrap().as_usize().unwrap() as u64,
+                s.get("end_us").unwrap().as_usize().unwrap() as u64,
+            )
+        };
+        // Sequential stages: each starts no earlier than its predecessor
+        // ends (admit closes before the request is stamped enqueued).
+        let mut prev_end = 0u64;
+        for stage in ["admit", "queue", "batch", "exec", "respond"] {
+            let (start, end) = bounds(stage);
+            assert!(start <= end, "{stage} runs backwards: {line}");
+            assert!(
+                start >= prev_end,
+                "{stage} overlaps its predecessor ({start} < {prev_end}): {line}"
+            );
+            prev_end = end;
+        }
+        // Kernel-layer spans nest inside the exec window, and a served
+        // request has at least one memory-pass span.
+        let (exec_start, exec_end) = bounds("exec");
+        let mut passes = 0;
+        for s in spans {
+            let stage = s.get("stage").unwrap().as_str().unwrap();
+            if stage.starts_with("pass:") || stage.starts_with("plan:") {
+                let lo = s.get("start_us").unwrap().as_usize().unwrap() as u64;
+                let hi = s.get("end_us").unwrap().as_usize().unwrap() as u64;
+                assert!(
+                    lo >= exec_start && hi <= exec_end,
+                    "{stage} escapes the exec window: {line}"
+                );
+                if stage.starts_with("pass:") {
+                    passes += 1;
+                }
+            }
+        }
+        assert!(passes >= 1, "a served request records its kernel passes: {line}");
+    }
+    c.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A request rejected at dequeue exports a trace ending in the typed
+/// `rejected:<variant>` outcome with zero kernel spans — even when the
+/// sampling lottery would have dropped it.
+#[test]
+fn rejected_request_traces_end_rejected_with_zero_kernel_spans() {
+    let dir = temp_trace_dir("rejected");
+    let cfg = ServeConfig {
+        trace: true,
+        // So large that only roll 0 wins the lottery: the second
+        // rejection below is kept purely by the always-export rule.
+        trace_sample: 1_000_000,
+        trace_dir: dir.clone(),
+        max_batch: 64,
+        workers: 1,
+        max_wait_us: 30_000,
+        queue_capacity: 4096,
+        ..ServeConfig::default()
+    };
+    let c = Coordinator::start_with_router(&cfg, native());
+    // Age-only flush at 30ms: both 1ms deadlines are long dead at dequeue.
+    let hs: Vec<_> = (0..2)
+        .map(|_| {
+            c.submit_with(
+                Payload::Logits(vec![1.0; 64]),
+                SubmitOptions::with_deadline(Duration::from_millis(1)),
+            )
+            .unwrap()
+        })
+        .collect();
+    for h in hs {
+        let r = h.wait().unwrap();
+        assert!(
+            matches!(r.rejected, Some(Rejected::DeadlineExceeded { .. })),
+            "expected a deadline rejection, got {r:?}"
+        );
+    }
+    // Both rejections waited ≥ their 1ms deadline in the queue, and that
+    // wait lands in the latency histograms like any served request's.
+    let snap = c.metrics();
+    let q = snap.queue_us.clone().expect("rejected waits are sampled");
+    assert_eq!(q.n, 2, "{snap:?}");
+    assert!(q.max >= 1_000.0, "a ≥1ms queue wait must be visible: {q:?}");
+    let lines = c.trace_sink().unwrap().buffered();
+    assert_eq!(lines.len(), 2, "rejections export regardless of sampling");
+    for line in &lines {
+        let j = Json::parse(line).unwrap();
+        assert_eq!(
+            j.get("outcome").unwrap().as_str().unwrap(),
+            "rejected:DeadlineExceeded",
+            "{line}"
+        );
+        let spans = j.get("spans").unwrap().as_arr().unwrap();
+        let stages: Vec<&str> =
+            spans.iter().map(|s| s.get("stage").unwrap().as_str().unwrap()).collect();
+        assert!(stages.contains(&"admit"), "{line}");
+        assert!(stages.contains(&"queue"), "its queue wait was real: {line}");
+        assert!(
+            stages.iter().all(|s| !s.starts_with("pass:") && *s != "exec"),
+            "rejected work must never reach a kernel: {line}"
+        );
+    }
+    c.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Serving f32/bf16/f16 softmax and decode populates a per-pass
+/// bandwidth series for every (op, dtype) pair exercised.
+#[test]
+fn pass_histograms_populate_for_every_served_op_and_dtype() {
+    let cfg = ServeConfig {
+        max_batch: 4,
+        workers: 1,
+        max_wait_us: 300,
+        queue_capacity: 1024,
+        ..ServeConfig::default()
+    };
+    let c = Coordinator::start_with_router(&cfg, native());
+    let n = 2048;
+    let logits: Vec<f32> = (0..n).map(|i| (i % 13) as f32 - 6.0).collect();
+    let bf: Vec<u16> = logits.iter().map(|&v| Bf16::from_f32(v).to_bits()).collect();
+    let fp: Vec<u16> = logits.iter().map(|&v| F16::from_f32(v).to_bits()).collect();
+    assert!(c.softmax_blocking(logits.clone()).unwrap().error.is_none());
+    assert!(c.softmax_half_blocking(bf.clone(), Dtype::Bf16).unwrap().error.is_none());
+    assert!(c.softmax_half_blocking(fp.clone(), Dtype::F16).unwrap().error.is_none());
+    let greedy = SamplingParams::greedy();
+    assert!(c.decode_blocking(logits, greedy).unwrap().error.is_none());
+    assert!(c.decode_half_blocking(bf, Dtype::Bf16, greedy).unwrap().error.is_none());
+    assert!(c.decode_half_blocking(fp, Dtype::F16, greedy).unwrap().error.is_none());
+    c.shutdown();
+    for (op, dtype) in [
+        ("normalize_inplace", Dtype::F32),
+        ("normalize_inplace", Dtype::Bf16),
+        ("normalize_inplace", Dtype::F16),
+        ("decode", Dtype::F32),
+        ("decode", Dtype::Bf16),
+        ("decode", Dtype::F16),
+    ] {
+        let series: Vec<_> = obs::pass_entries()
+            .into_iter()
+            .filter(|e| e.op == op && e.dtype == dtype && e.n == n)
+            .collect();
+        let samples: u64 = series.iter().map(|e| e.stat.time_us.count()).sum();
+        assert!(samples > 0, "no pass samples for ({op}, {dtype})");
+        assert!(
+            series.iter().any(|e| e.stat.achieved_gbps().is_some()),
+            "no achieved-GB/s sample for ({op}, {dtype})"
+        );
+    }
+}
+
+/// The exposition surface is well-formed end to end, and reports the
+/// measured GB/s of at least one pass shape next to the plan cost
+/// model's prediction under identical labels.
+#[test]
+fn metrics_text_exposes_measured_next_to_predicted_bandwidth() {
+    let cfg = ServeConfig {
+        // A declared bandwidth gives every plan a predicted GB/s.
+        stream_gbps: Some(20.0),
+        max_batch: 4,
+        workers: 1,
+        max_wait_us: 300,
+        queue_capacity: 1024,
+        ..ServeConfig::default()
+    };
+    let c = Coordinator::start(cfg).unwrap();
+    for _ in 0..8 {
+        assert!(c.softmax_blocking(vec![0.5; 4096]).unwrap().error.is_none());
+    }
+    let text = c.metrics_text();
+    assert!(
+        obs::expo::first_invalid_line(&text).is_none(),
+        "invalid exposition line: {:?}",
+        obs::expo::first_invalid_line(&text)
+    );
+    for needle in [
+        "repro_requests_submitted_total 8",
+        "repro_requests_admitted_total 8",
+        "repro_requests_completed_total 8",
+        "repro_queue_wait_microseconds_bucket",
+        "repro_e2e_microseconds_count 8",
+        "repro_queue_depth_current",
+        "repro_pool_workers",
+        "repro_pass_time_microseconds_bucket",
+        "repro_pass_achieved_gbps",
+        "repro_pass_predicted_gbps",
+    ] {
+        assert!(text.contains(needle), "missing `{needle}` in exposition:\n{text}");
+    }
+    // Measured-vs-predicted under identical labels: take any predicted
+    // series and demand its achieved twin.
+    let predicted = text
+        .lines()
+        .find(|l| l.starts_with("repro_pass_predicted_gbps{"))
+        .expect("at least one predicted-GB/s series");
+    let labels = predicted
+        .trim_start_matches("repro_pass_predicted_gbps")
+        .rsplit_once(' ')
+        .unwrap()
+        .0;
+    let achieved = format!("repro_pass_achieved_gbps{labels} ");
+    assert!(
+        text.lines().any(|l| l.starts_with(&achieved)),
+        "no achieved-GB/s series matching {labels}"
+    );
+    c.shutdown();
+}

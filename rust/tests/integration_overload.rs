@@ -364,4 +364,74 @@ mod faults {
         assert!(r.error.is_none());
         c.shutdown();
     }
+
+    /// Trace integrity under fault injection: a request whose flush is
+    /// stalled past its deadline exports a trace that ends in the typed
+    /// `rejected:DeadlineExceeded` outcome with zero kernel spans — the
+    /// injected stall shows up as queue time, never as execution.
+    #[test]
+    fn stalled_flush_trace_ends_rejected_with_no_kernel_spans() {
+        use two_pass_softmax::util::json::Json;
+        let _g = serial();
+        failpoint::clear_all();
+        let dir = std::env::temp_dir()
+            .join(format!("two-pass-obs-stall-{}", std::process::id()));
+        let cfg = ServeConfig {
+            trace: true,
+            trace_sample: 1,
+            trace_dir: dir.clone(),
+            max_batch: 1, // flush immediately
+            workers: 1,
+            max_wait_us: 500,
+            queue_capacity: 64,
+            ..ServeConfig::default()
+        };
+        let c = Coordinator::start_with_router(&cfg, native());
+        failpoint::configure(
+            "batcher.flush",
+            FailAction::Sleep(Duration::from_millis(30)),
+            Some(1),
+        );
+        let h = c
+            .submit_with(
+                Payload::Logits(vec![1.0; 512]),
+                SubmitOptions::with_deadline(Duration::from_millis(5)),
+            )
+            .unwrap();
+        let r = h.wait().unwrap();
+        failpoint::clear_all();
+        assert!(
+            matches!(r.rejected, Some(Rejected::DeadlineExceeded { .. })),
+            "stalled work must reject, got {:?}",
+            r.rejected
+        );
+        let lines = c.trace_sink().expect("tracing is on").buffered();
+        assert_eq!(lines.len(), 1);
+        let j = Json::parse(&lines[0]).unwrap();
+        assert_eq!(
+            j.get("outcome").unwrap().as_str().unwrap(),
+            "rejected:DeadlineExceeded",
+            "{}",
+            lines[0]
+        );
+        let spans = j.get("spans").unwrap().as_arr().unwrap();
+        let stages: Vec<&str> =
+            spans.iter().map(|s| s.get("stage").unwrap().as_str().unwrap()).collect();
+        assert!(
+            stages.iter().all(|s| !s.starts_with("pass:") && *s != "exec"),
+            "the stall must never reach a kernel: {}",
+            lines[0]
+        );
+        // The injected 30ms stall is visible as queue time (≥ the 5ms
+        // deadline) in the trace itself.
+        let queue = spans
+            .iter()
+            .find(|s| s.get("stage").unwrap().as_str().unwrap() == "queue")
+            .expect("queue span present");
+        let waited = queue.get("end_us").unwrap().as_usize().unwrap()
+            - queue.get("start_us").unwrap().as_usize().unwrap();
+        assert!(waited >= 5_000, "queue span shows only {waited}us of stall");
+        c.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }
