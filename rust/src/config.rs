@@ -46,9 +46,19 @@ pub struct ServeConfig {
     /// Which execution backend serves softmax batches: the native Rust
     /// kernels or AOT XLA artifacts via PJRT.  Default: `native`.
     pub backend: Backend,
-    /// Softmax algorithm for the native engine (paper Algorithms 1–3).
-    /// Default: `twopass` (the paper's contribution, 3N traffic).
+    /// Softmax algorithm for the native engine (paper Algorithms 1–3 or
+    /// `online`).  Default: `twopass` (the paper's contribution, 3N
+    /// traffic).  Setting this explicitly (JSON `algorithm` key or
+    /// `--algorithm`) also clears `algo_auto` — a named algorithm is a
+    /// pin, not a hint.
     pub algorithm: Algorithm,
+    /// Let the execution planner choose the normalization algorithm per
+    /// batch shape: from `measured` tune-table entries when the shape has
+    /// been observed, from the static cost model (L2 residency) when it
+    /// has not.  Default: `true`; cleared by an explicit `algorithm`, and
+    /// switchable directly with `algo_auto` / `--algo-auto` /
+    /// `--no-algo-auto`.
+    pub algo_auto: bool,
     /// Instruction set for the native kernels.  Default: the best ISA the
     /// host supports (AVX512F → AVX2 → scalar).
     pub isa: Isa,
@@ -136,6 +146,7 @@ impl Default for ServeConfig {
         ServeConfig {
             backend: Backend::Native,
             algorithm: Algorithm::TwoPass,
+            algo_auto: true,
             isa: Isa::detect_best(),
             max_batch: 8,
             max_wait_us: 200,
@@ -184,6 +195,10 @@ impl ServeConfig {
         }
         if let Some(v) = root.get("algorithm").and_then(Json::as_str) {
             self.algorithm = v.parse().map_err(|e: String| anyhow!(e))?;
+            self.algo_auto = false;
+        }
+        if let Some(v) = root.get("algo_auto").and_then(Json::as_bool) {
+            self.algo_auto = v;
         }
         if let Some(v) = root.get("isa").and_then(Json::as_str) {
             self.isa = v.parse().map_err(|e: String| anyhow!(e))?;
@@ -240,6 +255,13 @@ impl ServeConfig {
         }
         if let Some(v) = a.opt("algorithm") {
             self.algorithm = v.parse().map_err(|e: String| anyhow!(e))?;
+            self.algo_auto = false;
+        }
+        if a.flag("algo-auto") {
+            self.algo_auto = true;
+        }
+        if a.flag("no-algo-auto") {
+            self.algo_auto = false;
         }
         if let Some(v) = a.opt("isa") {
             self.isa = v.parse().map_err(|e: String| anyhow!(e))?;
@@ -368,6 +390,32 @@ mod tests {
         assert_eq!(c.parallel_threshold, 1024);
         assert_eq!(c.batch_threads, 3);
         assert!(!c.bucket_pow2);
+    }
+
+    #[test]
+    fn explicit_algorithm_pins_and_algo_auto_round_trips() {
+        let d = ServeConfig::default();
+        assert!(d.algo_auto, "auto algorithm selection defaults on");
+        // Naming an algorithm is a pin: auto-selection turns off.
+        let mut c = ServeConfig::default();
+        c.apply_json(&Json::parse(r#"{"algorithm": "online"}"#).unwrap()).unwrap();
+        assert_eq!(c.algorithm, Algorithm::Online);
+        assert!(!c.algo_auto);
+        // ...unless the config re-enables it explicitly.
+        let mut c2 = ServeConfig::default();
+        c2.apply_json(&Json::parse(r#"{"algorithm": "twopass", "algo_auto": true}"#).unwrap())
+            .unwrap();
+        assert!(c2.algo_auto);
+        let mut c3 = ServeConfig::default();
+        let a = Args::parse(["--algorithm", "reload"].iter().map(|s| s.to_string()));
+        c3.apply_args(&a).unwrap();
+        assert_eq!(c3.algorithm, Algorithm::ThreePassReload);
+        assert!(!c3.algo_auto);
+        let mut c4 = ServeConfig::default();
+        let a = Args::parse(["--no-algo-auto"].iter().map(|s| s.to_string()));
+        c4.apply_args(&a).unwrap();
+        assert!(!c4.algo_auto);
+        assert_eq!(c4.algorithm, Algorithm::TwoPass, "pin falls back to the default algorithm");
     }
 
     #[test]

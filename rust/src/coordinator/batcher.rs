@@ -88,16 +88,16 @@ impl Batcher {
                 continue;
             }
             // Head-of-line request defines the batch key.
-            let key = st.queue.front().unwrap().payload.batch_key();
+            let key = st.queue.front().unwrap().batch_key();
             let age = st.queue.front().unwrap().enqueued.elapsed();
-            let matching = st.queue.iter().filter(|r| r.payload.batch_key() == key).count();
+            let matching = st.queue.iter().filter(|r| r.batch_key() == key).count();
 
             if matching >= self.max_batch || age >= self.max_wait || st.shutdown {
                 // Flush now: extract up to max_batch same-key requests.
                 let mut batch = Vec::with_capacity(matching.min(self.max_batch));
                 let mut i = 0;
                 while i < st.queue.len() && batch.len() < self.max_batch {
-                    if st.queue[i].payload.batch_key() == key {
+                    if st.queue[i].batch_key() == key {
                         batch.push(st.queue.remove(i).unwrap());
                     } else {
                         i += 1;

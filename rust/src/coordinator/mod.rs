@@ -412,7 +412,7 @@ fn worker_loop(
         let mut groups: Vec<Vec<Request>> = Vec::new();
         let mut last_key = None;
         for req in live {
-            let key = req.payload.batch_key();
+            let key = req.batch_key();
             if last_key != Some(key) {
                 groups.push(Vec::new());
                 last_key = Some(key);
@@ -465,6 +465,9 @@ fn execute_group(
         .map(|r| std::mem::replace(&mut r.payload, Payload::Logits(Vec::new())))
         .collect();
     let batch_size = batch.len();
+    // The group shares one batch key, and the key carries the accuracy
+    // tier (bit 59) — so the tier is a group-level execution property.
+    let accuracy = batch.first().map(|r| r.accuracy).unwrap_or_default();
     // Panics out of execution (a kernel bug, an injected pool fault) are
     // confined to this batch: its requests get error responses carrying
     // the panic message and the worker thread survives to take the next
@@ -472,7 +475,7 @@ fn execute_group(
     // outstanding job before propagating a panic, so no borrowed batch
     // memory is still referenced when the unwind reaches us.
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        router.execute(payloads)
+        router.execute_with(payloads, accuracy)
     }))
     .unwrap_or_else(|p| Err(anyhow::anyhow!("execution panicked: {}", panic_message(&*p))))
     .and_then(|out| {
@@ -851,17 +854,27 @@ mod tests {
             rxs.push(h);
             batch.push(req);
         }
+        // Same payload shape as the first request, but on the accurate
+        // tier: the tier bit in the key must split it into its own group.
+        let (acc_req, acc_h) = request::make_request_with(
+            4,
+            Payload::Logits(vec![1.0; 8]),
+            SubmitOptions::accurate(),
+            0.0,
+        );
+        rxs.push(acc_h);
+        batch.push(acc_req);
         let mut groups: Vec<Vec<Request>> = Vec::new();
         let mut last_key = None;
         for req in batch {
-            let key = req.payload.batch_key();
+            let key = req.batch_key();
             if last_key != Some(key) {
                 groups.push(Vec::new());
                 last_key = Some(key);
             }
             groups.last_mut().unwrap().push(req);
         }
-        assert_eq!(groups.len(), 4, "interleaved keys split into runs");
+        assert_eq!(groups.len(), 5, "interleaved keys and tiers split into runs");
         for group in groups {
             execute_group(group, &metrics, &router, None, None, crate::obs::clock::now());
         }
@@ -874,7 +887,11 @@ mod tests {
         assert_eq!(r2.probs.len(), 8);
         let r3 = rxs.remove(0).wait().unwrap();
         assert!(r3.token.is_some());
-        assert_eq!(metrics.snapshot().completed, 4);
+        let r4 = rxs.remove(0).wait().unwrap();
+        assert_eq!(r4.probs.len(), 8);
+        assert!(r4.error.is_none());
+        assert!((r4.probs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert_eq!(metrics.snapshot().completed, 5);
     }
 
     #[test]

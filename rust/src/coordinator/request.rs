@@ -4,7 +4,7 @@ use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::sampling::{Choice, SamplingParams};
-use crate::softmax::Dtype;
+use crate::softmax::{Accuracy, Dtype};
 
 /// Service class of a request: what the overload-defense layer may do to
 /// it before shedding it outright (see `coordinator::admission`).
@@ -160,6 +160,10 @@ pub struct Request {
     pub deadline: Option<Instant>,
     /// Service class (see [`Class`]).
     pub class: Class,
+    /// Accuracy tier (see [`crate::softmax::Accuracy`]): `Accurate`
+    /// requests execute on the compensated two-pass path and batch
+    /// separately from `Fast` ones ([`Request::batch_key`]).
+    pub accuracy: Accuracy,
     /// The admission controller's predicted cost of this request in
     /// seconds (0 when admission is off).  Carried so the exact amount
     /// admitted is released when the request leaves the queue.
@@ -170,6 +174,15 @@ pub struct Request {
     /// the response outcome.
     pub trace: Option<Box<crate::obs::trace::Trace>>,
     pub tx: mpsc::SyncSender<Response>,
+}
+
+impl Request {
+    /// Batching key: the payload's key plus the accuracy tier at bit 59.
+    /// Tiers execute different kernels (compensated vs plain pass 1,
+    /// accurate-LSE vs fused decode), so they must never share a batch.
+    pub fn batch_key(&self) -> u64 {
+        self.payload.batch_key() | (((self.accuracy == Accuracy::Accurate) as u64) << 59)
+    }
 }
 
 /// The serving result for one request.
@@ -230,17 +243,26 @@ pub struct SubmitOptions {
     pub deadline: Option<Duration>,
     /// Service class (see [`Class`]).
     pub class: Class,
+    /// Accuracy tier: `Fast` (default) rides the planner's chosen
+    /// algorithm; `Accurate` pins the compensated two-pass path and the
+    /// accurate-LSE decode logprob (see `docs/ACCURACY.md`).
+    pub accuracy: Accuracy,
 }
 
 impl SubmitOptions {
     /// Standard-class submission with a deadline.
     pub fn with_deadline(d: Duration) -> SubmitOptions {
-        SubmitOptions { deadline: Some(d), class: Class::Standard }
+        SubmitOptions { deadline: Some(d), ..SubmitOptions::default() }
     }
 
     /// Best-effort submission (degradable under overload), no deadline.
     pub fn best_effort() -> SubmitOptions {
-        SubmitOptions { deadline: None, class: Class::BestEffort }
+        SubmitOptions { class: Class::BestEffort, ..SubmitOptions::default() }
+    }
+
+    /// Standard-class submission on the accurate tier.
+    pub fn accurate() -> SubmitOptions {
+        SubmitOptions { accuracy: Accuracy::Accurate, ..SubmitOptions::default() }
     }
 }
 
@@ -261,6 +283,7 @@ pub fn make_request_with(
             enqueued,
             deadline: opts.deadline.map(|d| enqueued + d),
             class: opts.class,
+            accuracy: opts.accuracy,
             cost_secs,
             trace: None,
             tx,
@@ -367,6 +390,29 @@ mod tests {
         let (req2, _h2) = make_request_with(2, Payload::Logits(vec![1.0]), be, 0.0);
         assert_eq!(req2.class, Class::BestEffort);
         assert!(req2.deadline.is_none());
+    }
+
+    #[test]
+    fn accuracy_tiers_batch_separately() {
+        let payload = Payload::Logits(vec![0.0; 128]);
+        let (fast, _h) = make_request(1, payload.clone());
+        assert_eq!(fast.accuracy, Accuracy::Fast);
+        // Fast requests keep the payload's key bit-for-bit: a tier that
+        // nobody asked for must not perturb existing batching.
+        assert_eq!(fast.batch_key(), payload.batch_key());
+        let (acc, _h2) =
+            make_request_with(2, payload.clone(), SubmitOptions::accurate(), 0.0);
+        assert_eq!(acc.accuracy, Accuracy::Accurate);
+        assert_ne!(acc.batch_key(), fast.batch_key(), "tiers must never share a batch");
+        // The tier bit composes with kind/dtype tags instead of clobbering
+        // them: accurate decode != accurate softmax != fast decode.
+        let dec = Payload::Decode {
+            logits: vec![0.0; 128],
+            params: crate::sampling::SamplingParams::default(),
+        };
+        let (acc_dec, _h3) = make_request_with(3, dec.clone(), SubmitOptions::accurate(), 0.0);
+        assert_ne!(acc_dec.batch_key(), acc.batch_key());
+        assert_ne!(acc_dec.batch_key(), dec.batch_key());
     }
 
     #[test]

@@ -38,7 +38,7 @@ use crate::plan::{PlanCacheCounters, PlanOp, Planner};
 use crate::runtime::service::PjrtService;
 use crate::sampling::{self, Choice, SamplingParams};
 use crate::softmax::batch::{softmax_batch_inplace_planned, softmax_batch_planned, RowBatch};
-use crate::softmax::{Algorithm, Dtype, Isa};
+use crate::softmax::{Accuracy, Algorithm, Dtype, Isa};
 
 use super::request::Payload;
 
@@ -71,8 +71,21 @@ impl NativeEngine {
     /// Normalize every row of `x` in place: the request buffer becomes
     /// the response buffer, so the serving path allocates no output batch.
     pub fn run_inplace(&self, x: &mut RowBatch) -> Result<()> {
-        let plan =
-            self.planner.plan_dtype(PlanOp::NormalizeInPlace, x.dtype(), x.rows(), x.n());
+        self.run_inplace_acc(x, Accuracy::Fast)
+    }
+
+    /// [`NativeEngine::run_inplace`] at an explicit accuracy tier: the
+    /// tier is part of the plan key, so `Accurate` batches get their own
+    /// cached plan (pinned to compensated two-pass) without perturbing
+    /// the `Fast` plan for the same shape.
+    pub fn run_inplace_acc(&self, x: &mut RowBatch, acc: Accuracy) -> Result<()> {
+        let plan = self.planner.plan_dtype_acc(
+            PlanOp::NormalizeInPlace,
+            x.dtype(),
+            x.rows(),
+            x.n(),
+            acc,
+        );
         softmax_batch_inplace_planned(&plan, x).map_err(|e| anyhow!("{e}"))
     }
 
@@ -95,7 +108,19 @@ impl NativeEngine {
     /// whole batch fails with a timeout error instead of hanging the
     /// coordinator worker forever.
     pub fn decode_owned(&self, x: RowBatch, params: Vec<SamplingParams>) -> Result<Vec<Choice>> {
-        let plan = self.planner.plan_dtype(PlanOp::Decode, x.dtype(), x.rows(), x.n());
+        self.decode_owned_acc(x, params, Accuracy::Fast)
+    }
+
+    /// [`NativeEngine::decode_owned`] at an explicit accuracy tier:
+    /// `Accurate` decode plans re-derive each logprob through the
+    /// compensated-LSE path after selection.
+    pub fn decode_owned_acc(
+        &self,
+        x: RowBatch,
+        params: Vec<SamplingParams>,
+        acc: Accuracy,
+    ) -> Result<Vec<Choice>> {
+        let plan = self.planner.plan_dtype_acc(PlanOp::Decode, x.dtype(), x.rows(), x.n(), acc);
         sampling::sample_batch_planned_owned(&plan, x, params).map_err(|e| anyhow!("{e}"))
     }
 }
@@ -179,24 +204,31 @@ impl Router {
         }
     }
 
-    /// Execute one batch (all payloads share a batch key).  Consumes the
-    /// payloads and returns either the output rows as one flat row-major
-    /// batch or the sampled tokens, in request order.
+    /// Execute one batch (all payloads share a batch key) on the fast
+    /// tier.  Consumes the payloads and returns either the output rows as
+    /// one flat row-major batch or the sampled tokens, in request order.
     pub fn execute(&self, batch: Vec<Payload>) -> Result<Executed> {
+        self.execute_with(batch, Accuracy::Fast)
+    }
+
+    /// [`Router::execute`] at an explicit accuracy tier.  The batcher's
+    /// tier-tagged keys guarantee every payload here shares one tier, so
+    /// it is a batch-level property, not a per-payload one.
+    pub fn execute_with(&self, batch: Vec<Payload>, acc: Accuracy) -> Result<Executed> {
         match batch.first() {
             None => Err(anyhow!("empty batch")),
-            Some(Payload::Logits(_)) => self.execute_logits(batch).map(Executed::Rows),
+            Some(Payload::Logits(_)) => self.execute_logits(batch, acc).map(Executed::Rows),
             Some(Payload::LogitsHalf { .. }) => {
-                self.execute_logits_half(batch).map(Executed::Rows)
+                self.execute_logits_half(batch, acc).map(Executed::Rows)
             }
             Some(Payload::Tokens(_)) => self.execute_tokens(batch).map(Executed::Rows),
             Some(Payload::Decode { .. }) | Some(Payload::DecodeHalf { .. }) => {
-                self.execute_decode(batch).map(Executed::Choices)
+                self.execute_decode(batch, acc).map(Executed::Choices)
             }
         }
     }
 
-    fn execute_logits(&self, batch: Vec<Payload>) -> Result<RowBatch> {
+    fn execute_logits(&self, batch: Vec<Payload>, acc: Accuracy) -> Result<RowBatch> {
         let n = batch[0].len();
         if n == 0 {
             return Err(anyhow!("empty logits row"));
@@ -208,7 +240,7 @@ impl Router {
         // placement, so it must not trigger the planner's lazy STREAM
         // threshold resolution.
         let bucket_rows = match self {
-            Router::Pjrt { native, pad_pow2: true, .. } => {
+            Router::Pjrt { native, pad_pow2: true, .. } if acc == Accuracy::Fast => {
                 native.planner.bucket_rows(batch.len())
             }
             _ => None,
@@ -229,7 +261,15 @@ impl Router {
             // The freshly assembled request batch is normalized in place
             // and becomes the response — no output allocation.
             Router::Native(engine) => {
-                engine.run_inplace(&mut x)?;
+                engine.run_inplace_acc(&mut x, acc)?;
+                Ok(x)
+            }
+            // The AOT artifacts are compiled for the plain two-pass
+            // kernels only — there is no compensated-accumulation
+            // executable to route to, so accurate batches are a native
+            // workload on both router variants.
+            Router::Pjrt { native, .. } if acc == Accuracy::Accurate => {
+                native.run_inplace_acc(&mut x, acc)?;
                 Ok(x)
             }
             Router::Pjrt { svc, variant, native, .. } => {
@@ -269,7 +309,7 @@ impl Router {
     /// dtype-tagged keys guarantee every payload here shares one dtype.
     /// Half batches are a native workload on both router variants (the
     /// AOT PJRT artifacts are compiled for f32 I/O only).
-    fn execute_logits_half(&self, batch: Vec<Payload>) -> Result<RowBatch> {
+    fn execute_logits_half(&self, batch: Vec<Payload>, acc: Accuracy) -> Result<RowBatch> {
         let (n, dtype) = match &batch[0] {
             Payload::LogitsHalf { bits, dtype } => (bits.len(), *dtype),
             _ => unreachable!("execute_logits_half dispatched on LogitsHalf"),
@@ -293,7 +333,7 @@ impl Router {
             Router::Native(e) => e,
             Router::Pjrt { native, .. } => native,
         };
-        engine.run_inplace(&mut x)?;
+        engine.run_inplace_acc(&mut x, acc)?;
         Ok(x)
     }
 
@@ -321,7 +361,7 @@ impl Router {
     /// pool workers exactly like normalize batches ([`NativeEngine::decode`]).
     /// Decode is a native workload on both router variants (the AOT
     /// artifacts only cover normalization).
-    fn execute_decode(&self, batch: Vec<Payload>) -> Result<Vec<Choice>> {
+    fn execute_decode(&self, batch: Vec<Payload>, acc: Accuracy) -> Result<Vec<Choice>> {
         let n = batch[0].len();
         if n == 0 {
             return Err(anyhow!("empty logits row"));
@@ -358,7 +398,7 @@ impl Router {
         };
         // The router owns the freshly assembled batch, so the timed
         // (leak-on-timeout) decode path is sound here.
-        engine.decode_owned(x, params)
+        engine.decode_owned_acc(x, params, acc)
     }
 }
 
@@ -478,6 +518,30 @@ mod tests {
         }];
         match r.execute(dec).unwrap() {
             Executed::Choices(c) => assert_eq!(c[0].token, 5),
+            Executed::Rows(_) => panic!("expected choices"),
+        }
+    }
+
+    #[test]
+    fn accurate_tier_matches_compensated_reference_bit_for_bit() {
+        // Whatever ISA the host has, the accurate tier executes the
+        // sequential scalar compensated kernel — its output must equal
+        // the single-row compensated reference exactly.
+        let r = Router::native(Algorithm::Online, Isa::detect_best());
+        let row: Vec<f32> = (0..257).map(|i| ((i * 37) % 101) as f32 * 0.17 - 8.0).collect();
+        let batch = vec![Payload::Logits(row.clone()), Payload::Logits(row.clone())];
+        let out = rows_of(r.execute_with(batch, Accuracy::Accurate).unwrap());
+        let mut want = vec![0.0f32; row.len()];
+        crate::softmax::kernels::scalar::softmax_twopass_comp(&row, &mut want);
+        assert_eq!(out.row(0), &want[..]);
+        assert_eq!(out.row(1), &want[..]);
+        // Accurate decode still returns the argmax token, with a
+        // finite compensated logprob.
+        let dec = vec![Payload::Decode { logits: row, params: SamplingParams::greedy() }];
+        match r.execute_with(dec, Accuracy::Accurate).unwrap() {
+            Executed::Choices(c) => {
+                assert!(c[0].logprob < 0.0 && c[0].logprob.is_finite());
+            }
             Executed::Rows(_) => panic!("expected choices"),
         }
     }

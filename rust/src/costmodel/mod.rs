@@ -62,6 +62,26 @@ pub fn predict_batch_secs(alg: Algorithm, rows: usize, n: usize, elem_bytes: usi
     batch_bytes(alg, rows, n, elem_bytes) as f64 / (gbps * 1e9)
 }
 
+/// Static per-shape algorithm choice for batched normalization, used by
+/// the execution planner until measured data exists for a shape.
+///
+/// The Table-2 traffic counts rank the algorithms only in the
+/// bandwidth-bound (out-of-cache) regime, where two-pass's 3N wins.  For
+/// a batch whose working set (input + output) sits in L2, traffic is not
+/// the binding constraint: the reload algorithm's passes are the simplest
+/// (no extended-exponent bookkeeping, no rescale chain), so it takes the
+/// cache-resident shapes.  Online is never picked statically — its fused
+/// pass trades a shorter pipeline for two exponentials per element, which
+/// only measurement can justify.
+pub fn choose_static(rows: usize, n: usize, elem_bytes: usize, l2_bytes: usize) -> Algorithm {
+    let working_set = 2usize.saturating_mul(rows).saturating_mul(n).saturating_mul(elem_bytes);
+    if working_set <= l2_bytes {
+        Algorithm::ThreePassReload
+    } else {
+        Algorithm::TwoPass
+    }
+}
+
 /// Predicted speedup of the two-pass algorithm over `other` in the
 /// bandwidth-bound limit (upper bound per paper §5: "we should treat these
 /// numbers as upper bounds").
@@ -130,6 +150,22 @@ mod tests {
             let flat = predict_secs(alg, 16 * 4096, 12.0);
             assert!((batched - flat).abs() < 1e-15, "{alg}");
         }
+    }
+
+    #[test]
+    fn static_choice_flips_on_l2_residency() {
+        let l2 = 1 << 20; // 1 MiB
+        // 2 rows × 1024 f32 → 16 KiB working set: resident, reload.
+        assert_eq!(choose_static(2, 1024, 4, l2), Algorithm::ThreePassReload);
+        // 64 rows × 1 M f32 → far out of cache: two-pass.
+        assert_eq!(choose_static(64, 1 << 20, 4, l2), Algorithm::TwoPass);
+        // Byte-keyed: a bf16 batch stays resident at twice the elements.
+        let edge_n = l2 / (2 * 4); // exactly fills L2 at f32
+        assert_eq!(choose_static(1, edge_n, 4, l2), Algorithm::ThreePassReload);
+        assert_eq!(choose_static(1, 2 * edge_n, 4, l2), Algorithm::TwoPass);
+        assert_eq!(choose_static(1, 2 * edge_n, 2, l2), Algorithm::ThreePassReload);
+        // Overflow-safe on absurd shapes.
+        assert_eq!(choose_static(usize::MAX, usize::MAX, 4, l2), Algorithm::TwoPass);
     }
 
     #[test]

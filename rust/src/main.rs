@@ -35,24 +35,36 @@ USAGE:
   repro platform
   repro figures <table1|table2|table3|fig1..fig12|all>
         [--out DIR] [--paper-protocol] [--reps N] [--min-time S] [--max-n N] [--verbose]
-  repro tune [--n N] [--reps N] [--save FILE] [--no-stream]
+  repro tune [--n N] [--rows R] [--reps N] [--save FILE] [--no-stream]
+        [--no-portfolio (skip the whole-algorithm timing sweep; by default
+         the table gains `measured` lines ranking every algorithm at
+         R x N, which `plan`/`serve --tune-file` use for selection)]
   repro plan <rows> <n> [--op softmax|inplace|accum|decode] [--dtype f32|bf16|f16]
-        [--backend native|pjrt] [--algorithm twopass|reload|recompute] [--isa I]
+        [--accuracy fast|accurate] [--backend native|pjrt]
+        [--algorithm twopass|reload|recompute|online (pins; auto-selection
+         by measured data / L2 residency is the default)]
+        [--no-algo-auto] [--isa I]
         [--parallel-threshold ELEMS] [--batch-threads T] [--config FILE]
         [--tune-file FILE] [--no-bucket-pow2]
         (prints the cached execution plan + cost prediction, docs/FORMATS.md schema)
   repro bench --all [--rows R] [--n N] [--reps N] [--min-time S]
-        [--algorithm twopass|reload|recompute] [--host NAME] [--out FILE]
+        [--algorithm twopass|reload|recompute|online] [--host NAME] [--out FILE]
         [--projected (cost-model numbers only — no measurement)] [--gbps B]
         (one normalized BENCH_<host>.json: GB/s + tokens/s per dtype,
          plan-cache hit rate, and overload saturation goodput at 2x
          offered load; --projected derives every number from the
          Table-2 cost model at --gbps instead of timing kernels)
-  repro serve [--backend native|pjrt] [--algorithm twopass|reload|recompute]
+  repro serve [--backend native|pjrt]
+        [--algorithm twopass|reload|recompute|online (pins the algorithm;
+         the default lets the planner pick per shape)] [--no-algo-auto]
         [--requests N] [--n LOGITS] [--clients K] [--max-batch B] [--workers W]
         [--max-wait-us U] [--parallel-threshold ELEMS (0 = auto from STREAM)]
         [--batch-threads T] [--artifacts DIR] [--config FILE]
         [--tune-file FILE (reuse `repro tune --save` threshold, skip re-measuring)]
+        [--tune-out FILE (at shutdown, fold the observed per-pass wall
+         times into the tune table as `measured` algorithm rankings and
+         save it; feed back via --tune-file to converge on the fastest
+         algorithm per shape)]
         [--no-bucket-pow2 (don't pad pjrt batches to power-of-two rows)]
         [--explain-plans (print each freshly planned batch shape)]
         [--decode (serve the fused decode endpoint: token ids, not rows)]
@@ -191,9 +203,11 @@ fn cmd_plan(args: &Args) -> Result<()> {
     };
     let dtype: Dtype =
         args.opt("dtype").unwrap_or("f32").parse().map_err(|e: String| anyhow!(e))?;
+    let accuracy: softmax::Accuracy =
+        args.opt("accuracy").unwrap_or("fast").parse().map_err(|e: String| anyhow!(e))?;
     let cfg = load_planner_config(args)?;
     let planner = Planner::from_config(&cfg);
-    println!("{}", planner.plan_dtype(op, dtype, rows, n));
+    println!("{}", planner.plan_dtype_acc(op, dtype, rows, n, accuracy));
     Ok(())
 }
 
@@ -474,6 +488,7 @@ fn hostname() -> String {
 
 fn cmd_tune(args: &Args) -> Result<()> {
     let n = args.get("n", 262_144usize).map_err(|e| anyhow!(e))?;
+    let rows = args.get("rows", 8usize).map_err(|e| anyhow!(e))?;
     let reps = args.get("reps", 5usize).map_err(|e| anyhow!(e))?;
     println!("auto-tuning unroll factors at N = {n} (reps = {reps}) ...");
     // Record the machine shape the tuning ran on; the execution planner's
@@ -493,6 +508,15 @@ fn cmd_tune(args: &Args) -> Result<()> {
              >= {:.0} us of two-pass traffic per split batch)",
             tuning::PARALLEL_MIN_US
         );
+    }
+    if !args.flag("no-portfolio") {
+        // Whole-algorithm timing sweep at this shape: the resulting
+        // `measured` lines are what `plan`/`serve --tune-file` consult
+        // before falling back to the static cost model.
+        for m in tuning::tune_portfolio(rows, n, reps) {
+            println!("# measured {} {} at {rows} x {n}: {:.3e} s", m.algo, m.dtype, m.secs);
+            table.record_measured(m);
+        }
     }
     print!("{}", table.to_text());
     for ((pass, isa), gain) in tuning::tuning_gains(&table) {
@@ -520,6 +544,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let metrics_interval: u64 =
         args.get("metrics-interval-ms", 1000).map_err(|e| anyhow!(e))?;
     let trace_on = cfg.trace;
+    // Feedback loop: fold this run's observed per-pass wall times into
+    // the tune table at shutdown and save it.  Seeded from --tune-file
+    // (when given) so unroll picks and prior measured entries survive.
+    let tune_out = args.opt("tune-out").map(|s| s.to_string());
+    let tune_seed = cfg.tune_table.clone();
     let sp = SamplingParams {
         temperature: args.get("temperature", 1.0f32).map_err(|e| anyhow!(e))?,
         top_k: args.get("top-k", 40usize).map_err(|e| anyhow!(e))?,
@@ -621,6 +650,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if let (true, Some(p)) = (trace_on, trace_path) {
         println!("traces -> {} (inspect with `repro trace-report`)", p.display());
+    }
+    if let Some(path) = tune_out {
+        let mut table = tune_seed.unwrap_or_default();
+        let folded = two_pass_softmax::plan::feedback::fold_observations(&mut table);
+        std::fs::write(&path, table.to_text())?;
+        println!(
+            "tune-out: {folded} measured algorithm timings folded -> {path} \
+             (feed back with --tune-file)"
+        );
     }
     Ok(())
 }

@@ -196,6 +196,13 @@ impl PassStat {
     pub fn total_bytes(&self) -> u64 {
         self.bytes.load(Ordering::Relaxed)
     }
+
+    /// Total measured wall nanoseconds across all recorded executions
+    /// (with [`Histogram::count`] on `time_us`, gives the mean pass time
+    /// the planner feedback loop folds into `measured` tune entries).
+    pub fn total_nanos(&self) -> u64 {
+        self.nanos.load(Ordering::Relaxed)
+    }
 }
 
 type PassKey = (&'static str, Dtype, usize, usize, &'static str);

@@ -1,0 +1,191 @@
+//! Measured-plan feedback: fold the observability layer's per-pass
+//! wall-time registry into a [`TuneTable`]'s `measured` entries.
+//!
+//! The planner's static cost model ranks algorithms by Table-2 traffic,
+//! which is only the truth in the bandwidth-bound regime.  A serving
+//! process, however, *executes* its plans under observation: the batch
+//! drivers time every memory pass per `(op, dtype, rows, n)` shape into
+//! the pass registry ([`crate::obs::pass_entries`]).  This module closes
+//! the loop — it reassembles those per-pass means into whole-algorithm
+//! wall times and records them as [`MeasuredEntry`]s, so the next plan
+//! for the same shape (and the next process, via `repro tune --save` /
+//! `serve --tune-file`) picks the algorithm that was actually fastest.
+//!
+//! An algorithm is considered measured for a shape when **every** pass of
+//! its structure ([`Pass::of_algorithm`]) has samples under that shape's
+//! registry key; its wall time is the sum of the per-pass means.  Pass
+//! series are keyed by pass name, not by algorithm, so a pass two
+//! algorithms share (e.g. `max` in both three-pass variants, `scale_exp`
+//! in recompute and online) contributes one pooled mean to each — an
+//! acceptable conflation, because a shared name means the same kernel.
+
+use std::collections::HashMap;
+
+use crate::softmax::tuning::{MeasuredEntry, TuneTable};
+use crate::softmax::{Algorithm, Dtype, Pass};
+
+use super::PlanOp;
+
+/// Fold every complete algorithm observation in the pass registry into
+/// `table.measured` (latest fold wins per `(op, dtype, rows, n, algo)`
+/// key).  Only normalization ops participate: accum and decode are
+/// defined on the two-pass representation, so there is no algorithm
+/// choice to learn for them.  Returns the number of entries folded.
+pub fn fold_observations(table: &mut TuneTable) -> usize {
+    // Mean wall nanos per pass, grouped by shape.
+    let mut groups: HashMap<(PlanOp, Dtype, usize, usize), HashMap<&'static str, f64>> =
+        HashMap::new();
+    for e in crate::obs::pass_entries() {
+        let op = match e.op.parse::<PlanOp>() {
+            Ok(op @ (PlanOp::Normalize | PlanOp::NormalizeInPlace)) => op,
+            // Accum/decode series, and registry keys written by tests
+            // under synthetic op names, carry no algorithm signal.
+            _ => continue,
+        };
+        let count = e.stat.time_us.count();
+        if count == 0 {
+            continue;
+        }
+        let mean_nanos = e.stat.total_nanos() as f64 / count as f64;
+        groups.entry((op, e.dtype, e.rows, e.n)).or_default().insert(e.pass, mean_nanos);
+    }
+    let mut folded = 0;
+    for ((op, dtype, rows, n), pass_means) in groups {
+        for &algo in Algorithm::ALL.iter() {
+            let secs_nanos: Option<f64> = Pass::of_algorithm(algo)
+                .iter()
+                .map(|p| pass_means.get(p.name()).copied())
+                .sum();
+            if let Some(nanos) = secs_nanos {
+                table.record_measured(MeasuredEntry {
+                    op,
+                    dtype,
+                    rows,
+                    n,
+                    algo,
+                    secs: nanos * 1e-9,
+                });
+                folded += 1;
+            }
+        }
+    }
+    folded
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::record_pass;
+    use crate::plan::Planner;
+    use crate::softmax::Isa;
+
+    // Shapes chosen to be prime and implausible so they cannot collide
+    // with series other tests write into the process-global registry.
+    const ROWS: usize = 7919;
+    const N: usize = 7907;
+
+    fn record(op: &'static str, pass: &'static str, nanos: u64, times: u64) {
+        for _ in 0..times {
+            record_pass(op, Dtype::F32, ROWS, N, pass, nanos, 1_000, 0);
+        }
+    }
+
+    #[test]
+    fn folds_complete_algorithms_and_feeds_the_planner() {
+        // A two-pass history (mean 1000+500 ns) and an online history
+        // (mean 200+100 ns) for the same normalize shape.
+        record("normalize", "accum_extexp", 1_000, 2);
+        record("normalize", "scale_extexp", 500, 2);
+        record("normalize", "online_accum", 200, 4);
+        record("normalize", "scale_exp", 100, 4);
+        // An incomplete reload observation (no scale_inplace samples).
+        record("normalize", "store_exp", 50, 1);
+        record("normalize", "max", 50, 1);
+        // Accum series exist but must not fold (no algorithm choice).
+        record("accum", "accum_extexp", 10, 1);
+
+        let mut table = TuneTable::default();
+        let folded = fold_observations(&mut table);
+        assert!(folded >= 2, "two complete algorithms were observed, folded {folded}");
+
+        let find = |algo| {
+            table
+                .measured
+                .iter()
+                .find(|m| {
+                    m.op == PlanOp::Normalize
+                        && m.dtype == Dtype::F32
+                        && m.rows == ROWS
+                        && m.n == N
+                        && m.algo == algo
+                })
+                .cloned()
+        };
+        let two = find(Algorithm::TwoPass).expect("two-pass must fold");
+        assert!((two.secs - 1_500e-9).abs() < 1e-15, "secs={}", two.secs);
+        let online = find(Algorithm::Online).expect("online must fold");
+        assert!((online.secs - 300e-9).abs() < 1e-15, "secs={}", online.secs);
+        assert!(find(Algorithm::ThreePassReload).is_none(), "incomplete pass set must not fold");
+        assert!(
+            !table.measured.iter().any(|m| m.op == PlanOp::Accum),
+            "accum series carry no algorithm signal"
+        );
+
+        // The data says online is fastest — the planner converges to it.
+        assert_eq!(
+            table.best_algorithm(PlanOp::Normalize, Dtype::F32, ROWS, N),
+            Some(Algorithm::Online)
+        );
+        let p = Planner::new(Algorithm::TwoPass, Isa::Scalar, usize::MAX, 1)
+            .with_algo_auto(true)
+            .with_tune_table(table.clone());
+        assert_eq!(p.plan(PlanOp::Normalize, ROWS, N).algorithm, Algorithm::Online);
+
+        // Folding is idempotent on an unchanged registry: re-folding
+        // updates in place and never duplicates entries.
+        let before = table.measured.len();
+        fold_observations(&mut table);
+        assert_eq!(table.measured.len(), before);
+
+        // The folded table survives the text round trip measured-for-
+        // measured — the serve --tune-out / --tune-file persistence path.
+        let back = TuneTable::from_text(&table.to_text()).unwrap();
+        assert_eq!(
+            back.best_algorithm(PlanOp::Normalize, Dtype::F32, ROWS, N),
+            Some(Algorithm::Online)
+        );
+    }
+
+    #[test]
+    fn folding_more_data_is_monotone_on_the_selection() {
+        // Seed a table where reload is the measured best for a shape.
+        let mut table = TuneTable::default();
+        table.record_measured(MeasuredEntry {
+            op: PlanOp::NormalizeInPlace,
+            dtype: Dtype::Bf16,
+            rows: 7919,
+            n: 7901,
+            algo: Algorithm::ThreePassReload,
+            secs: 1.0e-6,
+        });
+        table.record_measured(MeasuredEntry {
+            op: PlanOp::NormalizeInPlace,
+            dtype: Dtype::Bf16,
+            rows: 7919,
+            n: 7901,
+            algo: Algorithm::TwoPass,
+            secs: 9.0e-6,
+        });
+        let pick = table.best_algorithm(PlanOp::NormalizeInPlace, Dtype::Bf16, 7919, 7901);
+        assert_eq!(pick, Some(Algorithm::ThreePassReload));
+        // Folding observations for unrelated shapes never disturbs the
+        // measured pick for this one.
+        let folded = fold_observations(&mut table);
+        let _ = folded;
+        assert_eq!(
+            table.best_algorithm(PlanOp::NormalizeInPlace, Dtype::Bf16, 7919, 7901),
+            pick,
+            "feedback folding must never re-select a strictly slower measured algorithm"
+        );
+    }
+}

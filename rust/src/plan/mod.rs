@@ -43,6 +43,8 @@
 //!
 //! [`TuneTable`]: crate::softmax::tuning::TuneTable
 
+pub mod feedback;
+
 use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
@@ -55,7 +57,7 @@ use crate::softmax::batch::available_threads;
 use crate::softmax::tuning::{
     default_best_unroll, measured_parallel_threshold, TuneTable, MIN_PARALLEL_THRESHOLD,
 };
-use crate::softmax::{Algorithm, Dtype, Isa, Pass};
+use crate::softmax::{Accuracy, Algorithm, Dtype, Isa, Pass};
 
 // ---------------------------------------------------------------------------
 // Decision primitives (moved here from softmax/batch.rs and the router).
@@ -209,6 +211,21 @@ impl fmt::Display for PlanOp {
     }
 }
 
+impl std::str::FromStr for PlanOp {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "normalize" => Ok(PlanOp::Normalize),
+            "normalize_inplace" => Ok(PlanOp::NormalizeInPlace),
+            "accum" => Ok(PlanOp::Accum),
+            "decode" => Ok(PlanOp::Decode),
+            other => Err(format!(
+                "unknown plan op {other:?} (want normalize|normalize_inplace|accum|decode)"
+            )),
+        }
+    }
+}
+
 /// The complete execution decision for one `(op, dtype, rows, n)` batch
 /// shape.
 ///
@@ -222,8 +239,13 @@ pub struct ExecPlan {
     /// Row length of the planned batch shape.
     pub n: usize,
     /// Softmax algorithm (always `TwoPass` for `Accum`/`Decode`, which
-    /// are defined on the two-pass `(m, n)` representation).
+    /// are defined on the two-pass `(m, n)` representation, and for any
+    /// `Accurate`-tier plan — the compensated path is defined on it).
     pub algorithm: Algorithm,
+    /// Accuracy tier the plan was built for.  `Accurate` pins the
+    /// algorithm to `TwoPass` and makes the batch engine run compensated
+    /// (two-sum) pass-1 accumulation plus the accurate-LSE decode path.
+    pub accuracy: Accuracy,
     pub isa: Isa,
     /// Storage element type of the planned batch.  Every byte-keyed
     /// decision below (block size, NT resolution, predicted traffic) uses
@@ -291,6 +313,7 @@ impl fmt::Display for ExecPlan {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(f, "plan op={} rows={} n={}", self.op, self.rows, self.n)?;
         writeln!(f, "algorithm {}", self.algorithm)?;
+        writeln!(f, "accuracy {}", self.accuracy)?;
         writeln!(f, "isa {}", self.isa)?;
         writeln!(f, "dtype {} elem_bytes={}", self.dtype, self.dtype.size())?;
         write!(f, "unroll")?;
@@ -338,6 +361,7 @@ impl fmt::Display for ExecPlan {
 struct BuildInputs<'a> {
     op: PlanOp,
     algorithm: Algorithm,
+    accuracy: Accuracy,
     isa: Isa,
     dtype: Dtype,
     rows: usize,
@@ -363,6 +387,12 @@ fn pow2_bucket(bucket_pow2: bool, rows: usize) -> Option<usize> {
 }
 
 fn build_plan(inp: BuildInputs<'_>) -> ExecPlan {
+    // The accurate tier has exactly one implementation: compensated
+    // two-pass accumulation.  Whatever algorithm the caller configured or
+    // auto-selection picked, an Accurate plan records (and executes) it.
+    let algorithm =
+        if inp.accuracy == Accuracy::Accurate { Algorithm::TwoPass } else { inp.algorithm };
+    let inp = BuildInputs { algorithm, ..inp };
     let esz = inp.dtype.size();
     let threads = plan_threads(inp.rows, inp.n, inp.threshold_elems, inp.max_threads);
     let chunks = if threads > 1 { chunk_layout(inp.rows, threads) } else { Vec::new() };
@@ -405,6 +435,7 @@ fn build_plan(inp: BuildInputs<'_>) -> ExecPlan {
         rows: inp.rows,
         n: inp.n,
         algorithm: inp.algorithm,
+        accuracy: inp.accuracy,
         isa: inp.isa,
         dtype: inp.dtype,
         unrolls,
@@ -456,6 +487,7 @@ pub fn adhoc_dtype(
     build_plan(BuildInputs {
         op,
         algorithm,
+        accuracy: Accuracy::Fast,
         isa,
         dtype,
         rows,
@@ -498,7 +530,7 @@ impl PlanCacheCounters {
 // The cached planner.
 // ---------------------------------------------------------------------------
 
-type PlanKey = (PlanOp, Dtype, usize, usize);
+type PlanKey = (PlanOp, Dtype, usize, usize, Accuracy);
 type PlanMap = HashMap<PlanKey, Arc<ExecPlan>>;
 
 /// Hard bound on cached shapes per planner.  A serving process sees few
@@ -567,6 +599,12 @@ impl PlanCache {
 /// flows through [`Planner::plan`].
 pub struct Planner {
     algorithm: Algorithm,
+    /// Choose the normalize algorithm per shape instead of using the
+    /// configured one: from the tune table's `measured` data when any
+    /// exists for the shape, from the static cost model otherwise.  Off
+    /// by default ([`Planner::new`] keeps fixed-algorithm semantics);
+    /// serving turns it on unless the operator pinned an algorithm.
+    algo_auto: bool,
     isa: Isa,
     /// Configured threshold; 0 = auto (resolved from measured STREAM
     /// bandwidth lazily, per shape, skipping the measurement for batches
@@ -596,6 +634,7 @@ impl Planner {
     ) -> Planner {
         Planner {
             algorithm,
+            algo_auto: false,
             isa,
             parallel_threshold,
             batch_threads,
@@ -615,6 +654,7 @@ impl Planner {
     /// tune table and bandwidth when the launcher attached them.
     pub fn from_config(cfg: &ServeConfig) -> Planner {
         let mut p = Planner::new(cfg.algorithm, cfg.isa, cfg.parallel_threshold, cfg.batch_threads);
+        p.algo_auto = cfg.algo_auto;
         p.bucket_pow2 = cfg.backend == Backend::Pjrt && cfg.bucket_pow2;
         p.stream_gbps = cfg.stream_gbps;
         p.job_timeout = match cfg.job_timeout_ms {
@@ -629,6 +669,13 @@ impl Planner {
             p.tune = Some(t.clone());
         }
         p
+    }
+
+    /// Enable per-shape algorithm selection (measured data first, static
+    /// cost model as the fallback).
+    pub fn with_algo_auto(mut self, on: bool) -> Planner {
+        self.algo_auto = on;
+        self
     }
 
     /// Override the NT store policy (benches, tests).
@@ -702,7 +749,21 @@ impl Planner {
     /// plan.  Past [`PLAN_CACHE_CAP`] distinct shapes, new shapes are
     /// planned per call and every call counts as a miss.)
     pub fn plan_dtype(&self, op: PlanOp, dtype: Dtype, rows: usize, n: usize) -> Arc<ExecPlan> {
-        let key = (op, dtype, rows, n);
+        self.plan_dtype_acc(op, dtype, rows, n, Accuracy::Fast)
+    }
+
+    /// The plan for one `(op, dtype, rows, n, accuracy)` batch shape —
+    /// the full cache key.  An `Accurate`-tier shape caches separately
+    /// from its `Fast` twin (same placement, different kernels).
+    pub fn plan_dtype_acc(
+        &self,
+        op: PlanOp,
+        dtype: Dtype,
+        rows: usize,
+        n: usize,
+        acc: Accuracy,
+    ) -> Arc<ExecPlan> {
+        let key = (op, dtype, rows, n, acc);
         // Trace the lookup when the calling thread is collecting events
         // (coordinator workers): hit vs miss, and how long a miss's
         // plan derivation took.
@@ -715,7 +776,7 @@ impl Planner {
             return p;
         }
         self.counters.misses.fetch_add(1, Ordering::Relaxed);
-        let plan = self.build(op, dtype, rows, n);
+        let plan = self.build(op, dtype, rows, n, acc);
         if self.explain {
             println!("{plan}");
         }
@@ -739,18 +800,26 @@ impl Planner {
         (thr, Some(gbps))
     }
 
-    fn build(&self, op: PlanOp, dtype: Dtype, rows: usize, n: usize) -> ExecPlan {
+    fn build(&self, op: PlanOp, dtype: Dtype, rows: usize, n: usize, acc: Accuracy) -> ExecPlan {
         // Accum and decode are defined on the two-pass (m, n)
         // representation whatever algorithm normalization is configured
-        // to use.
+        // to use.  (`build_plan` additionally pins Accurate plans to
+        // TwoPass — the compensated tier's one implementation.)
         let algorithm = match op {
             PlanOp::Accum | PlanOp::Decode => Algorithm::TwoPass,
-            PlanOp::Normalize | PlanOp::NormalizeInPlace => self.algorithm,
+            PlanOp::Normalize | PlanOp::NormalizeInPlace => {
+                if self.algo_auto && acc == Accuracy::Fast {
+                    self.choose_algorithm(op, dtype, rows, n)
+                } else {
+                    self.algorithm
+                }
+            }
         };
         let (threshold_elems, gbps) = self.resolve_threshold(rows, n);
         build_plan(BuildInputs {
             op,
             algorithm,
+            accuracy: acc,
             isa: self.isa,
             dtype,
             rows,
@@ -763,6 +832,19 @@ impl Planner {
             tune: self.tune.as_ref(),
             job_timeout: self.job_timeout,
         })
+    }
+
+    /// The per-shape algorithm pick when auto-selection is on: measured
+    /// data beats the model — the tune table's fastest measured algorithm
+    /// for this exact shape when one exists, the static cost-model choice
+    /// ([`costmodel::choose_static`], keyed on L2 residency) otherwise.
+    fn choose_algorithm(&self, op: PlanOp, dtype: Dtype, rows: usize, n: usize) -> Algorithm {
+        if let Some(a) =
+            self.tune.as_ref().and_then(|t| t.best_algorithm(op, dtype, rows, n))
+        {
+            return a;
+        }
+        costmodel::choose_static(rows, n, dtype.size(), crate::platform::detect().l2())
     }
 }
 
@@ -858,6 +940,60 @@ mod tests {
     }
 
     #[test]
+    fn algo_auto_picks_by_residency_and_measured_data_wins() {
+        use crate::softmax::tuning::MeasuredEntry;
+        let auto = Planner::new(Algorithm::TwoPass, Isa::Scalar, usize::MAX, 1).with_algo_auto(true);
+        // Static model: an L2-resident shape reloads, an out-of-cache
+        // shape takes the two-pass algorithm.
+        let l2 = crate::platform::detect().l2();
+        let small_n = (l2 / (2 * 4 * 2)).max(1); // 2 rows, comfortably resident
+        let resident = auto.plan(PlanOp::Normalize, 2, small_n);
+        assert_eq!(resident.algorithm, Algorithm::ThreePassReload);
+        let big_n = l2; // 2 rows × l2 elements × 4 B ≫ L2
+        let streaming = auto.plan(PlanOp::Normalize, 2, big_n);
+        assert_eq!(streaming.algorithm, Algorithm::TwoPass);
+        // Measured data for the exact shape overrides the static choice.
+        let mut table = TuneTable::default();
+        table.record_measured(MeasuredEntry {
+            op: PlanOp::Normalize,
+            dtype: Dtype::F32,
+            rows: 2,
+            n: small_n,
+            algo: Algorithm::Online,
+            secs: 1.0e-6,
+        });
+        let fed = Planner::new(Algorithm::TwoPass, Isa::Scalar, usize::MAX, 1)
+            .with_algo_auto(true)
+            .with_tune_table(table);
+        assert_eq!(fed.plan(PlanOp::Normalize, 2, small_n).algorithm, Algorithm::Online);
+        // Other shapes still fall back to the static model.
+        assert_eq!(fed.plan(PlanOp::Normalize, 2, big_n).algorithm, Algorithm::TwoPass);
+        // Accum/decode stay pinned to the two-pass representation.
+        assert_eq!(fed.plan(PlanOp::Decode, 2, small_n).algorithm, Algorithm::TwoPass);
+        // Off by default: Planner::new keeps fixed-algorithm semantics.
+        let fixed = Planner::new(Algorithm::ThreePassRecompute, Isa::Scalar, usize::MAX, 1);
+        assert_eq!(fixed.plan(PlanOp::Normalize, 2, small_n).algorithm,
+            Algorithm::ThreePassRecompute);
+    }
+
+    #[test]
+    fn accurate_tier_pins_twopass_and_caches_separately() {
+        let p = Planner::new(Algorithm::ThreePassReload, Isa::Scalar, usize::MAX, 1)
+            .with_algo_auto(true);
+        let fast = p.plan_dtype_acc(PlanOp::Normalize, Dtype::F32, 4, 256, Accuracy::Fast);
+        let acc = p.plan_dtype_acc(PlanOp::Normalize, Dtype::F32, 4, 256, Accuracy::Accurate);
+        assert_eq!(acc.accuracy, Accuracy::Accurate);
+        assert_eq!(acc.algorithm, Algorithm::TwoPass, "accurate tier is two-pass only");
+        assert!(!Arc::ptr_eq(&fast, &acc), "tiers must not share a cache slot");
+        assert!(Arc::ptr_eq(
+            &acc,
+            &p.plan_dtype_acc(PlanOp::Normalize, Dtype::F32, 4, 256, Accuracy::Accurate)
+        ));
+        assert!(acc.to_text().contains("accuracy accurate"), "{}", acc.to_text());
+        assert!(fast.to_text().contains("accuracy fast"), "{}", fast.to_text());
+    }
+
+    #[test]
     fn predicted_bytes_match_the_cost_model() {
         let p = Planner::new(Algorithm::TwoPass, Isa::Scalar, 1 << 20, 1);
         for alg in Algorithm::ALL {
@@ -917,7 +1053,7 @@ mod tests {
             .with_stream_gbps(Some(14.0));
         let text = p.plan(PlanOp::Normalize, 8, 1024).to_text();
         assert!(text.starts_with("plan op=normalize rows=8 n=1024\n"), "{text}");
-        for key in ["algorithm ", "isa ", "dtype ", "unroll ", "block_rows ", "nt ",
+        for key in ["algorithm ", "accuracy ", "isa ", "dtype ", "unroll ", "block_rows ", "nt ",
             "threshold ", "threads ", "bucket_rows ", "job_timeout ", "predicted bytes="]
         {
             assert!(text.contains(key), "missing {key:?} in:\n{text}");

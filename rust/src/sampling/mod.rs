@@ -66,7 +66,7 @@ use crate::plan::{self, ExecPlan, PlanOp};
 use crate::softmax::batch::{decode_chunked, note_scan_pass, PoolError, RowBatch};
 use crate::softmax::exp::{extexp, ExtSum};
 use crate::softmax::kernels::{Element, KernelElement};
-use crate::softmax::{Algorithm, Isa};
+use crate::softmax::{Accuracy, Algorithm, Isa};
 use crate::util::rng::Rng;
 use crate::with_elem;
 
@@ -700,7 +700,10 @@ pub fn sample_batch_planned(
     // recorded under the decode plan's registry series.
     let t0 = crate::obs::passes_enabled().then(crate::obs::clock::now);
     if p.threads <= 1 {
-        let out = sample_batch(p.isa, x, params)?;
+        let mut out = sample_batch(p.isa, x, params)?;
+        if p.accuracy == Accuracy::Accurate {
+            correct_logprobs_accurate(x, params, &mut out);
+        }
         record_scan_pass(p, x, t0);
         return Ok(out);
     }
@@ -711,6 +714,9 @@ pub fn sample_batch_planned(
     let mut out = vec![Choice { token: 0, logprob: 0.0 }; x.rows()];
     match decode_chunked(p, x, params, &mut out, None) {
         Ok(()) => {
+            if p.accuracy == Accuracy::Accurate {
+                correct_logprobs_accurate(x, params, &mut out);
+            }
             record_scan_pass(p, x, t0);
             Ok(out)
         }
@@ -719,6 +725,28 @@ pub fn sample_batch_planned(
             unreachable!("untimed decode submissions cannot time out")
         }
     }
+}
+
+/// The `Accurate` tier's logprob path: token ids are already exact (the
+/// selector's `(m, n)` comparisons are), so only the reported logprob is
+/// recomputed — `x[token]·(1/T) − LSE(x·(1/T))` with the log-sum-exp from
+/// the compensated kernel ([`crate::softmax::kernels::scalar::
+/// compensated_lse`]).  Runs sequentially on the submitting thread for
+/// every placement, so the correction is ISA- and thread-count-
+/// independent bit for bit; greedy rows (`temperature == 0`) report under
+/// temperature 1, matching the fast path's contract.
+fn correct_logprobs_accurate(x: &RowBatch, params: &[SamplingParams], out: &mut [Choice]) {
+    let dtype = x.dtype();
+    with_elem!(dtype, E, {
+        for (r, c) in out.iter_mut().enumerate() {
+            let pr = if params.len() == 1 { &params[0] } else { &params[r] };
+            let inv_t = if pr.temperature == 0.0 { 1.0 } else { 1.0 / pr.temperature };
+            let row = x.row_elems::<E>(r);
+            let xi = row[c.token as usize].to_f32();
+            c.logprob =
+                xi * inv_t - crate::softmax::kernels::scalar::compensated_lse(row, inv_t);
+        }
+    });
 }
 
 /// Record one whole-batch fused-scan execution: the decode counterpart
@@ -778,6 +806,9 @@ pub fn sample_batch_planned_owned(
     let mut out = vec![Choice { token: 0, logprob: 0.0 }; x.rows()];
     match decode_chunked(p, &x, &params, &mut out, p.job_timeout) {
         Ok(()) => {
+            if p.accuracy == Accuracy::Accurate {
+                correct_logprobs_accurate(&x, &params, &mut out);
+            }
             record_scan_pass(p, &x, t0);
             Ok(out)
         }

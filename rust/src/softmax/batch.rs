@@ -105,7 +105,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Mutex, OnceLock};
 
 use super::kernels::{self, Bf16, Dtype, Element, KernelElement, F16};
-use super::{exp::ExtSum, Algorithm, Isa, Pass, SoftmaxError};
+use super::{exp::ExtSum, Accuracy, Algorithm, Isa, Pass, SoftmaxError};
 use crate::obs::{self, PassObs, PassTally};
 use crate::plan::{self, ChunkPlan, ExecPlan, PlanOp};
 use crate::sampling::{sample_row_elems, Choice, SamplingError, SamplingParams};
@@ -651,7 +651,18 @@ pub fn softmax_batch_parallel(
         let xs = x.elems::<E>();
         let ys = y.elems_mut::<E>();
         if t <= 1 {
-            run_rows_with::<E>(alg, isa, u, xs, ys, n, block, nt, PassObs::unplanned("normalize"));
+            run_rows_with::<E>(
+                alg,
+                isa,
+                u,
+                xs,
+                ys,
+                n,
+                block,
+                nt,
+                Accuracy::Fast,
+                PassObs::unplanned("normalize"),
+            );
         } else {
             let chunks = plan::chunk_layout(x.rows, t);
             run_chunked::<E>(
@@ -663,6 +674,7 @@ pub fn softmax_batch_parallel(
                 n,
                 block,
                 nt,
+                Accuracy::Fast,
                 &chunks,
                 t,
                 None,
@@ -733,7 +745,18 @@ pub fn softmax_batch_planned(
         let xs = x.elems::<E>();
         let ys = y.elems_mut::<E>();
         if p.threads <= 1 {
-            run_rows_with::<E>(p.algorithm, p.isa, u, xs, ys, n, p.block_rows, p.nt, pobs);
+            run_rows_with::<E>(
+                p.algorithm,
+                p.isa,
+                u,
+                xs,
+                ys,
+                n,
+                p.block_rows,
+                p.nt,
+                p.accuracy,
+                pobs,
+            );
         } else {
             // No job timeout on the out-of-place path: `x` is a shared
             // borrow this function cannot leak, so abandoning a wedged
@@ -749,6 +772,7 @@ pub fn softmax_batch_planned(
                 n,
                 p.block_rows,
                 p.nt,
+                p.accuracy,
                 &p.chunks,
                 p.threads,
                 None,
@@ -818,6 +842,7 @@ pub fn softmax_batch_inplace(
             n,
             block,
             false,
+            Accuracy::Fast,
             PassObs::unplanned("normalize_inplace"),
         );
     });
@@ -873,7 +898,18 @@ pub fn softmax_batch_inplace_planned(p: &ExecPlan, b: &mut RowBatch) -> Result<(
     with_elem!(dtype, E, {
         let (xs, ys) = alias_same_elems(b.elems_mut::<E>());
         if p.threads <= 1 {
-            run_rows_with::<E>(p.algorithm, p.isa, u, xs, ys, n, p.block_rows, false, pobs);
+            run_rows_with::<E>(
+                p.algorithm,
+                p.isa,
+                u,
+                xs,
+                ys,
+                n,
+                p.block_rows,
+                false,
+                p.accuracy,
+                pobs,
+            );
         } else {
             pool_result = run_chunked::<E>(
                 p.algorithm,
@@ -884,6 +920,7 @@ pub fn softmax_batch_inplace_planned(p: &ExecPlan, b: &mut RowBatch) -> Result<(
                 n,
                 p.block_rows,
                 false,
+                p.accuracy,
                 &p.chunks,
                 p.threads,
                 p.job_timeout,
@@ -932,7 +969,7 @@ pub fn accum_extexp_batch(isa: Isa, x: &RowBatch) -> Result<Vec<ExtSum>, Softmax
     let unroll = default_best_unroll(Pass::AccumExtExp, isa);
     let n = x.n().max(1);
     let dtype = x.dtype;
-    with_elem!(dtype, E, accum_rows::<E>(isa, unroll, x.elems::<E>(), n, &mut out));
+    with_elem!(dtype, E, accum_rows::<E>(isa, unroll, false, x.elems::<E>(), n, &mut out));
     Ok(out)
 }
 
@@ -981,9 +1018,10 @@ pub fn accum_extexp_batch_planned(
     // (per-chunk timing would need the pool workers to report back).
     let t0 = obs::passes_enabled().then(obs::clock::now);
     let pobs = PassObs::of_plan(p);
+    let accurate = p.accuracy == Accuracy::Accurate;
     if p.threads <= 1 {
         with_elem!(dtype, E, {
-            accum_rows::<E>(p.isa, unroll, x.elems::<E>(), n.max(1), &mut out);
+            accum_rows::<E>(p.isa, unroll, accurate, x.elems::<E>(), n.max(1), &mut out);
         });
         record_read_pass(pobs, dtype, rows, n, Pass::AccumExtExp.name(), t0);
         return Ok(out);
@@ -996,6 +1034,7 @@ pub fn accum_extexp_batch_planned(
         isa,
         unroll,
         dtype,
+        accurate,
         // SAFETY: the plan's chunks cover 0..rows disjointly (r0 < rows,
         // r0 + rc <= rows), so both offsets stay inside the batch and
         // `out` allocations (one raw pointer per buffer, taken once —
@@ -1038,13 +1077,18 @@ pub(crate) fn record_read_pass(
 fn accum_rows<E: KernelElement>(
     isa: Isa,
     unroll: usize,
+    accurate: bool,
     xs: &[E],
     n: usize,
     out: &mut [ExtSum],
 ) {
     debug_assert_eq!(xs.len(), out.len() * n);
     for (r, o) in out.iter_mut().enumerate() {
-        *o = kernels::run_accum_extexp(isa, unroll, &xs[r * n..r * n + n]);
+        *o = if accurate {
+            kernels::run_accum_extexp_comp(isa, unroll, &xs[r * n..r * n + n])
+        } else {
+            kernels::run_accum_extexp(isa, unroll, &xs[r * n..r * n + n])
+        };
     }
 }
 
@@ -1143,7 +1187,18 @@ fn run_rows_dyn(
     let dtype = x.dtype;
     let pobs = PassObs::unplanned("normalize");
     with_elem!(dtype, E, {
-        run_rows_with::<E>(alg, isa, u, x.elems::<E>(), y.elems_mut::<E>(), n, block, nt, pobs);
+        run_rows_with::<E>(
+            alg,
+            isa,
+            u,
+            x.elems::<E>(),
+            y.elems_mut::<E>(),
+            n,
+            block,
+            nt,
+            Accuracy::Fast,
+            pobs,
+        );
     });
 }
 
@@ -1167,10 +1222,16 @@ fn run_rows_with<E: KernelElement>(
     n: usize,
     block: usize,
     nt: bool,
+    acc: Accuracy,
     pobs: PassObs,
 ) {
     debug_assert_eq!(x.len(), y.len());
     debug_assert_eq!(x.len() % n.max(1), 0);
+    // The accurate tier has exactly one implementation: two-pass with
+    // compensated pass-1 accumulation.  The planner never pairs Accurate
+    // with another algorithm; direct callers are coerced for the same
+    // guarantee (error bounds must not depend on the algorithm knob).
+    let alg = if acc == Accuracy::Accurate { Algorithm::TwoPass } else { alg };
     let mut tally = PassTally::new();
     match alg {
         Algorithm::ThreePassRecompute => drive_recompute(
@@ -1206,7 +1267,13 @@ fn run_rows_with<E: KernelElement>(
             block,
             nt,
             &mut tally,
-            |r| kernels::run_accum_extexp(isa, u.of(Pass::AccumExtExp), r),
+            |r| {
+                if acc == Accuracy::Accurate {
+                    kernels::run_accum_extexp_comp(isa, u.of(Pass::AccumExtExp), r)
+                } else {
+                    kernels::run_accum_extexp(isa, u.of(Pass::AccumExtExp), r)
+                }
+            },
             |r, lam, n_sum, out| {
                 kernels::run_scale_extexp(isa, u.of(Pass::ScaleExtExp), false, r, lam, n_sum, out)
             },
@@ -1214,8 +1281,27 @@ fn run_rows_with<E: KernelElement>(
                 kernels::run_scale_extexp(isa, u.of(Pass::ScaleExtExp), true, r, lam, n_sum, out)
             },
         ),
+        Algorithm::Online => drive_online(
+            x,
+            y,
+            n,
+            block,
+            nt,
+            &mut tally,
+            |r| kernels::run_online_accum(isa, u.of(Pass::OnlineAccum), r),
+            |r, mu, lam, out| {
+                kernels::run_scaleexp(isa, u.of(Pass::ScaleExp), false, r, mu, lam, out)
+            },
+            |r, mu, lam, out| {
+                kernels::run_scaleexp(isa, u.of(Pass::ScaleExp), true, r, mu, lam, out)
+            },
+        ),
     }
-    if tally.enabled() {
+    // Accurate-tier timings stay out of the registry: the compensated
+    // accumulation is a different kernel, and folding its wall times into
+    // the shape's `TwoPass` series would poison the feedback loop's
+    // algorithm selection for Fast-tier traffic.
+    if tally.enabled() && acc == Accuracy::Fast {
         record_pass_tally::<E>(alg, &tally, pobs, x.len() / n.max(1), n);
     }
 }
@@ -1276,6 +1362,9 @@ enum JobKind {
         n: usize,
         block: usize,
         nt: bool,
+        /// Accuracy tier: `Accurate` routes pass 1 to the compensated
+        /// sequential kernel on the worker, same as the submitting path.
+        acc: Accuracy,
         /// Observation context (op + predicted bandwidth) so pooled
         /// chunks land in the same pass-registry series as submitted
         /// ones.
@@ -1286,6 +1375,7 @@ enum JobKind {
         isa: Isa,
         unroll: usize,
         dtype: Dtype,
+        accurate: bool,
         x: *const u8,
         elems: usize,
         n: usize,
@@ -1507,7 +1597,7 @@ fn run_job(kind: JobKind) -> Result<(), SamplingError> {
     // injected panics exercise the payload-preserving panic channel.
     crate::fail_point!("pool.run_job");
     match kind {
-        JobKind::Normalize { alg, isa, unrolls, dtype, x, y, elems, n, block, nt, pobs } => {
+        JobKind::Normalize { alg, isa, unrolls, dtype, x, y, elems, n, block, nt, acc, pobs } => {
             with_elem!(dtype, E, {
                 // SAFETY: see function-level argument.
                 let (xs, ys) = unsafe {
@@ -1516,11 +1606,11 @@ fn run_job(kind: JobKind) -> Result<(), SamplingError> {
                         std::slice::from_raw_parts_mut(y as *mut E, elems),
                     )
                 };
-                run_rows_with::<E>(alg, isa, unrolls, xs, ys, n, block, nt, pobs);
+                run_rows_with::<E>(alg, isa, unrolls, xs, ys, n, block, nt, acc, pobs);
             });
             Ok(())
         }
-        JobKind::Accum { isa, unroll, dtype, x, elems, n, out } => {
+        JobKind::Accum { isa, unroll, dtype, accurate, x, elems, n, out } => {
             with_elem!(dtype, E, {
                 // SAFETY: see function-level argument.
                 let (xs, outs) = unsafe {
@@ -1529,7 +1619,7 @@ fn run_job(kind: JobKind) -> Result<(), SamplingError> {
                         std::slice::from_raw_parts_mut(out, elems / n),
                     )
                 };
-                accum_rows::<E>(isa, unroll, xs, n, outs);
+                accum_rows::<E>(isa, unroll, accurate, xs, n, outs);
             });
             Ok(())
         }
@@ -1698,6 +1788,7 @@ fn run_chunked<E: KernelElement>(
     n: usize,
     block: usize,
     nt: bool,
+    acc: Accuracy,
     chunks: &[ChunkPlan],
     t: usize,
     timeout: Option<std::time::Duration>,
@@ -1720,6 +1811,7 @@ fn run_chunked<E: KernelElement>(
         n,
         block,
         nt,
+        acc,
         pobs,
     });
     match submit_jobs(kinds, t, timeout) {
@@ -1916,6 +2008,49 @@ fn drive_twopass<E: Element>(
                 pass_scale_nt(&x[r * n..r * n + n], 1.0 / s.m, s.n, &mut y[r * n..r * n + n]);
             } else {
                 pass_scale(&x[r * n..r * n + n], 1.0 / s.m, s.n, &mut y[r * n..r * n + n]);
+            }
+        }
+        if nt {
+            // The fence is part of the streaming store pass's cost.
+            sfence();
+        }
+        tally.lap(1, t);
+        r0 += b;
+    }
+}
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn drive_online<E: Element>(
+    x: &[E],
+    y: &mut [E],
+    n: usize,
+    block: usize,
+    nt: bool,
+    tally: &mut PassTally,
+    pass_accum: impl Fn(&[E]) -> (f32, f32),
+    pass_scale: impl Fn(&[E], f32, f32, &mut [E]),
+    pass_scale_nt: impl Fn(&[E], f32, f32, &mut [E]),
+) {
+    let rows = x.len() / n;
+    let mut sums: Vec<(f32, f32)> = Vec::with_capacity(block.min(rows));
+    let mut r0 = 0;
+    while r0 < rows {
+        let b = block.min(rows - r0);
+        sums.clear();
+        let t = tally.stamp();
+        for r in r0..r0 + b {
+            sums.push(pass_accum(&x[r * n..r * n + n]));
+        }
+        tally.lap(0, t);
+        note_store_pass(b);
+        let t = tally.stamp();
+        for (i, r) in (r0..r0 + b).enumerate() {
+            let (mu, s) = sums[i];
+            if nt {
+                pass_scale_nt(&x[r * n..r * n + n], mu, 1.0 / s, &mut y[r * n..r * n + n]);
+            } else {
+                pass_scale(&x[r * n..r * n + n], mu, 1.0 / s, &mut y[r * n..r * n + n]);
             }
         }
         if nt {

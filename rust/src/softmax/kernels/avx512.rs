@@ -378,6 +378,63 @@ pub unsafe fn pass_accum_extexp<E: Avx512Elem, const U: usize>(x: &[E]) -> ExtSu
     s
 }
 
+/// Pass 1 of online softmax: fused running `(max, sum)` per lane,
+/// branchless (rescale every step — two `e^Δ` per vector, one of which
+/// the paper's `(m, n)` trick replaces with VSCALEFPS; that compute gap
+/// is exactly what the portfolio's measured selection arbitrates).
+#[target_feature(enable = "avx512f,f16c")]
+pub unsafe fn pass_online_accum<E: Avx512Elem, const U: usize>(x: &[E]) -> (f32, f32) {
+    let mut vm = [_mm512_set1_ps(f32::MIN); U];
+    let mut vs = [_mm512_setzero_ps(); U];
+    let stride = LANES * U;
+    let mut p = x.as_ptr();
+    let mut rem = x.len();
+    while rem >= stride {
+        for k in 0..U {
+            let xv = E::loadv(p.add(k * LANES));
+            let m_new = _mm512_max_ps(vm[k], xv);
+            let scale_old = vexp(_mm512_sub_ps(vm[k], m_new));
+            let term_new = vexp(_mm512_sub_ps(xv, m_new));
+            vs[k] = _mm512_fmadd_ps(vs[k], scale_old, term_new);
+            vm[k] = m_new;
+        }
+        p = p.add(stride);
+        rem -= stride;
+    }
+    while rem >= LANES {
+        let xv = E::loadv(p);
+        let m_new = _mm512_max_ps(vm[0], xv);
+        let scale_old = vexp(_mm512_sub_ps(vm[0], m_new));
+        let term_new = vexp(_mm512_sub_ps(xv, m_new));
+        vs[0] = _mm512_fmadd_ps(vs[0], scale_old, term_new);
+        vm[0] = m_new;
+        p = p.add(LANES);
+        rem -= LANES;
+    }
+    // Lane + accumulator merge in scalar, then the element tail.
+    let mut mm = f32::MIN;
+    let mut ss = 0.0f32;
+    for k in 0..U {
+        let mut ms = [0.0f32; LANES];
+        let mut sls = [0.0f32; LANES];
+        _mm512_storeu_ps(ms.as_mut_ptr(), vm[k]);
+        _mm512_storeu_ps(sls.as_mut_ptr(), vs[k]);
+        for l in 0..LANES {
+            let m_new = mm.max(ms[l]);
+            ss = ss * crate::softmax::exp::exp(mm - m_new)
+                + sls[l] * crate::softmax::exp::exp(ms[l] - m_new);
+            mm = m_new;
+        }
+    }
+    for i in 0..rem {
+        let xi = (*p.add(i)).to_f32().clamp(-DOMAIN_BOUND, DOMAIN_BOUND);
+        let m_new = mm.max(xi);
+        ss = ss * crate::softmax::exp::exp(mm - m_new) + crate::softmax::exp::exp(xi - m_new);
+        mm = m_new;
+    }
+    (mm, ss)
+}
+
 #[target_feature(enable = "avx512f,f16c")]
 pub unsafe fn pass_scale_extexp<E: Avx512Elem, const U: usize>(
     x: &[E],
@@ -538,6 +595,13 @@ pub unsafe fn softmax_twopass<E: Avx512Elem>(x: &[E], y: &mut [E]) {
     pass_scale_extexp::<E, 8>(x, 1.0 / s.m, s.n, y);
 }
 
+/// Online softmax (Milakov & Gimelshein), AVX512. 2 reads + 1 write.
+#[target_feature(enable = "avx512f,f16c")]
+pub unsafe fn softmax_online<E: Avx512Elem>(x: &[E], y: &mut [E]) {
+    let (m, s) = pass_online_accum::<E, 8>(x);
+    pass_scaleexp::<E, 8>(x, m, 1.0 / s, y);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -569,6 +633,7 @@ mod tests {
                 ("recompute", softmax_threepass_recompute as unsafe fn(&[f32], &mut [f32])),
                 ("reload", softmax_threepass_reload),
                 ("twopass", softmax_twopass),
+                ("online", softmax_online),
             ] {
                 let mut y = vec![0.0f32; n];
                 unsafe { f(&x, &mut y) };

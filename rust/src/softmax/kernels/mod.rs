@@ -206,6 +206,29 @@ pub fn run_accum_extexp<E: KernelElement>(isa: Isa, unroll: usize, x: &[E]) -> E
     }
 }
 
+/// Pass 1 of online softmax: fused running `(max, sum)` reduction,
+/// returning `(µ, Σ e^(x_i − µ))`.
+pub fn run_online_accum<E: KernelElement>(isa: Isa, unroll: usize, x: &[E]) -> (f32, f32) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { with_unroll!(unroll, U, avx2::pass_online_accum::<E, U>(x)) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => unsafe { with_unroll!(unroll, U, avx512::pass_online_accum::<E, U>(x)) },
+        _ => {
+            let _ = unroll;
+            scalar::pass_online_accum(x)
+        }
+    }
+}
+
+/// Pass 1 of Alg. 3, `Accuracy::Accurate` tier: compensated (two-sum)
+/// sequential accumulation.  Deliberately routed to the scalar kernel on
+/// every ISA — the tier trades bandwidth for a summation whose result is
+/// independent of ISA, unroll, and thread split by construction.
+pub fn run_accum_extexp_comp<E: KernelElement>(_isa: Isa, _unroll: usize, x: &[E]) -> ExtSum {
+    scalar::pass_accum_extexp_comp(x)
+}
+
 /// Pass 2 of Alg. 3: `y_i = m_i · λ · 2^(n_i − n_sum)`; `nt` as in
 /// [`run_scaleexp`].
 #[allow(clippy::too_many_arguments)]
@@ -285,6 +308,20 @@ mod tests {
                         assert!(
                             (total - 1.0).abs() < 3e-2,
                             "{isa} {dtype} reload unroll={unroll}: Σy = {total}"
+                        );
+                        let (mu_o, sig_o) = run_online_accum::<E>(isa, unroll, &x);
+                        run_scaleexp::<E>(isa, unroll, false, &x, mu_o, 1.0 / sig_o, &mut y);
+                        let total: f32 = y.iter().map(|v| v.to_f32()).sum();
+                        assert!(
+                            (total - 1.0).abs() < 3e-2,
+                            "{isa} {dtype} online unroll={unroll}: Σy = {total}"
+                        );
+                        let sc = run_accum_extexp_comp::<E>(isa, unroll, &x);
+                        run_scale_extexp::<E>(isa, unroll, false, &x, 1.0 / sc.m, sc.n, &mut y);
+                        let total: f32 = y.iter().map(|v| v.to_f32()).sum();
+                        assert!(
+                            (total - 1.0).abs() < 3e-2,
+                            "{isa} {dtype} comp unroll={unroll}: Σy = {total}"
                         );
                     }
                 });

@@ -15,7 +15,7 @@
 //! code (and its results) are bit-identical to the pre-generic kernels.
 
 use super::element::Element;
-use crate::softmax::exp::{exp, extexp, ExtSum};
+use crate::softmax::exp::{exp, exp2i, extexp, ExtSum, DOMAIN_BOUND};
 
 /// Pass 1 (Algs. 1 & 2): max-reduction over the input. Reads `x` once.
 pub fn pass_max<E: Element>(x: &[E]) -> f32 {
@@ -102,6 +102,115 @@ pub fn pass_accum_extexp<E: Element>(x: &[E]) -> ExtSum {
     s
 }
 
+/// Pass 1 of online softmax: fused running `(max, sum)` with rescale by
+/// `e^(m_old − m_new)` when the max grows.  Reads `x` once; overflow-free.
+pub fn pass_online_accum<E: Element>(x: &[E]) -> (f32, f32) {
+    // 4 independent (m, s) accumulators, like the other reduction passes.
+    let mut m = [f32::MIN; 4];
+    let mut s = [0.0f32; 4];
+    let mut chunks = x.chunks_exact(4);
+    for c in &mut chunks {
+        for k in 0..4 {
+            let xi = c[k].to_f32().clamp(-DOMAIN_BOUND, DOMAIN_BOUND);
+            if xi > m[k] {
+                s[k] = s[k] * exp(m[k] - xi) + 1.0;
+                m[k] = xi;
+            } else {
+                s[k] += exp(xi - m[k]);
+            }
+        }
+    }
+    for &v in chunks.remainder() {
+        let xi = v.to_f32().clamp(-DOMAIN_BOUND, DOMAIN_BOUND);
+        if xi > m[0] {
+            s[0] = s[0] * exp(m[0] - xi) + 1.0;
+            m[0] = xi;
+        } else {
+            s[0] += exp(xi - m[0]);
+        }
+    }
+    merge_online(&m, &s)
+}
+
+/// Merge independent online `(max, sum)` accumulator pairs (shared by the
+/// scalar lanes above and the SIMD modules' lane spills).
+pub(crate) fn merge_online(m: &[f32], s: &[f32]) -> (f32, f32) {
+    let mut mm = m[0];
+    let mut ss = s[0];
+    for k in 1..m.len() {
+        let m_new = mm.max(m[k]);
+        ss = ss * exp(mm - m_new) + s[k] * exp(m[k] - m_new);
+        mm = m_new;
+    }
+    (mm, ss)
+}
+
+// ---------------------------------------------------------------------------
+// Compensated-summation primitives (the `Accurate` tier).
+//
+// These live in the kernel layer and nowhere else (CI greps for strays,
+// like the pass kernels).  The accurate tier is deliberately sequential
+// scalar: one accumulator, no ISA or thread-count dependence, so its
+// results are bit-identical everywhere by construction.
+// ---------------------------------------------------------------------------
+
+/// Knuth two-sum: `a + b` as a rounded sum plus its exact rounding error.
+#[inline(always)]
+pub fn two_sum(a: f32, b: f32) -> (f32, f32) {
+    let s = a + b;
+    let ap = s - b;
+    let bp = s - ap;
+    (s, (a - ap) + (b - bp))
+}
+
+/// Pass 1 of Alg. 3 with compensated accumulation: a single sequential
+/// `(m, n)` accumulator whose mantissa sum carries a Kahan-style
+/// compensation term updated with [`two_sum`].  The exponent rescales are
+/// exact powers of two, so scaling the compensation alongside the sum
+/// loses nothing; only the mantissa additions round, and those roundings
+/// are captured.  Returns the sum with the compensation folded in.
+pub fn pass_accum_extexp_comp<E: Element>(x: &[E]) -> ExtSum {
+    let mut n_run = crate::softmax::exp::EXTSUM_NEG_INIT;
+    let mut sum = 0.0f32;
+    let mut comp = 0.0f32;
+    for v in x {
+        let (m_i, n_i) = extexp(v.to_f32());
+        let n_max = n_i.max(n_run);
+        let scale_run = exp2i(n_run - n_max);
+        // Power-of-two rescale: exact for sum and compensation alike.
+        sum *= scale_run;
+        comp *= scale_run;
+        let term = m_i * exp2i(n_i - n_max);
+        let (s_new, err) = two_sum(sum, term);
+        sum = s_new;
+        comp += err;
+        n_run = n_max;
+    }
+    ExtSum { m: sum + comp, n: n_run }
+}
+
+/// Accurate log-sum-exp of `x · inv_t` (the accurate-LSE logprob path for
+/// decode): compensated sequential accumulation, then `ln` without
+/// reconstruction.  Bit-identical across ISAs and thread counts.
+pub fn compensated_lse<E: Element>(x: &[E], inv_t: f32) -> f32 {
+    let mut n_run = crate::softmax::exp::EXTSUM_NEG_INIT;
+    let mut sum = 0.0f32;
+    let mut comp = 0.0f32;
+    for v in x {
+        let (m_i, n_i) = extexp(v.to_f32() * inv_t);
+        let n_max = n_i.max(n_run);
+        let scale_run = exp2i(n_run - n_max);
+        sum *= scale_run;
+        comp *= scale_run;
+        let term = m_i * exp2i(n_i - n_max);
+        let (s_new, err) = two_sum(sum, term);
+        sum = s_new;
+        comp += err;
+        n_run = n_max;
+    }
+    (sum + comp).ln() + n_run * core::f32::consts::LN_2
+}
+
 /// Pass 2 of Alg. 3: `y_i = m_i · λ · 2^(n_i − n_sum)`. Reads `x`, writes `y`.
 pub fn pass_scale_extexp<E: Element>(x: &[E], lam: f32, n_sum: f32, y: &mut [E]) {
     debug_assert_eq!(x.len(), y.len());
@@ -146,6 +255,19 @@ pub fn softmax_threepass_reload<E: Element>(x: &[E], y: &mut [E]) {
 /// Paper Algorithm 3: Two-Pass. 2 reads + 1 write.
 pub fn softmax_twopass<E: Element>(x: &[E], y: &mut [E]) {
     let s = pass_accum_extexp(x);
+    pass_scale_extexp(x, 1.0 / s.m, s.n, y);
+}
+
+/// Online softmax (Milakov & Gimelshein): fused reduction + scale pass.
+/// 2 reads + 1 write, same Table-2 traffic as Two-Pass.
+pub fn softmax_online<E: Element>(x: &[E], y: &mut [E]) {
+    let (m, s) = pass_online_accum(x);
+    pass_scaleexp(x, m, 1.0 / s, y);
+}
+
+/// Two-Pass with the `Accurate` tier's compensated pass 1.
+pub fn softmax_twopass_comp<E: Element>(x: &[E], y: &mut [E]) {
+    let s = pass_accum_extexp_comp(x);
     pass_scale_extexp(x, 1.0 / s.m, s.n, y);
 }
 
@@ -268,6 +390,79 @@ mod tests {
         for n in [1usize, 5, 64, 1000] {
             check_half::<Bf16>(n, 4e-3);
             check_half::<F16>(n, 5e-4);
+        }
+    }
+
+    #[test]
+    fn online_matches_reference() {
+        let x: Vec<f32> = (0..997).map(|i| ((i * 37) % 113) as f32 * 0.2 - 11.0).collect();
+        let want = ref_softmax(&x);
+        let mut y = vec![0.0f32; x.len()];
+        softmax_online(&x, &mut y);
+        for i in 0..x.len() {
+            assert!((y[i] - want[i]).abs() < 3e-6, "i={i}: {} vs {}", y[i], want[i]);
+        }
+        // Overflow-free where naive Σe^x = inf.
+        let hot = vec![120.0f32; 512];
+        let mut z = vec![0.0f32; 512];
+        softmax_online(&hot, &mut z);
+        for &v in &z {
+            assert!((v - 1.0 / 512.0).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn two_sum_recovers_rounding_error() {
+        let (s, e) = two_sum(1.0f32, 1e-9);
+        assert_eq!(s, 1.0);
+        assert_eq!(e, 1e-9);
+        let (s, e) = two_sum(0.1f32, 0.2);
+        // s + e reproduces the exact sum to f64.
+        assert!(((s as f64 + e as f64) - (0.1f32 as f64 + 0.2f32 as f64)).abs() < 1e-12);
+    }
+
+    /// The crafted defeat-the-fast-path row: one dominant logit plus a sea
+    /// of terms whose individual contributions round away against the
+    /// running sum but whose total mass is large.  Plain accumulation
+    /// (any accumulator count) drops a chunk of that mass; compensated
+    /// accumulation keeps it.
+    fn defeat_row(n: usize) -> Vec<f32> {
+        let mut x = vec![-17.4f32; n];
+        x[0] = 0.0;
+        x
+    }
+
+    #[test]
+    fn compensated_accum_is_strictly_tighter_than_plain() {
+        let x = defeat_row(1 << 17);
+        let lse64 = {
+            let mx = x.iter().cloned().fold(f64::MIN, |a, v| a.max(v as f64));
+            x.iter().map(|&v| ((v as f64) - mx).exp()).sum::<f64>().ln() + mx
+        };
+        let fast = pass_accum_extexp(&x).ln() as f64;
+        let comp = pass_accum_extexp_comp(&x).ln() as f64;
+        let err_fast = (fast - lse64).abs();
+        let err_comp = (comp - lse64).abs();
+        assert!(err_comp < err_fast, "comp {err_comp} vs fast {err_fast}");
+        assert!(err_comp < 1e-4, "comp err {err_comp}");
+        // And on well-behaved inputs the two agree closely.
+        let y: Vec<f32> = (0..1000).map(|i| ((i * 13) % 40) as f32 * 0.3 - 6.0).collect();
+        let a = pass_accum_extexp(&y).ln();
+        let b = pass_accum_extexp_comp(&y).ln();
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+
+    #[test]
+    fn compensated_lse_matches_f64() {
+        let x: Vec<f32> = (0..4096).map(|i| ((i * 131) % 400) as f32 / 20.0 - 10.0).collect();
+        for inv_t in [1.0f32, 0.5, 2.0] {
+            let want = {
+                let xs: Vec<f64> = x.iter().map(|&v| (v as f64) * (inv_t as f64)).collect();
+                let mx = xs.iter().cloned().fold(f64::MIN, f64::max);
+                xs.iter().map(|&v| (v - mx).exp()).sum::<f64>().ln() + mx
+            };
+            let got = compensated_lse(&x, inv_t) as f64;
+            assert!((got - want).abs() < 1e-4, "inv_t={inv_t}: {got} vs {want}");
         }
     }
 }

@@ -55,7 +55,9 @@ pub use dispatch::Isa;
 pub use exp::ExtSum;
 pub use kernels::{Bf16, Dtype, Element, F16};
 
-/// The three softmax algorithms evaluated in the paper.
+/// The softmax algorithm portfolio: the paper's three algorithms plus
+/// online softmax (Milakov & Gimelshein, 1805.02867) promoted from the
+/// ablation into a plannable fourth point on the traffic/compute curve.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algorithm {
     /// Paper Alg. 1: three passes, `e^x` recomputed in pass 3 (4N traffic).
@@ -65,13 +67,17 @@ pub enum Algorithm {
     /// Paper Alg. 3 (the contribution): two passes over the input via the
     /// `(m, n)` extended-range representation (3N traffic).
     TwoPass,
+    /// Online softmax: fused running `(max, sum)` reduction + scale pass
+    /// (3N traffic, rescale by `e^Δ` instead of exponent arithmetic).
+    Online,
 }
 
 impl Algorithm {
-    pub const ALL: [Algorithm; 3] = [
+    pub const ALL: [Algorithm; 4] = [
         Algorithm::ThreePassRecompute,
         Algorithm::ThreePassReload,
         Algorithm::TwoPass,
+        Algorithm::Online,
     ];
 
     /// Memory traffic in units of N·sizeof(f32) (paper Table 2).
@@ -79,7 +85,7 @@ impl Algorithm {
         match self {
             Algorithm::ThreePassRecompute => 4,
             Algorithm::ThreePassReload => 5,
-            Algorithm::TwoPass => 3,
+            Algorithm::TwoPass | Algorithm::Online => 3,
         }
     }
 }
@@ -90,6 +96,7 @@ impl fmt::Display for Algorithm {
             Algorithm::ThreePassRecompute => write!(f, "threepass_recompute"),
             Algorithm::ThreePassReload => write!(f, "threepass_reload"),
             Algorithm::TwoPass => write!(f, "twopass"),
+            Algorithm::Online => write!(f, "online"),
         }
     }
 }
@@ -101,9 +108,49 @@ impl std::str::FromStr for Algorithm {
             "threepass_recompute" | "recompute" | "alg1" => Ok(Algorithm::ThreePassRecompute),
             "threepass_reload" | "reload" | "alg2" => Ok(Algorithm::ThreePassReload),
             "twopass" | "alg3" => Ok(Algorithm::TwoPass),
+            "online" => Ok(Algorithm::Online),
             other => Err(format!(
-                "unknown algorithm {other:?} (want twopass|threepass_recompute|threepass_reload)"
+                "unknown algorithm {other:?} (want twopass|threepass_recompute|threepass_reload|online)"
             )),
+        }
+    }
+}
+
+/// Per-request accuracy tier (plan-keyed; rides in
+/// [`crate::coordinator::SubmitOptions`]).
+///
+/// `Fast` is the tuned SIMD portfolio.  `Accurate` pins the plan to the
+/// Two-Pass algorithm with compensated (two-sum) pass-1 accumulation and
+/// an accurate-LSE logprob path for decode (Blanchard & Higham,
+/// 1909.03469) — sequential scalar accumulation by construction, so
+/// results are ISA- and thread-count-independent bit for bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Accuracy {
+    #[default]
+    Fast,
+    Accurate,
+}
+
+impl Accuracy {
+    pub const ALL: [Accuracy; 2] = [Accuracy::Fast, Accuracy::Accurate];
+}
+
+impl fmt::Display for Accuracy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Accuracy::Fast => write!(f, "fast"),
+            Accuracy::Accurate => write!(f, "accurate"),
+        }
+    }
+}
+
+impl std::str::FromStr for Accuracy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "fast" => Ok(Accuracy::Fast),
+            "accurate" => Ok(Accuracy::Accurate),
+            other => Err(format!("unknown accuracy tier {other:?} (want fast|accurate)")),
         }
     }
 }
@@ -180,6 +227,7 @@ pub fn softmax_with(
             Algorithm::ThreePassRecompute => scalar::softmax_threepass_recompute(x, y),
             Algorithm::ThreePassReload => scalar::softmax_threepass_reload(x, y),
             Algorithm::TwoPass => scalar::softmax_twopass(x, y),
+            Algorithm::Online => scalar::softmax_online(x, y),
         },
         #[cfg(target_arch = "x86_64")]
         // SAFETY: availability checked above.
@@ -188,6 +236,7 @@ pub fn softmax_with(
                 Algorithm::ThreePassRecompute => avx2::softmax_threepass_recompute(x, y),
                 Algorithm::ThreePassReload => avx2::softmax_threepass_reload(x, y),
                 Algorithm::TwoPass => avx2::softmax_twopass(x, y),
+                Algorithm::Online => avx2::softmax_online(x, y),
             }
         },
         #[cfg(target_arch = "x86_64")]
@@ -197,6 +246,7 @@ pub fn softmax_with(
                 Algorithm::ThreePassRecompute => avx512::softmax_threepass_recompute(x, y),
                 Algorithm::ThreePassReload => avx512::softmax_threepass_reload(x, y),
                 Algorithm::TwoPass => avx512::softmax_twopass(x, y),
+                Algorithm::Online => avx512::softmax_online(x, y),
             }
         },
         #[cfg(not(target_arch = "x86_64"))]
@@ -278,10 +328,12 @@ pub enum Pass {
     AccumExtExp,
     /// Pass 2 of Alg. 3: y = m·λ·2^(n−n_sum). Reads N, writes N.
     ScaleExtExp,
+    /// Pass 1 of online softmax: fused running (max, sum). Reads N.
+    OnlineAccum,
 }
 
 impl Pass {
-    pub const ALL: [Pass; 7] = [
+    pub const ALL: [Pass; 8] = [
         Pass::Max,
         Pass::SumExp,
         Pass::StoreExp,
@@ -289,12 +341,13 @@ impl Pass {
         Pass::ScaleInplace,
         Pass::AccumExtExp,
         Pass::ScaleExtExp,
+        Pass::OnlineAccum,
     ];
 
     /// (reads, writes) in units of N·sizeof(f32) — the Table-2 accounting.
     pub fn traffic(self) -> (usize, usize) {
         match self {
-            Pass::Max | Pass::SumExp | Pass::AccumExtExp => (1, 0),
+            Pass::Max | Pass::SumExp | Pass::AccumExtExp | Pass::OnlineAccum => (1, 0),
             Pass::StoreExp | Pass::ScaleExp | Pass::ScaleExtExp | Pass::ScaleInplace => (1, 1),
         }
     }
@@ -305,6 +358,7 @@ impl Pass {
             Algorithm::ThreePassRecompute => &[Pass::Max, Pass::SumExp, Pass::ScaleExp],
             Algorithm::ThreePassReload => &[Pass::Max, Pass::StoreExp, Pass::ScaleInplace],
             Algorithm::TwoPass => &[Pass::AccumExtExp, Pass::ScaleExtExp],
+            Algorithm::Online => &[Pass::OnlineAccum, Pass::ScaleExp],
         }
     }
 
@@ -318,6 +372,7 @@ impl Pass {
             Pass::ScaleInplace => "scale_inplace",
             Pass::AccumExtExp => "accum_extexp",
             Pass::ScaleExtExp => "scale_extexp",
+            Pass::OnlineAccum => "online_accum",
         }
     }
 }
@@ -415,6 +470,10 @@ pub fn run_pass_with(
                             $m::pass_scale_extexp::<f32, $u>(x, lam, n_sum, y);
                             0.0
                         }
+                        Pass::OnlineAccum => {
+                            let (m, s) = $m::pass_online_accum::<f32, $u>(x);
+                            m + s.ln()
+                        }
                     }
                 };
             }
@@ -444,6 +503,10 @@ pub fn run_pass_with(
             Pass::ScaleExtExp => {
                 scalar::pass_scale_extexp(x, lam, n_sum, y);
                 0.0
+            }
+            Pass::OnlineAccum => {
+                let (m, s) = scalar::pass_online_accum(x);
+                m + s.ln()
             }
         },
         #[cfg(target_arch = "x86_64")]

@@ -1,4 +1,4 @@
-//! EXTENSION — Online Softmax (Milakov & Gimelshein, 2018) as an ablation.
+//! EXTENSION — Online Softmax (Milakov & Gimelshein, 2018).
 //!
 //! The natural competitor to the paper's Two-Pass algorithm: it also needs
 //! only **2 reads + 1 write** (3N traffic, same as Table 2's two-pass row),
@@ -12,241 +12,56 @@
 //! versus the paper's `(m, n)` representation, which rescales with *integer
 //! exponent arithmetic* (`·2^(n−n_max)`, one VSCALEFPS) instead of a second
 //! full `e^x` evaluation.  Both are overflow-free single-reduction-pass
-//! algorithms; the ablation (`cargo bench --bench softmax_sweep`, column in
-//! `repro figures fig5 --ablation`… see `ext_online` bench) quantifies the
-//! compute saving of the paper's trick at equal memory traffic.
+//! algorithms.
 //!
-//! Not part of the paper's evaluated triad, so it lives outside the
-//! [`Algorithm`](crate::softmax::Algorithm) enum.
+//! Since the measured-portfolio work this is a first-class member of the
+//! [`Algorithm`](crate::softmax::Algorithm) enum
+//! ([`Algorithm::Online`](crate::softmax::Algorithm::Online)): the
+//! type-generic, const-unrolled kernels live in
+//! [`softmax/kernels/`](crate::softmax::kernels) next to the other passes
+//! (`pass_online_accum` per ISA, dispatched through
+//! [`run_online_accum`](crate::softmax::kernels::run_online_accum)), and the
+//! batched engine executes it plan-driven.  This module keeps the
+//! historical row-level `softmax_online` entry points as thin delegating
+//! wrappers so the ablation benches (`softmax_sweep`'s `ext_online`
+//! column) and external callers keep working; the passes themselves are
+//! kernel-layer-only (CI's kernel gate enforces it).
 
-use super::exp::{exp, DOMAIN_BOUND};
+use super::kernels::scalar;
 
 /// Scalar online softmax: one fused (max, sum) pass + one scale pass.
+/// Delegates to the kernel layer ([`scalar::softmax_online`]).
 pub fn softmax_online(x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), y.len());
-    let (m, s) = pass_online_accum(x);
-    let lam = 1.0 / s;
-    for (xi, yi) in x.iter().zip(y.iter_mut()) {
-        *yi = lam * exp(xi - m);
-    }
-}
-
-/// Pass 1: fused running (max, sum). Reads N.
-pub fn pass_online_accum(x: &[f32]) -> (f32, f32) {
-    // 4 independent (m, s) accumulators, like the other reduction passes.
-    let mut m = [f32::MIN; 4];
-    let mut s = [0.0f32; 4];
-    let mut chunks = x.chunks_exact(4);
-    for c in &mut chunks {
-        for k in 0..4 {
-            let xi = c[k].clamp(-DOMAIN_BOUND, DOMAIN_BOUND);
-            if xi > m[k] {
-                s[k] = s[k] * exp(m[k] - xi) + 1.0;
-                m[k] = xi;
-            } else {
-                s[k] += exp(xi - m[k]);
-            }
-        }
-    }
-    for &v in chunks.remainder() {
-        let xi = v.clamp(-DOMAIN_BOUND, DOMAIN_BOUND);
-        if xi > m[0] {
-            s[0] = s[0] * exp(m[0] - xi) + 1.0;
-            m[0] = xi;
-        } else {
-            s[0] += exp(xi - m[0]);
-        }
-    }
-    // Merge lane accumulators.
-    let mut mm = m[0];
-    let mut ss = s[0];
-    for k in 1..4 {
-        let m_new = mm.max(m[k]);
-        ss = ss * exp(mm - m_new) + s[k] * exp(m[k] - m_new);
-        mm = m_new;
-    }
-    (mm, ss)
+    scalar::softmax_online(x, y)
 }
 
 #[cfg(target_arch = "x86_64")]
 pub mod simd {
-    //! AVX512 (and AVX2) online softmax — branchless: rescale every step,
-    //! like the SIMD formulations in flash-attention kernels.
+    //! SIMD online softmax — thin wrappers over the kernel-layer passes
+    //! (branchless rescale-every-step, like the SIMD formulations in
+    //! flash-attention kernels).
     #![allow(unsafe_op_in_unsafe_fn)]
 
-    use core::arch::x86_64::*;
-
-    use crate::softmax::exp::{C1, C2, C3, C4, C5, DOMAIN_BOUND, LN2_HI, LN2_LO, LOG2E};
-
-    const LANES: usize = 16;
-    const RN: i32 = 0x08;
-
-    #[inline(always)]
-    unsafe fn vexp(x: __m512) -> __m512 {
-        let x = _mm512_max_ps(x, _mm512_set1_ps(-DOMAIN_BOUND));
-        let x = _mm512_min_ps(x, _mm512_set1_ps(DOMAIN_BOUND));
-        let n = _mm512_roundscale_ps::<RN>(_mm512_mul_ps(x, _mm512_set1_ps(LOG2E)));
-        let t = _mm512_fnmadd_ps(n, _mm512_set1_ps(LN2_HI), x);
-        let t = _mm512_fnmadd_ps(n, _mm512_set1_ps(LN2_LO), t);
-        let p = _mm512_set1_ps(C5);
-        let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(C4));
-        let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(C3));
-        let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(C2));
-        let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(C1));
-        let p = _mm512_fmadd_ps(p, t, _mm512_set1_ps(1.0));
-        _mm512_scalef_ps(p, n)
-    }
-
-    /// Pass 1 with `U` independent (m, s) vector accumulator pairs.
-    ///
-    /// # Safety
-    /// Requires AVX512F (checked by callers via `Isa::Avx512.available()`).
-    #[target_feature(enable = "avx512f")]
-    pub unsafe fn pass_online_accum<const U: usize>(x: &[f32]) -> (f32, f32) {
-        let mut vm = [_mm512_set1_ps(f32::MIN); U];
-        let mut vs = [_mm512_setzero_ps(); U];
-        let stride = LANES * U;
-        let mut p = x.as_ptr();
-        let mut rem = x.len();
-        while rem >= stride {
-            for k in 0..U {
-                let xv = _mm512_loadu_ps(p.add(k * LANES));
-                let m_new = _mm512_max_ps(vm[k], xv);
-                // Branchless rescale-every-step: two e^delta per vector.
-                let scale_old = vexp(_mm512_sub_ps(vm[k], m_new));
-                let term_new = vexp(_mm512_sub_ps(xv, m_new));
-                vs[k] = _mm512_fmadd_ps(vs[k], scale_old, term_new);
-                vm[k] = m_new;
-            }
-            p = p.add(stride);
-            rem -= stride;
-        }
-        while rem >= LANES {
-            let xv = _mm512_loadu_ps(p);
-            let m_new = _mm512_max_ps(vm[0], xv);
-            let scale_old = vexp(_mm512_sub_ps(vm[0], m_new));
-            let term_new = vexp(_mm512_sub_ps(xv, m_new));
-            vs[0] = _mm512_fmadd_ps(vs[0], scale_old, term_new);
-            vm[0] = m_new;
-            p = p.add(LANES);
-            rem -= LANES;
-        }
-        // Lane + accumulator merge in scalar.
-        let mut mm = f32::MIN;
-        let mut ss = 0.0f32;
-        for k in 0..U {
-            let mut ms = [0.0f32; LANES];
-            let mut sss = [0.0f32; LANES];
-            _mm512_storeu_ps(ms.as_mut_ptr(), vm[k]);
-            _mm512_storeu_ps(sss.as_mut_ptr(), vs[k]);
-            for l in 0..LANES {
-                let m_new = mm.max(ms[l]);
-                ss = ss * crate::softmax::exp::exp(mm - m_new)
-                    + sss[l] * crate::softmax::exp::exp(ms[l] - m_new);
-                mm = m_new;
-            }
-        }
-        for i in 0..rem {
-            let xi = (*p.add(i)).clamp(-DOMAIN_BOUND, DOMAIN_BOUND);
-            let m_new = mm.max(xi);
-            ss = ss * crate::softmax::exp::exp(mm - m_new)
-                + crate::softmax::exp::exp(xi - m_new);
-            mm = m_new;
-        }
-        (mm, ss)
-    }
+    use crate::softmax::kernels::{avx2, avx512};
 
     /// Full online softmax, AVX512 (pass 2 reuses the tuned scale-exp pass).
     ///
     /// # Safety
-    /// Requires AVX512F.
-    #[target_feature(enable = "avx512f")]
+    /// Requires AVX512F+F16C.
+    #[target_feature(enable = "avx512f,f16c")]
     pub unsafe fn softmax_online(x: &[f32], y: &mut [f32]) {
-        let (m, s) = pass_online_accum::<8>(x);
-        crate::softmax::avx512::pass_scaleexp::<f32, 8>(x, m, 1.0 / s, y);
+        avx512::softmax_online::<f32>(x, y)
     }
 
-    /// AVX2 variant (8-lane; the rescale costs two of the integer-trick
-    /// exponentials per vector instead of two VSCALEFPS).
+    /// Full online softmax, AVX2 (8-lane; the rescale costs two of the
+    /// integer-trick exponentials per vector instead of two VSCALEFPS).
     ///
     /// # Safety
-    /// Requires AVX2+FMA.
-    #[target_feature(enable = "avx2,fma")]
-    pub unsafe fn pass_online_accum_avx2<const U: usize>(x: &[f32]) -> (f32, f32) {
-        use crate::softmax::exp::exp as sexp;
-        let mut vm = [_mm256_set1_ps(f32::MIN); U];
-        let mut vs = [_mm256_setzero_ps(); U];
-        let stride = 8 * U;
-        let mut p = x.as_ptr();
-        let mut rem = x.len();
-        while rem >= stride {
-            for k in 0..U {
-                let xv = _mm256_loadu_ps(p.add(k * 8));
-                let m_new = _mm256_max_ps(vm[k], xv);
-                let scale_old = vexp256(_mm256_sub_ps(vm[k], m_new));
-                let term_new = vexp256(_mm256_sub_ps(xv, m_new));
-                vs[k] = _mm256_fmadd_ps(vs[k], scale_old, term_new);
-                vm[k] = m_new;
-            }
-            p = p.add(stride);
-            rem -= stride;
-        }
-        let mut mm = f32::MIN;
-        let mut ss = 0.0f32;
-        for k in 0..U {
-            let mut ms = [0.0f32; 8];
-            let mut sss = [0.0f32; 8];
-            _mm256_storeu_ps(ms.as_mut_ptr(), vm[k]);
-            _mm256_storeu_ps(sss.as_mut_ptr(), vs[k]);
-            for l in 0..8 {
-                let m_new = mm.max(ms[l]);
-                ss = ss * sexp(mm - m_new) + sss[l] * sexp(ms[l] - m_new);
-                mm = m_new;
-            }
-        }
-        for i in 0..rem {
-            let xi = (*p.add(i)).clamp(-DOMAIN_BOUND, DOMAIN_BOUND);
-            let m_new = mm.max(xi);
-            ss = ss * sexp(mm - m_new) + sexp(xi - m_new);
-            mm = m_new;
-        }
-        (mm, ss)
-    }
-
-    #[inline(always)]
-    unsafe fn vexp256(x: __m256) -> __m256 {
-        let x = _mm256_max_ps(x, _mm256_set1_ps(-DOMAIN_BOUND));
-        let x = _mm256_min_ps(x, _mm256_set1_ps(DOMAIN_BOUND));
-        let n = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(
-            _mm256_mul_ps(x, _mm256_set1_ps(LOG2E)),
-        );
-        let t = _mm256_fnmadd_ps(n, _mm256_set1_ps(LN2_HI), x);
-        let t = _mm256_fnmadd_ps(n, _mm256_set1_ps(LN2_LO), t);
-        let p = _mm256_set1_ps(C5);
-        let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(C4));
-        let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(C3));
-        let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(C2));
-        let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(C1));
-        let p = _mm256_fmadd_ps(p, t, _mm256_set1_ps(1.0));
-        // Reconstruction via the AVX2 integer trick (deltas are <= 0).
-        let clamped = _mm256_max_ps(n, _mm256_set1_ps(-127.0));
-        let bits = _mm256_slli_epi32::<23>(_mm256_add_epi32(
-            _mm256_cvtps_epi32(clamped),
-            _mm256_set1_epi32(127),
-        ));
-        let s = _mm256_castsi256_ps(bits);
-        let keep = _mm256_cmp_ps::<_CMP_GE_OQ>(n, _mm256_set1_ps(-126.0));
-        _mm256_mul_ps(p, _mm256_and_ps(s, keep))
-    }
-
-    /// Full online softmax, AVX2.
-    ///
-    /// # Safety
-    /// Requires AVX2+FMA.
-    #[target_feature(enable = "avx2,fma")]
+    /// Requires AVX2+FMA+F16C.
+    #[target_feature(enable = "avx2,fma,f16c")]
     pub unsafe fn softmax_online_avx2(x: &[f32], y: &mut [f32]) {
-        let (m, s) = pass_online_accum_avx2::<8>(x);
-        crate::softmax::avx2::pass_scaleexp::<f32, 8>(x, m, 1.0 / s, y);
+        avx2::softmax_online::<f32>(x, y)
     }
 }
 
@@ -303,7 +118,10 @@ mod tests {
     #[cfg(target_arch = "x86_64")]
     #[test]
     fn avx2_online_matches_scalar() {
-        if !(is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")) {
+        if !(is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+            && is_x86_feature_detected!("f16c"))
+        {
             return;
         }
         for n in [8usize, 9, 100, 1000, 4099] {
@@ -320,7 +138,7 @@ mod tests {
     #[cfg(target_arch = "x86_64")]
     #[test]
     fn avx512_online_matches_scalar() {
-        if !is_x86_feature_detected!("avx512f") {
+        if !(is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("f16c")) {
             return;
         }
         for n in [16usize, 17, 128, 1000, 5000] {

@@ -15,7 +15,9 @@
 use std::collections::HashMap;
 use std::sync::OnceLock;
 
-use super::{run_pass_with, Isa, Pass, PassOps};
+use crate::plan::PlanOp;
+
+use super::{run_pass_with, Algorithm, Dtype, Isa, Pass, PassOps};
 
 /// Unroll factors explored by the tuner (vectors per loop iteration).
 pub const UNROLLS: [usize; 4] = [1, 2, 4, 8];
@@ -32,10 +34,31 @@ pub struct TuneEntry {
     pub best_unroll: usize,
 }
 
+/// One measured whole-algorithm timing for a batch shape — the planner
+/// feedback loop's persisted unit.  Produced by `repro tune`'s portfolio
+/// sweep ([`tune_portfolio`]) and by folding the observability layer's
+/// per-pass wall-time registry (`plan::feedback`); consumed by the planner
+/// when algorithm auto-selection is on, so a long-running server converges
+/// to the fastest algorithm per shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MeasuredEntry {
+    pub op: PlanOp,
+    pub dtype: Dtype,
+    pub rows: usize,
+    pub n: usize,
+    pub algo: Algorithm,
+    /// Wall seconds for one whole-batch execution with `algo` on this
+    /// shape (median of the tuner's reps, or the obs layer's mean).
+    pub secs: f64,
+}
+
 /// A complete tuning table for one host.
 #[derive(Debug, Clone, Default)]
 pub struct TuneTable {
     pub entries: Vec<TuneEntry>,
+    /// Measured per-shape algorithm timings (the `measured` lines of the
+    /// text schema) — the data behind [`TuneTable::best_algorithm`].
+    pub measured: Vec<MeasuredEntry>,
     /// Bandwidth-derived serving threshold (elements below which one
     /// batch stays single-threaded), when measured — see
     /// [`derive_parallel_threshold`].
@@ -54,6 +77,36 @@ impl TuneTable {
             .unwrap_or(DEFAULT_UNROLL)
     }
 
+    /// The fastest *measured* algorithm for a batch shape, when any
+    /// measurement exists for it.  Selection is the plain minimum over
+    /// `secs`, so folding more observations can never re-select an
+    /// algorithm the data shows to be strictly slower.
+    pub fn best_algorithm(
+        &self,
+        op: PlanOp,
+        dtype: Dtype,
+        rows: usize,
+        n: usize,
+    ) -> Option<Algorithm> {
+        self.measured
+            .iter()
+            .filter(|m| m.op == op && m.dtype == dtype && m.rows == rows && m.n == n)
+            .min_by(|a, b| a.secs.partial_cmp(&b.secs).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|m| m.algo)
+    }
+
+    /// Insert or update one measurement.  The latest observation for a
+    /// `(op, dtype, rows, n, algo)` key wins — the feedback loop folds
+    /// running means, so each fold supersedes the previous one.
+    pub fn record_measured(&mut self, e: MeasuredEntry) {
+        match self.measured.iter_mut().find(|m| {
+            m.op == e.op && m.dtype == e.dtype && m.rows == e.rows && m.n == e.n && m.algo == e.algo
+        }) {
+            Some(slot) => *slot = e,
+            None => self.measured.push(e),
+        }
+    }
+
     /// Serialize to a simple line format: `pass isa n best ns...` per row,
     /// plus a `parallel_threshold <elems> <gbps>` line when the
     /// bandwidth-derived serving threshold was measured (no external
@@ -66,6 +119,15 @@ impl TuneTable {
                 out.push_str(&format!(" {v:.4}"));
             }
             out.push('\n');
+        }
+        for m in &self.measured {
+            // `{:.6e}` is a canonical float rendering: parse → format
+            // reproduces the text byte-for-byte, so saved tables are
+            // stable under load/save cycles.
+            out.push_str(&format!(
+                "measured {} {} {} {} {} {:.6e}\n",
+                m.op, m.dtype, m.rows, m.n, m.algo, m.secs
+            ));
         }
         if let Some(p) = self.parallel_threshold {
             out.push_str(&format!(
@@ -95,6 +157,38 @@ impl TuneTable {
                 table.stream_gbps = it.next().and_then(|v| v.parse().ok());
                 continue;
             }
+            if let Some(rest) = line.strip_prefix("measured ") {
+                // Strict: a corrupt measured line is an error, never a
+                // silent skip — a planner fed a truncated table must not
+                // quietly lose its feedback data.
+                let mut it = rest.split_whitespace();
+                let op: PlanOp = it.next().ok_or("measured: missing op")?.parse()?;
+                let dtype: Dtype = it.next().ok_or("measured: missing dtype")?.parse()?;
+                let rows: usize = it
+                    .next()
+                    .ok_or("measured: missing rows")?
+                    .parse()
+                    .map_err(|e| format!("measured rows: {e}"))?;
+                let n: usize = it
+                    .next()
+                    .ok_or("measured: missing n")?
+                    .parse()
+                    .map_err(|e| format!("measured n: {e}"))?;
+                let algo: Algorithm = it.next().ok_or("measured: missing algorithm")?.parse()?;
+                let secs: f64 = it
+                    .next()
+                    .ok_or("measured: missing secs")?
+                    .parse()
+                    .map_err(|e| format!("measured secs: {e}"))?;
+                if !secs.is_finite() || secs < 0.0 {
+                    return Err(format!("measured secs out of range: {secs}"));
+                }
+                if let Some(extra) = it.next() {
+                    return Err(format!("measured: trailing field {extra:?}"));
+                }
+                table.measured.push(MeasuredEntry { op, dtype, rows, n, algo, secs });
+                continue;
+            }
             let mut it = line.split_whitespace();
             let pass: Pass = parse_pass(it.next().ok_or("missing pass")?)?;
             let isa: Isa = it.next().ok_or("missing isa")?.parse()?;
@@ -122,6 +216,10 @@ pub fn default_best_unroll(pass: Pass, _isa: Isa) -> usize {
         Pass::StoreExp => 2,
         Pass::SumExp | Pass::ScaleExp | Pass::ScaleInplace => 8,
         Pass::AccumExtExp | Pass::ScaleExtExp => 8,
+        // Must stay 8: the row-level `softmax_online` compositions are
+        // monomorphized at U=8, and batched execution is required to be
+        // bit-identical to them.
+        Pass::OnlineAccum => 8,
     }
 }
 
@@ -167,6 +265,48 @@ pub fn tune_all(n: usize, reps: usize) -> TuneTable {
         }
     }
     TuneTable { entries, ..TuneTable::default() }
+}
+
+/// Time the full algorithm portfolio on one `rows × n` f32 batch shape
+/// (best ISA, row-level kernels) and return one [`MeasuredEntry`] per
+/// algorithm.  `repro tune --save` folds these into the saved table, so a
+/// planner loading it starts from measured — not modeled — per-shape
+/// algorithm picks.
+pub fn tune_portfolio(rows: usize, n: usize, reps: usize) -> Vec<MeasuredEntry> {
+    let isa = Isa::detect_best();
+    let rows = rows.max(1);
+    let n = n.max(1);
+    let x: Vec<f32> =
+        (0..rows * n).map(|i| ((i * 31) % 200) as f32 * 0.05 - 5.0).collect();
+    let mut y = vec![0.0f32; rows * n];
+    Algorithm::ALL
+        .iter()
+        .map(|&algo| {
+            // Warm-up pass (page in buffers, train the branch predictors).
+            for (xr, yr) in x.chunks(n).zip(y.chunks_mut(n)) {
+                let _ = super::softmax_with(algo, isa, xr, yr);
+            }
+            let mut samples: Vec<f64> = (0..reps.max(3))
+                .map(|_| {
+                    let t0 = crate::obs::clock::now();
+                    for (xr, yr) in x.chunks(n).zip(y.chunks_mut(n)) {
+                        let r = super::softmax_with(algo, isa, xr, yr);
+                        std::hint::black_box(r.ok());
+                    }
+                    t0.elapsed().as_secs_f64()
+                })
+                .collect();
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            MeasuredEntry {
+                op: PlanOp::Normalize,
+                dtype: Dtype::F32,
+                rows,
+                n,
+                algo,
+                secs: samples[samples.len() / 2],
+            }
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -232,6 +372,7 @@ fn parse_pass(s: &str) -> Result<Pass, String> {
         "scale_inplace" => Pass::ScaleInplace,
         "accum_extexp" => Pass::AccumExtExp,
         "scale_extexp" => Pass::ScaleExtExp,
+        "online_accum" => Pass::OnlineAccum,
         other => return Err(format!("unknown pass {other:?}")),
     })
 }
@@ -266,6 +407,83 @@ mod tests {
         // Tables without a threshold line load with None.
         let bare = TuneTable::from_text("# pass isa n best\n").unwrap();
         assert_eq!(bare.parallel_threshold, None);
+    }
+
+    #[test]
+    fn measured_lines_roundtrip_byte_identically() {
+        let mut t = TuneTable::default();
+        t.record_measured(MeasuredEntry {
+            op: PlanOp::Normalize,
+            dtype: Dtype::F32,
+            rows: 64,
+            n: 4096,
+            algo: Algorithm::TwoPass,
+            secs: 1.234567e-4,
+        });
+        t.record_measured(MeasuredEntry {
+            op: PlanOp::NormalizeInPlace,
+            dtype: Dtype::Bf16,
+            rows: 1,
+            n: 1 << 20,
+            algo: Algorithm::Online,
+            secs: 3.0e-3,
+        });
+        let s = t.to_text();
+        let back = TuneTable::from_text(&s).unwrap();
+        assert_eq!(back.measured, t.measured);
+        // text -> parse -> text is byte-identical (stable persisted form).
+        assert_eq!(back.to_text(), s);
+    }
+
+    #[test]
+    fn corrupt_measured_lines_are_errors_not_skips() {
+        for bad in [
+            "measured normalize f32 64 4096 twopass",          // missing secs
+            "measured normalize f32 64 4096 warp 1.0e-3",      // unknown algorithm
+            "measured transpose f32 64 4096 twopass 1.0e-3",   // unknown op
+            "measured normalize f32 sixty 4096 twopass 1e-3",  // bad rows
+            "measured normalize f32 64 4096 twopass 1e-3 9",   // trailing field
+            "measured normalize f32 64 4096 twopass inf",      // non-finite secs
+            "measured normalize f32 64 4096 twopass -1.0e-3",  // negative secs
+        ] {
+            assert!(TuneTable::from_text(bad).is_err(), "accepted corrupt line: {bad}");
+        }
+    }
+
+    #[test]
+    fn best_algorithm_is_min_and_monotone_under_refolds() {
+        let mut t = TuneTable::default();
+        let entry = |algo, secs| MeasuredEntry {
+            op: PlanOp::Normalize,
+            dtype: Dtype::F32,
+            rows: 8,
+            n: 1024,
+            algo,
+            secs,
+        };
+        t.record_measured(entry(Algorithm::TwoPass, 2.0e-4));
+        t.record_measured(entry(Algorithm::ThreePassReload, 1.0e-4));
+        assert_eq!(
+            t.best_algorithm(PlanOp::Normalize, Dtype::F32, 8, 1024),
+            Some(Algorithm::ThreePassReload)
+        );
+        // Folding a slower measurement for a third algorithm never
+        // re-selects it over the measured minimum...
+        t.record_measured(entry(Algorithm::Online, 5.0e-4));
+        assert_eq!(
+            t.best_algorithm(PlanOp::Normalize, Dtype::F32, 8, 1024),
+            Some(Algorithm::ThreePassReload)
+        );
+        // ...and re-folding the same key updates in place (latest wins),
+        // flipping the pick only when the data says so.
+        t.record_measured(entry(Algorithm::Online, 0.5e-4));
+        assert_eq!(
+            t.best_algorithm(PlanOp::Normalize, Dtype::F32, 8, 1024),
+            Some(Algorithm::Online)
+        );
+        assert_eq!(t.measured.len(), 3, "re-fold must update, not append");
+        // Other shapes stay unmeasured.
+        assert_eq!(t.best_algorithm(PlanOp::Normalize, Dtype::F32, 8, 2048), None);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! `costmodel::cost`.
 
 use two_pass_softmax::config::ServeConfig;
-use two_pass_softmax::coordinator::{Coordinator, Payload, Router};
+use two_pass_softmax::coordinator::{Coordinator, Payload, Rejected, Router, SubmitOptions};
 use two_pass_softmax::costmodel;
 use two_pass_softmax::plan::{adhoc, adhoc_dtype, PlanOp, Planner};
 use two_pass_softmax::sampling::{self, SamplingParams};
@@ -14,7 +14,8 @@ use two_pass_softmax::softmax::batch::{
     accum_extexp_batch, accum_extexp_batch_planned, softmax_batch_inplace_planned,
     softmax_batch_planned, RowBatch,
 };
-use two_pass_softmax::softmax::{softmax_with, Algorithm, Dtype, Isa};
+use two_pass_softmax::softmax::tuning::{MeasuredEntry, TuneTable};
+use two_pass_softmax::softmax::{softmax_with, Accuracy, Algorithm, Dtype, Isa};
 use two_pass_softmax::util::rng::Rng;
 
 fn random_batch(rows: usize, n: usize, seed: u64) -> RowBatch {
@@ -321,6 +322,165 @@ fn plan_cache_cap_overflow_under_concurrency_stays_correct_and_counted() {
     // cap is checked under the writer lock); each is planned by a single
     // thread, so its two later passes are guaranteed hits.
     assert!(hits >= 2 * 256, "cached shapes must hit on later passes: {hits}");
+}
+
+/// Placement must never leak into results: for every algorithm (Online
+/// included) and both accuracy tiers, a batch executed on the submitting
+/// thread (threshold = ∞) is bit-identical to the same batch split
+/// across the maximum pool width (threshold = 1) — and to every thread
+/// count in between.
+#[test]
+fn pool_vs_submit_placement_is_bit_identical_per_algorithm() {
+    let (rows, n) = (11usize, 317usize);
+    let x = random_batch(rows, n, 4242);
+    let max_threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    for isa in Isa::detect_all() {
+        for alg in Algorithm::ALL {
+            for acc in [Accuracy::Fast, Accuracy::Accurate] {
+                let submit = Planner::new(alg, isa, usize::MAX, 1);
+                let want = {
+                    let p = submit.plan_dtype_acc(PlanOp::Normalize, Dtype::F32, rows, n, acc);
+                    let mut y = RowBatch::new(rows, n);
+                    softmax_batch_planned(&p, &x, &mut y).unwrap();
+                    y
+                };
+                for threads in [1usize, 2, max_threads] {
+                    let pool = Planner::new(alg, isa, 1, threads);
+                    let p = pool.plan_dtype_acc(PlanOp::Normalize, Dtype::F32, rows, n, acc);
+                    let mut y = RowBatch::new(rows, n);
+                    softmax_batch_planned(&p, &x, &mut y).unwrap();
+                    assert_eq!(y, want, "{alg}/{isa}/{acc:?} t={threads} vs submit path");
+                }
+            }
+        }
+    }
+}
+
+/// The accurate tier is one implementation everywhere: whatever algorithm
+/// and ISA the planner was configured with, an Accurate plan's output
+/// equals the sequential scalar compensated reference bit for bit.
+#[test]
+fn accurate_tier_is_isa_and_algorithm_independent() {
+    let (rows, n) = (5usize, 401usize);
+    let x = random_batch(rows, n, 99);
+    let mut want = RowBatch::new(rows, n);
+    for r in 0..rows {
+        let mut row = vec![0.0f32; n];
+        two_pass_softmax::softmax::kernels::scalar::softmax_twopass_comp(x.row(r), &mut row);
+        want.row_mut(r).copy_from_slice(&row);
+    }
+    for isa in Isa::detect_all() {
+        for alg in Algorithm::ALL {
+            let planner = Planner::new(alg, isa, 1, 2);
+            let p = planner.plan_dtype_acc(PlanOp::Normalize, Dtype::F32, rows, n, Accuracy::Accurate);
+            assert_eq!(p.algorithm, Algorithm::TwoPass, "{alg}/{isa}");
+            let mut y = RowBatch::new(rows, n);
+            softmax_batch_planned(&p, &x, &mut y).unwrap();
+            assert_eq!(y, want, "{alg}/{isa} accurate output drifted from the scalar reference");
+        }
+    }
+}
+
+/// `repro plan` acceptance: under the static cost model an auto planner
+/// picks different algorithms for an L2-resident shape and an
+/// out-of-cache shape — and after a `tune --save`/`--tune-file` round
+/// trip (simulated textually here) the measured entry overrides the
+/// static pick for exactly its shape.
+#[test]
+fn algo_auto_flips_on_residency_and_tune_roundtrip_overrides() {
+    let l2 = two_pass_softmax::platform::detect().l2();
+    // rows=2: working set 2·rows·n·4 bytes = l2 (resident) vs 16·l2.
+    let small_n = l2 / (2 * 4 * 2);
+    let big_n = l2;
+    let p = Planner::new(Algorithm::TwoPass, Isa::detect_best(), usize::MAX, 1)
+        .with_algo_auto(true);
+    let small = p.plan(PlanOp::Normalize, 2, small_n).algorithm;
+    let big = p.plan(PlanOp::Normalize, 2, big_n).algorithm;
+    assert_eq!(small, Algorithm::ThreePassReload, "L2-resident shape");
+    assert_eq!(big, Algorithm::TwoPass, "out-of-cache shape");
+    assert_ne!(small, big, "the static choice must differ across the residency boundary");
+
+    // `repro tune --save`: a measured table naming Online fastest for the
+    // small shape, persisted to text and parsed back (`--tune-file`).
+    let mut table = TuneTable::default();
+    for (algo, secs) in [
+        (Algorithm::Online, 1.0e-6),
+        (Algorithm::TwoPass, 2.0e-6),
+        (Algorithm::ThreePassReload, 3.0e-6),
+    ] {
+        table.record_measured(MeasuredEntry {
+            op: PlanOp::Normalize,
+            dtype: Dtype::F32,
+            rows: 2,
+            n: small_n,
+            algo,
+            secs,
+        });
+    }
+    let saved = table.to_text();
+    let mut cfg = ServeConfig {
+        parallel_threshold: usize::MAX,
+        batch_threads: 1,
+        ..ServeConfig::default()
+    };
+    assert!(cfg.algo_auto, "auto selection is the serving default");
+    cfg.tune_table = Some(TuneTable::from_text(&saved).unwrap());
+    let tuned = Planner::from_config(&cfg);
+    assert_eq!(
+        tuned.plan(PlanOp::Normalize, 2, small_n).algorithm,
+        Algorithm::Online,
+        "measured data must override the static pick for its shape"
+    );
+    assert_eq!(
+        tuned.plan(PlanOp::Normalize, 2, big_n).algorithm,
+        Algorithm::TwoPass,
+        "unmeasured shapes keep the static choice"
+    );
+}
+
+/// A rejected request never executes, so it must leave no trace in the
+/// pass registry — no wall-time series for an algorithm that never ran
+/// (those series feed plan selection; phantom samples would poison it).
+#[test]
+fn rejected_requests_record_no_pass_series() {
+    // Process-global registry: prime, unique row lengths so no other
+    // test's series can collide with these.
+    const REJECTED_N: usize = 6007;
+    const SERVED_N: usize = 6011;
+    let cfg = ServeConfig {
+        max_batch: 64,
+        workers: 1,
+        max_wait_us: 30_000,
+        parallel_threshold: 1 << 20,
+        ..ServeConfig::default()
+    };
+    let c = Coordinator::start_with_router(&cfg, Router::native(Algorithm::TwoPass, Isa::detect_best()));
+    // A 1 ms deadline against a 30 ms batching window: the request is
+    // admitted, waits out the window, and the worker drops it expired.
+    let h = c
+        .submit_with(
+            Payload::Logits(vec![0.5; REJECTED_N]),
+            SubmitOptions::with_deadline(std::time::Duration::from_millis(1)),
+        )
+        .unwrap();
+    let resp = h.wait().unwrap();
+    match resp.rejected {
+        Some(Rejected::DeadlineExceeded { .. }) => {}
+        other => panic!("expected a deadline rejection, got {other:?} / {:?}", resp.error),
+    }
+    // Control: a served request of a sibling shape does record series.
+    let r = c.softmax_blocking(vec![0.5f32; SERVED_N]).unwrap();
+    assert!(r.error.is_none() && r.rejected.is_none());
+    c.shutdown();
+    let entries = two_pass_softmax::obs::pass_entries();
+    assert!(
+        !entries.iter().any(|e| e.n == REJECTED_N),
+        "a never-executed request must record no pass series"
+    );
+    assert!(
+        entries.iter().any(|e| e.n == SERVED_N),
+        "the served control request must record pass series (else this test is vacuous)"
+    );
 }
 
 /// Decode through the router must plan exactly like direct decode: same
