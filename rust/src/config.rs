@@ -114,6 +114,17 @@ pub struct ServeConfig {
     /// when the threshold is auto-derived or a tune table carries it.
     /// Not a JSON/CLI key.  Default: `None`.
     pub stream_gbps: Option<f64>,
+    /// Pool workers for intra-row column sharding: a batch whose rows are
+    /// fewer than this splits each row's vocab across up to this many
+    /// workers (exact `(m, n)` merge — results stay bit-identical to the
+    /// serial path).  `0` (the default) means *auto*: the resolved
+    /// `batch_threads`.  `1` disables sharding.
+    pub shard_workers: usize,
+    /// Minimum row length (columns) before a small-rows batch shards,
+    /// overriding the cost-model crossover.  `0` (the default) means
+    /// *auto*: `costmodel::shard_crossover_n` at the measured bandwidth
+    /// (a conservative fallback when none is known).
+    pub shard_min_n: usize,
     /// Admission-control queue budget in **predicted milliseconds** of
     /// work (see `coordinator::admission`): arrivals that would push the
     /// queue's predicted drain time past this are shed with
@@ -162,6 +173,8 @@ impl Default for ServeConfig {
             explain_plans: false,
             tune_table: None,
             stream_gbps: None,
+            shard_workers: 0,
+            shard_min_n: 0,
             admission_budget_ms: 0,
             job_timeout_ms: 2000,
             trace: false,
@@ -230,6 +243,12 @@ impl ServeConfig {
         if let Some(v) = root.get("explain_plans").and_then(Json::as_bool) {
             self.explain_plans = v;
         }
+        if let Some(v) = json_count(root, "shard_workers")? {
+            self.shard_workers = v;
+        }
+        if let Some(v) = json_count(root, "shard_min_n")? {
+            self.shard_min_n = v;
+        }
         if let Some(v) = json_count(root, "admission_budget_ms")? {
             self.admission_budget_ms = v as u64;
         }
@@ -286,6 +305,8 @@ impl ServeConfig {
         if a.flag("explain-plans") {
             self.explain_plans = true;
         }
+        self.shard_workers = a.get("shard-workers", self.shard_workers).map_err(|e| anyhow!(e))?;
+        self.shard_min_n = a.get("shard-min-n", self.shard_min_n).map_err(|e| anyhow!(e))?;
         self.admission_budget_ms =
             a.get("admission-budget-ms", self.admission_budget_ms).map_err(|e| anyhow!(e))?;
         self.job_timeout_ms =
@@ -454,6 +475,27 @@ mod tests {
         assert!(c.apply_json(&negthr).is_err());
         // The config object is left untouched by a rejected key.
         assert_eq!(c.max_batch, ServeConfig::default().max_batch);
+    }
+
+    #[test]
+    fn shard_knobs_round_trip() {
+        let d = ServeConfig::default();
+        assert_eq!(d.shard_workers, 0, "sharding auto-sizes by default");
+        assert_eq!(d.shard_min_n, 0, "crossover auto-derives by default");
+        let j = Json::parse(r#"{"shard_workers": 4, "shard_min_n": 131072}"#).unwrap();
+        let mut c = ServeConfig::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.shard_workers, 4);
+        assert_eq!(c.shard_min_n, 131072);
+        let a = Args::parse(
+            ["--shard-workers", "1", "--shard-min-n", "65536"].iter().map(|s| s.to_string()),
+        );
+        let mut c2 = ServeConfig::default();
+        c2.apply_args(&a).unwrap();
+        assert_eq!(c2.shard_workers, 1, "1 = sharding off");
+        assert_eq!(c2.shard_min_n, 65536);
+        let neg = Json::parse(r#"{"shard_workers": -2}"#).unwrap();
+        assert!(ServeConfig::default().apply_json(&neg).is_err());
     }
 
     #[test]

@@ -39,6 +39,7 @@ use std::time::Duration;
 use crate::config::ServeConfig;
 use crate::costmodel;
 use crate::sampling::SamplingParams;
+use crate::softmax::batch::available_threads;
 use crate::softmax::Algorithm;
 
 use super::request::{Payload, Rejected};
@@ -72,6 +73,11 @@ pub struct Admission {
     budget_secs: f64,
     gbps: f64,
     algorithm: Algorithm,
+    /// Intra-row sharding knobs, mirroring the planner's resolution.
+    /// `shard_workers <= 1` keeps every price serial; `shard_min_n == 0`
+    /// derives the crossover from bandwidth per payload dtype.
+    shard_workers: usize,
+    shard_min_n: usize,
     /// Predicted seconds of admitted-but-unfinished work.  A `Mutex<f64>`
     /// (not atomics): the critical sections are a handful of arithmetic
     /// ops, and admission runs on client threads, never inside a kernel.
@@ -84,8 +90,19 @@ impl Admission {
             budget_secs: budget.as_secs_f64(),
             gbps: if gbps > 0.0 { gbps } else { DEFAULT_GBPS },
             algorithm,
+            shard_workers: 1,
+            shard_min_n: 0,
             queued_secs: Mutex::new(0.0),
         }
+    }
+
+    /// Enable sharded pricing: single-row shapes the planner would
+    /// column-shard are charged their (shorter) split drain time instead
+    /// of the serial one.
+    pub fn with_sharding(mut self, workers: usize, min_n: usize) -> Admission {
+        self.shard_workers = workers.max(1);
+        self.shard_min_n = min_n;
+        self
     }
 
     /// Build from config: `None` when `admission_budget_ms` is 0 (off).
@@ -95,26 +112,65 @@ impl Admission {
         if cfg.admission_budget_ms == 0 {
             return None;
         }
-        Some(Admission::new(
-            Duration::from_millis(cfg.admission_budget_ms),
-            cfg.stream_gbps.unwrap_or(DEFAULT_GBPS),
-            cfg.algorithm,
-        ))
+        Some(
+            Admission::new(
+                Duration::from_millis(cfg.admission_budget_ms),
+                cfg.stream_gbps.unwrap_or(DEFAULT_GBPS),
+                cfg.algorithm,
+            )
+            .with_sharding(
+                // Same resolution `Planner::build` applies to the knob.
+                match cfg.shard_workers {
+                    0 if cfg.batch_threads == 0 => available_threads(),
+                    0 => cfg.batch_threads,
+                    w => w,
+                },
+                cfg.shard_min_n,
+            ),
+        )
     }
 
     /// Predicted seconds one request costs to serve.  Normalization
     /// requests move the algorithm's full per-element traffic; decode
     /// requests are priced at the accumulation pass's single read of the
     /// row (the fused path's whole point — no store pass ever runs).
+    /// Rows the planner would column-shard are priced at their split
+    /// drain time so a sharded 1M-row is charged what it actually
+    /// occupies, not its serial duration.
     pub fn price(&self, payload: &Payload) -> f64 {
         let n = payload.len().max(1);
         let esz = payload.dtype().size();
+        let shards = self.shard_workers_for(n, esz);
         match payload {
-            Payload::Decode { .. } | Payload::DecodeHalf { .. } => {
-                (n * esz) as f64 / (self.gbps * 1e9)
-            }
-            _ => costmodel::predict_batch_secs(self.algorithm, 1, n, esz, self.gbps),
+            Payload::Decode { .. } | Payload::DecodeHalf { .. } => match shards {
+                Some(w) => costmodel::predict_split_secs(n * esz, 1, w, self.gbps),
+                None => (n * esz) as f64 / (self.gbps * 1e9),
+            },
+            _ => match shards {
+                // Only the two-pass (m, n) form has a sharded execution.
+                Some(w) if self.algorithm == Algorithm::TwoPass => {
+                    costmodel::predict_sharded_secs(self.algorithm, 1, n, esz, w, self.gbps)
+                }
+                _ => costmodel::predict_batch_secs(self.algorithm, 1, n, esz, self.gbps),
+            },
         }
+    }
+
+    /// Worker count the planner would shard one `n`-column row across,
+    /// `None` when the row stays serial.  Mirrors plan eligibility for
+    /// the single-row requests admission prices.  Accuracy is not
+    /// visible at this layer, so this assumes the (default) Fast tier;
+    /// the Accurate tier never shards, and its requests are then priced
+    /// slightly short — within the cost model's own error.
+    fn shard_workers_for(&self, n: usize, esz: usize) -> Option<usize> {
+        if self.shard_workers <= 1 {
+            return None;
+        }
+        let min_n = match self.shard_min_n {
+            0 => costmodel::shard_crossover_n(self.gbps, esz),
+            m => m,
+        };
+        (n >= min_n.max(1)).then_some(self.shard_workers)
     }
 
     /// Admit or reject one arrival (see the module docs for the decision
@@ -240,6 +296,27 @@ mod tests {
         let cost = a.price(&payload(16384));
         a.release(cost);
         a.try_admit(&payload(16384), None).expect("freed budget readmits");
+    }
+
+    #[test]
+    fn sharded_shapes_price_their_split_drain_time() {
+        let serial = adm(100);
+        let sharded = Admission::new(Duration::from_millis(100), 1.0, Algorithm::TwoPass)
+            .with_sharding(4, 1 << 20);
+        // Below the crossover: bit-identical arithmetic to the serial path.
+        assert_eq!(serial.price(&payload(16384)), sharded.price(&payload(16384)));
+        // Past it, the split price (bytes/4 + dispatch) undercuts serial.
+        let n = 1 << 22;
+        let s = serial.price(&payload(n));
+        let p = sharded.price(&payload(n));
+        assert!(p < s, "sharded {p}s should undercut serial {s}s");
+        let expect = costmodel::predict_sharded_secs(Algorithm::TwoPass, 1, n, 4, 4, 1.0);
+        assert!((p - expect).abs() < 1e-12);
+        // Fused decode shards too: one read pass split four ways.
+        let dec = Payload::Decode { logits: vec![0.0; n], params: SamplingParams::default() };
+        let dp = sharded.price(&dec);
+        let dexpect = costmodel::predict_split_secs(n * 4, 1, 4, 1.0);
+        assert!((dp - dexpect).abs() < 1e-12);
     }
 
     #[test]

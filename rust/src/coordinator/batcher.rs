@@ -34,6 +34,11 @@ pub struct Batcher {
     pub capacity: usize,
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Plan-aware early flush: once the head-of-line cohort spans this
+    /// many elements it is already past the planner's parallel
+    /// threshold, so extra batchmates cannot change its placement —
+    /// they only add queue latency.  `None` means count/age-only policy.
+    pub flush_elems: Option<usize>,
 }
 
 impl Batcher {
@@ -44,7 +49,14 @@ impl Batcher {
             capacity,
             max_batch: max_batch.max(1),
             max_wait,
+            flush_elems: None,
         }
+    }
+
+    /// Attach the planner's flush-size hint (see `flush_elems`).
+    pub fn with_flush_hint(mut self, elems: Option<usize>) -> Batcher {
+        self.flush_elems = elems;
+        self
     }
 
     /// Enqueue a request (backpressure-checked).
@@ -90,9 +102,13 @@ impl Batcher {
             // Head-of-line request defines the batch key.
             let key = st.queue.front().unwrap().batch_key();
             let age = st.queue.front().unwrap().enqueued.elapsed();
+            let row_elems = st.queue.front().unwrap().payload.len();
             let matching = st.queue.iter().filter(|r| r.batch_key() == key).count();
+            let saturated = self
+                .flush_elems
+                .is_some_and(|t| matching.min(self.max_batch).saturating_mul(row_elems) >= t);
 
-            if matching >= self.max_batch || age >= self.max_wait || st.shutdown {
+            if matching >= self.max_batch || saturated || age >= self.max_wait || st.shutdown {
                 // Flush now: extract up to max_batch same-key requests.
                 let mut batch = Vec::with_capacity(matching.min(self.max_batch));
                 let mut i = 0;
@@ -148,6 +164,31 @@ mod tests {
         let batch = b.take_batch().unwrap();
         assert_eq!(batch.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn flush_hint_skips_the_wait() {
+        // One pool-saturating request: with a hint at or below its element
+        // count the batcher flushes immediately instead of waiting out the
+        // 10 s age deadline (the test would time out otherwise).
+        let b = Batcher::new(64, 8, Duration::from_secs(10)).with_flush_hint(Some(4096));
+        b.push(req(1, 4096)).unwrap();
+        let t0 = crate::obs::clock::now();
+        let batch = b.take_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(2));
+    }
+
+    #[test]
+    fn flush_hint_accumulates_across_cohort() {
+        // Two same-key requests of 100 elems each: 100 < 150 so the first
+        // alone keeps waiting, but the cohort of two (200 elems) crosses
+        // the hint and flushes together, under max_batch and max_wait.
+        let b = Batcher::new(64, 8, Duration::from_secs(10)).with_flush_hint(Some(150));
+        b.push(req(1, 100)).unwrap();
+        b.push(req(2, 100)).unwrap();
+        let batch = b.take_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
     }
 
     #[test]

@@ -75,11 +75,13 @@ impl Coordinator {
         // A serving coordinator always wants per-pass bandwidth accounting
         // (sticky, process-global; one-shot CLI paths leave it off).
         obs::enable_passes();
-        let batcher = Arc::new(Batcher::new(
-            cfg.queue_capacity,
-            cfg.max_batch,
-            Duration::from_micros(cfg.max_wait_us),
-        ));
+        // The batcher consults the planner's parallel threshold: a cohort
+        // that already saturates the pool flushes without waiting out
+        // `max_wait_us` (pure count/age policy when the hint is unknown).
+        let batcher = Arc::new(
+            Batcher::new(cfg.queue_capacity, cfg.max_batch, Duration::from_micros(cfg.max_wait_us))
+                .with_flush_hint(router.flush_hint_elems()),
+        );
         let metrics = Arc::new(Metrics::default());
         // The router's execution planner reports its plan-cache hits and
         // misses through the coordinator metrics.

@@ -187,6 +187,14 @@ impl Router {
         }
     }
 
+    /// The planner's batch flush-size hint, for the batcher (elements).
+    pub fn flush_hint_elems(&self) -> Option<usize> {
+        match self {
+            Router::Native(e) => e.planner.flush_hint_elems(),
+            Router::Pjrt { native, .. } => native.planner.flush_hint_elems(),
+        }
+    }
+
     /// Build from config (starts the PJRT service for the pjrt backend).
     pub fn from_config(cfg: &ServeConfig) -> Result<Router> {
         let native = NativeEngine::from_config(cfg);

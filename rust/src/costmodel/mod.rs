@@ -82,6 +82,62 @@ pub fn choose_static(rows: usize, n: usize, elem_bytes: usize, l2_bytes: usize) 
     }
 }
 
+/// Per-shard dispatch overhead (seconds) of the intra-row sharded path:
+/// one pool hand-off, one per-unit accumulator writeback, and the
+/// submitter's share of the exact `(m, n)` fold.  A conservative constant
+/// (measured hand-offs on the pool are tens of microseconds); the
+/// crossover it implies errs toward keeping mid-size rows serial.
+pub const SHARD_DISPATCH_SECS: f64 = 30e-6;
+
+/// Crossover `n` (columns) above which splitting a single row's vocab
+/// across ≥ 2 pool workers is predicted to win: the half of the serial
+/// two-pass time (3N traffic) a 2-way split saves must exceed one
+/// dispatch overhead per pass round.  Byte-keyed, so half-width rows
+/// cross at twice the element count.
+pub fn shard_crossover_n(gbps: f64, elem_bytes: usize) -> usize {
+    let bandwidth_n = cost(Algorithm::TwoPass).bandwidth_n as f64;
+    let passes = Pass::of_algorithm(Algorithm::TwoPass).len() as f64;
+    // serial/2 ≥ passes · overhead  ⇔  n ≥ 2 · passes · OH · B / (3 · esz)
+    let n = 2.0 * passes * SHARD_DISPATCH_SECS * gbps * 1e9
+        / (bandwidth_n * elem_bytes as f64);
+    n.ceil() as usize
+}
+
+/// Fallback sharding crossover when no bandwidth measurement exists yet:
+/// a deliberately conservative quarter-million columns (≈ 3× the modeled
+/// crossover at the 8 GB/s admission default) — without a measurement,
+/// err toward keeping rows serial.
+pub const SHARD_FALLBACK_CROSSOVER_N: usize = 1 << 18;
+
+/// Predicted runtime of moving `bytes` through `passes` pass rounds split
+/// across `workers` concurrent shards at `gbps` *per worker*: perfect
+/// bandwidth scaling (the optimistic bound, like the paper's Table-2
+/// predictions) plus one [`SHARD_DISPATCH_SECS`] per pass round.
+pub fn predict_split_secs(bytes: usize, passes: usize, workers: usize, gbps: f64) -> f64 {
+    bytes as f64 / (workers.max(1) as f64 * gbps * 1e9)
+        + passes as f64 * SHARD_DISPATCH_SECS
+}
+
+/// [`predict_batch_secs`] for the intra-row sharded path: the batch's
+/// Table-2 bytes split across `workers` shards plus the per-pass dispatch
+/// overhead.  Admission control prices sharded shapes with this so a
+/// sharded 1M-row is charged its actual (shorter) drain time.
+pub fn predict_sharded_secs(
+    alg: Algorithm,
+    rows: usize,
+    n: usize,
+    elem_bytes: usize,
+    workers: usize,
+    gbps: f64,
+) -> f64 {
+    predict_split_secs(
+        batch_bytes(alg, rows, n, elem_bytes),
+        Pass::of_algorithm(alg).len(),
+        workers,
+        gbps,
+    )
+}
+
 /// Predicted speedup of the two-pass algorithm over `other` in the
 /// bandwidth-bound limit (upper bound per paper §5: "we should treat these
 /// numbers as upper bounds").
@@ -166,6 +222,25 @@ mod tests {
         assert_eq!(choose_static(1, 2 * edge_n, 2, l2), Algorithm::ThreePassReload);
         // Overflow-safe on absurd shapes.
         assert_eq!(choose_static(usize::MAX, usize::MAX, 4, l2), Algorithm::TwoPass);
+    }
+
+    #[test]
+    fn shard_crossover_is_where_a_two_way_split_breaks_even() {
+        // At the crossover, halving the serial time saves exactly the
+        // per-pass dispatch overhead; past it, sharding predicts faster.
+        let g = 10.0;
+        let n = shard_crossover_n(g, 4);
+        assert_eq!(n, 100_000, "2 passes × 30µs at 10 GB/s, 3N f32 traffic");
+        let serial = predict_batch_secs(Algorithm::TwoPass, 1, n, 4, g);
+        let split = predict_sharded_secs(Algorithm::TwoPass, 1, n, 4, 2, g);
+        assert!((split - serial).abs() < 2e-6, "break-even: {split} vs {serial}");
+        let past = predict_sharded_secs(Algorithm::TwoPass, 1, 4 * n, 4, 2, g);
+        assert!(past < predict_batch_secs(Algorithm::TwoPass, 1, 4 * n, 4, g));
+        // Byte-keyed: half-width rows cross at twice the element count.
+        assert_eq!(shard_crossover_n(g, 2), 2 * n);
+        // More workers only help (the model is monotone in workers).
+        let w4 = predict_sharded_secs(Algorithm::TwoPass, 1, 4 * n, 4, 4, g);
+        assert!(w4 < past);
     }
 
     #[test]

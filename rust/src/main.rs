@@ -51,9 +51,10 @@ USAGE:
         [--algorithm twopass|reload|recompute|online] [--host NAME] [--out FILE]
         [--projected (cost-model numbers only — no measurement)] [--gbps B]
         (one normalized BENCH_<host>.json: GB/s + tokens/s per dtype,
-         plan-cache hit rate, and overload saturation goodput at 2x
-         offered load; --projected derives every number from the
-         Table-2 cost model at --gbps instead of timing kernels)
+         plan-cache hit rate, overload saturation goodput at 2x offered
+         load, and a single-row latency sweep over vocab size x shard
+         count; --projected derives every number from the Table-2 cost
+         model at --gbps instead of timing kernels)
   repro serve [--backend native|pjrt]
         [--algorithm twopass|reload|recompute|online (pins the algorithm;
          the default lets the planner pick per shape)] [--no-algo-auto]
@@ -433,6 +434,59 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
     };
 
+    // Single-row latency sweep: the intra-row sharding headline.  One f32
+    // row per vocab size, serial (workers = 1) against column-sharded;
+    // projected mode prices the sharded path with the same split model
+    // admission trusts, measured mode times the real pool (a host with
+    // one core serializes the shards, so its sharded points only show
+    // the dispatch overhead — regenerate on target hardware).
+    let shard_counts = [1usize, 2, 4, 8];
+    let mut single_row = Vec::new();
+    println!("  single-row latency (f32 normalize, serial vs column-sharded):");
+    for sn in [1usize << 16, 1 << 18, 1 << 20, 1 << 21] {
+        let mut serial_secs = 0.0f64;
+        let mut line = format!("    n={sn:>8}:");
+        for w in shard_counts {
+            let secs = if projected {
+                if w == 1 {
+                    costmodel::predict_batch_secs(alg, 1, sn, 4, gbps_assumed)
+                } else {
+                    costmodel::predict_sharded_secs(alg, 1, sn, 4, w, gbps_assumed)
+                }
+            } else {
+                // `min_n = 1` pins eligibility to the worker knob alone so
+                // the sweep exercises every point below the auto crossover.
+                let p = Planner::new(alg, isa, usize::MAX, 1)
+                    .with_shard_workers(w)
+                    .with_shard_min_n(1);
+                let plan = p.plan_dtype(PlanOp::Normalize, Dtype::F32, 1, sn);
+                let xrow = dist.generate(sn, &mut rng);
+                let mut x = RowBatch::with_capacity_dtype(1, sn, Dtype::F32);
+                x.push_row_quantized(&xrow).map_err(|e| anyhow!("{e}"))?;
+                let mut y = RowBatch::new_with_dtype(1, sn, Dtype::F32);
+                stats::measure_median(
+                    || {
+                        softmax_batch_planned(&plan, &x, &mut y).unwrap();
+                        std::hint::black_box(&y);
+                    },
+                    reps,
+                    min_time,
+                )
+            };
+            if w == 1 {
+                serial_secs = secs;
+            }
+            line.push_str(&format!(" {w}w {:8.1}us", secs * 1e6));
+            single_row.push(json_obj! {
+                "latency_us" => Json::Num(r3(secs * 1e6)),
+                "n" => Json::Num(sn as f64),
+                "speedup_vs_serial" => Json::Num(r3(serial_secs / secs)),
+                "workers" => Json::Num(w as f64),
+            });
+        }
+        println!("{line}");
+    }
+
     let out = json_obj! {
         "algorithm" => Json::Str(alg.to_string()),
         "dtypes" => Json::Arr(dts),
@@ -456,6 +510,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ),
         "rows" => Json::Num(rows as f64),
         "schema" => Json::Str("two-pass-softmax-bench-v1".to_string()),
+        "single_row_latency" => Json::Arr(single_row),
         "stream_gbps" => Json::Num(r3(stream_gbps)),
     };
     let path = match args.opt("out") {

@@ -138,6 +138,13 @@ impl Trace {
                         "accum_extexp" => "pass:accum_extexp",
                         "scale_extexp" => "pass:scale_extexp",
                         "fused_scan" => "pass:fused_scan",
+                        // Column-sharded executions: recorded once per
+                        // pass at the submitting thread (whole-row
+                        // bytes), never per shard, so a sharded pass is
+                        // one span here exactly like a serial one.
+                        "accum_extexp#shard" => "pass:accum_extexp#shard",
+                        "scale_extexp#shard" => "pass:scale_extexp#shard",
+                        "fused_scan#shard" => "pass:fused_scan#shard",
                         _ => "pass:other",
                     };
                     self.span_us(stage, start, end);

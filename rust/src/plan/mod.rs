@@ -55,7 +55,8 @@ use crate::config::{Backend, ServeConfig};
 use crate::costmodel;
 use crate::softmax::batch::available_threads;
 use crate::softmax::tuning::{
-    default_best_unroll, measured_parallel_threshold, TuneTable, MIN_PARALLEL_THRESHOLD,
+    default_best_unroll, derive_parallel_threshold, measured_parallel_threshold, TuneTable,
+    MIN_PARALLEL_THRESHOLD,
 };
 use crate::softmax::{Accuracy, Algorithm, Dtype, Isa, Pass};
 
@@ -174,6 +175,58 @@ fn default_numa_node() -> usize {
     })
 }
 
+/// One column range of an intra-row (vocab-sharded) execution.
+///
+/// When a batch is small in rows but large in `n` (a single 1M-token row),
+/// row-chunking leaves the pool idle; instead the planner splits each
+/// *row* into contiguous column shards, one pool worker per shard.  Shard
+/// boundaries are aligned to the merge-unit grid
+/// ([`crate::softmax::merge::MERGE_UNIT_COLS`]) and workers return one
+/// `(m, n)` accumulator *per unit*, so the submitting thread folds the
+/// same unit sequence the serial path folds — bit-identical results for
+/// every shard count and worker assignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// First column of the shard (a multiple of `MERGE_UNIT_COLS`).
+    pub first_col: usize,
+    /// Columns in the shard (a multiple of `MERGE_UNIT_COLS` except for
+    /// the last shard, which ends at `n`).
+    pub cols: usize,
+    /// Pool worker index the shard is assigned to (informational — the
+    /// pool round-robins lanes; the index makes layouts deterministic in
+    /// plan text and tests).
+    pub worker: usize,
+}
+
+/// Split a row of `n` columns into up to `workers` contiguous,
+/// unit-aligned column shards — the one intra-row split rule every
+/// sharded workload (normalize pass 1/2, accum, fused decode) shares.
+///
+/// Returns an empty layout (= run unsharded) when fewer than two shards
+/// would result: `workers ≤ 1`, or the row has only one merge unit.  A
+/// non-empty layout always has ≥ 2 shards, covers exactly `[0, n)`, and
+/// assigns whole units: ceil(units / workers) units per shard, last
+/// shard short.
+pub fn shard_layout(n: usize, workers: usize) -> Vec<ShardPlan> {
+    use crate::softmax::merge::MERGE_UNIT_COLS;
+    let units = n.div_ceil(MERGE_UNIT_COLS);
+    if workers <= 1 || units <= 1 {
+        return Vec::new();
+    }
+    let per = units.div_ceil(workers.min(units));
+    let mut out = Vec::with_capacity(units.div_ceil(per));
+    let mut u0 = 0usize;
+    let mut worker = 0usize;
+    while u0 < units {
+        let uc = per.min(units - u0);
+        let first_col = u0 * MERGE_UNIT_COLS;
+        out.push(ShardPlan { first_col, cols: (n - first_col).min(uc * MERGE_UNIT_COLS), worker });
+        worker += 1;
+        u0 += uc;
+    }
+    out
+}
+
 // ---------------------------------------------------------------------------
 // The plan.
 // ---------------------------------------------------------------------------
@@ -274,6 +327,13 @@ pub struct ExecPlan {
     pub threads: usize,
     /// Row chunks when pooled (`threads > 1`); empty otherwise.
     pub chunks: Vec<ChunkPlan>,
+    /// Intra-row column shards ([`shard_layout`]) for small-rows/large-n
+    /// shapes: non-empty (≥ 2 shards) only when the batch did not
+    /// row-chunk, the tier is `Fast`, the algorithm is two-pass, and `n`
+    /// clears the sharding crossover.  Each *row* of the batch is split
+    /// across these column ranges on the pool; per-unit `(m, n)` partials
+    /// fold exactly, so sharded results are bit-identical to unsharded.
+    pub shards: Vec<ShardPlan>,
     /// pjrt bucketing: the power-of-two padded row count, `Some` only
     /// when the planner was configured for a bucketing pjrt backend.
     pub bucket_rows: Option<usize>,
@@ -297,9 +357,15 @@ pub struct ExecPlan {
 }
 
 impl ExecPlan {
-    /// Whether the plan hands the batch to the persistent worker pool.
+    /// Whether the plan hands the batch to the persistent worker pool —
+    /// by row chunks (`threads > 1`) or by intra-row column shards.
     pub fn pooled(&self) -> bool {
-        self.threads > 1
+        self.threads > 1 || !self.shards.is_empty()
+    }
+
+    /// Whether the plan splits rows across column shards.
+    pub fn sharded(&self) -> bool {
+        !self.shards.is_empty()
     }
 
     /// The plan in the line-oriented text schema of `docs/FORMATS.md`
@@ -338,6 +404,18 @@ impl fmt::Display for ExecPlan {
                 c.numa_node
             )?;
         }
+        if !self.shards.is_empty() {
+            writeln!(f, "shards {}", self.shards.len())?;
+            for (i, s) in self.shards.iter().enumerate() {
+                writeln!(
+                    f,
+                    "shard {i} cols={}..{} worker={}",
+                    s.first_col,
+                    s.first_col + s.cols,
+                    s.worker
+                )?;
+            }
+        }
         match self.bucket_rows {
             Some(b) => writeln!(f, "bucket_rows {b}")?,
             None => writeln!(f, "bucket_rows none")?,
@@ -374,6 +452,13 @@ struct BuildInputs<'a> {
     gbps: Option<f64>,
     tune: Option<&'a TuneTable>,
     job_timeout: Option<Duration>,
+    /// Pool workers available for intra-row column sharding (0 or 1 =
+    /// sharding off — what [`adhoc`] passes: the compatibility wrappers
+    /// keep the historical row-chunk-only behavior).
+    shard_workers: usize,
+    /// Minimum `n` (columns) before a row shards — the cost-model
+    /// crossover or the configured override, already resolved.
+    shard_min_n: usize,
 }
 
 /// The one pow2 bucketing rule (shared by [`build_plan`] and
@@ -396,6 +481,23 @@ fn build_plan(inp: BuildInputs<'_>) -> ExecPlan {
     let esz = inp.dtype.size();
     let threads = plan_threads(inp.rows, inp.n, inp.threshold_elems, inp.max_threads);
     let chunks = if threads > 1 { chunk_layout(inp.rows, threads) } else { Vec::new() };
+    // Intra-row column sharding: only when row-chunking left the batch on
+    // the submitting thread (small rows), rows don't cover the workers,
+    // the tier is Fast (the accurate tier is sequential by definition),
+    // the algorithm is the two-pass `(m, n)` representation (the only one
+    // whose partials merge exactly), and `n` clears the crossover where
+    // the bandwidth saved beats the shard dispatch overhead.
+    let shards = if threads <= 1
+        && inp.shard_workers > 1
+        && inp.rows < inp.shard_workers
+        && inp.accuracy == Accuracy::Fast
+        && inp.algorithm == Algorithm::TwoPass
+        && inp.n >= inp.shard_min_n.max(1)
+    {
+        shard_layout(inp.n, inp.shard_workers)
+    } else {
+        Vec::new()
+    };
     // NT is a whole-batch decision (chunks inherit it), only meaningful
     // for the out-of-place store pass; the reload algorithm's final pass
     // re-reads its output and ignores it inside the kernel.  Byte-keyed:
@@ -425,7 +527,12 @@ fn build_plan(inp: BuildInputs<'_>) -> ExecPlan {
             (r + w) * inp.rows * inp.n * esz
         }
     };
-    let predicted_secs = inp.gbps.map(|g| predicted_bytes as f64 / (g * 1e9));
+    // A sharded execution moves the same bytes but across `shards.len()`
+    // workers, plus per-shard dispatch overhead (the crossover model).
+    let predicted_secs = inp.gbps.map(|g| match shards.len() {
+        0 | 1 => predicted_bytes as f64 / (g * 1e9),
+        w => costmodel::predict_split_secs(predicted_bytes, passes.len(), w, g),
+    });
     let bucket_rows = match inp.op {
         PlanOp::Normalize | PlanOp::NormalizeInPlace => pow2_bucket(inp.bucket_pow2, inp.rows),
         PlanOp::Accum | PlanOp::Decode => None,
@@ -445,6 +552,7 @@ fn build_plan(inp: BuildInputs<'_>) -> ExecPlan {
         threshold_elems: inp.threshold_elems,
         threads,
         chunks,
+        shards,
         bucket_rows,
         predicted_bytes,
         gbps: inp.gbps,
@@ -499,6 +607,8 @@ pub fn adhoc_dtype(
         gbps: None,
         tune: None,
         job_timeout: None,
+        shard_workers: 0,
+        shard_min_n: 0,
     })
 }
 
@@ -617,6 +727,13 @@ pub struct Planner {
     bucket_pow2: bool,
     tune: Option<TuneTable>,
     stream_gbps: Option<f64>,
+    /// Pool workers for intra-row column sharding; 0 = auto (the resolved
+    /// `batch_threads`).  Sharding needs ≥ 2 resolved workers to engage.
+    shard_workers: usize,
+    /// Minimum `n` before a small-rows batch shards its rows across
+    /// columns; 0 = auto (the cost-model crossover
+    /// [`costmodel::shard_crossover_n`] at the known bandwidth).
+    shard_min_n: usize,
     /// Per-job pool heartbeat carried into every plan (`None` = off).
     job_timeout: Option<Duration>,
     /// Print each freshly built plan (serve `--explain-plans`).
@@ -642,6 +759,8 @@ impl Planner {
             bucket_pow2: false,
             tune: None,
             stream_gbps: None,
+            shard_workers: 0,
+            shard_min_n: 0,
             job_timeout: None,
             explain: false,
             counters: Arc::new(PlanCacheCounters::default()),
@@ -657,6 +776,8 @@ impl Planner {
         p.algo_auto = cfg.algo_auto;
         p.bucket_pow2 = cfg.backend == Backend::Pjrt && cfg.bucket_pow2;
         p.stream_gbps = cfg.stream_gbps;
+        p.shard_workers = cfg.shard_workers;
+        p.shard_min_n = cfg.shard_min_n;
         p.job_timeout = match cfg.job_timeout_ms {
             0 => None,
             ms => Some(Duration::from_millis(ms)),
@@ -709,6 +830,20 @@ impl Planner {
     /// Arm the per-job pool heartbeat (`None` = off, the default).
     pub fn with_job_timeout(mut self, timeout: Option<Duration>) -> Planner {
         self.job_timeout = timeout;
+        self
+    }
+
+    /// Set the worker count for intra-row column sharding (0 = auto: the
+    /// resolved `batch_threads`; 1 = sharding off).
+    pub fn with_shard_workers(mut self, workers: usize) -> Planner {
+        self.shard_workers = workers;
+        self
+    }
+
+    /// Override the sharding crossover `n` (0 = auto: the cost model's
+    /// crossover at the known bandwidth).
+    pub fn with_shard_min_n(mut self, min_n: usize) -> Planner {
+        self.shard_min_n = min_n;
         self
     }
 
@@ -800,6 +935,21 @@ impl Planner {
         (thr, Some(gbps))
     }
 
+    /// The element count past which waiting for more batchmates stops
+    /// paying: once a same-key cohort spans this many elements the
+    /// executed batch is already past the parallel threshold, so extra
+    /// members no longer change its placement — they only add queue
+    /// latency.  Returns the configured threshold when one is pinned,
+    /// a bandwidth-derived one when STREAM bandwidth is already known,
+    /// and `None` in full auto mode — deliberately never triggering the
+    /// STREAM measurement, since this is read at coordinator startup.
+    pub fn flush_hint_elems(&self) -> Option<usize> {
+        match self.parallel_threshold {
+            0 => self.stream_gbps.map(derive_parallel_threshold),
+            t => Some(t),
+        }
+    }
+
     fn build(&self, op: PlanOp, dtype: Dtype, rows: usize, n: usize, acc: Accuracy) -> ExecPlan {
         // Accum and decode are defined on the two-pass (m, n)
         // representation whatever algorithm normalization is configured
@@ -816,6 +966,20 @@ impl Planner {
             }
         };
         let (threshold_elems, gbps) = self.resolve_threshold(rows, n);
+        // Shard knobs resolve here — not in `build_plan` — so the layout
+        // stays a pure function of (shape, planner config) and the cache
+        // key needs no extension: one planner, one layout per shape.
+        let shard_workers = match self.shard_workers {
+            0 if self.batch_threads == 0 => available_threads(),
+            0 => self.batch_threads,
+            w => w,
+        };
+        let shard_min_n = match self.shard_min_n {
+            0 => gbps
+                .map(|g| costmodel::shard_crossover_n(g, dtype.size()))
+                .unwrap_or(costmodel::SHARD_FALLBACK_CROSSOVER_N),
+            m => m,
+        };
         build_plan(BuildInputs {
             op,
             algorithm,
@@ -831,6 +995,8 @@ impl Planner {
             gbps,
             tune: self.tune.as_ref(),
             job_timeout: self.job_timeout,
+            shard_workers,
+            shard_min_n,
         })
     }
 
@@ -1073,6 +1239,89 @@ mod tests {
         assert!(off.plan(PlanOp::NormalizeInPlace, 8, 1024).job_timeout.is_none());
         let a = adhoc(PlanOp::Decode, Algorithm::TwoPass, Isa::Scalar, 4, 64, 1, 2);
         assert!(a.job_timeout.is_none(), "adhoc plans never arm the heartbeat");
+    }
+
+    #[test]
+    fn shard_layout_is_unit_aligned_and_covers_the_row() {
+        use crate::softmax::merge::MERGE_UNIT_COLS;
+        // Single-unit rows and single workers never shard.
+        assert!(shard_layout(MERGE_UNIT_COLS, 8).is_empty());
+        assert!(shard_layout(4 * MERGE_UNIT_COLS, 1).is_empty());
+        for &workers in &[2usize, 3, 7, 16] {
+            for &n in &[
+                MERGE_UNIT_COLS + 1,
+                2 * MERGE_UNIT_COLS,
+                5 * MERGE_UNIT_COLS + 17,
+                33 * MERGE_UNIT_COLS - 1,
+            ] {
+                let shards = shard_layout(n, workers);
+                assert!(shards.len() >= 2, "n={n} workers={workers}");
+                assert!(shards.len() <= workers);
+                assert_eq!(shards[0].first_col, 0);
+                for w in shards.windows(2) {
+                    assert_eq!(w[0].first_col + w[0].cols, w[1].first_col, "contiguous");
+                    assert!(w[1].worker > w[0].worker);
+                }
+                let last = shards.last().unwrap();
+                assert_eq!(last.first_col + last.cols, n, "covers the row");
+                for s in &shards {
+                    assert_eq!(s.first_col % MERGE_UNIT_COLS, 0, "unit-aligned start");
+                    assert!(s.cols > 0);
+                }
+            }
+        }
+        // Deterministic: same inputs, same layout.
+        assert_eq!(shard_layout(1 << 20, 4), shard_layout(1 << 20, 4));
+    }
+
+    #[test]
+    fn small_rows_large_n_shapes_shard_and_the_text_names_them() {
+        let p = Planner::new(Algorithm::TwoPass, Isa::Scalar, usize::MAX, 4)
+            .with_shard_min_n(1 << 17);
+        let plan = p.plan(PlanOp::Decode, 1, 1 << 20);
+        assert_eq!(plan.shards.len(), 4, "16 units over 4 workers");
+        assert!(plan.sharded() && plan.pooled());
+        assert_eq!(plan.threads, 1, "sharding replaces row-chunking, never stacks on it");
+        let text = plan.to_text();
+        assert!(text.contains("shards 4"), "{text}");
+        assert!(text.contains("shard 0 cols=0..262144 worker=0"), "{text}");
+        // Below the crossover: unsharded, and the plan text stays silent.
+        let small = p.plan(PlanOp::Decode, 1, 1 << 16);
+        assert!(small.shards.is_empty());
+        assert!(!small.to_text().contains("shard"), "{}", small.to_text());
+        // Rows covering the workers row-chunk instead (or stay serial).
+        assert!(p.plan(PlanOp::Decode, 8, 1 << 20).shards.is_empty());
+        // The accurate tier is sequential by definition.
+        let acc = p.plan_dtype_acc(PlanOp::Decode, Dtype::F32, 1, 1 << 20, Accuracy::Accurate);
+        assert!(acc.shards.is_empty());
+        // A non-two-pass normalize algorithm cannot merge partials exactly.
+        let online = Planner::new(Algorithm::Online, Isa::Scalar, usize::MAX, 4)
+            .with_shard_min_n(1 << 17);
+        assert!(online.plan(PlanOp::Normalize, 1, 1 << 20).shards.is_empty());
+        // ...but its Decode plans pin two-pass and shard fine.
+        assert_eq!(online.plan(PlanOp::Decode, 1, 1 << 20).shards.len(), 4);
+        // Adhoc plans keep the historical row-chunk-only behavior.
+        let a = adhoc(PlanOp::Decode, Algorithm::TwoPass, Isa::Scalar, 1, 1 << 20, 0, 4);
+        assert!(a.shards.is_empty(), "adhoc plans never shard");
+        // Workers=1 disables sharding outright.
+        let w1 = Planner::new(Algorithm::TwoPass, Isa::Scalar, usize::MAX, 4)
+            .with_shard_min_n(1 << 17)
+            .with_shard_workers(1);
+        assert!(w1.plan(PlanOp::Decode, 1, 1 << 20).shards.is_empty());
+    }
+
+    #[test]
+    fn sharded_prediction_beats_serial_past_the_crossover() {
+        let p = Planner::new(Algorithm::TwoPass, Isa::Scalar, usize::MAX, 4)
+            .with_stream_gbps(Some(10.0));
+        // Auto crossover at a known bandwidth: a shape well past it
+        // shards and predicts faster than the serial prediction.
+        let n = 1 << 21;
+        let plan = p.plan(PlanOp::NormalizeInPlace, 1, n);
+        assert!(!plan.shards.is_empty(), "{n} must clear the 10 GB/s crossover");
+        let serial = plan.predicted_bytes as f64 / (10.0 * 1e9);
+        let sharded = plan.predicted_secs.unwrap();
+        assert!(sharded < serial, "sharded {sharded} vs serial {serial}");
     }
 
     #[test]

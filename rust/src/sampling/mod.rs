@@ -63,9 +63,12 @@ use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::plan::{self, ExecPlan, PlanOp};
-use crate::softmax::batch::{decode_chunked, note_scan_pass, PoolError, RowBatch};
+use crate::softmax::batch::{
+    decode_chunked, note_scan_pass, scan_row_sharded, PoolError, RowBatch,
+};
 use crate::softmax::exp::{extexp, ExtSum};
 use crate::softmax::kernels::{Element, KernelElement};
+use crate::softmax::merge::{merge_ext, MERGE_UNIT_COLS};
 use crate::softmax::{Accuracy, Algorithm, Isa};
 use crate::util::rng::Rng;
 use crate::with_elem;
@@ -242,13 +245,24 @@ pub struct Selector {
     k: usize,
     heap: Vec<Candidate>,
     thresh: f32,
+    idx_base: u32,
 }
 
 impl Selector {
     /// A selector keeping the `k` heaviest candidates (`k >= 1`).
     pub fn new(k: usize) -> Selector {
         let k = k.max(1);
-        Selector { k, heap: Vec::with_capacity(k), thresh: f32::NEG_INFINITY }
+        Selector { k, heap: Vec::with_capacity(k), thresh: f32::NEG_INFINITY, idx_base: 0 }
+    }
+
+    /// Offset added to every offered index.  Scan kernels offer indices
+    /// relative to the slice they traverse; unit-folded and sharded scans
+    /// set the unit's absolute starting column here so stored candidates
+    /// — and therefore tie-breaks and reported token ids — are always
+    /// row-absolute.
+    #[inline(always)]
+    pub(crate) fn set_idx_base(&mut self, base: u32) {
+        self.idx_base = base;
     }
 
     /// Scaled-logit prefilter: only elements with `x > threshold()` can
@@ -272,11 +286,11 @@ impl Selector {
         }
     }
 
-    /// Offer candidate `idx` (ascending across calls) with weight
-    /// `m · 2^n` and scaled logit `x`.
+    /// Offer candidate `idx` (ascending across calls, relative to the
+    /// current index base) with weight `m · 2^n` and scaled logit `x`.
     #[inline]
     pub fn offer(&mut self, idx: u32, m: f32, n: f32, x: f32) {
-        let cand = Candidate { idx, m, n, x };
+        let cand = Candidate { idx: self.idx_base + idx, m, n, x };
         if self.heap.len() < self.k {
             self.heap.push(cand);
             let mut i = self.heap.len() - 1;
@@ -362,12 +376,10 @@ pub fn scan_rows_total() -> usize {
 
 static SCAN_ROWS: AtomicUsize = AtomicUsize::new(0);
 
-/// One fused traversal of a row: pass-1 `(m, n)` accumulation and
-/// candidate selection share a single read of `x` — no writes anywhere.
-/// Generic over the storage element: half-width logits are widened to f32
-/// lanes on load inside the kernels, never materialized as an f32 row.
-fn scan_row<E: KernelElement>(isa: Isa, x: &[E], inv_t: f32, sel: &mut Selector) -> ExtSum {
-    SCAN_ROWS.fetch_add(1, Ordering::Relaxed);
+/// One kernel invocation over a contiguous slice (at most one merge
+/// unit when called from the folding paths): the per-ISA fused
+/// scan-select dispatch, without any pass accounting.
+fn scan_dispatch<E: KernelElement>(isa: Isa, x: &[E], inv_t: f32, sel: &mut Selector) -> ExtSum {
     match isa {
         Isa::Scalar => scalar::scan_select(x, inv_t, sel),
         #[cfg(target_arch = "x86_64")]
@@ -379,6 +391,67 @@ fn scan_row<E: KernelElement>(isa: Isa, x: &[E], inv_t: f32, sel: &mut Selector)
         #[cfg(not(target_arch = "x86_64"))]
         _ => unreachable!("non-scalar ISA unavailable on this arch"),
     }
+}
+
+/// One fused traversal of a row: pass-1 `(m, n)` accumulation and
+/// candidate selection share a single read of `x` — no writes anywhere.
+/// Generic over the storage element: half-width logits are widened to f32
+/// lanes on load inside the kernels, never materialized as an f32 row.
+///
+/// Rows wider than one [`MERGE_UNIT_COLS`] column unit are traversed
+/// unit by unit: the selector carries across units (its index base
+/// advanced so candidates stay row-absolute) and the per-unit `(m, n)`
+/// sums fold in unit order through the audited merge primitive — the
+/// same fixed grid and fold order the pass-1 dispatcher and the sharded
+/// decode path use, which is what makes serial and sharded decode agree
+/// bitwise on every row width.
+fn scan_row<E: KernelElement>(isa: Isa, x: &[E], inv_t: f32, sel: &mut Selector) -> ExtSum {
+    SCAN_ROWS.fetch_add(1, Ordering::Relaxed);
+    if x.len() <= MERGE_UNIT_COLS {
+        return scan_dispatch(isa, x, inv_t, sel);
+    }
+    let mut units = x.chunks(MERGE_UNIT_COLS);
+    let mut acc = scan_dispatch(isa, units.next().expect("row checked non-empty"), inv_t, sel);
+    let mut base = MERGE_UNIT_COLS;
+    for unit in units {
+        sel.set_idx_base(base as u32);
+        merge_ext(&mut acc, scan_dispatch(isa, unit, inv_t, sel));
+        base += MERGE_UNIT_COLS;
+    }
+    sel.set_idx_base(0);
+    acc
+}
+
+/// One shard's contribution to a sharded fused decode: the per-unit
+/// `(m, n)` sums in unit order within the shard (returned unfolded so
+/// the submitter can fold the whole row's units in one pass) plus the
+/// shard-local top-`k` survivors with row-absolute indices.
+#[derive(Debug, Default)]
+pub(crate) struct ShardScan {
+    pub sums: Vec<ExtSum>,
+    pub cands: Vec<Candidate>,
+}
+
+/// Scan one shard's column range for a sharded fused decode — the body
+/// of the batch engine's decode-shard jobs.  Runs the same per-unit
+/// kernels as [`scan_row`] with a shard-local selector whose index base
+/// tracks each unit's absolute starting column.  Does not touch the
+/// row-traversal counter: the submitting thread counts one traversal
+/// per sharded row, however many shards execute it.
+pub(crate) fn scan_shard_elems<E: KernelElement>(
+    isa: Isa,
+    x: &[E],
+    first_col: usize,
+    inv_t: f32,
+    k: usize,
+) -> ShardScan {
+    let mut sel = Selector::new(k);
+    let mut sums = Vec::with_capacity(x.len().div_ceil(MERGE_UNIT_COLS));
+    for (u, unit) in x.chunks(MERGE_UNIT_COLS).enumerate() {
+        sel.set_idx_base((first_col + u * MERGE_UNIT_COLS) as u32);
+        sums.push(scan_dispatch(isa, unit, inv_t, &mut sel));
+    }
+    ShardScan { sums, cands: sel.into_sorted() }
 }
 
 fn validate<E: KernelElement>(isa: Isa, x: &[E]) -> Result<(), SamplingError> {
@@ -507,21 +580,7 @@ fn nucleus<E: KernelElement>(
     loop {
         let mut sel = Selector::new(budget);
         let s = scan_row(isa, x, inv_t, &mut sel);
-        let lnz = s.ln();
-        let cands = sel.into_sorted();
-        let mut kept: Vec<(Candidate, f32, f64)> = Vec::with_capacity(cands.len());
-        let mut mass = 0.0f64;
-        let mut reached = false;
-        for c in cands {
-            let lp = ext_ln(c.m, c.n) - lnz;
-            let pr = (lp as f64).exp();
-            mass += pr;
-            kept.push((c, lp, pr));
-            if mass >= p as f64 {
-                reached = true;
-                break;
-            }
-        }
+        let (kept, mass, reached) = keep_by_mass(sel.into_sorted(), s.ln(), p);
         // top_k caps the candidate set even when the mass target is not
         // reached (standard top-k-then-top-p semantics); an unrestricted
         // nucleus instead grows the budget and rescans.
@@ -534,6 +593,55 @@ fn nucleus<E: KernelElement>(
             budget = n;
         }
     }
+}
+
+/// The mass truncation shared by the serial and sharded nucleus paths:
+/// walk weight-descending candidates accumulating normalized mass until
+/// it reaches `p`.  Returns the kept `(candidate, logprob, prob)`
+/// prefix, its mass, and whether the target was reached.
+#[allow(clippy::type_complexity)]
+fn keep_by_mass(
+    cands: Vec<Candidate>,
+    lnz: f32,
+    p: f32,
+) -> (Vec<(Candidate, f32, f64)>, f64, bool) {
+    let mut kept: Vec<(Candidate, f32, f64)> = Vec::with_capacity(cands.len());
+    let mut mass = 0.0f64;
+    let mut reached = false;
+    for c in cands {
+        let lp = ext_ln(c.m, c.n) - lnz;
+        let pr = (lp as f64).exp();
+        mass += pr;
+        kept.push((c, lp, pr));
+        if mass >= p as f64 {
+            reached = true;
+            break;
+        }
+    }
+    (kept, mass, reached)
+}
+
+/// The categorical draw over a kept candidate set — shared by the
+/// serial and sharded paths so the drawn token is a pure function of
+/// the (placement-independent) set, mass, and rng state.
+fn draw_from(
+    set: &[(Candidate, f32, f64)],
+    mass: f64,
+    rng: &mut Rng,
+) -> Result<Choice, SamplingError> {
+    if set.is_empty() {
+        return Err(SamplingError::NoCandidates);
+    }
+    let draw = rng.uniform() * mass;
+    let mut acc = 0.0f64;
+    for (c, lp, pr) in set {
+        acc += pr;
+        if draw < acc {
+            return Ok(Choice { token: c.idx, logprob: *lp });
+        }
+    }
+    let (c, lp, _) = set.last().expect("set checked non-empty above");
+    Ok(Choice { token: c.idx, logprob: *lp })
 }
 
 /// Sample one token from a logits row under `params` (deterministic in
@@ -589,19 +697,72 @@ pub fn sample_row_elems<E: KernelElement>(
         return Ok(Choice { token: idx as u32, logprob: ext_ln(m, n) - s.ln() });
     }
     let (set, mass) = nucleus(isa, x, inv_t, params.top_p, params.top_k)?;
-    if set.is_empty() {
-        return Err(SamplingError::NoCandidates);
-    }
-    let draw = rng.uniform() * mass;
-    let mut acc = 0.0f64;
-    for (c, lp, pr) in &set {
-        acc += pr;
-        if draw < acc {
-            return Ok(Choice { token: c.idx, logprob: *lp });
+    draw_from(&set, mass, &mut rng)
+}
+
+/// Decode one row of a column-sharded plan: the fused scan fans out as
+/// decode-shard jobs over the plan's shards and the global result is
+/// merged **exactly** on the submitting thread.  The per-unit `(m, n)`
+/// sums fold in unit order (bitwise the serial unit-folded scan's fold),
+/// and the shard-local candidate unions re-select through a fresh
+/// [`Selector`] in ascending absolute-index order — every global top-k
+/// candidate survives its own shard's top-k, so the re-selection
+/// reproduces the serial selection, tie-breaks included.
+///
+/// Returns `Ok(None)` for rows whose selection cannot shard — the
+/// full-categorical CDF walk is a sequential prefix sum, and an
+/// unrestricted nucleus grows its budget adaptively — so the caller
+/// falls back to the serial row decode.
+fn sample_row_sharded(
+    p: &ExecPlan,
+    x: &RowBatch,
+    row: usize,
+    params: &SamplingParams,
+) -> Result<Option<Choice>, SamplingError> {
+    params.validate()?;
+    let n = x.n();
+    let (inv_t, k) = if params.temperature == 0.0 {
+        // Greedy contract: argmax, logprob reported under temperature 1.
+        (1.0, 1)
+    } else if params.top_k == 1 {
+        (1.0 / params.temperature, 1)
+    } else if params.top_k > 1 {
+        // Fixed-budget nucleus: one scan whatever the mass reached.
+        (1.0 / params.temperature, params.top_k.min(n))
+    } else {
+        return Ok(None);
+    };
+    note_scan_pass(1);
+    SCAN_ROWS.fetch_add(1, Ordering::Relaxed);
+    let mut outs: Vec<ShardScan> = (0..p.shards.len()).map(|_| ShardScan::default()).collect();
+    match scan_row_sharded(p, x, row, inv_t, k, &mut outs) {
+        Ok(()) => {}
+        Err(PoolError::Failed(e)) => return Err(e),
+        Err(PoolError::TimedOut { .. }) => {
+            unreachable!("untimed decode-shard submissions cannot time out")
         }
     }
-    let (c, lp, _) = set.last().expect("nucleus set checked non-empty above");
-    Ok(Choice { token: c.idx, logprob: *lp })
+    // Exact exponent-major fold of the row's units, in unit order — the
+    // same fold the serial unit-folded scan performs.
+    let mut units = outs.iter().flat_map(|o| o.sums.iter().copied());
+    let mut s = units.next().expect("a sharded row spans at least one unit");
+    for u in units {
+        merge_ext(&mut s, u);
+    }
+    // Global re-selection over the shard-local unions, ascending index.
+    let mut cands: Vec<Candidate> = outs.into_iter().flat_map(|o| o.cands).collect();
+    cands.sort_unstable_by_key(|c| c.idx);
+    let mut sel = Selector::new(k);
+    for c in &cands {
+        sel.offer(c.idx, c.m, c.n, c.x);
+    }
+    if params.temperature == 0.0 || params.top_k == 1 {
+        let c = sel.into_sorted().into_iter().next().ok_or(SamplingError::NoCandidates)?;
+        return Ok(Some(Choice { token: c.idx, logprob: ext_ln(c.m, c.n) - s.ln() }));
+    }
+    let mut rng = Rng::new(params.seed);
+    let (kept, mass, _) = keep_by_mass(sel.into_sorted(), s.ln(), params.top_p);
+    draw_from(&kept, mass, &mut rng).map(Some)
 }
 
 /// Decode every row of a batch; `params` is per-row (`len == rows`) or a
@@ -700,6 +861,29 @@ pub fn sample_batch_planned(
     // recorded under the decode plan's registry series.
     let t0 = crate::obs::passes_enabled().then(crate::obs::clock::now);
     if p.threads <= 1 {
+        if p.sharded() {
+            // Column-sharded single-thread decode: each row's fused scan
+            // fans out across the plan's column shards (the planner only
+            // shards Fast-tier plans, so no accurate correction here).
+            debug_assert_ne!(p.accuracy, Accuracy::Accurate, "the accurate tier never shards");
+            let dtype = x.dtype();
+            let mut out = Vec::with_capacity(x.rows());
+            for r in 0..x.rows() {
+                let pr = if params.len() == 1 { &params[0] } else { &params[r] };
+                let c = match sample_row_sharded(p, x, r, pr)? {
+                    Some(c) => c,
+                    // Rows whose selection is inherently sequential (CDF
+                    // walk, adaptive nucleus) decode serially — same
+                    // tokens either way.
+                    None => {
+                        with_elem!(dtype, E, sample_row_elems(p.isa, x.row_elems::<E>(r), pr))?
+                    }
+                };
+                out.push(c);
+            }
+            record_scan_pass_as(p, x, t0, "fused_scan#shard");
+            return Ok(out);
+        }
         let mut out = sample_batch(p.isa, x, params)?;
         if p.accuracy == Accuracy::Accurate {
             correct_logprobs_accurate(x, params, &mut out);
@@ -753,12 +937,25 @@ fn correct_logprobs_accurate(x: &RowBatch, params: &[SamplingParams], out: &mut 
 /// of the normalize pass records ("fused_scan" is not a `Pass` — it is
 /// the sampling subsystem's read-only traversal of the logits).
 fn record_scan_pass(p: &ExecPlan, x: &RowBatch, t0: Option<std::time::Instant>) {
+    record_scan_pass_as(p, x, t0, "fused_scan");
+}
+
+/// [`record_scan_pass`] under an explicit label: the sharded path
+/// records the whole batch once under `fused_scan#shard` (full row
+/// bytes, at the submitter — per-shard timings never enter the
+/// registry, so sharding cannot double-count traffic).
+fn record_scan_pass_as(
+    p: &ExecPlan,
+    x: &RowBatch,
+    t0: Option<std::time::Instant>,
+    pass: &'static str,
+) {
     crate::softmax::batch::record_read_pass(
         crate::obs::PassObs::of_plan(p),
         x.dtype(),
         x.rows(),
         x.n(),
-        "fused_scan",
+        pass,
         t0,
     );
 }

@@ -8,6 +8,7 @@
 
 use crate::softmax::exp::{extexp, ExtSum};
 use crate::softmax::kernels::Element;
+use crate::softmax::merge::merge_ext;
 
 use super::{ext_sum_ge, Selector};
 
@@ -38,9 +39,9 @@ pub fn scan_select<E: Element>(x: &[E], inv_t: f32, sel: &mut Selector) -> ExtSu
         base += 4;
     }
     let mut s = acc[0];
-    s.merge(acc[1]);
-    s.merge(acc[2]);
-    s.merge(acc[3]);
+    merge_ext(&mut s, acc[1]);
+    merge_ext(&mut s, acc[2]);
+    merge_ext(&mut s, acc[3]);
     for (j, v) in chunks.remainder().iter().enumerate() {
         let xs = v.to_f32() * inv_t;
         if xs.is_nan() {

@@ -95,6 +95,23 @@
 //! index-ordered code, so token ids are identical across chunkings, ISAs
 //! and thread counts by construction.
 //!
+//! # Intra-row column sharding
+//!
+//! Row chunking cannot help a single giant row: a 1 × 1M-logit decode
+//! request runs on one core however many workers the pool has.  For
+//! small-rows/large-n shapes the planner instead emits a column shard
+//! layout ([`crate::plan::ShardPlan`], rendered as `shard` lines in the
+//! plan text): workers run the *same* pass kernels over unit-aligned
+//! column sub-ranges (`AccumShard` / `ScaleShard` / `DecodeShard` jobs)
+//! and the submitting thread merges the per-unit `(m, n)` partials with
+//! the exact exponent-major fold of [`crate::softmax::merge`].  Sharded
+//! normalization, pass-1 accumulation, and fused decode are
+//! bit-identical to unsharded execution for every shard count: pass 1
+//! folds the same [`MERGE_UNIT_COLS`] column grid in the same order
+//! either way, the scale pass is elementwise over unroll-aligned
+//! sub-ranges, and decode re-selects from the union of per-shard
+//! candidate sets by the same exact exponent-major comparisons.
+//!
 //! [`sample_batch_auto`]: crate::sampling::sample_batch_auto
 //! [`softmax_with`]: crate::softmax::softmax_with
 //! [`KernelElement`]: crate::softmax::kernels::KernelElement
@@ -105,10 +122,11 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Mutex, OnceLock};
 
 use super::kernels::{self, Bf16, Dtype, Element, KernelElement, F16};
+use super::merge::{fold_ext, MERGE_UNIT_COLS};
 use super::{exp::ExtSum, Accuracy, Algorithm, Isa, Pass, SoftmaxError};
 use crate::obs::{self, PassObs, PassTally};
-use crate::plan::{self, ChunkPlan, ExecPlan, PlanOp};
-use crate::sampling::{sample_row_elems, Choice, SamplingError, SamplingParams};
+use crate::plan::{self, ChunkPlan, ExecPlan, PlanOp, ShardPlan};
+use crate::sampling::{sample_row_elems, Choice, SamplingError, SamplingParams, ShardScan};
 use crate::softmax::tuning::default_best_unroll;
 use crate::with_elem;
 
@@ -744,7 +762,12 @@ pub fn softmax_batch_planned(
     with_elem!(dtype, E, {
         let xs = x.elems::<E>();
         let ys = y.elems_mut::<E>();
-        if p.threads <= 1 {
+        if p.threads <= 1 && p.sharded() {
+            // Column-sharded single-row path (untimed: `x` is a shared
+            // borrow this function cannot leak, as below).
+            run_sharded::<E>(p, u, xs, ys, n, p.nt, pobs, None)
+                .expect("untimed shard submissions cannot fail");
+        } else if p.threads <= 1 {
             run_rows_with::<E>(
                 p.algorithm,
                 p.isa,
@@ -897,7 +920,12 @@ pub fn softmax_batch_inplace_planned(p: &ExecPlan, b: &mut RowBatch) -> Result<(
     let mut pool_result = Ok(());
     with_elem!(dtype, E, {
         let (xs, ys) = alias_same_elems(b.elems_mut::<E>());
-        if p.threads <= 1 {
+        if p.threads <= 1 && p.sharded() {
+            // Column-sharded single-row path: NT stays off in place, and
+            // the plan's job timeout is honored (the batch owns its
+            // buffer, so a timeout leaks it below like any pooled job).
+            pool_result = run_sharded::<E>(p, u, xs, ys, n, false, pobs, p.job_timeout);
+        } else if p.threads <= 1 {
             run_rows_with::<E>(
                 p.algorithm,
                 p.isa,
@@ -1019,6 +1047,18 @@ pub fn accum_extexp_batch_planned(
     let t0 = obs::passes_enabled().then(obs::clock::now);
     let pobs = PassObs::of_plan(p);
     let accurate = p.accuracy == Accuracy::Accurate;
+    if p.threads <= 1 && p.sharded() {
+        // Column-sharded pass 1 (untimed: `x` is a shared borrow this
+        // function cannot leak).  The accurate tier never shards — its
+        // compensated accumulation is sequential by definition.
+        debug_assert!(!accurate, "the accurate tier never shards");
+        with_elem!(dtype, E, {
+            out = accum_shards::<E>(&p.shards, p.isa, unroll, x.elems::<E>(), n.max(1), None)
+                .expect("untimed shard submissions cannot fail");
+        });
+        record_read_pass(pobs, dtype, rows, n, "accum_extexp#shard", t0);
+        return Ok(out);
+    }
     if p.threads <= 1 {
         with_elem!(dtype, E, {
             accum_rows::<E>(p.isa, unroll, accurate, x.elems::<E>(), n.max(1), &mut out);
@@ -1396,6 +1436,55 @@ enum JobKind {
         base_row: usize,
         out: *mut Choice,
     },
+    /// Intra-row pass-1 accumulation over one column shard: one
+    /// [`ExtSum`] per [`MERGE_UNIT_COLS`] column unit of the shard into
+    /// `sums_out` (shards are unit-aligned, so the submitter's in-order
+    /// [`fold_ext`] over all rows' unit slots reproduces the unsharded
+    /// kernel dispatcher's fold bit for bit).
+    AccumShard {
+        isa: Isa,
+        unroll: usize,
+        dtype: Dtype,
+        /// First element of the shard's column range within its row.
+        x: *const u8,
+        cols: usize,
+        /// `cols.div_ceil(MERGE_UNIT_COLS)` slots, disjoint per shard.
+        sums_out: *mut ExtSum,
+    },
+    /// Intra-row pass-2 scale over one column shard: elementwise
+    /// `y[i] = f(x[i], lam, n_sum)`, bit-identical to the whole-row scale
+    /// pass on the same columns (shard starts are unit-aligned, and every
+    /// snapped unroll × lane width divides [`MERGE_UNIT_COLS`], so the
+    /// kernel's chunk and tail positions coincide with the serial pass).
+    /// `x` and `y` may alias (the in-place serving path) under the same
+    /// read-before-write contract as [`softmax_batch_inplace`].
+    ScaleShard {
+        isa: Isa,
+        unroll: usize,
+        nt: bool,
+        dtype: Dtype,
+        x: *const u8,
+        y: *mut u8,
+        cols: usize,
+        lam: f32,
+        n_sum: f32,
+    },
+    /// Intra-row fused-decode scan over one column shard: per-unit
+    /// `(m, n)` sums plus the shard-local top-`k` candidates (absolute
+    /// token indices) into the shard's [`ShardScan`] slot.  Read-only —
+    /// sharded decode still performs zero store passes.
+    DecodeShard {
+        isa: Isa,
+        dtype: Dtype,
+        /// First element of the shard's column range within the row.
+        x: *const u8,
+        cols: usize,
+        /// Absolute column index of `x` (token ids are row-absolute).
+        first_col: usize,
+        inv_t: f32,
+        k: usize,
+        out: *mut ShardScan,
+    },
 }
 
 /// What one executed job reports back on its result channel.
@@ -1636,6 +1725,54 @@ fn run_job(kind: JobKind) -> Result<(), SamplingError> {
                 decode_rows::<E>(isa, xs, n, ps, base_row, outs)
             })
         }
+        JobKind::AccumShard { isa, unroll, dtype, x, cols, sums_out } => {
+            let units = cols.div_ceil(MERGE_UNIT_COLS);
+            with_elem!(dtype, E, {
+                // SAFETY: see function-level argument; `sums_out` has one
+                // slot per column unit of this shard, disjoint per shard.
+                let (xs, outs) = unsafe {
+                    (
+                        std::slice::from_raw_parts(x as *const E, cols),
+                        std::slice::from_raw_parts_mut(sums_out, units),
+                    )
+                };
+                for (o, unit) in outs.iter_mut().zip(xs.chunks(MERGE_UNIT_COLS)) {
+                    *o = kernels::run_accum_extexp_unit(isa, unroll, unit);
+                }
+            });
+            Ok(())
+        }
+        JobKind::ScaleShard { isa, unroll, nt, dtype, x, y, cols, lam, n_sum } => {
+            with_elem!(dtype, E, {
+                // SAFETY: see function-level argument; x/y may alias under
+                // the in-place read-before-write contract.
+                let (xs, ys) = unsafe {
+                    (
+                        std::slice::from_raw_parts(x as *const E, cols),
+                        std::slice::from_raw_parts_mut(y as *mut E, cols),
+                    )
+                };
+                kernels::run_scale_extexp(isa, unroll, nt, xs, lam, n_sum, ys);
+            });
+            if nt {
+                // Streaming stores must be globally visible before this
+                // job's release-ordered acknowledgement.
+                sfence();
+            }
+            Ok(())
+        }
+        JobKind::DecodeShard { isa, dtype, x, cols, first_col, inv_t, k, out } => {
+            with_elem!(dtype, E, {
+                // SAFETY: see function-level argument; `out` is this
+                // shard's private slot.
+                let xs = unsafe { std::slice::from_raw_parts(x as *const E, cols) };
+                let scan = crate::sampling::scan_shard_elems::<E>(isa, xs, first_col, inv_t, k);
+                // The slot holds an empty (allocation-free) placeholder;
+                // overwriting it without dropping leaks nothing.
+                unsafe { out.write(scan) };
+            });
+            Ok(())
+        }
     }
 }
 
@@ -1869,6 +2006,202 @@ pub(crate) fn decode_chunked(
         out: unsafe { out_ptr.add(r0) },
     });
     submit_jobs(kinds, p.threads, timeout)
+}
+
+// ---------------------------------------------------------------------------
+// Intra-row (column-sharded) execution: small-rows/large-n shapes where
+// row chunking cannot help.  The planner emits a unit-aligned
+// [`ShardPlan`] layout ([`crate::plan::shard_layout`]); workers run the
+// existing pass kernels over column sub-ranges and the submitting thread
+// performs the exact exponent-major merge, so sharded outputs are
+// bit-identical to unsharded execution for every shard count.
+// ---------------------------------------------------------------------------
+
+/// Worker lanes a shard layout wants (shard worker indices are ascending
+/// and dense, so this is the shard count).  The pool round-robins jobs
+/// across this many lanes — with one job per lane, each shard lands on
+/// its own worker; the plan's `worker` field documents that placement.
+fn shard_threads(shards: &[ShardPlan]) -> usize {
+    shards.iter().map(|s| s.worker + 1).max().unwrap_or(1)
+}
+
+/// Record one sharded pass at the submitting thread: a single registry
+/// sample under a `#shard`-suffixed label carrying the whole row-set's
+/// bytes.  Per-shard worker timings are deliberately *not* recorded —
+/// one sample per pass, whatever the shard count, so sharded and serial
+/// executions never double-count traffic in the bandwidth registry.
+fn record_shard_pass(
+    pobs: PassObs,
+    dtype: Dtype,
+    rows: usize,
+    n: usize,
+    pass: &'static str,
+    t0: Option<std::time::Instant>,
+    bytes: u64,
+) {
+    let Some(t0) = t0 else { return };
+    let nanos = obs::clock::nanos_since(t0);
+    obs::record_pass(pobs.op, dtype, rows, n, pass, nanos, bytes, pobs.predicted_mgbps);
+    obs::trace::event("pass", pass, t0, nanos);
+}
+
+/// Sharded pass-1 accumulation: one [`JobKind::AccumShard`] per
+/// (row, shard), per-unit `(m, n)` partials into a dense unit grid, then
+/// the submitting thread's in-order [`fold_ext`] per row.  The fold
+/// walks the same [`MERGE_UNIT_COLS`] grid in the same order as the
+/// unsharded [`kernels::run_accum_extexp`] dispatcher, so each row's sum
+/// is bitwise identical to serial execution for every shard count.
+///
+/// On [`PoolError::TimedOut`] the per-unit scratch buffer is leaked
+/// (wedged workers still hold pointers into it); the caller must leak
+/// the input batch as usual.
+fn accum_shards<E: KernelElement>(
+    shards: &[ShardPlan],
+    isa: Isa,
+    unroll: usize,
+    xs: &[E],
+    n: usize,
+    timeout: Option<std::time::Duration>,
+) -> Result<Vec<ExtSum>, PoolError> {
+    let rows = xs.len() / n.max(1);
+    let units_per_row = n.div_ceil(MERGE_UNIT_COLS);
+    let esz = std::mem::size_of::<E>();
+    let x_ptr = xs.as_ptr() as *const u8;
+    let mut unit_sums = vec![ExtSum::default(); rows * units_per_row];
+    let sums_ptr = unit_sums.as_mut_ptr();
+    let mut kinds = Vec::with_capacity(rows * shards.len());
+    for r in 0..rows {
+        for s in shards {
+            kinds.push(JobKind::AccumShard {
+                isa,
+                unroll,
+                dtype: E::DTYPE,
+                // SAFETY: the layout's shards are unit-aligned, disjoint,
+                // and cover [0, n) (`crate::plan::shard_layout`), so the
+                // column offset stays inside row r and the unit slots
+                // stay inside row r's stretch of `unit_sums`.
+                x: unsafe { x_ptr.add((r * n + s.first_col) * esz) },
+                cols: s.cols,
+                sums_out: unsafe {
+                    sums_ptr.add(r * units_per_row + s.first_col / MERGE_UNIT_COLS)
+                },
+            });
+        }
+    }
+    if let Err(e) = submit_jobs(kinds, shard_threads(shards), timeout) {
+        // SAFETY requirement of PoolError::TimedOut: the wedged workers
+        // still hold raw pointers into the unit grid.
+        std::mem::forget(unit_sums);
+        return Err(e);
+    }
+    Ok((0..rows)
+        .map(|r| fold_ext(&unit_sums[r * units_per_row..(r + 1) * units_per_row]))
+        .collect())
+}
+
+/// Execute one column-sharded planned two-pass normalization: pass-1
+/// shard jobs, the exact per-row merge on the submitting thread, then
+/// pass-2 scale shards.  Outputs are bit-identical to the unsharded
+/// single-thread path — pass 1 folds the same column-unit grid in the
+/// same order, and the scale pass is elementwise over unroll-aligned
+/// sub-ranges (see [`JobKind::ScaleShard`]).
+fn run_sharded<E: KernelElement>(
+    p: &ExecPlan,
+    u: PassUnrolls,
+    xs: &[E],
+    ys: &mut [E],
+    n: usize,
+    nt: bool,
+    pobs: PassObs,
+    timeout: Option<std::time::Duration>,
+) -> Result<(), PoolError> {
+    debug_assert_eq!(p.algorithm, Algorithm::TwoPass, "only the two-pass algorithm shards");
+    debug_assert_eq!(p.accuracy, Accuracy::Fast, "the accurate tier never shards");
+    let rows = xs.len() / n.max(1);
+    let esz = std::mem::size_of::<E>();
+    let x_ptr = xs.as_ptr() as *const u8;
+    let y_ptr = ys.as_mut_ptr() as *mut u8;
+    let t0 = obs::passes_enabled().then(obs::clock::now);
+    let row_sums =
+        accum_shards::<E>(&p.shards, p.isa, u.of(Pass::AccumExtExp), xs, n, timeout)?;
+    record_shard_pass(pobs, E::DTYPE, rows, n, "accum_extexp#shard", t0, (rows * n * esz) as u64);
+    note_store_pass(rows);
+    let t1 = obs::passes_enabled().then(obs::clock::now);
+    let unroll = u.of(Pass::ScaleExtExp);
+    let mut kinds = Vec::with_capacity(rows * p.shards.len());
+    for (r, s_row) in row_sums.iter().enumerate() {
+        for s in &p.shards {
+            kinds.push(JobKind::ScaleShard {
+                isa: p.isa,
+                unroll,
+                nt,
+                dtype: E::DTYPE,
+                // SAFETY: as in [`accum_shards`]; x/y offsets stay inside
+                // their row, and shards are disjoint, so the jobs' output
+                // ranges never overlap.
+                x: unsafe { x_ptr.add((r * n + s.first_col) * esz) },
+                y: unsafe { y_ptr.add((r * n + s.first_col) * esz) },
+                cols: s.cols,
+                lam: 1.0 / s_row.m,
+                n_sum: s_row.n,
+            });
+        }
+    }
+    submit_jobs(kinds, shard_threads(&p.shards), timeout)?;
+    let (reads, writes) = Pass::ScaleExtExp.traffic();
+    record_shard_pass(
+        pobs,
+        E::DTYPE,
+        rows,
+        n,
+        "scale_extexp#shard",
+        t1,
+        ((reads + writes) * rows * n * esz) as u64,
+    );
+    Ok(())
+}
+
+/// Run one row's fused-decode scan as [`JobKind::DecodeShard`] jobs — one
+/// per shard of the plan — blocking until every shard's [`ShardScan`]
+/// slot is written.  Read-only: sharded decode performs zero store
+/// passes, exactly like the serial fused scan.  The caller
+/// ([`crate::sampling`]) owns the global merge: fold the concatenated
+/// per-unit sums in unit order and re-select from the candidate union.
+pub(crate) fn scan_row_sharded(
+    p: &ExecPlan,
+    x: &RowBatch,
+    row: usize,
+    inv_t: f32,
+    k: usize,
+    outs: &mut [ShardScan],
+) -> Result<(), PoolError> {
+    debug_assert_eq!(outs.len(), p.shards.len());
+    let n = x.n();
+    let dtype = x.dtype;
+    let esz = dtype.size();
+    let x_ptr = x.data.as_bytes().as_ptr();
+    let out_ptr = outs.as_mut_ptr();
+    let isa = p.isa;
+    let kinds = p
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(i, s)| JobKind::DecodeShard {
+            isa,
+            dtype,
+            // SAFETY: the layout's shards are disjoint and cover [0, n),
+            // so the column offset stays inside row `row` (< rows,
+            // checked by the planned decode entry points) and each job
+            // writes its own `outs` slot.
+            x: unsafe { x_ptr.add((row * n + s.first_col) * esz) },
+            cols: s.cols,
+            first_col: s.first_col,
+            inv_t,
+            k,
+            out: unsafe { out_ptr.add(i) },
+        })
+        .collect();
+    submit_jobs(kinds, shard_threads(&p.shards), None)
 }
 
 // ---------------------------------------------------------------------------

@@ -31,6 +31,7 @@ pub use element::{Bf16, Dtype, Element, F16};
 
 use crate::softmax::dispatch::Isa;
 use crate::softmax::exp::ExtSum;
+use crate::softmax::merge::{merge_ext, MERGE_UNIT_COLS};
 
 /// The bound the batched engine and the dispatchers below require: an
 /// [`Element`] with load/store implementations on every compiled ISA.
@@ -192,8 +193,31 @@ pub fn run_scale_inplace<E: KernelElement>(isa: Isa, unroll: usize, y: &mut [E],
 }
 
 /// Pass 1 of Alg. 3: accumulate `Σ e^(x_i)` in the `(m, n)`
-/// representation.
+/// representation, defined over the column-unit grid
+/// ([`crate::softmax::merge::MERGE_UNIT_COLS`]): the row's sum is the
+/// in-order fold of per-unit kernel sums.  A row of `n ≤ MERGE_UNIT_COLS`
+/// is one unit — the direct kernel call, bit for bit — and larger rows
+/// get the same fold whether computed here serially or by column-sharded
+/// pool workers, which is what makes sharded execution bit-identical to
+/// unsharded for every shard count.
 pub fn run_accum_extexp<E: KernelElement>(isa: Isa, unroll: usize, x: &[E]) -> ExtSum {
+    if x.len() <= MERGE_UNIT_COLS {
+        return run_accum_extexp_unit(isa, unroll, x);
+    }
+    let mut units = x.chunks(MERGE_UNIT_COLS);
+    let mut acc = run_accum_extexp_unit(isa, unroll, units.next().expect("n > 0"));
+    for u in units {
+        merge_ext(&mut acc, run_accum_extexp_unit(isa, unroll, u));
+    }
+    acc
+}
+
+/// One unit of pass-1 accumulation: the raw per-ISA kernel over a slice
+/// that the caller guarantees lies within a single merge unit.  The shard
+/// drivers (`softmax::batch`) call this per unit so their per-unit sums
+/// fold to exactly what [`run_accum_extexp`] computes serially.
+pub(crate) fn run_accum_extexp_unit<E: KernelElement>(isa: Isa, unroll: usize, x: &[E]) -> ExtSum {
+    debug_assert!(x.len() <= MERGE_UNIT_COLS);
     match isa {
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => unsafe { with_unroll!(unroll, U, avx2::pass_accum_extexp::<E, U>(x)) },

@@ -16,6 +16,7 @@
 
 use super::element::Element;
 use crate::softmax::exp::{exp, exp2i, extexp, ExtSum, DOMAIN_BOUND};
+use crate::softmax::merge::{merge_ext, merge_online};
 
 /// Pass 1 (Algs. 1 & 2): max-reduction over the input. Reads `x` once.
 pub fn pass_max<E: Element>(x: &[E]) -> f32 {
@@ -96,9 +97,9 @@ pub fn pass_accum_extexp<E: Element>(x: &[E]) -> ExtSum {
         acc[0].add_exp(v.to_f32());
     }
     let mut s = acc[0];
-    s.merge(acc[1]);
-    s.merge(acc[2]);
-    s.merge(acc[3]);
+    merge_ext(&mut s, acc[1]);
+    merge_ext(&mut s, acc[2]);
+    merge_ext(&mut s, acc[3]);
     s
 }
 
@@ -130,19 +131,6 @@ pub fn pass_online_accum<E: Element>(x: &[E]) -> (f32, f32) {
         }
     }
     merge_online(&m, &s)
-}
-
-/// Merge independent online `(max, sum)` accumulator pairs (shared by the
-/// scalar lanes above and the SIMD modules' lane spills).
-pub(crate) fn merge_online(m: &[f32], s: &[f32]) -> (f32, f32) {
-    let mut mm = m[0];
-    let mut ss = s[0];
-    for k in 1..m.len() {
-        let m_new = mm.max(m[k]);
-        ss = ss * exp(mm - m_new) + s[k] * exp(m[k] - m_new);
-        mm = m_new;
-    }
-    (mm, ss)
 }
 
 // ---------------------------------------------------------------------------

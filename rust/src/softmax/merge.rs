@@ -1,0 +1,131 @@
+//! The audited cross-accumulator merge layer.
+//!
+//! Every merge of two independently produced softmax accumulators — the
+//! scalar kernels' lane spills, the batched engine's column-shard folds,
+//! the fused-decode scan units, and the online algorithm's `(max, sum)`
+//! pairs — goes through this module and nowhere else (CI greps for stray
+//! `.merge(` / `merge_online(` call sites outside `softmax/`).  One
+//! definition site is what makes the sharding exactness argument
+//! auditable: `merge_ext` is associative-by-grid (see
+//! [`MERGE_UNIT_COLS`]) and the shard drivers can only combine partial
+//! sums the one audited way.
+//!
+//! # The column-unit grid
+//!
+//! Floating-point `(m, n)` merges are exact in the *exponent* (powers of
+//! two rescale losslessly) but round in the *mantissa* addition, so the
+//! merged value depends on how the row was partitioned.  To make sharded
+//! execution bit-identical to unsharded — for every shard count and every
+//! worker assignment — pass-1 accumulation is defined over a fixed grid:
+//! a row is the in-order fold of per-unit kernel sums, one unit per
+//! [`MERGE_UNIT_COLS`] columns.  Shard boundaries are unit-aligned and
+//! workers return per-unit sums, so the submitting thread always folds
+//! the same unit sequence regardless of who computed which unit.  Rows of
+//! `n ≤ MERGE_UNIT_COLS` are a single unit and reduce to the direct
+//! kernel call — the pre-sharding behavior, bit for bit.
+
+use crate::softmax::exp::{exp, ExtSum};
+
+/// Width of one merge unit, in columns.  A **compile-time constant**, not
+/// a config knob: the unit grid defines the numerics of pass-1
+/// accumulation (which mantissa additions happen in which order), so a
+/// configurable unit would make results depend on configuration.  64k
+/// columns keeps the per-unit accumulator state negligible (one
+/// [`ExtSum`] per 256 KiB of f32 input) while staying far above the
+/// shard-dispatch overhead crossover.
+pub const MERGE_UNIT_COLS: usize = 1 << 16;
+
+/// Merge one partial `(m, n)` accumulator into a running one —
+/// exponent-major: the larger binary exponent wins and the smaller side's
+/// mantissa is rescaled by an exact power of two before the (single,
+/// rounding) mantissa addition.  THE audited primitive: every cross-
+/// accumulator combine in the crate lands here.
+#[inline]
+pub(crate) fn merge_ext(into: &mut ExtSum, part: ExtSum) {
+    into.merge(part);
+}
+
+/// Fold per-unit partial sums in unit order: the canonical reduction the
+/// column-unit grid defines.  Initializes from the first unit's sum (not
+/// from an identity element), so a single-unit row is *exactly* the
+/// direct kernel result — no identity merge that could disturb signed
+/// zeros or NaN payloads.
+///
+/// Panics on an empty slice: a row always has at least one unit.
+pub(crate) fn fold_ext(units: &[ExtSum]) -> ExtSum {
+    let mut it = units.iter();
+    let mut acc = *it.next().expect("fold_ext: a row has at least one unit");
+    for &u in it {
+        merge_ext(&mut acc, u);
+    }
+    acc
+}
+
+/// Merge independent online-softmax `(max, sum)` accumulator pairs
+/// (the scalar online kernel's lane spill).  The normalized-domain
+/// sibling of [`merge_ext`]: the larger max wins and both sums rescale by
+/// `e^Δ` — *not* exact (the rescale itself rounds), which is exactly why
+/// the sharded path uses the `(m, n)` representation instead.
+pub(crate) fn merge_online(m: &[f32], s: &[f32]) -> (f32, f32) {
+    let mut mm = m[0];
+    let mut ss = s[0];
+    for k in 1..m.len() {
+        let m_new = mm.max(m[k]);
+        ss = ss * exp(mm - m_new) + s[k] * exp(m[k] - m_new);
+        mm = m_new;
+    }
+    (mm, ss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_ext_is_exact_in_the_exponent() {
+        // Two partials 2^40 apart: the small side's mantissa rescale is an
+        // exact power of two, so the merged value equals the wide-domain
+        // arithmetic sum.
+        let mut a = ExtSum { m: 1.5, n: 40.0 };
+        let b = ExtSum { m: 1.25, n: 0.0 };
+        merge_ext(&mut a, b);
+        assert_eq!(a.n, 40.0);
+        let expect = 1.5 + 1.25 * (0.5f32).powi(40);
+        assert_eq!(a.m.to_bits(), expect.to_bits());
+    }
+
+    #[test]
+    fn fold_ext_single_unit_is_the_unit_bitwise() {
+        let u = ExtSum { m: -0.0, n: 7.0 };
+        let f = fold_ext(&[u]);
+        assert_eq!(f.m.to_bits(), u.m.to_bits(), "no identity merge may touch -0.0");
+        assert_eq!(f.n.to_bits(), u.n.to_bits());
+    }
+
+    #[test]
+    fn fold_ext_is_the_in_order_left_fold() {
+        let units = [
+            ExtSum { m: 1.0, n: 3.0 },
+            ExtSum { m: 1.9, n: -2.0 },
+            ExtSum { m: 1.2, n: 11.0 },
+            ExtSum { m: 1.0, n: 10.0 },
+        ];
+        let mut want = units[0];
+        for &u in &units[1..] {
+            want.merge(u);
+        }
+        let got = fold_ext(&units);
+        assert_eq!(got.m.to_bits(), want.m.to_bits());
+        assert_eq!(got.n.to_bits(), want.n.to_bits());
+    }
+
+    #[test]
+    fn merge_online_matches_sequential_reference() {
+        let m = [1.0f32, 5.0, -3.0, 5.0];
+        let s = [2.0f32, 1.0, 4.0, 0.5];
+        let (mm, ss) = merge_online(&m, &s);
+        assert_eq!(mm, 5.0);
+        let want: f32 = m.iter().zip(&s).map(|(&mi, &si)| si * exp(mi - 5.0)).sum();
+        assert!((ss - want).abs() < 1e-5 * want, "{ss} vs {want}");
+    }
+}

@@ -23,6 +23,7 @@ pub mod batch;
 pub mod dispatch;
 pub mod exp;
 pub mod kernels;
+pub mod merge;
 pub mod online;
 pub mod tuning;
 

@@ -1,0 +1,249 @@
+//! Sharded-execution integration: the column-sharded path must be
+//! **bit-identical** to the serial path for batched normalization
+//! (out-of-place and in-place), pass-1 `(m, n)` accumulation, and fused
+//! decode, on every ISA × dtype × shard count — and sharded decode must
+//! keep the engine's zero-store-pass property.
+//!
+//! The exactness argument under test: shards are unit-aligned (multiples
+//! of `MERGE_UNIT_COLS`), workers run the same kernels over the same
+//! unit slices the serial path folds, and the submitting thread merges
+//! per-unit `(m, n)` accumulators in the serial fold order — so no shard
+//! count, worker assignment, or completion order can change a single bit.
+//!
+//! The store-pass counter is process-global: counter-sensitive tests
+//! take `GATE` first (same discipline as `integration_pool_decode`).
+
+use std::sync::Mutex;
+
+use two_pass_softmax::plan::{shard_layout, PlanOp, Planner};
+use two_pass_softmax::sampling::{self, SamplingParams};
+use two_pass_softmax::softmax::batch::{
+    accum_extexp_batch_planned, softmax_batch_inplace_planned, softmax_batch_planned,
+    store_pass_rows, RowBatch,
+};
+use two_pass_softmax::softmax::merge::MERGE_UNIT_COLS;
+use two_pass_softmax::softmax::{Algorithm, Dtype, Isa};
+use two_pass_softmax::util::rng::Rng;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Shard counts under test: serial, even splits, a count that leaves a
+/// ragged last shard, and more workers than the row has units.
+const SHARD_COUNTS: [usize; 5] = [1, 2, 3, 7, 16];
+
+/// Four merge units with a ragged tail — big enough to shard, small
+/// enough that the full ISA × dtype × count product stays fast.
+const N: usize = 3 * MERGE_UNIT_COLS + 389;
+
+fn quantized_batch(rows: usize, n: usize, dtype: Dtype, seed: u64) -> RowBatch {
+    let mut rng = Rng::new(seed);
+    let mut b = RowBatch::with_capacity_dtype(rows, n, dtype);
+    for _ in 0..rows {
+        let row: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 6.0)).collect();
+        b.push_row_quantized(&row).unwrap();
+    }
+    b
+}
+
+/// A planner whose plans shard `1 × N` rows across `workers` column
+/// shards (single-threaded otherwise; `min_n = 1` pins eligibility to
+/// the worker knob so the crossover model stays out of the test).
+fn planner(isa: Isa, workers: usize) -> Planner {
+    Planner::new(Algorithm::TwoPass, isa, usize::MAX, 1)
+        .with_shard_workers(workers)
+        .with_shard_min_n(1)
+}
+
+fn assert_rows_bitwise(got: &RowBatch, want: &RowBatch, ctx: &str) {
+    assert_eq!(got.rows(), want.rows(), "{ctx}: row count");
+    for r in 0..want.rows() {
+        for (i, (g, w)) in got.row_f32(r).iter().zip(want.row_f32(r)).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "{ctx}: row {r} col {i}: sharded {g} != serial {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn shard_layout_is_unit_aligned_and_covers_the_row() {
+    for workers in SHARD_COUNTS {
+        let layout = shard_layout(N, workers);
+        if workers <= 1 {
+            assert!(layout.is_empty(), "workers={workers} must stay serial");
+            continue;
+        }
+        assert!(layout.len() >= 2, "workers={workers}: a non-empty layout has >= 2 shards");
+        assert!(layout.len() <= workers);
+        let mut next = 0usize;
+        for s in &layout {
+            assert_eq!(s.first_col, next, "workers={workers}: shards must be contiguous");
+            assert_eq!(s.first_col % MERGE_UNIT_COLS, 0, "workers={workers}: unit alignment");
+            assert!(s.cols > 0);
+            next = s.first_col + s.cols;
+        }
+        assert_eq!(next, N, "workers={workers}: layout must cover [0, n)");
+    }
+    // A row with a single merge unit can never split.
+    assert!(shard_layout(MERGE_UNIT_COLS, 8).is_empty());
+}
+
+#[test]
+fn sharded_normalize_is_bit_identical_per_isa_dtype_and_count() {
+    for isa in Isa::detect_all() {
+        for dtype in Dtype::ALL {
+            let x = quantized_batch(1, N, dtype, 0x5eed);
+            let serial = planner(isa, 1).plan_dtype(PlanOp::Normalize, dtype, 1, N);
+            assert!(!serial.sharded());
+            let mut want = RowBatch::new_with_dtype(1, N, dtype);
+            softmax_batch_planned(&serial, &x, &mut want).unwrap();
+            for workers in SHARD_COUNTS {
+                let plan = planner(isa, workers).plan_dtype(PlanOp::Normalize, dtype, 1, N);
+                assert_eq!(plan.sharded(), workers > 1, "{isa}/{dtype} w={workers}");
+                let mut got = RowBatch::new_with_dtype(1, N, dtype);
+                softmax_batch_planned(&plan, &x, &mut got).unwrap();
+                assert_rows_bitwise(&got, &want, &format!("normalize {isa}/{dtype} w={workers}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_inplace_normalize_is_bit_identical() {
+    for isa in Isa::detect_all() {
+        for dtype in Dtype::ALL {
+            let serial = planner(isa, 1).plan_dtype(PlanOp::NormalizeInPlace, dtype, 1, N);
+            let mut want = quantized_batch(1, N, dtype, 0xcafe);
+            softmax_batch_inplace_planned(&serial, &mut want).unwrap();
+            for workers in SHARD_COUNTS {
+                let plan = planner(isa, workers).plan_dtype(PlanOp::NormalizeInPlace, dtype, 1, N);
+                let mut got = quantized_batch(1, N, dtype, 0xcafe);
+                softmax_batch_inplace_planned(&plan, &mut got).unwrap();
+                assert_rows_bitwise(&got, &want, &format!("inplace {isa}/{dtype} w={workers}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_accum_is_bit_identical() {
+    for isa in Isa::detect_all() {
+        for dtype in Dtype::ALL {
+            let x = quantized_batch(1, N, dtype, 7);
+            let serial = planner(isa, 1).plan_dtype(PlanOp::Accum, dtype, 1, N);
+            let want = accum_extexp_batch_planned(&serial, &x).unwrap();
+            for workers in SHARD_COUNTS {
+                let plan = planner(isa, workers).plan_dtype(PlanOp::Accum, dtype, 1, N);
+                let got = accum_extexp_batch_planned(&plan, &x).unwrap();
+                assert_eq!(got.len(), want.len());
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(
+                        (g.m.to_bits(), g.n.to_bits()),
+                        (w.m.to_bits(), w.n.to_bits()),
+                        "accum {isa}/{dtype} w={workers}: ({}, {}) != ({}, {})",
+                        g.m,
+                        g.n,
+                        w.m,
+                        w.n
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Decode params covering every sharded decode kind (greedy, top-k,
+/// top-k + nucleus trim) plus the adaptive-nucleus kind that falls back
+/// to the serial scan inside a sharded plan.
+fn decode_params() -> Vec<SamplingParams> {
+    vec![
+        SamplingParams::greedy(),
+        SamplingParams { top_k: 8, seed: 11, ..SamplingParams::default() },
+        SamplingParams {
+            temperature: 0.7,
+            top_k: 16,
+            top_p: 0.95,
+            seed: 12,
+            ..SamplingParams::default()
+        },
+        SamplingParams { top_p: 0.9, seed: 13, ..SamplingParams::default() },
+    ]
+}
+
+#[test]
+fn sharded_decode_is_bit_identical_with_zero_store_passes() {
+    let _g = lock();
+    for isa in Isa::detect_all() {
+        for dtype in Dtype::ALL {
+            let x = quantized_batch(1, N, dtype, 0xdec0de);
+            let serial = planner(isa, 1).plan_dtype(PlanOp::Decode, dtype, 1, N);
+            for params in decode_params() {
+                let want = sampling::sample_batch_planned(&serial, &x, &[params]).unwrap();
+                for workers in SHARD_COUNTS {
+                    let plan = planner(isa, workers).plan_dtype(PlanOp::Decode, dtype, 1, N);
+                    let stores_before = store_pass_rows();
+                    let got = sampling::sample_batch_planned(&plan, &x, &[params]).unwrap();
+                    assert_eq!(
+                        store_pass_rows() - stores_before,
+                        0,
+                        "decode {isa}/{dtype} w={workers}: sharded decode ran a store pass"
+                    );
+                    assert_eq!(got.len(), 1);
+                    assert_eq!(
+                        got[0].token, want[0].token,
+                        "decode {isa}/{dtype} w={workers} params={params:?}"
+                    );
+                    assert_eq!(
+                        got[0].logprob.to_bits(),
+                        want[0].logprob.to_bits(),
+                        "decode {isa}/{dtype} w={workers} params={params:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn nan_poison_stays_confined_to_its_row_when_sharded() {
+    // Two rows, three workers (rows < workers keeps the shape eligible):
+    // a NaN planted mid-row in row 0 must not leak into row 1 through
+    // the shared shard machinery, and row 1 must stay bit-identical to
+    // its serial result.
+    let isa = Isa::detect_best();
+    let mut x = quantized_batch(2, N, Dtype::F32, 404);
+    x.row_mut(0)[MERGE_UNIT_COLS + 17] = f32::NAN;
+    let serial = planner(isa, 1).plan_dtype(PlanOp::Normalize, Dtype::F32, 2, N);
+    let sharded = planner(isa, 3).plan_dtype(PlanOp::Normalize, Dtype::F32, 2, N);
+    assert!(sharded.sharded());
+    let mut want = RowBatch::new(2, N);
+    let mut got = RowBatch::new(2, N);
+    softmax_batch_planned(&serial, &x, &mut want).unwrap();
+    softmax_batch_planned(&sharded, &x, &mut got).unwrap();
+    assert!(got.row(0).iter().all(|v| v.is_nan()), "poison must spread over its whole row");
+    for (i, (g, w)) in got.row(1).iter().zip(want.row(1)).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "row 1 col {i} differs — poison leaked");
+        assert!(!g.is_nan(), "row 1 col {i}: NaN leaked across the row boundary");
+    }
+}
+
+#[test]
+fn single_unit_rows_never_shard() {
+    // Below one merge unit the planner must keep the row serial even
+    // with many workers configured — and results are (trivially) exact.
+    let isa = Isa::detect_best();
+    let n = 1024usize;
+    let x = quantized_batch(1, n, Dtype::F32, 5);
+    let plan = planner(isa, 8).plan_dtype(PlanOp::Normalize, Dtype::F32, 1, n);
+    assert!(!plan.sharded(), "a single-unit row must not shard");
+    let mut y = RowBatch::new(1, n);
+    softmax_batch_planned(&plan, &x, &mut y).unwrap();
+    let s: f32 = y.row(0).iter().sum();
+    assert!((s - 1.0).abs() < 1e-5);
+}

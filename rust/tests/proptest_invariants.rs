@@ -507,6 +507,177 @@ fn accurate_tier_half_softmax_within_tighter_bounds() {
 }
 
 // ---------------------------------------------------------------------------
+// Intra-row column sharding
+// ---------------------------------------------------------------------------
+
+/// Shard counts the sharded sweeps rotate through: even splits, a ragged
+/// last shard, and more workers than the row has merge units.
+const SHARD_COUNTS: [usize; 5] = [1, 2, 3, 7, 16];
+
+/// Splitting a row at arbitrary unit-aligned boundaries and merging the
+/// per-unit `(m, n)` accumulators in column order is **bit-identical**
+/// to the serial unit fold — and invariant under which shard computed
+/// each unit (shards only regroup the same unit sums).  This is the
+/// algebraic core the sharded executor's exactness rests on.
+#[test]
+fn shard_merge_is_order_invariant_and_exact() {
+    use two_pass_softmax::softmax::merge::MERGE_UNIT_COLS;
+
+    let mut rng = Rng::new(prop_seed(3131));
+    for case in 0..20 {
+        // 2..=5 merge units with a ragged tail; amplitudes rotate through
+        // the same regimes as `random_logits`, scaled to full rows.
+        let units = 2 + rng.below(4);
+        let n = (units - 1) * MERGE_UNIT_COLS + 1 + rng.below(MERGE_UNIT_COLS);
+        let scale = [4.0f32, 20.0, 60.0][case % 3];
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, scale)).collect();
+        // Serial reference: one in-order fold over the unit grid.
+        let unit_sums: Vec<ExtSum> = x
+            .chunks(MERGE_UNIT_COLS)
+            .map(|u| {
+                let mut s = ExtSum::default();
+                for &v in u {
+                    s.add_exp(v);
+                }
+                s
+            })
+            .collect();
+        let mut want = unit_sums[0];
+        for &u in &unit_sums[1..] {
+            want.merge(u);
+        }
+        for workers in SHARD_COUNTS {
+            // Partition the unit grid like `shard_layout` does (ceil
+            // division, last shard short), then fold shard-by-shard in
+            // column order — the submitting thread's merge.
+            let per = unit_sums.len().div_ceil(workers.min(unit_sums.len()));
+            let mut got: Option<ExtSum> = None;
+            for shard in unit_sums.chunks(per) {
+                for &u in shard {
+                    match got.as_mut() {
+                        Some(acc) => acc.merge(u),
+                        None => got = Some(u),
+                    }
+                }
+            }
+            let got = got.unwrap();
+            assert_eq!(
+                (got.m.to_bits(), got.n.to_bits()),
+                (want.m.to_bits(), want.n.to_bits()),
+                "case {case} workers={workers} units={}: ({}, {}) vs ({}, {})",
+                unit_sums.len(),
+                got.m,
+                got.n,
+                want.m,
+                want.n
+            );
+        }
+    }
+}
+
+/// End-to-end: the planner's sharded execution is bit-identical to the
+/// serial path over random multi-unit rows for every shard count × ISA ×
+/// dtype — normalization outputs and fused-decode tokens/logprobs alike.
+#[test]
+fn sharded_execution_bit_identical_over_random_rows() {
+    use two_pass_softmax::plan::{PlanOp, Planner};
+    use two_pass_softmax::softmax::merge::MERGE_UNIT_COLS;
+
+    let mut rng = Rng::new(prop_seed(3232));
+    let isas = Isa::detect_all();
+    let greedy = [SamplingParams::greedy()];
+    for case in 0..6 {
+        let n = MERGE_UNIT_COLS + 1 + rng.below(3 * MERGE_UNIT_COLS);
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 6.0)).collect();
+        for dtype in Dtype::ALL {
+            let mut xb = RowBatch::with_capacity_dtype(1, n, dtype);
+            xb.push_row_quantized(&x).unwrap();
+            for &isa in &isas {
+                let serial = Planner::new(Algorithm::TwoPass, isa, usize::MAX, 1);
+                let sp = serial.plan_dtype(PlanOp::Normalize, dtype, 1, n);
+                let mut want = RowBatch::new_with_dtype(1, n, dtype);
+                softmax_batch_planned(&sp, &xb, &mut want).unwrap();
+                let dwant =
+                    sampling::sample_batch_planned(
+                        &serial.plan_dtype(PlanOp::Decode, dtype, 1, n),
+                        &xb,
+                        &greedy,
+                    )
+                    .unwrap()[0];
+                for workers in SHARD_COUNTS {
+                    let sharded = Planner::new(Algorithm::TwoPass, isa, usize::MAX, 1)
+                        .with_shard_workers(workers)
+                        .with_shard_min_n(1);
+                    let pp = sharded.plan_dtype(PlanOp::Normalize, dtype, 1, n);
+                    let mut got = RowBatch::new_with_dtype(1, n, dtype);
+                    softmax_batch_planned(&pp, &xb, &mut got).unwrap();
+                    for (i, (g, w)) in got.row_f32(0).iter().zip(want.row_f32(0)).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "case {case} {isa}/{dtype} w={workers} col {i}: {g} vs {w}"
+                        );
+                    }
+                    let dgot = sampling::sample_batch_planned(
+                        &sharded.plan_dtype(PlanOp::Decode, dtype, 1, n),
+                        &xb,
+                        &greedy,
+                    )
+                    .unwrap()[0];
+                    assert_eq!(
+                        (dgot.token, dgot.logprob.to_bits()),
+                        (dwant.token, dwant.logprob.to_bits()),
+                        "case {case} {isa}/{dtype} w={workers}: decode diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// A NaN planted anywhere in a sharded row poisons exactly that row:
+/// sibling rows in the same sharded batch stay bit-identical to their
+/// serial results, whichever shard owned the poisoned columns.
+#[test]
+fn shard_nan_poison_confined_to_owning_row() {
+    use two_pass_softmax::plan::{PlanOp, Planner};
+    use two_pass_softmax::softmax::merge::MERGE_UNIT_COLS;
+
+    let mut rng = Rng::new(prop_seed(3333));
+    let isa = Isa::detect_best();
+    let n = 2 * MERGE_UNIT_COLS + 777;
+    for case in 0..10 {
+        let rows = 2usize;
+        let poisoned = case % rows;
+        let mut xb = RowBatch::new(rows, n);
+        for r in 0..rows {
+            for v in xb.row_mut(r) {
+                *v = rng.normal_f32(0.0, 6.0);
+            }
+        }
+        xb.row_mut(poisoned)[rng.below(n)] = f32::NAN;
+        let serial = Planner::new(Algorithm::TwoPass, isa, usize::MAX, 1)
+            .plan_dtype(PlanOp::Normalize, Dtype::F32, rows, n);
+        let sharded = Planner::new(Algorithm::TwoPass, isa, usize::MAX, 1)
+            .with_shard_workers(7)
+            .with_shard_min_n(1)
+            .plan_dtype(PlanOp::Normalize, Dtype::F32, rows, n);
+        let mut want = RowBatch::new(rows, n);
+        let mut got = RowBatch::new(rows, n);
+        softmax_batch_planned(&serial, &xb, &mut want).unwrap();
+        softmax_batch_planned(&sharded, &xb, &mut got).unwrap();
+        for r in 0..rows {
+            for (i, (g, w)) in got.row(r).iter().zip(want.row(r)).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "case {case} row {r} col {i}");
+                if r != poisoned {
+                    assert!(!g.is_nan(), "case {case}: NaN leaked into clean row {r} col {i}");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Pinned regression seeds
 // ---------------------------------------------------------------------------
 
